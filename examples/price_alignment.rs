@@ -1,0 +1,108 @@
+//! Privacy regime 1 (paper §II-A): peer-to-peer price alignment.
+//!
+//! A retail chain's regional branches each hold their own price book and
+//! demand profile; legal walls forbid sharing raw prices, but the
+//! branches may exchange intermediate Sinkhorn scalings. The aligned
+//! price plan is the OT map between the chain-wide current price
+//! distribution and the target (harmonized) distribution — computed
+//! all-to-all, no coordinator ever seeing a branch's raw data.
+//!
+//! ```sh
+//! cargo run --release --example price_alignment
+//! ```
+
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::run_federated;
+use fedsink::linalg::Mat;
+use fedsink::net::LatencyModel;
+use fedsink::rng::Rng;
+use fedsink::sinkhorn::{full_marginal_errors, transport_plan, StopPolicy};
+use fedsink::workload::Problem;
+
+fn main() -> anyhow::Result<()> {
+    let branches = 4usize;
+    let skus_per_branch = 64usize;
+    let n = branches * skus_per_branch;
+    let mut rng = Rng::seed_from(2026);
+
+    // Each branch's price points cluster around its own market level —
+    // branch j's SKUs occupy rows [j*m, (j+1)*m) exactly like Fig 1.
+    let mut price_points = Vec::with_capacity(n);
+    for b in 0..branches {
+        let market_level = 10.0 + 3.0 * b as f64;
+        for _ in 0..skus_per_branch {
+            price_points.push(market_level + rng.normal_ms(0.0, 1.5));
+        }
+    }
+
+    // Current demand mass per SKU (a) and the harmonized target (b):
+    // the chain wants demand to follow a smooth cross-branch profile.
+    let a = rng.dirichlet(n, 2.0);
+    let mut b_vec: Vec<f64> = (0..n)
+        .map(|i| {
+            let t = i as f64 / n as f64;
+            (1.0 + (2.0 * std::f64::consts::PI * t).sin().powi(2)) / n as f64
+        })
+        .collect();
+    let s: f64 = b_vec.iter().sum();
+    for x in &mut b_vec {
+        *x /= s;
+    }
+    let mut b = Mat::zeros(n, 1);
+    for i in 0..n {
+        b[(i, 0)] = b_vec[i];
+    }
+
+    // Moving demand between price points costs the squared price gap.
+    let scale = 1.0 / 100.0; // normalize typical gaps to O(1)
+    let mut cost = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let d = (price_points[i] - price_points[j]) * scale;
+            cost[(i, j)] = d * d * 10.0;
+        }
+    }
+    let problem = Problem::from_parts(a, b, cost, 0.02);
+
+    // Peer-to-peer solve: each branch is one client.
+    let cfg = SolveConfig {
+        variant: Variant::SyncA2A,
+        backend: BackendKind::Native,
+        clients: branches,
+        net: LatencyModel::wan(), // branches are geo-distributed
+        ..Default::default()
+    };
+    let policy = StopPolicy { threshold: 1e-10, max_iters: 5000, ..Default::default() };
+    let out = run_federated(&problem, &cfg, policy, false);
+    let (ea, eb) = full_marginal_errors(&problem, &out.state, 0);
+    println!(
+        "price alignment across {branches} branches ({n} SKUs): {} in {} iters, errors ({ea:.2e}, {eb:.2e})",
+        if out.converged { "converged" } else { "NOT converged" },
+        out.iterations
+    );
+    assert!(out.converged);
+
+    // Per-branch realignment summary: how much demand mass moves out of
+    // each branch's price band.
+    let plan = transport_plan(&problem.k, &out.state, 0);
+    println!("\n{:>8} {:>16} {:>16}", "branch", "mass kept", "mass moved");
+    for bch in 0..branches {
+        let (r0, r1) = (bch * skus_per_branch, (bch + 1) * skus_per_branch);
+        let mut kept = 0.0;
+        let mut moved = 0.0;
+        for i in r0..r1 {
+            for j in 0..n {
+                if (r0..r1).contains(&j) {
+                    kept += plan[(i, j)];
+                } else {
+                    moved += plan[(i, j)];
+                }
+            }
+        }
+        println!("{bch:>8} {kept:>16.4} {moved:>16.4}");
+    }
+    let comm: f64 = out.node_stats.iter().map(|s| s.comm_secs()).sum();
+    let comp: f64 = out.node_stats.iter().map(|s| s.comp_secs()).sum();
+    println!("\ntotals across nodes: comp {comp:.3}s, comm {comm:.3}s (WAN profile)");
+    Ok(())
+}

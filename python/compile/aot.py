@@ -1,0 +1,240 @@
+"""AOT bridge: lower the L2 model at fixed shapes to HLO text + manifest.
+
+``python -m compile.aot --out-dir ../artifacts`` writes one
+``<op>_<impl>_<dtype>_m{m}_n{n}_N{N}[_w{w}].hlo.txt`` per grid entry plus a
+``manifest.json`` the Rust runtime (`rust/src/runtime/manifest.rs`) parses
+to locate and compile executables.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Functions are lowered with ``return_tuple=True`` — every output is a
+tuple, unwrapped on the Rust side.
+
+Grids:
+  * ``default`` — the shape set the examples, tests and scaled-down
+    experiment drivers need (laptop-class; see DESIGN.md §5).
+  * ``quick``   — a minimal set for CI smoke runs.
+  * ``paper``   — adds the paper-size shapes (n up to 10000); heavy.
+
+Python runs ONCE here (``make artifacts``); it is never on the Rust
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPES = {"f64": jnp.float64, "f32": jnp.float32}
+
+# Ops whose targets/outputs are N-independent (lowered once per (m, n)).
+N_FREE_OPS = {"block_objective", "plan_block"}
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (ids reassigned).
+
+    Single-output ops are lowered *untupled* so the Rust runtime can feed
+    the output `PjRtBuffer` straight back as the next call's input (the
+    device-resident-state optimization); multi-output ops keep the tuple.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def entry_name(op, impl, dtype, m, n, N, w=None):
+    base = f"{op}_{impl}_{dtype}_m{m}_n{n}_N{N}"
+    if w is not None:
+        base += f"_w{w}"
+    return base
+
+
+def lower_entry(op, impl, dtype, m, n, N, w=None):
+    fn = model.build(op, impl=impl, w=w)
+    sig = model.signature(op, m, n, N, DTYPES[dtype])
+    lowered = jax.jit(fn).lower(*sig)
+    return to_hlo_text(lowered, return_tuple=op == "sinkhorn_sweep")
+
+
+def grid_entries(grid: str):
+    """Yield (op, impl, dtype, m, n, N, w) for the requested grid."""
+    seen = set()
+
+    def emit(op, impl, dtype, m, n, N, w=None):
+        if op in N_FREE_OPS:
+            N = 1
+        key = (op, impl, dtype, m, n, N, w)
+        if key not in seen:
+            seen.add(key)
+            yield key
+
+    def block_shapes(sizes, clients):
+        for n in sizes:
+            for c in clients:
+                if n % c == 0:
+                    yield n // c, n
+
+    if grid == "quick":
+        sizes, clients, hists = [64, 256], [1, 2, 4], [1, 8]
+        vec_hists, vec_n = [64], 64
+        sweep_sizes, impls_hot = [64], ["xla", "pallas"]
+    elif grid == "default":
+        sizes, clients, hists = [64, 256, 512, 1024, 2048], [1, 2, 4, 8], [1, 64]
+        vec_hists, vec_n = [512, 4096], 512
+        sweep_sizes = [64, 256, 512, 1024, 2048]
+        impls_hot = ["xla", "pallas"]
+    elif grid == "paper":
+        sizes, clients, hists = (
+            [64, 256, 512, 1024, 2048, 5000, 10000],
+            [1, 2, 4, 8],
+            [1, 64],
+        )
+        vec_hists, vec_n = [512, 4096, 10000], 1000
+        sweep_sizes = [64, 256, 512, 1024, 2048, 5000, 10000]
+        impls_hot = ["xla", "pallas"]
+    else:
+        raise SystemExit(f"unknown grid {grid!r}")
+
+    dtype = "f64"
+    # Pallas-lowered artifacts are the architecture ablation; bound their
+    # lowering cost to the small-to-mid shapes (interpret-mode tracing of
+    # huge grids is slow and the ablation signal saturates).
+    pallas_cap = 512
+
+    for m, n in block_shapes(sizes, clients):
+        for N in hists:
+            for impl in impls_hot:
+                if impl == "pallas" and n > pallas_cap:
+                    continue
+                yield from emit("client_update", impl, dtype, m, n, N)
+                yield from emit("client_update_mat", impl, dtype, m, n, N)
+                if m == n:
+                    yield from emit("server_matvec", impl, dtype, m, n, N)
+            yield from emit("block_marginal", "xla", dtype, m, n, N)
+            yield from emit("block_marginal_mat", "xla", dtype, m, n, N)
+        yield from emit("block_objective", "xla", dtype, m, n, 1)
+        yield from emit("plan_block", "xla", dtype, m, n, 1)
+
+    # Vectorized (Cuturi N-histogram) study shapes, §IV-B3 / Figs 7-8.
+    for c in [1, 2, 4]:
+        m = vec_n // c
+        for N in vec_hists:
+            yield from emit("client_update", "xla", dtype, m, vec_n, N)
+            yield from emit("client_update_mat", "xla", dtype, m, vec_n, N)
+            if m == vec_n:
+                yield from emit("server_matvec", "xla", dtype, m, vec_n, N)
+            yield from emit("block_marginal", "xla", dtype, m, vec_n, N)
+            yield from emit("block_marginal_mat", "xla", dtype, m, vec_n, N)
+
+    # Fused multi-iteration centralized sweeps (PJRT dispatch amortizer).
+    for n in sweep_sizes:
+        for w in [10]:
+            impl = "pallas" if n <= pallas_cap else "xla"
+            yield from emit("sinkhorn_sweep", "xla", dtype, n, n, 1, w)
+            if impl == "pallas":
+                yield from emit("sinkhorn_sweep", "pallas", dtype, n, n, 1, w)
+
+    # f32 coverage (paper drops to f32 for the largest runs, §IV-B4).
+    for N in [1]:
+        yield from emit("client_update", "xla", "f32", 256, 256, N)
+        yield from emit("server_matvec", "xla", "f32", 256, 256, N)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--grid", default="default", choices=["quick", "default", "paper"])
+    ap.add_argument("--force", action="store_true", help="re-lower even if fresh")
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    # Freshness: hash the compile-path sources; skip everything if the
+    # manifest was built from identical sources with a superset grid.
+    src_files = [
+        os.path.join(os.path.dirname(__file__), f)
+        for f in ("aot.py", "model.py", "kernels/ref.py", "kernels/sinkhorn_pallas.py")
+    ]
+    h = hashlib.sha256()
+    for f in src_files:
+        with open(f, "rb") as fh:
+            h.update(fh.read())
+    src_hash = h.hexdigest()[:16]
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as fh:
+                old = json.load(fh)
+            if old.get("src_hash") == src_hash and old.get("grid") == args.grid:
+                print(f"artifacts fresh (src {src_hash}, grid {args.grid}); nothing to do")
+                return 0
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    entries = []
+    t0 = time.time()
+    todo = list(grid_entries(args.grid))
+    for i, (op, impl, dtype, m, n, N, w) in enumerate(todo):
+        name = entry_name(op, impl, dtype, m, n, N, w)
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        t1 = time.time()
+        text = lower_entry(op, impl, dtype, m, n, N, w)
+        with open(path, "w") as fh:
+            fh.write(text)
+        entries.append(
+            {
+                "op": op,
+                "impl": impl,
+                "dtype": dtype,
+                "m": m,
+                "n": n,
+                "nhist": N,
+                "w": w if w is not None else 0,
+                "file": os.path.basename(path),
+                "outputs": 2 if op == "sinkhorn_sweep" else 1,
+            }
+        )
+        print(
+            f"[{i + 1}/{len(todo)}] {name}: {len(text)} chars "
+            f"({time.time() - t1:.2f}s)",
+            file=sys.stderr,
+        )
+
+    manifest = {
+        "version": 1,
+        "generated_by": "compile.aot",
+        "grid": args.grid,
+        "src_hash": src_hash,
+        "entries": entries,
+    }
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(
+        f"wrote {len(entries)} artifacts + manifest.json to {out_dir} "
+        f"in {time.time() - t0:.1f}s"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

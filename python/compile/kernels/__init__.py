@@ -1,0 +1,3 @@
+"""L1 kernels: Pallas implementations + pure-jnp reference oracle."""
+
+from . import ref, sinkhorn_pallas  # noqa: F401

@@ -1,0 +1,399 @@
+"""L1 — Pallas kernels for the Federated Sinkhorn hot path.
+
+The paper runs its hot spot (blocked ``K_j·v`` products + element-wise
+scaling) on A100 GPUs through torch. Rethought for TPU (see DESIGN.md
+§Hardware-Adaptation):
+
+* the ``(m, n)`` kernel block is tiled into ``(bm, bk)`` VMEM-resident
+  tiles streamed from HBM by ``BlockSpec`` index maps — the role CUDA
+  threadblocks/shared-memory play in the GPU formulation;
+* the ``bm×bk @ bk×bN`` partial products target the MXU systolic array;
+  the f32 accumulator lives in the output VMEM block across the k-grid;
+* the damped scaling epilogue ``u = α·t/q + (1−α)·u_old`` is fused into
+  the final k-step so ``q`` never round-trips to HBM.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime executes. Correctness is pinned to :mod:`ref` by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes).
+
+Tile defaults keep the VMEM footprint ≈ ``bm·bk + bk·bN + 2·bm·bN`` words
+≤ 2 MiB f32 — far under the 16 MiB/core budget, leaving room for
+double-buffered pipelining on real hardware.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "matvec",
+    "block_scaling_update",
+    "block_scaling_update_mat",
+    "marginal_error",
+    "marginal_error_mat",
+    "DEFAULT_BM",
+    "DEFAULT_BK",
+    "DEFAULT_BN",
+    "vmem_footprint_bytes",
+]
+
+# Default tile sizes (rows of A, contraction, histogram columns).
+DEFAULT_BM = 256
+DEFAULT_BK = 512
+DEFAULT_BN = 64
+
+
+def vmem_footprint_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
+    """Estimated VMEM bytes a (bm, bk, bn) tile schedule keeps resident.
+
+    A-tile + x-tile + u_old-tile + out/accumulator tile. Used by DESIGN.md
+    §Perf to size tiles under the 16 MiB/core budget.
+    """
+    return itemsize * (bm * bk + bk * bn + 2 * bm * bn)
+
+
+def _pick_tiles(m: int, n: int, N: int, bm: int, bk: int, bn: int):
+    """Clamp requested tile sizes to the problem and to divisors of it.
+
+    Shapes are padded by the callers to multiples of the returned tiles,
+    so any clamp ≤ requested is valid; we shrink to the dim itself for
+    small problems to avoid an all-padding grid.
+    """
+    return min(bm, m), min(bk, n), min(bn, N)
+
+
+def _pad2(arr, r, c):
+    pr = (-arr.shape[0]) % r
+    pc = (-arr.shape[1]) % c
+    if pr == 0 and pc == 0:
+        return arr
+    return jnp.pad(arr, ((0, pr), (0, pc)))
+
+
+# ---------------------------------------------------------------------------
+# Fused scaling update: u_new = alpha * t / (A @ x) + (1 - alpha) * u_old
+# ---------------------------------------------------------------------------
+
+
+def _scaling_kernel(a_ref, x_ref, t_ref, u_ref, alpha_ref, o_ref, *, nk: int):
+    """Grid = (m/bm, N/bn, n/bk); k is the innermost (minor) grid dim.
+
+    o_ref doubles as the accumulator for the k-loop; the divide/damp
+    epilogue runs on the last k step, fused so q never leaves VMEM.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        alpha = alpha_ref[0]
+        q = o_ref[...]
+        o_ref[...] = alpha * (t_ref[...][:, None] / q) + (1.0 - alpha) * u_ref[...]
+
+
+def block_scaling_update(
+    A,
+    x,
+    t,
+    u_old,
+    alpha,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+):
+    """Pallas version of :func:`ref.block_scaling_update`.
+
+    ``A: (m, n)``, ``x: (n, N)``, ``t: (m,)``, ``u_old: (m, N)``,
+    ``alpha``: scalar → ``(m, N)``.
+    """
+    m, n = A.shape
+    N = x.shape[1]
+    bm, bk, bn = _pick_tiles(m, n, N, bm, bk, bn)
+
+    Ap = _pad2(A, bm, bk)
+    xp = _pad2(x, bk, bn)
+    up = _pad2(u_old, bm, bn)
+    # Pad t with ones so padded rows compute 1/0 = inf, not 0/0 = nan —
+    # keeps interpret-mode nan checks quiet; padding is sliced off below.
+    tp = jnp.pad(t, (0, (-m) % bm), constant_values=1)
+    mp, np_ = Ap.shape
+    Np = xp.shape[1]
+    nk = np_ // bk
+    alpha_arr = jnp.asarray([alpha], dtype=A.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_scaling_kernel, nk=nk),
+        grid=(mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm,), lambda i, j, k: (i,)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, Np), A.dtype),
+        interpret=interpret,
+    )(Ap, xp, tp, up, alpha_arr)
+    return out[:m, :N]
+
+
+# ---------------------------------------------------------------------------
+# Matrix-target flavor: t is (m, N) — the v-update when N > 1 histograms
+# each carry their own target marginal b[:, h] (Cuturi vectorization).
+# ---------------------------------------------------------------------------
+
+
+def _scaling_mat_kernel(a_ref, x_ref, t_ref, u_ref, alpha_ref, o_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        alpha = alpha_ref[0]
+        q = o_ref[...]
+        o_ref[...] = alpha * (t_ref[...] / q) + (1.0 - alpha) * u_ref[...]
+
+
+def block_scaling_update_mat(
+    A,
+    x,
+    t,
+    u_old,
+    alpha,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+):
+    """Like :func:`block_scaling_update` but with per-histogram targets.
+
+    ``A: (m, n)``, ``x: (n, N)``, ``t: (m, N)``, ``u_old: (m, N)``.
+    """
+    m, n = A.shape
+    N = x.shape[1]
+    bm, bk, bn = _pick_tiles(m, n, N, bm, bk, bn)
+
+    Ap = _pad2(A, bm, bk)
+    xp = _pad2(x, bk, bn)
+    up = _pad2(u_old, bm, bn)
+    tp = _pad2(t, bm, bn) + _pad_ones_mask(t.shape, bm, bn, t.dtype)
+    mp, np_ = Ap.shape
+    Np = xp.shape[1]
+    nk = np_ // bk
+    alpha_arr = jnp.asarray([alpha], dtype=A.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_scaling_mat_kernel, nk=nk),
+        grid=(mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, Np), A.dtype),
+        interpret=interpret,
+    )(Ap, xp, tp, up, alpha_arr)
+    return out[:m, :N]
+
+
+def _pad_ones_mask(shape, bm, bn, dtype):
+    """A (padded-shape) array that is 1 exactly on the padding cells.
+
+    Added to a zero-padded target so padded lanes compute ``1/0 = inf``
+    rather than ``0/0 = nan`` (the padding is sliced away afterwards).
+    """
+    m, N = shape
+    mp = m + ((-m) % bm)
+    Np = N + ((-N) % bn)
+    ones = jnp.ones((mp, Np), dtype=dtype)
+    return ones - _pad2(jnp.ones(shape, dtype=dtype), bm, bn)
+
+
+# ---------------------------------------------------------------------------
+# Plain block product: q = A @ x (star-network server step)
+# ---------------------------------------------------------------------------
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], x_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def matvec(
+    A,
+    x,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+):
+    """Pallas version of :func:`ref.matvec`: ``(m, n) @ (n, N) → (m, N)``."""
+    m, n = A.shape
+    N = x.shape[1]
+    bm, bk, bn = _pick_tiles(m, n, N, bm, bk, bn)
+
+    Ap = _pad2(A, bm, bk)
+    xp = _pad2(x, bk, bn)
+    mp, np_ = Ap.shape
+    Np = xp.shape[1]
+
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=(mp // bm, Np // bn, np_ // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, Np), A.dtype),
+        interpret=interpret,
+    )(Ap, xp)
+    return out[:m, :N]
+
+
+# ---------------------------------------------------------------------------
+# Marginal error: err[h] = sum_i |u[i,h] * (A@x)[i,h] - t[i]|
+# ---------------------------------------------------------------------------
+
+
+def _marginal_row_kernel(q_ref, u_ref, t_ref, o_ref, *, nm: int):
+    """Reduce |u∘q − t| over row blocks; grid = (N/bn, m/bm)."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row = u_ref[...] * q_ref[...]
+    o_ref[...] += jnp.sum(jnp.abs(row - t_ref[...][:, None]), axis=0)
+
+
+def marginal_error(
+    A,
+    x,
+    u,
+    t,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+):
+    """Pallas version of :func:`ref.marginal_error` → ``(N,)``.
+
+    Two kernels: the tiled MXU product (reusing :func:`matvec`) followed
+    by a row-block reduction of ``|u∘q − t|``. Splitting keeps each kernel
+    scratch-free (the product's accumulator is its own output block).
+    """
+    m, n = A.shape
+    N = x.shape[1]
+    q = matvec(A, x, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+    bm, _, bn = _pick_tiles(m, n, N, bm, bk, bn)
+    qp = _pad2(q, bm, bn)
+    up = _pad2(u, bm, bn)
+    # Zero-pad t AND u: padded rows contribute |0*q - 0| = 0 to the sum.
+    tp = jnp.pad(t, (0, (-m) % bm))
+    mp, Np = qp.shape
+    nm = mp // bm
+
+    out = pl.pallas_call(
+        functools.partial(_marginal_row_kernel, nm=nm),
+        grid=(Np // bn, nm),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), A.dtype),
+        interpret=interpret,
+    )(qp, up, tp)
+    return out[:N]
+
+
+def _marginal_row_mat_kernel(q_ref, u_ref, t_ref, o_ref, *, nm: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row = u_ref[...] * q_ref[...]
+    o_ref[...] += jnp.sum(jnp.abs(row - t_ref[...]), axis=0)
+
+
+def marginal_error_mat(
+    A,
+    x,
+    u,
+    t,
+    *,
+    bm: int = DEFAULT_BM,
+    bk: int = DEFAULT_BK,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+):
+    """Matrix-target marginal error: ``t: (m, N)`` → ``(N,)``.
+
+    The b-marginal check in vectorized (N > 1) mode, where each histogram
+    has its own target column.
+    """
+    m, n = A.shape
+    N = x.shape[1]
+    q = matvec(A, x, bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+    bm, _, bn = _pick_tiles(m, n, N, bm, bk, bn)
+    qp = _pad2(q, bm, bn)
+    up = _pad2(u, bm, bn)
+    tp = _pad2(t, bm, bn)
+    mp, Np = qp.shape
+    nm = mp // bm
+
+    out = pl.pallas_call(
+        functools.partial(_marginal_row_mat_kernel, nm=nm),
+        grid=(Np // bn, nm),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), A.dtype),
+        interpret=interpret,
+    )(qp, up, tp)
+    return out[:N]

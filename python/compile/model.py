@@ -1,0 +1,185 @@
+"""L2 — JAX model: the Federated Sinkhorn compute graph.
+
+Composes the L1 kernels (:mod:`compile.kernels.sinkhorn_pallas`, with the
+pure-jnp oracle :mod:`compile.kernels.ref` as the "plain-XLA" ablation)
+into the operations the Rust coordinator dispatches through PJRT:
+
+====================  =======================================================
+``client_update``      fused damped scaling update (Algs. 1–2 hot path)
+``client_update_mat``  same, per-histogram targets (vectorized v-update)
+``server_matvec``      ``q = K · v`` (star-network server step, Alg. 3)
+``block_marginal``     per-histogram L1 marginal error of a block
+``block_marginal_mat`` matrix-target flavor
+``block_objective``    entropic OT objective contribution of a row block
+``plan_block``         transport-plan block ``diag(u) K_j diag(v)``
+``sinkhorn_sweep``     ``w`` fused centralized iterations (``lax.scan``)
+====================  =======================================================
+
+Each factory returns a function of concrete arrays; ``compile.aot`` jits
+and lowers them at fixed shapes to HLO text for the Rust runtime. ``impl``
+selects the Pallas path (kernels lower into the same HLO module —
+the architecture requirement) or the jnp oracle (XLA's native GEMM
+fusion; faster on this CPU-only image, see EXPERIMENTS.md §Perf for the
+measured ablation).
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax import lax  # noqa: E402
+
+from .kernels import ref  # noqa: E402
+from .kernels import sinkhorn_pallas as sp  # noqa: E402
+
+IMPLS = ("pallas", "xla")
+
+
+def _mod(impl: str):
+    if impl == "pallas":
+        return sp
+    if impl == "xla":
+        return ref
+    raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+
+
+# Scalars (alpha, eps) are passed as shape-(1,) arrays: the Rust side
+# builds them with Literal::vec1 and the Pallas kernels consume a (1,)
+# block; a single convention for both impls keeps the manifest uniform.
+
+
+def make_client_update(impl: str = "pallas"):
+    """u_new = α·t/(A@x) + (1−α)·u — inputs A(m,n) x(n,N) t(m) u(m,N) α(1)."""
+    k = _mod(impl)
+
+    def client_update(A, x, t, u_old, alpha):
+        return k.block_scaling_update(A, x, t, u_old, alpha[0])
+
+    return client_update
+
+
+def make_client_update_mat(impl: str = "pallas"):
+    """Matrix-target flavor — inputs A(m,n) x(n,N) t(m,N) u(m,N) α(1)."""
+    k = _mod(impl)
+
+    def client_update_mat(A, x, t, u_old, alpha):
+        return k.block_scaling_update_mat(A, x, t, u_old, alpha[0])
+
+    return client_update_mat
+
+
+def make_server_matvec(impl: str = "pallas"):
+    """q = A @ x — inputs A(m,n) x(n,N)."""
+    k = _mod(impl)
+
+    def server_matvec(A, x):
+        return k.matvec(A, x)
+
+    return server_matvec
+
+
+def make_block_marginal(impl: str = "pallas"):
+    """err(N,) = Σ_i |u∘(A@x) − t| — inputs A(m,n) x(n,N) u(m,N) t(m)."""
+    k = _mod(impl)
+
+    def block_marginal(A, x, u, t):
+        return k.marginal_error(A, x, u, t)
+
+    return block_marginal
+
+
+def make_block_marginal_mat(impl: str = "pallas"):
+    """Matrix-target marginal error — inputs A(m,n) x(n,N) u(m,N) t(m,N)."""
+    k = _mod(impl)
+
+    def block_marginal_mat(A, x, u, t):
+        return k.marginal_error_mat(A, x, u, t)
+
+    return block_marginal_mat
+
+
+def make_block_objective(impl: str = "xla"):
+    """Entropic objective of a row block — K(m,n) u(m) v(n) eps(1) → (1,).
+
+    Cold path (once per convergence check); always the jnp formulation —
+    the stable ``ε Σ P (log u + log v − 1)`` rewrite has no matmul to tile.
+    """
+
+    def block_objective(K_block, u, v, eps):
+        return ref.block_objective(K_block, u, v, eps[0])[None]
+
+    return block_objective
+
+
+def make_plan_block(impl: str = "xla"):
+    """P_j = diag(u) K_j diag(v) — K(m,n) u(m) v(n) → (m,n). Cold path."""
+
+    def plan_block(K_block, u, v):
+        return ref.plan_block(K_block, u, v)
+
+    return plan_block
+
+
+def make_sinkhorn_sweep(w: int, impl: str = "pallas"):
+    """``w`` fused centralized iterations — K(n,n) a(n) b(n,N) u,v(n,N) α(1).
+
+    ``lax.scan`` keeps the lowered module O(1) in ``w`` (no unrolling);
+    u/v are the carry, so XLA donates/aliases their buffers across steps.
+    """
+    k = _mod(impl)
+
+    def sweep(K, a, b, u, v, alpha):
+        a_mat = jnp.broadcast_to(a[:, None], b.shape)
+
+        def step(carry, _):
+            u_c, v_c = carry
+            u_n = k.block_scaling_update_mat(K, v_c, a_mat, u_c, alpha[0])
+            v_n = k.block_scaling_update_mat(K.T, u_n, b, v_c, alpha[0])
+            return (u_n, v_n), ()
+
+        (u_f, v_f), _ = lax.scan(step, (u, v), None, length=w)
+        return u_f, v_f
+
+    return sweep
+
+
+# --- Shape signatures for AOT lowering (m, n, N, dtype [, w]) -------------
+
+
+def signature(op: str, m: int, n: int, N: int, dtype):
+    """ShapeDtypeStructs for ``op`` at the given sizes (see aot.py)."""
+    s = lambda *sh: jax.ShapeDtypeStruct(sh, dtype)  # noqa: E731
+    scal = s(1)
+    table = {
+        "client_update": (s(m, n), s(n, N), s(m), s(m, N), scal),
+        "client_update_mat": (s(m, n), s(n, N), s(m, N), s(m, N), scal),
+        "server_matvec": (s(m, n), s(n, N)),
+        "block_marginal": (s(m, n), s(n, N), s(m, N), s(m)),
+        "block_marginal_mat": (s(m, n), s(n, N), s(m, N), s(m, N)),
+        "block_objective": (s(m, n), s(m), s(n), scal),
+        "plan_block": (s(m, n), s(m), s(n)),
+        "sinkhorn_sweep": (s(n, n), s(n), s(n, N), s(n, N), s(n, N), scal),
+    }
+    return table[op]
+
+
+FACTORIES = {
+    "client_update": make_client_update,
+    "client_update_mat": make_client_update_mat,
+    "server_matvec": make_server_matvec,
+    "block_marginal": make_block_marginal,
+    "block_marginal_mat": make_block_marginal_mat,
+    "block_objective": lambda impl: make_block_objective(impl),
+    "plan_block": lambda impl: make_plan_block(impl),
+}
+
+
+def build(op: str, impl: str = "pallas", w: int | None = None):
+    """Instantiate the L2 function for ``op`` (``sinkhorn_sweep`` needs w)."""
+    if op == "sinkhorn_sweep":
+        assert w is not None, "sinkhorn_sweep requires w"
+        return make_sinkhorn_sweep(w, impl)
+    return FACTORIES[op](impl)

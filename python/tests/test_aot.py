@@ -1,0 +1,116 @@
+"""AOT bridge checks: manifest integrity and HLO-text round-trip.
+
+The Rust integration tests re-verify numerics through PJRT; here we check
+the python side — every manifest entry exists, parses as HLO text with the
+expected parameter count, and re-lowering is deterministic.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def test_manifest_entries_exist_and_are_unique():
+    man = _manifest()
+    assert man["version"] == 1
+    seen = set()
+    for e in man["entries"]:
+        key = (e["op"], e["impl"], e["dtype"], e["m"], e["n"], e["nhist"], e["w"])
+        assert key not in seen, f"duplicate manifest entry {key}"
+        seen.add(key)
+        assert os.path.exists(os.path.join(ART, e["file"])), e["file"]
+
+
+def test_manifest_covers_core_ops():
+    ops = {e["op"] for e in _manifest()["entries"]}
+    for op in (
+        "client_update",
+        "client_update_mat",
+        "server_matvec",
+        "block_marginal",
+        "block_objective",
+        "plan_block",
+        "sinkhorn_sweep",
+    ):
+        assert op in ops, f"manifest missing op {op}"
+
+
+def test_manifest_has_both_impls():
+    impls = {e["impl"] for e in _manifest()["entries"]}
+    assert {"pallas", "xla"} <= impls
+
+
+def test_hlo_text_parameter_count_matches_signature():
+    man = _manifest()
+    # One sample per op keeps this fast; param count must equal signature.
+    by_op = {}
+    for e in man["entries"]:
+        by_op.setdefault(e["op"], e)
+    for op, e in by_op.items():
+        with open(os.path.join(ART, e["file"])) as fh:
+            text = fh.read()
+        n_params = len(
+            set(re.findall(r"parameter\((\d+)\)", text))
+        )
+        sig = model.signature(op, e["m"], e["n"], e["nhist"], float)
+        assert n_params == len(sig), f"{op}: {n_params} != {len(sig)}"
+        assert "ENTRY" in text
+
+
+def test_lowering_is_deterministic():
+    a = aot.lower_entry("client_update", "xla", "f64", 8, 16, 2)
+    b = aot.lower_entry("client_update", "xla", "f64", 8, 16, 2)
+    assert a == b
+
+
+def test_entry_name_roundtrip():
+    assert (
+        aot.entry_name("client_update", "pallas", "f64", 4, 8, 1)
+        == "client_update_pallas_f64_m4_n8_N1"
+    )
+    assert (
+        aot.entry_name("sinkhorn_sweep", "xla", "f64", 64, 64, 1, 10)
+        == "sinkhorn_sweep_xla_f64_m64_n64_N1_w10"
+    )
+
+
+def test_quick_grid_regenerates(tmp_path):
+    """aot.py --grid quick runs end-to-end in a fresh directory."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--grid", "quick"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert len(man["entries"]) > 50
+    # Freshness short-circuit: second run must be a no-op.
+    proc2 = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path), "--grid", "quick"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert "fresh" in proc2.stdout

@@ -1,0 +1,139 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, tile sizes and damping factors; every
+kernel must match :mod:`compile.kernels.ref` to tight tolerances. This is
+the CORE correctness signal for the compute layer — the Rust runtime only
+ever executes what these kernels lower to.
+"""
+
+from __future__ import annotations
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels import sinkhorn_pallas as sp  # noqa: E402
+
+# Interpret-mode pallas is slow; keep hypothesis shapes modest but odd
+# (non-divisible by tiles) to exercise the padding paths.
+dims = st.integers(min_value=1, max_value=40)
+hists = st.integers(min_value=1, max_value=9)
+tiles = st.sampled_from([4, 8, 16, 64])
+alphas = st.floats(min_value=0.05, max_value=1.0)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+dtypes = st.sampled_from([np.float64, np.float32])
+
+
+def _problem(seed, m, n, N, dtype):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.uniform(0.1, 1.0, (m, n)).astype(dtype))
+    x = jnp.asarray(rng.uniform(0.1, 1.0, (n, N)).astype(dtype))
+    t = jnp.asarray(rng.uniform(0.1, 1.0, (m,)).astype(dtype))
+    tm = jnp.asarray(rng.uniform(0.1, 1.0, (m, N)).astype(dtype))
+    u = jnp.asarray(rng.uniform(0.1, 1.0, (m, N)).astype(dtype))
+    return A, x, t, tm, u
+
+
+def _tol(dtype):
+    return dict(rtol=5e-5, atol=5e-5) if dtype == np.float32 else dict(rtol=1e-11, atol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=seeds, m=dims, n=dims, N=hists, bm=tiles, bk=tiles, bn=tiles, dtype=dtypes)
+def test_matvec_matches_ref(seed, m, n, N, bm, bk, bn, dtype):
+    A, x, *_ = _problem(seed, m, n, N, dtype)
+    got = sp.matvec(A, x, bm=bm, bk=bk, bn=bn)
+    want = ref.matvec(A, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=seeds, m=dims, n=dims, N=hists, bm=tiles, bk=tiles, bn=tiles, alpha=alphas, dtype=dtypes)
+def test_scaling_update_matches_ref(seed, m, n, N, bm, bk, bn, alpha, dtype):
+    A, x, t, _, u = _problem(seed, m, n, N, dtype)
+    got = sp.block_scaling_update(A, x, t, u, alpha, bm=bm, bk=bk, bn=bn)
+    want = ref.block_scaling_update(A, x, t, u, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=seeds, m=dims, n=dims, N=hists, bm=tiles, bk=tiles, bn=tiles, alpha=alphas, dtype=dtypes)
+def test_scaling_update_mat_matches_ref(seed, m, n, N, bm, bk, bn, alpha, dtype):
+    A, x, _, tm, u = _problem(seed, m, n, N, dtype)
+    got = sp.block_scaling_update_mat(A, x, tm, u, alpha, bm=bm, bk=bk, bn=bn)
+    want = ref.block_scaling_update_mat(A, x, tm, u, alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=seeds, m=dims, n=dims, N=hists, bm=tiles, bk=tiles, bn=tiles, dtype=dtypes)
+def test_marginal_error_matches_ref(seed, m, n, N, bm, bk, bn, dtype):
+    A, x, t, _, u = _problem(seed, m, n, N, dtype)
+    got = sp.marginal_error(A, x, u, t, bm=bm, bk=bk, bn=bn)
+    want = ref.marginal_error(A, x, u, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=seeds, m=dims, n=dims, N=hists, bm=tiles, bk=tiles, bn=tiles, dtype=dtypes)
+def test_marginal_error_mat_matches_ref(seed, m, n, N, bm, bk, bn, dtype):
+    A, x, _, tm, u = _problem(seed, m, n, N, dtype)
+    got = sp.marginal_error_mat(A, x, u, tm, bm=bm, bk=bk, bn=bn)
+    want = ref.marginal_error_mat(A, x, u, tm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+def test_undamped_update_is_pure_sinkhorn():
+    """alpha = 1 must reduce to the classic u = t / (A x) update."""
+    A, x, t, _, u = _problem(7, 17, 13, 3, np.float64)
+    got = sp.block_scaling_update(A, x, t, u, 1.0, bm=8, bk=8, bn=4)
+    want = t[:, None] / ref.matvec(A, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_zero_alpha_is_identity():
+    """alpha = 0 must leave u unchanged (no update applied)."""
+    A, x, t, _, u = _problem(11, 9, 21, 2, np.float64)
+    got = sp.block_scaling_update(A, x, t, u, 0.0, bm=4, bk=16, bn=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(u), rtol=1e-15)
+
+
+def test_padding_does_not_leak():
+    """Shapes forcing heavy padding must still be exact (nan/inf confined)."""
+    A, x, t, _, u = _problem(3, 5, 7, 1, np.float64)
+    got = sp.block_scaling_update(A, x, t, u, 0.5, bm=64, bk=64, bn=64)
+    want = ref.block_scaling_update(A, x, t, u, 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_vmem_footprint_model():
+    """Default tiles stay well under the 16 MiB/core VMEM budget."""
+    fp = sp.vmem_footprint_bytes(sp.DEFAULT_BM, sp.DEFAULT_BK, sp.DEFAULT_BN)
+    assert fp <= 2 * 2**20, f"default tile footprint {fp} > 2 MiB"
+
+
+@pytest.mark.parametrize("w", [1, 3, 10])
+def test_sweep_matches_manual_iteration(w):
+    """ref.sinkhorn_sweep == w hand-rolled full Sinkhorn iterations."""
+    rng = np.random.default_rng(3)
+    n, N = 12, 4
+    K = jnp.asarray(rng.uniform(0.2, 1.0, (n, n)))
+    a = jnp.asarray(rng.dirichlet(np.ones(n)))
+    b = jnp.asarray(rng.dirichlet(np.ones(n), size=N).T.copy())
+    u = jnp.ones((n, N))
+    v = jnp.ones((n, N))
+    gu, gv = ref.sinkhorn_sweep(K, a, b, u, v, w)
+    wu, wv = np.ones((n, N)), np.ones((n, N))
+    Kn, an, bn = np.asarray(K), np.asarray(a), np.asarray(b)
+    for _ in range(w):
+        wu = an[:, None] / (Kn @ wv)
+        wv = bn / (Kn.T @ wu)
+    np.testing.assert_allclose(np.asarray(gu), wu, rtol=1e-10)
+    np.testing.assert_allclose(np.asarray(gv), wv, rtol=1e-10)

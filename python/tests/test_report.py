@@ -1,0 +1,71 @@
+"""tools/report.py renders every experiment document shape."""
+
+import json
+import os
+import subprocess
+import sys
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "..", "tools")
+REPO = os.path.join(os.path.dirname(__file__), "..", "..")
+
+
+def run_report(tmp_path, docs):
+    for name, doc in docs.items():
+        (tmp_path / name).write_text(json.dumps(doc))
+    proc = subprocess.run(
+        [sys.executable, os.path.join(TOOLS, "report.py"), str(tmp_path)],
+        capture_output=True,
+        text=True,
+        timeout=60,
+    )
+    assert proc.returncode == 0, proc.stderr
+    return proc.stdout
+
+
+def test_renders_known_shapes(tmp_path):
+    docs = {
+        "eps.json": {
+            "experiment": "epsilon-study",
+            "rows": [
+                {"eps": 0.5, "i_min": 105, "objective": -1.09, "err_a": 1e-16,
+                 "err_b": 0.0, "collapsed": False, "budget": 10, "trace": []}
+            ],
+        },
+        "timing.json": {
+            "experiment": "timing",
+            "rows": [{"nodes": 2, "comp_mean": 0.1, "comp_std": 0.01,
+                      "comm_mean": 0.2, "comm_std": 0.02, "per_node": []}],
+        },
+        "finance.json": {
+            "experiment": "finance",
+            "paper_example": [
+                {"variant": "sync-a2a", "rho_worst": -0.48, "inner_iters": 26,
+                 "secs": 0.01, "converged": True, "transport_cost": 0.08}
+            ],
+        },
+    }
+    out = run_report(tmp_path, docs)
+    assert "epsilon-study" in out
+    assert "-0.48" in out
+    assert "| nodes |" in out
+
+
+def test_unknown_shape_falls_back(tmp_path):
+    out = run_report(tmp_path, {"x.json": {"experiment": "new-thing", "n": 5}})
+    assert "new-thing" in out
+
+
+def test_real_results_render_if_present(tmp_path):
+    results = os.path.join(REPO, "results")
+    if not os.path.isdir(results) or not os.listdir(results):
+        import pytest
+
+        pytest.skip("no results/ yet")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(TOOLS, "report.py"), results],
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert "#" in proc.stdout

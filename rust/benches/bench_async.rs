@@ -1,0 +1,41 @@
+//! Fig 9 / Figs 21–22 + Tables XXVIII–XXXVI — asynchronous federation:
+//! repeated convergence runs (non-determinism) and α sensitivity.
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::BackendKind;
+use fedsink::config::Variant;
+use fedsink::workload::ProblemSpec;
+
+fn main() {
+    let b = Bench::default();
+    let n = if common::paper_scale() { 10000 } else { 512 };
+    let backend = if common::artifacts_available() {
+        BackendKind::Xla
+    } else {
+        BackendKind::Native
+    };
+
+    section("Fig 9: async-a2a convergence runs (α=0.5)");
+    for c in [2usize, 4, 8] {
+        if n % c != 0 {
+            continue;
+        }
+        let p = ProblemSpec::new(n).with_eps(0.05).build(41);
+        b.run(&format!("async-a2a nodes={c} n={n}"), || {
+            common::solve_to_convergence(&p, Variant::AsyncA2A, c, backend, 0.5)
+        });
+    }
+
+    section("async-star convergence runs (α=0.5)");
+    for c in [2usize, 4] {
+        if n % c != 0 {
+            continue;
+        }
+        let p = ProblemSpec::new(n).with_eps(0.05).build(43);
+        b.run(&format!("async-star nodes={c} n={n}"), || {
+            common::solve_to_convergence(&p, Variant::AsyncStar, c, backend, 0.5)
+        });
+    }
+}

@@ -1,0 +1,59 @@
+//! Network-substrate micro-benchmarks: AllGather / Gather+Scatter /
+//! latest-wins drains vs payload size and node count — the comm-side
+//! costs behind Figs 6/8/14.
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::net::{allgather, LatencyModel, SimNet, TagKind};
+use std::sync::Arc;
+
+fn main() {
+    let b = Bench::default();
+
+    section("AllGather wall time vs payload (zero-latency fabric)");
+    for &nodes in &[2usize, 4, 8] {
+        for &len in &[256usize, 4096, 65536] {
+            b.run(&format!("allgather nodes={nodes} len={len}"), || {
+                run_allgather(nodes, len, LatencyModel::zero())
+            });
+        }
+    }
+
+    section("AllGather wall time vs payload (LAN profile)");
+    for &nodes in &[2usize, 4] {
+        for &len in &[256usize, 65536] {
+            b.run(&format!("allgather+lan nodes={nodes} len={len}"), || {
+                run_allgather(nodes, len, LatencyModel::lan())
+            });
+        }
+    }
+
+    section("latest-wins drain under backlog");
+    for &backlog in &[1usize, 16, 256] {
+        b.run(&format!("drain backlog={backlog}"), || {
+            let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 3));
+            let a = net.endpoint(0);
+            let bep = net.endpoint(1);
+            for k in 0..backlog {
+                a.send(1, TagKind::U, 0, vec![k as f64; 1024], k as u64);
+            }
+            bep.try_recv_latest(0, TagKind::U, 0)
+        });
+    }
+}
+
+fn run_allgather(nodes: usize, len: usize, lat: LatencyModel) {
+    let net = Arc::new(SimNet::new(nodes, lat, 1));
+    crossbeam_utils::thread::scope(|s| {
+        for me in 0..nodes {
+            let net = net.clone();
+            s.spawn(move |_| {
+                let ep = net.endpoint(me);
+                let mine = vec![me as f64; len];
+                let _ = allgather(&ep, TagKind::U, 0, &mine, 0);
+            });
+        }
+    })
+    .unwrap();
+}

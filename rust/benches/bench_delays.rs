@@ -1,0 +1,51 @@
+//! Figs 15–17 + Table V — staleness: fixed-budget async runs that feed
+//! the τ tracker; prints the per-node-count delay statistics alongside
+//! the timing.
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::run_federated;
+use fedsink::metrics::Summary;
+use fedsink::net::LatencyModel;
+use fedsink::sinkhorn::StopPolicy;
+use fedsink::workload::ProblemSpec;
+
+fn main() {
+    let b = Bench::default();
+    let n = if common::paper_scale() { 10000 } else { 512 };
+    let iters = 500;
+    section("Table V: tau statistics from fixed-budget async runs");
+    for c in [2usize, 4, 8] {
+        if n % c != 0 {
+            continue;
+        }
+        let p = ProblemSpec::new(n).with_eps(0.05).build(61);
+        let cfg = SolveConfig {
+            variant: Variant::AsyncA2A,
+            backend: BackendKind::Native,
+            clients: c,
+            alpha: 0.5,
+            net: LatencyModel::lan(),
+            ..Default::default()
+        };
+        let policy = StopPolicy {
+            threshold: 0.0,
+            max_iters: iters,
+            check_every: iters + 1,
+            ..Default::default()
+        };
+        let mut taus: Vec<f64> = Vec::new();
+        b.run(&format!("async T={iters} nodes={c}"), || {
+            let out = run_federated(&p, &cfg, policy, false);
+            taus.extend(out.taus.iter().map(|&t| t as f64));
+        });
+        let nz: Vec<f64> = taus.iter().cloned().filter(|&t| t >= 1.0).collect();
+        let s = Summary::of(&nz);
+        println!(
+            "    -> tau: max={} min={} mean={:.2} std={:.2} ({} samples)",
+            s.max, s.min, s.mean, s.std, nz.len()
+        );
+    }
+}

@@ -1,0 +1,34 @@
+//! Figs 4–5 — ε sensitivity of the centralized solver on the paper's
+//! 4×4 worked example (iteration count ∝ 1/ε).
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::BackendKind;
+use fedsink::runtime::make_backend;
+use fedsink::sinkhorn::{CentralizedSolver, StopPolicy};
+use fedsink::workload::Problem;
+
+fn main() {
+    let b = Bench::default();
+    section("Figs 4-5: time to convergence vs epsilon (4x4 example)");
+    let solver = CentralizedSolver::new(make_backend(BackendKind::Native, "", 1).unwrap());
+    for &eps in &[5e-2, 5e-3, 1e-3, 1e-4] {
+        let p = Problem::paper_4x4(eps);
+        let policy = StopPolicy {
+            threshold: 1e-15,
+            max_iters: 2_000_000,
+            check_every: 100,
+            ..Default::default()
+        };
+        let r = b.run(&format!("eps={eps:.0e}"), || solver.solve(&p, policy, 1.0).iterations);
+        let out = solver.solve(&p, policy, 1.0);
+        println!(
+            "    -> {} iterations ({}), {:.2} iters/(1/eps)",
+            out.iterations,
+            if out.converged() { "converged" } else { "cap" },
+            out.iterations as f64 * eps
+        );
+        let _ = r;
+    }
+}

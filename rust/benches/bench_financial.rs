@@ -1,0 +1,60 @@
+//! Fig 25 — convergence time of the three settings on the §V-B4
+//! financial worked example, plus the λ-search pipeline on the larger
+//! synthetic book.
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::finance::{synthetic_portfolio, worst_case_loss, LambdaSearch, WorstCaseSpec};
+use fedsink::net::LatencyModel;
+use fedsink::sinkhorn::StopPolicy;
+
+fn main() {
+    let b = Bench::default();
+    let policy = StopPolicy { threshold: 1e-12, max_iters: 20_000, ..Default::default() };
+
+    section("Fig 25: worked example across the three settings");
+    let spec = WorstCaseSpec::paper_example();
+    for (variant, alpha) in [
+        (Variant::SyncA2A, 1.0),
+        (Variant::SyncStar, 1.0),
+        (Variant::AsyncA2A, 0.5),
+    ] {
+        let cfg = SolveConfig {
+            variant,
+            backend: BackendKind::Native,
+            clients: 3,
+            alpha,
+            net: LatencyModel::lan(),
+            ..Default::default()
+        };
+        b.run(&format!("{} worked example", variant.name()), || {
+            worst_case_loss(&spec, &cfg, policy, LambdaSearch::fixed(spec.lambda))
+        });
+    }
+
+    section("lambda-search on the synthetic book");
+    let scenarios = if common::paper_scale() { 256 } else { 64 };
+    let data = synthetic_portfolio(12, scenarios, 7);
+    let spec = WorstCaseSpec {
+        returns: data.historical,
+        targets: data.analyst_view,
+        weights: vec![1.0 / scenarios as f64; scenarios],
+        lambda: 0.5,
+        delta: 1e-4,
+        eps: 0.01,
+        margin: 0.01,
+    };
+    let cfg = SolveConfig {
+        variant: Variant::SyncA2A,
+        backend: BackendKind::Native,
+        clients: 4,
+        net: LatencyModel::lan(),
+        ..Default::default()
+    };
+    let pol = StopPolicy { threshold: 1e-10, max_iters: 20_000, ..Default::default() };
+    b.run(&format!("bisection search, {scenarios} scenarios"), || {
+        worst_case_loss(&spec, &cfg, pol, LambdaSearch::bisection(1e-3, 16.0, 1e-6, 12))
+    });
+}

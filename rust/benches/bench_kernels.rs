@@ -1,0 +1,124 @@
+//! Micro-benchmarks of the compute hot path + the backend ablations:
+//! * native dense GEMV/GEMM, threaded scaling, CSR crossover (sparsity);
+//! * XLA artifact dispatch: plain-XLA vs Pallas-lowered modules vs the
+//!   native kernels (the L1 impl ablation of DESIGN.md §7).
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::BackendKind;
+use fedsink::linalg::{Csr, Mat};
+use fedsink::rng::Rng;
+use fedsink::runtime::{make_backend, NativeBackend, PjrtRuntime, Target};
+use fedsink::runtime::ComputeBackend;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::seed_from(1);
+
+    section("native GEMV / GEMM (n x n @ n x N)");
+    for &(n, nh) in &[(512usize, 1usize), (512, 64), (1024, 1), (1024, 64)] {
+        let a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        let mut out = Mat::zeros(n, nh);
+        for threads in [1usize, 4] {
+            b.run(&format!("native matmul n={n} N={nh} threads={threads}"), || {
+                a.matmul_into(&x, &mut out, threads)
+            });
+        }
+    }
+
+    section("CSR vs dense at off-diagonal sparsity (n=1024, N=1)");
+    let n = 1024;
+    for &s in &[0.0f64, 0.5, 0.9, 1.0] {
+        let p = fedsink::workload::ProblemSpec::new(n)
+            .with_sparsity(s, 4)
+            .build(5);
+        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
+        let mut out = Mat::zeros(n, 1);
+        let csr = Csr::from_dense(&p.k, 1e-300);
+        b.run(&format!("dense  s={s} (density {:.2})", csr.density()), || {
+            p.k.matmul_into(&x, &mut out, 1)
+        });
+        b.run(&format!("csr    s={s}"), || csr.matmul_into(&x, &mut out, 1));
+    }
+
+    if !common::artifacts_available() {
+        eprintln!("skipping XLA ablation benches: run `make artifacts`");
+        return;
+    }
+
+    section("backend ablation: client_update (m=n, N=1)");
+    let dir = fedsink::config::default_artifacts_dir();
+    let xla = make_backend(BackendKind::Xla, &dir, 1).expect("xla backend");
+    let native = NativeBackend::new(1);
+    for &n in &[256usize, 512] {
+        let a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
+        let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let mut op_x = xla.block_op(&a, Target::Vec(&t), Mat::ones(n, 1)).unwrap();
+        let mut op_n = native.block_op(&a, Target::Vec(&t), Mat::ones(n, 1)).unwrap();
+        b.run(&format!("xla    update n={n}"), || {
+            op_x.update(&x, 1.0);
+        });
+        b.run(&format!("native update n={n}"), || {
+            op_n.update(&x, 1.0);
+        });
+    }
+
+    section("artifact impl ablation: plain-XLA vs Pallas-lowered HLO");
+    let rt = PjrtRuntime::shared(&dir).expect("runtime");
+    for &n in &[256usize, 512] {
+        let (Some(ex), Some(ep)) = (
+            rt.manifest().find_impl("client_update", "xla", n, n, 1, 0),
+            rt.manifest().find_impl("client_update", "pallas", n, n, 1, 0),
+        ) else {
+            continue;
+        };
+        let a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
+        let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let mk = |d: &[f64], dims: &[i64]| xla::Literal::vec1(d).reshape(dims).unwrap();
+        let inputs = vec![
+            mk(a.as_slice(), &[n as i64, n as i64]),
+            mk(x.as_slice(), &[n as i64, 1]),
+            xla::Literal::vec1(&t),
+            mk(Mat::ones(n, 1).as_slice(), &[n as i64, 1]),
+            xla::Literal::vec1(&[1.0f64]),
+        ];
+        b.run(&format!("hlo[xla]    client_update n={n}"), || {
+            rt.run_entry(ex, &inputs).unwrap()
+        });
+        b.run(&format!("hlo[pallas] client_update n={n}"), || {
+            rt.run_entry(ep, &inputs).unwrap()
+        });
+    }
+
+    section("fused sweep artifact (w=10) vs 10 step dispatches");
+    for &n in &[256usize, 512] {
+        let Some(sweep) = rt.manifest().find_w("sinkhorn_sweep", n, n, 1, 10) else {
+            continue;
+        };
+        let p = fedsink::workload::ProblemSpec::new(n).with_eps(0.1).build(9);
+        let mk = |d: &[f64], dims: &[i64]| xla::Literal::vec1(d).reshape(dims).unwrap();
+        let inputs = vec![
+            mk(p.k.as_slice(), &[n as i64, n as i64]),
+            xla::Literal::vec1(p.a.as_slice()),
+            mk(p.b.as_slice(), &[n as i64, 1]),
+            mk(Mat::ones(n, 1).as_slice(), &[n as i64, 1]),
+            mk(Mat::ones(n, 1).as_slice(), &[n as i64, 1]),
+            xla::Literal::vec1(&[1.0f64]),
+        ];
+        b.run(&format!("sweep w=10 n={n}"), || rt.run_entry(sweep, &inputs).unwrap());
+        let be = make_backend(BackendKind::Xla, &dir, 1).unwrap();
+        let mut u_op = be.block_op(&p.k, Target::Vec(&p.a), Mat::ones(n, 1)).unwrap();
+        let kt = p.k.transpose();
+        let mut v_op = be.block_op(&kt, Target::Mat(&p.b), Mat::ones(n, 1)).unwrap();
+        b.run(&format!("10 x step dispatch n={n}"), || {
+            for _ in 0..10 {
+                let u = u_op.update(v_op.state(), 1.0).clone();
+                v_op.update(&u, 1.0);
+            }
+        });
+    }
+}

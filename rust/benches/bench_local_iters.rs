@@ -1,0 +1,35 @@
+//! App A, Figs 26–28 — local iterations w: time-to-convergence of the
+//! sync federation as w grows (the paper finds pure slowdown).
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::run_federated;
+use fedsink::net::LatencyModel;
+use fedsink::sinkhorn::StopPolicy;
+use fedsink::workload::ProblemSpec;
+
+fn main() {
+    let b = Bench::default();
+    let n = if common::paper_scale() { 1000 } else { 256 };
+    let p = ProblemSpec::new(n).with_eps(0.05).build(88);
+    section("Figs 26-28: sync-a2a convergence vs local iterations w");
+    for &w in &[1usize, 2, 4, 8] {
+        let cfg = SolveConfig {
+            variant: Variant::SyncA2A,
+            backend: BackendKind::Native,
+            clients: 4,
+            local_iters: w,
+            net: LatencyModel::lan(),
+            ..Default::default()
+        };
+        let policy = StopPolicy { threshold: 1e-12, max_iters: 2000, ..Default::default() };
+        let mut iters = 0;
+        b.run(&format!("w={w}"), || {
+            let out = run_federated(&p, &cfg, policy, false);
+            iters = out.iterations;
+        });
+        println!("    -> {iters} compute iterations to convergence");
+    }
+}

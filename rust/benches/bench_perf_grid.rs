@@ -1,0 +1,45 @@
+//! Tables VII–XXXVI — the appendix performance grids, as timed benches:
+//! centralized / sync-a2a / sync-star / async-a2a convergence runs over
+//! the n × sparsity grid. The `fedsink perf-grid` subcommand prints the
+//! full paper-format tables; this target provides the stable timing
+//! series for EXPERIMENTS.md.
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::{BackendKind, Variant};
+use fedsink::workload::{CondClass, ProblemSpec};
+
+fn main() {
+    let b = Bench::default();
+    let backend = if common::artifacts_available() {
+        BackendKind::Xla
+    } else {
+        eprintln!("artifacts missing; using native backend");
+        BackendKind::Native
+    };
+
+    for (title, variant, clients, alpha) in [
+        ("Tables VII-IX: centralized", Variant::Centralized, 1usize, 1.0),
+        ("Tables X-XVIII: sync all-to-all (4 nodes)", Variant::SyncA2A, 4, 1.0),
+        ("Tables XIX-XXVII: sync star (4 nodes)", Variant::SyncStar, 4, 1.0),
+        ("Tables XXVIII-XXXVI: async a2a (4 nodes, α=0.5)", Variant::AsyncA2A, 4, 0.5),
+    ] {
+        section(title);
+        for &n in &common::sizes() {
+            if n % clients != 0 {
+                continue;
+            }
+            for &s in &[0.0, 0.9] {
+                let p = ProblemSpec::new(n)
+                    .with_eps(0.05)
+                    .with_sparsity(s, 4)
+                    .with_condition(CondClass::Well)
+                    .build(21);
+                b.run(&format!("{} n={n} s={s}", variant.name()), || {
+                    common::solve_to_convergence(&p, variant, clients, backend, alpha)
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Table I + Fig 13 — async damping step size: time-to-convergence per
+//! (α × node count), CPU-speed backend like the paper's §IV-C2.
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::BackendKind;
+use fedsink::config::Variant;
+use fedsink::workload::ProblemSpec;
+
+fn main() {
+    let b = Bench::default();
+    let n = if common::paper_scale() { 10000 } else { 512 };
+    section("Table I: async time-to-convergence vs alpha x nodes");
+    for c in [2usize, 4, 8] {
+        if n % c != 0 {
+            continue;
+        }
+        for &alpha in &[0.1, 0.25, 0.5] {
+            let p = ProblemSpec::new(n).with_eps(0.05).build(55);
+            b.run(&format!("nodes={c} alpha={alpha}"), || {
+                common::solve_to_convergence(&p, Variant::AsyncA2A, c, BackendKind::Native, alpha)
+            });
+        }
+    }
+}

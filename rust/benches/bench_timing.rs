@@ -1,0 +1,46 @@
+//! Figs 6/14/18 — per-node comp/comm split at a fixed iteration budget,
+//! across node counts, on both backends ("GPU-speed" XLA vs "CPU-speed"
+//! native).
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::{BackendKind, Variant};
+use fedsink::workload::ProblemSpec;
+
+fn main() {
+    let b = Bench::default();
+    let n = if common::paper_scale() { 10000 } else { 1024 };
+    let iters = if common::paper_scale() { 250 } else { 50 };
+    let p = ProblemSpec::new(n).with_eps(0.05).build(77);
+
+    for (title, backend) in [
+        ("Fig 6: sync-a2a, XLA backend (GPU-speed stand-in)", BackendKind::Xla),
+        ("Fig 18: sync-a2a, native backend (CPU-speed)", BackendKind::Native),
+    ] {
+        if backend == BackendKind::Xla && !common::artifacts_available() {
+            eprintln!("skipping XLA timing bench (no artifacts)");
+            continue;
+        }
+        section(title);
+        for c in [1usize, 2, 4, 8] {
+            if n % c != 0 {
+                continue;
+            }
+            let variant = if c == 1 { Variant::Centralized } else { Variant::SyncA2A };
+            b.run(&format!("{} nodes={c} n={n} iters={iters}", backend.name()), || {
+                common::solve_fixed_iters(&p, variant, c, backend, iters)
+            });
+        }
+    }
+
+    section("Fig 14: async-a2a comp/comm at fixed budget");
+    for c in [2usize, 4, 8] {
+        if n % c != 0 {
+            continue;
+        }
+        b.run(&format!("async nodes={c} n={n} iters={iters}"), || {
+            common::solve_fixed_iters(&p, Variant::AsyncA2A, c, BackendKind::Native, iters)
+        });
+    }
+}

@@ -1,0 +1,42 @@
+//! Figs 7–8 + §IV-B3 — vectorized N-histogram solves: compute time vs N
+//! and serial-vs-vectorized dispatch.
+
+mod common;
+
+use fedsink::benchkit::{section, Bench};
+use fedsink::config::BackendKind;
+use fedsink::config::Variant;
+use fedsink::workload::ProblemSpec;
+
+fn main() {
+    let b = Bench::default();
+    let backend = if common::artifacts_available() {
+        BackendKind::Xla
+    } else {
+        BackendKind::Native
+    };
+    let n = 512;
+    let iters = 15; // the paper's fixed budget for this study
+
+    section("Fig 7: compute time vs N (centralized and 2/4-node sync)");
+    for &nh in &[1usize, 64, 512, 4096] {
+        let p = ProblemSpec::new(n).with_hists(nh).with_eps(0.1).build(33);
+        for c in [1usize, 2, 4] {
+            let variant = if c == 1 { Variant::Centralized } else { Variant::SyncA2A };
+            b.run(&format!("N={nh} nodes={c}"), || {
+                common::solve_fixed_iters(&p, variant, c, backend, iters)
+            });
+        }
+    }
+
+    section("§IV-B3: serial vs vectorized (N=64)");
+    let nh = 64;
+    let p = ProblemSpec::new(n).with_hists(nh).with_eps(0.1).build(35);
+    b.run("vectorized: one n x N solve", || {
+        common::solve_fixed_iters(&p, Variant::Centralized, 1, backend, iters)
+    });
+    let single = ProblemSpec::new(n).with_hists(1).with_eps(0.1).build(35);
+    b.run("serial: one histogram at a time (x1 shown)", || {
+        common::solve_fixed_iters(&single, Variant::Centralized, 1, backend, iters)
+    });
+}

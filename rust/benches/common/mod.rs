@@ -1,0 +1,74 @@
+#![allow(dead_code)] // shared across bench targets; each uses a subset
+
+//! Shared bench scaffolding (no `criterion` offline — see benchkit).
+
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::run_federated;
+use fedsink::net::LatencyModel;
+use fedsink::sinkhorn::StopPolicy;
+use fedsink::workload::Problem;
+
+/// Bench-scale knobs: `FEDSINK_SCALE=paper` widens the grids, default
+/// keeps `cargo bench` to minutes.
+pub fn sizes() -> Vec<usize> {
+    if paper_scale() {
+        vec![1000, 5000, 10000]
+    } else {
+        vec![256, 1024]
+    }
+}
+
+pub fn paper_scale() -> bool {
+    std::env::var("FEDSINK_SCALE").as_deref() == Ok("paper")
+}
+
+pub fn artifacts_available() -> bool {
+    let dir = fedsink::config::default_artifacts_dir();
+    std::path::Path::new(&dir).join("manifest.json").exists()
+}
+
+/// One end-to-end solve at a fixed iteration budget (timing tables).
+pub fn solve_fixed_iters(
+    p: &Problem,
+    variant: Variant,
+    clients: usize,
+    backend: BackendKind,
+    iters: usize,
+) -> f64 {
+    let cfg = SolveConfig {
+        variant,
+        backend,
+        clients,
+        net: LatencyModel::lan(),
+        ..Default::default()
+    };
+    let policy = StopPolicy {
+        threshold: 0.0,
+        max_iters: iters,
+        check_every: iters + 1,
+        ..Default::default()
+    };
+    let out = run_federated(p, &cfg, policy, false);
+    out.secs
+}
+
+/// One convergence-bounded solve (perf-grid tables).
+pub fn solve_to_convergence(
+    p: &Problem,
+    variant: Variant,
+    clients: usize,
+    backend: BackendKind,
+    alpha: f64,
+) -> (bool, usize, f64) {
+    let cfg = SolveConfig {
+        variant,
+        backend,
+        clients,
+        alpha,
+        net: LatencyModel::lan(),
+        ..Default::default()
+    };
+    let policy = StopPolicy { threshold: 1e-13, max_iters: 1500, ..Default::default() };
+    let out = run_federated(p, &cfg, policy, false);
+    (out.converged, out.iterations, out.secs)
+}

@@ -1,0 +1,102 @@
+//! Micro-benchmark harness (no `criterion` in the offline image).
+//!
+//! `cargo bench` targets use `harness = false` mains built on this:
+//! warmup, timed repetitions, outlier-robust summaries, and a stable
+//! one-line-per-case output format that `EXPERIMENTS.md` records.
+
+use crate::metrics::Summary;
+use std::time::Instant;
+
+/// One benchmark case result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<56} reps={:<3} mean={:>10.4}ms median={:>10.4}ms std={:>8.4}ms min={:>10.4}ms",
+            self.name,
+            self.reps,
+            self.secs.mean * 1e3,
+            self.secs.median * 1e3,
+            self.secs.std * 1e3,
+            self.secs.min * 1e3,
+        )
+    }
+}
+
+/// Harness configuration; `quick()` honors `FEDSINK_BENCH_QUICK=1` so CI
+/// smoke runs stay fast.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup: usize,
+    pub reps: usize,
+    /// Soft wall-clock budget per case; reps stop early once exceeded.
+    pub budget_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        if std::env::var("FEDSINK_BENCH_QUICK").as_deref() == Ok("1") {
+            Self { warmup: 1, reps: 3, budget_secs: 2.0 }
+        } else {
+            Self { warmup: 2, reps: 10, budget_secs: 20.0 }
+        }
+    }
+}
+
+impl Bench {
+    /// Time `f` (called once per rep) and print + return the summary.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.reps);
+        let budget_start = Instant::now();
+        for _ in 0..self.reps {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+            if budget_start.elapsed().as_secs_f64() > self.budget_secs && times.len() >= 3 {
+                break;
+            }
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            reps: times.len(),
+            secs: Summary::of(&times),
+        };
+        println!("{}", res.line());
+        res
+    }
+}
+
+/// Section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_summarizes() {
+        let b = Bench { warmup: 1, reps: 5, budget_secs: 10.0 };
+        let r = b.run("noop", || 1 + 1);
+        assert_eq!(r.reps, 5);
+        assert!(r.secs.mean >= 0.0);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let b = Bench { warmup: 0, reps: 1000, budget_secs: 0.05 };
+        let r = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(r.reps < 1000);
+        assert!(r.reps >= 3);
+    }
+}

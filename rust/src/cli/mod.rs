@@ -1,0 +1,263 @@
+//! Declarative CLI flag parser (no `clap` in the offline image).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`. Each subcommand of the
+//! `fedsink` launcher declares an [`ArgSpec`] and receives a typed
+//! [`Parsed`] view.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub value_name: Option<&'static str>,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+/// A subcommand's argument specification.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    pub flags: Vec<Flag>,
+}
+
+impl ArgSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Flag taking a value, with default.
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        value_name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(Flag { name, value_name: Some(value_name), default: Some(default), help });
+        self
+    }
+
+    /// Flag taking a value, no default (optional).
+    pub fn opt_req(
+        mut self,
+        name: &'static str,
+        value_name: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(Flag { name, value_name: Some(value_name), default: None, help });
+        self
+    }
+
+    /// Boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, value_name: None, default: None, help });
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut out = format!("usage: fedsink {cmd} [flags]\n\nflags:\n");
+        for f in &self.flags {
+            let left = match f.value_name {
+                Some(v) => format!("  --{} <{}>", f.name, v),
+                None => format!("  --{}", f.name),
+            };
+            let default = f
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            out.push_str(&format!("{left:<28}{}{}\n", f.help, default));
+        }
+        out.push_str("  --help                    show this message\n");
+        out
+    }
+
+    /// Parse `args` (after the subcommand name).
+    pub fn parse(&self, cmd: &str, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut switches: Vec<String> = Vec::new();
+        let mut positional: Vec<String> = Vec::new();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError::Help(self.usage(cmd)));
+            }
+            if let Some(name) = arg.strip_prefix("--") {
+                let (name, inline) = match name.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (name, None),
+                };
+                let flag = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::Unknown(format!("--{name}"), self.usage(cmd)))?;
+                if flag.value_name.is_some() {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(format!("--{name}")))?
+                        }
+                    };
+                    values.insert(name.to_string(), v);
+                } else {
+                    switches.push(name.to_string());
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Parsed { values, switches, positional })
+    }
+}
+
+/// Parsed CLI arguments with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    pub values: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.typed(name, |s| s.parse().ok())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.typed(name, |s| s.parse().ok())
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.typed(name, |s| s.parse().ok())
+    }
+
+    /// Comma-separated list.
+    pub fn get_list<T>(&self, name: &str, parse: impl Fn(&str) -> Option<T>) -> Result<Vec<T>, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(format!("--{name}")))?;
+        raw.split(',')
+            .map(|s| {
+                parse(s.trim()).ok_or_else(|| {
+                    CliError::BadValue(format!("--{name}"), s.trim().to_string())
+                })
+            })
+            .collect()
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    fn typed<T>(&self, name: &str, parse: impl Fn(&str) -> Option<T>) -> Result<T, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(format!("--{name}")))?;
+        parse(raw).ok_or_else(|| CliError::BadValue(format!("--{name}"), raw.to_string()))
+    }
+}
+
+/// CLI failure modes; `Help` carries the usage text (exit 0).
+#[derive(Debug)]
+pub enum CliError {
+    Help(String),
+    Unknown(String, String),
+    MissingValue(String),
+    BadValue(String, String),
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::Help(u) => write!(f, "{u}"),
+            CliError::Unknown(flag, usage) => write!(f, "unknown flag {flag}\n\n{usage}"),
+            CliError::MissingValue(flag) => write!(f, "flag {flag} requires a value"),
+            CliError::BadValue(flag, v) => write!(f, "invalid value {v:?} for {flag}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new()
+            .opt("n", "SIZE", "256", "problem size")
+            .opt("alpha", "A", "1.0", "damping")
+            .opt_req("out", "PATH", "output file")
+            .switch("verbose", "chatty")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse("t", &args(&[])).unwrap();
+        assert_eq!(p.get_usize("n").unwrap(), 256);
+        assert_eq!(p.get_f64("alpha").unwrap(), 1.0);
+        assert!(p.get("out").is_none());
+        assert!(!p.has("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let p = spec()
+            .parse("t", &args(&["--n=512", "--alpha", "0.25", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get_usize("n").unwrap(), 512);
+        assert_eq!(p.get_f64("alpha").unwrap(), 0.25);
+        assert!(p.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(matches!(
+            spec().parse("t", &args(&["--bogus"])),
+            Err(CliError::Unknown(..))
+        ));
+    }
+
+    #[test]
+    fn help_short_circuits() {
+        assert!(matches!(
+            spec().parse("t", &args(&["--help"])),
+            Err(CliError::Help(_))
+        ));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let spec = ArgSpec::new().opt("sizes", "LIST", "1,2,4", "sizes");
+        let p = spec.parse("t", &args(&[])).unwrap();
+        let v: Vec<usize> = p.get_list("sizes", |s| s.parse().ok()).unwrap();
+        assert_eq!(v, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let p = spec().parse("t", &args(&["--n", "abc"])).unwrap();
+        assert!(matches!(p.get_usize("n"), Err(CliError::BadValue(..))));
+    }
+}

@@ -1,0 +1,102 @@
+//! TOML-subset config file loader.
+//!
+//! Supports: `[section]` headers (flattened to `section.key`), `k = v`
+//! with string/number/bool values, `#` comments, blank lines. That is the
+//! entire subset the launcher documents; anything else is an error, not
+//! a silent skip.
+
+use super::Settings;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct FileError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for FileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for FileError {}
+
+/// Parse config text into settings (keys become `section.key`).
+pub fn load_file(text: &str) -> Result<Settings, FileError> {
+    let mut out = Settings::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        let line = match line.find('#') {
+            // Allow inline comments outside quotes.
+            Some(idx) if !line[..idx].contains('"') => line[..idx].trim(),
+            _ => line,
+        };
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(FileError {
+                line: lineno + 1,
+                message: "unterminated [section]".into(),
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or(FileError {
+            line: lineno + 1,
+            message: "expected `key = value`".into(),
+        })?;
+        let key = line[..eq].trim();
+        let mut val = line[eq + 1..].trim().to_string();
+        if key.is_empty() {
+            return Err(FileError { line: lineno + 1, message: "empty key".into() });
+        }
+        // Strip matching quotes.
+        if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+            val = val[1..val.len() - 1].to_string();
+        }
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        out.set(&full, val);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let s = load_file(
+            r#"
+            # experiment config
+            seed = 7
+            [net]
+            base_latency = 1e-4   # seconds
+            name = "wan profile"
+            [solver]
+            alpha = 0.5
+            damped = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(s.get_usize("seed"), Some(7));
+        assert_eq!(s.get_f64("net.base_latency"), Some(1e-4));
+        assert_eq!(s.get("net.name"), Some("wan profile"));
+        assert_eq!(s.get_f64("solver.alpha"), Some(0.5));
+        assert_eq!(s.get_bool("solver.damped"), Some(true));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(load_file("key_without_value").is_err());
+        assert!(load_file("[unclosed").is_err());
+        assert!(load_file("= novalue").is_err());
+    }
+}

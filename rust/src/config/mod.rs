@@ -1,0 +1,257 @@
+//! Runtime & experiment configuration.
+//!
+//! A small typed layer over key=value pairs: values come from (in
+//! precedence order) CLI flags, environment (`FEDSINK_*`), and an optional
+//! config file in a TOML subset (`key = value`, `[section]` headers,
+//! strings/numbers/bools). No `serde`/`toml` crates resolve offline, so
+//! the loader lives here.
+
+mod file;
+
+pub use file::{load_file, FileError};
+
+use crate::workload::CondClass;
+use std::collections::BTreeMap;
+
+/// Which federated variant to run — the paper's four protocols plus the
+/// centralized baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Centralized,
+    SyncA2A,
+    AsyncA2A,
+    SyncStar,
+    AsyncStar,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "centralized" | "central" => Some(Variant::Centralized),
+            "sync-a2a" | "sync_a2a" => Some(Variant::SyncA2A),
+            "async-a2a" | "async_a2a" => Some(Variant::AsyncA2A),
+            "sync-star" | "sync_star" => Some(Variant::SyncStar),
+            "async-star" | "async_star" => Some(Variant::AsyncStar),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Centralized => "centralized",
+            Variant::SyncA2A => "sync-a2a",
+            Variant::AsyncA2A => "async-a2a",
+            Variant::SyncStar => "sync-star",
+            Variant::AsyncStar => "async-star",
+        }
+    }
+
+    pub const ALL_FEDERATED: [Variant; 4] = [
+        Variant::SyncA2A,
+        Variant::AsyncA2A,
+        Variant::SyncStar,
+        Variant::AsyncStar,
+    ];
+}
+
+/// Which compute backend executes the block products.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO through PJRT — the "GPU-speed" accelerator stand-in.
+    Xla,
+    /// Pure-Rust blocked kernels — the "CPU-speed" stand-in (§IV-E).
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "xla" => Some(BackendKind::Xla),
+            "native" => Some(BackendKind::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Xla => "xla",
+            BackendKind::Native => "native",
+        }
+    }
+}
+
+/// Full solver configuration (defaults mirror the paper's settings).
+#[derive(Clone, Debug)]
+pub struct SolveConfig {
+    pub variant: Variant,
+    pub backend: BackendKind,
+    pub clients: usize,
+    /// Damping step size α (async variants; 1.0 = undamped).
+    pub alpha: f64,
+    /// Local iterations between communications (w; App. A).
+    pub local_iters: usize,
+    /// Convergence threshold on the a-marginal L1 error.
+    pub threshold: f64,
+    /// Hard iteration cap.
+    pub max_iters: usize,
+    /// Wall-clock timeout in seconds (0 = none) — the paper's
+    /// fast/slow limits in §IV-C2.
+    pub timeout_secs: f64,
+    /// Check convergence every this many iterations.
+    pub check_every: usize,
+    /// Async variants: max local iterations a node may run ahead of the
+    /// freshest message from any live peer before it waits (the bounded
+    /// delay assumption of the ARock analysis behind Prop. 2).
+    pub max_staleness: u64,
+    /// Threads for the native backend's GEMM.
+    pub compute_threads: usize,
+    /// RNG seed (workloads + network jitter).
+    pub seed: u64,
+    /// Artifact directory for the XLA backend.
+    pub artifacts_dir: String,
+    /// Network latency profile.
+    pub net: crate::net::LatencyModel,
+}
+
+impl Default for SolveConfig {
+    fn default() -> Self {
+        Self {
+            variant: Variant::SyncA2A,
+            backend: BackendKind::Xla,
+            clients: 2,
+            alpha: 1.0,
+            local_iters: 1,
+            threshold: 1e-10,
+            max_iters: 1500,
+            timeout_secs: 0.0,
+            check_every: 1,
+            max_staleness: 8,
+            compute_threads: 1,
+            seed: 42,
+            artifacts_dir: default_artifacts_dir(),
+            net: crate::net::LatencyModel::lan(),
+        }
+    }
+}
+
+/// artifacts/ next to the binary's workspace (overridable by env).
+pub fn default_artifacts_dir() -> String {
+    if let Ok(d) = std::env::var("FEDSINK_ARTIFACTS") {
+        return d;
+    }
+    // Walk up from cwd looking for artifacts/manifest.json.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts").join("manifest.json");
+        if cand.exists() {
+            return dir.join("artifacts").to_string_lossy().into_owned();
+        }
+        if !dir.pop() {
+            return "artifacts".to_string();
+        }
+    }
+}
+
+/// Workload description shared by experiment drivers.
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    pub n: usize,
+    pub hists: usize,
+    pub eps: f64,
+    pub sparsity: f64,
+    pub cond: CondClass,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        Self {
+            n: 256,
+            hists: 1,
+            eps: 0.05,
+            sparsity: 0.0,
+            cond: CondClass::Well,
+        }
+    }
+}
+
+/// Flat key=value map with typed getters — the substrate both the file
+/// loader and the CLI write into.
+#[derive(Clone, Debug, Default)]
+pub struct Settings {
+    pub map: BTreeMap<String, String>,
+}
+
+impl Settings {
+    pub fn set(&mut self, k: &str, v: impl Into<String>) {
+        self.map.insert(k.to_string(), v.into());
+    }
+
+    pub fn get(&self, k: &str) -> Option<&str> {
+        self.map.get(k).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, k: &str) -> Option<f64> {
+        self.get(k)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, k: &str) -> Option<usize> {
+        self.get(k)?.parse().ok()
+    }
+
+    pub fn get_bool(&self, k: &str) -> Option<bool> {
+        match self.get(k)? {
+            "true" | "1" | "yes" => Some(true),
+            "false" | "0" | "no" => Some(false),
+            _ => None,
+        }
+    }
+
+    /// Overlay `FEDSINK_*` environment variables (lower-cased, `_`→`.`).
+    pub fn overlay_env(&mut self) {
+        for (k, v) in std::env::vars() {
+            if let Some(rest) = k.strip_prefix("FEDSINK_") {
+                let key = rest.to_ascii_lowercase().replace('_', ".");
+                self.map.entry(key).or_insert(v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in [
+            Variant::Centralized,
+            Variant::SyncA2A,
+            Variant::AsyncA2A,
+            Variant::SyncStar,
+            Variant::AsyncStar,
+        ] {
+            assert_eq!(Variant::parse(v.name()), Some(v));
+        }
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn settings_typed_getters() {
+        let mut s = Settings::default();
+        s.set("alpha", "0.5");
+        s.set("clients", "8");
+        s.set("verbose", "true");
+        assert_eq!(s.get_f64("alpha"), Some(0.5));
+        assert_eq!(s.get_usize("clients"), Some(8));
+        assert_eq!(s.get_bool("verbose"), Some(true));
+        assert_eq!(s.get_f64("missing"), None);
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = SolveConfig::default();
+        assert!(c.alpha > 0.0 && c.alpha <= 1.0);
+        assert!(c.max_iters > 0);
+        assert_eq!(c.local_iters, 1);
+    }
+}

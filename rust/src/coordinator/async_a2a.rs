@@ -1,0 +1,219 @@
+//! Algorithm 2 — Asynchronous Federated Sinkhorn, All-to-All.
+//!
+//! No global lock-step: each client free-runs its damped update loop,
+//! broadcasting its fresh slices (`Isend`) and folding in whatever peer
+//! slices have *arrived* (latest-wins inconsistent read). Staleness per
+//! received message (τ = receiver's local iteration − sender's iteration
+//! at send time) feeds the shared [`crate::net::DelayTracker`] — the
+//! data behind the paper's Figs 15–17 and Table V.
+//!
+//! **Bounded delay.** The convergence guarantee (Prop. 2, via the ARock
+//! framework) assumes message delays are bounded. On a cluster the
+//! roughly-equal per-node work enforces that naturally; with in-process
+//! threads a node can be scheduled thousands of iterations ahead, so we
+//! make the bound explicit: a node that has not heard from a live peer
+//! for `cfg.max_staleness` of its own iterations waits for traffic
+//! before proceeding. Nodes that stop announce it (control broadcast)
+//! and are exempted.
+//!
+//! Stopping (paper §II-A2): each node meets its convergence criterion
+//! independently — its *block* marginal error scaled ×c as the global
+//! estimate — or gives up at the iteration cap / timeout. A final
+//! consistent exchange then assembles identical `u`, `v` everywhere.
+
+use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
+use crate::linalg::Mat;
+use crate::metrics::{Clock, SplitTimer};
+use crate::net::{allgather, Endpoint, TagKind};
+use crate::runtime::Target;
+use crate::sinkhorn::StopReason;
+
+/// The async protocol reuses one tag per kind for the whole run; rounds
+/// are implicit in `sent_iter` and latest-wins reads keep only the
+/// freshest slice per peer.
+const ASYNC_TAG: u64 = 0;
+/// Control tag announcing "this node stopped".
+const DONE_TAG: u64 = 1;
+
+pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+    super::runner::spawn_nodes(ctx.cfg.clients, |id| client(ctx, id))
+}
+
+/// Tracks what we know about each peer.
+struct PeerView {
+    /// Freshest sender iteration seen (either kind).
+    last_iter: u64,
+    done: bool,
+}
+
+fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
+    let shard = &ctx.partition.shards[id];
+    let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
+    let c = ctx.cfg.clients;
+    let alpha = ctx.cfg.alpha;
+    let bound = ctx.cfg.max_staleness.max(1);
+    let ep = ctx.net.endpoint(id);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    let mut u_op = ctx
+        .backend
+        .block_op(&shard.k_row, Target::Vec(&shard.a), Mat::ones(m, nh))
+        .expect("u-op");
+    let mut v_op = ctx
+        .backend
+        .block_op(&shard.k_col_t, Target::Mat(&shard.b), Mat::ones(m, nh))
+        .expect("v-op");
+
+    // Local (possibly stale) copies of the full scaling state.
+    let mut u_full = Mat::ones(n, nh);
+    let mut v_full = Mat::ones(n, nh);
+
+    let mut peers: Vec<PeerView> = (0..c)
+        .map(|_| PeerView { last_iter: 0, done: false })
+        .collect();
+
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+
+    for k in 1..=ctx.policy.max_iters {
+        iterations = k;
+        let k64 = k as u64;
+
+        // Inconsistent reads + bounded-staleness wait.
+        timer.comm(|| {
+            drain(&ep, ctx, id, c, k64, &mut peers, &mut u_full, &mut v_full, m);
+            // Wait for any peer we have outrun beyond the bound.
+            loop {
+                let lagging = (0..c).any(|p| {
+                    p != id && !peers[p].done && k64.saturating_sub(peers[p].last_iter) > bound
+                });
+                if !lagging {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                drain(&ep, ctx, id, c, k64, &mut peers, &mut u_full, &mut v_full, m);
+            }
+        });
+
+        // Marginal error of the *current* state against the freshest v
+        // (before the u-update — post-update at α = 1 the block error is
+        // identically zero by construction).
+        let pre_err = if ctx.policy.check_at(k) {
+            let u_now = u_op.state().clone();
+            let local: f64 = timer
+                .comp(|| u_op.marginal(&v_full, &u_now))
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            Some(local)
+        } else {
+            None
+        };
+
+        // u_jj = α a_j/(K_j v) + (1−α) u_jj, then inconsistent broadcast.
+        let u_jj = timer.comp(|| u_op.update(&v_full, alpha).clone());
+        write_block(&mut u_full, u_jj.as_slice(), id, m);
+        timer.comm(|| {
+            for peer in 0..c {
+                if peer != id {
+                    ep.send(peer, TagKind::U, ASYNC_TAG, u_jj.as_slice().to_vec(), k64);
+                }
+            }
+        });
+
+        // v_jj = α b_j/(K_jᵀ u) + (1−α) v_jj, then broadcast.
+        let v_jj = timer.comp(|| v_op.update(&u_full, alpha).clone());
+        write_block(&mut v_full, v_jj.as_slice(), id, m);
+        timer.comm(|| {
+            for peer in 0..c {
+                if peer != id {
+                    ep.send(peer, TagKind::V, ASYNC_TAG, v_jj.as_slice().to_vec(), k64);
+                }
+            }
+        });
+
+        // Independent convergence check on the node's own block error,
+        // scaled ×c as the global-magnitude estimate.
+        if let Some(local) = pre_err {
+            let est = local * c as f64;
+            final_err = est;
+            if ctx.traced {
+                trace.push(TracePoint { iter: k, secs: clock.now(), err: est });
+            }
+            if est < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break;
+            }
+        }
+        if ctx.policy.timeout_secs > 0.0 && clock.now() > ctx.policy.timeout_secs {
+            stop = StopReason::Timeout;
+            break;
+        }
+    }
+
+    // Announce we stopped, so lagging peers don't wait on us …
+    for peer in 0..c {
+        if peer != id {
+            ep.send(peer, TagKind::Ctl, DONE_TAG, vec![1.0], iterations as u64);
+        }
+    }
+    // … then the final consistent broadcast (paper: "a consistent
+    // broadcast ensures that all nodes have the same fully updated u and
+    // v").
+    let u_fin = u_op.state().clone();
+    let v_fin = v_op.state().clone();
+    timer.comm(|| {
+        let _ = allgather(&ep, TagKind::U, u64::MAX - 1, u_fin.as_slice(), iterations as u64);
+        let _ = allgather(&ep, TagKind::V, u64::MAX, v_fin.as_slice(), iterations as u64);
+    });
+
+    NodeOutcome {
+        stats: NodeStats { id, role: "client", timer, iterations, stop, final_err },
+        slices: Some((u_fin, v_fin)),
+        trace,
+    }
+}
+
+/// Drain every deliverable peer message: fold the freshest u/v slices
+/// into the local state, record staleness, note done votes.
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    ep: &Endpoint,
+    ctx: &RunCtx<'_>,
+    id: usize,
+    c: usize,
+    k64: u64,
+    peers: &mut [PeerView],
+    u_full: &mut Mat,
+    v_full: &mut Mat,
+    m: usize,
+) {
+    for peer in 0..c {
+        if peer == id {
+            continue;
+        }
+        if let Some(msg) = ep.try_recv_latest(peer, TagKind::V, ASYNC_TAG) {
+            ctx.delays.record(msg.sent_iter, k64);
+            peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
+            write_block(v_full, &msg.payload, peer, m);
+        }
+        if let Some(msg) = ep.try_recv_latest(peer, TagKind::U, ASYNC_TAG) {
+            ctx.delays.record(msg.sent_iter, k64);
+            peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
+            write_block(u_full, &msg.payload, peer, m);
+        }
+        if ep.try_recv_latest(peer, TagKind::Ctl, DONE_TAG).is_some() {
+            peers[peer].done = true;
+        }
+    }
+}
+
+/// Write peer `j`'s m×N flat block into the full state.
+fn write_block(full: &mut Mat, block: &[f64], j: usize, m: usize) {
+    let nh = full.cols();
+    debug_assert_eq!(block.len(), m * nh);
+    full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(block);
+}

@@ -1,0 +1,212 @@
+//! L3 — the paper's coordination contribution: Federated Sinkhorn.
+//!
+//! Four protocols over the simulated fabric ([`crate::net`]), one OS
+//! thread per node:
+//!
+//! * [`sync_a2a`] — Alg. 1: peer-to-peer, lock-step AllGather of the
+//!   `u`/`v` slices every `w` iterations.
+//! * [`async_a2a`] — Alg. 2: peer-to-peer, inconsistent broadcast +
+//!   latest-wins reads, damping `α`, staleness (τ) tracking.
+//! * [`star`] (sync) — Alg. 3: clients own `a_j`/`b_j`; the server owns
+//!   `K`, does the heavy products, scatters the intermediates.
+//! * [`star`] (async) — the star topology without lock-step (the fourth
+//!   cell of the paper's synchrony × topology matrix).
+//!
+//! Every node accounts its wall time into the computation/communication
+//! buckets the paper reports, and async nodes feed the shared
+//! [`crate::net::DelayTracker`].
+
+mod async_a2a;
+mod runner;
+mod star;
+mod sync_a2a;
+
+pub use runner::{run_federated, FederatedOutcome, NodeStats, TracePoint};
+
+use crate::sinkhorn::StopReason;
+
+/// The paper's summary-row convention: the slowest node defines the run
+/// ("only the node with the highest total execution time was kept").
+pub fn slowest_node(stats: &[NodeStats]) -> &NodeStats {
+    stats
+        .iter()
+        .max_by(|a, b| a.total_secs().partial_cmp(&b.total_secs()).unwrap())
+        .expect("at least one node")
+}
+
+/// Aggregate stop reason across nodes.
+pub fn aggregate_stop(stats: &[NodeStats]) -> StopReason {
+    if stats.iter().all(|s| s.stop == StopReason::Converged) {
+        StopReason::Converged
+    } else if stats.iter().any(|s| s.stop == StopReason::Timeout) {
+        StopReason::Timeout
+    } else {
+        StopReason::MaxIters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, SolveConfig, Variant};
+    use crate::net::LatencyModel;
+    use crate::runtime::make_backend;
+    use crate::sinkhorn::{CentralizedSolver, StopPolicy};
+    use crate::workload::{Problem, ProblemSpec};
+
+    fn cfg(variant: Variant, clients: usize) -> SolveConfig {
+        SolveConfig {
+            variant,
+            backend: BackendKind::Native,
+            clients,
+            net: LatencyModel::zero(),
+            ..Default::default()
+        }
+    }
+
+    fn policy() -> StopPolicy {
+        StopPolicy { threshold: 1e-11, max_iters: 3000, ..Default::default() }
+    }
+
+    fn solve_central(p: &Problem) -> crate::sinkhorn::SolveOutcome {
+        let be = make_backend(BackendKind::Native, "", 1).unwrap();
+        CentralizedSolver::new(be).solve(p, policy(), 1.0)
+    }
+
+    /// Prop. 1: synchronous federation generates the centralized iterate
+    /// sequence — final states must agree to fp round-off.
+    #[test]
+    fn sync_a2a_matches_centralized_exactly() {
+        let p = ProblemSpec::new(24).with_eps(0.5).build(3);
+        let central = solve_central(&p);
+        for c in [1, 2, 4] {
+            let out = run_federated(&p, &cfg(Variant::SyncA2A, c), policy(), false);
+            assert!(out.converged, "c={c}");
+            assert!(
+                out.state.u.allclose(&central.state.u, 1e-9),
+                "u mismatch at c={c}"
+            );
+            assert!(out.state.v.allclose(&central.state.v, 1e-9));
+        }
+    }
+
+    #[test]
+    fn sync_star_matches_centralized_exactly() {
+        let p = ProblemSpec::new(24).with_eps(0.5).build(4);
+        let central = solve_central(&p);
+        for c in [2, 3] {
+            let out = run_federated(&p, &cfg(Variant::SyncStar, c), policy(), false);
+            assert!(out.converged, "c={c}");
+            assert!(out.state.u.allclose(&central.state.u, 1e-9));
+            assert!(out.state.v.allclose(&central.state.v, 1e-9));
+        }
+    }
+
+    #[test]
+    fn async_a2a_converges_with_damping() {
+        let p = ProblemSpec::new(16).with_eps(0.5).build(5);
+        let mut c = cfg(Variant::AsyncA2A, 4);
+        c.alpha = 0.5;
+        let pol = StopPolicy { threshold: 1e-9, max_iters: 8000, ..Default::default() };
+        let out = run_federated(&p, &c, pol, false);
+        assert!(out.converged, "stop {:?}", out.stop);
+        // Final plan satisfies the marginals.
+        let (ea, eb) = crate::sinkhorn::full_marginal_errors(&p, &out.state, 0);
+        assert!(ea < 1e-6 && eb < 1e-6, "({ea}, {eb})");
+    }
+
+    #[test]
+    fn async_star_converges_with_damping() {
+        let p = ProblemSpec::new(16).with_eps(0.5).build(6);
+        let mut c = cfg(Variant::AsyncStar, 4);
+        c.alpha = 0.5;
+        let pol = StopPolicy { threshold: 1e-9, max_iters: 8000, ..Default::default() };
+        let out = run_federated(&p, &c, pol, false);
+        assert!(out.converged, "stop {:?}", out.stop);
+        let (ea, eb) = crate::sinkhorn::full_marginal_errors(&p, &out.state, 0);
+        assert!(ea < 1e-6 && eb < 1e-6, "({ea}, {eb})");
+    }
+
+    #[test]
+    fn async_records_delays() {
+        let p = ProblemSpec::new(16).with_eps(0.5).build(7);
+        let mut c = cfg(Variant::AsyncA2A, 2);
+        c.alpha = 0.5;
+        c.net = LatencyModel { base_secs: 2e-4, ..LatencyModel::zero() };
+        let out = run_federated(&p, &c, policy(), false);
+        assert!(!out.taus.is_empty(), "async run must record staleness");
+    }
+
+    #[test]
+    fn sync_local_iterations_still_converge() {
+        // App. A: w > 1 delays but does not break convergence.
+        let p = ProblemSpec::new(16).with_eps(0.5).build(8);
+        let mut c1 = cfg(Variant::SyncA2A, 4);
+        c1.local_iters = 1;
+        let mut c3 = c1.clone();
+        c3.local_iters = 3;
+        let o1 = run_federated(&p, &c1, policy(), false);
+        let o3 = run_federated(&p, &c3, policy(), false);
+        assert!(o1.converged && o3.converged);
+        // Fig 26: more local iterations → never fewer total iterations.
+        assert!(
+            o3.iterations >= o1.iterations,
+            "w=3 {} vs w=1 {}",
+            o3.iterations,
+            o1.iterations
+        );
+    }
+
+    #[test]
+    fn node_stats_cover_every_node() {
+        let p = ProblemSpec::new(16).with_eps(0.5).build(9);
+        let out = run_federated(&p, &cfg(Variant::SyncA2A, 4), policy(), false);
+        assert_eq!(out.node_stats.len(), 4);
+        // star: c clients + server
+        let out = run_federated(&p, &cfg(Variant::SyncStar, 4), policy(), false);
+        assert_eq!(out.node_stats.len(), 5);
+        assert!(out.node_stats.iter().all(|s| s.total_secs() >= 0.0));
+        assert!(slowest_node(&out.node_stats).total_secs() >= 0.0);
+    }
+
+    #[test]
+    fn traced_runs_record_error_decay() {
+        let p = ProblemSpec::new(16).with_eps(0.5).build(10);
+        let out = run_federated(&p, &cfg(Variant::SyncA2A, 2), policy(), true);
+        assert!(out.trace.len() >= 2);
+        let first = out.trace.first().unwrap().err;
+        let last = out.trace.last().unwrap().err;
+        assert!(last < first);
+    }
+
+    #[test]
+    fn multi_histogram_federated_solve() {
+        let p = ProblemSpec::new(16).with_hists(4).with_eps(0.5).build(11);
+        let central = solve_central(&p);
+        let out = run_federated(&p, &cfg(Variant::SyncA2A, 4), policy(), false);
+        assert!(out.converged);
+        assert!(out.state.u.allclose(&central.state.u, 1e-9));
+    }
+
+    #[test]
+    fn centralized_variant_dispatches() {
+        let p = Problem::paper_4x4(0.5);
+        let out = run_federated(&p, &cfg(Variant::Centralized, 1), policy(), false);
+        assert!(out.converged);
+        assert_eq!(out.node_stats.len(), 1);
+        assert_eq!(aggregate_stop(&out.node_stats), StopReason::Converged);
+    }
+
+    #[test]
+    fn undamped_async_may_or_may_not_converge_but_never_panics() {
+        // α = 1 async is the paper's unstable regime (§IV-C1) — we only
+        // require a clean run and a well-formed outcome.
+        let p = ProblemSpec::new(16).with_eps(0.5).build(12);
+        let mut c = cfg(Variant::AsyncA2A, 4);
+        c.alpha = 1.0;
+        let pol = StopPolicy { threshold: 1e-11, max_iters: 500, ..Default::default() };
+        let out = run_federated(&p, &c, pol, false);
+        assert_eq!(out.node_stats.len(), 4);
+        assert!(out.iterations <= 500);
+    }
+}

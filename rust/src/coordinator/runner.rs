@@ -1,0 +1,214 @@
+//! Shared scaffolding: spawn node threads, collect per-node outcomes.
+
+use super::{aggregate_stop, async_a2a, star, sync_a2a};
+use crate::config::{SolveConfig, Variant};
+use crate::linalg::Mat;
+use crate::metrics::SplitTimer;
+use crate::net::{DelayTracker, LatencyModel, SimNet};
+use crate::runtime::make_backend;
+use crate::sinkhorn::{CentralizedSolver, State, StopPolicy, StopReason};
+use crate::workload::{Partition, Problem};
+use std::sync::Arc;
+
+/// Per-node result.
+#[derive(Clone, Debug)]
+pub struct NodeStats {
+    pub id: usize,
+    pub role: &'static str,
+    pub timer: SplitTimer,
+    pub iterations: usize,
+    pub stop: StopReason,
+    pub final_err: f64,
+}
+
+impl NodeStats {
+    pub fn comp_secs(&self) -> f64 {
+        self.timer.comp_secs()
+    }
+
+    pub fn comm_secs(&self) -> f64 {
+        self.timer.comm_secs()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.timer.total_secs()
+    }
+}
+
+/// One point of a traced error curve (Figs 9–12, 19–22).
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub secs: f64,
+    /// Aggregated (sync) or node-0-estimated (async) a-marginal L1 error.
+    pub err: f64,
+}
+
+/// Aggregate run outcome.
+#[derive(Clone, Debug)]
+pub struct FederatedOutcome {
+    pub state: State,
+    pub iterations: usize,
+    pub converged: bool,
+    pub stop: StopReason,
+    pub node_stats: Vec<NodeStats>,
+    /// Staleness samples (async variants only).
+    pub taus: Vec<u64>,
+    pub trace: Vec<TracePoint>,
+    pub secs: f64,
+}
+
+/// Everything a protocol implementation needs.
+pub struct RunCtx<'a> {
+    pub problem: &'a Problem,
+    pub partition: &'a Partition,
+    pub cfg: &'a SolveConfig,
+    pub policy: StopPolicy,
+    pub traced: bool,
+    pub backend: Arc<dyn crate::runtime::ComputeBackend>,
+    pub net: Arc<SimNet>,
+    pub delays: Arc<DelayTracker>,
+}
+
+/// Per-node return value from protocol implementations.
+pub struct NodeOutcome {
+    pub stats: NodeStats,
+    /// Final consistent slices (u_jj, v_jj) — (m × N) each; `None` for
+    /// pure-relay nodes (the star server).
+    pub slices: Option<(Mat, Mat)>,
+    pub trace: Vec<TracePoint>,
+}
+
+/// Entry point: run `cfg.variant` on `p` and assemble the global state.
+pub fn run_federated(
+    p: &Problem,
+    cfg: &SolveConfig,
+    policy: StopPolicy,
+    traced: bool,
+) -> FederatedOutcome {
+    let t0 = std::time::Instant::now();
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir, cfg.compute_threads)
+        .expect("backend construction");
+
+    if cfg.variant == Variant::Centralized {
+        let solver = CentralizedSolver::new(backend);
+        let out = if traced {
+            solver.solve_traced(p, policy, cfg.alpha)
+        } else {
+            solver.solve(p, policy, cfg.alpha)
+        };
+        let mut timer = SplitTimer::new();
+        timer.add_comp(out.secs);
+        return FederatedOutcome {
+            iterations: out.iterations,
+            converged: out.converged(),
+            stop: out.stop,
+            node_stats: vec![NodeStats {
+                id: 0,
+                role: "centralized",
+                timer,
+                iterations: out.iterations,
+                stop: out.stop,
+                final_err: out.final_err,
+            }],
+            taus: Vec::new(),
+            trace: out
+                .history
+                .iter()
+                .map(|h| TracePoint { iter: h.iter, secs: h.secs, err: h.err_a })
+                .collect(),
+            state: out.state,
+            secs: t0.elapsed().as_secs_f64(),
+        };
+    }
+
+    let partition = Partition::new(p, cfg.clients);
+    let nodes = match cfg.variant {
+        Variant::SyncStar | Variant::AsyncStar => cfg.clients + 1, // + server
+        _ => cfg.clients,
+    };
+    let latency: LatencyModel = cfg.net;
+    let net = Arc::new(SimNet::new(nodes, latency, cfg.seed));
+    let delays = Arc::new(DelayTracker::new());
+
+    let ctx = RunCtx {
+        problem: p,
+        partition: &partition,
+        cfg,
+        policy,
+        traced,
+        backend,
+        net,
+        delays: delays.clone(),
+    };
+
+    let outcomes: Vec<NodeOutcome> = match cfg.variant {
+        Variant::SyncA2A => sync_a2a::run(&ctx),
+        Variant::AsyncA2A => async_a2a::run(&ctx),
+        Variant::SyncStar => star::run(&ctx, false),
+        Variant::AsyncStar => star::run(&ctx, true),
+        Variant::Centralized => unreachable!(),
+    };
+
+    // Assemble the global state from client slices (paper: a consistent
+    // broadcast at the end gives every node the full u, v).
+    let nh = p.hists();
+    let mut state = State::ones(p.n, nh);
+    let m = partition.m();
+    for out in &outcomes {
+        if let Some((u_jj, v_jj)) = &out.slices {
+            let j = out.stats.id;
+            for i in 0..m {
+                for h in 0..nh {
+                    state.u[(j * m + i, h)] = u_jj[(i, h)];
+                    state.v[(j * m + i, h)] = v_jj[(i, h)];
+                }
+            }
+        }
+    }
+
+    let node_stats: Vec<NodeStats> = outcomes.iter().map(|o| o.stats.clone()).collect();
+    let stop = aggregate_stop(&node_stats);
+    let iterations = node_stats.iter().map(|s| s.iterations).max().unwrap_or(0);
+    // Node 0's trace is the representative curve (paper plots "the first
+    // node"); sync traces are identical across nodes anyway.
+    let trace = outcomes
+        .into_iter()
+        .find(|o| o.stats.id == 0)
+        .map(|o| o.trace)
+        .unwrap_or_default();
+
+    FederatedOutcome {
+        state,
+        iterations,
+        converged: stop == StopReason::Converged,
+        stop,
+        node_stats,
+        taus: delays.taus(),
+        trace,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Spawn one thread per node and collect outcomes (ordered by node id).
+pub fn spawn_nodes<F>(nodes: usize, f: F) -> Vec<NodeOutcome>
+where
+    F: Fn(usize) -> NodeOutcome + Sync,
+{
+    let mut outcomes: Vec<Option<NodeOutcome>> = Vec::new();
+    crossbeam_utils::thread::scope(|s| {
+        let handles: Vec<_> = (0..nodes)
+            .map(|id| {
+                let f = &f;
+                s.spawn(move |_| f(id))
+            })
+            .collect();
+        for h in handles {
+            outcomes.push(Some(h.join().expect("node thread panicked")));
+        }
+    })
+    .expect("node scope");
+    let mut outcomes: Vec<NodeOutcome> = outcomes.into_iter().map(Option::unwrap).collect();
+    outcomes.sort_by_key(|o| o.stats.id);
+    outcomes
+}

@@ -1,0 +1,494 @@
+//! Algorithm 3 — Federated Star-Network Sinkhorn (sync), plus the
+//! asynchronous star variant.
+//!
+//! Topology: clients `0..c` own only their marginal slices `a_j`, `b_j`;
+//! the server (node id `c`) owns the full Gibbs kernel `K` and performs
+//! the heavy products `q = K·v`, `r = Kᵀ·u`, scattering the row chunks
+//! back. Clients do O(m·N) element-wise scaling only — exactly the
+//! paper's privacy regime 2 (the center "has the cost information").
+//!
+//! Synchronous: gather → product → scatter in lock-step; convergence is
+//! decided from the gathered per-client block errors and broadcast, so
+//! all nodes stop together (and the iterate sequence again equals the
+//! centralized one, Prop. 1).
+//!
+//! Asynchronous: the server recomputes products from whatever slices
+//! have arrived (latest-wins) and streams chunks back; clients fold in
+//! the freshest chunk, apply the damped update, and stop independently.
+
+use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
+use crate::linalg::Mat;
+use crate::metrics::{Clock, SplitTimer};
+use crate::net::{bcast, gather, TagKind};
+use crate::runtime::Target;
+use crate::sinkhorn::StopReason;
+
+pub fn run(ctx: &RunCtx<'_>, async_mode: bool) -> Vec<NodeOutcome> {
+    let c = ctx.cfg.clients;
+    super::runner::spawn_nodes(c + 1, |id| {
+        if id == c {
+            if async_mode {
+                server_async(ctx)
+            } else {
+                server_sync(ctx)
+            }
+        } else if async_mode {
+            client_async(ctx, id)
+        } else {
+            client_sync(ctx, id)
+        }
+    })
+}
+
+// --------------------------------------------------------------------------
+// Synchronous star
+// --------------------------------------------------------------------------
+
+fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
+    let p = ctx.problem;
+    let (n, nh, c) = (p.n, p.hists(), ctx.cfg.clients);
+    let m = n / c;
+    let ep = ctx.net.endpoint(c);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    // The server's two resident operators (only `matvec` is used; the
+    // target is a placeholder — the server never sees a or b).
+    let dummy = vec![1.0; n];
+    let mut k_op = ctx
+        .backend
+        .block_op(&p.k, Target::Vec(&dummy), Mat::ones(n, nh))
+        .expect("k-op");
+    let kt = p.k.transpose();
+    let mut kt_op = ctx
+        .backend
+        .block_op(&kt, Target::Vec(&dummy), Mat::ones(n, nh))
+        .expect("kt-op");
+
+    let mut v_full = Mat::ones(n, nh);
+    let mut u_full = Mat::ones(n, nh);
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+    let mut round: u64 = 0;
+
+    for k in 1..=ctx.policy.max_iters {
+        iterations = k;
+        let k64 = k as u64;
+
+        // Gather v slices → q = K v → scatter the q row chunks. (The
+        // server holds no chunk of its own, so the scatter is explicit
+        // per-client sends rather than the equal-split collective.)
+        round += 1;
+        let v_parts = timer.comm(|| gather(&ep, c, TagKind::V, round, &[], k64).unwrap());
+        assemble_clients(&mut v_full, &v_parts, m, c);
+        let q = timer.comp(|| k_op.matvec(&v_full).clone());
+        round += 1;
+        timer.comm(|| {
+            for j in 0..c {
+                ep.send(j, TagKind::Ctl, round, chunk_of(&q, j, m).to_vec(), k64);
+            }
+        });
+
+        // Convergence decision happens here, *before* the u-update on
+        // the clients: err_j = Σ|u_prev∘q − a_j| is the true marginal
+        // error of the current state (checking after the update would
+        // read identically zero at α = 1 since u = a/q by construction).
+        if ctx.policy.check_at(k) {
+            round += 1;
+            let errs =
+                timer.comm(|| gather(&ep, c, TagKind::Ctl, round, &[0.0, 0.0], k64).unwrap());
+            let total: f64 = errs.iter().take(c).map(|e| e[0]).sum();
+            let mut any_timeout = errs.iter().take(c).any(|e| e[1] > 0.0);
+            any_timeout |=
+                ctx.policy.timeout_secs > 0.0 && clock.now() > ctx.policy.timeout_secs;
+            final_err = total;
+            round += 1;
+            timer.comm(|| {
+                bcast(&ep, c, TagKind::Ctl, round, Some(&[total, any_timeout as u8 as f64]), k64)
+            });
+            if total < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break;
+            }
+            if any_timeout {
+                stop = StopReason::Timeout;
+                break;
+            }
+        }
+
+        // Gather u slices → r = Kᵀ u → scatter the r row chunks.
+        round += 1;
+        let u_parts = timer.comm(|| gather(&ep, c, TagKind::U, round, &[], k64).unwrap());
+        assemble_clients(&mut u_full, &u_parts, m, c);
+        let r = timer.comp(|| kt_op.matvec(&u_full).clone());
+        round += 1;
+        timer.comm(|| {
+            for j in 0..c {
+                ep.send(j, TagKind::Ctl, round, chunk_of(&r, j, m).to_vec(), k64);
+            }
+        });
+    }
+
+    NodeOutcome {
+        stats: NodeStats { id: c, role: "server", timer, iterations, stop, final_err },
+        slices: None,
+        trace: Vec::new(),
+    }
+}
+
+fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
+    let shard = &ctx.partition.shards[id];
+    let (m, nh, c) = (shard.m(), ctx.problem.hists(), ctx.cfg.clients);
+    let alpha = ctx.cfg.alpha;
+    let server = c;
+    let ep = ctx.net.endpoint(id);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    let mut u_jj = Mat::ones(m, nh);
+    let mut v_jj = Mat::ones(m, nh);
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+    let mut round: u64 = 0;
+
+    for k in 1..=ctx.policy.max_iters {
+        iterations = k;
+        let k64 = k as u64;
+
+        // Send v slice; receive the q = (K v) chunk for this block.
+        round += 1;
+        timer.comm(|| gather(&ep, server, TagKind::V, round, v_jj.as_slice(), k64));
+        round += 1;
+        let q = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
+
+        // Convergence check *before* the u-update: err_j = Σ|u∘q − a_j|
+        // is the true marginal error of the current (u, v); checking
+        // post-update would read 0 identically at α = 1. Timeout flags
+        // ride along so stopping stays lock-step with the server.
+        if ctx.policy.check_at(k) {
+            let local = timer.comp(|| block_err(&u_jj, &q, &shard.a, m, nh));
+            let timed_out = ctx.policy.timeout_secs > 0.0
+                && clock.now() > ctx.policy.timeout_secs;
+            round += 1;
+            timer.comm(|| {
+                gather(&ep, server, TagKind::Ctl, round, &[local, timed_out as u8 as f64], k64)
+            });
+            round += 1;
+            let decision = timer.comm(|| bcast(&ep, server, TagKind::Ctl, round, None, k64));
+            let total = decision[0];
+            final_err = total;
+            if ctx.traced {
+                trace.push(TracePoint { iter: k, secs: clock.now(), err: total });
+            }
+            if total < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break;
+            }
+            if decision[1] > 0.0 {
+                stop = StopReason::Timeout;
+                break;
+            }
+        }
+
+        // u_jj ← α a/q + (1−α) u_jj.
+        timer.comp(|| {
+            for i in 0..m {
+                for h in 0..nh {
+                    let qv = q[i * nh + h];
+                    u_jj[(i, h)] = alpha * (shard.a[i] / qv) + (1.0 - alpha) * u_jj[(i, h)];
+                }
+            }
+        });
+
+        // Send u slice; receive r chunk; v_jj ← α b/r + (1−α) v_jj.
+        round += 1;
+        timer.comm(|| gather(&ep, server, TagKind::U, round, u_jj.as_slice(), k64));
+        round += 1;
+        let r = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
+        timer.comp(|| {
+            for i in 0..m {
+                for h in 0..nh {
+                    let rv = r[i * nh + h];
+                    v_jj[(i, h)] = alpha * (shard.b[(i, h)] / rv) + (1.0 - alpha) * v_jj[(i, h)];
+                }
+            }
+        });
+    }
+
+    NodeOutcome {
+        stats: NodeStats { id, role: "client", timer, iterations, stop, final_err },
+        slices: Some((u_jj, v_jj)),
+        trace,
+    }
+}
+
+// --------------------------------------------------------------------------
+// Asynchronous star
+// --------------------------------------------------------------------------
+
+const A_TAG: u64 = 0;
+
+fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
+    let p = ctx.problem;
+    let (n, nh, c) = (p.n, p.hists(), ctx.cfg.clients);
+    let m = n / c;
+    let ep = ctx.net.endpoint(c);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    let dummy = vec![1.0; n];
+    let mut k_op = ctx
+        .backend
+        .block_op(&p.k, Target::Vec(&dummy), Mat::ones(n, nh))
+        .expect("k-op");
+    let kt = p.k.transpose();
+    let mut kt_op = ctx
+        .backend
+        .block_op(&kt, Target::Vec(&dummy), Mat::ones(n, nh))
+        .expect("kt-op");
+
+    let mut v_full = Mat::ones(n, nh);
+    let mut u_full = Mat::ones(n, nh);
+    let mut done = vec![false; c];
+    // Freshest client iteration seen per client (either kind) — used to
+    // throttle fast clients: a client more than `bound` iterations ahead
+    // of the slowest live client gets no fresh chunks until the gap
+    // closes (the bounded-delay regime of Prop. 2; see async_a2a docs).
+    let mut client_iter = vec![0u64; c];
+    let bound = ctx.cfg.max_staleness.max(1);
+    let mut iterations = 0;
+
+    // The server relays until every client reports done; the cap is a
+    // safety net (clients are themselves capped at max_iters).
+    for s in 1..=(4 * ctx.policy.max_iters) {
+        iterations = s;
+        let s64 = s as u64;
+
+        let mut any_fresh = false;
+        timer.comm(|| {
+            for j in 0..c {
+                if let Some(msg) = ep.try_recv_latest(j, TagKind::V, A_TAG) {
+                    write_block(&mut v_full, &msg.payload, j, m);
+                    client_iter[j] = client_iter[j].max(msg.sent_iter);
+                    any_fresh = true;
+                }
+            }
+        });
+        let min_live = (0..c)
+            .filter(|&j| !done[j])
+            .map(|j| client_iter[j])
+            .min()
+            .unwrap_or(0);
+        let q = timer.comp(|| k_op.matvec(&v_full).clone());
+        timer.comm(|| {
+            for j in 0..c {
+                if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
+                    ep.send(j, TagKind::Ctl, A_TAG, chunk_of(&q, j, m).to_vec(), s64);
+                }
+            }
+        });
+
+        timer.comm(|| {
+            for j in 0..c {
+                if let Some(msg) = ep.try_recv_latest(j, TagKind::U, A_TAG) {
+                    write_block(&mut u_full, &msg.payload, j, m);
+                    client_iter[j] = client_iter[j].max(msg.sent_iter);
+                    any_fresh = true;
+                }
+            }
+        });
+        let r = timer.comp(|| kt_op.matvec(&u_full).clone());
+        timer.comm(|| {
+            for j in 0..c {
+                if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
+                    ep.send(j, TagKind::Ctl, A_TAG + 1, chunk_of(&r, j, m).to_vec(), s64);
+                }
+            }
+        });
+
+        // Done votes arrive on the control tag 2.
+        timer.comm(|| {
+            for j in 0..c {
+                if ep.try_recv_latest(j, TagKind::Ctl, A_TAG + 2).is_some() {
+                    done[j] = true;
+                }
+            }
+        });
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        if !any_fresh {
+            // Nothing new from any client: yield briefly instead of
+            // recomputing identical products at full spin.
+            std::thread::sleep(std::time::Duration::from_micros(20));
+        }
+        if ctx.policy.timeout_secs > 0.0 && clock.now() > 2.0 * ctx.policy.timeout_secs {
+            break;
+        }
+    }
+
+    NodeOutcome {
+        stats: NodeStats {
+            id: c,
+            role: "server",
+            timer,
+            iterations,
+            stop: StopReason::Converged, // the server has no own criterion
+            final_err: 0.0,
+        },
+        slices: None,
+        trace: Vec::new(),
+    }
+}
+
+fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
+    let shard = &ctx.partition.shards[id];
+    let (m, nh, c) = (shard.m(), ctx.problem.hists(), ctx.cfg.clients);
+    let alpha = ctx.cfg.alpha;
+    let server = c;
+    let ep = ctx.net.endpoint(id);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    let mut u_jj = Mat::ones(m, nh);
+    let mut v_jj = Mat::ones(m, nh);
+    let mut q_latest = vec![1.0; m * nh];
+    let mut r_latest = vec![1.0; m * nh];
+    let bound = ctx.cfg.max_staleness.max(1);
+    let mut stale_rounds: u64 = 0;
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+
+    // Prime the server with our initial v slice.
+    ep.send(server, TagKind::V, A_TAG, v_jj.as_slice().to_vec(), 0);
+
+    for k in 1..=ctx.policy.max_iters {
+        iterations = k;
+        let k64 = k as u64;
+
+        // Freshest q chunk (server's K·v rows for this block); if we
+        // have outrun the server beyond the staleness bound, wait for a
+        // fresh chunk (bounded-delay assumption, see async_a2a docs).
+        timer.comm(|| {
+            let mut got = false;
+            loop {
+                if let Some(msg) = ep.try_recv_latest(server, TagKind::Ctl, A_TAG) {
+                    ctx.delays.record(msg.sent_iter, k64);
+                    q_latest.copy_from_slice(&msg.payload);
+                    got = true;
+                }
+                if got || stale_rounds < bound {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_micros(50));
+            }
+            stale_rounds = if got { 0 } else { stale_rounds + 1 };
+        });
+
+        // Marginal error of the *current* state against the freshest q
+        // (before the u-update — post-update it is (1−α)-scaled and
+        // reads 0 at α = 1).
+        let pre_err = if ctx.policy.check_at(k) {
+            Some(timer.comp(|| block_err(&u_jj, &q_latest, &shard.a, m, nh)))
+        } else {
+            None
+        };
+
+        timer.comp(|| {
+            for i in 0..m {
+                for h in 0..nh {
+                    let qv = q_latest[i * nh + h];
+                    u_jj[(i, h)] = alpha * (shard.a[i] / qv) + (1.0 - alpha) * u_jj[(i, h)];
+                }
+            }
+        });
+        timer.comm(|| ep.send(server, TagKind::U, A_TAG, u_jj.as_slice().to_vec(), k64));
+
+        // Freshest r chunk, then the damped v update on it.
+        timer.comm(|| {
+            if let Some(msg) = ep.try_recv_latest(server, TagKind::Ctl, A_TAG + 1) {
+                ctx.delays.record(msg.sent_iter, k64);
+                r_latest.copy_from_slice(&msg.payload);
+            }
+        });
+        timer.comp(|| damped_v_update(&mut v_jj, &r_latest, &shard.b, alpha, m, nh));
+        timer.comm(|| ep.send(server, TagKind::V, A_TAG, v_jj.as_slice().to_vec(), k64));
+
+        if let Some(local) = pre_err {
+            let est = local * c as f64;
+            final_err = est;
+            if ctx.traced {
+                trace.push(TracePoint { iter: k, secs: clock.now(), err: est });
+            }
+            if est < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break;
+            }
+        }
+        if ctx.policy.timeout_secs > 0.0 && clock.now() > ctx.policy.timeout_secs {
+            stop = StopReason::Timeout;
+            break;
+        }
+    }
+
+    // Tell the server we are finished.
+    ep.send(server, TagKind::Ctl, A_TAG + 2, vec![1.0], iterations as u64);
+
+    NodeOutcome {
+        stats: NodeStats { id, role: "client", timer, iterations, stop, final_err },
+        slices: Some((u_jj, v_jj)),
+        trace,
+    }
+}
+
+// --------------------------------------------------------------------------
+// Helpers
+// --------------------------------------------------------------------------
+
+/// Damped element-wise v update (async client).
+fn damped_v_update(v_jj: &mut Mat, r: &[f64], b: &Mat, alpha: f64, m: usize, nh: usize) {
+    for i in 0..m {
+        for h in 0..nh {
+            let rv = r[i * nh + h];
+            v_jj[(i, h)] = alpha * (b[(i, h)] / rv) + (1.0 - alpha) * v_jj[(i, h)];
+        }
+    }
+}
+
+/// Block a-marginal error `max_h Σ_i |u∘q − a|` from a flat q chunk.
+fn block_err(u_jj: &Mat, q: &[f64], a: &[f64], m: usize, nh: usize) -> f64 {
+    let mut best: f64 = 0.0;
+    for h in 0..nh {
+        let mut e = 0.0;
+        for i in 0..m {
+            e += (u_jj[(i, h)] * q[i * nh + h] - a[i]).abs();
+        }
+        best = best.max(e);
+    }
+    best
+}
+
+/// Client `j`'s rows of a full n×N matrix, flattened.
+fn chunk_of(full: &Mat, j: usize, m: usize) -> &[f64] {
+    let nh = full.cols();
+    &full.as_slice()[j * m * nh..(j + 1) * m * nh]
+}
+
+/// Write client `j`'s m×N flat block into the full state.
+fn write_block(full: &mut Mat, block: &[f64], j: usize, m: usize) {
+    let nh = full.cols();
+    debug_assert_eq!(block.len(), m * nh);
+    full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(block);
+}
+
+/// Assemble gathered client parts (server side).
+fn assemble_clients(full: &mut Mat, parts: &[Vec<f64>], m: usize, c: usize) {
+    for (j, part) in parts.iter().take(c).enumerate() {
+        write_block(full, part, j, m);
+    }
+}

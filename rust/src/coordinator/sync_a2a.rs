@@ -1,0 +1,150 @@
+//! Algorithm 1 — Synchronous Federated Sinkhorn, All-to-All.
+//!
+//! Peer-to-peer lock-step: every client updates its `u` slice from the
+//! shared `v`, AllGathers the slices, updates its `v` slice from the
+//! shared `u`, AllGathers again. With communication frequency `w > 1`
+//! (App. A) the compute pair repeats `w` times on local state before
+//! each exchange.
+//!
+//! Proposition 1: this generates exactly the centralized iterate
+//! sequence, so the convergence check (an AllGather of per-block error
+//! contributions) is an exact global marginal error and every node stops
+//! at the same iteration.
+
+use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
+use crate::linalg::Mat;
+use crate::metrics::{Clock, SplitTimer};
+use crate::net::{allgather, TagKind};
+use crate::runtime::Target;
+use crate::sinkhorn::StopReason;
+
+pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+    super::runner::spawn_nodes(ctx.cfg.clients, |id| client(ctx, id))
+}
+
+fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
+    let shard = &ctx.partition.shards[id];
+    let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
+    let w = ctx.cfg.local_iters.max(1);
+    let alpha = ctx.cfg.alpha;
+    let ep = ctx.net.endpoint(id);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    // Block operators: the client's two kernel blocks stay resident in
+    // the backend (device memory for XLA) for the whole run.
+    let mut u_op = ctx
+        .backend
+        .block_op(&shard.k_row, Target::Vec(&shard.a), Mat::ones(m, nh))
+        .expect("u-op");
+    let mut v_op = ctx
+        .backend
+        .block_op(&shard.k_col_t, Target::Mat(&shard.b), Mat::ones(m, nh))
+        .expect("v-op");
+
+    // Full scaling state, refreshed by AllGathers.
+    let mut u_full = Mat::ones(n, nh);
+    let mut v_full = Mat::ones(n, nh);
+
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+    let mut round: u64 = 0;
+
+    'outer: for k in 1..=ctx.policy.max_iters {
+        iterations = k;
+        // Paper Alg. 1: communicate on iterations with mod(k, w) = 0;
+        // in between, clients iterate on locally-refreshed state.
+        let communicate = k % w == 0;
+
+        let u_jj = timer.comp(|| u_op.update(&v_full, alpha).clone());
+        copy_slice(&mut u_full, &u_jj, shard.r0);
+        if communicate {
+            round += 1;
+            let u_parts = timer.comm(|| {
+                allgather(&ep, TagKind::U, round, slice_of(&u_full, shard.r0, m), k as u64)
+            });
+            assemble(&mut u_full, &u_parts, m);
+        }
+
+        let v_jj = timer.comp(|| v_op.update(&u_full, alpha).clone());
+        copy_slice(&mut v_full, &v_jj, shard.r0);
+        if communicate {
+            round += 1;
+            let v_parts = timer.comm(|| {
+                allgather(&ep, TagKind::V, round, slice_of(&v_full, shard.r0, m), k as u64)
+            });
+            assemble(&mut v_full, &v_parts, m);
+        }
+
+        // Convergence: exact global error via an error AllGather (only
+        // on communication rounds — nodes must check in lock-step).
+        // Timeout is part of the same exchange: a unilateral break would
+        // deadlock the peers inside their blocking collectives, so each
+        // node contributes a timed-out flag and everyone honors the OR.
+        if communicate && ctx.policy.check_at(k) {
+            let u_now = u_op.state().clone();
+            let local: f64 = timer
+                .comp(|| u_op.marginal(&v_full, &u_now))
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            let timed_out = ctx.policy.timeout_secs > 0.0
+                && clock.now() > ctx.policy.timeout_secs;
+            round += 1;
+            let parts = timer.comm(|| {
+                allgather(&ep, TagKind::Ctl, round, &[local, timed_out as u8 as f64], k as u64)
+            });
+            let err: f64 = parts.iter().map(|p| p[0]).sum();
+            let any_timeout = parts.iter().any(|p| p[1] > 0.0);
+            final_err = err;
+            if ctx.traced {
+                trace.push(TracePoint { iter: k, secs: clock.now(), err });
+            }
+            if err < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break 'outer;
+            }
+            if any_timeout {
+                stop = StopReason::Timeout;
+                break 'outer;
+            }
+        }
+    }
+
+    NodeOutcome {
+        stats: NodeStats {
+            id,
+            role: "client",
+            timer,
+            iterations,
+            stop,
+            final_err, // the AllGathered global error — identical on all nodes
+        },
+        slices: Some((u_op.state().clone(), v_op.state().clone())),
+        trace,
+    }
+}
+
+/// Rows `[r0, r0+m)` of `full` as a flat slice (row-major m×N block).
+fn slice_of(full: &Mat, r0: usize, m: usize) -> &[f64] {
+    let nh = full.cols();
+    &full.as_slice()[r0 * nh..(r0 + m) * nh]
+}
+
+/// Write a client's block into the full state at row `r0`.
+fn copy_slice(full: &mut Mat, block: &Mat, r0: usize) {
+    let nh = full.cols();
+    let m = block.rows();
+    full.as_mut_slice()[r0 * nh..(r0 + m) * nh].copy_from_slice(block.as_slice());
+}
+
+/// Assemble AllGather parts (node-indexed, each m×N flat) into `full`.
+fn assemble(full: &mut Mat, parts: &[Vec<f64>], m: usize) {
+    let nh = full.cols();
+    for (j, part) in parts.iter().enumerate() {
+        debug_assert_eq!(part.len(), m * nh);
+        full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(part);
+    }
+}

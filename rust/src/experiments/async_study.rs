@@ -1,0 +1,118 @@
+//! Fig 9 (+ Figs 21–22 at CPU speed) — async non-determinism: repeated
+//! runs of the asynchronous federation on one problem, tracing the
+//! marginal error at node 0.
+
+use super::{dump_json, Scale};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::metrics::Summary;
+use crate::net::LatencyModel;
+use crate::sinkhorn::StopPolicy;
+use crate::workload::ProblemSpec;
+
+pub struct AsyncStudyArgs {
+    pub n: usize,
+    pub clients: usize,
+    pub alpha: f64,
+    pub runs: usize,
+    pub max_iters: usize,
+    pub threshold: f64,
+    pub backend: BackendKind,
+    pub net: LatencyModel,
+    pub out: Option<String>,
+}
+
+impl AsyncStudyArgs {
+    pub fn at_scale(scale: Scale) -> Self {
+        Self {
+            n: *scale.sizes().last().unwrap(),
+            clients: 2,
+            alpha: 1.0, // Fig 9 runs the undamped algorithm
+            runs: scale.repeats().max(3),
+            max_iters: 2000,
+            threshold: 1e-10,
+            backend: BackendKind::Xla,
+            net: LatencyModel::lan(),
+            out: None,
+        }
+    }
+}
+
+pub fn run(args: &AsyncStudyArgs) -> anyhow::Result<Json> {
+    println!(
+        "# Fig 9: async non-determinism, n={}, c={}, α={}, {} runs",
+        args.n, args.clients, args.alpha, args.runs
+    );
+    let p = ProblemSpec::new(args.n).with_eps(0.05).build(41);
+    let policy = StopPolicy {
+        threshold: args.threshold,
+        max_iters: args.max_iters,
+        check_every: 10,
+        ..Default::default()
+    };
+
+    let mut finals = Vec::new();
+    let mut n_converged = 0usize;
+    let mut runs = Vec::new();
+    for r in 0..args.runs {
+        let cfg = SolveConfig {
+            variant: Variant::AsyncA2A,
+            backend: args.backend,
+            clients: args.clients,
+            alpha: args.alpha,
+            net: args.net,
+            seed: 9000 + r as u64,
+            ..Default::default()
+        };
+        let out = run_federated(&p, &cfg, policy, true);
+        let last = out.trace.last().map(|t| t.err).unwrap_or(f64::NAN);
+        finals.push(last);
+        n_converged += out.converged as usize;
+        println!(
+            "  run {r:>2}: stop={:?} iters={} final marginal err={last:.3e}",
+            out.stop, out.iterations
+        );
+        runs.push(Json::obj(vec![
+            ("run", r.into()),
+            ("converged", out.converged.into()),
+            ("iterations", out.iterations.into()),
+            ("final_err", last.into()),
+            (
+                "trace",
+                Json::Arr(
+                    out.trace
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("iter", t.iter.into()),
+                                ("secs", t.secs.into()),
+                                ("err", t.err.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    let s = Summary::of(&finals);
+    println!(
+        "  final-error mean={:.3e} std={:.3e}; {}/{} runs converged",
+        s.mean, s.std, n_converged, args.runs
+    );
+
+    let doc = Json::obj(vec![
+        ("experiment", "async-study".into()),
+        ("n", args.n.into()),
+        ("clients", args.clients.into()),
+        ("alpha", args.alpha.into()),
+        ("mean_final_err", s.mean.into()),
+        ("std_final_err", s.std.into()),
+        ("converged_runs", n_converged.into()),
+        ("runs", Json::Arr(runs)),
+    ]);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}

@@ -1,0 +1,79 @@
+//! §IV-B1 — coherence check: the synchronous federations reproduce the
+//! centralized objective exactly for node counts 1, 2, 4 (Prop. 1).
+
+use super::{build_problem, dump_json};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::net::LatencyModel;
+use crate::runtime::make_backend;
+use crate::sinkhorn::{objective, CentralizedSolver, StopPolicy};
+use crate::workload::CondClass;
+
+pub struct CoherenceArgs {
+    pub n: usize,
+    pub eps: f64,
+    pub backend: BackendKind,
+    pub out: Option<String>,
+}
+
+impl Default for CoherenceArgs {
+    fn default() -> Self {
+        Self { n: 256, eps: 0.05, backend: BackendKind::Native, out: None }
+    }
+}
+
+pub fn run(args: &CoherenceArgs) -> anyhow::Result<Json> {
+    let p = build_problem(args.n, 1, args.eps, 0.0, 4, CondClass::Well, 2024);
+    let policy = StopPolicy { threshold: 1e-12, max_iters: 10_000, ..Default::default() };
+
+    let be = make_backend(args.backend, &crate::config::default_artifacts_dir(), 1)?;
+    let central = CentralizedSolver::new(be).solve(&p, policy, 1.0);
+    let obj_c = objective(&p, &central.state, 0);
+    println!("# §IV-B1 coherence: objective must be identical across node counts");
+    println!("centralized: objective = {obj_c:.15}");
+
+    let mut rows = vec![Json::obj(vec![
+        ("setting", "centralized".into()),
+        ("nodes", 1usize.into()),
+        ("objective", obj_c.into()),
+        ("delta_vs_central", 0.0.into()),
+    ])];
+
+    for variant in [Variant::SyncA2A, Variant::SyncStar] {
+        for clients in [1usize, 2, 4] {
+            if args.n % clients != 0 {
+                continue;
+            }
+            let cfg = SolveConfig {
+                variant,
+                backend: args.backend,
+                clients,
+                net: LatencyModel::zero(),
+                ..Default::default()
+            };
+            let out = run_federated(&p, &cfg, policy, false);
+            let obj = objective(&p, &out.state, 0);
+            let delta = (obj - obj_c).abs();
+            println!(
+                "{:>10} c={}: objective = {obj:.15} (|Δ| = {delta:.3e})",
+                variant.name(),
+                clients
+            );
+            assert!(delta < 1e-9, "coherence violated: {delta}");
+            rows.push(Json::obj(vec![
+                ("setting", variant.name().into()),
+                ("nodes", clients.into()),
+                ("objective", obj.into()),
+                ("delta_vs_central", delta.into()),
+            ]));
+        }
+    }
+    println!("coherence OK (all |Δ| < 1e-9)");
+
+    let doc = Json::obj(vec![("experiment", "coherence".into()), ("rows", Json::Arr(rows))]);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}

@@ -1,0 +1,131 @@
+//! Figs 15–17 + Table V — staleness (τ) distribution of the async
+//! federation: KDE-style binned densities of τ for small and large τ,
+//! and the per-node-count max/min/mean/std statistics.
+
+use super::{dump_json, Scale};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::metrics::{Histogram, Summary};
+use crate::net::LatencyModel;
+use crate::sinkhorn::StopPolicy;
+use crate::workload::ProblemSpec;
+
+pub struct DelaysArgs {
+    pub n: usize,
+    pub nodes: Vec<usize>,
+    pub iters: usize,
+    pub sims: usize,
+    pub backend: BackendKind,
+    pub net: LatencyModel,
+    pub out: Option<String>,
+}
+
+impl DelaysArgs {
+    pub fn at_scale(scale: Scale) -> Self {
+        Self {
+            n: scale.sizes()[scale.sizes().len() / 2],
+            nodes: match scale {
+                Scale::Quick => vec![2],
+                _ => vec![2, 4, 8],
+            },
+            iters: 500,
+            sims: match scale {
+                Scale::Quick => 3,
+                Scale::Default => 20,
+                Scale::Paper => 1000,
+            },
+            backend: BackendKind::Xla,
+            net: LatencyModel::lan(),
+            out: None,
+        }
+    }
+}
+
+pub fn run(args: &DelaysArgs) -> anyhow::Result<Json> {
+    println!(
+        "# Figs 15-17 + Table V: τ staleness study, n={}, T={}, {} sims",
+        args.n, args.iters, args.sims
+    );
+    println!(
+        "{:>6} {:>10} {:>8} {:>8} {:>10} {:>10}",
+        "nodes", "samples", "τ_max", "τ_min", "τ_mean", "τ_std"
+    );
+    let policy = StopPolicy {
+        threshold: 0.0, // fixed T iterations, like the paper
+        max_iters: args.iters,
+        check_every: args.iters + 1,
+        ..Default::default()
+    };
+
+    let mut rows = Vec::new();
+    for &c in &args.nodes {
+        if args.n % c != 0 {
+            continue;
+        }
+        let mut taus: Vec<f64> = Vec::new();
+        for s in 0..args.sims {
+            let p = ProblemSpec::new(args.n).with_eps(0.05).build(600 + s as u64);
+            let cfg = SolveConfig {
+                variant: Variant::AsyncA2A,
+                backend: args.backend,
+                clients: c,
+                alpha: 0.5,
+                net: args.net,
+                seed: 600 + s as u64,
+                ..Default::default()
+            };
+            let out = run_federated(&p, &cfg, policy, false);
+            taus.extend(out.taus.iter().map(|&t| t as f64));
+        }
+        // The paper plots only τ ≥ 1 (0 would mean no delay).
+        let nonzero: Vec<f64> = taus.iter().cloned().filter(|&t| t >= 1.0).collect();
+        let s = Summary::of(&nonzero);
+        println!(
+            "{:>6} {:>10} {:>8} {:>8} {:>10.2} {:>10.2}",
+            c, nonzero.len(), s.max, s.min, s.mean, s.std
+        );
+        // Fig 16: density for τ ∈ [1, 50]; Fig 17: tail τ > 50.
+        let head: Vec<f64> = nonzero.iter().cloned().filter(|&t| t <= 50.0).collect();
+        let tail: Vec<f64> = nonzero.iter().cloned().filter(|&t| t > 50.0).collect();
+        let hist_head = Histogram::of(&head, 25);
+        let hist_tail = if tail.is_empty() { None } else { Some(Histogram::of(&tail, 25)) };
+        rows.push(Json::obj(vec![
+            ("nodes", c.into()),
+            ("samples", nonzero.len().into()),
+            ("tau_max", s.max.into()),
+            ("tau_min", s.min.into()),
+            ("tau_mean", s.mean.into()),
+            ("tau_std", s.std.into()),
+            (
+                "kde_head",
+                Json::obj(vec![
+                    ("centers", Json::nums(&hist_head.centers())),
+                    ("density", Json::nums(&hist_head.density())),
+                ]),
+            ),
+            (
+                "kde_tail",
+                match hist_tail {
+                    Some(h) => Json::obj(vec![
+                        ("centers", Json::nums(&h.centers())),
+                        ("density", Json::nums(&h.density())),
+                    ]),
+                    None => Json::Null,
+                },
+            ),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("experiment", "delays".into()),
+        ("n", args.n.into()),
+        ("iters", args.iters.into()),
+        ("sims", args.sims.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}

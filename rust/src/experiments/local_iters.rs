@@ -1,0 +1,97 @@
+//! App. A, Figs 26–28 — local iterations `w` before each broadcast:
+//! the paper finds them "unequivocally detrimental". Traces the marginal
+//! error vs iteration and vs wall time for w ∈ {1, 2, 4, 8}, sync and
+//! async.
+
+use super::{dump_json, Scale};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::net::LatencyModel;
+use crate::sinkhorn::StopPolicy;
+use crate::workload::ProblemSpec;
+
+pub struct LocalItersArgs {
+    pub n: usize,
+    pub clients: usize,
+    pub ws: Vec<usize>,
+    pub max_iters: usize,
+    pub backend: BackendKind,
+    pub out: Option<String>,
+}
+
+impl LocalItersArgs {
+    pub fn at_scale(scale: Scale) -> Self {
+        Self {
+            n: scale.sizes()[0],
+            clients: 4,
+            ws: vec![1, 2, 4, 8],
+            max_iters: 1000,
+            backend: BackendKind::Native,
+            out: None,
+        }
+    }
+}
+
+pub fn run(args: &LocalItersArgs) -> anyhow::Result<Json> {
+    println!(
+        "# Figs 26-28: local iterations w (sync federation), n={}, c={}",
+        args.n, args.clients
+    );
+    let p = ProblemSpec::new(args.n).with_eps(0.05).build(88);
+    let policy = StopPolicy {
+        threshold: 1e-12,
+        max_iters: args.max_iters,
+        check_every: 1,
+        ..Default::default()
+    };
+
+    println!("{:>4} {:>10} {:>12} {:>14}", "w", "iters", "time (s)", "final err");
+    let mut rows = Vec::new();
+    for &w in &args.ws {
+        let cfg = SolveConfig {
+            variant: Variant::SyncA2A,
+            backend: args.backend,
+            clients: args.clients,
+            local_iters: w,
+            net: LatencyModel::lan(),
+            ..Default::default()
+        };
+        let out = run_federated(&p, &cfg, policy, true);
+        let ferr = out.trace.last().map(|t| t.err).unwrap_or(f64::NAN);
+        println!("{:>4} {:>10} {:>12.3} {:>14.3e}", w, out.iterations, out.secs, ferr);
+        rows.push(Json::obj(vec![
+            ("w", w.into()),
+            ("iterations", out.iterations.into()),
+            ("secs", out.secs.into()),
+            ("converged", out.converged.into()),
+            ("final_err", ferr.into()),
+            (
+                "trace",
+                Json::Arr(
+                    out.trace
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("iter", t.iter.into()),
+                                ("secs", t.secs.into()),
+                                ("err", t.err.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("experiment", "local-iters".into()),
+        ("n", args.n.into()),
+        ("clients", args.clients.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}

@@ -1,0 +1,183 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver prints the paper-shaped rows/series to stdout and returns
+//! a [`Json`] document that the launcher can dump with `--out FILE`.
+//! Scales: the default sizes are laptop-class stand-ins for the paper's
+//! cluster sizes; `FEDSINK_SCALE=paper` (or `--scale paper`) selects the
+//! original `n`/`N` grids.
+
+pub mod async_study;
+pub mod coherence;
+pub mod delays;
+pub mod epsilon;
+pub mod finance_exp;
+pub mod local_iters;
+pub mod perf_grid;
+pub mod robustness;
+pub mod stepsize;
+pub mod timing;
+pub mod vectorized;
+
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::{run_federated, slowest_node, FederatedOutcome};
+use crate::jsonio::Json;
+use crate::metrics::RunRecord;
+use crate::net::LatencyModel;
+use crate::sinkhorn::StopPolicy;
+use crate::workload::{CondClass, Problem, ProblemSpec};
+
+/// Experiment scale: `default` keeps every driver under ~minutes on a
+/// few CPU cores; `paper` restores the published grids; `quick` is a CI
+/// smoke setting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Default,
+    Paper,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "quick" => Some(Scale::Quick),
+            "default" => Some(Scale::Default),
+            "paper" => Some(Scale::Paper),
+            _ => None,
+        }
+    }
+
+    pub fn from_env() -> Scale {
+        std::env::var("FEDSINK_SCALE")
+            .ok()
+            .and_then(|s| Scale::parse(&s))
+            .unwrap_or(Scale::Default)
+    }
+
+    /// The paper's problem sizes n ∈ {1k, 5k, 10k} → scaled grids.
+    pub fn sizes(self) -> Vec<usize> {
+        match self {
+            Scale::Quick => vec![64],
+            Scale::Default => vec![256, 512, 1024],
+            Scale::Paper => vec![1000, 5000, 10000],
+        }
+    }
+
+    pub fn node_counts(self) -> Vec<usize> {
+        match self {
+            Scale::Quick => vec![1, 2],
+            _ => vec![1, 2, 4, 8],
+        }
+    }
+
+    pub fn repeats(self) -> usize {
+        match self {
+            Scale::Quick => 2,
+            Scale::Default => 5,
+            Scale::Paper => 15,
+        }
+    }
+}
+
+/// Shared solve wrapper: runs a variant and flattens the outcome into the
+/// slowest-node summary row used by every appendix table.
+#[allow(clippy::too_many_arguments)]
+pub fn run_case(
+    p: &Problem,
+    variant: Variant,
+    clients: usize,
+    backend: BackendKind,
+    net: LatencyModel,
+    policy: StopPolicy,
+    alpha: f64,
+    seed: u64,
+    spec_info: (f64, CondClass),
+) -> (RunRecord, FederatedOutcome) {
+    let cfg = SolveConfig {
+        variant,
+        backend,
+        clients,
+        alpha,
+        net,
+        seed,
+        ..Default::default()
+    };
+    let out = run_federated(p, &cfg, policy, false);
+    let slow = slowest_node(&out.node_stats);
+    let rec = RunRecord {
+        variant: variant.name().to_string(),
+        n: p.n,
+        clients,
+        hists: p.hists(),
+        sparsity: spec_info.0,
+        cond: spec_info.1.name().to_string(),
+        iterations: out.iterations,
+        converged: out.converged,
+        comp_secs: slow.comp_secs(),
+        comm_secs: slow.comm_secs(),
+        total_secs: slow.total_secs(),
+        final_err: slow.final_err,
+    };
+    (rec, out)
+}
+
+/// Build a problem from the common spec parameters.
+pub fn build_problem(
+    n: usize,
+    hists: usize,
+    eps: f64,
+    sparsity: f64,
+    blocks: usize,
+    cond: CondClass,
+    seed: u64,
+) -> Problem {
+    ProblemSpec::new(n)
+        .with_hists(hists)
+        .with_eps(eps)
+        .with_sparsity(sparsity, blocks)
+        .with_condition(cond)
+        .build(seed)
+}
+
+/// Write a JSON document to `path` (pretty, deterministic key order).
+pub fn dump_json(path: &str, doc: &Json) -> anyhow::Result<()> {
+    std::fs::write(path, crate::jsonio::to_string_pretty(doc))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Format seconds like the paper tables (3 decimals).
+pub fn fmt_s(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parsing_and_grids() {
+        assert_eq!(Scale::parse("paper"), Some(Scale::Paper));
+        assert_eq!(Scale::parse("nope"), None);
+        assert!(Scale::Quick.sizes().len() < Scale::Paper.sizes().len());
+        assert_eq!(Scale::Default.node_counts(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn run_case_produces_record() {
+        let p = build_problem(16, 1, 0.5, 0.0, 4, CondClass::Well, 1);
+        let (rec, out) = run_case(
+            &p,
+            Variant::SyncA2A,
+            2,
+            BackendKind::Native,
+            LatencyModel::zero(),
+            StopPolicy { threshold: 1e-10, max_iters: 2000, ..Default::default() },
+            1.0,
+            1,
+            (0.0, CondClass::Well),
+        );
+        assert!(rec.converged && out.converged);
+        assert_eq!(rec.variant, "sync-a2a");
+        assert!(rec.total_secs >= rec.comm_secs);
+    }
+}

@@ -1,0 +1,193 @@
+//! Tables II–IV + Fig 13 — convergence robustness grids.
+//!
+//! Randomized inputs per simulation; categories (§IV-C2):
+//! * threshold: loose 1e-5 / tight 1e-12;
+//! * timeout: fast 10 s / slow 1200 s (scaled down by default);
+//! * divergence: not converged within 3000 iterations.
+//!
+//! Reports, per (setting × node count): average time per execution, % of
+//! convergence, % of timeout, % of divergence. `--sweep-alpha` adds the
+//! Fig 13 α-sweep (fraction of converged runs vs α).
+
+use super::{dump_json, Scale};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::metrics::Summary;
+use crate::net::LatencyModel;
+use crate::sinkhorn::{StopPolicy, StopReason};
+use crate::workload::ProblemSpec;
+
+pub struct RobustnessArgs {
+    pub n: usize,
+    pub nodes: Vec<usize>,
+    pub runs: usize,
+    /// (label, threshold)
+    pub thresholds: Vec<(&'static str, f64)>,
+    /// (label, timeout seconds)
+    pub timeouts: Vec<(&'static str, f64)>,
+    pub divergence_iters: usize,
+    pub alpha_async: f64,
+    pub sweep_alpha: Option<Vec<f64>>,
+    pub backend: BackendKind,
+    pub out: Option<String>,
+}
+
+impl RobustnessArgs {
+    pub fn at_scale(scale: Scale) -> Self {
+        let (fast, slow) = match scale {
+            Scale::Quick => (0.5, 5.0),
+            Scale::Default => (2.0, 60.0),
+            Scale::Paper => (10.0, 1200.0),
+        };
+        Self {
+            n: scale.sizes()[scale.sizes().len() / 2],
+            nodes: match scale {
+                Scale::Quick => vec![2],
+                _ => vec![2, 4, 8],
+            },
+            runs: scale.repeats(),
+            thresholds: vec![("loose", 1e-5), ("tight", 1e-12)],
+            timeouts: vec![("fast", fast), ("slow", slow)],
+            divergence_iters: 3000,
+            alpha_async: 0.5,
+            sweep_alpha: None,
+            backend: BackendKind::Native,
+            out: None,
+        }
+    }
+}
+
+struct GridCell {
+    avg_secs: f64,
+    pct_conv: f64,
+    pct_timeout: f64,
+    pct_div: f64,
+}
+
+pub fn run(args: &RobustnessArgs) -> anyhow::Result<Json> {
+    let settings: Vec<(&str, Variant, f64)> = vec![
+        ("Synchronous All-To-All", Variant::SyncA2A, 1.0),
+        ("Synchronous Star-Network", Variant::SyncStar, 1.0),
+        ("Asynchronous", Variant::AsyncA2A, args.alpha_async),
+    ];
+
+    let mut tables = Vec::new();
+    for &c in &args.nodes {
+        if args.n % c != 0 {
+            continue;
+        }
+        println!("\n## Tables II-IV: robustness grid, {c} nodes (n={}, {} runs/cell)", args.n, args.runs);
+        let mut setting_rows = Vec::new();
+        for (label, variant, alpha) in &settings {
+            println!("### {label}{}", if *variant == Variant::AsyncA2A {
+                format!(" (α={alpha})")
+            } else {
+                String::new()
+            });
+            println!(
+                "{:>8} {:>8} {:>12} {:>10} {:>10} {:>10}",
+                "limit", "thresh", "avg time(s)", "% conv", "% t/out", "% div"
+            );
+            let mut cells = Vec::new();
+            for (tl_label, timeout) in &args.timeouts {
+                for (th_label, threshold) in &args.thresholds {
+                    let cell = grid_cell(args, *variant, c, *alpha, *threshold, *timeout);
+                    println!(
+                        "{:>8} {:>8} {:>12.2} {:>10.1} {:>10.1} {:>10.1}",
+                        tl_label, th_label, cell.avg_secs, cell.pct_conv, cell.pct_timeout, cell.pct_div
+                    );
+                    cells.push(Json::obj(vec![
+                        ("limit", (*tl_label).into()),
+                        ("threshold", (*th_label).into()),
+                        ("avg_secs", cell.avg_secs.into()),
+                        ("pct_convergence", cell.pct_conv.into()),
+                        ("pct_timeout", cell.pct_timeout.into()),
+                        ("pct_divergence", cell.pct_div.into()),
+                    ]));
+                }
+            }
+            setting_rows.push(Json::obj(vec![
+                ("setting", (*label).into()),
+                ("alpha", (*alpha).into()),
+                ("cells", Json::Arr(cells)),
+            ]));
+        }
+        tables.push(Json::obj(vec![("nodes", c.into()), ("settings", Json::Arr(setting_rows))]));
+    }
+
+    // Fig 13: α-sweep of convergence fraction (slow-loose criteria).
+    let mut sweep = Vec::new();
+    if let Some(alphas) = &args.sweep_alpha {
+        println!("\n## Fig 13: % of simulations converged vs α (slow/loose)");
+        let c = args.nodes[0];
+        let (_, slow) = args.timeouts[args.timeouts.len() - 1];
+        for &alpha in alphas {
+            let cell = grid_cell(args, Variant::AsyncA2A, c, alpha, 1e-5, slow);
+            println!("  α={alpha:<8} → {:.1}% converged", cell.pct_conv);
+            sweep.push(Json::obj(vec![
+                ("alpha", alpha.into()),
+                ("pct_convergence", cell.pct_conv.into()),
+            ]));
+        }
+    }
+
+    let doc = Json::obj(vec![
+        ("experiment", "robustness".into()),
+        ("n", args.n.into()),
+        ("runs_per_cell", args.runs.into()),
+        ("tables", Json::Arr(tables)),
+        ("alpha_sweep", Json::Arr(sweep)),
+    ]);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}
+
+fn grid_cell(
+    args: &RobustnessArgs,
+    variant: Variant,
+    clients: usize,
+    alpha: f64,
+    threshold: f64,
+    timeout: f64,
+) -> GridCell {
+    let mut times = Vec::new();
+    let (mut conv, mut tout, mut div) = (0usize, 0usize, 0usize);
+    for r in 0..args.runs {
+        // Randomized inputs per simulation (paper: "new random inputs
+        // were generated for each simulation").
+        let p = ProblemSpec::new(args.n).with_eps(0.05).build(4000 + r as u64);
+        let policy = StopPolicy {
+            threshold,
+            max_iters: args.divergence_iters,
+            timeout_secs: timeout,
+            check_every: 5,
+            ..Default::default()
+        };
+        let cfg = SolveConfig {
+            variant,
+            backend: args.backend,
+            clients,
+            alpha,
+            net: LatencyModel::lan(),
+            seed: 100 + r as u64,
+            ..Default::default()
+        };
+        let out = run_federated(&p, &cfg, policy, false);
+        times.push(out.secs);
+        match out.stop {
+            StopReason::Converged => conv += 1,
+            StopReason::Timeout => tout += 1,
+            StopReason::MaxIters => div += 1,
+        }
+    }
+    let pct = |k: usize| 100.0 * k as f64 / args.runs as f64;
+    GridCell {
+        avg_secs: Summary::of(&times).mean,
+        pct_conv: pct(conv),
+        pct_timeout: pct(tout),
+        pct_div: pct(div),
+    }
+}

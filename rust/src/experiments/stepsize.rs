@@ -1,0 +1,116 @@
+//! Table I + Figs 10–12 — the damping step size α in the asynchronous
+//! federation: time-to-convergence across α × node counts (CPU-speed
+//! backend, like the paper's §IV-C2), plus repeated-run variability.
+
+use super::{dump_json, Scale};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::metrics::Summary;
+use crate::net::LatencyModel;
+use crate::sinkhorn::StopPolicy;
+use crate::workload::ProblemSpec;
+
+pub struct StepsizeArgs {
+    pub n: usize,
+    pub alphas: Vec<f64>,
+    pub nodes: Vec<usize>,
+    pub repeats: usize,
+    pub threshold: f64,
+    pub max_iters: usize,
+    pub backend: BackendKind,
+    pub out: Option<String>,
+}
+
+impl StepsizeArgs {
+    pub fn at_scale(scale: Scale) -> Self {
+        Self {
+            n: scale.sizes()[scale.sizes().len() / 2],
+            alphas: vec![0.1, 0.25, 0.5],
+            nodes: match scale {
+                Scale::Quick => vec![2],
+                _ => vec![2, 4, 8],
+            },
+            repeats: scale.repeats(),
+            threshold: 1e-10,
+            max_iters: 8000,
+            backend: BackendKind::Native, // paper runs this study on CPU
+            out: None,
+        }
+    }
+}
+
+pub fn run(args: &StepsizeArgs) -> anyhow::Result<Json> {
+    println!(
+        "# Table I: async time-to-convergence (s) vs α × nodes, n={}, {} repeats",
+        args.n, args.repeats
+    );
+    let p = ProblemSpec::new(args.n).with_eps(0.05).build(55);
+    let policy = StopPolicy {
+        threshold: args.threshold,
+        max_iters: args.max_iters,
+        check_every: 5,
+        ..Default::default()
+    };
+
+    print!("{:>8}", "nodes");
+    for a in &args.alphas {
+        print!(" {:>14}", format!("α={a}"));
+    }
+    println!();
+
+    let mut rows = Vec::new();
+    for &c in &args.nodes {
+        if args.n % c != 0 {
+            continue;
+        }
+        print!("{c:>8}");
+        let mut cells = Vec::new();
+        for &alpha in &args.alphas {
+            let mut times = Vec::new();
+            let mut conv = 0usize;
+            for r in 0..args.repeats {
+                let cfg = SolveConfig {
+                    variant: Variant::AsyncA2A,
+                    backend: args.backend,
+                    clients: c,
+                    alpha,
+                    net: LatencyModel::lan(),
+                    seed: 7000 + r as u64,
+                    ..Default::default()
+                };
+                let out = run_federated(&p, &cfg, policy, false);
+                if out.converged {
+                    conv += 1;
+                    times.push(out.secs);
+                }
+            }
+            let s = Summary::of(&times);
+            let cell = if times.is_empty() {
+                "   (no conv)".to_string()
+            } else {
+                format!("{:>10.2}", s.mean)
+            };
+            print!(" {cell:>14}");
+            cells.push(Json::obj(vec![
+                ("alpha", alpha.into()),
+                ("mean_secs", s.mean.into()),
+                ("std_secs", s.std.into()),
+                ("converged", conv.into()),
+                ("repeats", args.repeats.into()),
+            ]));
+        }
+        println!();
+        rows.push(Json::obj(vec![("nodes", c.into()), ("cells", Json::Arr(cells))]));
+    }
+
+    let doc = Json::obj(vec![
+        ("experiment", "stepsize".into()),
+        ("n", args.n.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}

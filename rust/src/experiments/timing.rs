@@ -1,0 +1,138 @@
+//! Figs 6/14 (GPU-speed) and 18/23/24 (CPU-speed) — computation vs
+//! communication time per node at a fixed iteration budget.
+//!
+//! The paper fixes 250 iterations at n = 10000 and plots per-node comp
+//! and comm times against the node count, showing comm dominating at
+//! GPU-speed compute and the balance flipping at CPU speed (§IV-E). Our
+//! "GPU" is the XLA backend, our "CPU" the (serial) native backend.
+
+use super::{dump_json, Scale};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::metrics::Summary;
+use crate::net::LatencyModel;
+use crate::sinkhorn::StopPolicy;
+use crate::workload::ProblemSpec;
+
+pub struct TimingArgs {
+    pub variant: Variant,
+    pub backend: BackendKind,
+    pub n: usize,
+    pub iters: usize,
+    pub nodes: Vec<usize>,
+    pub net: LatencyModel,
+    /// Repeats for the per-node distribution plots (Figs 23–24).
+    pub repeats: usize,
+    pub out: Option<String>,
+}
+
+impl TimingArgs {
+    pub fn at_scale(scale: Scale) -> Self {
+        Self {
+            variant: Variant::SyncA2A,
+            backend: BackendKind::Xla,
+            n: *scale.sizes().last().unwrap(),
+            iters: match scale {
+                Scale::Quick => 25,
+                _ => 250,
+            },
+            nodes: scale.node_counts(),
+            net: LatencyModel::lan(),
+            repeats: match scale {
+                Scale::Quick => 1,
+                _ => 3,
+            },
+            out: None,
+        }
+    }
+}
+
+pub fn run(args: &TimingArgs) -> anyhow::Result<Json> {
+    // Fixed iteration budget: threshold 0 disables convergence stops.
+    let policy = StopPolicy {
+        threshold: 0.0,
+        max_iters: args.iters,
+        check_every: args.iters + 1, // no mid-run checks
+        ..Default::default()
+    };
+    let p = ProblemSpec::new(args.n).with_eps(0.05).build(77);
+
+    println!(
+        "# Figs 6/14/18: comp vs comm per node, n={}, {} iterations, backend={}, variant={}",
+        args.n,
+        args.iters,
+        args.backend.name(),
+        args.variant.name()
+    );
+    println!(
+        "{:>6} {:>4} {:>12} {:>12} {:>12}  (per-node; slowest node shown, mean of {} runs)",
+        "nodes", "rep", "comp (s)", "comm (s)", "total (s)", args.repeats
+    );
+
+    let mut rows = Vec::new();
+    for &c in &args.nodes {
+        if args.n % c != 0 {
+            continue;
+        }
+        let variant = if c == 1 { Variant::Centralized } else { args.variant };
+        let mut comps = Vec::new();
+        let mut comms = Vec::new();
+        let mut node_rows = Vec::new();
+        for rep in 0..args.repeats {
+            let cfg = SolveConfig {
+                variant,
+                backend: args.backend,
+                clients: c,
+                net: args.net,
+                seed: 1000 + rep as u64,
+                ..Default::default()
+            };
+            let out = run_federated(&p, &cfg, policy, false);
+            for s in &out.node_stats {
+                node_rows.push(Json::obj(vec![
+                    ("nodes", c.into()),
+                    ("rep", rep.into()),
+                    ("node", s.id.into()),
+                    ("role", s.role.into()),
+                    ("comp_secs", s.comp_secs().into()),
+                    ("comm_secs", s.comm_secs().into()),
+                ]));
+            }
+            let slow = crate::coordinator::slowest_node(&out.node_stats);
+            comps.push(slow.comp_secs());
+            comms.push(slow.comm_secs());
+            println!(
+                "{:>6} {:>4} {:>12.3} {:>12.3} {:>12.3}",
+                c,
+                rep,
+                slow.comp_secs(),
+                slow.comm_secs(),
+                slow.total_secs()
+            );
+        }
+        let sc = Summary::of(&comps);
+        let sm = Summary::of(&comms);
+        rows.push(Json::obj(vec![
+            ("nodes", c.into()),
+            ("comp_mean", sc.mean.into()),
+            ("comp_std", sc.std.into()),
+            ("comm_mean", sm.mean.into()),
+            ("comm_std", sm.std.into()),
+            ("per_node", Json::Arr(node_rows)),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("experiment", "timing".into()),
+        ("variant", args.variant.name().into()),
+        ("backend", args.backend.name().into()),
+        ("n", args.n.into()),
+        ("iters", args.iters.into()),
+        ("rows", Json::Arr(rows)),
+    ]);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}

@@ -1,0 +1,185 @@
+//! §IV-B3 + Figs 7–8 — Cuturi vectorization over N target histograms.
+//!
+//! Three measurements:
+//! * serial-vs-vectorized (§IV-B3): solving N problems one-by-one vs one
+//!   n×N solve — the paper reports 11.56 s vs 0.31 s at N = 500;
+//! * Fig 7: isolated *compute* time vs N across federated settings;
+//! * Fig 8: isolated *communication* time vs N.
+
+use super::{dump_json, Scale};
+use crate::config::{BackendKind, SolveConfig, Variant};
+use crate::coordinator::run_federated;
+use crate::jsonio::Json;
+use crate::linalg::Mat;
+use crate::net::LatencyModel;
+use crate::sinkhorn::StopPolicy;
+use crate::workload::{Problem, ProblemSpec};
+
+pub struct VectorizedArgs {
+    pub n: usize,
+    pub hist_grid: Vec<usize>,
+    pub nodes: Vec<usize>,
+    pub iters: usize,
+    pub backend: BackendKind,
+    pub net: LatencyModel,
+    /// Also run the serial-vs-vectorized comparison at this N.
+    pub serial_compare: Option<usize>,
+    pub out: Option<String>,
+}
+
+impl VectorizedArgs {
+    pub fn at_scale(scale: Scale) -> Self {
+        match scale {
+            Scale::Quick => Self {
+                n: 64,
+                hist_grid: vec![1, 8, 64],
+                nodes: vec![1, 2],
+                iters: 15,
+                backend: BackendKind::Xla,
+                net: LatencyModel::lan(),
+                serial_compare: Some(8),
+                out: None,
+            },
+            Scale::Default => Self {
+                n: 512,
+                hist_grid: vec![1, 64, 512, 4096],
+                nodes: vec![1, 2, 4],
+                iters: 15,
+                backend: BackendKind::Xla,
+                net: LatencyModel::lan(),
+                serial_compare: Some(500),
+                out: None,
+            },
+            Scale::Paper => Self {
+                n: 1000,
+                hist_grid: vec![1, 1000, 5000, 10000, 50000, 75000, 100000],
+                nodes: vec![1, 2, 4],
+                iters: 15,
+                backend: BackendKind::Xla,
+                net: LatencyModel::lan(),
+                serial_compare: Some(500),
+                out: None,
+            },
+        }
+    }
+}
+
+pub fn run(args: &VectorizedArgs) -> anyhow::Result<Json> {
+    let mut doc_fields: Vec<(&str, Json)> = vec![
+        ("experiment", "vectorized".into()),
+        ("n", args.n.into()),
+    ];
+
+    // --- §IV-B3 serial vs vectorized -----------------------------------
+    if let Some(nh) = args.serial_compare {
+        let p = ProblemSpec::new(args.n).with_hists(nh).with_eps(0.1).build(31);
+        let policy = StopPolicy {
+            threshold: 0.0,
+            max_iters: args.iters,
+            check_every: args.iters + 1,
+            ..Default::default()
+        };
+        let cfg = SolveConfig {
+            variant: Variant::Centralized,
+            backend: args.backend,
+            clients: 1,
+            net: LatencyModel::zero(),
+            ..Default::default()
+        };
+        // One vectorized solve of all N problems.
+        let t0 = std::time::Instant::now();
+        let _ = run_federated(&p, &cfg, policy, false);
+        let vec_secs = t0.elapsed().as_secs_f64();
+        // One single-histogram solve …
+        let single = single_hist_problem(&p, 0);
+        let t1 = std::time::Instant::now();
+        let _ = run_federated(&single, &cfg, policy, false);
+        let one_secs = t1.elapsed().as_secs_f64();
+        // … and the serial loop over all N (extrapolated from a probe of
+        // up to 16 solves to keep the driver fast; the scaling is exact
+        // since every solve is identical work).
+        let probe = nh.min(16);
+        let t2 = std::time::Instant::now();
+        for h in 0..probe {
+            let ph = single_hist_problem(&p, h);
+            let _ = run_federated(&ph, &cfg, policy, false);
+        }
+        let serial_secs = t2.elapsed().as_secs_f64() / probe as f64 * nh as f64;
+        println!("# §IV-B3 serial vs vectorized at n={}, N={nh}, {} iters", args.n, args.iters);
+        println!("  1 problem:            {one_secs:.3}s");
+        println!("  {nh} problems vectorized: {vec_secs:.3}s");
+        println!("  {nh} problems serially:   {serial_secs:.3}s (extrapolated from {probe})");
+        doc_fields.push((
+            "serial_compare",
+            Json::obj(vec![
+                ("nhist", nh.into()),
+                ("one_secs", one_secs.into()),
+                ("vectorized_secs", vec_secs.into()),
+                ("serial_secs", serial_secs.into()),
+            ]),
+        ));
+    }
+
+    // --- Figs 7–8: compute / comm time vs N across settings ------------
+    println!(
+        "# Figs 7-8: isolated comp/comm time vs N (n={}, {} iters, backend={})",
+        args.n,
+        args.iters,
+        args.backend.name()
+    );
+    println!("{:>8} {:>6} {:>12} {:>12}", "N", "nodes", "comp (s)", "comm (s)");
+    let policy = StopPolicy {
+        threshold: 0.0,
+        max_iters: args.iters,
+        check_every: args.iters + 1,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    for &nh in &args.hist_grid {
+        let p = ProblemSpec::new(args.n).with_hists(nh).with_eps(0.1).build(33);
+        for &c in &args.nodes {
+            if args.n % c != 0 {
+                continue;
+            }
+            let variant = if c == 1 { Variant::Centralized } else { Variant::SyncA2A };
+            let cfg = SolveConfig {
+                variant,
+                backend: args.backend,
+                clients: c,
+                net: args.net,
+                ..Default::default()
+            };
+            let out = run_federated(&p, &cfg, policy, false);
+            let slow = crate::coordinator::slowest_node(&out.node_stats);
+            println!(
+                "{:>8} {:>6} {:>12.3} {:>12.3}",
+                nh,
+                c,
+                slow.comp_secs(),
+                slow.comm_secs()
+            );
+            rows.push(Json::obj(vec![
+                ("nhist", nh.into()),
+                ("nodes", c.into()),
+                ("comp_secs", slow.comp_secs().into()),
+                ("comm_secs", slow.comm_secs().into()),
+            ]));
+        }
+    }
+    doc_fields.push(("rows", Json::Arr(rows)));
+
+    let doc = Json::obj(doc_fields);
+    if let Some(path) = &args.out {
+        dump_json(path, &doc)?;
+    }
+    Ok(doc)
+}
+
+/// Extract histogram `h` as a standalone single-histogram problem.
+fn single_hist_problem(p: &Problem, h: usize) -> Problem {
+    let mut b = Mat::zeros(p.n, 1);
+    for i in 0..p.n {
+        b[(i, 0)] = p.b[(i, h)];
+    }
+    Problem::from_parts(p.a.clone(), b, p.cost.clone(), p.eps)
+}

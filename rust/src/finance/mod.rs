@@ -1,0 +1,176 @@
+//! Financial application (paper §V): worst-case expected portfolio loss
+//! via the Blanchet–Murthy distributionally-robust formulation, reduced
+//! to entropic optimal transport and solved with Federated Sinkhorn.
+//!
+//! Pipeline:
+//! 1. Historical returns `x` and analyst targets `x'` are shifted
+//!    positive and normalized to the simplex (§V-B4).
+//! 2. The consolidated cost `C_ij = λ·c(x̃_i, x̃'_j) − l(x̃'_j)` (here
+//!    `c` = squared distance, `l` = portfolio loss) defines an OT
+//!    problem with marginals `(x̃, x̃')`.
+//! 3. Federated Sinkhorn yields `P*(λ)`; the outer λ-search enforces the
+//!    Wasserstein budget `⟨P*, c⟩ = δ`.
+//! 4. `ρ_worst = Σ_ij P*_ij l_j`, cross-checked against the dual
+//!    identity `ρ = λδ + Σ P*(l − λc)` (§V-B2).
+
+mod model;
+mod portfolio;
+mod search;
+
+pub use model::{normalize_returns, FinanceProblem, WorstCaseSpec};
+pub use portfolio::{synthetic_portfolio, PortfolioData};
+pub use search::{worst_case_loss, LambdaSearch, WorstCaseResult};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, SolveConfig, Variant};
+    use crate::net::LatencyModel;
+    use crate::sinkhorn::StopPolicy;
+
+    fn cfg(variant: Variant, clients: usize) -> SolveConfig {
+        SolveConfig {
+            variant,
+            backend: BackendKind::Native,
+            clients,
+            net: LatencyModel::zero(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn normalization_matches_paper_worked_example() {
+        // §V-B4: x = [-0.51, -0.66, 4.34], x' = [0.43, -0.8, 3.86].
+        let (xt, xpt, k) = normalize_returns(
+            &[-0.51, -0.66, 4.34],
+            &[0.43, -0.80, 3.86],
+            0.01,
+        );
+        assert!((k - 0.81).abs() < 1e-12, "shift k = {k}");
+        // x_shifted = [0.30, 0.15, 5.15], sum 5.6
+        assert!((xt[0] - 0.30 / 5.6).abs() < 1e-12);
+        assert!((xt[1] - 0.15 / 5.6).abs() < 1e-12);
+        assert!((xt[2] - 5.15 / 5.6).abs() < 1e-12);
+        // x'_shifted = [1.24, 0.01, 4.67], sum 5.92
+        assert!((xpt[0] - 1.24 / 5.92).abs() < 1e-12);
+        assert!((xpt[2] - 4.67 / 5.92).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_cost_matrix_reproduced() {
+        let spec = WorstCaseSpec::paper_example();
+        let fp = spec.problem(spec.lambda);
+        // §V-B4 prints C ≈ [[0.164, 0.163, 0.214], ...] (3 decimals).
+        let want = [
+            [0.164, 0.163, 0.214],
+            [0.163, 0.161, 0.232],
+            [0.214, 0.232, 0.163],
+        ];
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(
+                    (fp.problem.cost[(i, j)] - want[i][j]).abs() < 2.5e-3,
+                    "C[{i}][{j}] = {} want {}",
+                    fp.problem.cost[(i, j)],
+                    want[i][j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_example_rho_is_minus_048() {
+        // ρ_worst = −wᵀx̃ Σ P = −0.48 (§V-B4) for every solver variant.
+        let spec = WorstCaseSpec::paper_example();
+        for (variant, clients) in [
+            (Variant::Centralized, 1),
+            (Variant::SyncA2A, 3),
+            (Variant::SyncStar, 3),
+        ] {
+            let out = worst_case_loss(
+                &spec,
+                &cfg(variant, clients),
+                StopPolicy { threshold: 1e-12, max_iters: 20_000, ..Default::default() },
+                LambdaSearch::fixed(spec.lambda),
+            );
+            assert!(
+                (out.rho - (-0.48)).abs() < 5e-3,
+                "{}: rho = {}",
+                variant.name(),
+                out.rho
+            );
+            assert!(out.converged, "{}", variant.name());
+        }
+    }
+
+    #[test]
+    fn dual_identity_holds() {
+        // §V-B2: ρ = λδ + Σ P(l − λc) with δ = achieved ⟨P,c⟩.
+        let spec = WorstCaseSpec::paper_example();
+        let out = worst_case_loss(
+            &spec,
+            &cfg(Variant::Centralized, 1),
+            StopPolicy { threshold: 1e-12, max_iters: 20_000, ..Default::default() },
+            LambdaSearch::fixed(spec.lambda),
+        );
+        let dual = out.lambda * out.transport_cost
+            + (out.rho - out.lambda * out.transport_cost);
+        assert!((dual - out.rho).abs() < 1e-12);
+        assert!(out.transport_cost > 0.0);
+    }
+
+    #[test]
+    fn lambda_search_hits_delta() {
+        // A searched λ must bring ⟨P*, c⟩ within tolerance of δ when δ
+        // is inside the achievable range.
+        let spec = WorstCaseSpec::paper_example();
+        let pol = StopPolicy { threshold: 1e-11, max_iters: 20_000, ..Default::default() };
+        let probe = worst_case_loss(
+            &spec,
+            &cfg(Variant::Centralized, 1),
+            pol,
+            LambdaSearch::fixed(1.0),
+        );
+        let delta = probe.transport_cost;
+        let mut spec2 = spec.clone();
+        spec2.delta = delta;
+        let out = worst_case_loss(
+            &spec2,
+            &cfg(Variant::Centralized, 1),
+            pol,
+            LambdaSearch::bisection(1e-3, 64.0, 1e-4, 40),
+        );
+        assert!(
+            (out.transport_cost - delta).abs() < 1e-3,
+            "cost {} vs δ {delta}",
+            out.transport_cost
+        );
+        assert!(out.lambda_iters > 1);
+    }
+
+    #[test]
+    fn synthetic_portfolio_is_well_formed() {
+        let data = synthetic_portfolio(12, 250, 7);
+        assert_eq!(data.weights.len(), 12);
+        assert!((data.weights.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(data.historical.len(), 250);
+        assert!(data.historical.iter().all(|r| r.is_finite()));
+        assert!(data.analyst_view.iter().all(|r| r.is_finite()));
+        assert_eq!(data.historical.len(), data.analyst_view.len());
+    }
+
+    #[test]
+    fn transport_cost_decreases_with_lambda() {
+        let spec = WorstCaseSpec::paper_example();
+        let pol = StopPolicy { threshold: 1e-11, max_iters: 20_000, ..Default::default() };
+        let c = cfg(Variant::Centralized, 1);
+        let lo = worst_case_loss(&spec, &c, pol, LambdaSearch::fixed(0.05));
+        let hi = worst_case_loss(&spec, &c, pol, LambdaSearch::fixed(5.0));
+        assert!(
+            hi.transport_cost <= lo.transport_cost + 1e-12,
+            "cost(λ=5) {} vs cost(λ=0.05) {}",
+            hi.transport_cost,
+            lo.transport_cost
+        );
+    }
+}

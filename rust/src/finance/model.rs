@@ -1,0 +1,134 @@
+//! Blanchet–Murthy problem construction (paper §V-A/§V-B).
+
+use crate::linalg::Mat;
+use crate::workload::Problem;
+
+/// Shift both return vectors positive by a common `k = max(|min x|,
+/// |min x'|) + margin`, then normalize each to the simplex (§V-B4).
+/// Returns `(x̃, x̃', k)`.
+pub fn normalize_returns(x: &[f64], xp: &[f64], margin: f64) -> (Vec<f64>, Vec<f64>, f64) {
+    let min_x = x.iter().cloned().fold(f64::INFINITY, f64::min);
+    let min_xp = xp.iter().cloned().fold(f64::INFINITY, f64::min);
+    let k = min_x.abs().max(min_xp.abs()) + margin;
+    let shift_norm = |v: &[f64]| -> Vec<f64> {
+        let shifted: Vec<f64> = v.iter().map(|r| r + k).collect();
+        let s: f64 = shifted.iter().sum();
+        shifted.into_iter().map(|r| r / s).collect()
+    };
+    (shift_norm(x), shift_norm(xp), k)
+}
+
+/// Worst-case-loss problem specification.
+#[derive(Clone, Debug)]
+pub struct WorstCaseSpec {
+    /// Historical (empirical) returns `x`, one point per scenario.
+    pub returns: Vec<f64>,
+    /// Analyst target returns `x'` (same length).
+    pub targets: Vec<f64>,
+    /// Portfolio weights `w` (simplex).
+    pub weights: Vec<f64>,
+    /// Blanchet–Murthy dual variable λ (start value for searches).
+    pub lambda: f64,
+    /// Wasserstein budget δ.
+    pub delta: f64,
+    /// Sinkhorn regularization ε.
+    pub eps: f64,
+    /// Positivity margin for the shift (paper uses 0.01).
+    pub margin: f64,
+}
+
+impl WorstCaseSpec {
+    /// The paper's §V-B4 3-asset worked example.
+    pub fn paper_example() -> Self {
+        Self {
+            returns: vec![-0.51, -0.66, 4.34],
+            targets: vec![0.43, -0.80, 3.86],
+            weights: vec![0.4, 0.1, 0.5],
+            lambda: 0.1,
+            delta: 0.01,
+            eps: 0.01,
+            margin: 0.01,
+        }
+    }
+
+    /// Build the OT instance at a given λ.
+    pub fn problem(&self, lambda: f64) -> FinanceProblem {
+        let n = self.returns.len();
+        assert_eq!(self.targets.len(), n);
+        let (xt, xpt, shift) = normalize_returns(&self.returns, &self.targets, self.margin);
+
+        // Portfolio loss at the (normalized) target points: the paper's
+        // example uses the whole-portfolio return wᵀx̃ spread uniformly
+        // (so C_ij = λ c + wᵀx̃/n); we keep that convention.
+        let wx: f64 = self.weights.iter().zip(&xt).map(|(w, x)| w * x).sum();
+        let loss: Vec<f64> = vec![wx; n];
+
+        // Ground cost c(x̃_i, x̃'_j) = (x̃_i − x̃'_j)², symmetrized:
+        // the paper's worked example prints a symmetric C and §V-B4
+        // relies on it ("the cost matrix is symmetrical, which means the
+        // offices have respective access for the partial cost matrices
+        // C_iᵀ"), so c ← (c + cᵀ)/2.
+        let mut ground = Mat::zeros(n, n);
+        let mut cost = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let dij = xt[i] - xpt[j];
+                let dji = xt[j] - xpt[i];
+                ground[(i, j)] = 0.5 * (dij * dij + dji * dji);
+                // C = λ c + l/n (the −l(x') of §V-A7, sign-folded as the
+                // paper's worked example does: "wᵀx divided by n").
+                cost[(i, j)] = lambda * ground[(i, j)] + loss[j] / n as f64;
+            }
+        }
+
+        let mut b = Mat::zeros(n, 1);
+        for i in 0..n {
+            b[(i, 0)] = xpt[i];
+        }
+        let problem = Problem::from_parts(xt.clone(), b, cost, self.eps);
+        FinanceProblem { problem, ground, loss, shift, x_norm: xt, xp_norm: xpt }
+    }
+}
+
+/// The OT instance at a fixed λ plus the finance-side data needed for
+/// ρ_worst and the Wasserstein-cost evaluation.
+#[derive(Clone, Debug)]
+pub struct FinanceProblem {
+    pub problem: Problem,
+    /// Ground transport cost c (squared distance), independent of λ.
+    pub ground: Mat,
+    /// Per-target-point portfolio loss l(x̃'_j).
+    pub loss: Vec<f64>,
+    /// The positivity shift k applied to both return vectors.
+    pub shift: f64,
+    pub x_norm: Vec<f64>,
+    pub xp_norm: Vec<f64>,
+}
+
+impl FinanceProblem {
+    /// `⟨P, c⟩` — the transported Wasserstein cost (not the consolidated
+    /// Sinkhorn cost).
+    pub fn transport_cost(&self, plan: &Mat) -> f64 {
+        let n = self.problem.n;
+        let mut total = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                total += plan[(i, j)] * self.ground[(i, j)];
+            }
+        }
+        total
+    }
+
+    /// `ρ_worst = −Σ_ij P_ij l_j` (§V-B4 prints the negative of the
+    /// expected loss as the worst-case return).
+    pub fn rho_worst(&self, plan: &Mat) -> f64 {
+        let n = self.problem.n;
+        let mut total = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                total += plan[(i, j)] * self.loss[j];
+            }
+        }
+        -total
+    }
+}

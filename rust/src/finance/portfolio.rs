@@ -1,0 +1,47 @@
+//! Synthetic financial time-series generator.
+//!
+//! Stand-in for the paper's proprietary HSBC data (DESIGN.md §3): a
+//! portfolio of `assets` with lognormal-ish daily returns (drift +
+//! clustered volatility), a random simplex weight vector, and an
+//! "analyst view" series produced by perturbing the historical one —
+//! exactly the inputs §V's pipeline consumes, at any scale.
+
+use crate::rng::Rng;
+
+/// Generated portfolio scenario data.
+#[derive(Clone, Debug)]
+pub struct PortfolioData {
+    /// Per-asset portfolio weights (simplex).
+    pub weights: Vec<f64>,
+    /// Historical portfolio returns, one per scenario day (%).
+    pub historical: Vec<f64>,
+    /// Analyst next-day view per scenario (%).
+    pub analyst_view: Vec<f64>,
+}
+
+/// Generate `scenarios` daily portfolio returns over `assets` assets.
+pub fn synthetic_portfolio(assets: usize, scenarios: usize, seed: u64) -> PortfolioData {
+    let mut rng = Rng::seed_from(seed);
+    let weights = rng.dirichlet(assets, 1.0);
+
+    // Per-asset params: small drift, 1–3% daily vol.
+    let drift: Vec<f64> = (0..assets).map(|_| rng.normal_ms(0.03, 0.05)).collect();
+    let vol: Vec<f64> = (0..assets).map(|_| rng.uniform_range(1.0, 3.0)).collect();
+
+    let mut historical = Vec::with_capacity(scenarios);
+    let mut analyst_view = Vec::with_capacity(scenarios);
+    // Volatility clustering: an AR(1) multiplier on the vol level.
+    let mut regime = 1.0;
+    for _ in 0..scenarios {
+        regime = (0.9 * regime + 0.1 * rng.uniform_range(0.5, 2.0)).clamp(0.25, 4.0);
+        let mut port = 0.0;
+        for a in 0..assets {
+            port += weights[a] * rng.normal_ms(drift[a], vol[a] * regime);
+        }
+        historical.push(port);
+        // Analysts see a noisy, slightly optimistic version.
+        analyst_view.push(port * rng.uniform_range(0.7, 1.1) + rng.normal_ms(0.05, 0.3));
+    }
+
+    PortfolioData { weights, historical, analyst_view }
+}

@@ -1,0 +1,105 @@
+//! Outer λ-search enforcing the Wasserstein budget (§V-A9).
+
+use super::model::WorstCaseSpec;
+use crate::config::SolveConfig;
+use crate::coordinator::run_federated;
+use crate::sinkhorn::{transport_plan, StopPolicy};
+
+/// λ-search strategy. `⟨P*(λ), c⟩` is monotone non-increasing in λ
+/// (higher λ penalizes transport), so bisection brackets δ.
+#[derive(Clone, Copy, Debug)]
+pub enum LambdaSearch {
+    /// Solve once at the given λ (the paper's worked example).
+    Fixed(f64),
+    /// Bisection over `[lo, hi]` until `|⟨P,c⟩ − δ| < tol` or maxiter.
+    Bisection { lo: f64, hi: f64, tol: f64, max_iter: usize },
+}
+
+impl LambdaSearch {
+    pub fn fixed(lambda: f64) -> Self {
+        LambdaSearch::Fixed(lambda)
+    }
+
+    pub fn bisection(lo: f64, hi: f64, tol: f64, max_iter: usize) -> Self {
+        LambdaSearch::Bisection { lo, hi, tol, max_iter }
+    }
+}
+
+/// Worst-case-loss outcome.
+#[derive(Clone, Debug)]
+pub struct WorstCaseResult {
+    pub lambda: f64,
+    /// ρ_worst (the worst-case *return*; negative = loss).
+    pub rho: f64,
+    /// ⟨P*, c⟩ at the returned λ.
+    pub transport_cost: f64,
+    /// Sinkhorn iterations of the final inner solve.
+    pub inner_iters: usize,
+    /// Outer λ-search evaluations.
+    pub lambda_iters: usize,
+    pub converged: bool,
+    pub secs: f64,
+}
+
+/// Run the (federated) Sinkhorn inner solver inside the λ-search.
+pub fn worst_case_loss(
+    spec: &WorstCaseSpec,
+    cfg: &SolveConfig,
+    policy: StopPolicy,
+    search: LambdaSearch,
+) -> WorstCaseResult {
+    let t0 = std::time::Instant::now();
+    let mut evals = 0usize;
+
+    let mut solve_at = |lambda: f64| {
+        evals += 1;
+        let fp = spec.problem(lambda);
+        let out = run_federated(&fp.problem, cfg, policy, false);
+        let plan = transport_plan(&fp.problem.k, &out.state, 0);
+        let cost = fp.transport_cost(&plan);
+        let rho = fp.rho_worst(&plan);
+        (cost, rho, out.iterations, out.converged)
+    };
+
+    let (lambda, cost, rho, iters, conv) = match search {
+        LambdaSearch::Fixed(lambda) => {
+            let (cost, rho, iters, conv) = solve_at(lambda);
+            (lambda, cost, rho, iters, conv)
+        }
+        LambdaSearch::Bisection { lo, hi, tol, max_iter } => {
+            let mut lo = lo;
+            let mut hi = hi;
+            // cost(λ) is non-increasing: cost(lo) ≥ cost(hi).
+            let (mut cost_mid, mut rho_mid, mut it_mid, mut conv_mid) = solve_at(lo);
+            let mut lambda_mid = lo;
+            for _ in 0..max_iter {
+                let mid = 0.5 * (lo + hi);
+                let (cost, rho, it, conv) = solve_at(mid);
+                lambda_mid = mid;
+                cost_mid = cost;
+                rho_mid = rho;
+                it_mid = it;
+                conv_mid = conv;
+                if (cost - spec.delta).abs() < tol {
+                    break;
+                }
+                if cost > spec.delta {
+                    lo = mid; // transporting too much → raise the penalty
+                } else {
+                    hi = mid;
+                }
+            }
+            (lambda_mid, cost_mid, rho_mid, it_mid, conv_mid)
+        }
+    };
+
+    WorstCaseResult {
+        lambda,
+        rho,
+        transport_cost: cost,
+        inner_iters: iters,
+        lambda_iters: evals,
+        converged: conv,
+        secs: t0.elapsed().as_secs_f64(),
+    }
+}

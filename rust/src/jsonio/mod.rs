@@ -1,0 +1,160 @@
+//! Minimal JSON substrate (no `serde` in the offline image).
+//!
+//! A recursive-descent parser + pretty writer covering the JSON subset the
+//! system exchanges: the AOT artifact manifest written by
+//! `python/compile/aot.py` and the experiment result dumps consumed by the
+//! plotting/table scripts. Numbers are kept as `f64` (plus an `i64` fast
+//! path on write); strings support the standard escapes.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::to_string_pretty;
+
+use std::collections::BTreeMap;
+
+/// A JSON value. `BTreeMap` keeps object key order deterministic, which
+/// makes experiment output diffs stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Builder helpers for experiment output.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn nums(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Self {
+        Json::Num(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Self {
+        Json::Num(x as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Self {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Self {
+        Json::Str(s)
+    }
+}
+impl From<bool> for Json {
+    fn from(b: bool) -> Self {
+        Json::Bool(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_manifest_like_document() {
+        let src = r#"{
+            "version": 1,
+            "entries": [
+                {"op": "client_update", "m": 256, "n": 512, "nhist": 1,
+                 "dtype": "f64", "file": "x.hlo.txt", "w": 0},
+                {"op": "server_matvec", "m": 64, "n": 64, "nhist": 64,
+                 "dtype": "f32", "file": "y.hlo.txt", "w": 10}
+            ],
+            "src_hash": "abc123",
+            "ok": true, "nothing": null, "pi": 3.5e-1
+        }"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("version").unwrap().as_usize(), Some(1));
+        let entries = v.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].get("op").unwrap().as_str(), Some("client_update"));
+        assert_eq!(entries[1].get("nhist").unwrap().as_usize(), Some(64));
+        assert_eq!(v.get("pi").unwrap().as_f64(), Some(0.35));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("nothing"), Some(&Json::Null));
+
+        // write → parse is the identity
+        let text = to_string_pretty(&v);
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let v = Json::Str("a\"b\\c\nd\te\u{1F600}".to_string());
+        let text = to_string_pretty(&v);
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{unquoted: 1}").is_err());
+        assert!(parse("[1, 2,]").is_err());
+        assert!(parse("").is_err());
+        assert!(parse("{\"a\": 1} trailing").is_err());
+    }
+
+    #[test]
+    fn parses_nested_and_negative() {
+        let v = parse(r#"[[-1.5e3, 2], {"x": [null]}]"#).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(arr[0].as_arr().unwrap()[0].as_f64(), Some(-1500.0));
+    }
+
+    #[test]
+    fn unicode_escape_sequences() {
+        let v = parse(r#""Aé""#).unwrap();
+        assert_eq!(v.as_str(), Some("Aé"));
+    }
+}

@@ -1,0 +1,116 @@
+//! JSON pretty-printer (2-space indent, stable key order).
+
+use super::Json;
+
+/// Serialize with indentation; integers print without a trailing `.0`.
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, 0, &mut out);
+    out
+}
+
+fn write_value(v: &Json, indent: usize, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Json::Num(x) => write_num(*x, out),
+        Json::Str(s) => write_str(s, out),
+        Json::Arr(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                pad(indent + 1, out);
+                write_value(item, indent + 1, out);
+            }
+            out.push('\n');
+            pad(indent, out);
+            out.push(']');
+        }
+        Json::Obj(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                pad(indent + 1, out);
+                write_str(k, out);
+                out.push_str(": ");
+                write_value(val, indent + 1, out);
+            }
+            out.push('\n');
+            pad(indent, out);
+            out.push('}');
+        }
+    }
+}
+
+fn pad(indent: usize, out: &mut String) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+fn write_num(x: f64, out: &mut String) {
+    if x.is_finite() && x.fract() == 0.0 && x.abs() < 9e15 {
+        out.push_str(&format!("{}", x as i64));
+    } else if x.is_finite() {
+        // Ryu-style shortest repr is what `{}` gives for f64 in Rust.
+        out.push_str(&format!("{x}"));
+    } else {
+        // JSON has no Inf/NaN; encode as null like most tolerant writers.
+        out.push_str("null");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integers_have_no_decimal_point() {
+        assert_eq!(to_string_pretty(&Json::Num(42.0)), "42");
+        assert_eq!(to_string_pretty(&Json::Num(-3.0)), "-3");
+        assert_eq!(to_string_pretty(&Json::Num(0.5)), "0.5");
+    }
+
+    #[test]
+    fn nan_becomes_null() {
+        assert_eq!(to_string_pretty(&Json::Num(f64::NAN)), "null");
+        assert_eq!(to_string_pretty(&Json::Num(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        assert_eq!(to_string_pretty(&Json::Str("\u{1}".into())), "\"\\u0001\"");
+    }
+}

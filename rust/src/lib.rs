@@ -1,0 +1,37 @@
+//! # Federated Sinkhorn
+//!
+//! Production-oriented reproduction of *"Federated Sinkhorn"* (Kulcsar,
+//! Kungurtsev, Korpas, Giaconi, Shoosmith, 2025): entropy-regularized
+//! discrete optimal transport solved by Sinkhorn–Knopp fixed-point
+//! iterations, federated across clients that each own a block of the
+//! marginals and of the Gibbs kernel.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L1/L2** — JAX + Pallas kernels, AOT-lowered at build time to HLO
+//!   text (`artifacts/`), never on the request path.
+//! * **L3** — this crate: the federation coordinator. Clients are OS
+//!   threads, the network is the simulated fabric in [`net`], compute is
+//!   dispatched through [`runtime`] (PJRT executables or the native
+//!   fallback).
+//!
+//! Entry points:
+//! * [`sinkhorn`] — centralized solver + block operations.
+//! * [`coordinator`] — the four federated variants (sync/async ×
+//!   all-to-all/star) plus local-iteration sweeps.
+//! * [`finance`] — the Blanchet–Murthy worst-case-loss application.
+//! * [`experiments`] — drivers regenerating every paper table/figure.
+
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod finance;
+pub mod jsonio;
+pub mod linalg;
+pub mod metrics;
+pub mod net;
+pub mod rng;
+pub mod runtime;
+pub mod sinkhorn;
+pub mod workload;

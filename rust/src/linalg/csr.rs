@@ -1,0 +1,155 @@
+//! Compressed sparse row kernels for the sparsity study (paper §IV-D).
+//!
+//! The paper parameterizes workloads by "off-diagonal block sparsity"
+//! `s ∈ {0, 0.5, 0.9, 1}`. Sparse Gibbs kernels arise when the cost of
+//! far pairs is set to +∞ (K entries underflow to exact 0); CSR lets the
+//! native backend exploit that, and the ablation bench compares it
+//! against dense dispatch.
+
+use super::Mat;
+
+/// CSR matrix (f64).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from dense, dropping entries with `|x| <= drop_tol`.
+    pub fn from_dense(m: &Mat, drop_tol: f64) -> Self {
+        let mut row_ptr = Vec::with_capacity(m.rows() + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.rows() {
+            for (j, &x) in m.row(i).iter().enumerate() {
+                if x.abs() > drop_tol {
+                    col_idx.push(j as u32);
+                    vals.push(x);
+                }
+            }
+            row_ptr.push(vals.len());
+        }
+        Self { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, vals }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Fill fraction (1 = dense).
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// `out = self · x`, multi-RHS; `threads > 1` splits rows.
+    pub fn matmul_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
+        assert_eq!(self.cols, x.rows());
+        assert_eq!(out.rows(), self.rows);
+        assert_eq!(out.cols(), x.cols());
+        let nh = x.cols();
+        out.as_mut_slice().fill(0.0);
+
+        let run = |band: &mut [f64], r0: usize, r1: usize| {
+            for i in r0..r1 {
+                let orow = &mut band[(i - r0) * nh..(i - r0 + 1) * nh];
+                for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                    let k = self.col_idx[idx] as usize;
+                    let v = self.vals[idx];
+                    let xrow = &x.as_slice()[k * nh..(k + 1) * nh];
+                    for (o, &xv) in orow.iter_mut().zip(xrow) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        };
+
+        let threads = threads.max(1).min(self.rows.max(1));
+        if threads == 1 {
+            let rows = self.rows;
+            run(out.as_mut_slice(), 0, rows);
+            return;
+        }
+        let rows_per = self.rows.div_ceil(threads);
+        let mut bands: Vec<(&mut [f64], usize, usize)> = Vec::new();
+        let mut rest: &mut [f64] = out.as_mut_slice();
+        let mut r = 0;
+        while r < self.rows {
+            let take = rows_per.min(self.rows - r);
+            let (band, tail) = rest.split_at_mut(take * nh);
+            bands.push((band, r, r + take));
+            rest = tail;
+            r += take;
+        }
+        crossbeam_utils::thread::scope(|s| {
+            for (band, r0, r1) in bands {
+                s.spawn(move |_| run(band, r0, r1));
+            }
+        })
+        .expect("csr matmul worker panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn density_of_identity() {
+        let mut eye = Mat::zeros(8, 8);
+        for i in 0..8 {
+            eye[(i, i)] = 1.0;
+        }
+        let c = Csr::from_dense(&eye, 0.0);
+        assert_eq!(c.nnz(), 8);
+        assert!((c.density() - 0.125).abs() < 1e-15);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let mut m = Mat::zeros(4, 3);
+        m[(2, 1)] = 5.0;
+        let c = Csr::from_dense(&m, 0.0);
+        let x = Mat::ones(3, 2);
+        let mut out = Mat::zeros(4, 2);
+        c.matmul_into(&x, &mut out, 2);
+        assert_eq!(out[(2, 0)], 5.0);
+        assert_eq!(out[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn threaded_equals_serial() {
+        let mut rng = Rng::seed_from(8);
+        let mut d = Mat::rand_uniform(57, 33, 0.0, 1.0, &mut rng);
+        for i in 0..57 {
+            for j in 0..33 {
+                if rng.uniform() < 0.8 {
+                    d[(i, j)] = 0.0;
+                }
+            }
+        }
+        let c = Csr::from_dense(&d, 0.0);
+        let x = Mat::rand_uniform(33, 4, 0.0, 1.0, &mut rng);
+        let mut a = Mat::zeros(57, 4);
+        let mut b = Mat::zeros(57, 4);
+        c.matmul_into(&x, &mut a, 1);
+        c.matmul_into(&x, &mut b, 3);
+        assert!(a.allclose(&b, 0.0));
+    }
+}

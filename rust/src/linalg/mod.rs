@@ -1,0 +1,111 @@
+//! Dense/sparse linear-algebra substrate.
+//!
+//! The Sinkhorn hot path is `q = A · x` with `A (m×n)` a block of the
+//! Gibbs kernel and `x (n×N)` the scaling state over `N` histograms,
+//! followed by element-wise scaling. We provide:
+//!
+//! * [`Mat`] — dense row-major `f64` matrices with blocked, cache-tiled,
+//!   optionally multi-threaded GEMM (`matmul_into`);
+//! * [`Csr`] — compressed-sparse-row kernels for the paper's off-diagonal
+//!   block-sparsity parameter `s` (§IV-D);
+//! * element-wise helpers (`scale_divide_into`, …) used by the native
+//!   compute backend.
+//!
+//! The XLA artifacts are the default backend; these routines are the
+//! reference implementation, the arbitrary-shape fallback, and the
+//! "CPU-speed compute" stand-in for the paper's §IV-E study.
+
+mod csr;
+mod dense;
+mod ops;
+
+pub use csr::Csr;
+pub use dense::Mat;
+pub use ops::{axpby, l1_diff, scale_divide_into, scale_rows_cols};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &Mat, x: &Mat) -> Mat {
+        let (m, n) = (a.rows(), a.cols());
+        let nh = x.cols();
+        let mut out = Mat::zeros(m, nh);
+        for i in 0..m {
+            for k in 0..n {
+                let aik = a[(i, k)];
+                for j in 0..nh {
+                    out[(i, j)] += aik * x[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive() {
+        let mut rng = Rng::seed_from(1);
+        for &(m, n, nh) in &[(1, 1, 1), (7, 5, 3), (64, 64, 1), (130, 57, 9)] {
+            let a = Mat::rand_uniform(m, n, 0.1, 1.0, &mut rng);
+            let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+            let mut got = Mat::zeros(m, nh);
+            a.matmul_into(&x, &mut got, 1);
+            let want = naive_matmul(&a, &x);
+            assert!(got.allclose(&want, 1e-12), "({m},{n},{nh})");
+        }
+    }
+
+    #[test]
+    fn threaded_matmul_matches_serial() {
+        let mut rng = Rng::seed_from(2);
+        let a = Mat::rand_uniform(213, 187, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(187, 11, 0.1, 1.0, &mut rng);
+        let mut serial = Mat::zeros(213, 11);
+        let mut par = Mat::zeros(213, 11);
+        a.matmul_into(&x, &mut serial, 1);
+        a.matmul_into(&x, &mut par, 4);
+        assert!(par.allclose(&serial, 0.0), "threaded result differs");
+    }
+
+    #[test]
+    fn csr_matmul_matches_dense() {
+        let mut rng = Rng::seed_from(3);
+        let mut dense = Mat::rand_uniform(40, 30, 0.1, 1.0, &mut rng);
+        // Zero ~70% of entries.
+        for i in 0..40 {
+            for j in 0..30 {
+                if rng.uniform() < 0.7 {
+                    dense[(i, j)] = 0.0;
+                }
+            }
+        }
+        let csr = Csr::from_dense(&dense, 0.0);
+        let x = Mat::rand_uniform(30, 5, 0.1, 1.0, &mut rng);
+        let mut got = Mat::zeros(40, 5);
+        csr.matmul_into(&x, &mut got, 1);
+        let want = naive_matmul(&dense, &x);
+        assert!(got.allclose(&want, 1e-12));
+        assert!(csr.nnz() < 40 * 30);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::seed_from(4);
+        let a = Mat::rand_uniform(13, 29, 0.0, 1.0, &mut rng);
+        assert!(a.transpose().transpose().allclose(&a, 0.0));
+    }
+
+    #[test]
+    fn row_block_views() {
+        let mut rng = Rng::seed_from(5);
+        let a = Mat::rand_uniform(12, 6, 0.0, 1.0, &mut rng);
+        let blk = a.row_block(4, 8);
+        assert_eq!(blk.rows(), 4);
+        for i in 0..4 {
+            for j in 0..6 {
+                assert_eq!(blk[(i, j)], a[(4 + i, j)]);
+            }
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Element-wise operations of the Sinkhorn iteration (native backend).
+
+use super::Mat;
+
+/// Damped scaling update: `u = α · t/q + (1−α) · u_old`, writing into
+/// `u_out`. `t` is either a length-`m` vector (broadcast across histogram
+/// columns) or a full `m×N` matrix — pass `t_stride = 0` for broadcast,
+/// `t_stride = N` for per-histogram targets.
+pub fn scale_divide_into(
+    t: &[f64],
+    t_stride: usize,
+    q: &Mat,
+    u_old: &Mat,
+    alpha: f64,
+    u_out: &mut Mat,
+) {
+    let (m, nh) = (q.rows(), q.cols());
+    assert_eq!(u_old.rows(), m);
+    assert_eq!(u_old.cols(), nh);
+    assert_eq!(u_out.rows(), m);
+    assert_eq!(u_out.cols(), nh);
+    let beta = 1.0 - alpha;
+    for i in 0..m {
+        let qrow = q.row(i);
+        let urow = u_old.row(i);
+        let orow = u_out.row_mut(i);
+        if t_stride == 0 {
+            let ti = t[i];
+            for j in 0..nh {
+                orow[j] = alpha * (ti / qrow[j]) + beta * urow[j];
+            }
+        } else {
+            let trow = &t[i * t_stride..(i + 1) * t_stride];
+            for j in 0..nh {
+                orow[j] = alpha * (trow[j] / qrow[j]) + beta * urow[j];
+            }
+        }
+    }
+}
+
+/// `y = a·x + b·y` (vectors).
+pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = a * xi + b * *yi;
+    }
+}
+
+/// Σ|x − y| over slices — the L1 marginal error reduction.
+pub fn l1_diff(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b).abs()).sum()
+}
+
+/// `P = diag(u) · K · diag(v)` — the transport-plan assembly.
+pub fn scale_rows_cols(k: &Mat, u: &[f64], v: &[f64]) -> Mat {
+    assert_eq!(u.len(), k.rows());
+    assert_eq!(v.len(), k.cols());
+    let mut out = k.clone();
+    for i in 0..k.rows() {
+        let ui = u[i];
+        for (o, &vj) in out.row_mut(i).iter_mut().zip(v) {
+            *o *= ui * vj;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_divide_broadcast_and_matrix_targets() {
+        let q = Mat::from_vec(2, 2, vec![2.0, 4.0, 8.0, 16.0]);
+        let u_old = Mat::ones(2, 2);
+        let mut out = Mat::zeros(2, 2);
+        // broadcast target
+        scale_divide_into(&[4.0, 16.0], 0, &q, &u_old, 0.5, &mut out);
+        assert_eq!(out.as_slice(), &[1.5, 1.0, 1.5, 1.0]);
+        // per-histogram target
+        scale_divide_into(&[2.0, 4.0, 8.0, 16.0], 2, &q, &u_old, 1.0, &mut out);
+        assert_eq!(out.as_slice(), &[1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn axpby_works() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpby(2.0, &x, 0.5, &mut y);
+        assert_eq!(y, [7.0, 14.0]);
+    }
+
+    #[test]
+    fn l1_diff_basic() {
+        assert_eq!(l1_diff(&[1.0, -2.0], &[0.0, 1.0]), 4.0);
+    }
+
+    #[test]
+    fn plan_assembly() {
+        let k = Mat::ones(2, 2);
+        let p = scale_rows_cols(&k, &[2.0, 3.0], &[5.0, 7.0]);
+        assert_eq!(p.as_slice(), &[10.0, 14.0, 15.0, 21.0]);
+    }
+}

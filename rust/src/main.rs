@@ -1,0 +1,430 @@
+//! `fedsink` — the Federated Sinkhorn launcher.
+//!
+//! One subcommand per paper experiment (DESIGN.md §5) plus a general
+//! `solve` entry point. Python never runs here: all compute goes through
+//! the AOT artifacts (PJRT) or the native kernels.
+
+use fedsink::cli::{ArgSpec, CliError, Parsed};
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::experiments::{self, Scale};
+use fedsink::net::LatencyModel;
+use fedsink::sinkhorn::StopPolicy;
+use fedsink::workload::CondClass;
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("solve", "run one federated/centralized solve on a synthetic problem"),
+    ("epsilon-study", "Figs 4-5: regularization sweep on the 4x4 example"),
+    ("coherence", "§IV-B1: federated == centralized objective check"),
+    ("timing", "Figs 6/14/18/23/24: comp vs comm per node"),
+    ("vectorized", "§IV-B3 + Figs 7-8: N-histogram vectorization"),
+    ("async-study", "Fig 9/21/22: async non-determinism traces"),
+    ("stepsize", "Table I + Figs 10-12: damping step size sweep"),
+    ("robustness", "Tables II-IV + Fig 13: convergence robustness grids"),
+    ("delays", "Figs 15-17 + Table V: staleness (tau) study"),
+    ("perf-grid", "Tables VII-XXXVI (+ VI): performance grids"),
+    ("local-iters", "App A, Figs 26-28: local iterations w"),
+    ("finance", "§V + Fig 25: Blanchet-Murthy worst-case loss"),
+    ("info", "print artifact manifest / environment info"),
+];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        std::process::exit(2);
+    };
+    let rest = rest.to_vec();
+    let code = match dispatch(cmd, &rest) {
+        Ok(()) => 0,
+        Err(e) => match e.downcast_ref::<CliError>() {
+            Some(CliError::Help(u)) => {
+                println!("{u}");
+                0
+            }
+            _ => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!("usage: fedsink <command> [flags]\n\ncommands:");
+    for (name, help) in COMMANDS {
+        println!("  {name:<16} {help}");
+    }
+    println!("\nglobal env: FEDSINK_SCALE=quick|default|paper, FEDSINK_ARTIFACTS=<dir>");
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
+    match cmd {
+        "solve" => cmd_solve(rest),
+        "epsilon-study" => cmd_epsilon(rest),
+        "coherence" => cmd_coherence(rest),
+        "timing" => cmd_timing(rest),
+        "vectorized" => cmd_vectorized(rest),
+        "async-study" => cmd_async_study(rest),
+        "stepsize" => cmd_stepsize(rest),
+        "robustness" => cmd_robustness(rest),
+        "delays" => cmd_delays(rest),
+        "perf-grid" => cmd_perf_grid(rest),
+        "local-iters" => cmd_local_iters(rest),
+        "finance" => cmd_finance(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command {other:?}")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared flag groups
+// ---------------------------------------------------------------------------
+
+fn common_spec(spec: ArgSpec) -> ArgSpec {
+    spec.opt("scale", "S", "env", "quick|default|paper (default: FEDSINK_SCALE or default)")
+        .opt("backend", "B", "xla", "xla|native")
+        .opt("net", "PROFILE", "lan", "zero|lan|wan latency profile")
+        .opt_req("out", "PATH", "write the JSON result document here")
+        .opt("seed", "U64", "42", "experiment seed")
+}
+
+fn scale_of(p: &Parsed) -> Scale {
+    match p.get("scale") {
+        Some("env") | None => Scale::from_env(),
+        Some(s) => Scale::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown scale {s:?}, using default");
+            Scale::Default
+        }),
+    }
+}
+
+fn backend_of(p: &Parsed) -> anyhow::Result<BackendKind> {
+    BackendKind::parse(p.get("backend").unwrap_or("xla"))
+        .ok_or_else(|| anyhow::anyhow!("bad --backend"))
+}
+
+fn net_of(p: &Parsed) -> anyhow::Result<LatencyModel> {
+    LatencyModel::parse(p.get("net").unwrap_or("lan"))
+        .ok_or_else(|| anyhow::anyhow!("bad --net"))
+}
+
+fn out_of(p: &Parsed) -> Option<String> {
+    p.get("out").map(|s| s.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Commands
+// ---------------------------------------------------------------------------
+
+fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .opt("variant", "V", "sync-a2a", "centralized|sync-a2a|async-a2a|sync-star|async-star")
+            .opt("n", "SIZE", "256", "problem size")
+            .opt("clients", "C", "4", "number of clients")
+            .opt("hists", "N", "1", "target histograms")
+            .opt("eps", "EPS", "0.05", "entropic regularization")
+            .opt("alpha", "A", "1.0", "damping step size")
+            .opt("local-iters", "W", "1", "local iterations per exchange")
+            .opt("threshold", "T", "1e-10", "marginal-error threshold")
+            .opt("max-iters", "K", "1500", "iteration cap")
+            .opt("sparsity", "S", "0.0", "off-diagonal block sparsity")
+            .opt("cond", "CLASS", "well", "well|medium|ill"),
+    );
+    let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
+    let variant = Variant::parse(p.get("variant").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
+    let cond = CondClass::parse(p.get("cond").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("bad --cond"))?;
+    let n = p.get_usize("n")?;
+    let clients = p.get_usize("clients")?;
+    let problem = experiments::build_problem(
+        n,
+        p.get_usize("hists")?,
+        p.get_f64("eps")?,
+        p.get_f64("sparsity")?,
+        clients.max(2),
+        cond,
+        p.get_u64("seed")?,
+    );
+    let cfg = SolveConfig {
+        variant,
+        backend: backend_of(&p)?,
+        clients,
+        alpha: p.get_f64("alpha")?,
+        local_iters: p.get_usize("local-iters")?,
+        net: net_of(&p)?,
+        seed: p.get_u64("seed")?,
+        ..Default::default()
+    };
+    let policy = StopPolicy {
+        threshold: p.get_f64("threshold")?,
+        max_iters: p.get_usize("max-iters")?,
+        ..Default::default()
+    };
+    let out = fedsink::coordinator::run_federated(&problem, &cfg, policy, false);
+    println!(
+        "{}: n={n} c={clients} -> stop={:?} iters={} err={:.3e} in {:.3}s",
+        variant.name(),
+        out.stop,
+        out.iterations,
+        out.node_stats.first().map(|s| s.final_err).unwrap_or(f64::NAN),
+        out.secs
+    );
+    for s in &out.node_stats {
+        println!(
+            "  node {:>2} ({:<7}) comp={:.3}s comm={:.3}s iters={}",
+            s.id,
+            s.role,
+            s.comp_secs(),
+            s.comm_secs(),
+            s.iterations
+        );
+    }
+    Ok(())
+}
+
+fn cmd_epsilon(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .opt("epsilons", "LIST", "5e-1,1e-1,5e-2,2e-2,1e-2,1e-3", "comma list of epsilon values")
+            .opt("max-iters", "K", "2000000", "iteration cap"),
+    );
+    let p = spec.parse("epsilon-study", args).map_err(anyhow::Error::new)?;
+    let a = experiments::epsilon::EpsilonArgs {
+        epsilons: p.get_list("epsilons", |s| s.parse().ok())?,
+        max_iters: p.get_usize("max-iters")?,
+        out: out_of(&p),
+    };
+    experiments::epsilon::run(&a)?;
+    Ok(())
+}
+
+fn cmd_coherence(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(ArgSpec::new().opt("n", "SIZE", "256", "problem size"));
+    let p = spec.parse("coherence", args).map_err(anyhow::Error::new)?;
+    let a = experiments::coherence::CoherenceArgs {
+        n: p.get_usize("n")?,
+        eps: 0.05,
+        backend: backend_of(&p)?,
+        out: out_of(&p),
+    };
+    experiments::coherence::run(&a)?;
+    Ok(())
+}
+
+fn cmd_timing(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .opt("variant", "V", "sync-a2a", "federated variant for c > 1")
+            .opt("n", "SIZE", "0", "problem size (0 = scale default)")
+            .opt("iters", "K", "0", "fixed iteration budget (0 = scale default)")
+            .opt("nodes", "LIST", "", "node counts (empty = scale default)"),
+    );
+    let p = spec.parse("timing", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::timing::TimingArgs::at_scale(scale_of(&p));
+    a.variant = Variant::parse(p.get("variant").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
+    a.backend = backend_of(&p)?;
+    a.net = net_of(&p)?;
+    a.out = out_of(&p);
+    if p.get_usize("n")? > 0 {
+        a.n = p.get_usize("n")?;
+    }
+    if p.get_usize("iters")? > 0 {
+        a.iters = p.get_usize("iters")?;
+    }
+    if p.get("nodes").map(|s| !s.is_empty()).unwrap_or(false) {
+        a.nodes = p.get_list("nodes", |s| s.parse().ok())?;
+    }
+    experiments::timing::run(&a)?;
+    Ok(())
+}
+
+fn cmd_vectorized(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new().switch("serial-compare", "also run the §IV-B3 serial-vs-vectorized probe"),
+    );
+    let p = spec.parse("vectorized", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::vectorized::VectorizedArgs::at_scale(scale_of(&p));
+    a.backend = backend_of(&p)?;
+    a.net = net_of(&p)?;
+    a.out = out_of(&p);
+    if !p.has("serial-compare") {
+        a.serial_compare = None;
+    }
+    experiments::vectorized::run(&a)?;
+    Ok(())
+}
+
+fn cmd_async_study(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .opt("runs", "R", "0", "number of repeated runs (0 = scale default)")
+            .opt("clients", "C", "2", "clients")
+            .opt("alpha", "A", "1.0", "damping step size"),
+    );
+    let p = spec.parse("async-study", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::async_study::AsyncStudyArgs::at_scale(scale_of(&p));
+    a.backend = backend_of(&p)?;
+    a.net = net_of(&p)?;
+    a.out = out_of(&p);
+    a.clients = p.get_usize("clients")?;
+    a.alpha = p.get_f64("alpha")?;
+    if p.get_usize("runs")? > 0 {
+        a.runs = p.get_usize("runs")?;
+    }
+    experiments::async_study::run(&a)?;
+    Ok(())
+}
+
+fn cmd_stepsize(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new().opt("alphas", "LIST", "0.1,0.25,0.5", "damping values to sweep"),
+    );
+    let p = spec.parse("stepsize", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::stepsize::StepsizeArgs::at_scale(scale_of(&p));
+    a.alphas = p.get_list("alphas", |s| s.parse().ok())?;
+    a.backend = backend_of(&p)?;
+    a.out = out_of(&p);
+    experiments::stepsize::run(&a)?;
+    Ok(())
+}
+
+fn cmd_robustness(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .switch("sweep-alpha", "add the Fig 13 alpha sweep")
+            .opt("runs", "R", "0", "runs per grid cell (0 = scale default)"),
+    );
+    let p = spec.parse("robustness", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::robustness::RobustnessArgs::at_scale(scale_of(&p));
+    a.backend = backend_of(&p)?;
+    a.out = out_of(&p);
+    if p.get_usize("runs")? > 0 {
+        a.runs = p.get_usize("runs")?;
+    }
+    if p.has("sweep-alpha") {
+        a.sweep_alpha = Some(vec![0.001, 0.005, 0.05, 0.2, 0.35, 0.5]);
+    }
+    experiments::robustness::run(&a)?;
+    Ok(())
+}
+
+fn cmd_delays(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .opt("sims", "S", "0", "simulations per node count (0 = scale default)")
+            .opt("iters", "T", "500", "fixed iterations per simulation"),
+    );
+    let p = spec.parse("delays", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::delays::DelaysArgs::at_scale(scale_of(&p));
+    a.backend = backend_of(&p)?;
+    a.net = net_of(&p)?;
+    a.out = out_of(&p);
+    a.iters = p.get_usize("iters")?;
+    if p.get_usize("sims")? > 0 {
+        a.sims = p.get_usize("sims")?;
+    }
+    experiments::delays::run(&a)?;
+    Ok(())
+}
+
+fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .opt("variant", "V", "all", "all or one of the solver variants")
+            .opt("sizes", "LIST", "", "problem sizes (empty = scale default)")
+            .opt("hists", "LIST", "", "histogram counts (empty = scale default)")
+            .opt("nodes", "LIST", "", "node counts (empty = scale default)")
+            .switch("chi2", "add the Table VI chi-square analysis"),
+    );
+    let p = spec.parse("perf-grid", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::perf_grid::PerfGridArgs::at_scale(scale_of(&p));
+    a.backend = backend_of(&p)?;
+    a.net = net_of(&p)?;
+    a.out = out_of(&p);
+    a.chi2 = p.has("chi2");
+    for (flag, field) in [("sizes", 0usize), ("hists", 1), ("nodes", 2)] {
+        if p.get(flag).map(|s| !s.is_empty()).unwrap_or(false) {
+            let v: Vec<usize> = p.get_list(flag, |s| s.parse().ok())?;
+            match field {
+                0 => a.sizes = v,
+                1 => a.hists = v,
+                _ => a.nodes = v,
+            }
+        }
+    }
+    if let Some(v) = p.get("variant") {
+        if v != "all" {
+            a.variants =
+                vec![Variant::parse(v).ok_or_else(|| anyhow::anyhow!("bad --variant"))?];
+        }
+    }
+    experiments::perf_grid::run(&a)?;
+    Ok(())
+}
+
+fn cmd_local_iters(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new().opt("ws", "LIST", "1,2,4,8", "local-iteration counts to compare"),
+    );
+    let p = spec.parse("local-iters", args).map_err(anyhow::Error::new)?;
+    let mut a = experiments::local_iters::LocalItersArgs::at_scale(scale_of(&p));
+    a.ws = p.get_list("ws", |s| s.parse().ok())?;
+    a.backend = backend_of(&p)?;
+    a.out = out_of(&p);
+    experiments::local_iters::run(&a)?;
+    Ok(())
+}
+
+fn cmd_finance(args: &[String]) -> anyhow::Result<()> {
+    let spec = common_spec(
+        ArgSpec::new()
+            .switch("paper-example", "reproduce the §V-B4 3-asset example + Fig 25")
+            .opt("scenarios", "S", "64", "synthetic scenario count")
+            .opt("assets", "A", "12", "synthetic asset count")
+            .opt("clients", "C", "4", "clients for the synthetic run"),
+    );
+    let p = spec.parse("finance", args).map_err(anyhow::Error::new)?;
+    let a = experiments::finance_exp::FinanceArgs {
+        paper_example: p.has("paper-example"),
+        scenarios: p.get_usize("scenarios")?,
+        assets: p.get_usize("assets")?,
+        clients: p.get_usize("clients")?,
+        backend: backend_of(&p)?,
+        out: out_of(&p),
+    };
+    experiments::finance_exp::run(&a)?;
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new();
+    let _ = spec.parse("info", args).map_err(anyhow::Error::new)?;
+    let dir = fedsink::config::default_artifacts_dir();
+    println!("artifacts dir: {dir}");
+    match fedsink::runtime::Manifest::load(&dir) {
+        Ok(man) => {
+            println!("manifest grid: {} ({} entries)", man.grid, man.entries.len());
+            let mut by_op: std::collections::BTreeMap<&str, usize> = Default::default();
+            for e in &man.entries {
+                *by_op.entry(e.op.as_str()).or_default() += 1;
+            }
+            for (op, count) in by_op {
+                println!("  {op:<22} {count}");
+            }
+        }
+        Err(e) => println!("manifest: unavailable ({e:#}); run `make artifacts`"),
+    }
+    println!("scale: {:?} (FEDSINK_SCALE)", Scale::from_env());
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Timing, statistics and experiment-record substrate.
+//!
+//! The paper's evaluation splits every run into **computation time** vs
+//! **communication time** per node (Figs 6, 8, 14, 18, 23, 24; every
+//! appendix table). [`SplitTimer`] accumulates those two buckets without
+//! allocation in the hot loop; [`Summary`] provides the mean/std/median
+//! reductions; [`Histogram`] provides the KDE-style binned densities of
+//! the delay study (Figs 16–17); and chi-square machinery backs Table VI.
+
+mod stats;
+mod timer;
+
+pub use stats::{chi2_sf, chi2_stat, Histogram, Summary};
+pub use timer::{Clock, SplitTimer};
+
+use crate::jsonio::Json;
+
+/// Outcome of one solver run — the row unit of every appendix table.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub variant: String,
+    pub n: usize,
+    pub clients: usize,
+    pub hists: usize,
+    pub sparsity: f64,
+    pub cond: String,
+    pub iterations: usize,
+    pub converged: bool,
+    pub comp_secs: f64,
+    pub comm_secs: f64,
+    pub total_secs: f64,
+    pub final_err: f64,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", self.variant.as_str().into()),
+            ("n", self.n.into()),
+            ("clients", self.clients.into()),
+            ("nhist", self.hists.into()),
+            ("sparsity", self.sparsity.into()),
+            ("cond", self.cond.as_str().into()),
+            ("iterations", self.iterations.into()),
+            ("converged", self.converged.into()),
+            ("comp_secs", self.comp_secs.into()),
+            ("comm_secs", self.comm_secs.into()),
+            ("total_secs", self.total_secs.into()),
+            ("final_err", self.final_err.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_series() {
+        let s = Summary::of(&[2.0, 2.0, 2.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.median, 2.0);
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert!((s.std - (5.0f64 / 3.0).sqrt()).abs() < 1e-12); // sample std
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn histogram_bins_cover_range() {
+        let h = Histogram::of(&[1.0, 2.0, 3.0, 50.0], 5);
+        assert_eq!(h.counts.iter().sum::<usize>(), 4);
+        assert!(h.density().iter().all(|&d| d >= 0.0));
+    }
+
+    #[test]
+    fn chi2_uniform_has_small_statistic() {
+        // Perfectly matching observed/expected → statistic 0, p = 1.
+        let obs = [10.0, 10.0, 10.0];
+        let exp = [10.0, 10.0, 10.0];
+        let x2 = chi2_stat(&obs, &exp);
+        assert_eq!(x2, 0.0);
+        assert!((chi2_sf(x2, 2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chi2_sf_matches_table_values() {
+        // χ²(df=1): P(X > 3.841) ≈ 0.05
+        assert!((chi2_sf(3.841, 1) - 0.05).abs() < 2e-3);
+        // χ²(df=2): P(X > 5.991) ≈ 0.05
+        assert!((chi2_sf(5.991, 2) - 0.05).abs() < 2e-3);
+        // χ²(df=10): P(X > 18.307) ≈ 0.05
+        assert!((chi2_sf(18.307, 10) - 0.05).abs() < 2e-3);
+    }
+
+    #[test]
+    fn split_timer_buckets_accumulate() {
+        let mut t = SplitTimer::new();
+        t.add_comp(0.5);
+        t.add_comm(0.25);
+        t.add_comp(0.5);
+        assert_eq!(t.comp_secs(), 1.0);
+        assert_eq!(t.comm_secs(), 0.25);
+        assert_eq!(t.total_secs(), 1.25);
+    }
+}

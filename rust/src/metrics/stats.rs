@@ -1,0 +1,190 @@
+//! Summary statistics, histograms, and the χ² test of Table VI.
+
+/// Mean / sample-std / median / min / max of a series.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            median,
+            min: sorted[0],
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Equal-width histogram — the discrete stand-in for the paper's KDE
+/// plots (Figs 16–17): `density()` normalizes to unit area.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<usize>,
+}
+
+impl Histogram {
+    pub fn of(xs: &[f64], bins: usize) -> Histogram {
+        assert!(bins > 0);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let (lo, hi) = if xs.is_empty() || lo == hi {
+            (lo.min(0.0), lo.min(0.0) + 1.0)
+        } else {
+            (lo, hi)
+        };
+        let mut counts = vec![0usize; bins];
+        let w = (hi - lo) / bins as f64;
+        for &x in xs {
+            let idx = (((x - lo) / w) as usize).min(bins - 1);
+            counts[idx] += 1;
+        }
+        Histogram { lo, hi, counts }
+    }
+
+    /// Per-bin probability density (integrates to 1).
+    pub fn density(&self) -> Vec<f64> {
+        let total: usize = self.counts.iter().sum();
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        if total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / (total as f64 * w))
+            .collect()
+    }
+
+    /// Bin centers (for table/plot output).
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+}
+
+/// Pearson χ² statistic over observed/expected cell counts.
+pub fn chi2_stat(observed: &[f64], expected: &[f64]) -> f64 {
+    assert_eq!(observed.len(), expected.len());
+    observed
+        .iter()
+        .zip(expected)
+        .filter(|(_, &e)| e > 0.0)
+        .map(|(&o, &e)| (o - e) * (o - e) / e)
+        .sum()
+}
+
+/// Survival function `P(χ²_df > x)` via the regularized upper incomplete
+/// gamma `Q(df/2, x/2)` (continued fraction / series, Numerical-Recipes
+/// style). Accurate to ~1e-10 for the df ranges the experiments use.
+pub fn chi2_sf(x: f64, df: usize) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    gamma_q(df as f64 / 2.0, x / 2.0)
+}
+
+fn gamma_q(a: f64, x: f64) -> f64 {
+    if x < a + 1.0 {
+        1.0 - gamma_p_series(a, x)
+    } else {
+        gamma_q_contfrac(a, x)
+    }
+}
+
+fn ln_gamma(z: f64) -> f64 {
+    // Lanczos approximation (g = 7, n = 9).
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if z < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * z).sin()).ln() - ln_gamma(1.0 - z);
+    }
+    let z = z - 1.0;
+    let mut x = COEF[0];
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        x += c / (z + i as f64);
+    }
+    let t = z + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (z + 0.5) * t.ln() - t + x.ln()
+}
+
+fn gamma_p_series(a: f64, x: f64) -> f64 {
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * 1e-15 {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+}
+
+fn gamma_q_contfrac(a: f64, x: f64) -> f64 {
+    let tiny = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / tiny;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = b + an / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}

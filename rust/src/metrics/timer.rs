@@ -1,0 +1,79 @@
+//! Computation/communication split timing.
+
+use std::time::Instant;
+
+/// Monotonic clock wrapper (mockable origin for tests).
+#[derive(Clone, Copy, Debug)]
+pub struct Clock {
+    origin: Instant,
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self { origin: Instant::now() }
+    }
+
+    /// Seconds since this clock was created.
+    #[inline]
+    pub fn now(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates the paper's two time buckets per node. The hot loop calls
+/// `comp(|| …)` / `comm(|| …)`; no allocation, two float adds per call.
+#[derive(Clone, Debug, Default)]
+pub struct SplitTimer {
+    comp: f64,
+    comm: f64,
+}
+
+impl SplitTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, attributing its wall time to the computation bucket.
+    #[inline]
+    pub fn comp<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.comp += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Run `f`, attributing its wall time to the communication bucket.
+    #[inline]
+    pub fn comm<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.comm += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    pub fn add_comp(&mut self, secs: f64) {
+        self.comp += secs;
+    }
+
+    pub fn add_comm(&mut self, secs: f64) {
+        self.comm += secs;
+    }
+
+    pub fn comp_secs(&self) -> f64 {
+        self.comp
+    }
+
+    pub fn comm_secs(&self) -> f64 {
+        self.comm
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.comp + self.comm
+    }
+}

@@ -1,0 +1,120 @@
+//! MPI-style collectives on point-to-point sends.
+//!
+//! The sync protocols use blocking AllGather (Alg. 1) and Gather/Scatter
+//! (Alg. 3); tags carry the protocol round so consecutive collectives
+//! cannot cross. Each collective is "flat" (everyone ↔ everyone / root):
+//! with ≤ 8 nodes the paper's clusters never justify tree algorithms,
+//! and flat keeps per-node comm time directly interpretable.
+
+use super::{Endpoint, TagKind};
+
+/// AllGather: contribute `mine`, get back every node's part (indexed by
+/// node id; `parts[me]` is a copy of `mine`).
+pub fn allgather(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    mine: &[f64],
+    iter: u64,
+) -> Vec<Vec<f64>> {
+    let me = ep.id();
+    let c = ep.nodes();
+    for dst in 0..c {
+        if dst != me {
+            ep.send(dst, kind, round, mine.to_vec(), iter);
+        }
+    }
+    let mut parts: Vec<Vec<f64>> = vec![Vec::new(); c];
+    parts[me] = mine.to_vec();
+    for src in 0..c {
+        if src != me {
+            parts[src] = ep.recv_blocking(src, kind, round).payload;
+        }
+    }
+    parts
+}
+
+/// Gather to `root`: returns `Some(parts)` at the root, `None` elsewhere.
+pub fn gather(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    mine: &[f64],
+    iter: u64,
+) -> Option<Vec<Vec<f64>>> {
+    let me = ep.id();
+    if me == root {
+        let mut parts: Vec<Vec<f64>> = vec![Vec::new(); ep.nodes()];
+        parts[me] = mine.to_vec();
+        for src in 0..ep.nodes() {
+            if src != root {
+                parts[src] = ep.recv_blocking(src, kind, round).payload;
+            }
+        }
+        Some(parts)
+    } else {
+        ep.send(root, kind, round, mine.to_vec(), iter);
+        None
+    }
+}
+
+/// Scatter from `root`: `full` (root only) is split into equal
+/// `chunk`-sized slices by node id; every node returns its slice.
+pub fn scatter(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    full: Option<&[f64]>,
+    chunk: usize,
+    iter: u64,
+) -> Vec<f64> {
+    let me = ep.id();
+    if me == root {
+        let full = full.expect("root must provide the full buffer");
+        assert_eq!(full.len(), chunk * ep.nodes(), "scatter size mismatch");
+        for dst in 0..ep.nodes() {
+            if dst != root {
+                ep.send(
+                    dst,
+                    kind,
+                    round,
+                    full[dst * chunk..(dst + 1) * chunk].to_vec(),
+                    iter,
+                );
+            }
+        }
+        full[me * chunk..(me + 1) * chunk].to_vec()
+    } else {
+        ep.recv_blocking(root, kind, round).payload
+    }
+}
+
+/// Broadcast from `root`.
+pub fn bcast(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    data: Option<&[f64]>,
+    iter: u64,
+) -> Vec<f64> {
+    let me = ep.id();
+    if me == root {
+        let data = data.expect("root must provide data");
+        for dst in 0..ep.nodes() {
+            if dst != root {
+                ep.send(dst, kind, round, data.to_vec(), iter);
+            }
+        }
+        data.to_vec()
+    } else {
+        ep.recv_blocking(root, kind, round).payload
+    }
+}
+
+/// Barrier: an empty AllGather on the control tag.
+pub fn barrier(ep: &Endpoint, round: u64) {
+    let _ = allgather(ep, TagKind::Ctl, round, &[], 0);
+}

@@ -1,0 +1,185 @@
+//! Mailbox fabric: per-node inboxes with delivery deadlines.
+
+use super::LatencyModel;
+use crate::rng::{child_seed, Rng};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Message kinds — the Sinkhorn protocol only exchanges the two scaling
+/// vectors plus small control payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TagKind {
+    /// u-slice broadcast.
+    U,
+    /// v-slice broadcast.
+    V,
+    /// Control (barriers, convergence votes, scatter/gather frames).
+    Ctl,
+}
+
+/// One in-flight message.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub src: usize,
+    pub kind: TagKind,
+    /// Protocol round or collective id — keeps rounds from crossing.
+    pub tag: u64,
+    pub payload: Vec<f64>,
+    /// Sender's local iteration when it sent (staleness accounting).
+    pub sent_iter: u64,
+    /// Wall-clock deadline before which the receiver may not observe it.
+    deliver_at: Instant,
+}
+
+#[derive(Default)]
+struct Inbox {
+    queue: Mutex<Vec<Message>>,
+    signal: Condvar,
+}
+
+/// The shared fabric: `nodes` inboxes + the latency model.
+pub struct SimNet {
+    inboxes: Vec<Inbox>,
+    latency: LatencyModel,
+    seed: u64,
+    /// Total payload bytes pushed through the fabric (diagnostics).
+    bytes_sent: Mutex<u64>,
+}
+
+impl SimNet {
+    pub fn new(nodes: usize, latency: LatencyModel, seed: u64) -> Self {
+        Self {
+            inboxes: (0..nodes).map(|_| Inbox::default()).collect(),
+            latency,
+            seed,
+            bytes_sent: Mutex::new(0),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        *self.bytes_sent.lock().unwrap()
+    }
+
+    /// Create the handle node `id` uses to talk to the fabric. Each
+    /// endpoint carries its own jitter RNG stream so runs are
+    /// deterministic given (seed, thread schedule).
+    pub fn endpoint(self: &std::sync::Arc<Self>, id: usize) -> Endpoint {
+        assert!(id < self.nodes());
+        Endpoint {
+            net: self.clone(),
+            id,
+            rng: Mutex::new(Rng::seed_from(child_seed(self.seed, id as u64))),
+        }
+    }
+}
+
+/// A node's handle to the fabric.
+pub struct Endpoint {
+    net: std::sync::Arc<SimNet>,
+    id: usize,
+    rng: Mutex<Rng>,
+}
+
+impl Endpoint {
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.net.nodes()
+    }
+
+    /// Non-blocking send (MPI `Isend`): stamps a delivery deadline from
+    /// the latency model and enqueues at the destination.
+    pub fn send(&self, dst: usize, kind: TagKind, tag: u64, payload: Vec<f64>, sent_iter: u64) {
+        let bytes = payload.len() * std::mem::size_of::<f64>() + 64; // + header
+        let delay = {
+            let mut rng = self.rng.lock().unwrap();
+            self.net.latency.delay_secs(bytes, &mut rng)
+        };
+        *self.net.bytes_sent.lock().unwrap() += bytes as u64;
+        let msg = Message {
+            src: self.id,
+            kind,
+            tag,
+            payload,
+            sent_iter,
+            deliver_at: Instant::now() + Duration::from_secs_f64(delay),
+        };
+        let inbox = &self.net.inboxes[dst];
+        inbox.queue.lock().unwrap().push(msg);
+        inbox.signal.notify_all();
+    }
+
+    /// Blocking receive of the first matching message (MPI `Recv`):
+    /// blocks until a `(src, kind, tag)` match exists *and* its delivery
+    /// deadline has passed — the deadline sleep is what makes simulated
+    /// network time real wall time.
+    pub fn recv_blocking(&self, src: usize, kind: TagKind, tag: u64) -> Message {
+        let inbox = &self.net.inboxes[self.id];
+        let mut queue = inbox.queue.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let mut earliest: Option<Instant> = None;
+            let mut take_idx = None;
+            for (i, m) in queue.iter().enumerate() {
+                if m.src == src && m.kind == kind && m.tag == tag {
+                    if m.deliver_at <= now {
+                        take_idx = Some(i);
+                        break;
+                    }
+                    earliest = Some(match earliest {
+                        Some(e) => e.min(m.deliver_at),
+                        None => m.deliver_at,
+                    });
+                }
+            }
+            if let Some(i) = take_idx {
+                return queue.swap_remove(i);
+            }
+            // Sleep until the earliest matching deadline, or until a new
+            // message arrives.
+            let wait = earliest
+                .map(|e| e.saturating_duration_since(now))
+                .unwrap_or(Duration::from_millis(50));
+            let (q, _timeout) = inbox
+                .signal
+                .wait_timeout(queue, wait.max(Duration::from_micros(20)))
+                .unwrap();
+            queue = q;
+        }
+    }
+
+    /// Latest-wins non-blocking receive (async protocol): drains every
+    /// *deliverable* `(src, kind, tag)` match and returns the one with
+    /// the highest `sent_iter`, or `None` if nothing has arrived yet.
+    pub fn try_recv_latest(&self, src: usize, kind: TagKind, tag: u64) -> Option<Message> {
+        let inbox = &self.net.inboxes[self.id];
+        let mut queue = inbox.queue.lock().unwrap();
+        let now = Instant::now();
+        let mut best: Option<Message> = None;
+        let mut i = 0;
+        while i < queue.len() {
+            let m = &queue[i];
+            if m.src == src && m.kind == kind && m.tag == tag && m.deliver_at <= now {
+                let m = queue.swap_remove(i);
+                best = match best {
+                    Some(b) if b.sent_iter >= m.sent_iter => Some(b),
+                    _ => Some(m),
+                };
+            } else {
+                i += 1;
+            }
+        }
+        best
+    }
+
+    /// Count of queued (not necessarily deliverable) messages — tests.
+    pub fn pending(&self) -> usize {
+        self.net.inboxes[self.id].queue.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,109 @@
+//! Per-message delivery-delay model.
+
+use crate::rng::Rng;
+
+/// Latency model: `delay = (base + bytes · per_byte) · jitter (· spike)`.
+///
+/// `jitter` is lognormal(0, sigma) — multiplicative, median 1 — matching
+/// the heavy-tailed comm-time variability the paper reports (§IV-B4:
+/// "the network's state at time of execution can have a non-deterministic
+/// impact"); `spike_prob`/`spike_mult` model the rare pathological
+/// transfers visible in their Fig 24 outlier.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyModel {
+    pub base_secs: f64,
+    pub per_byte_secs: f64,
+    pub jitter_sigma: f64,
+    pub spike_prob: f64,
+    pub spike_mult: f64,
+}
+
+impl LatencyModel {
+    /// No delay at all — unit tests and upper-bound runs.
+    pub fn zero() -> Self {
+        Self {
+            base_secs: 0.0,
+            per_byte_secs: 0.0,
+            jitter_sigma: 0.0,
+            spike_prob: 0.0,
+            spike_mult: 1.0,
+        }
+    }
+
+    /// Cluster-interconnect profile calibrated so the comm/comp balance
+    /// at the default scaled problem sizes mirrors the paper's Fig 6:
+    /// ~100 µs base per message + ~10 ns/byte (≈ 0.8 Gbit/s effective),
+    /// 25% lognormal jitter, 1% chance of a 8× spike.
+    pub fn lan() -> Self {
+        Self {
+            base_secs: 100e-6,
+            per_byte_secs: 10e-9,
+            jitter_sigma: 0.25,
+            spike_prob: 0.01,
+            spike_mult: 8.0,
+        }
+    }
+
+    /// Wide-area profile (geo-distributed offices, paper §V motivation):
+    /// 5 ms base, ~50 ns/byte, heavier jitter and spikes.
+    pub fn wan() -> Self {
+        Self {
+            base_secs: 5e-3,
+            per_byte_secs: 50e-9,
+            jitter_sigma: 0.5,
+            spike_prob: 0.02,
+            spike_mult: 10.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "zero" => Some(Self::zero()),
+            "lan" => Some(Self::lan()),
+            "wan" => Some(Self::wan()),
+            _ => None,
+        }
+    }
+
+    /// Sample the delivery delay for a `bytes`-sized message.
+    pub fn delay_secs(&self, bytes: usize, rng: &mut Rng) -> f64 {
+        let mut d = self.base_secs + bytes as f64 * self.per_byte_secs;
+        if self.jitter_sigma > 0.0 {
+            d *= rng.lognormal(0.0, self.jitter_sigma);
+        }
+        if self.spike_prob > 0.0 && rng.uniform() < self.spike_prob {
+            d *= self.spike_mult;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_model_is_zero() {
+        let mut rng = Rng::seed_from(1);
+        assert_eq!(LatencyModel::zero().delay_secs(1 << 20, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn delay_grows_with_bytes() {
+        let mut rng = Rng::seed_from(2);
+        let m = LatencyModel { jitter_sigma: 0.0, spike_prob: 0.0, ..LatencyModel::lan() };
+        let small = m.delay_secs(8, &mut rng);
+        let big = m.delay_secs(8 << 20, &mut rng);
+        assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn jitter_median_is_about_one() {
+        let mut rng = Rng::seed_from(3);
+        let m = LatencyModel { base_secs: 1.0, per_byte_secs: 0.0, jitter_sigma: 0.25, spike_prob: 0.0, spike_mult: 1.0 };
+        let mut ds: Vec<f64> = (0..4001).map(|_| m.delay_secs(0, &mut rng)).collect();
+        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = ds[2000];
+        assert!((median - 1.0).abs() < 0.05, "median {median}");
+    }
+}

@@ -1,0 +1,201 @@
+//! Simulated message-passing fabric — the MPI-cluster stand-in.
+//!
+//! The paper runs over mpi4py on a GPU cluster; the algorithms only
+//! observe message *ordering, staleness (τ) and timing*, so the
+//! substitution (DESIGN.md §3) is an in-process fabric that reproduces
+//! exactly those observables:
+//!
+//! * [`LatencyModel`] — per-message delivery delay: base + per-byte +
+//!   lognormal jitter + rare spikes (the "network state" effects of
+//!   §IV-B4/§IV-C4). Delays are enforced by *delivery deadlines*; blocked
+//!   receivers sleep until the deadline so comm time is real wall time.
+//! * [`SimNet`]/[`Endpoint`] — per-node mailboxes with blocking
+//!   (synchronous MPI `send/recv`) and latest-wins non-blocking
+//!   (`Isend`/`Irecv`) receive modes.
+//! * [`collectives`] — AllGather / Gather / Scatter / Broadcast / Barrier
+//!   built on point-to-point sends, like MPI's tree-free reference
+//!   algorithms.
+//! * [`DelayTracker`] — the τ staleness counter of §IV-C4 (Fig 15).
+
+mod collectives;
+mod fabric;
+mod latency;
+
+pub use collectives::{allgather, barrier, bcast, gather, scatter};
+pub use fabric::{Endpoint, Message, SimNet, TagKind};
+pub use latency::LatencyModel;
+
+use std::sync::Mutex;
+
+/// Records message staleness τ (receiver-side local-iteration lag) for
+/// the delay study (Figs 15–17, Table V). Thread-safe: every client
+/// thread pushes into the shared tracker.
+#[derive(Debug, Default)]
+pub struct DelayTracker {
+    taus: Mutex<Vec<u64>>,
+}
+
+impl DelayTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one received message: sender iteration vs receiver iteration.
+    pub fn record(&self, sender_iter: u64, receiver_iter: u64) {
+        let tau = receiver_iter.saturating_sub(sender_iter);
+        self.taus.lock().unwrap().push(tau);
+    }
+
+    pub fn taus(&self) -> Vec<u64> {
+        self.taus.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.taus.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn point_to_point_delivers_payload() {
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 1));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let t = std::thread::spawn(move || {
+            let msg = b.recv_blocking(0, TagKind::U, 0);
+            msg.payload
+        });
+        a.send(1, TagKind::U, 0, vec![1.0, 2.0, 3.0], 0);
+        assert_eq!(t.join().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn latency_deadline_is_enforced() {
+        let lat = LatencyModel { base_secs: 0.02, ..LatencyModel::zero() };
+        let net = Arc::new(SimNet::new(2, lat, 2));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let t0 = std::time::Instant::now();
+        a.send(1, TagKind::U, 0, vec![1.0], 0);
+        let _ = b.recv_blocking(0, TagKind::U, 0);
+        assert!(t0.elapsed().as_secs_f64() >= 0.018, "deadline ignored");
+    }
+
+    #[test]
+    fn latest_wins_drains_backlog() {
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 3));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        for k in 0..5 {
+            a.send(1, TagKind::V, 7, vec![k as f64], k);
+        }
+        // Allow zero-latency messages to land.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let got = b.try_recv_latest(0, TagKind::V, 7).expect("message");
+        assert_eq!(got.payload, vec![4.0]);
+        assert_eq!(got.sent_iter, 4);
+        // Backlog was drained.
+        assert!(b.try_recv_latest(0, TagKind::V, 7).is_none());
+    }
+
+    #[test]
+    fn tags_and_rounds_do_not_cross() {
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 4));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send(1, TagKind::U, 1, vec![10.0], 0);
+        a.send(1, TagKind::V, 1, vec![20.0], 0);
+        a.send(1, TagKind::U, 2, vec![30.0], 0);
+        let v = b.recv_blocking(0, TagKind::V, 1);
+        let u2 = b.recv_blocking(0, TagKind::U, 2);
+        let u1 = b.recv_blocking(0, TagKind::U, 1);
+        assert_eq!(v.payload, vec![20.0]);
+        assert_eq!(u2.payload, vec![30.0]);
+        assert_eq!(u1.payload, vec![10.0]);
+    }
+
+    #[test]
+    fn delay_tracker_clamps_at_zero() {
+        let d = DelayTracker::new();
+        d.record(5, 9);
+        d.record(9, 5); // receiver behind sender → 0
+        assert_eq!(d.taus(), vec![4, 0]);
+    }
+
+    #[test]
+    fn allgather_assembles_all_parts() {
+        let net = Arc::new(SimNet::new(3, LatencyModel::zero(), 5));
+        let mut handles = Vec::new();
+        for me in 0..3 {
+            let net = net.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = net.endpoint(me);
+                let mine = vec![me as f64; 2];
+                let parts = allgather(&ep, TagKind::U, 0, &mine, 0);
+                parts.concat()
+            }));
+        }
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]
+            );
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let net = Arc::new(SimNet::new(4, LatencyModel::zero(), 6));
+        let mut handles = Vec::new();
+        for me in 0..4 {
+            let net = net.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = net.endpoint(me);
+                // gather slices to root 0
+                let mine = vec![(me * 10) as f64];
+                let gathered = gather(&ep, 0, TagKind::U, 0, &mine, 0);
+                // root doubles and scatters back
+                let out = if me == 0 {
+                    let full: Vec<f64> =
+                        gathered.unwrap().concat().iter().map(|x| x * 2.0).collect();
+                    scatter(&ep, 0, TagKind::V, 0, Some(&full), 1, 0)
+                } else {
+                    scatter(&ep, 0, TagKind::V, 0, None, 1, 0)
+                };
+                out[0]
+            }));
+        }
+        let results: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(results, vec![0.0, 20.0, 40.0, 60.0]);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let net = Arc::new(SimNet::new(3, LatencyModel::zero(), 7));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for me in 0..3 {
+            let net = net.clone();
+            let counter = counter.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = net.endpoint(me);
+                counter.fetch_add(1, Ordering::SeqCst);
+                barrier(&ep, 99);
+                // After the barrier, everyone must have incremented.
+                counter.load(Ordering::SeqCst)
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 3);
+        }
+    }
+}

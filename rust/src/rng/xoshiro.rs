@@ -1,0 +1,148 @@
+//! xoshiro256++ core generator + distribution samplers.
+//!
+//! Reference: Blackman & Vigna, "Scrambled linear pseudorandom number
+//! generators" (2019). Period 2^256 − 1; passes BigCrush. We implement it
+//! directly because no `rand` crate resolves in this offline image.
+
+use super::splitmix64;
+
+/// xoshiro256++ PRNG with the distribution samplers the workloads need.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+    /// Cached second normal from the polar method.
+    spare_normal: Option<f64>,
+}
+
+impl Xoshiro256pp {
+    /// Seed all four lanes from a single `u64` through splitmix64.
+    pub fn seed_from(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s, spare_normal: None }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 random bits.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire-style rejection).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        // 64-bit multiply-shift; bias negligible for experiment bounds.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Marsaglia's polar method (caches the pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let x = 2.0 * self.uniform() - 1.0;
+            let y = 2.0 * self.uniform() - 1.0;
+            let r2 = x * x + y * y;
+            if r2 > 0.0 && r2 < 1.0 {
+                let f = (-2.0 * r2.ln() / r2).sqrt();
+                self.spare_normal = Some(y * f);
+                return x * f;
+            }
+        }
+    }
+
+    /// Normal with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Exponential with the given rate (mean `1/rate`).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        // 1 - uniform() is in (0, 1], so ln is finite.
+        -(1.0 - self.uniform()).ln() / rate
+    }
+
+    /// Lognormal: `exp(N(mu, sigma))`.
+    #[inline]
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_ms(mu, sigma).exp()
+    }
+
+    /// Gamma(shape, 1) — Marsaglia–Tsang for shape ≥ 1, boost for < 1.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Johnk-boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha, …, alpha) sample of length `n` — a strictly
+    /// positive probability vector, the paper's marginal distributions.
+    pub fn dirichlet(&mut self, n: usize, alpha: f64) -> Vec<f64> {
+        let mut g: Vec<f64> = (0..n)
+            .map(|_| self.gamma(alpha).max(1e-300))
+            .collect();
+        let s: f64 = g.iter().sum();
+        for x in &mut g {
+            *x /= s;
+        }
+        g
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Backend trait: what the coordinators need from the compute layer.
+
+use crate::linalg::Mat;
+
+/// A client's target marginal slice: the u-update broadcasts one vector
+/// (`a_j`) across histograms; the v-update in vectorized mode has one
+/// column per histogram (`b_j ∈ R^{m×N}`).
+#[derive(Clone, Copy, Debug)]
+pub enum Target<'a> {
+    Vec(&'a [f64]),
+    Mat(&'a Mat),
+}
+
+impl Target<'_> {
+    pub fn rows(&self) -> usize {
+        match self {
+            Target::Vec(v) => v.len(),
+            Target::Mat(m) => m.rows(),
+        }
+    }
+}
+
+/// A stateful handle bound to one kernel block `A (m×n)` and one target
+/// slice `t`. Holds the evolving scaling state `u (m×N)` internally so
+/// backends can keep it device-resident; `update` performs
+/// `u ← α·t/(A·x) + (1−α)·u` and returns a host view of the new state.
+pub trait BlockOp: Send {
+    fn m(&self) -> usize;
+    fn n(&self) -> usize;
+    fn hists(&self) -> usize;
+
+    /// Damped Sinkhorn scaling update; returns the new state.
+    fn update(&mut self, x: &Mat, alpha: f64) -> &Mat;
+
+    /// Plain product `A·x` (star-server step).
+    fn matvec(&mut self, x: &Mat) -> &Mat;
+
+    /// Per-histogram L1 marginal error `Σ_i |u∘(A·x) − t|_i`.
+    fn marginal(&mut self, x: &Mat, u: &Mat) -> Vec<f64>;
+
+    /// Current state (host view).
+    fn state(&self) -> &Mat;
+
+    /// Overwrite the state (initialization / restart).
+    fn set_state(&mut self, u: &Mat);
+}
+
+/// Backend factory: builds [`BlockOp`]s for client blocks.
+pub trait ComputeBackend: Send + Sync {
+    /// Bind a block operator. `u0` seeds the state (normally ones).
+    fn block_op(
+        &self,
+        a: &Mat,
+        t: Target<'_>,
+        u0: Mat,
+    ) -> anyhow::Result<Box<dyn BlockOp>>;
+
+    fn name(&self) -> &'static str;
+}

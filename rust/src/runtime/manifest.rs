@@ -1,0 +1,189 @@
+//! Artifact manifest: what `python -m compile.aot` produced.
+
+use crate::jsonio::{parse, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT-lowered module.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub op: String,
+    pub impl_: String,
+    pub dtype: String,
+    pub m: usize,
+    pub n: usize,
+    pub nhist: usize,
+    pub w: usize,
+    pub file: String,
+    pub outputs: usize,
+}
+
+/// Parsed manifest with shape-keyed lookup.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub grid: String,
+    pub entries: Vec<ManifestEntry>,
+    /// (op, dtype, m, n, nhist, w) → index, preferring `impl` order
+    /// given at insert (xla first — the faster path on this image).
+    index: HashMap<(String, String, usize, usize, usize, usize), usize>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts`", path.display()))?;
+        let root = parse(&text).context("parsing manifest.json")?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("manifest missing version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let grid = root
+            .get("grid")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let raw = root
+            .get("entries")
+            .and_then(Json::as_arr)
+            .context("manifest missing entries")?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for e in raw {
+            let gets = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("entry missing {k}"))?
+                    .to_string())
+            };
+            let getn = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("entry missing {k}"))
+            };
+            entries.push(ManifestEntry {
+                op: gets("op")?,
+                impl_: gets("impl")?,
+                dtype: gets("dtype")?,
+                m: getn("m")?,
+                n: getn("n")?,
+                nhist: getn("nhist")?,
+                w: getn("w")?,
+                file: gets("file")?,
+                outputs: getn("outputs")?,
+            });
+        }
+        let mut index = HashMap::new();
+        // "xla" impl wins ties (measured faster on CPU PJRT; the pallas
+        // artifacts remain addressable via find_impl for the ablation).
+        let mut order: Vec<usize> = (0..entries.len()).collect();
+        order.sort_by_key(|&i| (entries[i].impl_ != "xla") as u8);
+        for i in order {
+            let e = &entries[i];
+            index
+                .entry((e.op.clone(), e.dtype.clone(), e.m, e.n, e.nhist, e.w))
+                .or_insert(i);
+        }
+        Ok(Manifest { dir, grid, entries, index })
+    }
+
+    /// Preferred entry for an op at a shape (f64, w=0 unless given).
+    pub fn find(&self, op: &str, m: usize, n: usize, nhist: usize) -> Option<&ManifestEntry> {
+        self.find_w(op, m, n, nhist, 0)
+    }
+
+    pub fn find_w(
+        &self,
+        op: &str,
+        m: usize,
+        n: usize,
+        nhist: usize,
+        w: usize,
+    ) -> Option<&ManifestEntry> {
+        self.index
+            .get(&(op.to_string(), "f64".to_string(), m, n, nhist, w))
+            .map(|&i| &self.entries[i])
+    }
+
+    /// Entry with a specific impl (ablation benches).
+    pub fn find_impl(
+        &self,
+        op: &str,
+        impl_: &str,
+        m: usize,
+        n: usize,
+        nhist: usize,
+        w: usize,
+    ) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.op == op
+                && e.impl_ == impl_
+                && e.dtype == "f64"
+                && e.m == m
+                && e.n == n
+                && e.nhist == nhist
+                && e.w == w
+        })
+    }
+
+    pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fedsink-manifest-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            r#"{"version": 1, "grid": "quick", "entries": [
+                {"op":"client_update","impl":"pallas","dtype":"f64","m":4,"n":8,"nhist":1,"w":0,"file":"p.hlo.txt","outputs":1},
+                {"op":"client_update","impl":"xla","dtype":"f64","m":4,"n":8,"nhist":1,"w":0,"file":"x.hlo.txt","outputs":1}
+            ]}"#,
+        );
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        // xla preferred on ties
+        assert_eq!(m.find("client_update", 4, 8, 1).unwrap().impl_, "xla");
+        assert_eq!(
+            m.find_impl("client_update", "pallas", 4, 8, 1, 0).unwrap().file,
+            "p.hlo.txt"
+        );
+        assert!(m.find("client_update", 4, 8, 2).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let d = tmpdir("missing-sub");
+        assert!(Manifest::load(d.join("nope")).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let d = tmpdir("ver");
+        write_manifest(&d, r#"{"version": 9, "entries": []}"#);
+        assert!(Manifest::load(&d).is_err());
+    }
+}

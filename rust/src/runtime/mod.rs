@@ -1,0 +1,130 @@
+//! Compute runtime: AOT HLO artifacts through PJRT, plus the native
+//! fallback backend.
+//!
+//! The Rust hot path never runs Python: `make artifacts` (build time)
+//! lowers the L2 JAX model to HLO text; here we parse the manifest,
+//! compile executables once per shape on the PJRT CPU client, and
+//! dispatch block operations through them.
+//!
+//! Key hot-path design (see EXPERIMENTS.md §Perf): each client's kernel
+//! block `A` and target slice `t` are uploaded to the device **once**
+//! ([`BlockOp`] construction); per iteration only the gathered scaling
+//! state `x` crosses the host↔device boundary, and the evolving state
+//! `u` stays device-resident (`execute_b` output buffers are fed back as
+//! the next call's inputs).
+
+mod backend;
+mod manifest;
+mod native;
+mod pjrt;
+
+pub use backend::{BlockOp, ComputeBackend, Target};
+pub use manifest::{Manifest, ManifestEntry};
+pub use native::NativeBackend;
+pub use pjrt::{PjrtRuntime, XlaBackend};
+
+use crate::config::BackendKind;
+use std::sync::Arc;
+
+/// Instantiate the configured backend. The XLA backend needs the
+/// artifact directory; construction fails fast if the manifest is
+/// missing rather than silently degrading.
+pub fn make_backend(
+    kind: BackendKind,
+    artifacts_dir: &str,
+    compute_threads: usize,
+) -> anyhow::Result<Arc<dyn ComputeBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new(compute_threads))),
+        BackendKind::Xla => {
+            let rt = PjrtRuntime::shared(artifacts_dir)?;
+            Ok(Arc::new(XlaBackend::new(rt, compute_threads)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn sample(m: usize, n: usize, nh: usize, seed: u64) -> (Mat, Mat, Vec<f64>, Mat) {
+        let mut rng = Rng::seed_from(seed);
+        let a = Mat::rand_uniform(m, n, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        let t: Vec<f64> = (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let u = Mat::rand_uniform(m, nh, 0.1, 1.0, &mut rng);
+        (a, x, t, u)
+    }
+
+    #[test]
+    fn native_block_op_matches_formula() {
+        let (a, x, t, u) = sample(6, 9, 2, 1);
+        let be = NativeBackend::new(1);
+        let mut op = be
+            .block_op(&a, Target::Vec(&t), u.clone())
+            .expect("native op");
+        let alpha = 0.7;
+        let got = op.update(&x, alpha).clone();
+        let q = a.matmul(&x, 1);
+        for i in 0..6 {
+            for j in 0..2 {
+                let want = alpha * t[i] / q[(i, j)] + (1.0 - alpha) * u[(i, j)];
+                assert!((got[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+        // State advances: a second update must use `got` as u_old.
+        let got2 = op.update(&x, alpha).clone();
+        for i in 0..6 {
+            for j in 0..2 {
+                let want = alpha * t[i] / q[(i, j)] + (1.0 - alpha) * got[(i, j)];
+                assert!((got2[(i, j)] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn native_matvec_and_marginal() {
+        let (a, x, t, u) = sample(4, 5, 3, 2);
+        let be = NativeBackend::new(1);
+        let mut op = be.block_op(&a, Target::Vec(&t), u.clone()).unwrap();
+        let q = op.matvec(&x).clone();
+        assert!(q.allclose(&a.matmul(&x, 1), 1e-13));
+        let err = op.marginal(&x, &u);
+        for h in 0..3 {
+            let mut want = 0.0;
+            for i in 0..4 {
+                want += (u[(i, h)] * q[(i, h)] - t[i]).abs();
+            }
+            assert!((err[h] - want).abs() < 1e-12, "hist {h}");
+        }
+    }
+
+    #[test]
+    fn native_mat_target() {
+        let (a, x, _, u) = sample(5, 7, 2, 3);
+        let mut rng = Rng::seed_from(9);
+        let tm = Mat::rand_uniform(5, 2, 0.1, 1.0, &mut rng);
+        let be = NativeBackend::new(1);
+        let mut op = be.block_op(&a, Target::Mat(&tm), u.clone()).unwrap();
+        let got = op.update(&x, 1.0).clone();
+        let q = a.matmul(&x, 1);
+        for i in 0..5 {
+            for j in 0..2 {
+                assert!((got[(i, j)] - tm[(i, j)] / q[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn set_state_overrides_u() {
+        let (a, x, t, u) = sample(3, 4, 1, 5);
+        let be = NativeBackend::new(1);
+        let mut op = be.block_op(&a, Target::Vec(&t), u).unwrap();
+        let fresh = Mat::ones(3, 1);
+        op.set_state(&fresh);
+        let got = op.update(&x, 0.0).clone(); // alpha 0 → returns state
+        assert!(got.allclose(&fresh, 1e-15));
+    }
+}

@@ -1,0 +1,325 @@
+//! PJRT runtime: load HLO text artifacts, compile once, execute from the
+//! coordinator hot path.
+//!
+//! The published `xla` crate (0.1.6) does not mark its PJRT handles
+//! `Send`/`Sync` even though the underlying PJRT C API is thread-safe
+//! (clients, loaded executables and buffers may be used concurrently —
+//! the CPU plugin serializes internally where needed). The coordinator
+//! runs one OS thread per federated client, so we wrap the handles and
+//! assert thread-safety once, here, with the justification attached.
+
+use super::backend::{BlockOp, ComputeBackend, Target};
+use super::manifest::{Manifest, ManifestEntry};
+use super::native::NativeBackend;
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// SAFETY: PJRT client/executable/buffer operations are thread-safe per
+/// the PJRT C API contract; xla_extension's CPU client takes internal
+/// locks. We never share a buffer mutably across threads — each BlockOp
+/// owns its buffers and lives on one coordinator thread at a time.
+struct SharedClient(xla::PjRtClient);
+unsafe impl Send for SharedClient {}
+unsafe impl Sync for SharedClient {}
+
+struct SharedExe(xla::PjRtLoadedExecutable);
+unsafe impl Send for SharedExe {}
+unsafe impl Sync for SharedExe {}
+
+struct SharedBuf(xla::PjRtBuffer);
+unsafe impl Send for SharedBuf {}
+
+/// Shared PJRT state: one CPU client + the artifact manifest + a compile
+/// cache (each HLO module is compiled exactly once per process).
+pub struct PjrtRuntime {
+    client: SharedClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<SharedExe>>>,
+}
+
+impl PjrtRuntime {
+    pub fn shared(artifacts_dir: &str) -> Result<Arc<Self>> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Self {
+            client: SharedClient(client),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, entry: &ManifestEntry) -> Result<Arc<SharedExe>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(&entry.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(entry);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.file))?;
+        let exe = Arc::new(SharedExe(exe));
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(entry.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn upload(&self, data: &[f64], dims: &[usize]) -> Result<SharedBuf> {
+        Ok(SharedBuf(
+            self.client
+                .0
+                .buffer_from_host_buffer(data, dims, None)
+                .context("host→device transfer")?,
+        ))
+    }
+
+    /// Generic artifact executor over host literals — integration tests
+    /// and cold-path ops (objective/plan/sweep). Returns flat f64 vecs.
+    pub fn run_entry(&self, entry: &ManifestEntry, inputs: &[xla::Literal]) -> Result<Vec<Vec<f64>>> {
+        let exe = self.executable(entry)?;
+        let bufs = exe.0.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        let parts = if entry.outputs == 1 {
+            vec![lit]
+        } else {
+            let mut lit = lit;
+            lit.decompose_tuple()?
+        };
+        parts
+            .iter()
+            .map(|l| l.to_vec::<f64>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// XLA-executing backend — the "accelerator" of the reproduction.
+pub struct XlaBackend {
+    rt: Arc<PjrtRuntime>,
+    fallback: NativeBackend,
+    fallback_threads: usize,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Arc<PjrtRuntime>, fallback_threads: usize) -> Self {
+        Self {
+            rt,
+            fallback: NativeBackend::new(fallback_threads),
+            fallback_threads,
+        }
+    }
+
+    pub fn runtime(&self) -> &Arc<PjrtRuntime> {
+        &self.rt
+    }
+}
+
+impl ComputeBackend for XlaBackend {
+    fn block_op(&self, a: &Mat, t: Target<'_>, u0: Mat) -> Result<Box<dyn BlockOp>> {
+        let (m, n, nh) = (a.rows(), a.cols(), u0.cols());
+        let (update_op, marginal_op) = match t {
+            Target::Vec(_) => ("client_update", "block_marginal"),
+            Target::Mat(_) => ("client_update_mat", "block_marginal_mat"),
+        };
+        let Some(update_entry) = self.rt.manifest().find(update_op, m, n, nh) else {
+            // Shape not in the AOT grid: fall back to the native kernels
+            // rather than failing the run (logged once per shape).
+            log::warn!("no {update_op} artifact for (m={m}, n={n}, N={nh}); native fallback");
+            return self.fallback.block_op(a, t, u0);
+        };
+        let exe_update = self.rt.executable(update_entry)?;
+        let exe_matvec = match self.rt.manifest().find("server_matvec", m, n, nh) {
+            Some(e) => Some(self.rt.executable(e)?),
+            None => None,
+        };
+        let exe_marginal = match self.rt.manifest().find(marginal_op, m, n, nh) {
+            Some(e) => Some(self.rt.executable(e)?),
+            None => None,
+        };
+
+        let a_buf = self.rt.upload(a.as_slice(), &[m, n])?;
+        let (t_buf, t_host, t_stride) = match t {
+            Target::Vec(v) => (self.rt.upload(v, &[m])?, v.to_vec(), 0),
+            Target::Mat(tm) => (
+                self.rt.upload(tm.as_slice(), &[m, nh])?,
+                tm.as_slice().to_vec(),
+                nh,
+            ),
+        };
+        let u_buf = self.rt.upload(u0.as_slice(), &[m, nh])?;
+        Ok(Box::new(XlaBlockOp {
+            rt: self.rt.clone(),
+            a_host: a.clone(),
+            t_host,
+            t_stride,
+            exe_update,
+            exe_matvec,
+            exe_marginal,
+            a_buf,
+            t_buf,
+            u_buf,
+            u_host: u0,
+            q_host: Mat::zeros(m, nh),
+            alpha_cache: HashMap::new(),
+            threads: self.fallback_threads,
+        }))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+struct XlaBlockOp {
+    rt: Arc<PjrtRuntime>,
+    /// Host copies for fallback paths (matvec/marginal without artifacts).
+    a_host: Mat,
+    t_host: Vec<f64>,
+    t_stride: usize,
+    exe_update: Arc<SharedExe>,
+    exe_matvec: Option<Arc<SharedExe>>,
+    exe_marginal: Option<Arc<SharedExe>>,
+    a_buf: SharedBuf,
+    t_buf: SharedBuf,
+    /// Device-resident evolving state; replaced by each update's output
+    /// buffer, so `u` never round-trips through the host on the hot path
+    /// (the host mirror is refreshed for the return value / comms).
+    u_buf: SharedBuf,
+    u_host: Mat,
+    q_host: Mat,
+    /// Device scalars for each distinct damping factor seen.
+    alpha_cache: HashMap<u64, SharedBuf>,
+    threads: usize,
+}
+
+impl XlaBlockOp {
+    fn read_into(buf: &SharedBuf, out: &mut Mat) -> Result<()> {
+        // §Perf note: `copy_raw_to_host_sync` (a direct device→host
+        // copy) would skip the intermediate Literal, but the TFRT CPU
+        // plugin reports `CopyRawToHost not implemented`, so the
+        // readback goes through a Literal into the preallocated mirror.
+        let lit = buf.0.to_literal_sync()?;
+        lit.copy_raw_to::<f64>(out.as_mut_slice())?;
+        Ok(())
+    }
+}
+
+impl BlockOp for XlaBlockOp {
+    fn m(&self) -> usize {
+        self.a_host.rows()
+    }
+
+    fn n(&self) -> usize {
+        self.a_host.cols()
+    }
+
+    fn hists(&self) -> usize {
+        self.u_host.cols()
+    }
+
+    fn update(&mut self, x: &Mat, alpha: f64) -> &Mat {
+        let n = self.n();
+        let nh = self.hists();
+        assert_eq!(x.rows(), n);
+        assert_eq!(x.cols(), nh);
+        let mut go = || -> Result<SharedBuf> {
+            let x_buf = self.rt.upload(x.as_slice(), &[n, nh])?;
+            let alpha_key = alpha.to_bits();
+            if !self.alpha_cache.contains_key(&alpha_key) {
+                let buf = self.rt.upload(&[alpha], &[1])?;
+                self.alpha_cache.insert(alpha_key, buf);
+            }
+            let alpha_buf = &self.alpha_cache[&alpha_key];
+            let outs = self.exe_update.0.execute_b(&[
+                &self.a_buf.0,
+                &x_buf.0,
+                &self.t_buf.0,
+                &self.u_buf.0,
+                &alpha_buf.0,
+            ])?;
+            let out = outs.into_iter().next().unwrap().into_iter().next().unwrap();
+            Ok(SharedBuf(out))
+        };
+        let out = go().expect("xla update failed");
+        self.u_buf = out;
+        Self::read_into(&self.u_buf, &mut self.u_host).expect("device→host read");
+        &self.u_host
+    }
+
+    fn matvec(&mut self, x: &Mat) -> &Mat {
+        let n = self.n();
+        let nh = self.hists();
+        if let Some(exe) = self.exe_matvec.clone() {
+            let x_buf = self.rt.upload(x.as_slice(), &[n, nh]).expect("x upload");
+            let outs = exe.0.execute_b(&[&self.a_buf.0, &x_buf.0]).expect("xla matvec");
+            let out = SharedBuf(outs.into_iter().next().unwrap().into_iter().next().unwrap());
+            Self::read_into(&out, &mut self.q_host).expect("device→host read");
+        } else {
+            let mut q = std::mem::replace(&mut self.q_host, Mat::zeros(0, 0));
+            self.a_host.matmul_into(x, &mut q, self.threads);
+            self.q_host = q;
+        }
+        &self.q_host
+    }
+
+    fn marginal(&mut self, x: &Mat, u: &Mat) -> Vec<f64> {
+        let n = self.n();
+        let nh = self.hists();
+        if let Some(exe) = &self.exe_marginal {
+            let go = || -> Result<Vec<f64>> {
+                let x_buf = self.rt.upload(x.as_slice(), &[n, nh])?;
+                let u_buf = self.rt.upload(u.as_slice(), &[self.m(), nh])?;
+                let outs = exe.0.execute_b(&[&self.a_buf.0, &x_buf.0, &u_buf.0, &self.t_buf.0])?;
+                let lit = outs[0][0].to_literal_sync()?;
+                Ok(lit.to_vec::<f64>()?)
+            };
+            go().expect("xla marginal failed")
+        } else {
+            // Native reduction over A·x.
+            let mut q = std::mem::replace(&mut self.q_host, Mat::zeros(0, 0));
+            self.a_host.matmul_into(x, &mut q, self.threads);
+            let mut err = vec![0.0; nh];
+            for i in 0..self.m() {
+                let qrow = q.row(i);
+                let urow = u.row(i);
+                if self.t_stride == 0 {
+                    let ti = self.t_host[i];
+                    for h in 0..nh {
+                        err[h] += (urow[h] * qrow[h] - ti).abs();
+                    }
+                } else {
+                    let trow = &self.t_host[i * self.t_stride..(i + 1) * self.t_stride];
+                    for h in 0..nh {
+                        err[h] += (urow[h] * qrow[h] - trow[h]).abs();
+                    }
+                }
+            }
+            self.q_host = q;
+            err
+        }
+    }
+
+    fn state(&self) -> &Mat {
+        &self.u_host
+    }
+
+    fn set_state(&mut self, u: &Mat) {
+        assert_eq!(u.rows(), self.u_host.rows());
+        assert_eq!(u.cols(), self.u_host.cols());
+        self.u_host = u.clone();
+        self.u_buf = self
+            .rt
+            .upload(u.as_slice(), &[u.rows(), u.cols()])
+            .expect("state upload");
+    }
+}

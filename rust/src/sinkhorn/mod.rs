@@ -1,0 +1,172 @@
+//! Sinkhorn–Knopp core: the centralized solver and the shared pieces
+//! (marginal errors, objective, plan assembly, convergence policy) the
+//! federated coordinators reuse.
+//!
+//! The centralized solver is both the paper's baseline and the oracle the
+//! property tests pin the federated variants against (synchronous
+//! federation generates *the same iterate sequence*, Prop. 1).
+
+mod ops;
+mod solver;
+
+pub use ops::{full_marginal_errors, objective, transport_plan};
+pub use solver::{CentralizedSolver, HistoryPoint, SolveOutcome, StopReason};
+
+use crate::linalg::Mat;
+
+/// Scaling state `(u, v)`, each `n × N`.
+#[derive(Clone, Debug)]
+pub struct State {
+    pub u: Mat,
+    pub v: Mat,
+}
+
+impl State {
+    pub fn ones(n: usize, hists: usize) -> State {
+        State { u: Mat::ones(n, hists), v: Mat::ones(n, hists) }
+    }
+}
+
+/// Convergence policy shared by all solvers: threshold on the a-marginal
+/// L1 error (the paper's criterion), iteration cap, optional wall-clock
+/// timeout, and a check cadence.
+#[derive(Clone, Copy, Debug)]
+pub struct StopPolicy {
+    pub threshold: f64,
+    pub max_iters: usize,
+    pub timeout_secs: f64,
+    pub check_every: usize,
+}
+
+impl Default for StopPolicy {
+    fn default() -> Self {
+        Self { threshold: 1e-10, max_iters: 1500, timeout_secs: 0.0, check_every: 1 }
+    }
+}
+
+impl StopPolicy {
+    /// Should we evaluate convergence at iteration `k` (1-based)?
+    pub fn check_at(&self, k: usize) -> bool {
+        self.check_every <= 1 || k % self.check_every == 0 || k == self.max_iters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::runtime::make_backend;
+    use crate::workload::{Problem, ProblemSpec};
+
+    fn native() -> std::sync::Arc<dyn crate::runtime::ComputeBackend> {
+        make_backend(BackendKind::Native, "", 1).unwrap()
+    }
+
+    #[test]
+    fn centralized_converges_on_paper_example() {
+        let p = Problem::paper_4x4(0.5);
+        let solver = CentralizedSolver::new(native());
+        let out = solver.solve(&p, StopPolicy { threshold: 1e-13, ..Default::default() }, 1.0);
+        assert!(out.converged(), "stop: {:?}", out.stop);
+        let plan = transport_plan(&p.k, &out.state, 0);
+        // Marginals recovered.
+        for i in 0..4 {
+            let row: f64 = (0..4).map(|j| plan[(i, j)]).sum();
+            assert!((row - p.a[i]).abs() < 1e-10, "row {i}: {row}");
+            let col: f64 = (0..4).map(|j| plan[(j, i)]).sum();
+            assert!((col - p.b[(i, 0)]).abs() < 1e-10, "col {i}: {col}");
+        }
+    }
+
+    #[test]
+    fn objective_decreases_toward_limit() {
+        // Paper Fig 5: the converged objective approaches ⟨P,C⟩ ≈ 0.3
+        // from above as ε shrinks.
+        let solver = CentralizedSolver::new(native());
+        let mut objs = Vec::new();
+        for eps in [0.5, 0.1, 0.01] {
+            let p = Problem::paper_4x4(eps);
+            let out = solver.solve(
+                &p,
+                StopPolicy { threshold: 1e-12, max_iters: 200_000, ..Default::default() },
+                1.0,
+            );
+            objs.push(objective(&p, &out.state, 0));
+        }
+        // Entropy shrinks with ε: the objective rises toward ⟨P,C⟩ ≈ 0.3
+        // (cross-checked against a numpy run: −1.098, 0.0252, 0.2725).
+        assert!(objs[0] < objs[1] && objs[1] < objs[2], "{objs:?}");
+        assert!(objs[2] < 0.31 && objs[2] > 0.25, "limit {:?}", objs[2]);
+    }
+
+    #[test]
+    fn multi_histogram_solves_match_single() {
+        // Vectorized N-histogram solve must equal per-histogram solves.
+        let spec = ProblemSpec::new(16).with_hists(3).with_eps(0.5);
+        let p = spec.build(21);
+        let solver = CentralizedSolver::new(native());
+        let pol = StopPolicy { threshold: 1e-12, max_iters: 3000, ..Default::default() };
+        let joint = solver.solve(&p, pol, 1.0);
+        assert!(joint.converged());
+        for h in 0..3 {
+            let mut bh = Mat::zeros(16, 1);
+            for i in 0..16 {
+                bh[(i, 0)] = p.b[(i, h)];
+            }
+            let single = Problem::from_parts(p.a.clone(), bh, p.cost.clone(), p.eps);
+            let out = solver.solve(&single, pol, 1.0);
+            for i in 0..16 {
+                assert!(
+                    (joint.state.u[(i, h)] - out.state.u[(i, 0)]).abs()
+                        < 1e-9 * out.state.u[(i, 0)].abs().max(1.0),
+                    "hist {h} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn damped_update_converges_too() {
+        // α = 0.5 still converges (slower) — Prop. 2's premise.
+        let p = Problem::paper_4x4(0.5);
+        let solver = CentralizedSolver::new(native());
+        let out = solver.solve(
+            &p,
+            StopPolicy { threshold: 1e-10, max_iters: 5000, ..Default::default() },
+            0.5,
+        );
+        assert!(out.converged());
+    }
+
+    #[test]
+    fn iteration_cap_reports_maxiters() {
+        let p = Problem::paper_4x4(1e-4); // needs ~13k iters (paper §III)
+        let solver = CentralizedSolver::new(native());
+        let out = solver.solve(
+            &p,
+            StopPolicy { threshold: 1e-15, max_iters: 50, ..Default::default() },
+            1.0,
+        );
+        assert!(!out.converged());
+        assert!(matches!(out.stop, StopReason::MaxIters));
+        assert_eq!(out.iterations, 50);
+    }
+
+    #[test]
+    fn history_records_monotone_error_for_undamped() {
+        let p = Problem::paper_4x4(0.5);
+        let solver = CentralizedSolver::new(native());
+        let out = solver.solve_traced(
+            &p,
+            StopPolicy { threshold: 1e-13, ..Default::default() },
+            1.0,
+        );
+        assert!(out.history.len() > 3);
+        // Error after iteration 5 must be far below error after 1.
+        let first = out.history.first().unwrap().err_a;
+        let last = out.history.last().unwrap().err_a;
+        assert!(last < first * 1e-3, "first {first}, last {last}");
+        // Objective history is populated and finite.
+        assert!(out.history.iter().all(|h| h.objective.is_finite()));
+    }
+}

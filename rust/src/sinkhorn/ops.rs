@@ -1,0 +1,117 @@
+//! Whole-problem reductions: marginal errors, objective, plan.
+//!
+//! Cold-path operations (once per convergence check / at the end of a
+//! run); the hot path lives in [`crate::runtime`].
+
+use super::State;
+use crate::linalg::{scale_rows_cols, Mat};
+use crate::workload::Problem;
+
+/// L1 marginal errors `(Σ|P·1 − a|, Σ|Pᵀ·1 − b|)` for histogram `h`.
+pub fn full_marginal_errors(p: &Problem, st: &State, h: usize) -> (f64, f64) {
+    let n = p.n;
+    let uh: Vec<f64> = (0..n).map(|i| st.u[(i, h)]).collect();
+    let vh: Vec<f64> = (0..n).map(|i| st.v[(i, h)]).collect();
+    let mut err_a = 0.0;
+    let mut err_b = vec![0.0; n];
+    for i in 0..n {
+        let krow = p.k.row(i);
+        let mut row_sum = 0.0;
+        for j in 0..n {
+            let pij = uh[i] * krow[j] * vh[j];
+            row_sum += pij;
+            err_b[j] += pij;
+        }
+        err_a += (row_sum - p.a[i]).abs();
+    }
+    let err_b: f64 = (0..n).map(|j| (err_b[j] - p.b[(j, h)]).abs()).sum();
+    (err_a, err_b)
+}
+
+/// Entropic objective `⟨P,C⟩ + ε Σ P (log P − 1)` for histogram `h`,
+/// computed in the stable form `ε Σ P (log u + log v − 1)`.
+pub fn objective(p: &Problem, st: &State, h: usize) -> f64 {
+    let n = p.n;
+    let mut total = 0.0;
+    for i in 0..n {
+        let ui = st.u[(i, h)];
+        let lu = ui.ln();
+        let krow = p.k.row(i);
+        for j in 0..n {
+            let pij = ui * krow[j] * st.v[(j, h)];
+            if pij > 0.0 {
+                total += pij * (lu + st.v[(j, h)].ln() - 1.0);
+            }
+        }
+    }
+    p.eps * total
+}
+
+/// Transport plan `P = diag(u_h) K diag(v_h)`.
+pub fn transport_plan(k: &Mat, st: &State, h: usize) -> Mat {
+    let n = k.rows();
+    let uh: Vec<f64> = (0..n).map(|i| st.u[(i, h)]).collect();
+    let vh: Vec<f64> = (0..k.cols()).map(|i| st.v[(i, h)]).collect();
+    scale_rows_cols(k, &uh, &vh)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Problem;
+
+    #[test]
+    fn errors_vanish_at_fixed_point() {
+        // Construct an exact fixed point: P doubly stochastic by design.
+        let p = Problem::paper_4x4(0.5);
+        // Run enough plain iterations to reach the fixed point.
+        let n = 4;
+        let mut u = vec![1.0; n];
+        let mut v = vec![1.0; n];
+        for _ in 0..500 {
+            for i in 0..n {
+                let q: f64 = (0..n).map(|j| p.k[(i, j)] * v[j]).sum();
+                u[i] = p.a[i] / q;
+            }
+            for j in 0..n {
+                let r: f64 = (0..n).map(|i| p.k[(i, j)] * u[i]).sum();
+                v[j] = p.b[(j, 0)] / r;
+            }
+        }
+        let mut st = State::ones(n, 1);
+        for i in 0..n {
+            st.u[(i, 0)] = u[i];
+            st.v[(i, 0)] = v[i];
+        }
+        let (ea, eb) = full_marginal_errors(&p, &st, 0);
+        assert!(ea < 1e-12 && eb < 1e-14, "({ea}, {eb})");
+    }
+
+    #[test]
+    fn objective_matches_direct_formula() {
+        let p = Problem::paper_4x4(0.7);
+        let mut st = State::ones(4, 1);
+        for i in 0..4 {
+            st.u[(i, 0)] = 0.5 + 0.1 * i as f64;
+            st.v[(i, 0)] = 1.5 - 0.2 * i as f64;
+        }
+        let got = objective(&p, &st, 0);
+        let plan = transport_plan(&p.k, &st, 0);
+        let mut want = 0.0;
+        for i in 0..4 {
+            for j in 0..4 {
+                let pij = plan[(i, j)];
+                want += pij * p.cost[(i, j)] + p.eps * pij * (pij.ln() - 1.0);
+            }
+        }
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+    }
+
+    #[test]
+    fn plan_marginals_are_scaled_kernel() {
+        let p = Problem::paper_4x4(1.0);
+        let st = State::ones(4, 1);
+        let plan = transport_plan(&p.k, &st, 0);
+        assert!(plan.allclose(&p.k, 1e-15));
+    }
+}

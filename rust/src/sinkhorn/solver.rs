@@ -1,0 +1,133 @@
+//! Centralized Sinkhorn–Knopp solver over a [`ComputeBackend`].
+
+use super::ops::{full_marginal_errors, objective};
+use super::{State, StopPolicy};
+use crate::linalg::Mat;
+use crate::metrics::Clock;
+use crate::runtime::{ComputeBackend, Target};
+use crate::workload::Problem;
+use std::sync::Arc;
+
+/// Why a solve stopped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    Converged,
+    MaxIters,
+    Timeout,
+}
+
+/// One convergence-history sample (ε-study, Figs 4/9/19–22 traces).
+#[derive(Clone, Copy, Debug)]
+pub struct HistoryPoint {
+    pub iter: usize,
+    pub secs: f64,
+    pub err_a: f64,
+    pub err_b: f64,
+    pub objective: f64,
+}
+
+/// Solve result.
+#[derive(Clone, Debug)]
+pub struct SolveOutcome {
+    pub state: State,
+    pub iterations: usize,
+    pub stop: StopReason,
+    /// Max-over-histograms a-marginal error at the last check.
+    pub final_err: f64,
+    pub secs: f64,
+    pub history: Vec<HistoryPoint>,
+}
+
+impl SolveOutcome {
+    pub fn converged(&self) -> bool {
+        self.stop == StopReason::Converged
+    }
+}
+
+/// The centralized baseline: both scaling updates on one node, dispatched
+/// through whichever backend (XLA artifacts / native) is configured.
+pub struct CentralizedSolver {
+    backend: Arc<dyn ComputeBackend>,
+}
+
+impl CentralizedSolver {
+    pub fn new(backend: Arc<dyn ComputeBackend>) -> Self {
+        Self { backend }
+    }
+
+    /// Plain solve (no per-iteration history).
+    pub fn solve(&self, p: &Problem, policy: StopPolicy, alpha: f64) -> SolveOutcome {
+        self.run(p, policy, alpha, false)
+    }
+
+    /// Solve recording the error/objective trace at every check point.
+    pub fn solve_traced(&self, p: &Problem, policy: StopPolicy, alpha: f64) -> SolveOutcome {
+        self.run(p, policy, alpha, true)
+    }
+
+    fn run(&self, p: &Problem, policy: StopPolicy, alpha: f64, traced: bool) -> SolveOutcome {
+        let n = p.n;
+        let nh = p.hists();
+        let clock = Clock::new();
+
+        // u-update operator: A = K, t = a (broadcast across histograms).
+        let mut u_op = self
+            .backend
+            .block_op(&p.k, Target::Vec(&p.a), Mat::ones(n, nh))
+            .expect("u-op");
+        // v-update operator: A = Kᵀ, t = b (per-histogram matrix).
+        let kt = p.k.transpose();
+        let mut v_op = self
+            .backend
+            .block_op(&kt, Target::Mat(&p.b), Mat::ones(n, nh))
+            .expect("v-op");
+
+        let mut history = Vec::new();
+        let mut iterations = 0;
+        let mut final_err = f64::INFINITY;
+        let mut stop = StopReason::MaxIters;
+
+        for k in 1..=policy.max_iters {
+            iterations = k;
+            // u ← α a/(K v) + (1−α) u ; v ← α b/(Kᵀ u) + (1−α) v.
+            let u = u_op.update(v_op.state(), alpha);
+            let _v = v_op.update(u, alpha);
+
+            if policy.check_at(k) {
+                // a-marginal error via the u-operator: Σ|u∘(K v) − a|.
+                let u_now = u_op.state().clone();
+                let errs = u_op.marginal(v_op.state(), &u_now);
+                let err = errs.iter().cloned().fold(0.0, f64::max);
+                final_err = err;
+                if traced {
+                    let st = State { u: u_op.state().clone(), v: v_op.state().clone() };
+                    let (err_a, err_b) = full_marginal_errors(p, &st, 0);
+                    history.push(HistoryPoint {
+                        iter: k,
+                        secs: clock.now(),
+                        err_a,
+                        err_b,
+                        objective: objective(p, &st, 0),
+                    });
+                }
+                if err < policy.threshold {
+                    stop = StopReason::Converged;
+                    break;
+                }
+            }
+            if policy.timeout_secs > 0.0 && clock.now() > policy.timeout_secs {
+                stop = StopReason::Timeout;
+                break;
+            }
+        }
+
+        SolveOutcome {
+            state: State { u: u_op.state().clone(), v: v_op.state().clone() },
+            iterations,
+            stop,
+            final_err,
+            secs: clock.now(),
+            history,
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Problem generator: marginals, cost families, sparsity, conditioning.
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Condition classes of the Gibbs kernel (paper §IV-D): the effective
+/// conditioning of Sinkhorn is driven by `max C / ε` — we scale the cost
+/// spread to produce benign → extreme dynamic ranges in `K`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CondClass {
+    Well,
+    Medium,
+    Ill,
+}
+
+impl CondClass {
+    /// Cost spread multiplier relative to ε.
+    fn cost_scale(self, eps: f64) -> f64 {
+        match self {
+            CondClass::Well => 2.0 * eps,
+            CondClass::Medium => 10.0 * eps,
+            CondClass::Ill => 40.0 * eps,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "well" => Some(Self::Well),
+            "medium" => Some(Self::Medium),
+            "ill" => Some(Self::Ill),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CondClass::Well => "well",
+            CondClass::Medium => "medium",
+            CondClass::Ill => "ill",
+        }
+    }
+}
+
+/// Builder for synthetic problems.
+#[derive(Clone, Debug)]
+pub struct ProblemSpec {
+    pub n: usize,
+    pub hists: usize,
+    pub eps: f64,
+    /// Off-diagonal block sparsity `s` with the block grid it applies to.
+    pub sparsity: f64,
+    pub sparsity_blocks: usize,
+    pub cond: CondClass,
+}
+
+impl ProblemSpec {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            hists: 1,
+            eps: 0.05,
+            sparsity: 0.0,
+            sparsity_blocks: 4,
+            cond: CondClass::Well,
+        }
+    }
+
+    pub fn with_hists(mut self, nh: usize) -> Self {
+        self.hists = nh;
+        self
+    }
+
+    pub fn with_eps(mut self, eps: f64) -> Self {
+        self.eps = eps;
+        self
+    }
+
+    pub fn with_sparsity(mut self, s: f64, blocks: usize) -> Self {
+        self.sparsity = s;
+        self.sparsity_blocks = blocks;
+        self
+    }
+
+    pub fn with_condition(mut self, c: CondClass) -> Self {
+        self.cond = c;
+        self
+    }
+
+    /// Generate the problem deterministically from `seed`.
+    pub fn build(&self, seed: u64) -> Problem {
+        let mut rng = Rng::seed_from(seed);
+        let n = self.n;
+        let a = rng.dirichlet(n, 1.0);
+        let mut b = Mat::zeros(n, self.hists);
+        for h in 0..self.hists {
+            let col = rng.dirichlet(n, 1.0);
+            for i in 0..n {
+                b[(i, h)] = col[i];
+            }
+        }
+
+        // Squared-Euclidean cost on random 1-D supports, normalized to
+        // [0, scale]; the paper's §V cost family.
+        let scale = self.cond.cost_scale(self.eps);
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.uniform()).collect();
+        xs.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        let mut cost = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let d = xs[i] - xs[j];
+                cost[(i, j)] = scale * d * d;
+            }
+        }
+
+        // Off-diagonal block sparsity: fraction `s` of off-diagonal
+        // (bi, bj) client-block pairs get their cost pushed so high the
+        // Gibbs entry underflows — the "sparse kernel" regime of §IV-D.
+        // The pattern is symmetric (kill (i,j) with (j,i)) and the
+        // diagonal blocks always survive; `b` is then rebalanced so each
+        // diagonal block carries the same mass in both marginals, which
+        // keeps the problem feasible at every s (at s = 1 the plan must
+        // be block-diagonal, so mismatched block masses would make the
+        // marginal constraints unsatisfiable — the paper's grids
+        // converge at s = 1, so theirs are feasible by construction).
+        if self.sparsity > 0.0 && self.sparsity_blocks > 1 && n % self.sparsity_blocks == 0
+        {
+            let nb = self.sparsity_blocks;
+            let m = n / nb;
+            let mut offdiag: Vec<(usize, usize)> = (0..nb)
+                .flat_map(|i| (i + 1..nb).map(move |j| (i, j)))
+                .collect();
+            rng.shuffle(&mut offdiag);
+            let kill = ((offdiag.len() as f64) * self.sparsity).round() as usize;
+            let huge = 800.0 * self.eps; // exp(-800) == 0 in f64
+            for &(bi, bj) in offdiag.iter().take(kill) {
+                for (pi, pj) in [(bi, bj), (bj, bi)] {
+                    for i in pi * m..(pi + 1) * m {
+                        for j in pj * m..(pj + 1) * m {
+                            cost[(i, j)] = huge;
+                        }
+                    }
+                }
+            }
+            // Feasibility rebalance: per diagonal block, scale every b
+            // column so the block mass equals a's block mass (column
+            // sums stay 1 since the a-block masses sum to 1).
+            for blk in 0..nb {
+                let (r0, r1) = (blk * m, (blk + 1) * m);
+                let a_mass: f64 = a[r0..r1].iter().sum();
+                for h in 0..self.hists {
+                    let b_mass: f64 = (r0..r1).map(|i| b[(i, h)]).sum();
+                    if b_mass > 0.0 {
+                        let scale = a_mass / b_mass;
+                        for i in r0..r1 {
+                            b[(i, h)] *= scale;
+                        }
+                    }
+                }
+            }
+        }
+
+        let k = cost.map(|c| (-c / self.eps).exp());
+        Problem { n, eps: self.eps, a, b, cost, k }
+    }
+}
+
+/// A concrete entropic-OT instance.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    pub n: usize,
+    pub eps: f64,
+    /// Source marginal, length `n`.
+    pub a: Vec<f64>,
+    /// Target marginal(s), `n × N`.
+    pub b: Mat,
+    /// Cost matrix `C`.
+    pub cost: Mat,
+    /// Gibbs kernel `K = exp(−C/ε)`.
+    pub k: Mat,
+}
+
+impl Problem {
+    /// Number of simultaneous target histograms.
+    pub fn hists(&self) -> usize {
+        self.b.cols()
+    }
+
+    /// The paper's §III worked example: a = [.3 .2 .1 .4],
+    /// b = [.2 .3 .3 .2], circulant cost.
+    pub fn paper_4x4(eps: f64) -> Problem {
+        let a = vec![0.3, 0.2, 0.1, 0.4];
+        let b_col = [0.2, 0.3, 0.3, 0.2];
+        let mut b = Mat::zeros(4, 1);
+        for i in 0..4 {
+            b[(i, 0)] = b_col[i];
+        }
+        let cost = Mat::from_vec(
+            4,
+            4,
+            vec![
+                0.0, 1.0, 2.0, 3.0, //
+                1.0, 0.0, 3.0, 2.0, //
+                2.0, 3.0, 0.0, 1.0, //
+                3.0, 2.0, 1.0, 0.0,
+            ],
+        );
+        let k = cost.map(|c| (-c / eps).exp());
+        Problem { n: 4, eps, a, b, cost, k }
+    }
+
+    /// Build a problem from explicit pieces (finance pipeline).
+    pub fn from_parts(a: Vec<f64>, b: Mat, cost: Mat, eps: f64) -> Problem {
+        let n = a.len();
+        assert_eq!(b.rows(), n);
+        assert_eq!(cost.rows(), n);
+        assert_eq!(cost.cols(), n);
+        let k = cost.map(|c| (-c / eps).exp());
+        Problem { n, eps, a, b, cost, k }
+    }
+}

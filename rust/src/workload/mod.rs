@@ -1,0 +1,102 @@
+//! Synthetic workload generation (paper §III–§IV) and problem slicing.
+//!
+//! Generates the `(a, b, C, K)` tuples the experiments consume:
+//! * marginals `a, b` — Dirichlet simplex samples (strictly positive,
+//!   summing to 1), or the paper's fixed 4-point example;
+//! * cost families — the paper's circulant 4×4, squared-Euclidean on
+//!   random supports, and random uniform costs;
+//! * **off-diagonal block sparsity** `s ∈ {0, 0.5, 0.9, 1}` (§IV-D): a
+//!   fraction `s` of the off-diagonal client-block pairs get their cost
+//!   inflated so the Gibbs entries underflow toward 0;
+//! * **condition classes** well/medium/ill (§IV-D) — the cost scale is
+//!   chosen so `K = exp(−C/ε)` has benign, moderate or extreme dynamic
+//!   range (its condition worsens as ε shrinks relative to cost spread);
+//! * `N` target histograms (`b ∈ R^{n×N}`, Cuturi vectorization §IV-B3).
+//!
+//! [`Partition`] slices a problem across `c` clients exactly as the
+//! paper's Fig. 1: client `j` owns `a_j, b_j`, row block `K_j` and the
+//! transposed column block `K[:, j]ᵀ`.
+
+mod generate;
+mod partition;
+
+pub use generate::{CondClass, Problem, ProblemSpec};
+pub use partition::{ClientShard, Partition};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marginals_are_simplex_points() {
+        let p = ProblemSpec::new(64).with_hists(3).build(7);
+        assert!((p.a.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for h in 0..3 {
+            let s: f64 = (0..64).map(|i| p.b[(i, h)]).sum();
+            assert!((s - 1.0).abs() < 1e-12, "hist {h} sums to {s}");
+        }
+        assert!(p.a.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn gibbs_kernel_positive_when_dense() {
+        let p = ProblemSpec::new(32).build(1);
+        assert!(p.k.as_slice().iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn sparsity_zeroes_offdiag_blocks() {
+        let dense = ProblemSpec::new(64).with_sparsity(0.0, 4).build(3);
+        let sparse = ProblemSpec::new(64).with_sparsity(1.0, 4).build(3);
+        let count_small = |m: &crate::linalg::Mat| {
+            m.as_slice().iter().filter(|&&x| x < 1e-100).count()
+        };
+        assert_eq!(count_small(&dense.k), 0);
+        // s = 1: all 12 of 16 off-diagonal 16x16 blocks suppressed.
+        assert_eq!(count_small(&sparse.k), 12 * 16 * 16);
+    }
+
+    #[test]
+    fn condition_classes_order_dynamic_range() {
+        let range = |c: CondClass| {
+            let p = ProblemSpec::new(32).with_condition(c).build(5);
+            let mx = p.k.as_slice().iter().cloned().fold(f64::MIN, f64::max);
+            let mn = p.k.as_slice().iter().cloned().fold(f64::MAX, f64::min);
+            mx / mn
+        };
+        let w = range(CondClass::Well);
+        let m = range(CondClass::Medium);
+        let i = range(CondClass::Ill);
+        assert!(w < m && m < i, "ranges {w} {m} {i}");
+    }
+
+    #[test]
+    fn partition_blocks_reassemble() {
+        let p = ProblemSpec::new(24).with_hists(2).build(11);
+        let part = Partition::new(&p, 4);
+        assert_eq!(part.shards.len(), 4);
+        for (j, sh) in part.shards.iter().enumerate() {
+            let m = 24 / 4;
+            assert_eq!(sh.k_row.rows(), m);
+            assert_eq!(sh.k_col_t.rows(), m);
+            // Row block matches the full kernel.
+            for i in 0..m {
+                for col in 0..24 {
+                    assert_eq!(sh.k_row[(i, col)], p.k[(j * m + i, col)]);
+                    // k_col_t[i][col] = K[col][j*m + i]
+                    assert_eq!(sh.k_col_t[(i, col)], p.k[(col, j * m + i)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_4x4_example_matches_text() {
+        let p = Problem::paper_4x4(0.5);
+        assert_eq!(p.n, 4);
+        assert_eq!(p.a, vec![0.3, 0.2, 0.1, 0.4]);
+        assert_eq!(p.cost[(0, 1)], 1.0);
+        assert_eq!(p.cost[(3, 0)], 3.0);
+        assert!((p.k[(0, 0)] - 1.0).abs() < 1e-15); // exp(0)
+    }
+}

@@ -1,0 +1,66 @@
+//! Client-wise slicing of a problem (paper Fig. 1).
+
+use super::Problem;
+use crate::linalg::Mat;
+
+/// What client `j` privately owns in the all-to-all regime:
+/// its marginal slices plus both kernel blocks.
+#[derive(Clone, Debug)]
+pub struct ClientShard {
+    /// Client index.
+    pub id: usize,
+    /// Global row range `[r0, r1)` of this client's block.
+    pub r0: usize,
+    pub r1: usize,
+    /// `a_j` (length m).
+    pub a: Vec<f64>,
+    /// `b_j` (m × N).
+    pub b: Mat,
+    /// Row block `K_j = K[r0..r1, :]` (m × n).
+    pub k_row: Mat,
+    /// Transposed column block `K[:, r0..r1]ᵀ` (m × n) — the operator of
+    /// the v-update `r_j = K_jᵀ u`.
+    pub k_col_t: Mat,
+}
+
+impl ClientShard {
+    pub fn m(&self) -> usize {
+        self.r1 - self.r0
+    }
+}
+
+/// An `n = c·m` problem partitioned across `c` clients.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub n: usize,
+    pub clients: usize,
+    pub shards: Vec<ClientShard>,
+}
+
+impl Partition {
+    /// Slice `p` across `c` clients; requires `c | n` like the paper.
+    pub fn new(p: &Problem, c: usize) -> Partition {
+        assert!(c > 0 && p.n % c == 0, "clients must divide n (n={}, c={c})", p.n);
+        let m = p.n / c;
+        let kt = p.k.transpose();
+        let shards = (0..c)
+            .map(|j| {
+                let (r0, r1) = (j * m, (j + 1) * m);
+                ClientShard {
+                    id: j,
+                    r0,
+                    r1,
+                    a: p.a[r0..r1].to_vec(),
+                    b: p.b.row_block(r0, r1),
+                    k_row: p.k.row_block(r0, r1),
+                    k_col_t: kt.row_block(r0, r1),
+                }
+            })
+            .collect();
+        Partition { n: p.n, clients: c, shards }
+    }
+
+    pub fn m(&self) -> usize {
+        self.n / self.clients
+    }
+}

@@ -1,0 +1,202 @@
+//! Randomized property tests over coordinator/runtime/substrate
+//! invariants. (`proptest` does not resolve in this offline image, so
+//! the sweeps run on the crate's own seeded PRNG — shrinkage is traded
+//! for reproducible failure seeds, printed on assert.)
+
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::run_federated;
+use fedsink::jsonio::{parse, to_string_pretty, Json};
+use fedsink::linalg::Mat;
+use fedsink::net::LatencyModel;
+use fedsink::rng::{child_seed, Rng};
+use fedsink::runtime::{make_backend, ComputeBackend, NativeBackend, Target};
+use fedsink::sinkhorn::{full_marginal_errors, CentralizedSolver, StopPolicy};
+use fedsink::workload::{CondClass, Partition, ProblemSpec};
+
+const SWEEPS: usize = 25;
+
+fn policy() -> StopPolicy {
+    StopPolicy { threshold: 1e-11, max_iters: 4000, ..Default::default() }
+}
+
+/// Prop. 1 as a property: for random problems and random client counts,
+/// both synchronous variants reproduce the centralized fixed point.
+#[test]
+fn prop_sync_variants_match_centralized() {
+    let native = make_backend(BackendKind::Native, "", 1).unwrap();
+    for case in 0..SWEEPS {
+        let mut rng = Rng::seed_from(child_seed(0xF00D, case as u64));
+        let c = [1usize, 2, 3, 4][rng.below(4)];
+        let n = c * (2 + rng.below(8)); // n divisible by c, up to 36
+        let nh = 1 + rng.below(3);
+        let eps = rng.uniform_range(0.2, 0.8);
+        let p = ProblemSpec::new(n).with_hists(nh).with_eps(eps).build(case as u64);
+        let central = CentralizedSolver::new(native.clone()).solve(&p, policy(), 1.0);
+        if !central.converged() {
+            continue; // ill-conditioned draw; convergence tested elsewhere
+        }
+        for variant in [Variant::SyncA2A, Variant::SyncStar] {
+            let cfg = SolveConfig {
+                variant,
+                backend: BackendKind::Native,
+                clients: c,
+                net: LatencyModel::zero(),
+                ..Default::default()
+            };
+            let out = run_federated(&p, &cfg, policy(), false);
+            assert!(out.converged, "case {case}: {} c={c} n={n}", variant.name());
+            assert!(
+                out.state.u.allclose(&central.state.u, 1e-8),
+                "case {case}: {} diverges from centralized (c={c}, n={n}, nh={nh})",
+                variant.name()
+            );
+        }
+    }
+}
+
+/// Damped async runs must either converge to a valid plan or report
+/// non-convergence — never return a "converged" state violating the
+/// marginals.
+#[test]
+fn prop_async_converged_implies_valid_plan() {
+    for case in 0..SWEEPS {
+        let mut rng = Rng::seed_from(child_seed(0xBEEF, case as u64));
+        let c = [2usize, 3, 4][rng.below(3)];
+        let n = c * (3 + rng.below(6));
+        let p = ProblemSpec::new(n).with_eps(rng.uniform_range(0.3, 0.8)).build(70 + case as u64);
+        let variant = if case % 2 == 0 { Variant::AsyncA2A } else { Variant::AsyncStar };
+        let cfg = SolveConfig {
+            variant,
+            backend: BackendKind::Native,
+            clients: c,
+            alpha: rng.uniform_range(0.3, 0.7),
+            net: LatencyModel::zero(),
+            seed: case as u64,
+            ..Default::default()
+        };
+        let out = run_federated(&p, &cfg, policy(), false);
+        if out.converged {
+            let (ea, eb) = full_marginal_errors(&p, &out.state, 0);
+            assert!(
+                ea < 1e-5 && eb < 1e-5,
+                "case {case}: {} claimed convergence with errors ({ea:.2e}, {eb:.2e})",
+                variant.name()
+            );
+        }
+    }
+}
+
+/// Partition slicing is lossless: shards reassemble the kernel exactly.
+#[test]
+fn prop_partition_reassembles() {
+    for case in 0..SWEEPS {
+        let mut rng = Rng::seed_from(child_seed(0xCAFE, case as u64));
+        let c = 1 + rng.below(6);
+        let m = 1 + rng.below(7);
+        let n = c * m;
+        let p = ProblemSpec::new(n).with_hists(1 + rng.below(2)).build(case as u64);
+        let part = Partition::new(&p, c);
+        for sh in &part.shards {
+            for i in 0..sh.m() {
+                assert_eq!(sh.a[i], p.a[sh.r0 + i]);
+                for j in 0..n {
+                    assert_eq!(sh.k_row[(i, j)], p.k[(sh.r0 + i, j)]);
+                    assert_eq!(sh.k_col_t[(i, j)], p.k[(j, sh.r0 + i)]);
+                }
+            }
+        }
+    }
+}
+
+/// BlockOp state algebra: update(α=0) is the identity; update(α=1)
+/// matches the raw Sinkhorn formula; interleavings stay consistent.
+#[test]
+fn prop_blockop_damping_algebra() {
+    let be = NativeBackend::new(1);
+    for case in 0..SWEEPS {
+        let mut rng = Rng::seed_from(child_seed(0xDEAD, case as u64));
+        let m = 1 + rng.below(9);
+        let n = 1 + rng.below(9);
+        let nh = 1 + rng.below(3);
+        let a = Mat::rand_uniform(m, n, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        let t: Vec<f64> = (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let u0 = Mat::rand_uniform(m, nh, 0.1, 1.0, &mut rng);
+        let mut op = be.block_op(&a, Target::Vec(&t), u0.clone()).unwrap();
+        let frozen = op.update(&x, 0.0).clone();
+        assert!(frozen.allclose(&u0, 0.0), "case {case}: α=0 changed state");
+        let sharp = op.update(&x, 1.0).clone();
+        let q = a.matmul(&x, 1);
+        for i in 0..m {
+            for h in 0..nh {
+                let want = t[i] / q[(i, h)];
+                assert!(
+                    (sharp[(i, h)] - want).abs() <= 1e-12 * want.abs().max(1.0),
+                    "case {case}: α=1 mismatch"
+                );
+            }
+        }
+    }
+}
+
+/// JSON writer/parser round-trip over random documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.uniform_range(-1e6, 1e6) * 1e3).round() / 1e3),
+            3 => {
+                let len = rng.below(12);
+                Json::Str((0..len).map(|_| ('a'..='z').nth(rng.below(26)).unwrap()).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..200 {
+        let mut rng = Rng::seed_from(child_seed(0x15EA5E, case as u64));
+        let doc = random_json(&mut rng, 3);
+        let text = to_string_pretty(&doc);
+        let back = parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, doc, "case {case}");
+    }
+}
+
+/// Sparsity monotonicity: higher s never produces a denser kernel.
+#[test]
+fn prop_sparsity_monotone() {
+    for case in 0..SWEEPS {
+        let n = 32;
+        let count_tiny = |s: f64| {
+            let p = ProblemSpec::new(n).with_sparsity(s, 4).build(case as u64);
+            p.k.as_slice().iter().filter(|&&x| x < 1e-100).count()
+        };
+        let z = count_tiny(0.0);
+        let h = count_tiny(0.5);
+        let f = count_tiny(1.0);
+        assert!(z <= h && h <= f, "case {case}: {z} {h} {f}");
+    }
+}
+
+/// Condition classes give finite positive kernels at every sparsity.
+#[test]
+fn prop_kernel_entries_finite() {
+    for case in 0..SWEEPS {
+        let mut rng = Rng::seed_from(child_seed(0xFEED, case as u64));
+        let cond = [CondClass::Well, CondClass::Medium, CondClass::Ill][rng.below(3)];
+        let s = [0.0, 0.5, 0.9, 1.0][rng.below(4)];
+        let p = ProblemSpec::new(24)
+            .with_sparsity(s, 4)
+            .with_condition(cond)
+            .build(case as u64);
+        assert!(p.k.as_slice().iter().all(|x| x.is_finite() && *x >= 0.0));
+        // Diagonal blocks always survive sparsification.
+        assert!(p.k[(0, 0)] > 0.0);
+    }
+}

@@ -1,0 +1,220 @@
+//! Integration: AOT artifacts through PJRT vs the native oracle.
+//!
+//! These tests need `artifacts/` (run `make artifacts`); they skip with a
+//! message otherwise so `cargo test` stays green on a fresh checkout.
+
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::linalg::Mat;
+use fedsink::net::LatencyModel;
+use fedsink::rng::Rng;
+use fedsink::runtime::{make_backend, ComputeBackend, NativeBackend, PjrtRuntime, Target};
+use fedsink::sinkhorn::{CentralizedSolver, StopPolicy};
+use fedsink::workload::ProblemSpec;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = fedsink::config::default_artifacts_dir();
+    std::path::Path::new(&dir).join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (make artifacts)");
+                return;
+            }
+        }
+    };
+}
+
+fn sample(m: usize, n: usize, nh: usize, seed: u64) -> (Mat, Mat, Vec<f64>, Mat) {
+    let mut rng = Rng::seed_from(seed);
+    (
+        Mat::rand_uniform(m, n, 0.1, 1.0, &mut rng),
+        Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng),
+        (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect(),
+        Mat::rand_uniform(m, nh, 0.1, 1.0, &mut rng),
+    )
+}
+
+#[test]
+fn xla_block_op_matches_native() {
+    let dir = require_artifacts!();
+    let xla = make_backend(BackendKind::Xla, &dir, 1).expect("xla backend");
+    let native = NativeBackend::new(1);
+
+    // (m, n, N) on the AOT grid.
+    for &(m, n, nh) in &[(64usize, 64usize, 1usize), (32, 64, 1), (64, 64, 64), (128, 256, 1)] {
+        let (a, x, t, u0) = sample(m, n, nh, 42 + m as u64);
+        let mut op_x = xla.block_op(&a, Target::Vec(&t), u0.clone()).unwrap();
+        let mut op_n = native.block_op(&a, Target::Vec(&t), u0.clone()).unwrap();
+        for &alpha in &[1.0, 0.5] {
+            let got = op_x.update(&x, alpha).clone();
+            let want = op_n.update(&x, alpha).clone();
+            assert!(got.allclose(&want, 1e-11), "update mismatch at ({m},{n},{nh})");
+        }
+        let got = op_x.marginal(&x, &u0);
+        let want = op_n.marginal(&x, &u0);
+        for h in 0..nh {
+            assert!((got[h] - want[h]).abs() < 1e-10, "marginal at ({m},{n},{nh})[{h}]");
+        }
+    }
+}
+
+#[test]
+fn xla_mat_target_matches_native() {
+    let dir = require_artifacts!();
+    let xla = make_backend(BackendKind::Xla, &dir, 1).expect("xla backend");
+    let native = NativeBackend::new(1);
+    let (a, x, _, u0) = sample(64, 64, 64, 7);
+    let mut rng = Rng::seed_from(9);
+    let tm = Mat::rand_uniform(64, 64, 0.1, 1.0, &mut rng);
+    let mut op_x = xla.block_op(&a, Target::Mat(&tm), u0.clone()).unwrap();
+    let mut op_n = native.block_op(&a, Target::Mat(&tm), u0.clone()).unwrap();
+    let got = op_x.update(&x, 0.7).clone();
+    let want = op_n.update(&x, 0.7).clone();
+    assert!(got.allclose(&want, 1e-11));
+}
+
+#[test]
+fn xla_matvec_matches_native() {
+    let dir = require_artifacts!();
+    let xla = make_backend(BackendKind::Xla, &dir, 1).expect("xla backend");
+    let (a, x, t, u0) = sample(256, 256, 1, 3);
+    let mut op = xla.block_op(&a, Target::Vec(&t), u0).unwrap();
+    let got = op.matvec(&x).clone();
+    let want = a.matmul(&x, 1);
+    assert!(got.allclose(&want, 1e-11));
+}
+
+#[test]
+fn off_grid_shape_falls_back_to_native() {
+    let dir = require_artifacts!();
+    let xla = make_backend(BackendKind::Xla, &dir, 1).expect("xla backend");
+    // 17 × 23 is not on any AOT grid → silently served by the fallback.
+    let (a, x, t, u0) = sample(17, 23, 2, 5);
+    let mut op = xla.block_op(&a, Target::Vec(&t), u0).unwrap();
+    let got = op.update(&x, 1.0).clone();
+    let q = a.matmul(&x, 1);
+    for i in 0..17 {
+        for h in 0..2 {
+            assert!((got[(i, h)] - t[i] / q[(i, h)]).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn pallas_and_xla_impl_artifacts_agree() {
+    // The architecture requirement: the Pallas-lowered HLO (L1 kernels
+    // inside the L2 graph) computes the same numbers as the plain-XLA
+    // lowering, executed through PJRT.
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::shared(&dir).expect("runtime");
+    let man = rt.manifest();
+    let (m, n, nh) = (64, 64, 1);
+    let e_xla = man.find_impl("client_update", "xla", m, n, nh, 0);
+    let e_pal = man.find_impl("client_update", "pallas", m, n, nh, 0);
+    let (Some(e_xla), Some(e_pal)) = (e_xla, e_pal) else {
+        eprintln!("skipping: both impls not in manifest grid");
+        return;
+    };
+    let (a, x, t, u0) = sample(m, n, nh, 11);
+    let lits = vec![
+        xla::Literal::vec1(t.as_slice()), // placeholder replaced below
+    ];
+    drop(lits);
+    let mk = |data: &[f64], dims: &[i64]| {
+        xla::Literal::vec1(data).reshape(dims).expect("reshape")
+    };
+    let inputs = vec![
+        mk(a.as_slice(), &[m as i64, n as i64]),
+        mk(x.as_slice(), &[n as i64, nh as i64]),
+        xla::Literal::vec1(t.as_slice()),
+        mk(u0.as_slice(), &[m as i64, nh as i64]),
+        xla::Literal::vec1(&[0.7f64]),
+    ];
+    let out_xla = rt.run_entry(e_xla, &inputs).expect("xla artifact run");
+    let out_pal = rt.run_entry(e_pal, &inputs).expect("pallas artifact run");
+    assert_eq!(out_xla.len(), 1);
+    assert_eq!(out_xla[0].len(), m * nh);
+    for (a_, b_) in out_xla[0].iter().zip(&out_pal[0]) {
+        assert!((a_ - b_).abs() < 1e-11, "{a_} vs {b_}");
+    }
+}
+
+#[test]
+fn sweep_artifact_runs_w_iterations() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::shared(&dir).expect("runtime");
+    let Some(entry) = rt.manifest().find_w("sinkhorn_sweep", 64, 64, 1, 10) else {
+        eprintln!("skipping: no sweep artifact");
+        return;
+    };
+    let p = ProblemSpec::new(64).with_eps(0.5).build(13);
+    let n = 64i64;
+    let mk = |data: &[f64], dims: &[i64]| xla::Literal::vec1(data).reshape(dims).unwrap();
+    let inputs = vec![
+        mk(p.k.as_slice(), &[n, n]),
+        xla::Literal::vec1(p.a.as_slice()),
+        mk(p.b.as_slice(), &[n, 1]),
+        mk(Mat::ones(64, 1).as_slice(), &[n, 1]),
+        mk(Mat::ones(64, 1).as_slice(), &[n, 1]),
+        xla::Literal::vec1(&[1.0f64]),
+    ];
+    let out = rt.run_entry(entry, &inputs).expect("sweep run");
+    assert_eq!(out.len(), 2, "sweep returns (u, v)");
+    // Compare against 10 native iterations.
+    let mut u = vec![1.0; 64];
+    let mut v = vec![1.0; 64];
+    for _ in 0..10 {
+        for i in 0..64 {
+            let q: f64 = (0..64).map(|j| p.k[(i, j)] * v[j]).sum();
+            u[i] = p.a[i] / q;
+        }
+        for j in 0..64 {
+            let r: f64 = (0..64).map(|i| p.k[(i, j)] * u[i]).sum();
+            v[j] = p.b[(j, 0)] / r;
+        }
+    }
+    for i in 0..64 {
+        assert!((out[0][i] - u[i]).abs() < 1e-9 * u[i].abs().max(1.0), "u[{i}]");
+        assert!((out[1][i] - v[i]).abs() < 1e-9 * v[i].abs().max(1.0), "v[{i}]");
+    }
+}
+
+#[test]
+fn federated_solve_on_xla_backend_matches_native() {
+    let dir = require_artifacts!();
+    let p = ProblemSpec::new(64).with_eps(0.5).build(17);
+    let policy = StopPolicy { threshold: 1e-11, max_iters: 2000, ..Default::default() };
+    let mk_cfg = |backend| SolveConfig {
+        variant: Variant::SyncA2A,
+        backend,
+        clients: 4,
+        net: LatencyModel::zero(),
+        artifacts_dir: dir.clone(),
+        ..Default::default()
+    };
+    let out_x = fedsink::coordinator::run_federated(&p, &mk_cfg(BackendKind::Xla), policy, false);
+    let out_n =
+        fedsink::coordinator::run_federated(&p, &mk_cfg(BackendKind::Native), policy, false);
+    assert!(out_x.converged && out_n.converged);
+    assert!(out_x.state.u.allclose(&out_n.state.u, 1e-9));
+    assert!(out_x.state.v.allclose(&out_n.state.v, 1e-9));
+}
+
+#[test]
+fn centralized_solver_works_on_xla_backend() {
+    let dir = require_artifacts!();
+    let be = make_backend(BackendKind::Xla, &dir, 1).unwrap();
+    let p = ProblemSpec::new(256).with_eps(0.5).build(19);
+    let out = CentralizedSolver::new(be).solve(
+        &p,
+        StopPolicy { threshold: 1e-11, max_iters: 2000, ..Default::default() },
+        1.0,
+    );
+    assert!(out.converged());
+    let (ea, eb) = fedsink::sinkhorn::full_marginal_errors(&p, &out.state, 0);
+    assert!(ea < 1e-9 && eb < 1e-9, "({ea}, {eb})");
+}

@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Render results/*.json (fedsink --out dumps) as markdown tables.
+
+Usage: python tools/report.py [results_dir] > report.md
+
+Each experiment document carries an `experiment` tag; this tool picks a
+renderer per tag and degrades to a key dump for unknown shapes, so new
+drivers keep working without edits here.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def fmt(x):
+    if isinstance(x, bool):
+        return "yes" if x else "no"
+    if isinstance(x, float):
+        return f"{x:.4g}"
+    return str(x)
+
+
+def table(headers, rows):
+    out = ["| " + " | ".join(headers) + " |", "|" + "---|" * len(headers)]
+    for r in rows:
+        out.append("| " + " | ".join(fmt(c) for c in r) + " |")
+    return "\n".join(out)
+
+
+def render_epsilon(doc):
+    rows = [
+        (r["eps"], r["i_min"], r["objective"], r["err_a"], r["collapsed"])
+        for r in doc["rows"]
+    ]
+    return table(["eps", "I_min", "objective", "err_a", "collapsed"], rows)
+
+
+def render_timing(doc):
+    rows = [
+        (r["nodes"], r["comp_mean"], r["comp_std"], r["comm_mean"], r["comm_std"])
+        for r in doc["rows"]
+    ]
+    return table(["nodes", "comp mean (s)", "std", "comm mean (s)", "std"], rows)
+
+
+def render_vectorized(doc):
+    parts = []
+    if "serial_compare" in doc:
+        sc = doc["serial_compare"]
+        parts.append(
+            table(
+                ["N", "1 problem (s)", "vectorized (s)", "serial (s)"],
+                [(sc["nhist"], sc["one_secs"], sc["vectorized_secs"], sc["serial_secs"])],
+            )
+        )
+    rows = [(r["nhist"], r["nodes"], r["comp_secs"], r["comm_secs"]) for r in doc["rows"]]
+    parts.append(table(["N", "nodes", "comp (s)", "comm (s)"], rows))
+    return "\n\n".join(parts)
+
+
+def render_stepsize(doc):
+    headers = ["nodes"] + [f"α={c['alpha']}" for c in doc["rows"][0]["cells"]]
+    rows = []
+    for r in doc["rows"]:
+        rows.append([r["nodes"]] + [c["mean_secs"] for c in r["cells"]])
+    return table(headers, rows)
+
+
+def render_delays(doc):
+    rows = [
+        (r["nodes"], r["samples"], r["tau_max"], r["tau_mean"], r["tau_std"])
+        for r in doc["rows"]
+    ]
+    return table(["nodes", "samples", "tau_max", "tau_mean", "tau_std"], rows)
+
+
+def render_robustness(doc):
+    parts = []
+    for t in doc["tables"]:
+        parts.append(f"**{t['nodes']} nodes**")
+        for s in t["settings"]:
+            rows = [
+                (c["limit"], c["threshold"], c["avg_secs"], c["pct_convergence"],
+                 c["pct_timeout"], c["pct_divergence"])
+                for c in s["cells"]
+            ]
+            parts.append(f"*{s['setting']}*\n\n" + table(
+                ["limit", "thresh", "avg s", "% conv", "% timeout", "% div"], rows))
+    if doc.get("alpha_sweep"):
+        rows = [(c["alpha"], c["pct_convergence"]) for c in doc["alpha_sweep"]]
+        parts.append("*Fig 13 α sweep*\n\n" + table(["alpha", "% conv"], rows))
+    return "\n\n".join(parts)
+
+
+def render_perf_grid(doc):
+    rows = [
+        (r["variant"], r["n"], r["clients"], r["nhist"], r["sparsity"], r["cond"],
+         r["comp_secs"], r["comm_secs"], r["total_secs"], r["iterations"], r["converged"])
+        for r in doc["rows"]
+    ]
+    out = table(
+        ["variant", "n", "c", "N", "s", "cond", "comp", "comm", "total", "iters", "cvg"],
+        rows,
+    )
+    if doc.get("chi2"):
+        out += "\n\n*Table VI (χ²)*\n\n" + table(
+            ["n", "chi2", "p", "df"],
+            [(r["n"], r["chi2"], r["p_value"], r["df"]) for r in doc["chi2"]],
+        )
+    return out
+
+
+def render_finance(doc):
+    parts = []
+    if "paper_example" in doc:
+        rows = [
+            (r["variant"], r["rho_worst"], r["inner_iters"], r["secs"], r["converged"])
+            for r in doc["paper_example"]
+        ]
+        parts.append(table(["variant", "rho_worst", "iters", "secs", "cvg"], rows))
+    if "synthetic" in doc:
+        s = doc["synthetic"]
+        parts.append(table(list(s.keys()), [list(s.values())]))
+    return "\n\n".join(parts)
+
+
+def render_generic(doc):
+    keys = [k for k, v in doc.items() if not isinstance(v, (list, dict))]
+    return table(keys, [[doc[k] for k in keys]])
+
+
+RENDERERS = {
+    "epsilon-study": render_epsilon,
+    "timing": render_timing,
+    "vectorized": render_vectorized,
+    "stepsize": render_stepsize,
+    "delays": render_delays,
+    "robustness": render_robustness,
+    "perf-grid": render_perf_grid,
+    "finance": render_finance,
+}
+
+
+def main() -> int:
+    results_dir = sys.argv[1] if len(sys.argv) > 1 else "results"
+    if not os.path.isdir(results_dir):
+        print(f"no results directory {results_dir!r}", file=sys.stderr)
+        return 1
+    print("# fedsink experiment report\n")
+    for name in sorted(os.listdir(results_dir)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(results_dir, name)
+        try:
+            with open(path) as fh:
+                doc = json.load(fh)
+        except json.JSONDecodeError as e:
+            print(f"## {name}\n\n(unparseable: {e})\n")
+            continue
+        tag = doc.get("experiment", "?")
+        print(f"## {name} — `{tag}`\n")
+        renderer = RENDERERS.get(tag, render_generic)
+        try:
+            print(renderer(doc))
+        except (KeyError, IndexError, TypeError) as e:
+            print(f"(renderer failed: {e}; falling back)\n")
+            print(render_generic(doc))
+        print()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
