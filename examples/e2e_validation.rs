@@ -9,8 +9,11 @@
 //! async convergence rate). Results are recorded in EXPERIMENTS.md.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example e2e_validation
+//! make artifacts && cargo run --release --features xla-backend --example e2e_validation
 //! ```
+//!
+//! Built without the `xla-backend` feature (the offline default) the
+//! driver still validates the full protocol stack on the native kernels.
 
 use fedsink::config::{BackendKind, SolveConfig, Variant};
 use fedsink::coordinator::{run_federated, slowest_node};
@@ -21,12 +24,17 @@ use fedsink::workload::ProblemSpec;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = fedsink::config::default_artifacts_dir();
-    anyhow::ensure!(
-        std::path::Path::new(&artifacts).join("manifest.json").exists(),
-        "artifacts required: run `make artifacts` first"
-    );
+    // Prefer the full XLA path when this build carries it *and* the AOT
+    // artifacts exist; otherwise validate the stack on the native kernels.
+    let have_artifacts =
+        std::path::Path::new(&artifacts).join("manifest.json").exists();
+    let backend = if cfg!(feature = "xla-backend") && have_artifacts {
+        BackendKind::Xla
+    } else {
+        BackendKind::Native
+    };
     println!("=== Federated Sinkhorn end-to-end validation ===");
-    println!("artifacts: {artifacts}\n");
+    println!("artifacts: {artifacts} (backend: {})\n", backend.name());
 
     // --- Stage 1: n=512, N=8 through the full XLA path ----------------
     let n = 512;
@@ -34,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let problem = ProblemSpec::new(n).with_hists(nh).with_eps(0.05).build(99);
     let policy = StopPolicy { threshold: 1e-10, max_iters: 4000, ..Default::default() };
 
-    println!("stage 1: n={n}, N={nh} histograms, XLA backend, LAN fabric");
+    println!("stage 1: n={n}, N={nh} histograms, {} backend, LAN fabric", backend.name());
     println!(
         "{:<14} {:>3} {:>6} {:>6} {:>10} {:>10} {:>10} {:>11}",
         "variant", "c", "conv", "iters", "comp(s)", "comm(s)", "total(s)", "err vs ctr"
@@ -55,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     ] {
         let cfg = SolveConfig {
             variant,
-            backend: BackendKind::Xla,
+            backend,
             clients,
             alpha,
             net: LatencyModel::lan(),
@@ -64,7 +72,7 @@ fn main() -> anyhow::Result<()> {
         };
         let out = run_federated(&problem, &cfg, policy, false);
         let slow = slowest_node(&out.node_stats);
-        let plan = fedsink::sinkhorn::transport_plan(&problem.k, &out.state, 0);
+        let plan = fedsink::sinkhorn::transport_plan(&problem, &out.state, 0);
         let dev = match &reference {
             None => {
                 reference = Some(plan);

@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
 
     // Per-branch realignment summary: how much demand mass moves out of
     // each branch's price band.
-    let plan = transport_plan(&problem.k, &out.state, 0);
+    let plan = transport_plan(&problem, &out.state, 0);
     println!("\n{:>8} {:>16} {:>16}", "branch", "mass kept", "mass moved");
     for bch in 0..branches {
         let (r0, r1) = (bch * skus_per_branch, (bch + 1) * skus_per_branch);

@@ -17,12 +17,15 @@ fn main() -> anyhow::Result<()> {
     let n = 256;
     let problem = ProblemSpec::new(n).with_eps(0.05).build(7);
 
-    // Prefer the AOT/PJRT backend when artifacts are built.
+    // Prefer the AOT/PJRT backend when this build carries it and the
+    // artifacts are built.
     let artifacts = fedsink::config::default_artifacts_dir();
-    let backend = if std::path::Path::new(&artifacts).join("manifest.json").exists() {
+    let backend = if cfg!(feature = "xla-backend")
+        && std::path::Path::new(&artifacts).join("manifest.json").exists()
+    {
         BackendKind::Xla
     } else {
-        eprintln!("artifacts not found — run `make artifacts`; using native backend");
+        eprintln!("no xla runtime/artifacts in this build; using native backend");
         BackendKind::Native
     };
 
@@ -52,7 +55,7 @@ fn main() -> anyhow::Result<()> {
             out.secs,
         );
         assert!(out.converged);
-        plans.push(transport_plan(&problem.k, &out.state, 0));
+        plans.push(transport_plan(&problem, &out.state, 0));
     }
 
     // Prop. 1 in action: all three transport plans coincide.

@@ -1,16 +1,16 @@
 //! Micro-benchmarks of the compute hot path + the backend ablations:
 //! * native dense GEMV/GEMM, threaded scaling, CSR crossover (sparsity);
-//! * XLA artifact dispatch: plain-XLA vs Pallas-lowered modules vs the
-//!   native kernels (the L1 impl ablation of DESIGN.md §7).
+//! * log-domain logsumexp vs GEMV — the stabilized small-ε path's cost
+//!   relative to the linear hot path, tracked in the perf trajectory;
+//! * XLA artifact dispatch (needs `--features xla-backend` + artifacts):
+//!   plain-XLA vs Pallas-lowered modules vs the native kernels (the L1
+//!   impl ablation of DESIGN.md §7).
 
 mod common;
 
 use fedsink::benchkit::{section, Bench};
-use fedsink::config::BackendKind;
-use fedsink::linalg::{Csr, Mat};
+use fedsink::linalg::Mat;
 use fedsink::rng::Rng;
-use fedsink::runtime::{make_backend, NativeBackend, PjrtRuntime, Target};
-use fedsink::runtime::ComputeBackend;
 
 fn main() {
     let b = Bench::default();
@@ -28,6 +28,19 @@ fn main() {
         }
     }
 
+    section("log-domain logsumexp vs GEMV (same shapes, log-kernel input)");
+    for &(n, nh) in &[(512usize, 1usize), (512, 64), (1024, 1), (1024, 64)] {
+        // A log-kernel block (−C/ε scale) and log-scalings.
+        let a_log = Mat::rand_uniform(n, n, -40.0, 0.0, &mut rng);
+        let x_log = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        let mut out = Mat::zeros(n, nh);
+        for threads in [1usize, 4] {
+            b.run(&format!("logsumexp n={n} N={nh} threads={threads}"), || {
+                a_log.logsumexp_into(&x_log, &mut out, threads)
+            });
+        }
+    }
+
     section("CSR vs dense at off-diagonal sparsity (n=1024, N=1)");
     let n = 1024;
     for &s in &[0.0f64, 0.5, 0.9, 1.0] {
@@ -36,12 +49,25 @@ fn main() {
             .build(5);
         let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
         let mut out = Mat::zeros(n, 1);
-        let csr = Csr::from_dense(&p.k, 1e-300);
+        let csr = fedsink::linalg::Csr::from_dense(p.kernel(), 1e-300);
         b.run(&format!("dense  s={s} (density {:.2})", csr.density()), || {
-            p.k.matmul_into(&x, &mut out, 1)
+            p.kernel().matmul_into(&x, &mut out, 1)
         });
         b.run(&format!("csr    s={s}"), || csr.matmul_into(&x, &mut out, 1));
     }
+
+    xla_ablation(&b, &mut rng);
+}
+
+#[cfg(not(feature = "xla-backend"))]
+fn xla_ablation(_b: &Bench, _rng: &mut Rng) {
+    eprintln!("skipping XLA ablation benches: built without --features xla-backend");
+}
+
+#[cfg(feature = "xla-backend")]
+fn xla_ablation(b: &Bench, rng: &mut Rng) {
+    use fedsink::config::BackendKind;
+    use fedsink::runtime::{make_backend, ComputeBackend, NativeBackend, PjrtRuntime, Target};
 
     if !common::artifacts_available() {
         eprintln!("skipping XLA ablation benches: run `make artifacts`");
@@ -50,13 +76,13 @@ fn main() {
 
     section("backend ablation: client_update (m=n, N=1)");
     let dir = fedsink::config::default_artifacts_dir();
-    let xla = make_backend(BackendKind::Xla, &dir, 1).expect("xla backend");
+    let xla_be = make_backend(BackendKind::Xla, &dir, 1).expect("xla backend");
     let native = NativeBackend::new(1);
     for &n in &[256usize, 512] {
-        let a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
-        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
+        let a = Mat::rand_uniform(n, n, 0.1, 1.0, rng);
+        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, rng);
         let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
-        let mut op_x = xla.block_op(&a, Target::Vec(&t), Mat::ones(n, 1)).unwrap();
+        let mut op_x = xla_be.block_op(&a, Target::Vec(&t), Mat::ones(n, 1)).unwrap();
         let mut op_n = native.block_op(&a, Target::Vec(&t), Mat::ones(n, 1)).unwrap();
         b.run(&format!("xla    update n={n}"), || {
             op_x.update(&x, 1.0);
@@ -75,8 +101,8 @@ fn main() {
         ) else {
             continue;
         };
-        let a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
-        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
+        let a = Mat::rand_uniform(n, n, 0.1, 1.0, rng);
+        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, rng);
         let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
         let mk = |d: &[f64], dims: &[i64]| xla::Literal::vec1(d).reshape(dims).unwrap();
         let inputs = vec![
@@ -102,7 +128,7 @@ fn main() {
         let p = fedsink::workload::ProblemSpec::new(n).with_eps(0.1).build(9);
         let mk = |d: &[f64], dims: &[i64]| xla::Literal::vec1(d).reshape(dims).unwrap();
         let inputs = vec![
-            mk(p.k.as_slice(), &[n as i64, n as i64]),
+            mk(p.kernel().as_slice(), &[n as i64, n as i64]),
             xla::Literal::vec1(p.a.as_slice()),
             mk(p.b.as_slice(), &[n as i64, 1]),
             mk(Mat::ones(n, 1).as_slice(), &[n as i64, 1]),
@@ -111,9 +137,9 @@ fn main() {
         ];
         b.run(&format!("sweep w=10 n={n}"), || rt.run_entry(sweep, &inputs).unwrap());
         let be = make_backend(BackendKind::Xla, &dir, 1).unwrap();
-        let mut u_op = be.block_op(&p.k, Target::Vec(&p.a), Mat::ones(n, 1)).unwrap();
-        let kt = p.k.transpose();
-        let mut v_op = be.block_op(&kt, Target::Mat(&p.b), Mat::ones(n, 1)).unwrap();
+        let mut u_op = be.block_op(p.kernel(), Target::Vec(&p.a), Mat::ones(n, 1)).unwrap();
+        let kt = p.kernel_t();
+        let mut v_op = be.block_op(kt, Target::Mat(&p.b), Mat::ones(n, 1)).unwrap();
         b.run(&format!("10 x step dispatch n={n}"), || {
             for _ in 0..10 {
                 let u = u_op.update(v_op.state(), 1.0).clone();

@@ -23,6 +23,10 @@ pub fn paper_scale() -> bool {
 }
 
 pub fn artifacts_available() -> bool {
+    // Artifacts are only usable when the PJRT runtime is compiled in.
+    if !cfg!(feature = "xla-backend") {
+        return false;
+    }
     let dir = fedsink::config::default_artifacts_dir();
     std::path::Path::new(&dir).join("manifest.json").exists()
 }

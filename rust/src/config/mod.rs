@@ -10,7 +10,8 @@ mod file;
 
 pub use file::{load_file, FileError};
 
-use crate::workload::CondClass;
+use crate::linalg::Domain;
+use crate::workload::{CondClass, Problem};
 use std::collections::BTreeMap;
 
 /// Which federated variant to run — the paper's four protocols plus the
@@ -54,6 +55,61 @@ impl Variant {
     ];
 }
 
+/// `exp(−C/ε)` leaves the normal f64 range once `max C / ε` exceeds
+/// ~708.4 (−ln(f64::MIN_POSITIVE), subnormals with shrinking mantissa
+/// beyond) and is exactly zero past ~744.4 (−1074·ln 2); `auto` flips to
+/// the log domain at the edge of the normal range, where the linear
+/// kernel starts losing mantissa bits.
+pub const AUTO_LOG_RATIO: f64 = 700.0;
+
+/// Requested numerics domain: the two concrete representations plus
+/// `auto`, which picks per problem based on the kernel's exponent range.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DomainChoice {
+    Linear,
+    Log,
+    /// Log iff `max C / ε > AUTO_LOG_RATIO` — i.e. exactly when the
+    /// linear Gibbs kernel would underflow to zero.
+    Auto,
+}
+
+impl DomainChoice {
+    /// `auto` plus whatever spellings [`Domain::parse`] accepts (one
+    /// shared string table — the two never diverge).
+    pub fn parse(s: &str) -> Option<DomainChoice> {
+        if s == "auto" {
+            return Some(DomainChoice::Auto);
+        }
+        Domain::parse(s).map(|d| match d {
+            Domain::Linear => DomainChoice::Linear,
+            Domain::Log => DomainChoice::Log,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DomainChoice::Linear => "linear",
+            DomainChoice::Log => "log",
+            DomainChoice::Auto => "auto",
+        }
+    }
+
+    /// Resolve against a concrete problem.
+    pub fn resolve(self, p: &Problem) -> Domain {
+        match self {
+            DomainChoice::Linear => Domain::Linear,
+            DomainChoice::Log => Domain::Log,
+            DomainChoice::Auto => {
+                if p.cost_max() / p.eps > AUTO_LOG_RATIO {
+                    Domain::Log
+                } else {
+                    Domain::Linear
+                }
+            }
+        }
+    }
+}
+
 /// Which compute backend executes the block products.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
@@ -85,6 +141,9 @@ impl BackendKind {
 pub struct SolveConfig {
     pub variant: Variant,
     pub backend: BackendKind,
+    /// Numerics domain for the scaling iteration (linear, log-stabilized
+    /// or per-problem auto selection).
+    pub domain: DomainChoice,
     pub clients: usize,
     /// Damping step size α (async variants; 1.0 = undamped).
     pub alpha: f64,
@@ -118,6 +177,7 @@ impl Default for SolveConfig {
         Self {
             variant: Variant::SyncA2A,
             backend: BackendKind::Xla,
+            domain: DomainChoice::Auto,
             clients: 2,
             alpha: 1.0,
             local_iters: 1,
@@ -253,5 +313,33 @@ mod tests {
         assert!(c.alpha > 0.0 && c.alpha <= 1.0);
         assert!(c.max_iters > 0);
         assert_eq!(c.local_iters, 1);
+        assert_eq!(c.domain, DomainChoice::Auto);
+    }
+
+    #[test]
+    fn domain_choice_parses_and_resolves() {
+        for d in [DomainChoice::Linear, DomainChoice::Log, DomainChoice::Auto] {
+            assert_eq!(DomainChoice::parse(d.name()), Some(d));
+        }
+        assert_eq!(DomainChoice::parse("bogus"), None);
+        // Auto: moderate ε stays linear, underflow-range ε flips to log.
+        let easy = crate::workload::Problem::paper_4x4(0.5);
+        let hard = crate::workload::Problem::paper_4x4(1e-3);
+        assert_eq!(DomainChoice::Auto.resolve(&easy), Domain::Linear);
+        assert_eq!(DomainChoice::Auto.resolve(&hard), Domain::Log);
+        assert_eq!(DomainChoice::Log.resolve(&easy), Domain::Log);
+        assert_eq!(DomainChoice::Linear.resolve(&hard), Domain::Linear);
+    }
+
+    #[test]
+    fn auto_ignores_deliberate_sparsification_zeros() {
+        // §IV-D sparsified problems push killed blocks to cost 800·ε so
+        // they underflow *on purpose* — auto must stay linear (the CSR
+        // fast path), keyed off the genuine cost range only.
+        let sparse = crate::workload::ProblemSpec::new(32)
+            .with_sparsity(0.5, 4)
+            .build(7);
+        assert!(sparse.masked_cost_min.is_some());
+        assert_eq!(DomainChoice::Auto.resolve(&sparse), Domain::Linear);
     }
 }

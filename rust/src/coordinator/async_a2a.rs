@@ -56,18 +56,21 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let clock = Clock::new();
     let mut timer = SplitTimer::new();
 
+    // Domain-generic block operators (log ops iterate log-scalings; the
+    // broadcast slices below are then log-scaling slices).
+    let one = ctx.domain.one();
     let mut u_op = ctx
         .backend
-        .block_op(&shard.k_row, Target::Vec(&shard.a), Mat::ones(m, nh))
+        .block_op_in(ctx.domain, &shard.k_row, Target::Vec(&shard.a), Mat::full(m, nh, one))
         .expect("u-op");
     let mut v_op = ctx
         .backend
-        .block_op(&shard.k_col_t, Target::Mat(&shard.b), Mat::ones(m, nh))
+        .block_op_in(ctx.domain, &shard.k_col_t, Target::Mat(&shard.b), Mat::full(m, nh, one))
         .expect("v-op");
 
     // Local (possibly stale) copies of the full scaling state.
-    let mut u_full = Mat::ones(n, nh);
-    let mut v_full = Mat::ones(n, nh);
+    let mut u_full = Mat::full(n, nh, one);
+    let mut v_full = Mat::full(n, nh, one);
 
     let mut peers: Vec<PeerView> = (0..c)
         .map(|_| PeerView { last_iter: 0, done: false })

@@ -102,6 +102,68 @@ mod tests {
         }
     }
 
+    /// Prop. 1 in the log domain, in the regime the linear kernel cannot
+    /// represent at all: ε = 1e-3 on the 4×4 worked example puts every
+    /// off-diagonal Gibbs entry below exp(−1000). Both synchronous
+    /// protocols must reproduce the log-domain centralized iterates.
+    #[test]
+    fn log_domain_sync_variants_match_centralized_at_tiny_eps() {
+        use crate::config::DomainChoice;
+        use crate::linalg::Domain;
+        let p = Problem::paper_4x4(1e-3);
+        let pol = StopPolicy {
+            threshold: 1e-10,
+            max_iters: 50_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        let be = make_backend(BackendKind::Native, "", 1).unwrap();
+        let central = CentralizedSolver::new(be).solve_in(&p, pol, 1.0, Domain::Log);
+        assert!(central.converged(), "centralized log solve: {:?}", central.stop);
+        for variant in [Variant::SyncA2A, Variant::SyncStar] {
+            for c in [2usize, 4] {
+                let mut fcfg = cfg(variant, c);
+                fcfg.domain = DomainChoice::Log;
+                let out = run_federated(&p, &fcfg, pol, false);
+                assert!(out.converged, "{} c={c}: {:?}", variant.name(), out.stop);
+                assert_eq!(out.state.domain, Domain::Log);
+                // Log-scalings are duals/ε — O(1000) here — so compare
+                // with an absolute 1e-9 tolerance on the log values
+                // (allclose's relative term only loosens this).
+                assert!(
+                    out.state.u.allclose(&central.state.u, 1e-9),
+                    "{} c={c}: u mismatch",
+                    variant.name()
+                );
+                assert!(
+                    out.state.v.allclose(&central.state.v, 1e-9),
+                    "{} c={c}: v mismatch",
+                    variant.name()
+                );
+            }
+        }
+    }
+
+    /// `--domain auto` flips to log exactly when the kernel underflows,
+    /// without the caller doing anything: same tiny-ε problem, default
+    /// Auto choice, native backend.
+    #[test]
+    fn auto_domain_rescues_tiny_eps_federated_solve() {
+        use crate::linalg::Domain;
+        let p = Problem::paper_4x4(1e-3);
+        let pol = StopPolicy {
+            threshold: 1e-10,
+            max_iters: 50_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        let out = run_federated(&p, &cfg(Variant::SyncA2A, 2), pol, false);
+        assert!(out.converged, "auto-domain run: {:?}", out.stop);
+        assert_eq!(out.state.domain, Domain::Log);
+        let (ea, eb) = crate::sinkhorn::full_marginal_errors(&p, &out.state, 0);
+        assert!(ea < 1e-8 && eb < 1e-8, "({ea}, {eb})");
+    }
+
     #[test]
     fn async_a2a_converges_with_damping() {
         let p = ProblemSpec::new(16).with_eps(0.5).build(5);

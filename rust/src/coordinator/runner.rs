@@ -1,8 +1,8 @@
 //! Shared scaffolding: spawn node threads, collect per-node outcomes.
 
 use super::{aggregate_stop, async_a2a, star, sync_a2a};
-use crate::config::{SolveConfig, Variant};
-use crate::linalg::Mat;
+use crate::config::{DomainChoice, SolveConfig, Variant};
+use crate::linalg::{Domain, Mat};
 use crate::metrics::SplitTimer;
 use crate::net::{DelayTracker, LatencyModel, SimNet};
 use crate::runtime::make_backend;
@@ -65,6 +65,10 @@ pub struct RunCtx<'a> {
     pub cfg: &'a SolveConfig,
     pub policy: StopPolicy,
     pub traced: bool,
+    /// Resolved numerics domain (cfg.domain is a *choice*; this is the
+    /// per-problem decision every node follows, so the whole run
+    /// exchanges one kind of scaling slice).
+    pub domain: Domain,
     pub backend: Arc<dyn crate::runtime::ComputeBackend>,
     pub net: Arc<SimNet>,
     pub delays: Arc<DelayTracker>,
@@ -90,12 +94,29 @@ pub fn run_federated(
     let backend = make_backend(cfg.backend, &cfg.artifacts_dir, cfg.compute_threads)
         .expect("backend construction");
 
+    // Resolve the numerics domain once for the whole run. An *automatic*
+    // log pick degrades gracefully on a backend without a log operator;
+    // an explicit `--domain log` is honored and fails in the backend with
+    // its descriptive error (the CLI rejects that combination up front).
+    let mut domain = cfg.domain.resolve(p);
+    if domain == Domain::Log
+        && cfg.domain == DomainChoice::Auto
+        && !backend.supports_log()
+    {
+        eprintln!(
+            "warning: auto-selected log domain is unsupported by the '{}' backend; \
+             staying linear (expect underflow at this ε)",
+            backend.name()
+        );
+        domain = Domain::Linear;
+    }
+
     if cfg.variant == Variant::Centralized {
         let solver = CentralizedSolver::new(backend);
         let out = if traced {
-            solver.solve_traced(p, policy, cfg.alpha)
+            solver.solve_traced_in(p, policy, cfg.alpha, domain)
         } else {
-            solver.solve(p, policy, cfg.alpha)
+            solver.solve_in(p, policy, cfg.alpha, domain)
         };
         let mut timer = SplitTimer::new();
         timer.add_comp(out.secs);
@@ -122,7 +143,7 @@ pub fn run_federated(
         };
     }
 
-    let partition = Partition::new(p, cfg.clients);
+    let partition = Partition::new_in(p, cfg.clients, domain);
     let nodes = match cfg.variant {
         Variant::SyncStar | Variant::AsyncStar => cfg.clients + 1, // + server
         _ => cfg.clients,
@@ -137,6 +158,7 @@ pub fn run_federated(
         cfg,
         policy,
         traced,
+        domain,
         backend,
         net,
         delays: delays.clone(),
@@ -153,7 +175,7 @@ pub fn run_federated(
     // Assemble the global state from client slices (paper: a consistent
     // broadcast at the end gives every node the full u, v).
     let nh = p.hists();
-    let mut state = State::ones(p.n, nh);
+    let mut state = State::init(p.n, nh, domain);
     let m = partition.m();
     for out in &outcomes {
         if let Some((u_jj, v_jj)) = &out.slices {

@@ -15,9 +15,17 @@
 //! Asynchronous: the server recomputes products from whatever slices
 //! have arrived (latest-wins) and streams chunks back; clients fold in
 //! the freshest chunk, apply the damped update, and stop independently.
+//!
+//! Both modes are generic over the run's numerics [`Domain`]: in the log
+//! domain the server's products are row-wise logsumexps of
+//! `log K + log v`, the scattered chunks are `log(K v)` rows, and every
+//! exchanged slice is a log-scaling slice (the quantity the paper's
+//! privacy layer instruments). Client updates divide in log space and
+//! the convergence errors stay linear-domain L1, so the stopping rule is
+//! identical across domains.
 
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
-use crate::linalg::Mat;
+use crate::linalg::{Domain, Mat};
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{bcast, gather, TagKind};
 use crate::runtime::Target;
@@ -53,20 +61,32 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     let mut timer = SplitTimer::new();
 
     // The server's two resident operators (only `matvec` is used; the
-    // target is a placeholder — the server never sees a or b).
+    // target is a placeholder — the server never sees a or b). Kernel
+    // and its transpose come from the problem's shared cache in the
+    // run's numerics domain.
+    let one = ctx.domain.one();
     let dummy = vec![1.0; n];
     let mut k_op = ctx
         .backend
-        .block_op(&p.k, Target::Vec(&dummy), Mat::ones(n, nh))
+        .block_op_in(
+            ctx.domain,
+            p.kernel_for(ctx.domain),
+            Target::Vec(&dummy),
+            Mat::full(n, nh, one),
+        )
         .expect("k-op");
-    let kt = p.k.transpose();
     let mut kt_op = ctx
         .backend
-        .block_op(&kt, Target::Vec(&dummy), Mat::ones(n, nh))
+        .block_op_in(
+            ctx.domain,
+            p.kernel_t_for(ctx.domain),
+            Target::Vec(&dummy),
+            Mat::full(n, nh, one),
+        )
         .expect("kt-op");
 
-    let mut v_full = Mat::ones(n, nh);
-    let mut u_full = Mat::ones(n, nh);
+    let mut v_full = Mat::full(n, nh, one);
+    let mut u_full = Mat::full(n, nh, one);
     let mut stop = StopReason::MaxIters;
     let mut final_err = f64::INFINITY;
     let mut iterations = 0;
@@ -146,8 +166,13 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let clock = Clock::new();
     let mut timer = SplitTimer::new();
 
-    let mut u_jj = Mat::ones(m, nh);
-    let mut v_jj = Mat::ones(m, nh);
+    let domain = ctx.domain;
+    // In the log domain the element-wise update divides by the product
+    // in log space: log u ← α(log a − q) + (1−α) log u. Precompute the
+    // log targets once.
+    let targets = ClientTargets::new(shard, domain);
+    let mut u_jj = Mat::full(m, nh, domain.one());
+    let mut v_jj = Mat::full(m, nh, domain.one());
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;
     let mut final_err = f64::INFINITY;
@@ -169,7 +194,7 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // post-update would read 0 identically at α = 1. Timeout flags
         // ride along so stopping stays lock-step with the server.
         if ctx.policy.check_at(k) {
-            let local = timer.comp(|| block_err(&u_jj, &q, &shard.a, m, nh));
+            let local = timer.comp(|| block_err(&u_jj, &q, &shard.a, m, nh, domain));
             let timed_out = ctx.policy.timeout_secs > 0.0
                 && clock.now() > ctx.policy.timeout_secs;
             round += 1;
@@ -193,29 +218,16 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             }
         }
 
-        // u_jj ← α a/q + (1−α) u_jj.
-        timer.comp(|| {
-            for i in 0..m {
-                for h in 0..nh {
-                    let qv = q[i * nh + h];
-                    u_jj[(i, h)] = alpha * (shard.a[i] / qv) + (1.0 - alpha) * u_jj[(i, h)];
-                }
-            }
-        });
+        // u_jj ← α a⊘q + (1−α) u_jj (division is a log-subtraction in
+        // the log domain).
+        timer.comp(|| targets.damped_u_update(&mut u_jj, &q, alpha));
 
-        // Send u slice; receive r chunk; v_jj ← α b/r + (1−α) v_jj.
+        // Send u slice; receive r chunk; v_jj ← α b⊘r + (1−α) v_jj.
         round += 1;
         timer.comm(|| gather(&ep, server, TagKind::U, round, u_jj.as_slice(), k64));
         round += 1;
         let r = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
-        timer.comp(|| {
-            for i in 0..m {
-                for h in 0..nh {
-                    let rv = r[i * nh + h];
-                    v_jj[(i, h)] = alpha * (shard.b[(i, h)] / rv) + (1.0 - alpha) * v_jj[(i, h)];
-                }
-            }
-        });
+        timer.comp(|| targets.damped_v_update(&mut v_jj, &r, alpha));
     }
 
     NodeOutcome {
@@ -239,19 +251,29 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     let clock = Clock::new();
     let mut timer = SplitTimer::new();
 
+    let one = ctx.domain.one();
     let dummy = vec![1.0; n];
     let mut k_op = ctx
         .backend
-        .block_op(&p.k, Target::Vec(&dummy), Mat::ones(n, nh))
+        .block_op_in(
+            ctx.domain,
+            p.kernel_for(ctx.domain),
+            Target::Vec(&dummy),
+            Mat::full(n, nh, one),
+        )
         .expect("k-op");
-    let kt = p.k.transpose();
     let mut kt_op = ctx
         .backend
-        .block_op(&kt, Target::Vec(&dummy), Mat::ones(n, nh))
+        .block_op_in(
+            ctx.domain,
+            p.kernel_t_for(ctx.domain),
+            Target::Vec(&dummy),
+            Mat::full(n, nh, one),
+        )
         .expect("kt-op");
 
-    let mut v_full = Mat::ones(n, nh);
-    let mut u_full = Mat::ones(n, nh);
+    let mut v_full = Mat::full(n, nh, one);
+    let mut u_full = Mat::full(n, nh, one);
     let mut done = vec![false; c];
     // Freshest client iteration seen per client (either kind) — used to
     // throttle fast clients: a client more than `bound` iterations ahead
@@ -353,10 +375,12 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let clock = Clock::new();
     let mut timer = SplitTimer::new();
 
-    let mut u_jj = Mat::ones(m, nh);
-    let mut v_jj = Mat::ones(m, nh);
-    let mut q_latest = vec![1.0; m * nh];
-    let mut r_latest = vec![1.0; m * nh];
+    let domain = ctx.domain;
+    let targets = ClientTargets::new(shard, domain);
+    let mut u_jj = Mat::full(m, nh, domain.one());
+    let mut v_jj = Mat::full(m, nh, domain.one());
+    let mut q_latest = vec![domain.one(); m * nh];
+    let mut r_latest = vec![domain.one(); m * nh];
     let bound = ctx.cfg.max_staleness.max(1);
     let mut stale_rounds: u64 = 0;
     let mut trace = Vec::new();
@@ -394,19 +418,12 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // (before the u-update — post-update it is (1−α)-scaled and
         // reads 0 at α = 1).
         let pre_err = if ctx.policy.check_at(k) {
-            Some(timer.comp(|| block_err(&u_jj, &q_latest, &shard.a, m, nh)))
+            Some(timer.comp(|| block_err(&u_jj, &q_latest, &shard.a, m, nh, domain)))
         } else {
             None
         };
 
-        timer.comp(|| {
-            for i in 0..m {
-                for h in 0..nh {
-                    let qv = q_latest[i * nh + h];
-                    u_jj[(i, h)] = alpha * (shard.a[i] / qv) + (1.0 - alpha) * u_jj[(i, h)];
-                }
-            }
-        });
+        timer.comp(|| targets.damped_u_update(&mut u_jj, &q_latest, alpha));
         timer.comm(|| ep.send(server, TagKind::U, A_TAG, u_jj.as_slice().to_vec(), k64));
 
         // Freshest r chunk, then the damped v update on it.
@@ -416,7 +433,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 r_latest.copy_from_slice(&msg.payload);
             }
         });
-        timer.comp(|| damped_v_update(&mut v_jj, &r_latest, &shard.b, alpha, m, nh));
+        timer.comp(|| targets.damped_v_update(&mut v_jj, &r_latest, alpha));
         timer.comm(|| ep.send(server, TagKind::V, A_TAG, v_jj.as_slice().to_vec(), k64));
 
         if let Some(local) = pre_err {
@@ -450,23 +467,95 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 // Helpers
 // --------------------------------------------------------------------------
 
-/// Damped element-wise v update (async client).
-fn damped_v_update(v_jj: &mut Mat, r: &[f64], b: &Mat, alpha: f64, m: usize, nh: usize) {
-    for i in 0..m {
-        for h in 0..nh {
-            let rv = r[i * nh + h];
-            v_jj[(i, h)] = alpha * (b[(i, h)] / rv) + (1.0 - alpha) * v_jj[(i, h)];
+/// Per-client marginal targets in the run's numerics domain. Linear
+/// clients divide by the received product chunk; log clients subtract in
+/// log space (`log a`, `log b` precomputed once per run, not per
+/// iteration).
+struct ClientTargets<'a> {
+    a: &'a [f64],
+    b: &'a Mat,
+    log_a: Vec<f64>,
+    /// Row-major m×N, only populated in the log domain.
+    log_b: Vec<f64>,
+    domain: Domain,
+}
+
+impl<'a> ClientTargets<'a> {
+    fn new(shard: &'a crate::workload::ClientShard, domain: Domain) -> Self {
+        let (log_a, log_b) = match domain {
+            Domain::Linear => (Vec::new(), Vec::new()),
+            Domain::Log => (
+                shard.a.iter().map(|&x| x.ln()).collect(),
+                shard.b.as_slice().iter().map(|&x| x.ln()).collect(),
+            ),
+        };
+        Self { a: &shard.a, b: &shard.b, log_a, log_b, domain }
+    }
+
+    /// `u ← α a⊘q + (1−α) u` — division is a log-subtraction in the log
+    /// domain (`a` broadcasts across histograms).
+    fn damped_u_update(&self, u_jj: &mut Mat, q: &[f64], alpha: f64) {
+        let (m, nh) = (u_jj.rows(), u_jj.cols());
+        let beta = 1.0 - alpha;
+        match self.domain {
+            Domain::Linear => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let qv = q[i * nh + h];
+                        u_jj[(i, h)] = alpha * (self.a[i] / qv) + beta * u_jj[(i, h)];
+                    }
+                }
+            }
+            Domain::Log => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let qv = q[i * nh + h];
+                        u_jj[(i, h)] = alpha * (self.log_a[i] - qv) + beta * u_jj[(i, h)];
+                    }
+                }
+            }
+        }
+    }
+
+    /// `v ← α b⊘r + (1−α) v` (per-histogram target).
+    fn damped_v_update(&self, v_jj: &mut Mat, r: &[f64], alpha: f64) {
+        let (m, nh) = (v_jj.rows(), v_jj.cols());
+        let beta = 1.0 - alpha;
+        match self.domain {
+            Domain::Linear => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let rv = r[i * nh + h];
+                        v_jj[(i, h)] = alpha * (self.b[(i, h)] / rv) + beta * v_jj[(i, h)];
+                    }
+                }
+            }
+            Domain::Log => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let rv = r[i * nh + h];
+                        v_jj[(i, h)] =
+                            alpha * (self.log_b[i * nh + h] - rv) + beta * v_jj[(i, h)];
+                    }
+                }
+            }
         }
     }
 }
 
-/// Block a-marginal error `max_h Σ_i |u∘q − a|` from a flat q chunk.
-fn block_err(u_jj: &Mat, q: &[f64], a: &[f64], m: usize, nh: usize) -> f64 {
+/// Block a-marginal error `max_h Σ_i |u∘q − a|` from a flat q chunk —
+/// always reported in the linear domain (log states exponentiate
+/// `log u + q`, the log of the marginal entry).
+fn block_err(u_jj: &Mat, q: &[f64], a: &[f64], m: usize, nh: usize, domain: Domain) -> f64 {
     let mut best: f64 = 0.0;
     for h in 0..nh {
         let mut e = 0.0;
         for i in 0..m {
-            e += (u_jj[(i, h)] * q[i * nh + h] - a[i]).abs();
+            let entry = match domain {
+                Domain::Linear => u_jj[(i, h)] * q[i * nh + h],
+                Domain::Log => (u_jj[(i, h)] + q[i * nh + h]).exp(),
+            };
+            e += (entry - a[i]).abs();
         }
         best = best.max(e);
     }

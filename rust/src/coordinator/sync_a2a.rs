@@ -32,19 +32,23 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut timer = SplitTimer::new();
 
     // Block operators: the client's two kernel blocks stay resident in
-    // the backend (device memory for XLA) for the whole run.
+    // the backend (device memory for XLA) for the whole run. In the log
+    // domain the blocks hold `log K` and the op iterates log-scalings —
+    // the AllGathered slices below are then exactly the communicated
+    // log-scalings the paper's privacy layer measures.
+    let one = ctx.domain.one();
     let mut u_op = ctx
         .backend
-        .block_op(&shard.k_row, Target::Vec(&shard.a), Mat::ones(m, nh))
+        .block_op_in(ctx.domain, &shard.k_row, Target::Vec(&shard.a), Mat::full(m, nh, one))
         .expect("u-op");
     let mut v_op = ctx
         .backend
-        .block_op(&shard.k_col_t, Target::Mat(&shard.b), Mat::ones(m, nh))
+        .block_op_in(ctx.domain, &shard.k_col_t, Target::Mat(&shard.b), Mat::full(m, nh, one))
         .expect("v-op");
 
     // Full scaling state, refreshed by AllGathers.
-    let mut u_full = Mat::ones(n, nh);
-    let mut v_full = Mat::ones(n, nh);
+    let mut u_full = Mat::full(n, nh, one);
+    let mut v_full = Mat::full(n, nh, one);
 
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;

@@ -10,18 +10,31 @@
 //! observes the rounding collapse at ε = 1e-6. In f64 the same collapse
 //! (Gibbs entries underflow to exact 0 → NaN marginals) appears at
 //! ε ≲ 2e-3 for this cost matrix (max C / ε > 745 overflows exp), so the
-//! default sweep stays above it and one deliberately-collapsing ε is
-//! included to reproduce the phenomenon.
+//! default *linear* sweep stays above it and one deliberately-collapsing
+//! ε is included to reproduce the phenomenon.
+//!
+//! The **small-ε extension** then reruns the collapse regime in the
+//! log-stabilized domain (`--domain log` internals: logsumexp with max
+//! absorption), where ε = 1e-3 … 1e-4 converge routinely — the sweep the
+//! linear path cannot complete at any iteration budget.
 
 use super::dump_json;
-use crate::config::BackendKind;
+use crate::config::{BackendKind, DomainChoice};
 use crate::jsonio::Json;
+use crate::linalg::Domain;
 use crate::runtime::make_backend;
 use crate::sinkhorn::{CentralizedSolver, StopPolicy};
 use crate::workload::Problem;
 
 pub struct EpsilonArgs {
+    /// Main sweep (run in `domain`, linear by default to exhibit the
+    /// collapse).
     pub epsilons: Vec<f64>,
+    /// Log-domain extension sweep below the f64 linear floor (empty =
+    /// skip).
+    pub small_epsilons: Vec<f64>,
+    /// Domain for the main sweep.
+    pub domain: DomainChoice,
     pub max_iters: usize,
     pub out: Option<String>,
 }
@@ -31,10 +44,90 @@ impl Default for EpsilonArgs {
         Self {
             // Descending sweep + one value in the f64-collapse regime.
             epsilons: vec![5e-1, 1e-1, 5e-2, 2e-2, 1e-2, 1e-3],
+            small_epsilons: vec![1e-3, 5e-4, 1e-4],
+            domain: DomainChoice::Linear,
             max_iters: 2_000_000,
             out: None,
         }
     }
+}
+
+/// One sweep row: traced solve at `eps` in `domain`, I_min post hoc.
+fn sweep_row(
+    solver: &CentralizedSolver,
+    eps: f64,
+    domain: Domain,
+    max_iters: usize,
+) -> Json {
+    let p = Problem::paper_4x4(eps);
+    // Fixed budget scaled to the expected 1/ε iteration count.
+    let budget = ((40.0 / eps) as usize + 2000).min(max_iters);
+    let policy = StopPolicy {
+        threshold: 0.0, // run the whole budget; I_min found post hoc
+        max_iters: budget,
+        check_every: (budget / 400).max(1),
+        ..Default::default()
+    };
+    let out = solver.solve_traced_in(&p, policy, 1.0, domain);
+    let last = out.history.last().copied();
+    let (ea, eb, obj_final) = last
+        .map(|h| (h.err_a, h.err_b, h.objective))
+        .unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+
+    // I_min: first trace point whose objective is within 1e-10 of the
+    // final value — the paper's "objective converged" criterion.
+    let collapsed = !obj_final.is_finite() || !ea.is_finite() || !eb.is_finite();
+    let i_min = if collapsed {
+        budget
+    } else {
+        out.history
+            .iter()
+            .find(|h| (h.objective - obj_final).abs() <= 1e-10 * obj_final.abs().max(1.0))
+            .map(|h| h.iter)
+            .unwrap_or(budget)
+    };
+    println!(
+        "{:>10.0e} {:>7} {:>10} {:>14.3e} {:>14.3e} {:>14.6} {:>10.2}{}",
+        eps,
+        domain.name(),
+        i_min,
+        ea,
+        eb,
+        obj_final,
+        i_min as f64 * eps,
+        if collapsed {
+            "   <- f64 rounding collapse (paper: at 1e-6 with 50-digit)"
+        } else {
+            ""
+        }
+    );
+    Json::obj(vec![
+        ("eps", eps.into()),
+        ("domain", domain.name().into()),
+        ("i_min", i_min.into()),
+        ("budget", budget.into()),
+        ("collapsed", collapsed.into()),
+        ("objective", obj_final.into()),
+        ("err_a", ea.into()),
+        ("err_b", eb.into()),
+        (
+            "trace",
+            Json::Arr(
+                out.history
+                    .iter()
+                    .step_by(4)
+                    .map(|h| {
+                        Json::obj(vec![
+                            ("iter", h.iter.into()),
+                            ("err_a", h.err_a.into()),
+                            ("err_b", h.err_b.into()),
+                            ("objective", h.objective.into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 pub fn run(args: &EpsilonArgs) -> anyhow::Result<Json> {
@@ -43,75 +136,21 @@ pub fn run(args: &EpsilonArgs) -> anyhow::Result<Json> {
 
     println!("# Figs 4-5: epsilon study on the 4x4 worked example");
     println!(
-        "{:>10} {:>10} {:>14} {:>14} {:>14} {:>10}",
-        "eps", "I_min", "err_a", "err_b", "objective", "I_min*eps"
+        "{:>10} {:>7} {:>10} {:>14} {:>14} {:>14} {:>10}",
+        "eps", "domain", "I_min", "err_a", "err_b", "objective", "I_min*eps"
     );
 
     let mut rows = Vec::new();
     for &eps in &args.epsilons {
-        let p = Problem::paper_4x4(eps);
-        // Fixed budget scaled to the expected 1/ε iteration count.
-        let budget = ((40.0 / eps) as usize + 2000).min(args.max_iters);
-        let policy = StopPolicy {
-            threshold: 0.0, // run the whole budget; I_min found post hoc
-            max_iters: budget,
-            check_every: (budget / 400).max(1),
-            ..Default::default()
-        };
-        let out = solver.solve_traced(&p, policy, 1.0);
-        let last = out.history.last().copied();
-        let (ea, eb, obj_final) = last
-            .map(|h| (h.err_a, h.err_b, h.objective))
-            .unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+        let domain = args.domain.resolve(&Problem::paper_4x4(eps));
+        rows.push(sweep_row(&solver, eps, domain, args.max_iters));
+    }
 
-        // I_min: first trace point whose objective is within 1e-10 of
-        // the final value — the paper's "objective converged" criterion.
-        let collapsed = !obj_final.is_finite() || !ea.is_finite() || !eb.is_finite();
-        let i_min = if collapsed {
-            budget
-        } else {
-            out.history
-                .iter()
-                .find(|h| (h.objective - obj_final).abs() <= 1e-10 * obj_final.abs().max(1.0))
-                .map(|h| h.iter)
-                .unwrap_or(budget)
-        };
-        println!(
-            "{:>10.0e} {:>10} {:>14.3e} {:>14.3e} {:>14.6} {:>10.2}{}",
-            eps,
-            i_min,
-            ea,
-            eb,
-            obj_final,
-            i_min as f64 * eps,
-            if collapsed { "   <- f64 rounding collapse (paper: at 1e-6 with 50-digit)" } else { "" }
-        );
-        rows.push(Json::obj(vec![
-            ("eps", eps.into()),
-            ("i_min", i_min.into()),
-            ("budget", budget.into()),
-            ("collapsed", collapsed.into()),
-            ("objective", obj_final.into()),
-            ("err_a", ea.into()),
-            ("err_b", eb.into()),
-            (
-                "trace",
-                Json::Arr(
-                    out.history
-                        .iter()
-                        .step_by(4)
-                        .map(|h| {
-                            Json::obj(vec![
-                                ("iter", h.iter.into()),
-                                ("err_a", h.err_a.into()),
-                                ("err_b", h.err_b.into()),
-                                ("objective", h.objective.into()),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]));
+    if !args.small_epsilons.is_empty() {
+        println!("# small-eps extension: log-stabilized domain (linear underflows here)");
+        for &eps in &args.small_epsilons {
+            rows.push(sweep_row(&solver, eps, Domain::Log, args.max_iters));
+        }
     }
 
     let doc = Json::obj(vec![("experiment", "epsilon-study".into()), ("rows", Json::Arr(rows))]);

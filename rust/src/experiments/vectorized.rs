@@ -181,5 +181,7 @@ fn single_hist_problem(p: &Problem, h: usize) -> Problem {
     for i in 0..p.n {
         b[(i, 0)] = p.b[(i, h)];
     }
-    Problem::from_parts(p.a.clone(), b, p.cost.clone(), p.eps)
+    let mut single = Problem::from_parts(p.a.clone(), b, p.cost.clone(), p.eps);
+    single.masked_cost_min = p.masked_cost_min;
+    single
 }

@@ -55,7 +55,7 @@ pub fn worst_case_loss(
         evals += 1;
         let fp = spec.problem(lambda);
         let out = run_federated(&fp.problem, cfg, policy, false);
-        let plan = transport_plan(&fp.problem.k, &out.state, 0);
+        let plan = transport_plan(&fp.problem, &out.state, 0);
         let cost = fp.transport_cost(&plan);
         let rho = fp.rho_worst(&plan);
         (cost, rho, out.iterations, out.converged)

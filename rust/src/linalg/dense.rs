@@ -25,6 +25,12 @@ impl Mat {
         Self { rows, cols, data: vec![1.0; rows * cols] }
     }
 
+    /// Constant-filled matrix — the domain-generic "all-ones scaling"
+    /// (`1.0` linear, `0.0` log).
+    pub fn full(rows: usize, cols: usize, value: f64) -> Self {
+        Self { rows, cols, data: vec![value; rows * cols] }
+    }
+
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Self { rows, cols, data }
@@ -183,6 +189,62 @@ impl Mat {
         self.matmul_into(x, &mut out, threads);
         out
     }
+
+    /// Log-domain product: `out[i,h] = log Σ_k exp(self[i,k] + x[k,h])`,
+    /// with `self` a log-kernel block (m×n) and `x` log-scalings (n×N).
+    /// The row-wise running maximum is absorbed into the exponent à la
+    /// Schmitzer's stabilized scaling, so every `exp` argument is ≤ 0 and
+    /// the result is exact even when `exp(self[i,k])` would underflow.
+    /// `−∞` entries (hard-sparsified kernel blocks) contribute zero mass.
+    ///
+    /// Threading mirrors [`Mat::matmul_into`]: the row dimension is split
+    /// into disjoint bands, one scoped thread each; `out` must be
+    /// pre-shaped and the per-row scratch is O(N).
+    pub fn logsumexp_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
+        assert_eq!(self.cols, x.rows, "inner dims");
+        assert_eq!(out.rows, self.rows, "out rows");
+        assert_eq!(out.cols, x.cols, "out cols");
+
+        let threads = threads.max(1).min(self.rows.max(1));
+        if threads == 1 {
+            logsumexp_rows(&self.data, self.cols, &x.data, x.cols, &mut out.data, 0, self.rows);
+            return;
+        }
+
+        let rows_per = self.rows.div_ceil(threads);
+        let n = self.cols;
+        let nh = x.cols;
+        let a = &self.data;
+        let xs = &x.data;
+        let mut bands: Vec<&mut [f64]> = Vec::with_capacity(threads);
+        let mut rest: &mut [f64] = &mut out.data;
+        let mut starts = Vec::with_capacity(threads);
+        let mut r = 0;
+        while r < self.rows {
+            let take = rows_per.min(self.rows - r);
+            let (band, tail) = rest.split_at_mut(take * nh);
+            bands.push(band);
+            starts.push(r);
+            rest = tail;
+            r += take;
+        }
+        crossbeam_utils::thread::scope(|s| {
+            for (band, &r0) in bands.into_iter().zip(&starts) {
+                let rows_here = band.len() / nh;
+                s.spawn(move |_| {
+                    logsumexp_rows(a, n, xs, nh, band, r0, r0 + rows_here);
+                });
+            }
+        })
+        .expect("logsumexp worker panicked");
+    }
+
+    /// Convenience allocating log-domain product.
+    pub fn logsumexp(&self, x: &Mat, threads: usize) -> Mat {
+        let mut out = Mat::zeros(self.rows, x.cols);
+        self.logsumexp_into(x, &mut out, threads);
+        out
+    }
 }
 
 /// Compute rows `[r0, r1)` of `A·x` into `out` (which holds those rows
@@ -235,6 +297,77 @@ fn matmul_rows(
                     }
                 }
             }
+        }
+    }
+}
+
+/// Compute rows `[r0, r1)` of the row-wise logsumexp product into `out`
+/// (which holds those rows only, starting at its origin).
+fn logsumexp_rows(
+    a: &[f64],
+    n: usize,
+    x: &[f64],
+    nh: usize,
+    out: &mut [f64],
+    r0: usize,
+    r1: usize,
+) {
+    if nh == 1 {
+        // LSE-GEMV fast path: two sweeps per row — max, then the
+        // max-absorbed exponential sum (both vectorize cleanly).
+        for i in r0..r1 {
+            let arow = &a[i * n..(i + 1) * n];
+            let mut mx = f64::NEG_INFINITY;
+            for k in 0..n {
+                let v = arow[k] + x[k];
+                if v > mx {
+                    mx = v;
+                }
+            }
+            if mx == f64::NEG_INFINITY {
+                out[i - r0] = f64::NEG_INFINITY; // fully masked row
+                continue;
+            }
+            let mut s = 0.0;
+            for k in 0..n {
+                s += (arow[k] + x[k] - mx).exp();
+            }
+            out[i - r0] = mx + s.ln();
+        }
+        return;
+    }
+
+    // Multi-histogram path: one streaming pass per row with per-column
+    // online max/sum accumulators (O(N) scratch, reused across rows).
+    let mut mx = vec![f64::NEG_INFINITY; nh];
+    let mut sum = vec![0.0f64; nh];
+    for i in r0..r1 {
+        let arow = &a[i * n..(i + 1) * n];
+        mx.fill(f64::NEG_INFINITY);
+        sum.fill(0.0);
+        for k in 0..n {
+            let aik = arow[k];
+            if aik == f64::NEG_INFINITY {
+                continue; // masked kernel entry: zero mass for every histogram
+            }
+            let xrow = &x[k * nh..(k + 1) * nh];
+            for h in 0..nh {
+                let v = aik + xrow[h];
+                if v == f64::NEG_INFINITY {
+                    continue;
+                }
+                if v <= mx[h] {
+                    sum[h] += (v - mx[h]).exp();
+                } else {
+                    // New running max: absorb it, rescale the old sum.
+                    sum[h] = sum[h] * (mx[h] - v).exp() + 1.0;
+                    mx[h] = v;
+                }
+            }
+        }
+        let orow = &mut out[(i - r0) * nh..(i - r0 + 1) * nh];
+        for h in 0..nh {
+            orow[h] = if sum[h] > 0.0 { mx[h] + sum[h].ln() } else { f64::NEG_INFINITY };
         }
     }
 }

@@ -1,0 +1,51 @@
+//! Numerics-representation domain: linear vs. log-stabilized.
+//!
+//! The Sinkhorn fixed point can be iterated on linear scalings
+//! `u = a/(K v)` or on log-scalings `log u = log a − LSE(log K + log v)`
+//! (Schmitzer's stabilized scaling; PAPERS.md). The linear form is a
+//! GEMV — fast, but `K = exp(−C/ε)` underflows f64 once `max C / ε`
+//! exceeds ~745. The log form replaces the product with a row-wise
+//! logsumexp whose running maximum is absorbed into the exponent, so
+//! every `exp()` argument is ≤ 0 and the small-ε regime stays exact.
+//!
+//! Everything above this module (runtime block operators, solvers,
+//! coordinators, CLI) is generic over [`Domain`]: the same protocol code
+//! exchanges either linear scalings or log-scalings — the latter being
+//! exactly the quantity the paper's privacy layer instruments.
+
+/// Which representation the scaling state and kernel use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Scalings `u, v`; kernel `K = exp(−C/ε)`; products are GEMV/GEMM.
+    Linear,
+    /// Log-scalings `log u, log v`; kernel `log K = −C/ε`; products are
+    /// row-wise logsumexp with max absorption.
+    Log,
+}
+
+impl Domain {
+    /// The multiplicative identity in this representation: the all-ones
+    /// scaling vector is `1` linearly and `0` in the log domain.
+    #[inline]
+    pub fn one(self) -> f64 {
+        match self {
+            Domain::Linear => 1.0,
+            Domain::Log => 0.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Domain> {
+        match s {
+            "linear" | "lin" => Some(Domain::Linear),
+            "log" => Some(Domain::Log),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Domain::Linear => "linear",
+            Domain::Log => "log",
+        }
+    }
+}

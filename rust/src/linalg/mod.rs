@@ -5,11 +5,14 @@
 //! followed by element-wise scaling. We provide:
 //!
 //! * [`Mat`] — dense row-major `f64` matrices with blocked, cache-tiled,
-//!   optionally multi-threaded GEMM (`matmul_into`);
+//!   optionally multi-threaded GEMM (`matmul_into`) and the log-domain
+//!   twin `logsumexp_into` (row-wise max-absorbed logsumexp);
 //! * [`Csr`] — compressed-sparse-row kernels for the paper's off-diagonal
 //!   block-sparsity parameter `s` (§IV-D);
-//! * element-wise helpers (`scale_divide_into`, …) used by the native
-//!   compute backend.
+//! * [`Domain`] — the linear vs. log-stabilized representation switch the
+//!   whole stack is generic over;
+//! * element-wise helpers (`scale_divide_into`, `logsumexp_slice`, …)
+//!   used by the native compute backend.
 //!
 //! The XLA artifacts are the default backend; these routines are the
 //! reference implementation, the arbitrary-shape fallback, and the
@@ -17,11 +20,13 @@
 
 mod csr;
 mod dense;
+mod domain;
 mod ops;
 
 pub use csr::Csr;
 pub use dense::Mat;
-pub use ops::{axpby, l1_diff, scale_divide_into, scale_rows_cols};
+pub use domain::Domain;
+pub use ops::{axpby, l1_diff, logsumexp_slice, scale_divide_into, scale_rows_cols};
 
 #[cfg(test)]
 mod tests {
@@ -87,6 +92,79 @@ mod tests {
         let want = naive_matmul(&dense, &x);
         assert!(got.allclose(&want, 1e-12));
         assert!(csr.nnz() < 40 * 30);
+    }
+
+    fn naive_logsumexp(a: &Mat, x: &Mat) -> Mat {
+        let (m, n) = (a.rows(), a.cols());
+        let nh = x.cols();
+        let mut out = Mat::zeros(m, nh);
+        for i in 0..m {
+            for j in 0..nh {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += (a[(i, k)] + x[(k, j)]).exp();
+                }
+                out[(i, j)] = s.ln();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn logsumexp_matches_naive_ln_sum_exp() {
+        let mut rng = Rng::seed_from(6);
+        for &(m, n, nh) in &[(1, 1, 1), (7, 5, 3), (64, 64, 1), (33, 57, 9)] {
+            let a = Mat::rand_uniform(m, n, -3.0, 1.0, &mut rng);
+            let x = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+            let got = a.logsumexp(&x, 1);
+            let want = naive_logsumexp(&a, &x);
+            assert!(got.allclose(&want, 1e-12), "({m},{n},{nh})");
+        }
+    }
+
+    #[test]
+    fn logsumexp_survives_extreme_shifts() {
+        // Entries around −2000: naive ln(Σ exp) underflows to ln 0 = −∞,
+        // the max-absorbed kernel keeps full relative precision.
+        let a = Mat::from_vec(2, 3, vec![-2000.0, -2001.0, -2000.5, -3000.0, -3000.0, -3000.0]);
+        let x = Mat::from_vec(3, 1, vec![0.5, 1.0, 0.0]);
+        let got = a.logsumexp(&x, 1);
+        // Row 0: max is −2000 + 1 = −1999.5... compute directly.
+        let want0 = logsumexp_slice(&[-1999.5, -2000.0, -2000.5]);
+        let want1 = logsumexp_slice(&[-2999.5, -2999.0, -3000.0]);
+        assert!((got[(0, 0)] - want0).abs() < 1e-10, "{} vs {want0}", got[(0, 0)]);
+        assert!((got[(1, 0)] - want1).abs() < 1e-10);
+        assert!(got[(0, 0)].is_finite());
+    }
+
+    #[test]
+    fn logsumexp_handles_masked_rows() {
+        // −∞ kernel entries (sparsified blocks) carry zero mass; a fully
+        // masked row yields −∞, not NaN.
+        let a = Mat::from_vec(
+            2,
+            2,
+            vec![f64::NEG_INFINITY, 0.0, f64::NEG_INFINITY, f64::NEG_INFINITY],
+        );
+        let x = Mat::from_vec(2, 2, vec![0.1, 0.2, 0.3, 0.4]);
+        let got = a.logsumexp(&x, 1);
+        assert!((got[(0, 0)] - 0.3).abs() < 1e-12);
+        assert!((got[(0, 1)] - 0.4).abs() < 1e-12);
+        assert_eq!(got[(1, 0)], f64::NEG_INFINITY);
+        assert_eq!(got[(1, 1)], f64::NEG_INFINITY);
+        assert!(!got.as_slice().iter().any(|v| v.is_nan()));
+    }
+
+    #[test]
+    fn threaded_logsumexp_matches_serial() {
+        let mut rng = Rng::seed_from(7);
+        let a = Mat::rand_uniform(213, 187, -5.0, 0.0, &mut rng);
+        let x = Mat::rand_uniform(187, 11, -1.0, 1.0, &mut rng);
+        let mut serial = Mat::zeros(213, 11);
+        let mut par = Mat::zeros(213, 11);
+        a.logsumexp_into(&x, &mut serial, 1);
+        a.logsumexp_into(&x, &mut par, 4);
+        assert!(par.allclose(&serial, 0.0), "threaded logsumexp differs");
     }
 
     #[test]

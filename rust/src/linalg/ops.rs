@@ -38,6 +38,17 @@ pub fn scale_divide_into(
     }
 }
 
+/// Stable `log Σ exp(xs)` over a slice (max-absorbed two-pass form).
+/// Returns `−∞` for an empty or all-`−∞` input.
+pub fn logsumexp_slice(xs: &[f64]) -> f64 {
+    let mx = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if mx == f64::NEG_INFINITY {
+        return f64::NEG_INFINITY;
+    }
+    let s: f64 = xs.iter().map(|&v| (v - mx).exp()).sum();
+    mx + s.ln()
+}
+
 /// `y = a·x + b·y` (vectors).
 pub fn axpby(a: f64, x: &[f64], b: f64, y: &mut [f64]) {
     assert_eq!(x.len(), y.len());

@@ -5,7 +5,7 @@
 //! the AOT artifacts (PJRT) or the native kernels.
 
 use fedsink::cli::{ArgSpec, CliError, Parsed};
-use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::config::{BackendKind, DomainChoice, SolveConfig, Variant};
 use fedsink::experiments::{self, Scale};
 use fedsink::net::LatencyModel;
 use fedsink::sinkhorn::StopPolicy;
@@ -116,6 +116,25 @@ fn net_of(p: &Parsed) -> anyhow::Result<LatencyModel> {
         .ok_or_else(|| anyhow::anyhow!("bad --net"))
 }
 
+fn domain_of(p: &Parsed) -> anyhow::Result<DomainChoice> {
+    DomainChoice::parse(p.get("domain").unwrap_or("auto"))
+        .ok_or_else(|| anyhow::anyhow!("bad --domain (expected linear|log|auto)"))
+}
+
+/// The AOT artifact grid only lowers linear-domain updates; reject the
+/// impossible combination up front instead of panicking deep in
+/// `runtime/` mid-solve. (`auto` is allowed — it degrades to linear with
+/// a warning when the backend lacks a log operator.)
+fn check_domain_backend(domain: DomainChoice, backend: BackendKind) -> anyhow::Result<()> {
+    if domain == DomainChoice::Log && backend == BackendKind::Xla {
+        anyhow::bail!(
+            "--domain log is not available on the xla backend (the AOT artifact \
+             grid has no log-domain lowering); use --backend native"
+        );
+    }
+    Ok(())
+}
+
 fn out_of(p: &Parsed) -> Option<String> {
     p.get("out").map(|s| s.to_string())
 }
@@ -137,11 +156,20 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
             .opt("threshold", "T", "1e-10", "marginal-error threshold")
             .opt("max-iters", "K", "1500", "iteration cap")
             .opt("sparsity", "S", "0.0", "off-diagonal block sparsity")
-            .opt("cond", "CLASS", "well", "well|medium|ill"),
+            .opt("cond", "CLASS", "well", "well|medium|ill")
+            .opt(
+                "domain",
+                "D",
+                "auto",
+                "linear|log|auto numerics domain (auto: log iff exp(-C/eps) underflows)",
+            ),
     );
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
     let variant = Variant::parse(p.get("variant").unwrap())
         .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
+    let domain = domain_of(&p)?;
+    let backend = backend_of(&p)?;
+    check_domain_backend(domain, backend)?;
     let cond = CondClass::parse(p.get("cond").unwrap())
         .ok_or_else(|| anyhow::anyhow!("bad --cond"))?;
     let n = p.get_usize("n")?;
@@ -157,7 +185,8 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     );
     let cfg = SolveConfig {
         variant,
-        backend: backend_of(&p)?,
+        backend,
+        domain,
         clients,
         alpha: p.get_f64("alpha")?,
         local_iters: p.get_usize("local-iters")?,
@@ -172,8 +201,9 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     };
     let out = fedsink::coordinator::run_federated(&problem, &cfg, policy, false);
     println!(
-        "{}: n={n} c={clients} -> stop={:?} iters={} err={:.3e} in {:.3}s",
+        "{} [{} domain]: n={n} c={clients} -> stop={:?} iters={} err={:.3e} in {:.3}s",
         variant.name(),
+        out.state.domain.name(),
         out.stop,
         out.iterations,
         out.node_stats.first().map(|s| s.final_err).unwrap_or(f64::NAN),
@@ -195,12 +225,38 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
 fn cmd_epsilon(args: &[String]) -> anyhow::Result<()> {
     let spec = common_spec(
         ArgSpec::new()
-            .opt("epsilons", "LIST", "5e-1,1e-1,5e-2,2e-2,1e-2,1e-3", "comma list of epsilon values")
-            .opt("max-iters", "K", "2000000", "iteration cap"),
+            .opt(
+                "epsilons",
+                "LIST",
+                "5e-1,1e-1,5e-2,2e-2,1e-2,1e-3",
+                "comma list of epsilon values",
+            )
+            .opt("max-iters", "K", "2000000", "iteration cap")
+            .opt(
+                "domain",
+                "D",
+                "linear",
+                "numerics domain for the main sweep (linear reproduces the f64 collapse)",
+            )
+            .opt(
+                "small-epsilons",
+                "LIST",
+                "1e-3,5e-4,1e-4",
+                "log-domain extension sweep the linear path cannot complete (empty = skip)",
+            ),
     );
     let p = spec.parse("epsilon-study", args).map_err(anyhow::Error::new)?;
+    // This study always runs on the native backend, so no backend/domain
+    // compatibility check is needed here.
+    let domain = domain_of(&p)?;
+    let small = match p.get("small-epsilons") {
+        Some("") | None => Vec::new(),
+        Some(_) => p.get_list("small-epsilons", |s| s.parse().ok())?,
+    };
     let a = experiments::epsilon::EpsilonArgs {
         epsilons: p.get_list("epsilons", |s| s.parse().ok())?,
+        small_epsilons: small,
+        domain,
         max_iters: p.get_usize("max-iters")?,
         out: out_of(&p),
     };

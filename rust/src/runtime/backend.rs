@@ -1,6 +1,15 @@
 //! Backend trait: what the coordinators need from the compute layer.
+//!
+//! [`BlockOp`] is domain-polymorphic by construction: a linear-domain op
+//! (from [`ComputeBackend::block_op`]) iterates `u ← α·t/(A·x) + (1−α)·u`
+//! on linear scalings; a log-domain op (from
+//! [`ComputeBackend::log_block_op`]) iterates
+//! `log u ← α·(log t − LSE(A_log + log x)) + (1−α)·log u` on
+//! log-scalings. Both report the *linear-domain* L1 marginal error from
+//! `marginal`, so solvers and coordinators run the same protocol code
+//! over either representation.
 
-use crate::linalg::Mat;
+use crate::linalg::{Domain, Mat};
 
 /// A client's target marginal slice: the u-update broadcasts one vector
 /// (`a_j`) across histograms; the v-update in vectorized mode has one
@@ -47,13 +56,56 @@ pub trait BlockOp: Send {
 
 /// Backend factory: builds [`BlockOp`]s for client blocks.
 pub trait ComputeBackend: Send + Sync {
-    /// Bind a block operator. `u0` seeds the state (normally ones).
+    /// Bind a linear-domain block operator. `u0` seeds the state
+    /// (normally ones).
     fn block_op(
         &self,
         a: &Mat,
         t: Target<'_>,
         u0: Mat,
     ) -> anyhow::Result<Box<dyn BlockOp>>;
+
+    /// Bind a log-domain block operator: `a_log` is a `log K` block, the
+    /// state seed `u0_log` holds log-scalings (normally zeros), and the
+    /// target stays a linear-domain marginal slice (its log is taken
+    /// internally). Backends without a log path inherit this default and
+    /// fail fast with a descriptive error instead of panicking deep in a
+    /// solve.
+    fn log_block_op(
+        &self,
+        a_log: &Mat,
+        t: Target<'_>,
+        u0_log: Mat,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        let _ = (a_log, t, u0_log);
+        anyhow::bail!(
+            "backend '{}' does not support the log domain; \
+             use --backend native or --domain linear",
+            self.name()
+        )
+    }
+
+    /// Dispatch on the numerics domain. `a` must already be in the
+    /// matching representation (`Problem::kernel_for` /
+    /// `Partition::new_in` take care of that).
+    fn block_op_in(
+        &self,
+        domain: Domain,
+        a: &Mat,
+        t: Target<'_>,
+        u0: Mat,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        match domain {
+            Domain::Linear => self.block_op(a, t, u0),
+            Domain::Log => self.log_block_op(a, t, u0),
+        }
+    }
+
+    /// Whether [`ComputeBackend::log_block_op`] is implemented natively.
+    /// Lets callers resolve `--domain auto` without trial construction.
+    fn supports_log(&self) -> bool {
+        false
+    }
 
     fn name(&self) -> &'static str;
 }

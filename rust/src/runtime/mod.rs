@@ -16,11 +16,13 @@
 mod backend;
 mod manifest;
 mod native;
+#[cfg(feature = "xla-backend")]
 mod pjrt;
 
 pub use backend::{BlockOp, ComputeBackend, Target};
 pub use manifest::{Manifest, ManifestEntry};
 pub use native::NativeBackend;
+#[cfg(feature = "xla-backend")]
 pub use pjrt::{PjrtRuntime, XlaBackend};
 
 use crate::config::BackendKind;
@@ -28,18 +30,29 @@ use std::sync::Arc;
 
 /// Instantiate the configured backend. The XLA backend needs the
 /// artifact directory; construction fails fast if the manifest is
-/// missing rather than silently degrading.
+/// missing rather than silently degrading. Builds without the
+/// `xla-backend` feature (the offline default — the `xla` crate needs
+/// the PJRT C library) reject the XLA kind with a clear error.
 pub fn make_backend(
     kind: BackendKind,
     artifacts_dir: &str,
     compute_threads: usize,
 ) -> anyhow::Result<Arc<dyn ComputeBackend>> {
     match kind {
-        BackendKind::Native => Ok(Arc::new(NativeBackend::new(compute_threads))),
+        BackendKind::Native => {
+            let _ = artifacts_dir;
+            Ok(Arc::new(NativeBackend::new(compute_threads)))
+        }
+        #[cfg(feature = "xla-backend")]
         BackendKind::Xla => {
             let rt = PjrtRuntime::shared(artifacts_dir)?;
             Ok(Arc::new(XlaBackend::new(rt, compute_threads)))
         }
+        #[cfg(not(feature = "xla-backend"))]
+        BackendKind::Xla => anyhow::bail!(
+            "this build has no xla backend (compile with --features xla-backend); \
+             use --backend native"
+        ),
     }
 }
 
@@ -115,6 +128,66 @@ mod tests {
                 assert!((got[(i, j)] - tm[(i, j)] / q[(i, j)]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn native_log_block_op_matches_linear_formula() {
+        // On a moderate-range block, the log op must agree with the
+        // linear op mapped through exp/ln at α = 1.
+        let (a, x, t, _) = sample(6, 9, 2, 21);
+        let be = NativeBackend::new(1);
+        let a_log = a.map(f64::ln);
+        let x_log = x.map(f64::ln);
+        let mut lin = be.block_op(&a, Target::Vec(&t), Mat::ones(6, 2)).unwrap();
+        let mut log = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(6, 2))
+            .unwrap();
+        let want = lin.update(&x, 1.0).clone();
+        let got = log.update(&x_log, 1.0).clone();
+        for i in 0..6 {
+            for j in 0..2 {
+                assert!(
+                    (got[(i, j)].exp() - want[(i, j)]).abs()
+                        < 1e-12 * want[(i, j)].abs().max(1.0),
+                    "({i},{j}): {} vs {}",
+                    got[(i, j)].exp(),
+                    want[(i, j)]
+                );
+            }
+        }
+        // Marginal errors agree in the linear domain.
+        let u_lin = lin.state().clone();
+        let u_log = log.state().clone();
+        let e_lin = lin.marginal(&x, &u_lin);
+        let e_log = log.marginal(&x_log, &u_log);
+        for h in 0..2 {
+            assert!((e_lin[h] - e_log[h]).abs() < 1e-10, "hist {h}");
+        }
+    }
+
+    #[test]
+    fn native_log_block_op_survives_underflow_range() {
+        // Kernel entries around exp(−2000): the linear op would read
+        // q = 0 and blow up; the log op stays finite and exact.
+        let a_log = Mat::from_vec(2, 2, vec![-2000.0, -2100.0, -2050.0, -2000.0]);
+        let t = vec![0.25, 0.75];
+        let be = NativeBackend::new(1);
+        let mut op = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(2, 1))
+            .unwrap();
+        let got = op.update(&Mat::zeros(2, 1), 1.0).clone();
+        assert!(got.as_slice().iter().all(|v| v.is_finite()), "{got:?}");
+        // log u ≈ ln t − max-absorbed lse of the row.
+        let lse0 = crate::linalg::logsumexp_slice(&[-2000.0, -2100.0]);
+        assert!((got[(0, 0)] - (0.25f64.ln() - lse0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn xla_kind_without_feature_or_artifacts_errors_cleanly() {
+        // Whichever is missing (the compiled-out backend or the artifact
+        // manifest), asking for XLA from a bogus dir must not panic.
+        let r = make_backend(crate::config::BackendKind::Xla, "/nonexistent-artifacts", 1);
+        assert!(r.is_err());
     }
 
     #[test]

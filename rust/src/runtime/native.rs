@@ -4,7 +4,9 @@
 //! and the deliberately CPU-speed substrate for the paper's §IV-E study
 //! (where slower compute flips the comm/comp balance). Uses the blocked
 //! GEMM/CSR kernels from [`crate::linalg`]; switches to CSR automatically
-//! when the block is sparse enough to win.
+//! when the block is sparse enough to win. This is also the only backend
+//! with a native log-domain operator (row-wise max-absorbed logsumexp) —
+//! the small-ε path the AOT artifact grid does not cover.
 
 use super::backend::{BlockOp, ComputeBackend, Target};
 use crate::linalg::{Csr, Mat};
@@ -46,6 +48,38 @@ impl NativeBackend {
 }
 
 impl ComputeBackend for NativeBackend {
+    fn log_block_op(
+        &self,
+        a_log: &Mat,
+        t: Target<'_>,
+        u0_log: Mat,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        anyhow::ensure!(t.rows() == a_log.rows(), "target rows != block rows");
+        anyhow::ensure!(u0_log.rows() == a_log.rows(), "state rows != block rows");
+        let (t_lin, t_stride) = match t {
+            Target::Vec(v) => (v.to_vec(), 0),
+            Target::Mat(m) => {
+                anyhow::ensure!(m.cols() == u0_log.cols(), "target hists != state hists");
+                (m.as_slice().to_vec(), m.cols())
+            }
+        };
+        let log_t: Vec<f64> = t_lin.iter().map(|&x| x.ln()).collect();
+        let q = Mat::zeros(a_log.rows(), u0_log.cols());
+        Ok(Box::new(NativeLogBlockOp {
+            a_log: a_log.clone(),
+            t_lin,
+            log_t,
+            t_stride,
+            u: u0_log,
+            q,
+            threads: self.threads,
+        }))
+    }
+
+    fn supports_log(&self) -> bool {
+        true
+    }
+
     fn block_op(
         &self,
         a: &Mat,
@@ -142,6 +176,111 @@ impl BlockOp for NativeBlockOp {
                 let trow = &self.t[i * self.t_stride..(i + 1) * self.t_stride];
                 for h in 0..nh {
                     err[h] += (urow[h] * qrow[h] - trow[h]).abs();
+                }
+            }
+        }
+        err
+    }
+
+    fn state(&self) -> &Mat {
+        &self.u
+    }
+
+    fn set_state(&mut self, u: &Mat) {
+        assert_eq!(u.rows(), self.u.rows());
+        assert_eq!(u.cols(), self.u.cols());
+        self.u = u.clone();
+    }
+}
+
+/// Log-domain twin of [`NativeBlockOp`]: the block is `log K`, the state
+/// holds log-scalings, and the product is the row-wise max-absorbed
+/// logsumexp (Schmitzer's stabilized scaling — the running maximum of
+/// `log K + log x` is absorbed into the exponent so every `exp` argument
+/// is ≤ 0; no kernel entry ever underflows).
+struct NativeLogBlockOp {
+    a_log: Mat,
+    /// Linear-domain target (for the marginal error) …
+    t_lin: Vec<f64>,
+    /// … and its log (for the update).
+    log_t: Vec<f64>,
+    t_stride: usize,
+    /// Log-scaling state `log u` (m×N).
+    u: Mat,
+    /// Preallocated logsumexp buffer — the hot loop never allocates.
+    q: Mat,
+    threads: usize,
+}
+
+impl NativeLogBlockOp {
+    fn product(&mut self, x_log: &Mat) {
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+    }
+}
+
+impl BlockOp for NativeLogBlockOp {
+    fn m(&self) -> usize {
+        self.a_log.rows()
+    }
+
+    fn n(&self) -> usize {
+        self.a_log.cols()
+    }
+
+    fn hists(&self) -> usize {
+        self.u.cols()
+    }
+
+    fn update(&mut self, x_log: &Mat, alpha: f64) -> &Mat {
+        self.product(x_log);
+        // log u = α (log t − q) + (1−α) log u, in place (element-wise, so
+        // aliasing old and new state is safe). Note α < 1 damps the
+        // *duals* — geometrically in the linear domain — which coincides
+        // with linear damping at α = 1 (the Prop.-1 regime).
+        let (m, nh) = (self.q.rows(), self.q.cols());
+        let beta = 1.0 - alpha;
+        for i in 0..m {
+            let qrow = self.q.row(i);
+            let urow = self.u.row_mut(i);
+            if self.t_stride == 0 {
+                let lti = self.log_t[i];
+                for j in 0..nh {
+                    urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
+                }
+            } else {
+                let ltrow = &self.log_t[i * self.t_stride..(i + 1) * self.t_stride];
+                for j in 0..nh {
+                    urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
+                }
+            }
+        }
+        &self.u
+    }
+
+    fn matvec(&mut self, x_log: &Mat) -> &Mat {
+        self.product(x_log);
+        &self.q
+    }
+
+    fn marginal(&mut self, x_log: &Mat, u_log: &Mat) -> Vec<f64> {
+        self.product(x_log);
+        // Linear-domain L1 error: |exp(log u + q) − t| per entry. The
+        // exponent log u + q is the log of a marginal entry — O(log t)
+        // near the fixed point — so the exp cannot overflow there.
+        let nh = self.q.cols();
+        let mut err = vec![0.0; nh];
+        for i in 0..self.q.rows() {
+            let qrow = self.q.row(i);
+            let urow = u_log.row(i);
+            if self.t_stride == 0 {
+                let ti = self.t_lin[i];
+                for h in 0..nh {
+                    err[h] += ((urow[h] + qrow[h]).exp() - ti).abs();
+                }
+            } else {
+                let trow = &self.t_lin[i * self.t_stride..(i + 1) * self.t_stride];
+                for h in 0..nh {
+                    err[h] += ((urow[h] + qrow[h]).exp() - trow[h]).abs();
                 }
             }
         }

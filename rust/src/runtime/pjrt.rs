@@ -125,6 +125,24 @@ impl XlaBackend {
 }
 
 impl ComputeBackend for XlaBackend {
+    /// Explicit non-fallback: the AOT artifact grid only lowers the
+    /// linear-domain update, and silently routing log-domain solves to
+    /// the native CPU kernels would misreport the "accelerator" timing
+    /// the paper's §IV-E comparison depends on. Callers must pick
+    /// `--backend native` (or `--domain linear`) instead.
+    fn log_block_op(
+        &self,
+        _a_log: &Mat,
+        _t: Target<'_>,
+        _u0_log: Mat,
+    ) -> Result<Box<dyn BlockOp>> {
+        anyhow::bail!(
+            "the xla backend has no log-domain artifacts (the AOT grid lowers \
+             linear-domain updates only); rerun with --backend native, or use \
+             --domain linear / --domain auto"
+        )
+    }
+
     fn block_op(&self, a: &Mat, t: Target<'_>, u0: Mat) -> Result<Box<dyn BlockOp>> {
         let (m, n, nh) = (a.rows(), a.cols(), u0.cols());
         let (update_op, marginal_op) = match t {
@@ -134,7 +152,9 @@ impl ComputeBackend for XlaBackend {
         let Some(update_entry) = self.rt.manifest().find(update_op, m, n, nh) else {
             // Shape not in the AOT grid: fall back to the native kernels
             // rather than failing the run (logged once per shape).
-            log::warn!("no {update_op} artifact for (m={m}, n={n}, N={nh}); native fallback");
+            eprintln!(
+                "warning: no {update_op} artifact for (m={m}, n={n}, N={nh}); native fallback"
+            );
             return self.fallback.block_op(a, t, u0);
         };
         let exe_update = self.rt.executable(update_entry)?;

@@ -12,18 +12,34 @@ mod solver;
 pub use ops::{full_marginal_errors, objective, transport_plan};
 pub use solver::{CentralizedSolver, HistoryPoint, SolveOutcome, StopReason};
 
-use crate::linalg::Mat;
+use crate::linalg::{Domain, Mat};
 
-/// Scaling state `(u, v)`, each `n × N`.
+/// Scaling state `(u, v)`, each `n × N` — linear scalings or
+/// log-scalings depending on `domain`. All whole-problem reductions
+/// ([`full_marginal_errors`], [`objective`], [`transport_plan`]) branch
+/// on the tag, so a log-domain solve never has to exponentiate its duals
+/// back into a representation that would overflow.
 #[derive(Clone, Debug)]
 pub struct State {
     pub u: Mat,
     pub v: Mat,
+    pub domain: Domain,
 }
 
 impl State {
+    /// Linear-domain all-ones state (the classical initialization).
     pub fn ones(n: usize, hists: usize) -> State {
-        State { u: Mat::ones(n, hists), v: Mat::ones(n, hists) }
+        State::init(n, hists, Domain::Linear)
+    }
+
+    /// Identity scaling state in the given domain: ones linearly, zeros
+    /// in the log domain.
+    pub fn init(n: usize, hists: usize, domain: Domain) -> State {
+        State {
+            u: Mat::full(n, hists, domain.one()),
+            v: Mat::full(n, hists, domain.one()),
+            domain,
+        }
     }
 }
 
@@ -68,7 +84,7 @@ mod tests {
         let solver = CentralizedSolver::new(native());
         let out = solver.solve(&p, StopPolicy { threshold: 1e-13, ..Default::default() }, 1.0);
         assert!(out.converged(), "stop: {:?}", out.stop);
-        let plan = transport_plan(&p.k, &out.state, 0);
+        let plan = transport_plan(&p, &out.state, 0);
         // Marginals recovered.
         for i in 0..4 {
             let row: f64 = (0..4).map(|j| plan[(i, j)]).sum();
@@ -123,6 +139,78 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn log_domain_converges_where_linear_kernel_underflows() {
+        // ε = 1e-3 on the worked example: max C/ε = 3000, so every
+        // off-diagonal Gibbs entry is exp(−1000) or smaller — far below
+        // f64's ~1e-308 floor. The linear path cannot represent the
+        // kernel; the log-stabilized path converges to a valid plan.
+        let p = Problem::paper_4x4(1e-3);
+        let solver = CentralizedSolver::new(native());
+        let out = solver.solve_in(
+            &p,
+            StopPolicy {
+                threshold: 1e-10,
+                max_iters: 200_000,
+                check_every: 10,
+                ..Default::default()
+            },
+            1.0,
+            crate::linalg::Domain::Log,
+        );
+        assert!(out.converged(), "stop: {:?} err {:.3e}", out.stop, out.final_err);
+        assert_eq!(out.state.domain, crate::linalg::Domain::Log);
+        let plan = transport_plan(&p, &out.state, 0);
+        for i in 0..4 {
+            let row: f64 = (0..4).map(|j| plan[(i, j)]).sum();
+            assert!((row - p.a[i]).abs() < 1e-8, "row {i}: {row}");
+            let col: f64 = (0..4).map(|j| plan[(j, i)]).sum();
+            assert!((col - p.b[(i, 0)]).abs() < 1e-8, "col {i}: {col}");
+        }
+        // At ε → 0 the plan approaches the unregularized optimum with
+        // cost ⟨P,C⟩ → 0.3 (paper Fig 5); the entropic term vanishes.
+        let cost: f64 = (0..4)
+            .flat_map(|i| (0..4).map(move |j| (i, j)))
+            .map(|(i, j)| plan[(i, j)] * p.cost[(i, j)])
+            .sum();
+        assert!((cost - 0.3).abs() < 5e-3, "⟨P,C⟩ = {cost}");
+    }
+
+    #[test]
+    fn log_and_linear_domains_agree_at_moderate_eps() {
+        // 16×16, 3 histograms, ε well inside the linear comfort zone:
+        // the two representations must land on the same scalings to
+        // 1e-9 relative (α = 1 makes the iterate sequences identical in
+        // exact arithmetic).
+        let spec = ProblemSpec::new(16).with_hists(3).with_eps(0.5);
+        let p = spec.build(31);
+        let solver = CentralizedSolver::new(native());
+        let pol = StopPolicy { threshold: 1e-12, max_iters: 3000, ..Default::default() };
+        let lin = solver.solve_in(&p, pol, 1.0, crate::linalg::Domain::Linear);
+        let log = solver.solve_in(&p, pol, 1.0, crate::linalg::Domain::Log);
+        assert!(lin.converged() && log.converged());
+        for h in 0..3 {
+            for i in 0..16 {
+                let want_u = lin.state.u[(i, h)];
+                let got_u = log.state.u[(i, h)].exp();
+                assert!(
+                    (got_u - want_u).abs() < 1e-9 * want_u.abs().max(1.0),
+                    "u hist {h} row {i}: {got_u} vs {want_u}"
+                );
+                let want_v = lin.state.v[(i, h)];
+                let got_v = log.state.v[(i, h)].exp();
+                assert!(
+                    (got_v - want_v).abs() < 1e-9 * want_v.abs().max(1.0),
+                    "v hist {h} row {i}: {got_v} vs {want_v}"
+                );
+            }
+        }
+        // And the assembled plans agree too.
+        let pl = transport_plan(&p, &lin.state, 1);
+        let pg = transport_plan(&p, &log.state, 1);
+        assert!(pl.allclose(&pg, 1e-9));
     }
 
     #[test]

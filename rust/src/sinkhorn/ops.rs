@@ -1,10 +1,14 @@
 //! Whole-problem reductions: marginal errors, objective, plan.
 //!
 //! Cold-path operations (once per convergence check / at the end of a
-//! run); the hot path lives in [`crate::runtime`].
+//! run); the hot path lives in [`crate::runtime`]. Every reduction
+//! branches on the state's [`Domain`]: log-domain states assemble plan
+//! entries as `exp(log u + log K + log v)` — each exponent is the log of
+//! a plan entry (≤ 0 near the fixed point), so nothing overflows even
+//! when the duals are in the thousands.
 
 use super::State;
-use crate::linalg::{scale_rows_cols, Mat};
+use crate::linalg::{scale_rows_cols, Domain, Mat};
 use crate::workload::Problem;
 
 /// L1 marginal errors `(Σ|P·1 − a|, Σ|Pᵀ·1 − b|)` for histogram `h`.
@@ -12,15 +16,27 @@ pub fn full_marginal_errors(p: &Problem, st: &State, h: usize) -> (f64, f64) {
     let n = p.n;
     let uh: Vec<f64> = (0..n).map(|i| st.u[(i, h)]).collect();
     let vh: Vec<f64> = (0..n).map(|i| st.v[(i, h)]).collect();
+    let k = p.kernel_for(st.domain);
     let mut err_a = 0.0;
     let mut err_b = vec![0.0; n];
     for i in 0..n {
-        let krow = p.k.row(i);
+        let krow = k.row(i);
         let mut row_sum = 0.0;
-        for j in 0..n {
-            let pij = uh[i] * krow[j] * vh[j];
-            row_sum += pij;
-            err_b[j] += pij;
+        match st.domain {
+            Domain::Linear => {
+                for j in 0..n {
+                    let pij = uh[i] * krow[j] * vh[j];
+                    row_sum += pij;
+                    err_b[j] += pij;
+                }
+            }
+            Domain::Log => {
+                for j in 0..n {
+                    let pij = (uh[i] + krow[j] + vh[j]).exp();
+                    row_sum += pij;
+                    err_b[j] += pij;
+                }
+            }
         }
         err_a += (row_sum - p.a[i]).abs();
     }
@@ -29,30 +45,62 @@ pub fn full_marginal_errors(p: &Problem, st: &State, h: usize) -> (f64, f64) {
 }
 
 /// Entropic objective `⟨P,C⟩ + ε Σ P (log P − 1)` for histogram `h`,
-/// computed in the stable form `ε Σ P (log u + log v − 1)`.
+/// computed in the stable form `ε Σ P (log u + log v − 1)` — log-domain
+/// states already store `log u`, `log v` directly.
 pub fn objective(p: &Problem, st: &State, h: usize) -> f64 {
     let n = p.n;
+    let k = p.kernel_for(st.domain);
     let mut total = 0.0;
     for i in 0..n {
         let ui = st.u[(i, h)];
-        let lu = ui.ln();
-        let krow = p.k.row(i);
-        for j in 0..n {
-            let pij = ui * krow[j] * st.v[(j, h)];
-            if pij > 0.0 {
-                total += pij * (lu + st.v[(j, h)].ln() - 1.0);
+        let krow = k.row(i);
+        match st.domain {
+            Domain::Linear => {
+                let lu = ui.ln();
+                for j in 0..n {
+                    let vj = st.v[(j, h)];
+                    let pij = ui * krow[j] * vj;
+                    if pij > 0.0 {
+                        total += pij * (lu + vj.ln() - 1.0);
+                    }
+                }
+            }
+            Domain::Log => {
+                for j in 0..n {
+                    let lv = st.v[(j, h)];
+                    let pij = (ui + krow[j] + lv).exp();
+                    if pij > 0.0 {
+                        total += pij * (ui + lv - 1.0);
+                    }
+                }
             }
         }
     }
     p.eps * total
 }
 
-/// Transport plan `P = diag(u_h) K diag(v_h)`.
-pub fn transport_plan(k: &Mat, st: &State, h: usize) -> Mat {
-    let n = k.rows();
+/// Transport plan `P = diag(u_h) K diag(v_h)`, assembled in whichever
+/// representation the state carries (always returned linearly — plan
+/// entries are probabilities and never overflow).
+pub fn transport_plan(p: &Problem, st: &State, h: usize) -> Mat {
+    let n = p.n;
     let uh: Vec<f64> = (0..n).map(|i| st.u[(i, h)]).collect();
-    let vh: Vec<f64> = (0..k.cols()).map(|i| st.v[(i, h)]).collect();
-    scale_rows_cols(k, &uh, &vh)
+    let vh: Vec<f64> = (0..n).map(|i| st.v[(i, h)]).collect();
+    match st.domain {
+        Domain::Linear => scale_rows_cols(p.kernel(), &uh, &vh),
+        Domain::Log => {
+            let lk = p.log_kernel();
+            let mut out = Mat::zeros(n, n);
+            for i in 0..n {
+                let lkrow = lk.row(i);
+                let orow = out.row_mut(i);
+                for j in 0..n {
+                    orow[j] = (uh[i] + lkrow[j] + vh[j]).exp();
+                }
+            }
+            out
+        }
+    }
 }
 
 #[cfg(test)]
@@ -64,17 +112,18 @@ mod tests {
     fn errors_vanish_at_fixed_point() {
         // Construct an exact fixed point: P doubly stochastic by design.
         let p = Problem::paper_4x4(0.5);
+        let k = p.kernel().clone();
         // Run enough plain iterations to reach the fixed point.
         let n = 4;
         let mut u = vec![1.0; n];
         let mut v = vec![1.0; n];
         for _ in 0..500 {
             for i in 0..n {
-                let q: f64 = (0..n).map(|j| p.k[(i, j)] * v[j]).sum();
+                let q: f64 = (0..n).map(|j| k[(i, j)] * v[j]).sum();
                 u[i] = p.a[i] / q;
             }
             for j in 0..n {
-                let r: f64 = (0..n).map(|i| p.k[(i, j)] * u[i]).sum();
+                let r: f64 = (0..n).map(|i| k[(i, j)] * u[i]).sum();
                 v[j] = p.b[(j, 0)] / r;
             }
         }
@@ -85,6 +134,15 @@ mod tests {
         }
         let (ea, eb) = full_marginal_errors(&p, &st, 0);
         assert!(ea < 1e-12 && eb < 1e-14, "({ea}, {eb})");
+        // The same fixed point expressed in log-scalings reads the same
+        // marginal errors through the log-domain reduction.
+        let mut lst = State::init(n, 1, Domain::Log);
+        for i in 0..n {
+            lst.u[(i, 0)] = u[i].ln();
+            lst.v[(i, 0)] = v[i].ln();
+        }
+        let (lea, leb) = full_marginal_errors(&p, &lst, 0);
+        assert!(lea < 1e-12 && leb < 1e-13, "({lea}, {leb})");
     }
 
     #[test]
@@ -96,7 +154,7 @@ mod tests {
             st.v[(i, 0)] = 1.5 - 0.2 * i as f64;
         }
         let got = objective(&p, &st, 0);
-        let plan = transport_plan(&p.k, &st, 0);
+        let plan = transport_plan(&p, &st, 0);
         let mut want = 0.0;
         for i in 0..4 {
             for j in 0..4 {
@@ -105,13 +163,27 @@ mod tests {
             }
         }
         assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // Log-domain representation of the same state: identical
+        // objective and plan up to round-off.
+        let mut lst = State::init(4, 1, Domain::Log);
+        for i in 0..4 {
+            lst.u[(i, 0)] = st.u[(i, 0)].ln();
+            lst.v[(i, 0)] = st.v[(i, 0)].ln();
+        }
+        let lgot = objective(&p, &lst, 0);
+        assert!((lgot - want).abs() < 1e-10, "{lgot} vs {want}");
+        assert!(transport_plan(&p, &lst, 0).allclose(&plan, 1e-12));
     }
 
     #[test]
     fn plan_marginals_are_scaled_kernel() {
         let p = Problem::paper_4x4(1.0);
         let st = State::ones(4, 1);
-        let plan = transport_plan(&p.k, &st, 0);
-        assert!(plan.allclose(&p.k, 1e-15));
+        let plan = transport_plan(&p, &st, 0);
+        assert!(plan.allclose(p.kernel(), 1e-15));
+        // Identity log state reproduces the kernel too.
+        let lst = State::init(4, 1, Domain::Log);
+        let lplan = transport_plan(&p, &lst, 0);
+        assert!(lplan.allclose(p.kernel(), 1e-15));
     }
 }

@@ -2,7 +2,7 @@
 
 use super::ops::{full_marginal_errors, objective};
 use super::{State, StopPolicy};
-use crate::linalg::Mat;
+use crate::linalg::{Domain, Mat};
 use crate::metrics::Clock;
 use crate::runtime::{ComputeBackend, Target};
 use crate::workload::Problem;
@@ -55,31 +55,66 @@ impl CentralizedSolver {
         Self { backend }
     }
 
-    /// Plain solve (no per-iteration history).
+    /// Plain linear-domain solve (no per-iteration history).
     pub fn solve(&self, p: &Problem, policy: StopPolicy, alpha: f64) -> SolveOutcome {
-        self.run(p, policy, alpha, false)
+        self.run(p, policy, alpha, Domain::Linear, false)
     }
 
-    /// Solve recording the error/objective trace at every check point.
+    /// Linear-domain solve recording the error/objective trace at every
+    /// check point.
     pub fn solve_traced(&self, p: &Problem, policy: StopPolicy, alpha: f64) -> SolveOutcome {
-        self.run(p, policy, alpha, true)
+        self.run(p, policy, alpha, Domain::Linear, true)
     }
 
-    fn run(&self, p: &Problem, policy: StopPolicy, alpha: f64, traced: bool) -> SolveOutcome {
+    /// Solve in an explicit numerics domain. `Domain::Log` iterates the
+    /// log-stabilized scalings (Schmitzer-style max absorption inside the
+    /// backend's logsumexp operator) and returns a log-domain [`State`] —
+    /// the path that stays exact where `K = exp(−C/ε)` underflows.
+    pub fn solve_in(
+        &self,
+        p: &Problem,
+        policy: StopPolicy,
+        alpha: f64,
+        domain: Domain,
+    ) -> SolveOutcome {
+        self.run(p, policy, alpha, domain, false)
+    }
+
+    /// Traced variant of [`CentralizedSolver::solve_in`].
+    pub fn solve_traced_in(
+        &self,
+        p: &Problem,
+        policy: StopPolicy,
+        alpha: f64,
+        domain: Domain,
+    ) -> SolveOutcome {
+        self.run(p, policy, alpha, domain, true)
+    }
+
+    fn run(
+        &self,
+        p: &Problem,
+        policy: StopPolicy,
+        alpha: f64,
+        domain: Domain,
+        traced: bool,
+    ) -> SolveOutcome {
         let n = p.n;
         let nh = p.hists();
         let clock = Clock::new();
+        let one = domain.one();
 
         // u-update operator: A = K, t = a (broadcast across histograms).
         let mut u_op = self
             .backend
-            .block_op(&p.k, Target::Vec(&p.a), Mat::ones(n, nh))
+            .block_op_in(domain, p.kernel_for(domain), Target::Vec(&p.a), Mat::full(n, nh, one))
             .expect("u-op");
-        // v-update operator: A = Kᵀ, t = b (per-histogram matrix).
-        let kt = p.k.transpose();
+        // v-update operator: A = Kᵀ, t = b (per-histogram matrix). The
+        // transpose comes from the problem's shared cache, so repeated
+        // solves on one problem build it exactly once.
         let mut v_op = self
             .backend
-            .block_op(&kt, Target::Mat(&p.b), Mat::ones(n, nh))
+            .block_op_in(domain, p.kernel_t_for(domain), Target::Mat(&p.b), Mat::full(n, nh, one))
             .expect("v-op");
 
         let mut history = Vec::new();
@@ -100,7 +135,8 @@ impl CentralizedSolver {
                 let err = errs.iter().cloned().fold(0.0, f64::max);
                 final_err = err;
                 if traced {
-                    let st = State { u: u_op.state().clone(), v: v_op.state().clone() };
+                    let st =
+                        State { u: u_op.state().clone(), v: v_op.state().clone(), domain };
                     let (err_a, err_b) = full_marginal_errors(p, &st, 0);
                     history.push(HistoryPoint {
                         iter: k,
@@ -122,7 +158,7 @@ impl CentralizedSolver {
         }
 
         SolveOutcome {
-            state: State { u: u_op.state().clone(), v: v_op.state().clone() },
+            state: State { u: u_op.state().clone(), v: v_op.state().clone(), domain },
             iterations,
             stop,
             final_err,

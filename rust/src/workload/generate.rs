@@ -1,7 +1,8 @@
 //! Problem generator: marginals, cost families, sparsity, conditioning.
 
-use crate::linalg::Mat;
+use crate::linalg::{Domain, Mat};
 use crate::rng::Rng;
+use std::sync::{Arc, OnceLock};
 
 /// Condition classes of the Gibbs kernel (paper §IV-D): the effective
 /// conditioning of Sinkhorn is driven by `max C / ε` — we scale the cost
@@ -112,6 +113,7 @@ impl ProblemSpec {
             }
         }
 
+        let mut masked_cost_min = None;
         // Off-diagonal block sparsity: fraction `s` of off-diagonal
         // (bi, bj) client-block pairs get their cost pushed so high the
         // Gibbs entry underflows — the "sparse kernel" regime of §IV-D.
@@ -131,7 +133,11 @@ impl ProblemSpec {
                 .collect();
             rng.shuffle(&mut offdiag);
             let kill = ((offdiag.len() as f64) * self.sparsity).round() as usize;
-            let huge = 800.0 * self.eps; // exp(-800) == 0 in f64
+            // exp(-800) == 0 in f64 — the deliberate "kernel zero" mark.
+            // Recorded on the problem (`masked_cost_min`) so domain auto-
+            // selection can tell intentional zeros from underflow.
+            let huge = 800.0 * self.eps;
+            masked_cost_min = Some(huge);
             for &(bi, bj) in offdiag.iter().take(kill) {
                 for (pi, pj) in [(bi, bj), (bj, bi)] {
                     for i in pi * m..(pi + 1) * m {
@@ -159,12 +165,20 @@ impl ProblemSpec {
             }
         }
 
-        let k = cost.map(|c| (-c / self.eps).exp());
-        Problem { n, eps: self.eps, a, b, cost, k }
+        let mut p = Problem::from_parts(a, b, cost, self.eps);
+        p.masked_cost_min = masked_cost_min;
+        p
     }
 }
 
 /// A concrete entropic-OT instance.
+///
+/// The *cost matrix* is the source of truth; the Gibbs kernel
+/// `K = exp(−C/ε)`, its log-domain twin `log K = −C/ε`, and both
+/// transposes are materialized lazily and cached (shared across clones
+/// via `Arc`). A small-ε spec therefore never builds an all-zero linear
+/// kernel unless a linear-domain solver actually asks for one, and
+/// multi-solve experiments pay each O(n²) transpose exactly once.
 #[derive(Clone, Debug)]
 pub struct Problem {
     pub n: usize,
@@ -175,14 +189,78 @@ pub struct Problem {
     pub b: Mat,
     /// Cost matrix `C`.
     pub cost: Mat,
-    /// Gibbs kernel `K = exp(−C/ε)`.
-    pub k: Mat,
+    /// Cost level at/above which entries are *deliberate* kernel zeros
+    /// (the §IV-D block-sparsification sentinel). Such entries are meant
+    /// to underflow and must not push domain auto-selection into the log
+    /// path; `None` means every entry is genuine.
+    pub masked_cost_min: Option<f64>,
+    kernel: Arc<OnceLock<Mat>>,
+    kernel_t: Arc<OnceLock<Mat>>,
+    log_kernel: Arc<OnceLock<Mat>>,
+    log_kernel_t: Arc<OnceLock<Mat>>,
 }
 
 impl Problem {
     /// Number of simultaneous target histograms.
     pub fn hists(&self) -> usize {
         self.b.cols()
+    }
+
+    /// Gibbs kernel `K = exp(−C/ε)` (built on first use, then cached).
+    pub fn kernel(&self) -> &Mat {
+        self.kernel.get_or_init(|| {
+            let eps = self.eps;
+            self.cost.map(|c| (-c / eps).exp())
+        })
+    }
+
+    /// Cached transpose `Kᵀ` — the v-update operator's matrix.
+    pub fn kernel_t(&self) -> &Mat {
+        self.kernel_t.get_or_init(|| self.kernel().transpose())
+    }
+
+    /// Log-domain kernel `log K = −C/ε` (no exp, no underflow).
+    pub fn log_kernel(&self) -> &Mat {
+        self.log_kernel.get_or_init(|| {
+            let eps = self.eps;
+            self.cost.map(|c| -c / eps)
+        })
+    }
+
+    /// Cached transpose `(log K)ᵀ`.
+    pub fn log_kernel_t(&self) -> &Mat {
+        self.log_kernel_t.get_or_init(|| self.log_kernel().transpose())
+    }
+
+    /// The kernel in the representation `domain` expects.
+    pub fn kernel_for(&self, domain: Domain) -> &Mat {
+        match domain {
+            Domain::Linear => self.kernel(),
+            Domain::Log => self.log_kernel(),
+        }
+    }
+
+    /// The transposed kernel in the representation `domain` expects.
+    pub fn kernel_t_for(&self, domain: Domain) -> &Mat {
+        match domain {
+            Domain::Linear => self.kernel_t(),
+            Domain::Log => self.log_kernel_t(),
+        }
+    }
+
+    /// Largest *genuine* cost entry — `cost_max() / eps` is the exponent
+    /// dynamic range that decides when the linear kernel underflows f64.
+    /// Entries at/above the sparsification sentinel (`masked_cost_min`)
+    /// are deliberate kernel zeros and excluded, so sparse workloads do
+    /// not spuriously auto-select the log domain.
+    pub fn cost_max(&self) -> f64 {
+        let cap = self.masked_cost_min.unwrap_or(f64::INFINITY);
+        self.cost
+            .as_slice()
+            .iter()
+            .cloned()
+            .filter(|&c| c < cap)
+            .fold(0.0, f64::max)
     }
 
     /// The paper's §III worked example: a = [.3 .2 .1 .4],
@@ -204,17 +282,27 @@ impl Problem {
                 3.0, 2.0, 1.0, 0.0,
             ],
         );
-        let k = cost.map(|c| (-c / eps).exp());
-        Problem { n: 4, eps, a, b, cost, k }
+        Problem::from_parts(a, b, cost, eps)
     }
 
-    /// Build a problem from explicit pieces (finance pipeline).
+    /// Build a problem from explicit pieces (finance pipeline). Kernels
+    /// are not materialized here — they build lazily on first access.
     pub fn from_parts(a: Vec<f64>, b: Mat, cost: Mat, eps: f64) -> Problem {
         let n = a.len();
         assert_eq!(b.rows(), n);
         assert_eq!(cost.rows(), n);
         assert_eq!(cost.cols(), n);
-        let k = cost.map(|c| (-c / eps).exp());
-        Problem { n, eps, a, b, cost, k }
+        Problem {
+            n,
+            eps,
+            a,
+            b,
+            cost,
+            masked_cost_min: None,
+            kernel: Arc::new(OnceLock::new()),
+            kernel_t: Arc::new(OnceLock::new()),
+            log_kernel: Arc::new(OnceLock::new()),
+            log_kernel_t: Arc::new(OnceLock::new()),
+        }
     }
 }

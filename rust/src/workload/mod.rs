@@ -13,9 +13,14 @@
 //!   range (its condition worsens as ε shrinks relative to cost spread);
 //! * `N` target histograms (`b ∈ R^{n×N}`, Cuturi vectorization §IV-B3).
 //!
+//! A [`Problem`] stores the cost matrix and materializes `K`, `log K`
+//! and both transposes lazily (cached, shared across clones), so
+//! small-ε workloads never build an underflowed linear kernel unless a
+//! linear solver asks for one.
+//!
 //! [`Partition`] slices a problem across `c` clients exactly as the
 //! paper's Fig. 1: client `j` owns `a_j, b_j`, row block `K_j` and the
-//! transposed column block `K[:, j]ᵀ`.
+//! transposed column block `K[:, j]ᵀ` — in either numerics domain.
 
 mod generate;
 mod partition;
@@ -41,7 +46,7 @@ mod tests {
     #[test]
     fn gibbs_kernel_positive_when_dense() {
         let p = ProblemSpec::new(32).build(1);
-        assert!(p.k.as_slice().iter().all(|&x| x > 0.0));
+        assert!(p.kernel().as_slice().iter().all(|&x| x > 0.0));
     }
 
     #[test]
@@ -51,17 +56,17 @@ mod tests {
         let count_small = |m: &crate::linalg::Mat| {
             m.as_slice().iter().filter(|&&x| x < 1e-100).count()
         };
-        assert_eq!(count_small(&dense.k), 0);
+        assert_eq!(count_small(dense.kernel()), 0);
         // s = 1: all 12 of 16 off-diagonal 16x16 blocks suppressed.
-        assert_eq!(count_small(&sparse.k), 12 * 16 * 16);
+        assert_eq!(count_small(sparse.kernel()), 12 * 16 * 16);
     }
 
     #[test]
     fn condition_classes_order_dynamic_range() {
         let range = |c: CondClass| {
             let p = ProblemSpec::new(32).with_condition(c).build(5);
-            let mx = p.k.as_slice().iter().cloned().fold(f64::MIN, f64::max);
-            let mn = p.k.as_slice().iter().cloned().fold(f64::MAX, f64::min);
+            let mx = p.kernel().as_slice().iter().cloned().fold(f64::MIN, f64::max);
+            let mn = p.kernel().as_slice().iter().cloned().fold(f64::MAX, f64::min);
             mx / mn
         };
         let w = range(CondClass::Well);
@@ -82,9 +87,51 @@ mod tests {
             // Row block matches the full kernel.
             for i in 0..m {
                 for col in 0..24 {
-                    assert_eq!(sh.k_row[(i, col)], p.k[(j * m + i, col)]);
+                    assert_eq!(sh.k_row[(i, col)], p.kernel()[(j * m + i, col)]);
                     // k_col_t[i][col] = K[col][j*m + i]
-                    assert_eq!(sh.k_col_t[(i, col)], p.k[(col, j * m + i)]);
+                    assert_eq!(sh.k_col_t[(i, col)], p.kernel()[(col, j * m + i)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn log_kernel_stays_finite_where_linear_underflows() {
+        // ε so small that exp(−C/ε) underflows every off-diagonal entry:
+        // the log kernel is exact and no linear kernel is ever built.
+        let p = Problem::paper_4x4(1e-3);
+        let lk = p.log_kernel();
+        assert_eq!(lk[(0, 0)], 0.0);
+        assert_eq!(lk[(0, 3)], -3000.0);
+        assert!(lk.as_slice().iter().all(|x| !x.is_nan()));
+        // The transpose cache returns the same allocation on re-access.
+        let t1 = p.log_kernel_t() as *const crate::linalg::Mat;
+        let t2 = p.log_kernel_t() as *const crate::linalg::Mat;
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn kernel_caches_are_shared_across_clones() {
+        let p = ProblemSpec::new(16).build(2);
+        let _ = p.kernel_t();
+        let q = p.clone();
+        // The clone sees the already-built transpose (same allocation).
+        assert_eq!(p.kernel_t() as *const _, q.kernel_t() as *const _);
+    }
+
+    #[test]
+    fn log_partition_slices_log_kernel() {
+        use crate::linalg::Domain;
+        let p = ProblemSpec::new(24).with_eps(0.01).build(13);
+        let part = Partition::new_in(&p, 4, Domain::Log);
+        assert_eq!(part.domain, Domain::Log);
+        let lk = p.log_kernel();
+        for (j, sh) in part.shards.iter().enumerate() {
+            let m = 24 / 4;
+            for i in 0..m {
+                for col in 0..24 {
+                    assert_eq!(sh.k_row[(i, col)], lk[(j * m + i, col)]);
+                    assert_eq!(sh.k_col_t[(i, col)], lk[(col, j * m + i)]);
                 }
             }
         }
@@ -97,6 +144,6 @@ mod tests {
         assert_eq!(p.a, vec![0.3, 0.2, 0.1, 0.4]);
         assert_eq!(p.cost[(0, 1)], 1.0);
         assert_eq!(p.cost[(3, 0)], 3.0);
-        assert!((p.k[(0, 0)] - 1.0).abs() < 1e-15); // exp(0)
+        assert!((p.kernel()[(0, 0)] - 1.0).abs() < 1e-15); // exp(0)
     }
 }

@@ -1,10 +1,13 @@
 //! Client-wise slicing of a problem (paper Fig. 1).
 
 use super::Problem;
-use crate::linalg::Mat;
+use crate::linalg::{Domain, Mat};
 
 /// What client `j` privately owns in the all-to-all regime:
-/// its marginal slices plus both kernel blocks.
+/// its marginal slices plus both kernel blocks. In the log domain the
+/// kernel blocks hold `log K` entries and the exchanged state is the
+/// log-scaling slice — exactly the quantity the paper's privacy layer
+/// instruments.
 #[derive(Clone, Debug)]
 pub struct ClientShard {
     /// Client index.
@@ -16,10 +19,11 @@ pub struct ClientShard {
     pub a: Vec<f64>,
     /// `b_j` (m × N).
     pub b: Mat,
-    /// Row block `K_j = K[r0..r1, :]` (m × n).
+    /// Row block `K_j = K[r0..r1, :]` (m × n) — `log K` rows in the log
+    /// domain.
     pub k_row: Mat,
     /// Transposed column block `K[:, r0..r1]ᵀ` (m × n) — the operator of
-    /// the v-update `r_j = K_jᵀ u`.
+    /// the v-update `r_j = K_jᵀ u`; `(log K)ᵀ` rows in the log domain.
     pub k_col_t: Mat,
 }
 
@@ -34,15 +38,26 @@ impl ClientShard {
 pub struct Partition {
     pub n: usize,
     pub clients: usize,
+    /// Representation the kernel blocks (and the exchanged scaling
+    /// slices) use.
+    pub domain: Domain,
     pub shards: Vec<ClientShard>,
 }
 
 impl Partition {
-    /// Slice `p` across `c` clients; requires `c | n` like the paper.
+    /// Linear-domain slicing; requires `c | n` like the paper.
     pub fn new(p: &Problem, c: usize) -> Partition {
+        Self::new_in(p, c, Domain::Linear)
+    }
+
+    /// Slice `p` across `c` clients in the given numerics domain. The
+    /// transposed kernel comes from the problem's shared cache, so
+    /// repartitioning (multi-solve experiments) never recomputes it.
+    pub fn new_in(p: &Problem, c: usize, domain: Domain) -> Partition {
         assert!(c > 0 && p.n % c == 0, "clients must divide n (n={}, c={c})", p.n);
         let m = p.n / c;
-        let kt = p.k.transpose();
+        let k = p.kernel_for(domain);
+        let kt = p.kernel_t_for(domain);
         let shards = (0..c)
             .map(|j| {
                 let (r0, r1) = (j * m, (j + 1) * m);
@@ -52,12 +67,12 @@ impl Partition {
                     r1,
                     a: p.a[r0..r1].to_vec(),
                     b: p.b.row_block(r0, r1),
-                    k_row: p.k.row_block(r0, r1),
+                    k_row: k.row_block(r0, r1),
                     k_col_t: kt.row_block(r0, r1),
                 }
             })
             .collect();
-        Partition { n: p.n, clients: c, shards }
+        Partition { n: p.n, clients: c, domain, shards }
     }
 
     pub fn m(&self) -> usize {
