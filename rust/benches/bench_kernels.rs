@@ -8,13 +8,29 @@
 
 mod common;
 
-use fedsink::benchkit::{section, Bench};
-use fedsink::linalg::Mat;
+use fedsink::benchkit::{section, write_baseline, Bench, BenchResult};
+use fedsink::linalg::{LogCsr, Mat};
 use fedsink::rng::Rng;
+
+/// Random log-kernel block with a fraction `s` of entries hard-masked to
+/// `−∞` — the §IV-D sparse-kernel regime seen from the log domain.
+fn masked_log_kernel(n: usize, s: f64, rng: &mut Rng) -> Mat {
+    let mut a = Mat::rand_uniform(n, n, -8.0, 0.0, rng);
+    for i in 0..n {
+        for j in 0..n {
+            // Keep the diagonal so no row masks out entirely.
+            if i != j && rng.uniform() < s {
+                a[(i, j)] = f64::NEG_INFINITY;
+            }
+        }
+    }
+    a
+}
 
 fn main() {
     let b = Bench::default();
     let mut rng = Rng::seed_from(1);
+    let mut baseline: Vec<BenchResult> = Vec::new();
 
     section("native GEMV / GEMM (n x n @ n x N)");
     for &(n, nh) in &[(512usize, 1usize), (512, 64), (1024, 1), (1024, 64)] {
@@ -22,9 +38,10 @@ fn main() {
         let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
         let mut out = Mat::zeros(n, nh);
         for threads in [1usize, 4] {
-            b.run(&format!("native matmul n={n} N={nh} threads={threads}"), || {
-                a.matmul_into(&x, &mut out, threads)
-            });
+            baseline.push(b.run(
+                &format!("native matmul n={n} N={nh} threads={threads}"),
+                || a.matmul_into(&x, &mut out, threads),
+            ));
         }
     }
 
@@ -35,9 +52,10 @@ fn main() {
         let x_log = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
         let mut out = Mat::zeros(n, nh);
         for threads in [1usize, 4] {
-            b.run(&format!("logsumexp n={n} N={nh} threads={threads}"), || {
-                a_log.logsumexp_into(&x_log, &mut out, threads)
-            });
+            baseline.push(b.run(
+                &format!("logsumexp n={n} N={nh} threads={threads}"),
+                || a_log.logsumexp_into(&x_log, &mut out, threads),
+            ));
         }
     }
 
@@ -50,10 +68,40 @@ fn main() {
         let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
         let mut out = Mat::zeros(n, 1);
         let csr = fedsink::linalg::Csr::from_dense(p.kernel(), 1e-300);
-        b.run(&format!("dense  s={s} (density {:.2})", csr.density()), || {
-            p.kernel().matmul_into(&x, &mut out, 1)
-        });
-        b.run(&format!("csr    s={s}"), || csr.matmul_into(&x, &mut out, 1));
+        baseline.push(b.run(
+            &format!("dense  s={s} (density {:.2})", csr.density()),
+            || p.kernel().matmul_into(&x, &mut out, 1),
+        ));
+        baseline.push(b.run(&format!("csr    s={s}"), || csr.matmul_into(&x, &mut out, 1)));
+    }
+
+    section("truncated sparse-log LSE vs dense logsumexp (N=1)");
+    // Mask fraction s → density ≈ 1−s; the n=4096 rows are the
+    // acceptance bar for the stabilized sparse engine: sparse ≥ 4×
+    // dense at density ≤ 0.1.
+    for &(n, s) in &[
+        (1024usize, 0.0f64),
+        (1024, 0.5),
+        (1024, 0.9),
+        (1024, 0.99),
+        (4096, 0.9),
+        (4096, 0.99),
+    ] {
+        let a_log = masked_log_kernel(n, s, &mut rng);
+        let lc = LogCsr::from_dense_log(&a_log, f64::NEG_INFINITY);
+        let x_log = Mat::rand_uniform(n, 1, -2.0, 2.0, &mut rng);
+        let mut out = Mat::zeros(n, 1);
+        baseline.push(b.run(
+            &format!("dense-log  n={n} s={s} (density {:.3})", lc.density()),
+            || a_log.logsumexp_into(&x_log, &mut out, 1),
+        ));
+        baseline.push(b.run(&format!("sparse-log n={n} s={s}"), || {
+            lc.logsumexp_into(&x_log, &mut out, 1)
+        }));
+    }
+
+    if let Err(e) = write_baseline("BENCH_kernels.json", &baseline) {
+        eprintln!("could not write BENCH_kernels.json: {e}");
     }
 
     xla_ablation(&b, &mut rng);

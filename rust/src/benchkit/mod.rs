@@ -80,6 +80,40 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Serialize results into the `BENCH_*.json` perf-trajectory document:
+/// one entry per case with the robust timing summary in milliseconds.
+/// Future PRs diff these baselines to catch hot-path regressions.
+pub fn results_json(results: &[BenchResult]) -> crate::jsonio::Json {
+    use crate::jsonio::Json;
+    Json::obj(vec![
+        (
+            "cases",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("name", r.name.as_str().into()),
+                            ("reps", r.reps.into()),
+                            ("mean_ms", (r.secs.mean * 1e3).into()),
+                            ("median_ms", (r.secs.median * 1e3).into()),
+                            ("std_ms", (r.secs.std * 1e3).into()),
+                            ("min_ms", (r.secs.min * 1e3).into()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write a `BENCH_*.json` baseline next to the bench's working dir.
+pub fn write_baseline(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, crate::jsonio::to_string_pretty(&results_json(results)))?;
+    println!("\nwrote {path} ({} cases)", results.len());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,7 +10,7 @@ mod file;
 
 pub use file::{load_file, FileError};
 
-use crate::linalg::Domain;
+use crate::linalg::{Domain, Stabilization};
 use crate::workload::{CondClass, Problem};
 use std::collections::BTreeMap;
 
@@ -144,6 +144,9 @@ pub struct SolveConfig {
     /// Numerics domain for the scaling iteration (linear, log-stabilized
     /// or per-problem auto selection).
     pub domain: DomainChoice,
+    /// Stabilized log-path tuning: truncation θ, absorption τ, sparse
+    /// dispatch cutoff (`--truncation-threshold` / `--absorb-threshold`).
+    pub stab: Stabilization,
     pub clients: usize,
     /// Damping step size α (async variants; 1.0 = undamped).
     pub alpha: f64,
@@ -177,7 +180,8 @@ impl Default for SolveConfig {
         Self {
             variant: Variant::SyncA2A,
             backend: BackendKind::Xla,
-            domain: DomainChoice::Auto,
+            domain: domain_choice_from_settings(),
+            stab: Stabilization::default(),
             clients: 2,
             alpha: 1.0,
             local_iters: 1,
@@ -192,6 +196,41 @@ impl Default for SolveConfig {
             net: crate::net::LatencyModel::lan(),
         }
     }
+}
+
+/// The numerics-domain choice carried by a [`Settings`] map (the
+/// `domain` key — `FEDSINK_DOMAIN` in the environment, `domain = ...` in
+/// a config file). `Auto` when absent or unparseable.
+pub fn domain_choice_from(settings: &Settings) -> DomainChoice {
+    settings
+        .get("domain")
+        .and_then(DomainChoice::parse)
+        .unwrap_or(DomainChoice::Auto)
+}
+
+/// Resolve the default numerics domain from the process environment:
+/// `FEDSINK_DOMAIN` first, then a `domain = ...` key in the config file
+/// named by `FEDSINK_CONFIG`. This is what `SolveConfig::default()`
+/// uses, so *every* experiment driver — not just `solve`/`epsilon-study`
+/// — honors the setting without plumbing a flag through. Resolved once
+/// per process (experiment grids build thousands of configs; `Default`
+/// must not re-read files or rescan the environment each time).
+pub fn domain_choice_from_settings() -> DomainChoice {
+    static RESOLVED: std::sync::OnceLock<DomainChoice> = std::sync::OnceLock::new();
+    *RESOLVED.get_or_init(|| {
+        let mut s = Settings::default();
+        s.overlay_env();
+        if let Ok(path) = std::env::var("FEDSINK_CONFIG") {
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if let Ok(file) = load_file(&text) {
+                    for (k, v) in file.map {
+                        s.map.entry(k).or_insert(v); // env keys win over file keys
+                    }
+                }
+            }
+        }
+        domain_choice_from(&s)
+    })
 }
 
 /// artifacts/ next to the binary's workspace (overridable by env).
@@ -329,6 +368,35 @@ mod tests {
         assert_eq!(DomainChoice::Auto.resolve(&hard), Domain::Log);
         assert_eq!(DomainChoice::Log.resolve(&easy), Domain::Log);
         assert_eq!(DomainChoice::Linear.resolve(&hard), Domain::Linear);
+    }
+
+    #[test]
+    fn domain_key_resolves_from_settings() {
+        // The key `FEDSINK_DOMAIN` lands on via `Settings::overlay_env`
+        // (FEDSINK_ → strip, lowercase) and a config file's `domain =`
+        // line both resolve through `domain_choice_from`; bad or absent
+        // values fall back to Auto. (Tested on a hand-built Settings —
+        // mutating the process environment would race parallel tests.)
+        let mut s = Settings::default();
+        assert_eq!(domain_choice_from(&s), DomainChoice::Auto);
+        s.set("domain", "log");
+        assert_eq!(domain_choice_from(&s), DomainChoice::Log);
+        s.set("domain", "linear");
+        assert_eq!(domain_choice_from(&s), DomainChoice::Linear);
+        s.set("domain", "bogus");
+        assert_eq!(domain_choice_from(&s), DomainChoice::Auto);
+        // The file loader produces the same key shape.
+        let f = load_file("domain = log").unwrap();
+        assert_eq!(domain_choice_from(&f), DomainChoice::Log);
+    }
+
+    #[test]
+    fn default_stabilization_is_sane() {
+        let s = Stabilization::default();
+        assert!(s.truncation_theta < 0.0);
+        assert!(s.absorb_threshold > 0.0 && s.hybrid_enabled());
+        assert!((0.0..=1.0).contains(&s.sparse_density_cutoff));
+        assert!(!Stabilization::disabled().hybrid_enabled());
     }
 
     #[test]

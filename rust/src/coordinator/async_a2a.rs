@@ -57,15 +57,29 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut timer = SplitTimer::new();
 
     // Domain-generic block operators (log ops iterate log-scalings; the
-    // broadcast slices below are then log-scaling slices).
+    // broadcast slices below are then log-scaling slices). Stabilized
+    // dispatch: log-domain nodes may run the absorption-hybrid / sparse
+    // schedule without changing what goes on the wire.
     let one = ctx.domain.one();
     let mut u_op = ctx
         .backend
-        .block_op_in(ctx.domain, &shard.k_row, Target::Vec(&shard.a), Mat::full(m, nh, one))
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_row,
+            Target::Vec(&shard.a),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
         .expect("u-op");
     let mut v_op = ctx
         .backend
-        .block_op_in(ctx.domain, &shard.k_col_t, Target::Mat(&shard.b), Mat::full(m, nh, one))
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_col_t,
+            Target::Mat(&shard.b),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
         .expect("v-op");
 
     // Local (possibly stale) copies of the full scaling state.

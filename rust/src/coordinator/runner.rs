@@ -2,7 +2,7 @@
 
 use super::{aggregate_stop, async_a2a, star, sync_a2a};
 use crate::config::{DomainChoice, SolveConfig, Variant};
-use crate::linalg::{Domain, Mat};
+use crate::linalg::{Domain, Mat, Stabilization};
 use crate::metrics::SplitTimer;
 use crate::net::{DelayTracker, LatencyModel, SimNet};
 use crate::runtime::make_backend;
@@ -69,6 +69,10 @@ pub struct RunCtx<'a> {
     /// per-problem decision every node follows, so the whole run
     /// exchanges one kind of scaling slice).
     pub domain: Domain,
+    /// Stabilized log-path tuning every node's operators share: the
+    /// absorption-hybrid schedule keeps GEMV cost on most iterations
+    /// while the wire still carries plain log-scaling slices.
+    pub stab: Stabilization,
     pub backend: Arc<dyn crate::runtime::ComputeBackend>,
     pub net: Arc<SimNet>,
     pub delays: Arc<DelayTracker>,
@@ -112,7 +116,7 @@ pub fn run_federated(
     }
 
     if cfg.variant == Variant::Centralized {
-        let solver = CentralizedSolver::new(backend);
+        let solver = CentralizedSolver::new(backend).with_stabilization(cfg.stab);
         let out = if traced {
             solver.solve_traced_in(p, policy, cfg.alpha, domain)
         } else {
@@ -159,6 +163,7 @@ pub fn run_federated(
         policy,
         traced,
         domain,
+        stab: cfg.stab,
         backend,
         net,
         delays: delays.clone(),

@@ -63,25 +63,28 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     // The server's two resident operators (only `matvec` is used; the
     // target is a placeholder — the server never sees a or b). Kernel
     // and its transpose come from the problem's shared cache in the
-    // run's numerics domain.
+    // run's numerics domain; the stabilized dispatch lets the log-domain
+    // products run on the absorption-hybrid / truncated-sparse schedule.
     let one = ctx.domain.one();
     let dummy = vec![1.0; n];
     let mut k_op = ctx
         .backend
-        .block_op_in(
+        .block_op_in_stabilized(
             ctx.domain,
             p.kernel_for(ctx.domain),
             Target::Vec(&dummy),
             Mat::full(n, nh, one),
+            &ctx.stab,
         )
         .expect("k-op");
     let mut kt_op = ctx
         .backend
-        .block_op_in(
+        .block_op_in_stabilized(
             ctx.domain,
             p.kernel_t_for(ctx.domain),
             Target::Vec(&dummy),
             Mat::full(n, nh, one),
+            &ctx.stab,
         )
         .expect("kt-op");
 
@@ -255,20 +258,22 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     let dummy = vec![1.0; n];
     let mut k_op = ctx
         .backend
-        .block_op_in(
+        .block_op_in_stabilized(
             ctx.domain,
             p.kernel_for(ctx.domain),
             Target::Vec(&dummy),
             Mat::full(n, nh, one),
+            &ctx.stab,
         )
         .expect("k-op");
     let mut kt_op = ctx
         .backend
-        .block_op_in(
+        .block_op_in_stabilized(
             ctx.domain,
             p.kernel_t_for(ctx.domain),
             Target::Vec(&dummy),
             Mat::full(n, nh, one),
+            &ctx.stab,
         )
         .expect("kt-op");
 

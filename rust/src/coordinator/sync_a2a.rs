@@ -35,15 +35,29 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     // the backend (device memory for XLA) for the whole run. In the log
     // domain the blocks hold `log K` and the op iterates log-scalings —
     // the AllGathered slices below are then exactly the communicated
-    // log-scalings the paper's privacy layer measures.
+    // log-scalings the paper's privacy layer measures. The stabilized
+    // dispatch may run them on the absorption-hybrid / truncated-sparse
+    // schedule; the exchanged slices are identical either way.
     let one = ctx.domain.one();
     let mut u_op = ctx
         .backend
-        .block_op_in(ctx.domain, &shard.k_row, Target::Vec(&shard.a), Mat::full(m, nh, one))
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_row,
+            Target::Vec(&shard.a),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
         .expect("u-op");
     let mut v_op = ctx
         .backend
-        .block_op_in(ctx.domain, &shard.k_col_t, Target::Mat(&shard.b), Mat::full(m, nh, one))
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_col_t,
+            Target::Mat(&shard.b),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
         .expect("v-op");
 
     // Full scaling state, refreshed by AllGathers.

@@ -37,6 +37,21 @@ impl Csr {
         Self { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, vals }
     }
 
+    /// Assemble from raw CSR arrays (the absorbed-kernel rebuild path —
+    /// avoids materializing a dense intermediate).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        vals: Vec<f64>,
+    ) -> Self {
+        assert_eq!(row_ptr.len(), rows + 1, "row_ptr length");
+        assert_eq!(col_idx.len(), vals.len(), "col_idx/vals length");
+        assert_eq!(*row_ptr.last().unwrap(), vals.len(), "row_ptr tail");
+        Self { rows, cols, row_ptr, col_idx, vals }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -66,6 +81,32 @@ impl Csr {
         out.as_mut_slice().fill(0.0);
 
         let run = |band: &mut [f64], r0: usize, r1: usize| {
+            if nh == 1 {
+                // GEMV fast path (parity with `Mat::matmul_into`):
+                // four-lane unrolled dot product over the stored entries.
+                let xs = x.as_slice();
+                for i in r0..r1 {
+                    let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                    let len = e - s;
+                    let chunks = s + len / 4 * 4;
+                    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                    let mut idx = s;
+                    while idx < chunks {
+                        s0 += self.vals[idx] * xs[self.col_idx[idx] as usize];
+                        s1 += self.vals[idx + 1] * xs[self.col_idx[idx + 1] as usize];
+                        s2 += self.vals[idx + 2] * xs[self.col_idx[idx + 2] as usize];
+                        s3 += self.vals[idx + 3] * xs[self.col_idx[idx + 3] as usize];
+                        idx += 4;
+                    }
+                    let mut acc = 0.0;
+                    while idx < e {
+                        acc += self.vals[idx] * xs[self.col_idx[idx] as usize];
+                        idx += 1;
+                    }
+                    band[i - r0] = acc + ((s0 + s1) + (s2 + s3));
+                }
+                return;
+            }
             for i in r0..r1 {
                 let orow = &mut band[(i - r0) * nh..(i - r0 + 1) * nh];
                 for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
@@ -131,6 +172,30 @@ mod tests {
         c.matmul_into(&x, &mut out, 2);
         assert_eq!(out[(2, 0)], 5.0);
         assert_eq!(out[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn gemv_fast_path_matches_dense() {
+        // nh == 1 takes the unrolled dot-product path; it must agree
+        // with the dense GEMV on the same kernel, serial and threaded.
+        let mut rng = Rng::seed_from(17);
+        let mut d = Mat::rand_uniform(61, 43, 0.1, 1.0, &mut rng);
+        for i in 0..61 {
+            for j in 0..43 {
+                if rng.uniform() < 0.75 {
+                    d[(i, j)] = 0.0;
+                }
+            }
+        }
+        let c = Csr::from_dense(&d, 0.0);
+        let x = Mat::rand_uniform(43, 1, 0.1, 1.0, &mut rng);
+        let want = d.matmul(&x, 1);
+        let mut got = Mat::zeros(61, 1);
+        c.matmul_into(&x, &mut got, 1);
+        assert!(got.allclose(&want, 1e-12));
+        let mut par = Mat::zeros(61, 1);
+        c.matmul_into(&x, &mut par, 3);
+        assert!(par.allclose(&got, 0.0));
     }
 
     #[test]

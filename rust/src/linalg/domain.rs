@@ -49,3 +49,51 @@ impl Domain {
         }
     }
 }
+
+/// Tuning for the stabilized sparse/hybrid log-domain engine
+/// (Schmitzer's sparse scaling + kernel absorption; PAPERS.md
+/// 1610.06519). All of it is advisory: a backend without a sparse or
+/// hybrid operator simply ignores it and runs the dense logsumexp path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stabilization {
+    /// Row-relative truncation threshold `θ` (log space, < 0): a kernel
+    /// entry whose exponent sits more than `|θ|` below its row maximum
+    /// is dropped as zero mass. The default −60 is far below f64's
+    /// relative resolution of a logsumexp (ln ε_machine ≈ −36), so
+    /// truncation error is invisible next to round-off.
+    pub truncation_theta: f64,
+    /// Re-absorption threshold `τ` (> 0) for the hybrid schedule: linear
+    /// GEMV iterations run on the dual-absorbed kernel until the
+    /// exchanged log-scalings drift more than `τ` from the absorbed
+    /// point, then the kernel is re-absorbed + re-truncated. `+∞`
+    /// disables the hybrid (pure logsumexp iterations).
+    pub absorb_threshold: f64,
+    /// Dispatch the sparse logsumexp operator when the truncated
+    /// kernel's density falls below this fraction (1 = always sparse,
+    /// 0 = never).
+    pub sparse_density_cutoff: f64,
+}
+
+impl Default for Stabilization {
+    fn default() -> Self {
+        Self { truncation_theta: -60.0, absorb_threshold: 15.0, sparse_density_cutoff: 0.25 }
+    }
+}
+
+impl Stabilization {
+    /// No truncation, no absorption, no sparse dispatch — the pure
+    /// dense log-domain path of PR 1 (the oracle the hybrid is pinned
+    /// against in the property tests).
+    pub fn disabled() -> Self {
+        Self {
+            truncation_theta: f64::NEG_INFINITY,
+            absorb_threshold: f64::INFINITY,
+            sparse_density_cutoff: 0.0,
+        }
+    }
+
+    /// Whether the absorption-hybrid schedule is active.
+    pub fn hybrid_enabled(&self) -> bool {
+        self.absorb_threshold.is_finite()
+    }
+}

@@ -1,0 +1,264 @@
+//! `−∞`-aware compressed sparse row twin of [`Csr`] for log-domain
+//! kernels (Schmitzer's stabilized *sparse* scaling; PAPERS.md
+//! 1610.06519).
+//!
+//! A log-kernel entry `log K[i,j] = −C[i,j]/ε` is dropped when its
+//! exponent, shifted by the row maximum, falls below a threshold `θ`:
+//! the entry would contribute at most `e^θ` of the row's logsumexp mass.
+//! Dropped entries behave exactly like `−∞` in the dense logsumexp
+//! kernels — zero mass — so at `θ = −∞` the truncation is a pure
+//! compression of hard-masked (`−∞`) entries and the sparse product is
+//! bit-identical to the dense one.
+//!
+//! [`Csr`]: super::Csr
+
+use super::Mat;
+
+/// Sparse log-domain matrix: stored entries are finite log-kernel
+/// values; every absent entry is `−∞` (zero mass).
+#[derive(Clone, Debug)]
+pub struct LogCsr {
+    rows: usize,
+    cols: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    vals: Vec<f64>,
+    theta: f64,
+}
+
+impl LogCsr {
+    /// Truncate a dense log-kernel at row-relative threshold `theta`:
+    /// keep `a[i,j]` iff it is finite and `a[i,j] − row_max_i ≥ theta`.
+    /// `theta = −∞` keeps every finite entry (mask compression only);
+    /// a fully `−∞` row stays empty and logsumexps to `−∞`.
+    pub fn from_dense_log(m: &Mat, theta: f64) -> Self {
+        let mut row_ptr = Vec::with_capacity(m.rows() + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m.rows() {
+            let row = m.row(i);
+            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if mx > f64::NEG_INFINITY {
+                for (j, &x) in row.iter().enumerate() {
+                    if x > f64::NEG_INFINITY && x - mx >= theta {
+                        col_idx.push(j as u32);
+                        vals.push(x);
+                    }
+                }
+            }
+            row_ptr.push(vals.len());
+        }
+        Self { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, vals, theta }
+    }
+
+    /// Density the truncation *would* produce, without allocating the
+    /// CSR arrays — the cheap probe that dispatch decisions run before
+    /// committing to a build.
+    pub fn density_of(m: &Mat, theta: f64) -> f64 {
+        if m.rows() * m.cols() == 0 {
+            return 0.0;
+        }
+        let mut kept = 0usize;
+        for i in 0..m.rows() {
+            let row = m.row(i);
+            let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if mx > f64::NEG_INFINITY {
+                kept += row
+                    .iter()
+                    .filter(|&&x| x > f64::NEG_INFINITY && x - mx >= theta)
+                    .count();
+            }
+        }
+        kept as f64 / (m.rows() * m.cols()) as f64
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Truncation threshold this matrix was built with.
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Fill fraction (1 = dense) — the quantity the runtime's sparse
+    /// dispatch cutoff is compared against.
+    pub fn density(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Sparse log-domain product: `out[i,h] = log Σ_k exp(vals[i,k] +
+    /// x[k,h])` over the stored entries only. Mirrors
+    /// [`Mat::logsumexp_into`] — max absorption, `nh == 1` LSE-GEMV fast
+    /// path, banded row split across `threads` scoped threads — but
+    /// touches `nnz` entries instead of `rows × cols`.
+    pub fn logsumexp_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
+        assert_eq!(self.cols, x.rows(), "inner dims");
+        assert_eq!(out.rows(), self.rows, "out rows");
+        assert_eq!(out.cols(), x.cols(), "out cols");
+        let nh = x.cols();
+
+        let run = |band: &mut [f64], r0: usize, r1: usize| {
+            if nh == 1 {
+                // LSE-GEMV fast path: two sweeps over the row's stored
+                // entries — max, then the max-absorbed exponential sum.
+                for i in r0..r1 {
+                    let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                    let mut mx = f64::NEG_INFINITY;
+                    for idx in s..e {
+                        let v = self.vals[idx] + x.as_slice()[self.col_idx[idx] as usize];
+                        if v > mx {
+                            mx = v;
+                        }
+                    }
+                    if mx == f64::NEG_INFINITY {
+                        band[i - r0] = f64::NEG_INFINITY; // empty / all-masked row
+                        continue;
+                    }
+                    let mut sum = 0.0;
+                    for idx in s..e {
+                        let v = self.vals[idx] + x.as_slice()[self.col_idx[idx] as usize];
+                        sum += (v - mx).exp();
+                    }
+                    band[i - r0] = mx + sum.ln();
+                }
+                return;
+            }
+            // Multi-histogram path: per-column online max/sum
+            // accumulators over the stored entries (O(N) scratch per
+            // thread, reused across rows).
+            let mut mx = vec![f64::NEG_INFINITY; nh];
+            let mut sum = vec![0.0f64; nh];
+            for i in r0..r1 {
+                mx.fill(f64::NEG_INFINITY);
+                sum.fill(0.0);
+                for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                    let aik = self.vals[idx];
+                    let k = self.col_idx[idx] as usize;
+                    let xrow = &x.as_slice()[k * nh..(k + 1) * nh];
+                    for h in 0..nh {
+                        let v = aik + xrow[h];
+                        if v == f64::NEG_INFINITY {
+                            continue;
+                        }
+                        if v <= mx[h] {
+                            sum[h] += (v - mx[h]).exp();
+                        } else {
+                            sum[h] = sum[h] * (mx[h] - v).exp() + 1.0;
+                            mx[h] = v;
+                        }
+                    }
+                }
+                let orow = &mut band[(i - r0) * nh..(i - r0 + 1) * nh];
+                for h in 0..nh {
+                    orow[h] = if sum[h] > 0.0 { mx[h] + sum[h].ln() } else { f64::NEG_INFINITY };
+                }
+            }
+        };
+
+        let threads = threads.max(1).min(self.rows.max(1));
+        if threads == 1 {
+            let rows = self.rows;
+            run(out.as_mut_slice(), 0, rows);
+            return;
+        }
+        let rows_per = self.rows.div_ceil(threads);
+        let mut bands: Vec<(&mut [f64], usize, usize)> = Vec::new();
+        let mut rest: &mut [f64] = out.as_mut_slice();
+        let mut r = 0;
+        while r < self.rows {
+            let take = rows_per.min(self.rows - r);
+            let (band, tail) = rest.split_at_mut(take * nh);
+            bands.push((band, r, r + take));
+            rest = tail;
+            r += take;
+        }
+        crossbeam_utils::thread::scope(|s| {
+            for (band, r0, r1) in bands {
+                s.spawn(move |_| run(band, r0, r1));
+            }
+        })
+        .expect("log-csr logsumexp worker panicked");
+    }
+
+    /// Convenience allocating sparse log-domain product.
+    pub fn logsumexp(&self, x: &Mat, threads: usize) -> Mat {
+        let mut out = Mat::zeros(self.rows, x.cols());
+        self.logsumexp_into(x, &mut out, threads);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_entries_are_dropped() {
+        let ni = f64::NEG_INFINITY;
+        let a = Mat::from_vec(2, 3, vec![0.0, ni, -1.0, ni, ni, ni]);
+        let lc = LogCsr::from_dense_log(&a, f64::NEG_INFINITY);
+        assert_eq!(lc.nnz(), 2);
+        assert!((lc.density() - 2.0 / 6.0).abs() < 1e-15);
+        // Fully masked row → −∞ logsumexp, not NaN.
+        let x = Mat::zeros(3, 1);
+        let out = lc.logsumexp(&x, 1);
+        assert!(out[(0, 0)].is_finite());
+        assert_eq!(out[(1, 0)], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn truncation_is_row_relative() {
+        // Row max 0, entries at −1 and −10: θ = −5 keeps the first two.
+        let a = Mat::from_vec(1, 3, vec![0.0, -1.0, -10.0]);
+        let lc = LogCsr::from_dense_log(&a, -5.0);
+        assert_eq!(lc.nnz(), 2);
+        assert_eq!(lc.theta(), -5.0);
+    }
+
+    #[test]
+    fn matches_dense_logsumexp_when_untruncated() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from(11);
+        let a = Mat::rand_uniform(13, 9, -4.0, 1.0, &mut rng);
+        let x = Mat::rand_uniform(9, 3, -2.0, 2.0, &mut rng);
+        let lc = LogCsr::from_dense_log(&a, f64::NEG_INFINITY);
+        assert_eq!(lc.nnz(), 13 * 9);
+        let want = a.logsumexp(&x, 1);
+        let got = lc.logsumexp(&x, 1);
+        assert!(got.allclose(&want, 1e-13));
+    }
+
+    #[test]
+    fn threaded_equals_serial() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from(12);
+        let mut a = Mat::rand_uniform(57, 33, -5.0, 0.0, &mut rng);
+        for i in 0..57 {
+            for j in 0..33 {
+                if rng.uniform() < 0.7 {
+                    a[(i, j)] = f64::NEG_INFINITY;
+                }
+            }
+        }
+        let lc = LogCsr::from_dense_log(&a, f64::NEG_INFINITY);
+        let x = Mat::rand_uniform(33, 2, -1.0, 1.0, &mut rng);
+        let mut s = Mat::zeros(57, 2);
+        let mut p = Mat::zeros(57, 2);
+        lc.logsumexp_into(&x, &mut s, 1);
+        lc.logsumexp_into(&x, &mut p, 3);
+        assert!(s.allclose(&p, 0.0));
+    }
+}

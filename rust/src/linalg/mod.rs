@@ -9,8 +9,12 @@
 //!   twin `logsumexp_into` (row-wise max-absorbed logsumexp);
 //! * [`Csr`] — compressed-sparse-row kernels for the paper's off-diagonal
 //!   block-sparsity parameter `s` (§IV-D);
+//! * [`LogCsr`] — the `−∞`-aware CSR twin for log-domain kernels,
+//!   built by truncating entries whose shifted exponent falls below a
+//!   threshold `θ` (Schmitzer's stabilized sparse scaling);
 //! * [`Domain`] — the linear vs. log-stabilized representation switch the
-//!   whole stack is generic over;
+//!   whole stack is generic over, plus the [`Stabilization`] tuning for
+//!   the truncated/absorption-hybrid log path;
 //! * element-wise helpers (`scale_divide_into`, `logsumexp_slice`, …)
 //!   used by the native compute backend.
 //!
@@ -21,11 +25,13 @@
 mod csr;
 mod dense;
 mod domain;
+mod log_csr;
 mod ops;
 
 pub use csr::Csr;
 pub use dense::Mat;
-pub use domain::Domain;
+pub use domain::{Domain, Stabilization};
+pub use log_csr::LogCsr;
 pub use ops::{axpby, l1_diff, logsumexp_slice, scale_divide_into, scale_rows_cols};
 
 #[cfg(test)]

@@ -55,7 +55,10 @@ fn print_usage() {
     for (name, help) in COMMANDS {
         println!("  {name:<16} {help}");
     }
-    println!("\nglobal env: FEDSINK_SCALE=quick|default|paper, FEDSINK_ARTIFACTS=<dir>");
+    println!(
+        "\nglobal env: FEDSINK_SCALE=quick|default|paper, FEDSINK_ARTIFACTS=<dir>, \
+         FEDSINK_DOMAIN=linear|log|auto, FEDSINK_CONFIG=<file>"
+    );
 }
 
 fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
@@ -117,8 +120,34 @@ fn net_of(p: &Parsed) -> anyhow::Result<LatencyModel> {
 }
 
 fn domain_of(p: &Parsed) -> anyhow::Result<DomainChoice> {
-    DomainChoice::parse(p.get("domain").unwrap_or("auto"))
-        .ok_or_else(|| anyhow::anyhow!("bad --domain (expected linear|log|auto)"))
+    match p.get("domain") {
+        // `env` defers to FEDSINK_DOMAIN / the FEDSINK_CONFIG file
+        // (falling back to auto), mirroring the --scale convention.
+        Some("env") | None => Ok(fedsink::config::domain_choice_from_settings()),
+        Some(s) => DomainChoice::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --domain (expected linear|log|auto)")),
+    }
+}
+
+/// Stabilized log-path tuning from `--truncation-threshold` /
+/// `--absorb-threshold` (defaults = `Stabilization::default()`).
+fn stab_of(p: &Parsed) -> anyhow::Result<fedsink::linalg::Stabilization> {
+    let mut stab = fedsink::linalg::Stabilization::default();
+    if p.get("truncation-threshold").is_some() {
+        stab.truncation_theta = p.get_f64("truncation-threshold")?;
+        anyhow::ensure!(
+            stab.truncation_theta < 0.0,
+            "--truncation-threshold is a log-space cutoff and must be negative"
+        );
+    }
+    if p.get("absorb-threshold").is_some() {
+        stab.absorb_threshold = p.get_f64("absorb-threshold")?;
+        anyhow::ensure!(
+            stab.absorb_threshold > 0.0,
+            "--absorb-threshold must be positive (use `inf` to disable the hybrid)"
+        );
+    }
+    Ok(stab)
 }
 
 /// The AOT artifact grid only lowers linear-domain updates; reject the
@@ -160,8 +189,21 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
             .opt(
                 "domain",
                 "D",
-                "auto",
-                "linear|log|auto numerics domain (auto: log iff exp(-C/eps) underflows)",
+                "env",
+                "linear|log|auto numerics domain (default: FEDSINK_DOMAIN or auto; \
+                 auto: log iff exp(-C/eps) underflows)",
+            )
+            .opt(
+                "truncation-threshold",
+                "TH",
+                "-60",
+                "log-space sparse truncation threshold theta (< 0)",
+            )
+            .opt(
+                "absorb-threshold",
+                "TAU",
+                "15",
+                "log-scaling drift before the hybrid re-absorbs the kernel (> 0, inf = off)",
             ),
     );
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
@@ -187,6 +229,7 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         variant,
         backend,
         domain,
+        stab: stab_of(&p)?,
         clients,
         alpha: p.get_f64("alpha")?,
         local_iters: p.get_usize("local-iters")?,

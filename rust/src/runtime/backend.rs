@@ -9,7 +9,7 @@
 //! `marginal`, so solvers and coordinators run the same protocol code
 //! over either representation.
 
-use crate::linalg::{Domain, Mat};
+use crate::linalg::{Domain, LogCsr, Mat, Stabilization};
 
 /// A client's target marginal slice: the u-update broadcasts one vector
 /// (`a_j`) across histograms; the v-update in vectorized mode has one
@@ -25,6 +25,39 @@ impl Target<'_> {
         match self {
             Target::Vec(v) => v.len(),
             Target::Mat(m) => m.rows(),
+        }
+    }
+}
+
+/// Instrumentation of the absorption-hybrid schedule: how many scaling
+/// updates an operator performed and how many of them forced a kernel
+/// re-absorption + re-truncation (an O(m·n) rebuild — the rest ran at
+/// sparse-GEMV cost). The acceptance bar for the hybrid is
+/// `linear_fraction() ≥ 0.8` over a small-ε solve.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StabStats {
+    pub updates: usize,
+    pub absorbs: usize,
+}
+
+impl StabStats {
+    /// Fraction of updates that ran purely on the linear GEMV path.
+    pub fn linear_fraction(&self) -> f64 {
+        if self.updates == 0 {
+            1.0
+        } else {
+            1.0 - self.absorbs as f64 / self.updates as f64
+        }
+    }
+
+    /// Merge two optional per-operator counters (u-op + v-op).
+    pub fn merged(a: Option<StabStats>, b: Option<StabStats>) -> Option<StabStats> {
+        match (a, b) {
+            (None, None) => None,
+            (x, y) => {
+                let (x, y) = (x.unwrap_or_default(), y.unwrap_or_default());
+                Some(StabStats { updates: x.updates + y.updates, absorbs: x.absorbs + y.absorbs })
+            }
         }
     }
 }
@@ -52,6 +85,12 @@ pub trait BlockOp: Send {
 
     /// Overwrite the state (initialization / restart).
     fn set_state(&mut self, u: &Mat);
+
+    /// Absorption-hybrid counters; `None` for operators without a
+    /// stabilized schedule (linear, dense/sparse logsumexp).
+    fn stab_stats(&self) -> Option<StabStats> {
+        None
+    }
 }
 
 /// Backend factory: builds [`BlockOp`]s for client blocks.
@@ -85,6 +124,42 @@ pub trait ComputeBackend: Send + Sync {
         )
     }
 
+    /// Bind a *sparse* log-domain block operator over a truncated
+    /// [`LogCsr`] block: the product is a sparse row-wise logsumexp that
+    /// touches `nnz` entries instead of `m×n`. Backends without a sparse
+    /// log path fail fast with a descriptive error, mirroring
+    /// [`ComputeBackend::log_block_op`].
+    fn sparse_log_block_op(
+        &self,
+        a_log: &LogCsr,
+        t: Target<'_>,
+        u0_log: Mat,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        let _ = (a_log, t, u0_log);
+        anyhow::bail!(
+            "backend '{}' does not support the sparse log domain; \
+             use --backend native or --domain linear",
+            self.name()
+        )
+    }
+
+    /// Bind a *stabilized* log-domain operator: the backend is free to
+    /// pick the absorption-hybrid schedule (single histogram), the
+    /// truncated sparse logsumexp (density below
+    /// `stab.sparse_density_cutoff`), or the dense logsumexp — all
+    /// numerically equivalent to [`ComputeBackend::log_block_op`] up to
+    /// the `θ` truncation. The default ignores `stab` and runs dense.
+    fn log_block_op_stabilized(
+        &self,
+        a_log: &Mat,
+        t: Target<'_>,
+        u0_log: Mat,
+        stab: &Stabilization,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        let _ = stab;
+        self.log_block_op(a_log, t, u0_log)
+    }
+
     /// Dispatch on the numerics domain. `a` must already be in the
     /// matching representation (`Problem::kernel_for` /
     /// `Partition::new_in` take care of that).
@@ -101,9 +176,30 @@ pub trait ComputeBackend: Send + Sync {
         }
     }
 
+    /// Domain dispatch with the stabilized log path: what the solver and
+    /// every coordinator use on the hot path.
+    fn block_op_in_stabilized(
+        &self,
+        domain: Domain,
+        a: &Mat,
+        t: Target<'_>,
+        u0: Mat,
+        stab: &Stabilization,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        match domain {
+            Domain::Linear => self.block_op(a, t, u0),
+            Domain::Log => self.log_block_op_stabilized(a, t, u0, stab),
+        }
+    }
+
     /// Whether [`ComputeBackend::log_block_op`] is implemented natively.
     /// Lets callers resolve `--domain auto` without trial construction.
     fn supports_log(&self) -> bool {
+        false
+    }
+
+    /// Whether [`ComputeBackend::sparse_log_block_op`] is implemented.
+    fn supports_sparse_log(&self) -> bool {
         false
     }
 

@@ -19,7 +19,7 @@ mod native;
 #[cfg(feature = "xla-backend")]
 mod pjrt;
 
-pub use backend::{BlockOp, ComputeBackend, Target};
+pub use backend::{BlockOp, ComputeBackend, StabStats, Target};
 pub use manifest::{Manifest, ManifestEntry};
 pub use native::NativeBackend;
 #[cfg(feature = "xla-backend")]
@@ -180,6 +180,118 @@ mod tests {
         // log u ≈ ln t − max-absorbed lse of the row.
         let lse0 = crate::linalg::logsumexp_slice(&[-2000.0, -2100.0]);
         assert!((got[(0, 0)] - (0.25f64.ln() - lse0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_log_block_op_matches_dense_log_op() {
+        use crate::linalg::LogCsr;
+        // A log block with hard-masked entries (−∞) and a fully masked
+        // row: sparse and dense log operators must agree exactly on
+        // updates and marginals (the sparse op skips the masked mass the
+        // dense op multiplies by zero).
+        let mut rng = Rng::seed_from(31);
+        let (m, n, nh) = (7, 9, 2);
+        let mut a_log = Mat::rand_uniform(m, n, -4.0, 0.0, &mut rng);
+        for i in 0..m {
+            for j in 0..n {
+                if rng.uniform() < 0.5 {
+                    a_log[(i, j)] = f64::NEG_INFINITY;
+                }
+            }
+        }
+        for j in 0..n {
+            a_log[(3, j)] = f64::NEG_INFINITY; // fully masked row
+        }
+        let t: Vec<f64> = (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let x_log = Mat::rand_uniform(n, nh, -1.0, 1.0, &mut rng);
+        let be = NativeBackend::new(2);
+        let lc = LogCsr::from_dense_log(&a_log, f64::NEG_INFINITY);
+        let mut dense = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(m, nh))
+            .unwrap();
+        let mut sparse = be
+            .sparse_log_block_op(&lc, Target::Vec(&t), Mat::zeros(m, nh))
+            .unwrap();
+        let want = dense.update(&x_log, 1.0).clone();
+        let got = sparse.update(&x_log, 1.0).clone();
+        for i in 0..m {
+            for h in 0..nh {
+                let (w, g) = (want[(i, h)], got[(i, h)]);
+                assert!(
+                    (w - g).abs() < 1e-12 || (w.is_infinite() && g == w),
+                    "({i},{h}): {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_log_op_matches_dense_log_op() {
+        use crate::linalg::Stabilization;
+        // Single-histogram log block: the stabilized dispatch picks the
+        // absorption-hybrid, whose GEMV-on-absorbed-kernel products must
+        // reproduce the dense logsumexp to round-off — including across
+        // a forced re-absorption (large scaling drift).
+        let mut rng = Rng::seed_from(33);
+        let (m, n) = (8, 11);
+        let a_log = Mat::rand_uniform(m, n, -30.0, 0.0, &mut rng);
+        let t: Vec<f64> = (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let be = NativeBackend::new(1);
+        let stab = Stabilization::default();
+        let mut dense = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(m, 1))
+            .unwrap();
+        let mut hybrid = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), Mat::zeros(m, 1), &stab)
+            .unwrap();
+        assert!(hybrid.stab_stats().is_some(), "nh=1 must dispatch the hybrid");
+        // Drift well past τ = 15 to force at least one re-absorption.
+        for shift in [0.0, 0.5, -40.0, -40.2] {
+            let x_log = Mat::full(n, 1, shift);
+            let want = dense.update(&x_log, 1.0).clone();
+            let got = hybrid.update(&x_log, 1.0).clone();
+            for i in 0..m {
+                assert!(
+                    (want[(i, 0)] - got[(i, 0)]).abs() < 1e-10,
+                    "shift {shift} row {i}: {} vs {}",
+                    got[(i, 0)],
+                    want[(i, 0)]
+                );
+            }
+            let u = hybrid.state().clone();
+            let e_d = dense.marginal(&x_log, &u);
+            let e_h = hybrid.marginal(&x_log, &u);
+            assert!((e_d[0] - e_h[0]).abs() < 1e-10);
+        }
+        let stats = hybrid.stab_stats().unwrap();
+        assert!(stats.absorbs >= 1, "the −40 shift must trigger a re-absorption");
+        assert_eq!(stats.updates, 4);
+        assert!(stats.linear_fraction() < 1.0);
+    }
+
+    #[test]
+    fn multi_histogram_stabilized_dispatch_stays_exact() {
+        use crate::linalg::Stabilization;
+        // nh > 1 routes to the sparse (dense-density) logsumexp path; on
+        // an untruncatable block that is the dense op bit for bit.
+        let (a, x, t, _) = sample(6, 9, 3, 41);
+        let a_log = a.map(f64::ln);
+        let x_log = x.map(f64::ln);
+        let be = NativeBackend::new(1);
+        let mut plain = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(6, 3))
+            .unwrap();
+        let mut stab = be
+            .log_block_op_stabilized(
+                &a_log,
+                Target::Vec(&t),
+                Mat::zeros(6, 3),
+                &Stabilization::default(),
+            )
+            .unwrap();
+        let want = plain.update(&x_log, 1.0).clone();
+        let got = stab.update(&x_log, 1.0).clone();
+        assert!(got.allclose(&want, 1e-12));
     }
 
     #[test]

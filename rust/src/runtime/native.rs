@@ -8,8 +8,8 @@
 //! with a native log-domain operator (row-wise max-absorbed logsumexp) —
 //! the small-ε path the AOT artifact grid does not cover.
 
-use super::backend::{BlockOp, ComputeBackend, Target};
-use crate::linalg::{Csr, Mat};
+use super::backend::{BlockOp, ComputeBackend, StabStats, Target};
+use crate::linalg::{Csr, LogCsr, Mat, Stabilization};
 
 /// In-place damped update: `u = α·t/q + (1−α)·u`.
 fn scale_divide_inplace(t: &[f64], t_stride: usize, q: &Mat, alpha: f64, u: &mut Mat) {
@@ -47,6 +47,25 @@ impl NativeBackend {
     }
 }
 
+/// Extract the linear target, its log, and the broadcast stride from a
+/// [`Target`] — shared by every log-domain operator.
+fn log_targets(
+    t: Target<'_>,
+    m: usize,
+    nh: usize,
+) -> anyhow::Result<(Vec<f64>, Vec<f64>, usize)> {
+    anyhow::ensure!(t.rows() == m, "target rows != block rows");
+    let (t_lin, t_stride) = match t {
+        Target::Vec(v) => (v.to_vec(), 0),
+        Target::Mat(mat) => {
+            anyhow::ensure!(mat.cols() == nh, "target hists != state hists");
+            (mat.as_slice().to_vec(), mat.cols())
+        }
+    };
+    let log_t: Vec<f64> = t_lin.iter().map(|&x| x.ln()).collect();
+    Ok((t_lin, log_t, t_stride))
+}
+
 impl ComputeBackend for NativeBackend {
     fn log_block_op(
         &self,
@@ -54,16 +73,8 @@ impl ComputeBackend for NativeBackend {
         t: Target<'_>,
         u0_log: Mat,
     ) -> anyhow::Result<Box<dyn BlockOp>> {
-        anyhow::ensure!(t.rows() == a_log.rows(), "target rows != block rows");
         anyhow::ensure!(u0_log.rows() == a_log.rows(), "state rows != block rows");
-        let (t_lin, t_stride) = match t {
-            Target::Vec(v) => (v.to_vec(), 0),
-            Target::Mat(m) => {
-                anyhow::ensure!(m.cols() == u0_log.cols(), "target hists != state hists");
-                (m.as_slice().to_vec(), m.cols())
-            }
-        };
-        let log_t: Vec<f64> = t_lin.iter().map(|&x| x.ln()).collect();
+        let (t_lin, log_t, t_stride) = log_targets(t, a_log.rows(), u0_log.cols())?;
         let q = Mat::zeros(a_log.rows(), u0_log.cols());
         Ok(Box::new(NativeLogBlockOp {
             a_log: a_log.clone(),
@@ -78,6 +89,63 @@ impl ComputeBackend for NativeBackend {
 
     fn supports_log(&self) -> bool {
         true
+    }
+
+    fn supports_sparse_log(&self) -> bool {
+        true
+    }
+
+    fn sparse_log_block_op(
+        &self,
+        a_log: &LogCsr,
+        t: Target<'_>,
+        u0_log: Mat,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        anyhow::ensure!(u0_log.rows() == a_log.rows(), "state rows != block rows");
+        let (t_lin, log_t, t_stride) = log_targets(t, a_log.rows(), u0_log.cols())?;
+        let q = Mat::zeros(a_log.rows(), u0_log.cols());
+        Ok(Box::new(NativeSparseLogBlockOp {
+            a_log: a_log.clone(),
+            t_lin,
+            log_t,
+            t_stride,
+            u: u0_log,
+            q,
+            threads: self.threads,
+        }))
+    }
+
+    /// Stabilized log-domain dispatch: absorption-hybrid for single
+    /// histograms, truncated sparse logsumexp when the block is sparse
+    /// enough, dense logsumexp otherwise.
+    fn log_block_op_stabilized(
+        &self,
+        a_log: &Mat,
+        t: Target<'_>,
+        u0_log: Mat,
+        stab: &Stabilization,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        if u0_log.cols() == 1 && stab.hybrid_enabled() {
+            anyhow::ensure!(u0_log.rows() == a_log.rows(), "state rows != block rows");
+            let (t_lin, log_t, _) = log_targets(t, a_log.rows(), 1)?;
+            return Ok(Box::new(HybridLogBlockOp::new(
+                a_log.clone(),
+                t_lin,
+                log_t,
+                u0_log,
+                stab,
+                self.threads,
+            )));
+        }
+        // Cheap non-allocating probe first; only build the CSR when the
+        // sparse path actually wins.
+        if stab.sparse_density_cutoff > 0.0
+            && LogCsr::density_of(a_log, stab.truncation_theta) < stab.sparse_density_cutoff
+        {
+            let truncated = LogCsr::from_dense_log(a_log, stab.truncation_theta);
+            return self.sparse_log_block_op(&truncated, t, u0_log);
+        }
+        self.log_block_op(a_log, t, u0_log)
     }
 
     fn block_op(
@@ -190,6 +258,290 @@ impl BlockOp for NativeBlockOp {
         assert_eq!(u.rows(), self.u.rows());
         assert_eq!(u.cols(), self.u.cols());
         self.u = u.clone();
+    }
+}
+
+/// Sparse twin of [`NativeLogBlockOp`]: the block is a θ-truncated
+/// [`LogCsr`], the product a sparse row-wise max-absorbed logsumexp over
+/// the stored entries only — O(nnz) instead of O(m·n) per iteration.
+struct NativeSparseLogBlockOp {
+    a_log: LogCsr,
+    t_lin: Vec<f64>,
+    log_t: Vec<f64>,
+    t_stride: usize,
+    /// Log-scaling state `log u` (m×N).
+    u: Mat,
+    /// Preallocated logsumexp buffer — the hot loop never allocates.
+    q: Mat,
+    threads: usize,
+}
+
+impl BlockOp for NativeSparseLogBlockOp {
+    fn m(&self) -> usize {
+        self.a_log.rows()
+    }
+
+    fn n(&self) -> usize {
+        self.a_log.cols()
+    }
+
+    fn hists(&self) -> usize {
+        self.u.cols()
+    }
+
+    fn update(&mut self, x_log: &Mat, alpha: f64) -> &Mat {
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+        let (m, nh) = (self.q.rows(), self.q.cols());
+        let beta = 1.0 - alpha;
+        for i in 0..m {
+            let qrow = self.q.row(i);
+            let urow = self.u.row_mut(i);
+            if self.t_stride == 0 {
+                let lti = self.log_t[i];
+                for j in 0..nh {
+                    urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
+                }
+            } else {
+                let ltrow = &self.log_t[i * self.t_stride..(i + 1) * self.t_stride];
+                for j in 0..nh {
+                    urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
+                }
+            }
+        }
+        &self.u
+    }
+
+    fn matvec(&mut self, x_log: &Mat) -> &Mat {
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+        &self.q
+    }
+
+    fn marginal(&mut self, x_log: &Mat, u_log: &Mat) -> Vec<f64> {
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+        let nh = self.q.cols();
+        let mut err = vec![0.0; nh];
+        for i in 0..self.q.rows() {
+            let qrow = self.q.row(i);
+            let urow = u_log.row(i);
+            if self.t_stride == 0 {
+                let ti = self.t_lin[i];
+                for h in 0..nh {
+                    err[h] += ((urow[h] + qrow[h]).exp() - ti).abs();
+                }
+            } else {
+                let trow = &self.t_lin[i * self.t_stride..(i + 1) * self.t_stride];
+                for h in 0..nh {
+                    err[h] += ((urow[h] + qrow[h]).exp() - trow[h]).abs();
+                }
+            }
+        }
+        err
+    }
+
+    fn state(&self) -> &Mat {
+        &self.u
+    }
+
+    fn set_state(&mut self, u: &Mat) {
+        assert_eq!(u.rows(), self.u.rows());
+        assert_eq!(u.cols(), self.u.cols());
+        self.u = u.clone();
+    }
+}
+
+/// Absorption-hybrid log-domain operator (Schmitzer §3, the scaling
+/// counterpart of the paper's small-ε regime): the incoming log-scalings
+/// `x` are *absorbed* into the kernel —
+/// `K̃[i,j] = exp(log K[i,j] + g[j] − f[i])` with `g` the absorbed copy
+/// of `x` and `f[i] = max_j (log K[i,j] + g[j])` the row shift — and
+/// truncated at `θ` into a [`Csr`]. While `x` stays within
+/// `absorb_threshold` of `g`, the product is a plain sparse GEMV
+/// `q̃ = K̃ · exp(x − g)` with every factor well-scaled
+/// (`K̃ ∈ (e^θ, 1]`, `exp(x − g) ∈ [e^{−τ}, e^{τ}]`), and
+/// `log(K·x) = f + ln q̃` exactly. Only when the scalings drift past `τ`
+/// is the kernel re-absorbed + re-truncated (one O(m·n) rebuild — about
+/// the cost of a single dense logsumexp iteration).
+///
+/// The state and every exchanged slice stay log-scalings, so federated
+/// protocols are oblivious to the schedule. Single-histogram only: with
+/// N histograms the absorbed kernel would need N copies (tracked on the
+/// ROADMAP); multi-histogram log solves take the sparse/dense logsumexp
+/// path instead.
+struct HybridLogBlockOp {
+    /// Dense log-kernel block, kept for rebuilds.
+    a_log: Mat,
+    t_lin: Vec<f64>,
+    log_t: Vec<f64>,
+    /// Log-scaling state `log u` (m×1).
+    u: Mat,
+    /// Log-product buffer `log(A·x)` (m×1).
+    q: Mat,
+    /// Absorbed column log-scalings (length n).
+    g: Vec<f64>,
+    /// Row shifts `f[i] = max_j (a_log[i,j] + g[j])` (length m).
+    f: Vec<f64>,
+    /// Truncated absorbed linear kernel `exp(a_log + g − f)`.
+    k_abs: Csr,
+    /// Scratch `exp(x − g)` (n×1) and the linear product (m×1).
+    ex: Mat,
+    lin_q: Mat,
+    theta: f64,
+    tau: f64,
+    threads: usize,
+    stats: StabStats,
+}
+
+impl HybridLogBlockOp {
+    fn new(
+        a_log: Mat,
+        t_lin: Vec<f64>,
+        log_t: Vec<f64>,
+        u0_log: Mat,
+        stab: &Stabilization,
+        threads: usize,
+    ) -> Self {
+        let (m, n) = (a_log.rows(), a_log.cols());
+        let mut op = Self {
+            a_log,
+            t_lin,
+            log_t,
+            u: u0_log,
+            q: Mat::zeros(m, 1),
+            g: vec![0.0; n],
+            f: vec![0.0; m],
+            k_abs: Csr::from_parts(m, n, vec![0; m + 1], Vec::new(), Vec::new()),
+            ex: Mat::zeros(n, 1),
+            lin_q: Mat::zeros(m, 1),
+            theta: stab.truncation_theta,
+            tau: stab.absorb_threshold,
+            threads,
+            stats: StabStats::default(),
+        };
+        op.rebuild();
+        op
+    }
+
+    /// Re-absorb + re-truncate: recompute the row shifts against the
+    /// current `g` and rebuild the truncated absorbed kernel.
+    fn rebuild(&mut self) {
+        let (m, n) = (self.a_log.rows(), self.a_log.cols());
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        row_ptr.push(0);
+        for i in 0..m {
+            let arow = self.a_log.row(i);
+            let mut mx = f64::NEG_INFINITY;
+            for j in 0..n {
+                let v = arow[j] + self.g[j];
+                if v > mx {
+                    mx = v;
+                }
+            }
+            self.f[i] = mx;
+            if mx > f64::NEG_INFINITY {
+                for j in 0..n {
+                    let s = arow[j] + self.g[j] - mx;
+                    if s >= self.theta {
+                        col_idx.push(j as u32);
+                        vals.push(s.exp());
+                    }
+                }
+            }
+            row_ptr.push(vals.len());
+        }
+        self.k_abs = Csr::from_parts(m, n, row_ptr, col_idx, vals);
+    }
+
+    /// `q = log(A·x)` via the absorbed GEMV, re-absorbing first if the
+    /// scalings have drifted past `τ`. `count_absorb` is set only from
+    /// `update` so that `absorbs / updates` stays a true per-iteration
+    /// ratio — `matvec`/`marginal` may also re-absorb (a convergence
+    /// check with fresh scalings, a star-server product) but those are
+    /// not Sinkhorn iterations and must not skew `linear_fraction`.
+    fn product(&mut self, x_log: &Mat, count_absorb: bool) {
+        debug_assert_eq!(x_log.cols(), 1, "hybrid op is single-histogram");
+        let n = self.a_log.cols();
+        debug_assert_eq!(x_log.rows(), n);
+        let xs = x_log.as_slice();
+        let mut drift: f64 = 0.0;
+        for j in 0..n {
+            drift = drift.max((xs[j] - self.g[j]).abs());
+        }
+        if drift > self.tau {
+            self.g.copy_from_slice(xs);
+            self.rebuild();
+            if count_absorb {
+                self.stats.absorbs += 1;
+            }
+        }
+        let exs = self.ex.as_mut_slice();
+        for (e, (&x, &g)) in exs.iter_mut().zip(xs.iter().zip(&self.g)) {
+            *e = (x - g).exp();
+        }
+        self.k_abs.matmul_into(&self.ex, &mut self.lin_q, self.threads);
+        let qs = self.q.as_mut_slice();
+        // A zero product only happens on a fully masked row (f = −∞):
+        // kept entries are ≥ e^θ and the drift bound keeps exp(x − g)
+        // ≥ e^{−τ}, so no kept term can underflow.
+        for ((qv, &lq), &fi) in qs.iter_mut().zip(self.lin_q.as_slice()).zip(&self.f) {
+            *qv = if lq > 0.0 { fi + lq.ln() } else { f64::NEG_INFINITY };
+        }
+    }
+}
+
+impl BlockOp for HybridLogBlockOp {
+    fn m(&self) -> usize {
+        self.a_log.rows()
+    }
+
+    fn n(&self) -> usize {
+        self.a_log.cols()
+    }
+
+    fn hists(&self) -> usize {
+        1
+    }
+
+    fn update(&mut self, x_log: &Mat, alpha: f64) -> &Mat {
+        self.product(x_log, true);
+        self.stats.updates += 1;
+        let beta = 1.0 - alpha;
+        let us = self.u.as_mut_slice();
+        for ((uv, &lti), &qv) in us.iter_mut().zip(&self.log_t).zip(self.q.as_slice()) {
+            *uv = alpha * (lti - qv) + beta * *uv;
+        }
+        &self.u
+    }
+
+    fn matvec(&mut self, x_log: &Mat) -> &Mat {
+        self.product(x_log, false);
+        &self.q
+    }
+
+    fn marginal(&mut self, x_log: &Mat, u_log: &Mat) -> Vec<f64> {
+        self.product(x_log, false);
+        let mut err = 0.0;
+        for ((&uv, &qv), &ti) in
+            u_log.as_slice().iter().zip(self.q.as_slice()).zip(&self.t_lin)
+        {
+            err += ((uv + qv).exp() - ti).abs();
+        }
+        vec![err]
+    }
+
+    fn state(&self) -> &Mat {
+        &self.u
+    }
+
+    fn set_state(&mut self, u: &Mat) {
+        assert_eq!(u.rows(), self.u.rows());
+        assert_eq!(u.cols(), self.u.cols());
+        self.u = u.clone();
+    }
+
+    fn stab_stats(&self) -> Option<StabStats> {
+        Some(self.stats)
     }
 }
 

@@ -6,77 +6,96 @@
 //! entries as `exp(log u + log K + log v)` — each exponent is the log of
 //! a plan entry (≤ 0 near the fixed point), so nothing overflows even
 //! when the duals are in the thousands.
+//!
+//! The marginal/objective reductions route their O(n²) work through the
+//! cached kernel transposes and the blocked GEMV / logsumexp kernels
+//! (`P·1 = u∘(Kv)`, `Pᵀ·1 = v∘(Kᵀu)`) instead of scalar accumulation —
+//! at large n the scalar loops used to rival an iteration's cost.
 
 use super::State;
 use crate::linalg::{scale_rows_cols, Domain, Mat};
 use crate::workload::Problem;
 
-/// L1 marginal errors `(Σ|P·1 − a|, Σ|Pᵀ·1 − b|)` for histogram `h`.
-pub fn full_marginal_errors(p: &Problem, st: &State, h: usize) -> (f64, f64) {
+/// Plan marginals `(P·1, Pᵀ·1)` for histogram `h`, via two products on
+/// the cached kernel + transpose (the GEMV fast path at `nh = 1`).
+fn plan_marginals(p: &Problem, st: &State, h: usize) -> (Vec<f64>, Vec<f64>) {
     let n = p.n;
     let uh: Vec<f64> = (0..n).map(|i| st.u[(i, h)]).collect();
     let vh: Vec<f64> = (0..n).map(|i| st.v[(i, h)]).collect();
-    let k = p.kernel_for(st.domain);
-    let mut err_a = 0.0;
-    let mut err_b = vec![0.0; n];
-    for i in 0..n {
-        let krow = k.row(i);
-        let mut row_sum = 0.0;
-        match st.domain {
-            Domain::Linear => {
-                for j in 0..n {
-                    let pij = uh[i] * krow[j] * vh[j];
-                    row_sum += pij;
-                    err_b[j] += pij;
-                }
-            }
-            Domain::Log => {
-                for j in 0..n {
-                    let pij = (uh[i] + krow[j] + vh[j]).exp();
-                    row_sum += pij;
-                    err_b[j] += pij;
-                }
-            }
+    match st.domain {
+        Domain::Linear => {
+            let kv = p.kernel().matmul(&Mat::col_from(&vh), 1);
+            let ktu = p.kernel_t().matmul(&Mat::col_from(&uh), 1);
+            let rows = uh.iter().zip(kv.as_slice()).map(|(&u, &q)| u * q).collect();
+            let cols = vh.iter().zip(ktu.as_slice()).map(|(&v, &r)| v * r).collect();
+            (rows, cols)
         }
-        err_a += (row_sum - p.a[i]).abs();
+        Domain::Log => {
+            let kv = p.log_kernel().logsumexp(&Mat::col_from(&vh), 1);
+            let ktu = p.log_kernel_t().logsumexp(&Mat::col_from(&uh), 1);
+            // log u + log(Kv) is the log of a marginal entry — O(log a)
+            // near the fixed point, so the exp cannot overflow there.
+            let rows = uh.iter().zip(kv.as_slice()).map(|(&u, &q)| (u + q).exp()).collect();
+            let cols = vh.iter().zip(ktu.as_slice()).map(|(&v, &r)| (v + r).exp()).collect();
+            (rows, cols)
+        }
     }
-    let err_b: f64 = (0..n).map(|j| (err_b[j] - p.b[(j, h)]).abs()).sum();
+}
+
+/// `(Σ|P·1 − a|, Σ|Pᵀ·1 − b_h|)` from precomputed plan marginals.
+fn errors_from(p: &Problem, h: usize, rows: &[f64], cols: &[f64]) -> (f64, f64) {
+    let err_a: f64 = rows.iter().zip(&p.a).map(|(&r, &a)| (r - a).abs()).sum();
+    let err_b: f64 = (0..p.n).map(|j| (cols[j] - p.b[(j, h)]).abs()).sum();
     (err_a, err_b)
 }
 
-/// Entropic objective `⟨P,C⟩ + ε Σ P (log P − 1)` for histogram `h`,
-/// computed in the stable form `ε Σ P (log u + log v − 1)` — log-domain
-/// states already store `log u`, `log v` directly.
-pub fn objective(p: &Problem, st: &State, h: usize) -> f64 {
-    let n = p.n;
-    let k = p.kernel_for(st.domain);
+/// The entropic objective from precomputed plan marginals (see
+/// [`objective`] for the factorization).
+fn objective_from(p: &Problem, st: &State, h: usize, rows: &[f64], cols: &[f64]) -> f64 {
+    let log_of = |x: f64| match st.domain {
+        Domain::Linear => x.ln(),
+        Domain::Log => x,
+    };
     let mut total = 0.0;
-    for i in 0..n {
-        let ui = st.u[(i, h)];
-        let krow = k.row(i);
-        match st.domain {
-            Domain::Linear => {
-                let lu = ui.ln();
-                for j in 0..n {
-                    let vj = st.v[(j, h)];
-                    let pij = ui * krow[j] * vj;
-                    if pij > 0.0 {
-                        total += pij * (lu + vj.ln() - 1.0);
-                    }
-                }
-            }
-            Domain::Log => {
-                for j in 0..n {
-                    let lv = st.v[(j, h)];
-                    let pij = (ui + krow[j] + lv).exp();
-                    if pij > 0.0 {
-                        total += pij * (ui + lv - 1.0);
-                    }
-                }
-            }
+    let mut mass = 0.0;
+    for i in 0..p.n {
+        // A zero marginal (fully underflowed row/column) carries zero
+        // plan mass: skip it rather than accumulate ln(0)·0 = NaN.
+        if rows[i] > 0.0 {
+            total += log_of(st.u[(i, h)]) * rows[i];
+            mass += rows[i];
+        }
+        if cols[i] > 0.0 {
+            total += log_of(st.v[(i, h)]) * cols[i];
         }
     }
-    p.eps * total
+    p.eps * (total - mass)
+}
+
+/// L1 marginal errors `(Σ|P·1 − a|, Σ|Pᵀ·1 − b|)` for histogram `h`.
+pub fn full_marginal_errors(p: &Problem, st: &State, h: usize) -> (f64, f64) {
+    let (rows, cols) = plan_marginals(p, st, h);
+    errors_from(p, h, &rows, &cols)
+}
+
+/// Entropic objective `⟨P,C⟩ + ε Σ P (log P − 1)` for histogram `h`,
+/// computed in the stable form `ε Σ P (log u + log v − 1)` — which
+/// factors over the plan marginals:
+/// `Σ_i log u_i (P·1)_i + Σ_j log v_j (Pᵀ·1)_j − Σ P`. Log-domain
+/// states already store `log u`, `log v` directly.
+pub fn objective(p: &Problem, st: &State, h: usize) -> f64 {
+    let (rows, cols) = plan_marginals(p, st, h);
+    objective_from(p, st, h, &rows, &cols)
+}
+
+/// One traced-checkpoint sample `(err_a, err_b, objective)` from a
+/// single pair of kernel products — the traced solver calls this once
+/// per check instead of paying `full_marginal_errors` + [`objective`]
+/// separately (two extra O(n²) products per checkpoint).
+pub fn convergence_sample(p: &Problem, st: &State, h: usize) -> (f64, f64, f64) {
+    let (rows, cols) = plan_marginals(p, st, h);
+    let (err_a, err_b) = errors_from(p, h, &rows, &cols);
+    (err_a, err_b, objective_from(p, st, h, &rows, &cols))
 }
 
 /// Transport plan `P = diag(u_h) K diag(v_h)`, assembled in whichever
@@ -92,10 +111,9 @@ pub fn transport_plan(p: &Problem, st: &State, h: usize) -> Mat {
             let lk = p.log_kernel();
             let mut out = Mat::zeros(n, n);
             for i in 0..n {
-                let lkrow = lk.row(i);
-                let orow = out.row_mut(i);
-                for j in 0..n {
-                    orow[j] = (uh[i] + lkrow[j] + vh[j]).exp();
+                let ui = uh[i];
+                for ((o, &lkj), &vj) in out.row_mut(i).iter_mut().zip(lk.row(i)).zip(&vh) {
+                    *o = (ui + lkj + vj).exp();
                 }
             }
             out

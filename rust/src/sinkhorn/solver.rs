@@ -1,10 +1,10 @@
 //! Centralized Sinkhorn–Knopp solver over a [`ComputeBackend`].
 
-use super::ops::{full_marginal_errors, objective};
+use super::ops::convergence_sample;
 use super::{State, StopPolicy};
-use crate::linalg::{Domain, Mat};
+use crate::linalg::{Domain, Mat, Stabilization};
 use crate::metrics::Clock;
-use crate::runtime::{ComputeBackend, Target};
+use crate::runtime::{ComputeBackend, StabStats, Target};
 use crate::workload::Problem;
 use std::sync::Arc;
 
@@ -36,6 +36,9 @@ pub struct SolveOutcome {
     pub final_err: f64,
     pub secs: f64,
     pub history: Vec<HistoryPoint>,
+    /// Absorption-hybrid counters (u-op + v-op), when the log-domain
+    /// run took the stabilized schedule.
+    pub stab: Option<StabStats>,
 }
 
 impl SolveOutcome {
@@ -48,11 +51,20 @@ impl SolveOutcome {
 /// through whichever backend (XLA artifacts / native) is configured.
 pub struct CentralizedSolver {
     backend: Arc<dyn ComputeBackend>,
+    stab: Stabilization,
 }
 
 impl CentralizedSolver {
     pub fn new(backend: Arc<dyn ComputeBackend>) -> Self {
-        Self { backend }
+        Self { backend, stab: Stabilization::default() }
+    }
+
+    /// Override the stabilized log-path tuning (truncation θ, absorption
+    /// τ, sparse dispatch cutoff). `Stabilization::disabled()` pins the
+    /// solver to the pure dense logsumexp path.
+    pub fn with_stabilization(mut self, stab: Stabilization) -> Self {
+        self.stab = stab;
+        self
     }
 
     /// Plain linear-domain solve (no per-iteration history).
@@ -104,18 +116,56 @@ impl CentralizedSolver {
         let clock = Clock::new();
         let one = domain.one();
 
-        // u-update operator: A = K, t = a (broadcast across histograms).
-        let mut u_op = self
-            .backend
-            .block_op_in(domain, p.kernel_for(domain), Target::Vec(&p.a), Mat::full(n, nh, one))
-            .expect("u-op");
+        // Log-domain runs go through the stabilized dispatch: the
+        // absorption-hybrid schedule for single histograms, the
+        // θ-truncated sparse logsumexp when the truncated density falls
+        // under the cutoff, dense logsumexp otherwise. The probe is a
+        // non-allocating scan; the CSR itself is built (and cached on
+        // the problem, shared across solves) only when sparse wins.
+        let use_sparse = domain == Domain::Log
+            && self.backend.supports_sparse_log()
+            && !(nh == 1 && self.stab.hybrid_enabled())
+            && self.stab.sparse_density_cutoff > 0.0
+            && crate::linalg::LogCsr::density_of(p.log_kernel(), self.stab.truncation_theta)
+                < self.stab.sparse_density_cutoff;
+
+        // u-update operator: A = K, t = a (broadcast across histograms);
         // v-update operator: A = Kᵀ, t = b (per-histogram matrix). The
-        // transpose comes from the problem's shared cache, so repeated
-        // solves on one problem build it exactly once.
-        let mut v_op = self
-            .backend
-            .block_op_in(domain, p.kernel_t_for(domain), Target::Mat(&p.b), Mat::full(n, nh, one))
-            .expect("v-op");
+        // transposes come from the problem's shared caches, so repeated
+        // solves on one problem build each exactly once.
+        let (mut u_op, mut v_op) = if use_sparse {
+            let k = p.sparse_log_kernel(self.stab.truncation_theta);
+            let kt = p.sparse_log_kernel_t(self.stab.truncation_theta);
+            (
+                self.backend
+                    .sparse_log_block_op(&k, Target::Vec(&p.a), Mat::full(n, nh, one))
+                    .expect("u-op"),
+                self.backend
+                    .sparse_log_block_op(&kt, Target::Mat(&p.b), Mat::full(n, nh, one))
+                    .expect("v-op"),
+            )
+        } else {
+            (
+                self.backend
+                    .block_op_in_stabilized(
+                        domain,
+                        p.kernel_for(domain),
+                        Target::Vec(&p.a),
+                        Mat::full(n, nh, one),
+                        &self.stab,
+                    )
+                    .expect("u-op"),
+                self.backend
+                    .block_op_in_stabilized(
+                        domain,
+                        p.kernel_t_for(domain),
+                        Target::Mat(&p.b),
+                        Mat::full(n, nh, one),
+                        &self.stab,
+                    )
+                    .expect("v-op"),
+            )
+        };
 
         let mut history = Vec::new();
         let mut iterations = 0;
@@ -137,13 +187,13 @@ impl CentralizedSolver {
                 if traced {
                     let st =
                         State { u: u_op.state().clone(), v: v_op.state().clone(), domain };
-                    let (err_a, err_b) = full_marginal_errors(p, &st, 0);
+                    let (err_a, err_b, objective) = convergence_sample(p, &st, 0);
                     history.push(HistoryPoint {
                         iter: k,
                         secs: clock.now(),
                         err_a,
                         err_b,
-                        objective: objective(p, &st, 0),
+                        objective,
                     });
                 }
                 if err < policy.threshold {
@@ -164,6 +214,7 @@ impl CentralizedSolver {
             final_err,
             secs: clock.now(),
             history,
+            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
         }
     }
 }

@@ -1,8 +1,9 @@
 //! Problem generator: marginals, cost families, sparsity, conditioning.
 
-use crate::linalg::{Domain, Mat};
+use crate::linalg::{Domain, LogCsr, Mat};
 use crate::rng::Rng;
-use std::sync::{Arc, OnceLock};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Condition classes of the Gibbs kernel (paper §IV-D): the effective
 /// conditioning of Sinkhorn is driven by `max C / ε` — we scale the cost
@@ -174,11 +175,12 @@ impl ProblemSpec {
 /// A concrete entropic-OT instance.
 ///
 /// The *cost matrix* is the source of truth; the Gibbs kernel
-/// `K = exp(−C/ε)`, its log-domain twin `log K = −C/ε`, and both
-/// transposes are materialized lazily and cached (shared across clones
-/// via `Arc`). A small-ε spec therefore never builds an all-zero linear
-/// kernel unless a linear-domain solver actually asks for one, and
-/// multi-solve experiments pay each O(n²) transpose exactly once.
+/// `K = exp(−C/ε)`, its log-domain twin `log K = −C/ε`, both
+/// transposes, and the θ-truncated sparse log kernels are materialized
+/// lazily and cached (shared across clones via `Arc`). A small-ε spec
+/// therefore never builds an all-zero linear kernel unless a
+/// linear-domain solver actually asks for one, and multi-solve
+/// experiments pay each O(n²) transpose/truncation exactly once.
 #[derive(Clone, Debug)]
 pub struct Problem {
     pub n: usize,
@@ -198,6 +200,12 @@ pub struct Problem {
     kernel_t: Arc<OnceLock<Mat>>,
     log_kernel: Arc<OnceLock<Mat>>,
     log_kernel_t: Arc<OnceLock<Mat>>,
+    /// Truncated sparse log kernels and their transposes, keyed by the
+    /// truncation threshold θ (bit pattern — θ values come from a single
+    /// config knob, so the map stays tiny). Shared across clones like
+    /// the dense caches.
+    sparse_log: Arc<Mutex<BTreeMap<u64, Arc<LogCsr>>>>,
+    sparse_log_t: Arc<Mutex<BTreeMap<u64, Arc<LogCsr>>>>,
 }
 
 impl Problem {
@@ -230,6 +238,35 @@ impl Problem {
     /// Cached transpose `(log K)ᵀ`.
     pub fn log_kernel_t(&self) -> &Mat {
         self.log_kernel_t.get_or_init(|| self.log_kernel().transpose())
+    }
+
+    /// Truncated sparse log kernel at threshold `theta` (built on first
+    /// use, then cached and shared across clones — multi-solve
+    /// experiments truncate exactly once per θ).
+    pub fn sparse_log_kernel(&self, theta: f64) -> Arc<LogCsr> {
+        let mut cache = self.sparse_log.lock().expect("sparse log cache");
+        cache
+            .entry(theta.to_bits())
+            .or_insert_with(|| Arc::new(LogCsr::from_dense_log(self.log_kernel(), theta)))
+            .clone()
+    }
+
+    /// Cached truncated transpose. Truncation is row-relative, so this
+    /// is built from the (cached) dense transpose rather than by
+    /// transposing the truncated kernel: each operator drops entries
+    /// relative to *its own* logsumexp axis.
+    pub fn sparse_log_kernel_t(&self, theta: f64) -> Arc<LogCsr> {
+        let mut cache = self.sparse_log_t.lock().expect("sparse log-t cache");
+        cache
+            .entry(theta.to_bits())
+            .or_insert_with(|| Arc::new(LogCsr::from_dense_log(self.log_kernel_t(), theta)))
+            .clone()
+    }
+
+    /// Density report for the truncated log kernel at `theta` — the
+    /// number the runtime's sparse dispatch cutoff is compared against.
+    pub fn sparse_log_density(&self, theta: f64) -> f64 {
+        self.sparse_log_kernel(theta).density()
     }
 
     /// The kernel in the representation `domain` expects.
@@ -303,6 +340,8 @@ impl Problem {
             kernel_t: Arc::new(OnceLock::new()),
             log_kernel: Arc::new(OnceLock::new()),
             log_kernel_t: Arc::new(OnceLock::new()),
+            sparse_log: Arc::new(Mutex::new(BTreeMap::new())),
+            sparse_log_t: Arc::new(Mutex::new(BTreeMap::new())),
         }
     }
 }

@@ -13,10 +13,12 @@
 //!   range (its condition worsens as ε shrinks relative to cost spread);
 //! * `N` target histograms (`b ∈ R^{n×N}`, Cuturi vectorization §IV-B3).
 //!
-//! A [`Problem`] stores the cost matrix and materializes `K`, `log K`
-//! and both transposes lazily (cached, shared across clones), so
-//! small-ε workloads never build an underflowed linear kernel unless a
-//! linear solver asks for one.
+//! A [`Problem`] stores the cost matrix and materializes `K`, `log K`,
+//! both transposes, and θ-truncated sparse log kernels (keyed per
+//! threshold, with a density report) lazily — cached, shared across
+//! clones — so small-ε workloads never build an underflowed linear
+//! kernel unless a linear solver asks for one, and the sparse engine
+//! truncates each kernel exactly once.
 //!
 //! [`Partition`] slices a problem across `c` clients exactly as the
 //! paper's Fig. 1: client `j` owns `a_j, b_j`, row block `K_j` and the
@@ -108,6 +110,28 @@ mod tests {
         let t1 = p.log_kernel_t() as *const crate::linalg::Mat;
         let t2 = p.log_kernel_t() as *const crate::linalg::Mat;
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn sparse_log_kernel_cache_and_density() {
+        use std::sync::Arc;
+        // s = 1: off-diagonal blocks carry cost 800·ε → log K = −800,
+        // far below the row max − 60 truncation line; only the 4
+        // diagonal 8×8 blocks survive.
+        let p = ProblemSpec::new(32).with_sparsity(1.0, 4).build(9);
+        let k1 = p.sparse_log_kernel(-60.0);
+        let k2 = p.sparse_log_kernel(-60.0);
+        assert!(Arc::ptr_eq(&k1, &k2), "cache must return the same allocation");
+        assert!((p.sparse_log_density(-60.0) - 0.25).abs() < 1e-12);
+        let t = p.sparse_log_kernel_t(-60.0);
+        assert_eq!(t.rows(), 32);
+        assert_eq!(t.nnz(), k1.nnz());
+        // Clones see the already-built truncation.
+        let q = p.clone();
+        assert!(Arc::ptr_eq(&q.sparse_log_kernel(-60.0), &k1));
+        // A different θ is a different cache entry.
+        let loose = p.sparse_log_kernel(f64::NEG_INFINITY);
+        assert_eq!(loose.nnz(), 32 * 32);
     }
 
     #[test]
