@@ -1,0 +1,114 @@
+"""tools/bench_diff.py: the CI perf-regression gate over BENCH_*.json."""
+
+import json
+import os
+import subprocess
+import sys
+
+TOOLS = os.path.join(os.path.dirname(__file__), "..", "..", "tools")
+
+
+def doc(cases):
+    return {"cases": [{"name": n, "reps": 3, "min_ms": v} for n, v in cases.items()]}
+
+
+def run_gate(tmp_path, baseline, fresh, *extra):
+    paths = []
+    for name, payload in [("baseline.json", baseline), ("fresh.json", fresh)]:
+        p = tmp_path / name
+        if payload is not None:
+            p.write_text(json.dumps(payload))
+        paths.append(str(p))
+    proc = subprocess.run(
+        [
+            sys.executable,
+            os.path.join(TOOLS, "bench_diff.py"),
+            "--baseline",
+            paths[0],
+            "--fresh",
+            paths[1],
+            *extra,
+        ],
+        capture_output=True,
+        text=True,
+        timeout=60,
+    )
+    return proc
+
+
+def test_passes_when_within_threshold(tmp_path):
+    base = doc({"native matmul n=512": 1.0, "logsumexp n=512": 4.0})
+    fresh = doc({"native matmul n=512": 1.2, "logsumexp n=512": 3.5})
+    proc = run_gate(tmp_path, base, fresh)
+    assert proc.returncode == 0, proc.stderr
+    assert "perf gate OK" in proc.stdout
+
+
+def test_fails_on_regression_over_threshold(tmp_path):
+    base = doc({"native matmul n=512": 1.0, "logsumexp n=512": 4.0})
+    fresh = doc({"native matmul n=512": 1.5, "logsumexp n=512": 4.0})
+    proc = run_gate(tmp_path, base, fresh)
+    assert proc.returncode == 1
+    assert "REGRESSED native matmul n=512" in proc.stdout
+    assert "FAIL" in proc.stderr
+
+
+def test_threshold_is_configurable(tmp_path):
+    base = doc({"k": 1.0})
+    fresh = doc({"k": 1.4})
+    assert run_gate(tmp_path, base, fresh, "--threshold", "0.5").returncode == 0
+    assert run_gate(tmp_path, base, fresh, "--threshold", "0.2").returncode == 1
+
+
+def test_noise_floor_shields_micro_cases(tmp_path):
+    # 3x slower but only 20 µs absolute: below the 0.05 ms noise floor.
+    base = doc({"tiny": 0.010})
+    fresh = doc({"tiny": 0.030})
+    assert run_gate(tmp_path, base, fresh).returncode == 0
+    # The same ratio above the floor fails.
+    base = doc({"big": 10.0})
+    fresh = doc({"big": 30.0})
+    assert run_gate(tmp_path, base, fresh).returncode == 1
+
+
+def test_renames_note_but_do_not_fail(tmp_path):
+    base = doc({"old name": 1.0, "stable": 2.0})
+    fresh = doc({"new name": 1.0, "stable": 2.0})
+    proc = run_gate(tmp_path, base, fresh)
+    assert proc.returncode == 0, proc.stderr
+    assert "case removed" in proc.stdout
+    assert "new case" in proc.stdout
+
+
+def test_missing_baseline_is_bootstrap_pass(tmp_path):
+    fresh = doc({"k": 1.0})
+    proc = run_gate(tmp_path, None, fresh)
+    assert proc.returncode == 0, proc.stderr
+    assert "bootstrap" in proc.stdout
+
+
+def test_missing_fresh_is_an_error(tmp_path):
+    base = doc({"k": 1.0})
+    proc = run_gate(tmp_path, base, None)
+    assert proc.returncode == 2
+    # Also in --write-baseline mode: a clean error, not a traceback.
+    proc = run_gate(tmp_path, base, None, "--write-baseline")
+    assert proc.returncode == 2
+    assert "Traceback" not in proc.stderr
+
+
+def test_only_regex_restricts_the_gate(tmp_path):
+    base = doc({"hot kernel": 1.0, "cold path": 1.0})
+    fresh = doc({"hot kernel": 1.0, "cold path": 9.0})
+    assert run_gate(tmp_path, base, fresh, "--only", "hot").returncode == 0
+    assert run_gate(tmp_path, base, fresh).returncode == 1
+
+
+def test_write_baseline_refreshes(tmp_path):
+    fresh = doc({"k": 2.0})
+    proc = run_gate(tmp_path, None, fresh, "--write-baseline")
+    assert proc.returncode == 0, proc.stderr
+    refreshed = json.loads((tmp_path / "baseline.json").read_text())
+    assert refreshed["cases"][0]["min_ms"] == 2.0
+    # And a subsequent identical run passes the gate.
+    assert run_gate(tmp_path, None, fresh).returncode == 0

@@ -9,8 +9,8 @@
 mod common;
 
 use fedsink::benchkit::{section, write_baseline, Bench, BenchResult};
-use fedsink::linalg::{LogCsr, Mat};
-use fedsink::rng::Rng;
+use fedsink::linalg::{AbsorbedLogCsr, LogCsr, Mat};
+use fedsink::rng::{child_seed, Rng};
 
 /// Random log-kernel block with a fraction `s` of entries hard-masked to
 /// `−∞` — the §IV-D sparse-kernel regime seen from the log domain.
@@ -29,11 +29,21 @@ fn masked_log_kernel(n: usize, s: f64, rng: &mut Rng) -> Mat {
 
 fn main() {
     let b = Bench::default();
-    let mut rng = Rng::seed_from(1);
+    // Quick mode (CI) pins a deterministic subset of the full case list;
+    // every case reseeds its own RNG from its parameters, so the emitted
+    // timings (and case names) are stable run-to-run and mode-to-mode —
+    // the contract `tools/bench_diff.py` gates on.
+    let quick = Bench::quick();
     let mut baseline: Vec<BenchResult> = Vec::new();
 
     section("native GEMV / GEMM (n x n @ n x N)");
-    for &(n, nh) in &[(512usize, 1usize), (512, 64), (1024, 1), (1024, 64)] {
+    let gemm_shapes: &[(usize, usize)] = if quick {
+        &[(512, 1), (512, 64)]
+    } else {
+        &[(512, 1), (512, 64), (1024, 1), (1024, 64)]
+    };
+    for &(n, nh) in gemm_shapes {
+        let mut rng = Rng::seed_from(child_seed(0xB_0001, (n * 1000 + nh) as u64));
         let a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
         let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
         let mut out = Mat::zeros(n, nh);
@@ -46,8 +56,9 @@ fn main() {
     }
 
     section("log-domain logsumexp vs GEMV (same shapes, log-kernel input)");
-    for &(n, nh) in &[(512usize, 1usize), (512, 64), (1024, 1), (1024, 64)] {
+    for &(n, nh) in gemm_shapes {
         // A log-kernel block (−C/ε scale) and log-scalings.
+        let mut rng = Rng::seed_from(child_seed(0xB_0002, (n * 1000 + nh) as u64));
         let a_log = Mat::rand_uniform(n, n, -40.0, 0.0, &mut rng);
         let x_log = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
         let mut out = Mat::zeros(n, nh);
@@ -62,6 +73,7 @@ fn main() {
     section("CSR vs dense at off-diagonal sparsity (n=1024, N=1)");
     let n = 1024;
     for &s in &[0.0f64, 0.5, 0.9, 1.0] {
+        let mut rng = Rng::seed_from(child_seed(0xB_0003, (s * 100.0) as u64));
         let p = fedsink::workload::ProblemSpec::new(n)
             .with_sparsity(s, 4)
             .build(5);
@@ -79,14 +91,14 @@ fn main() {
     // Mask fraction s → density ≈ 1−s; the n=4096 rows are the
     // acceptance bar for the stabilized sparse engine: sparse ≥ 4×
     // dense at density ≤ 0.1.
-    for &(n, s) in &[
-        (1024usize, 0.0f64),
-        (1024, 0.5),
-        (1024, 0.9),
-        (1024, 0.99),
-        (4096, 0.9),
-        (4096, 0.99),
-    ] {
+    let lse_shapes: &[(usize, f64)] = if quick {
+        &[(1024, 0.9), (1024, 0.99)]
+    } else {
+        &[(1024, 0.0), (1024, 0.5), (1024, 0.9), (1024, 0.99), (4096, 0.9), (4096, 0.99)]
+    };
+    for &(n, s) in lse_shapes {
+        let mut rng =
+            Rng::seed_from(child_seed(0xB_0004, (n * 1000 + (s * 100.0) as usize) as u64));
         let a_log = masked_log_kernel(n, s, &mut rng);
         let lc = LogCsr::from_dense_log(&a_log, f64::NEG_INFINITY);
         let x_log = Mat::rand_uniform(n, 1, -2.0, 2.0, &mut rng);
@@ -100,10 +112,45 @@ fn main() {
         }));
     }
 
+    section("multi-histogram absorbed sparse GEMM vs dense LSE (s=0.9)");
+    // The vectorized hybrid's linear hot path: one shared-support
+    // absorbed kernel, per-histogram column corrections, batched
+    // multi-RHS GEMM — against the dense multi-RHS logsumexp the
+    // pre-hybrid schedule paid every iteration.
+    let absorbed_shapes: &[(usize, usize)] = if quick {
+        &[(512, 8)]
+    } else {
+        &[(512, 8), (1024, 8), (1024, 64)]
+    };
+    for &(n, nh) in absorbed_shapes {
+        let mut rng = Rng::seed_from(child_seed(0xB_0005, (n * 1000 + nh) as u64));
+        let a_log = masked_log_kernel(n, 0.9, &mut rng);
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], -60.0, 15.0, 15.0);
+        let x_log = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        let mut ex = Mat::zeros(n, nh);
+        let mut lin = Mat::zeros(n, nh);
+        let mut out = Mat::zeros(n, nh);
+        baseline.push(b.run(
+            &format!("dense-lse N-RHS n={n} N={nh} (density {:.3})", k.density()),
+            || a_log.logsumexp_into(&x_log, &mut out, 1),
+        ));
+        baseline.push(b.run(&format!("absorbed-gemm   n={n} N={nh}"), || {
+            k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut out, 1)
+        }));
+        // The partial O(nnz) re-absorption tier (reference move within
+        // the anchor budget) — idempotent, so repeated reps are fair.
+        let gref: Vec<f64> = (0..n).map(|j| x_log[(j, 0)]).collect();
+        let mut kk = k.clone();
+        baseline.push(
+            b.run(&format!("absorbed-reabsorb n={n} N={nh}"), || kk.reabsorb(&gref)),
+        );
+    }
+
     if let Err(e) = write_baseline("BENCH_kernels.json", &baseline) {
         eprintln!("could not write BENCH_kernels.json: {e}");
     }
 
+    let mut rng = Rng::seed_from(1);
     xla_ablation(&b, &mut rng);
 }
 

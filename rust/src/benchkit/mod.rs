@@ -41,11 +41,22 @@ pub struct Bench {
 
 impl Default for Bench {
     fn default() -> Self {
-        if std::env::var("FEDSINK_BENCH_QUICK").as_deref() == Ok("1") {
+        if Bench::quick() {
             Self { warmup: 1, reps: 3, budget_secs: 2.0 }
         } else {
             Self { warmup: 2, reps: 10, budget_secs: 20.0 }
         }
+    }
+}
+
+impl Bench {
+    /// Whether this run is the CI quick mode (`FEDSINK_BENCH_QUICK=1`).
+    /// Benches pin their case lists and RNG seeds on it so the
+    /// perf-gate diff (`tools/bench_diff.py`) is deterministic
+    /// run-to-run: quick-mode case names are a stable subset of the
+    /// full-mode names.
+    pub fn quick() -> bool {
+        std::env::var("FEDSINK_BENCH_QUICK").as_deref() == Ok("1")
     }
 }
 

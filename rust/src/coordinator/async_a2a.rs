@@ -25,7 +25,7 @@ use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{allgather, Endpoint, TagKind};
-use crate::runtime::Target;
+use crate::runtime::{StabStats, Target};
 use crate::sinkhorn::StopReason;
 
 /// The async protocol reuses one tag per kind for the whole run; rounds
@@ -188,7 +188,15 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     });
 
     NodeOutcome {
-        stats: NodeStats { id, role: "client", timer, iterations, stop, final_err },
+        stats: NodeStats {
+            id,
+            role: "client",
+            timer,
+            iterations,
+            stop,
+            final_err,
+            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+        },
         slices: Some((u_fin, v_fin)),
         trace,
     }

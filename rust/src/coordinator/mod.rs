@@ -164,6 +164,49 @@ mod tests {
         assert!(ea < 1e-8 && eb < 1e-8, "({ea}, {eb})");
     }
 
+    /// Log-domain federated runs surface the absorption-hybrid counters:
+    /// every a2a client (and the star server) reports per-operator stats,
+    /// merged into the outcome with per-histogram trigger slots.
+    #[test]
+    fn federated_log_runs_report_stab_stats() {
+        use crate::config::DomainChoice;
+        let p = ProblemSpec::new(24).with_hists(2).with_eps(0.01).build(77);
+        let pol = StopPolicy {
+            threshold: 1e-9,
+            max_iters: 20_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        for variant in [Variant::SyncA2A, Variant::SyncStar] {
+            let mut fcfg = cfg(variant, 2);
+            fcfg.domain = DomainChoice::Log;
+            let out = run_federated(&p, &fcfg, pol, false);
+            assert!(out.converged, "{}: {:?}", variant.name(), out.stop);
+            let st = out.stab.as_ref().unwrap_or_else(|| {
+                panic!("{}: log run must report hybrid stats", variant.name())
+            });
+            assert!(st.updates > 0);
+            assert_eq!(st.absorb_triggers.len(), 2, "per-histogram slots");
+            // a2a: every client carries stats; star: exactly the server.
+            let with_stats = out.node_stats.iter().filter(|s| s.stab.is_some()).count();
+            match variant {
+                Variant::SyncA2A => assert_eq!(with_stats, 2),
+                Variant::SyncStar => {
+                    assert_eq!(with_stats, 1);
+                    assert!(out.node_stats.iter().any(|s| s.role == "server" && s.stab.is_some()));
+                }
+                _ => unreachable!(),
+            }
+        }
+        // Linear-domain runs carry no stabilized counters. (Pinned
+        // explicitly — `cfg()`'s Default domain resolves from
+        // FEDSINK_DOMAIN, so this must not depend on the environment.)
+        let mut lin_cfg = cfg(Variant::SyncA2A, 2);
+        lin_cfg.domain = DomainChoice::Linear;
+        let out = run_federated(&p, &lin_cfg, policy(), false);
+        assert!(out.stab.is_none());
+    }
+
     #[test]
     fn async_a2a_converges_with_damping() {
         let p = ProblemSpec::new(16).with_eps(0.5).build(5);

@@ -5,7 +5,7 @@ use crate::config::{DomainChoice, SolveConfig, Variant};
 use crate::linalg::{Domain, Mat, Stabilization};
 use crate::metrics::SplitTimer;
 use crate::net::{DelayTracker, LatencyModel, SimNet};
-use crate::runtime::make_backend;
+use crate::runtime::{make_backend, StabStats};
 use crate::sinkhorn::{CentralizedSolver, State, StopPolicy, StopReason};
 use crate::workload::{Partition, Problem};
 use std::sync::Arc;
@@ -19,6 +19,11 @@ pub struct NodeStats {
     pub iterations: usize,
     pub stop: StopReason,
     pub final_err: f64,
+    /// Absorption-hybrid counters of this node's operators (u-op + v-op,
+    /// or the star server's two kernel ops); `None` when the node ran no
+    /// stabilized schedule (linear domain, dense/sparse logsumexp, pure
+    /// element-wise star clients).
+    pub stab: Option<StabStats>,
 }
 
 impl NodeStats {
@@ -56,6 +61,9 @@ pub struct FederatedOutcome {
     pub taus: Vec<u64>,
     pub trace: Vec<TracePoint>,
     pub secs: f64,
+    /// Absorption-hybrid counters merged across every node that ran the
+    /// stabilized log schedule (`None` when none did).
+    pub stab: Option<StabStats>,
 }
 
 /// Everything a protocol implementation needs.
@@ -135,6 +143,7 @@ pub fn run_federated(
                 iterations: out.iterations,
                 stop: out.stop,
                 final_err: out.final_err,
+                stab: out.stab.clone(),
             }],
             taus: Vec::new(),
             trace: out
@@ -142,6 +151,7 @@ pub fn run_federated(
                 .iter()
                 .map(|h| TracePoint { iter: h.iter, secs: h.secs, err: h.err_a })
                 .collect(),
+            stab: out.stab,
             state: out.state,
             secs: t0.elapsed().as_secs_f64(),
         };
@@ -195,6 +205,9 @@ pub fn run_federated(
     }
 
     let node_stats: Vec<NodeStats> = outcomes.iter().map(|o| o.stats.clone()).collect();
+    let stab = node_stats
+        .iter()
+        .fold(None, |acc, s| StabStats::merged(acc, s.stab.clone()));
     let stop = aggregate_stop(&node_stats);
     let iterations = node_stats.iter().map(|s| s.iterations).max().unwrap_or(0);
     // Node 0's trace is the representative curve (paper plots "the first
@@ -214,6 +227,7 @@ pub fn run_federated(
         taus: delays.taus(),
         trace,
         secs: t0.elapsed().as_secs_f64(),
+        stab,
     }
 }
 

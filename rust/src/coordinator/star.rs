@@ -28,7 +28,7 @@ use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::{Domain, Mat};
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{bcast, gather, TagKind};
-use crate::runtime::Target;
+use crate::runtime::{StabStats, Target};
 use crate::sinkhorn::StopReason;
 
 pub fn run(ctx: &RunCtx<'_>, async_mode: bool) -> Vec<NodeOutcome> {
@@ -154,7 +154,15 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     }
 
     NodeOutcome {
-        stats: NodeStats { id: c, role: "server", timer, iterations, stop, final_err },
+        stats: NodeStats {
+            id: c,
+            role: "server",
+            timer,
+            iterations,
+            stop,
+            final_err,
+            stab: StabStats::merged(k_op.stab_stats(), kt_op.stab_stats()),
+        },
         slices: None,
         trace: Vec::new(),
     }
@@ -234,7 +242,17 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     }
 
     NodeOutcome {
-        stats: NodeStats { id, role: "client", timer, iterations, stop, final_err },
+        stats: NodeStats {
+            id,
+            role: "client",
+            timer,
+            iterations,
+            stop,
+            final_err,
+            // Star clients run element-wise updates only — the server
+            // owns the kernel operators and their hybrid counters.
+            stab: None,
+        },
         slices: Some((u_jj, v_jj)),
         trace,
     }
@@ -287,6 +305,11 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     let mut client_iter = vec![0u64; c];
     let bound = ctx.cfg.max_staleness.max(1);
     let mut iterations = 0;
+    // A done vote can widen the staleness gate (min_live skips the
+    // finished client) without any fresh u/v arriving; the next pass
+    // must then re-send the current products or a newly eligible,
+    // blocked client would wait forever.
+    let mut resend = false;
 
     // The server relays until every client reports done; the cap is a
     // safety net (clients are themselves capped at max_iters).
@@ -294,13 +317,13 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
         iterations = s;
         let s64 = s as u64;
 
-        let mut any_fresh = false;
+        let mut fresh_v = false;
         timer.comm(|| {
             for j in 0..c {
                 if let Some(msg) = ep.try_recv_latest(j, TagKind::V, A_TAG) {
                     write_block(&mut v_full, &msg.payload, j, m);
                     client_iter[j] = client_iter[j].max(msg.sent_iter);
-                    any_fresh = true;
+                    fresh_v = true;
                 }
             }
         });
@@ -309,41 +332,54 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             .map(|j| client_iter[j])
             .min()
             .unwrap_or(0);
-        let q = timer.comp(|| k_op.matvec(&v_full).clone());
-        timer.comm(|| {
-            for j in 0..c {
-                if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
-                    ep.send(j, TagKind::Ctl, A_TAG, chunk_of(&q, j, m).to_vec(), s64);
+        // Products only run on fresh input (s == 1 primes the clients):
+        // a stale pass would recompute — and, on the stabilized log
+        // schedule, *count* — an identical product, burning compute and
+        // inflating the hybrid's per-iteration counters with no-ops.
+        if fresh_v || s == 1 || resend {
+            let q = timer.comp(|| k_op.matvec(&v_full).clone());
+            timer.comm(|| {
+                for j in 0..c {
+                    if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
+                        ep.send(j, TagKind::Ctl, A_TAG, chunk_of(&q, j, m).to_vec(), s64);
+                    }
                 }
-            }
-        });
+            });
+        }
 
+        let mut fresh_u = false;
         timer.comm(|| {
             for j in 0..c {
                 if let Some(msg) = ep.try_recv_latest(j, TagKind::U, A_TAG) {
                     write_block(&mut u_full, &msg.payload, j, m);
                     client_iter[j] = client_iter[j].max(msg.sent_iter);
-                    any_fresh = true;
+                    fresh_u = true;
                 }
             }
         });
-        let r = timer.comp(|| kt_op.matvec(&u_full).clone());
-        timer.comm(|| {
-            for j in 0..c {
-                if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
-                    ep.send(j, TagKind::Ctl, A_TAG + 1, chunk_of(&r, j, m).to_vec(), s64);
+        if fresh_u || s == 1 || resend {
+            let r = timer.comp(|| kt_op.matvec(&u_full).clone());
+            timer.comm(|| {
+                for j in 0..c {
+                    if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
+                        ep.send(j, TagKind::Ctl, A_TAG + 1, chunk_of(&r, j, m).to_vec(), s64);
+                    }
                 }
-            }
-        });
+            });
+        }
+        let any_fresh = fresh_v || fresh_u;
 
         // Done votes arrive on the control tag 2.
+        let mut fresh_done = false;
         timer.comm(|| {
             for j in 0..c {
                 if ep.try_recv_latest(j, TagKind::Ctl, A_TAG + 2).is_some() {
                     done[j] = true;
+                    fresh_done = true;
                 }
             }
         });
+        resend = fresh_done;
         if done.iter().all(|&d| d) {
             break;
         }
@@ -365,6 +401,7 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             iterations,
             stop: StopReason::Converged, // the server has no own criterion
             final_err: 0.0,
+            stab: StabStats::merged(k_op.stab_stats(), kt_op.stab_stats()),
         },
         slices: None,
         trace: Vec::new(),
@@ -462,7 +499,15 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     ep.send(server, TagKind::Ctl, A_TAG + 2, vec![1.0], iterations as u64);
 
     NodeOutcome {
-        stats: NodeStats { id, role: "client", timer, iterations, stop, final_err },
+        stats: NodeStats {
+            id,
+            role: "client",
+            timer,
+            iterations,
+            stop,
+            final_err,
+            stab: None, // element-wise only; the server owns the kernel ops
+        },
         slices: Some((u_jj, v_jj)),
         trace,
     }

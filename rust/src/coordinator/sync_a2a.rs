@@ -15,7 +15,7 @@ use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{allgather, TagKind};
-use crate::runtime::Target;
+use crate::runtime::{StabStats, Target};
 use crate::sinkhorn::StopReason;
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
@@ -139,6 +139,7 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             iterations,
             stop,
             final_err, // the AllGathered global error — identical on all nodes
+            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
         },
         slices: Some((u_op.state().clone(), v_op.state().clone())),
         trace,

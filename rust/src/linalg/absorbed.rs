@@ -1,0 +1,431 @@
+//! Shared-support absorbed sparse log-kernel for the multi-histogram
+//! absorption-hybrid schedule (Schmitzer's kernel absorption, PAPERS.md
+//! 1610.06519, extended to vectorized solves).
+//!
+//! One *reference* dual vector `ḡ` (e.g. the column-wise mean of the `N`
+//! log-scalings) is absorbed into the kernel —
+//! `K̃[i,j] = exp(log K[i,j] + ḡ[j] − f̄[i])` with
+//! `f̄[i] = max_j (log K[i,j] + ḡ[j])` — and the support is truncated
+//! once against the reference. Per-histogram products then run as one
+//! batched sparse GEMM with per-column scaling corrections:
+//!
+//! ```text
+//! q[:,h] = K̃ · exp(x[:,h] − ḡ)        (multi-RHS, shared support)
+//! log(K·x)[i,h] = f̄[i] + ln q[i,h]
+//! ```
+//!
+//! Every factor stays well-scaled as long as each histogram's drift
+//! `max_j |x[j,h] − ḡ[j]|` is below the capacity the support was built
+//! for: kept entries are `K̃ ∈ (e^{θ_s}, 1]` and the corrections are
+//! `exp(x − ḡ) ∈ [e^{−d}, e^{d}]`.
+//!
+//! Two re-absorption tiers keep the schedule cheap:
+//! * **partial** (`O(nnz)`): move `ḡ` to a new reference and recompute
+//!   `f̄` + the absorbed values over the *existing* support — valid while
+//!   the reference stays within `σ` of the anchor it was truncated at;
+//! * **full** (`O(m·n)`): re-truncate the support from the dense
+//!   log-kernel (the cost of about one dense logsumexp iteration).
+//!
+//! The support threshold carries the slack that makes both tiers exact:
+//! `θ_s = θ − 2(σ + d)` guarantees that every entry within `θ` of *any*
+//! histogram's own row maximum is stored, for all scalings within drift
+//! `d` of a reference within `σ` of the anchor — so the batched product
+//! matches the per-histogram dense logsumexp up to the same truncation
+//! error as the single-histogram hybrid.
+
+use super::{Csr, Mat};
+
+/// Absorbed, θ-truncated sparse log-kernel with a shared support across
+/// `N` histograms. The absorbed linear entries live in a [`Csr`] (so
+/// the batched product reuses its threaded SpMM kernels, including the
+/// unrolled `nh == 1` GEMV lane); the raw log-kernel entries are kept
+/// alongside for `O(nnz)` partial re-absorption.
+#[derive(Clone, Debug)]
+pub struct AbsorbedLogCsr {
+    /// Absorbed linear kernel `K̃ = exp(log K + g[col] − f[row])` on the
+    /// truncated support.
+    k: Csr,
+    /// Raw `log K` entries on the same support (index-aligned with the
+    /// CSR values).
+    log_vals: Vec<f64>,
+    /// Current absorbed reference duals (length n).
+    g: Vec<f64>,
+    /// Reference at the last full truncation (the support's anchor).
+    g_anchor: Vec<f64>,
+    /// Row shifts `f[i] = max_j (log K[i,j] + g[j])` (length m).
+    f: Vec<f64>,
+    /// User-facing truncation threshold θ (< 0) the support slack is
+    /// derived from.
+    theta: f64,
+    /// Per-histogram drift capacity the current support covers.
+    covered: f64,
+    /// Anchor-shift budget: partial re-absorption is exact while the
+    /// reference stays within `σ` of `g_anchor`.
+    sigma: f64,
+}
+
+impl AbsorbedLogCsr {
+    /// Full truncation: absorb `gref` into `a_log`, keep entries within
+    /// the slack-widened threshold `θ − 2(σ + covered)` of their row
+    /// maximum. `covered` is the per-histogram drift the support must
+    /// stay exact for; `sigma` bounds future reference moves served by
+    /// partial re-absorption.
+    pub fn from_dense_log(
+        a_log: &Mat,
+        gref: &[f64],
+        theta: f64,
+        covered: f64,
+        sigma: f64,
+    ) -> Self {
+        assert_eq!(gref.len(), a_log.cols(), "reference dual length");
+        let (m, n) = (a_log.rows(), a_log.cols());
+        let mut out = Self {
+            k: Csr::from_parts(m, n, vec![0; m + 1], Vec::new(), Vec::new()),
+            log_vals: Vec::new(),
+            g: gref.to_vec(),
+            g_anchor: gref.to_vec(),
+            f: vec![f64::NEG_INFINITY; m],
+            theta,
+            covered,
+            sigma,
+        };
+        out.truncate_from(a_log);
+        out
+    }
+
+    /// Re-truncate the support from the dense log-kernel against a new
+    /// reference and drift capacity — the `O(m·n)` tier. Resets the
+    /// anchor.
+    pub fn retruncate(&mut self, a_log: &Mat, gref: &[f64], covered: f64) {
+        assert_eq!(a_log.rows(), self.rows(), "kernel rows");
+        assert_eq!(a_log.cols(), self.cols(), "kernel cols");
+        assert_eq!(gref.len(), self.cols(), "reference dual length");
+        self.g.copy_from_slice(gref);
+        self.g_anchor.copy_from_slice(gref);
+        self.covered = covered;
+        self.truncate_from(a_log);
+    }
+
+    fn truncate_from(&mut self, a_log: &Mat) {
+        let (m, n) = (a_log.rows(), a_log.cols());
+        let theta_s = self.theta_support();
+        let mut row_ptr = Vec::with_capacity(m + 1);
+        let mut col_idx = Vec::new();
+        let mut vals = Vec::new();
+        self.log_vals.clear();
+        row_ptr.push(0);
+        for i in 0..m {
+            let arow = a_log.row(i);
+            let mut mx = f64::NEG_INFINITY;
+            for j in 0..n {
+                let v = arow[j] + self.g[j];
+                if v > mx {
+                    mx = v;
+                }
+            }
+            self.f[i] = mx;
+            if mx > f64::NEG_INFINITY {
+                for j in 0..n {
+                    let s = arow[j] + self.g[j] - mx;
+                    if s >= theta_s {
+                        col_idx.push(j as u32);
+                        self.log_vals.push(arow[j]);
+                        vals.push(s.exp());
+                    }
+                }
+            }
+            row_ptr.push(vals.len());
+        }
+        self.k = Csr::from_parts(m, n, row_ptr, col_idx, vals);
+    }
+
+    /// Partial re-absorption (`O(nnz)`): move the reference to `gref`
+    /// and recompute the row shifts + absorbed values over the existing
+    /// support. Exact while `anchor_shift(gref) ≤ sigma` (the caller's
+    /// contract — [`AbsorbedLogCsr::retruncate`] otherwise).
+    pub fn reabsorb(&mut self, gref: &[f64]) {
+        assert_eq!(gref.len(), self.cols(), "reference dual length");
+        self.g.copy_from_slice(gref);
+        let rows = self.rows();
+        let (row_ptr, col_idx, vals) = self.k.parts_mut();
+        for i in 0..rows {
+            let (s, e) = (row_ptr[i], row_ptr[i + 1]);
+            let mut mx = f64::NEG_INFINITY;
+            for idx in s..e {
+                let v = self.log_vals[idx] + self.g[col_idx[idx] as usize];
+                if v > mx {
+                    mx = v;
+                }
+            }
+            self.f[i] = mx;
+            for idx in s..e {
+                let v = self.log_vals[idx] + self.g[col_idx[idx] as usize];
+                vals[idx] = (v - mx).exp();
+            }
+        }
+    }
+
+    /// How far a candidate reference sits from the support's anchor —
+    /// compared against `sigma` to pick partial vs. full re-absorption.
+    pub fn anchor_shift(&self, gref: &[f64]) -> f64 {
+        debug_assert_eq!(gref.len(), self.cols());
+        gref.iter()
+            .zip(&self.g_anchor)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-histogram drift `max_j |x[j,h] − g[j]|` of `N` log-scaling
+    /// columns against the absorbed reference, written into `out`
+    /// (length `N`, no allocation on the hot path).
+    pub fn max_drift_into(&self, x_log: &Mat, out: &mut [f64]) {
+        let nh = x_log.cols();
+        assert_eq!(x_log.rows(), self.cols(), "scaling rows");
+        assert_eq!(out.len(), nh, "drift slots");
+        out.fill(0.0);
+        let xs = x_log.as_slice();
+        for j in 0..self.cols() {
+            let gj = self.g[j];
+            let xrow = &xs[j * nh..(j + 1) * nh];
+            for (o, &x) in out.iter_mut().zip(xrow) {
+                let d = (x - gj).abs();
+                if d > *o {
+                    *o = d;
+                }
+            }
+        }
+    }
+
+    /// Batched absorbed log-product: `out[i,h] = log Σ_j exp(log K[i,j]
+    /// + x[j,h])` over the stored support, computed as the sparse GEMM
+    /// `K̃ · (exp(x − ḡ))` with per-column scaling corrections, then
+    /// shifted back by `f̄`. `ex` (n×N) and `lin` (m×N) are caller-owned
+    /// scratch so the hot loop never allocates.
+    pub fn log_matmul_into(
+        &self,
+        x_log: &Mat,
+        ex: &mut Mat,
+        lin: &mut Mat,
+        out: &mut Mat,
+        threads: usize,
+    ) {
+        let nh = x_log.cols();
+        assert_eq!(x_log.rows(), self.cols(), "inner dims");
+        assert_eq!((ex.rows(), ex.cols()), (self.cols(), nh), "ex scratch shape");
+        assert_eq!((lin.rows(), lin.cols()), (self.rows(), nh), "lin scratch shape");
+        assert_eq!((out.rows(), out.cols()), (self.rows(), nh), "out shape");
+
+        // Per-column scaling corrections: ex = exp(x − ḡ), bounded by
+        // e^{±covered} while the caller's drift contract holds.
+        {
+            let xs = x_log.as_slice();
+            let es = ex.as_mut_slice();
+            for j in 0..self.cols() {
+                let gj = self.g[j];
+                for h in 0..nh {
+                    es[j * nh + h] = (xs[j * nh + h] - gj).exp();
+                }
+            }
+        }
+
+        self.matmul_into(ex, lin, threads);
+
+        // Shift back: log(K·x) = f̄ + ln(K̃ · exp(x − ḡ)). A zero product
+        // only happens on a fully masked row (f̄ = −∞): kept entries are
+        // ≥ e^{θ_s} and the drift contract keeps exp(x − ḡ) ≥ e^{−d}, so
+        // no kept term can underflow the sum to zero.
+        let os = out.as_mut_slice();
+        let ls = lin.as_slice();
+        for i in 0..self.rows() {
+            let fi = self.f[i];
+            for h in 0..nh {
+                let lq = ls[i * nh + h];
+                os[i * nh + h] = if lq > 0.0 { fi + lq.ln() } else { f64::NEG_INFINITY };
+            }
+        }
+    }
+
+    /// Batched multi-RHS product over the absorbed values: `out = K̃·x`
+    /// — delegates to the shared [`Csr::matmul_into`] kernels (banded
+    /// threading, unrolled `nh == 1` GEMV lane).
+    pub fn matmul_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
+        self.k.matmul_into(x, out, threads);
+    }
+
+    pub fn rows(&self) -> usize {
+        self.k.rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.k.cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.k.nnz()
+    }
+
+    /// Fill fraction (1 = dense) of the shared support.
+    pub fn density(&self) -> f64 {
+        self.k.density()
+    }
+
+    /// User-facing truncation threshold θ this kernel derives its
+    /// support slack from.
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    /// Per-histogram drift capacity the current support is exact for.
+    pub fn covered(&self) -> f64 {
+        self.covered
+    }
+
+    /// Anchor-shift budget for partial re-absorption.
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Effective support threshold `θ − 2(σ + covered)`.
+    pub fn theta_support(&self) -> f64 {
+        self.theta - 2.0 * (self.sigma + self.covered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Reference: per-histogram dense logsumexp of `a_log + x`.
+    fn dense_log_product(a_log: &Mat, x_log: &Mat) -> Mat {
+        a_log.logsumexp(x_log, 1)
+    }
+
+    fn scratch(k: &AbsorbedLogCsr, nh: usize) -> (Mat, Mat, Mat) {
+        (Mat::zeros(k.cols(), nh), Mat::zeros(k.rows(), nh), Mat::zeros(k.rows(), nh))
+    }
+
+    #[test]
+    fn zero_reference_matches_dense_logsumexp() {
+        let mut rng = Rng::seed_from(51);
+        let (m, n, nh) = (13, 9, 4);
+        let a_log = Mat::rand_uniform(m, n, -8.0, 0.0, &mut rng);
+        let x_log = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], -60.0, 15.0, 15.0);
+        assert_eq!(k.nnz(), m * n, "moderate range: nothing truncated");
+        let (mut ex, mut lin, mut out) = scratch(&k, nh);
+        k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut out, 1);
+        let want = dense_log_product(&a_log, &x_log);
+        assert!(out.allclose(&want, 1e-12));
+    }
+
+    #[test]
+    fn partial_reabsorb_equals_full_retruncate() {
+        let mut rng = Rng::seed_from(52);
+        let (m, n, nh) = (11, 7, 3);
+        let a_log = Mat::rand_uniform(m, n, -30.0, 0.0, &mut rng);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-3.0, 3.0)).collect();
+        let mut partial = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], -60.0, 5.0, 5.0);
+        let mut full = partial.clone();
+        // The shift stays within σ, so the partial tier must reproduce
+        // the full rebuild exactly on the (identical) support.
+        assert!(partial.anchor_shift(&gref) <= partial.sigma());
+        partial.reabsorb(&gref);
+        full.retruncate(&a_log, &gref, 5.0);
+        let x_log = Mat::rand_uniform(n, nh, -4.0, 4.0, &mut rng);
+        let (mut ex, mut lin, mut o1) = scratch(&partial, nh);
+        let mut o2 = o1.clone();
+        partial.log_matmul_into(&x_log, &mut ex, &mut lin, &mut o1, 1);
+        full.log_matmul_into(&x_log, &mut ex, &mut lin, &mut o2, 1);
+        assert!(o1.allclose(&o2, 1e-13));
+        // Both agree with the dense per-histogram product.
+        assert!(o1.allclose(&dense_log_product(&a_log, &x_log), 1e-12));
+    }
+
+    #[test]
+    fn support_slack_keeps_per_histogram_truncation_invisible() {
+        // A kernel with genuinely droppable entries (range ≫ |θ_s|):
+        // after a reference move within σ and per-histogram scalings
+        // within the covered drift, the truncated product matches the
+        // dense logsumexp to round-off.
+        let mut rng = Rng::seed_from(53);
+        let (m, n, nh) = (17, 13, 2);
+        let a_log = Mat::rand_uniform(m, n, -400.0, 0.0, &mut rng);
+        let gref = vec![0.0; n];
+        let k0 = AbsorbedLogCsr::from_dense_log(&a_log, &gref, -60.0, 10.0, 10.0);
+        assert!(k0.nnz() < m * n, "the -400 range must truncate something");
+        let mut k = k0;
+        let shift: Vec<f64> = (0..n).map(|_| rng.uniform_range(-8.0, 8.0)).collect();
+        k.reabsorb(&shift);
+        let mut x_log = Mat::zeros(n, nh);
+        for j in 0..n {
+            for h in 0..nh {
+                x_log[(j, h)] = shift[j] + rng.uniform_range(-9.0, 9.0);
+            }
+        }
+        let (mut ex, mut lin, mut out) = scratch(&k, nh);
+        k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut out, 1);
+        let want = dense_log_product(&a_log, &x_log);
+        for i in 0..m {
+            for h in 0..nh {
+                let (w, g) = (want[(i, h)], out[(i, h)]);
+                assert!(
+                    (w - g).abs() <= 1e-11 * w.abs().max(1.0),
+                    "({i},{h}): {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn masked_rows_stay_neg_infinity() {
+        let ni = f64::NEG_INFINITY;
+        let a = Mat::from_vec(2, 3, vec![0.0, ni, -1.0, ni, ni, ni]);
+        let k = AbsorbedLogCsr::from_dense_log(&a, &[0.0; 3], -60.0, 15.0, 15.0);
+        assert_eq!(k.nnz(), 2);
+        let x = Mat::zeros(3, 2);
+        let (mut ex, mut lin, mut out) = scratch(&k, 2);
+        k.log_matmul_into(&x, &mut ex, &mut lin, &mut out, 1);
+        assert!(out[(0, 0)].is_finite());
+        assert_eq!(out[(1, 0)], ni);
+        assert_eq!(out[(1, 1)], ni);
+    }
+
+    #[test]
+    fn drift_is_per_histogram() {
+        let k = AbsorbedLogCsr::from_dense_log(
+            &Mat::zeros(2, 3),
+            &[1.0, 2.0, 3.0],
+            -60.0,
+            15.0,
+            15.0,
+        );
+        let x = Mat::from_vec(3, 2, vec![1.0, 4.0, 2.0, 2.0, 3.0, -1.0]);
+        let mut drift = [0.0f64; 2];
+        k.max_drift_into(&x, &mut drift);
+        // hist 0: |1−1|, |2−2|, |3−3| = 0; hist 1: |4−1|, |2−2|, |−1−3|.
+        assert_eq!(drift[0], 0.0);
+        assert_eq!(drift[1], 4.0);
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        let mut rng = Rng::seed_from(54);
+        let (m, n, nh) = (57, 33, 3);
+        let mut a_log = Mat::rand_uniform(m, n, -200.0, 0.0, &mut rng);
+        for i in 0..m {
+            for j in 0..n {
+                if rng.uniform() < 0.5 {
+                    a_log[(i, j)] = f64::NEG_INFINITY;
+                }
+            }
+        }
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], -60.0, 15.0, 15.0);
+        let x_log = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        let (mut ex, mut lin, mut serial) = scratch(&k, nh);
+        let mut par = serial.clone();
+        k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut serial, 1);
+        k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut par, 4);
+        assert!(serial.allclose(&par, 0.0));
+    }
+}

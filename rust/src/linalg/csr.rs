@@ -37,8 +37,10 @@ impl Csr {
         Self { rows: m.rows(), cols: m.cols(), row_ptr, col_idx, vals }
     }
 
-    /// Assemble from raw CSR arrays (the absorbed-kernel rebuild path —
-    /// avoids materializing a dense intermediate).
+    /// Assemble from raw CSR arrays without materializing a dense
+    /// intermediate (the multi-histogram absorbed kernel keeps its own
+    /// arrays in [`super::AbsorbedLogCsr`]; this stays for callers that
+    /// build plain sparse kernels incrementally).
     pub fn from_parts(
         rows: usize,
         cols: usize,
@@ -62,6 +64,14 @@ impl Csr {
 
     pub fn nnz(&self) -> usize {
         self.vals.len()
+    }
+
+    /// Raw CSR arrays `(row_ptr, col_idx, vals)` with the values
+    /// mutable — the absorbed kernel re-scales its stored entries in
+    /// place during partial re-absorption without rebuilding the
+    /// structure.
+    pub fn parts_mut(&mut self) -> (&[usize], &[u32], &mut [f64]) {
+        (&self.row_ptr, &self.col_idx, &mut self.vals)
     }
 
     /// Fill fraction (1 = dense).

@@ -12,6 +12,11 @@
 //! * [`LogCsr`] — the `−∞`-aware CSR twin for log-domain kernels,
 //!   built by truncating entries whose shifted exponent falls below a
 //!   threshold `θ` (Schmitzer's stabilized sparse scaling);
+//! * [`AbsorbedLogCsr`] — the shared-support *absorbed* sparse kernel of
+//!   the multi-histogram hybrid schedule: one reference dual is absorbed
+//!   and truncated once, per-histogram products run as batched sparse
+//!   GEMMs with per-column scaling corrections, and re-absorption has a
+//!   cheap `O(nnz)` partial tier next to the full re-truncation;
 //! * [`Domain`] — the linear vs. log-stabilized representation switch the
 //!   whole stack is generic over, plus the [`Stabilization`] tuning for
 //!   the truncated/absorption-hybrid log path;
@@ -22,12 +27,14 @@
 //! reference implementation, the arbitrary-shape fallback, and the
 //! "CPU-speed compute" stand-in for the paper's §IV-E study.
 
+mod absorbed;
 mod csr;
 mod dense;
 mod domain;
 mod log_csr;
 mod ops;
 
+pub use absorbed::AbsorbedLogCsr;
 pub use csr::Csr;
 pub use dense::Mat;
 pub use domain::{Domain, Stabilization};

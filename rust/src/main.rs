@@ -252,6 +252,20 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         out.node_stats.first().map(|s| s.final_err).unwrap_or(f64::NAN),
         out.secs
     );
+    if let Some(st) = &out.stab {
+        println!(
+            "  hybrid: {} updates, {} absorbs ({} full rebuilds) -> {:.1}% linear iterations",
+            st.updates,
+            st.absorbs,
+            st.rebuilds,
+            100.0 * st.linear_fraction()
+        );
+        if st.absorb_triggers.len() > 1 {
+            let triggers: Vec<String> =
+                st.absorb_triggers.iter().map(|t| t.to_string()).collect();
+            println!("  per-histogram absorb triggers: [{}]", triggers.join(", "));
+        }
+    }
     for s in &out.node_stats {
         println!(
             "  node {:>2} ({:<7}) comp={:.3}s comm={:.3}s iters={}",

@@ -9,7 +9,8 @@
 //! `marginal`, so solvers and coordinators run the same protocol code
 //! over either representation.
 
-use crate::linalg::{Domain, LogCsr, Mat, Stabilization};
+use crate::linalg::{AbsorbedLogCsr, Domain, LogCsr, Mat, Stabilization};
+use std::sync::Arc;
 
 /// A client's target marginal slice: the u-update broadcasts one vector
 /// (`a_j`) across histograms; the v-update in vectorized mode has one
@@ -30,18 +31,26 @@ impl Target<'_> {
 }
 
 /// Instrumentation of the absorption-hybrid schedule: how many scaling
-/// updates an operator performed and how many of them forced a kernel
-/// re-absorption + re-truncation (an O(m·n) rebuild — the rest ran at
-/// sparse-GEMV cost). The acceptance bar for the hybrid is
-/// `linear_fraction() ≥ 0.8` over a small-ε solve.
-#[derive(Clone, Copy, Debug, Default)]
+/// updates an operator performed, how many of them forced a kernel
+/// re-absorption (partial `O(nnz)` or full), and how many of those were
+/// full `O(m·n)` re-truncations — the rest ran at sparse-GEMM cost. For
+/// vectorized solves `absorb_triggers[h]` counts, per histogram, how
+/// often it was hist `h`'s drift that tripped a re-absorption. The
+/// acceptance bar for the hybrid is `linear_fraction() ≥ 0.7` over a
+/// small-ε vectorized solve (≥ 0.8 single-histogram).
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StabStats {
     pub updates: usize,
+    /// Re-absorption events (partial + full).
     pub absorbs: usize,
+    /// Full support re-truncations (the only dense-cost rebuilds).
+    pub rebuilds: usize,
+    /// Per-histogram re-absorption triggers (empty for non-hybrid ops).
+    pub absorb_triggers: Vec<usize>,
 }
 
 impl StabStats {
-    /// Fraction of updates that ran purely on the linear GEMV path.
+    /// Fraction of updates that ran purely on the linear GEMM path.
     pub fn linear_fraction(&self) -> f64 {
         if self.updates == 0 {
             1.0
@@ -50,13 +59,33 @@ impl StabStats {
         }
     }
 
-    /// Merge two optional per-operator counters (u-op + v-op).
+    /// Merge two optional per-operator counters (u-op + v-op, or
+    /// per-node counters across a federated run). Per-histogram trigger
+    /// vectors add elementwise (padded to the longer length).
     pub fn merged(a: Option<StabStats>, b: Option<StabStats>) -> Option<StabStats> {
         match (a, b) {
             (None, None) => None,
             (x, y) => {
                 let (x, y) = (x.unwrap_or_default(), y.unwrap_or_default());
-                Some(StabStats { updates: x.updates + y.updates, absorbs: x.absorbs + y.absorbs })
+                let mut triggers = if x.absorb_triggers.len() >= y.absorb_triggers.len() {
+                    x.absorb_triggers.clone()
+                } else {
+                    y.absorb_triggers.clone()
+                };
+                let shorter = if x.absorb_triggers.len() >= y.absorb_triggers.len() {
+                    &y.absorb_triggers
+                } else {
+                    &x.absorb_triggers
+                };
+                for (t, &s) in triggers.iter_mut().zip(shorter) {
+                    *t += s;
+                }
+                Some(StabStats {
+                    updates: x.updates + y.updates,
+                    absorbs: x.absorbs + y.absorbs,
+                    rebuilds: x.rebuilds + y.rebuilds,
+                    absorb_triggers: triggers,
+                })
             }
         }
     }
@@ -174,6 +203,24 @@ pub trait ComputeBackend: Send + Sync {
             Domain::Linear => self.block_op(a, t, u0),
             Domain::Log => self.log_block_op(a, t, u0),
         }
+    }
+
+    /// Stabilized log-domain operator seeded with a pre-built absorbed
+    /// kernel (normally [`crate::workload::Problem`]'s per-(θ, τ) cache
+    /// entry at the zero reference). Backends with a hybrid schedule
+    /// start from the shared support and copy-on-write at the first
+    /// re-absorption; the default ignores the seed and falls back to
+    /// [`ComputeBackend::log_block_op_stabilized`].
+    fn log_block_op_stabilized_seeded(
+        &self,
+        a_log: &Mat,
+        seed: Option<Arc<AbsorbedLogCsr>>,
+        t: Target<'_>,
+        u0_log: Mat,
+        stab: &Stabilization,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        let _ = seed;
+        self.log_block_op_stabilized(a_log, t, u0_log, stab)
     }
 
     /// Domain dispatch with the stabilized log path: what the solver and

@@ -272,8 +272,9 @@ mod tests {
     #[test]
     fn multi_histogram_stabilized_dispatch_stays_exact() {
         use crate::linalg::Stabilization;
-        // nh > 1 routes to the sparse (dense-density) logsumexp path; on
-        // an untruncatable block that is the dense op bit for bit.
+        // nh > 1 now routes to the shared-support absorption-hybrid; on
+        // an untruncatable moderate-range block its batched GEMM must
+        // reproduce the dense logsumexp op to round-off.
         let (a, x, t, _) = sample(6, 9, 3, 41);
         let a_log = a.map(f64::ln);
         let x_log = x.map(f64::ln);
@@ -292,6 +293,86 @@ mod tests {
         let want = plain.update(&x_log, 1.0).clone();
         let got = stab.update(&x_log, 1.0).clone();
         assert!(got.allclose(&want, 1e-12));
+        let stats = stab.stab_stats().expect("nh>1 must dispatch the hybrid now");
+        assert_eq!(stats.absorb_triggers.len(), 3, "per-histogram trigger slots");
+    }
+
+    #[test]
+    fn multi_histogram_hybrid_matches_dense_across_reabsorptions() {
+        use crate::linalg::Stabilization;
+        // Vectorized hybrid vs. the dense logsumexp op on a wide-range
+        // block, driving the scalings through drifts that force both
+        // re-absorption tiers (reference moves within and beyond σ).
+        let mut rng = Rng::seed_from(47);
+        let (m, n, nh) = (9, 12, 4);
+        let a_log = Mat::rand_uniform(m, n, -300.0, 0.0, &mut rng);
+        let t: Vec<f64> = (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let be = NativeBackend::new(1);
+        let stab = Stabilization { absorb_threshold: 5.0, ..Stabilization::default() };
+        let mut dense = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(m, nh))
+            .unwrap();
+        let mut hybrid = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), Mat::zeros(m, nh), &stab)
+            .unwrap();
+        let mut base = 0.0;
+        for step in 0..6 {
+            // Common drift `base` (exercises the reference move) plus a
+            // per-histogram spread (exercises the shared support).
+            base -= 4.0 * step as f64;
+            let mut x_log = Mat::zeros(n, nh);
+            for j in 0..n {
+                for h in 0..nh {
+                    x_log[(j, h)] = base + rng.uniform_range(-2.0, 2.0) + h as f64;
+                }
+            }
+            let want = dense.update(&x_log, 1.0).clone();
+            let got = hybrid.update(&x_log, 1.0).clone();
+            for i in 0..m {
+                for h in 0..nh {
+                    assert!(
+                        (want[(i, h)] - got[(i, h)]).abs() < 1e-10,
+                        "step {step} ({i},{h}): {} vs {}",
+                        got[(i, h)],
+                        want[(i, h)]
+                    );
+                }
+            }
+        }
+        let stats = hybrid.stab_stats().unwrap();
+        assert!(stats.absorbs >= 1, "the drifting scalings must re-absorb");
+        assert!(
+            stats.absorb_triggers.iter().sum::<usize>() >= stats.absorbs,
+            "each absorb must record at least one triggering histogram"
+        );
+    }
+
+    #[test]
+    fn hybrid_capacity_overflow_falls_back_to_dense() {
+        use crate::linalg::Stabilization;
+        // τ beyond the representable drift capacity: the hybrid must
+        // degrade to the dense logsumexp (identical results, every
+        // update counted as non-linear) instead of producing inf/NaN.
+        let mut rng = Rng::seed_from(59);
+        let (m, n) = (6, 9);
+        let a_log = Mat::rand_uniform(m, n, -30.0, 0.0, &mut rng);
+        let t: Vec<f64> = (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let be = NativeBackend::new(1);
+        let stab = Stabilization { absorb_threshold: 800.0, ..Stabilization::default() };
+        let mut dense = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(m, 1))
+            .unwrap();
+        let mut hybrid = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), Mat::zeros(m, 1), &stab)
+            .unwrap();
+        let x_log = Mat::full(n, 1, -400.0);
+        let want = dense.update(&x_log, 1.0).clone();
+        let got = hybrid.update(&x_log, 1.0).clone();
+        assert!(got.allclose(&want, 1e-12));
+        assert!(got.as_slice().iter().all(|v| v.is_finite()));
+        let stats = hybrid.stab_stats().unwrap();
+        assert_eq!(stats.updates, 1);
+        assert_eq!(stats.absorbs, 1, "fallback products count as non-linear");
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! the small-ε path the AOT artifact grid does not cover.
 
 use super::backend::{BlockOp, ComputeBackend, StabStats, Target};
-use crate::linalg::{Csr, LogCsr, Mat, Stabilization};
+use crate::linalg::{AbsorbedLogCsr, Csr, LogCsr, Mat, Stabilization};
+use std::sync::Arc;
 
 /// In-place damped update: `u = α·t/q + (1−α)·u`.
 fn scale_divide_inplace(t: &[f64], t_stride: usize, q: &Mat, alpha: f64, u: &mut Mat) {
@@ -36,6 +37,16 @@ fn scale_divide_inplace(t: &[f64], t_stride: usize, q: &Mat, alpha: f64, u: &mut
 /// Measured in bench_kernels (n=1024): dense wins at density 0.31
 /// (s=0.9), CSR wins at 0.25 (s=1.0) — cutoff set between them.
 const CSR_DENSITY_CUTOFF: f64 = 0.27;
+
+/// Drift-capacity ceiling for the shared-support hybrid: the
+/// per-histogram corrections `exp(x − ḡ)` and the row sums they feed
+/// must stay inside f64's normal range (|exponent| ≲ 709, with headroom
+/// for the n-term sum and the support slack). A tuning or an
+/// inter-histogram dual spread that needs more capacity has no
+/// numerically safe shared support — the operator then falls back to
+/// the dense logsumexp permanently instead of silently producing
+/// inf/NaN iterates.
+const HYBRID_MAX_CAPACITY: f64 = 300.0;
 
 pub struct NativeBackend {
     threads: usize,
@@ -115,9 +126,10 @@ impl ComputeBackend for NativeBackend {
         }))
     }
 
-    /// Stabilized log-domain dispatch: absorption-hybrid for single
-    /// histograms, truncated sparse logsumexp when the block is sparse
-    /// enough, dense logsumexp otherwise.
+    /// Stabilized log-domain dispatch: the absorption-hybrid schedule
+    /// for any histogram count when enabled, the truncated sparse
+    /// logsumexp when the hybrid is off and the block is sparse enough,
+    /// dense logsumexp otherwise.
     fn log_block_op_stabilized(
         &self,
         a_log: &Mat,
@@ -125,14 +137,31 @@ impl ComputeBackend for NativeBackend {
         u0_log: Mat,
         stab: &Stabilization,
     ) -> anyhow::Result<Box<dyn BlockOp>> {
-        if u0_log.cols() == 1 && stab.hybrid_enabled() {
+        self.log_block_op_stabilized_seeded(a_log, None, t, u0_log, stab)
+    }
+
+    /// Seeded stabilized dispatch: a matching pre-built absorbed kernel
+    /// (the problem's per-(θ, τ) zero-reference cache entry) is shared
+    /// copy-on-write until the first re-absorption, so multi-solve
+    /// experiments truncate each kernel exactly once.
+    fn log_block_op_stabilized_seeded(
+        &self,
+        a_log: &Mat,
+        seed: Option<Arc<AbsorbedLogCsr>>,
+        t: Target<'_>,
+        u0_log: Mat,
+        stab: &Stabilization,
+    ) -> anyhow::Result<Box<dyn BlockOp>> {
+        if stab.hybrid_enabled() {
             anyhow::ensure!(u0_log.rows() == a_log.rows(), "state rows != block rows");
-            let (t_lin, log_t, _) = log_targets(t, a_log.rows(), 1)?;
+            let (t_lin, log_t, t_stride) = log_targets(t, a_log.rows(), u0_log.cols())?;
             return Ok(Box::new(HybridLogBlockOp::new(
                 a_log.clone(),
                 t_lin,
                 log_t,
+                t_stride,
                 u0_log,
+                seed,
                 stab,
                 self.threads,
             )));
@@ -350,143 +379,189 @@ impl BlockOp for NativeSparseLogBlockOp {
 }
 
 /// Absorption-hybrid log-domain operator (Schmitzer §3, the scaling
-/// counterpart of the paper's small-ε regime): the incoming log-scalings
-/// `x` are *absorbed* into the kernel —
-/// `K̃[i,j] = exp(log K[i,j] + g[j] − f[i])` with `g` the absorbed copy
-/// of `x` and `f[i] = max_j (log K[i,j] + g[j])` the row shift — and
-/// truncated at `θ` into a [`Csr`]. While `x` stays within
-/// `absorb_threshold` of `g`, the product is a plain sparse GEMV
-/// `q̃ = K̃ · exp(x − g)` with every factor well-scaled
-/// (`K̃ ∈ (e^θ, 1]`, `exp(x − g) ∈ [e^{−τ}, e^{τ}]`), and
-/// `log(K·x) = f + ln q̃` exactly. Only when the scalings drift past `τ`
-/// is the kernel re-absorbed + re-truncated (one O(m·n) rebuild — about
-/// the cost of a single dense logsumexp iteration).
+/// counterpart of the paper's small-ε regime), vectorized across `N`
+/// histograms over a **shared-support** [`AbsorbedLogCsr`]: one
+/// reference dual `ḡ` (the column-wise mean of the incoming
+/// log-scalings) is absorbed and truncated once, and iterations run as
+/// the batched sparse GEMM `q̃ = K̃ · exp(x − ḡ)` with per-histogram
+/// column corrections — `log(K·x) = f̄ + ln q̃` exactly, every factor
+/// well-scaled while each histogram's drift stays within the support's
+/// capacity. When a histogram drifts past the capacity the kernel is
+/// re-absorbed: a cheap `O(nnz)` reference move when the support is
+/// still valid (anchor shift ≤ σ, spread still covered), a full
+/// `O(m·n)` re-truncation otherwise.
 ///
 /// The state and every exchanged slice stay log-scalings, so federated
-/// protocols are oblivious to the schedule. Single-histogram only: with
-/// N histograms the absorbed kernel would need N copies (tracked on the
-/// ROADMAP); multi-histogram log solves take the sparse/dense logsumexp
-/// path instead.
+/// protocols are oblivious to the schedule.
 struct HybridLogBlockOp {
-    /// Dense log-kernel block, kept for rebuilds.
+    /// Dense log-kernel block, kept for full re-truncations.
     a_log: Mat,
     t_lin: Vec<f64>,
     log_t: Vec<f64>,
-    /// Log-scaling state `log u` (m×1).
+    t_stride: usize,
+    /// Log-scaling state `log u` (m×N).
     u: Mat,
-    /// Log-product buffer `log(A·x)` (m×1).
+    /// Log-product buffer `log(A·x)` (m×N).
     q: Mat,
-    /// Absorbed column log-scalings (length n).
-    g: Vec<f64>,
-    /// Row shifts `f[i] = max_j (a_log[i,j] + g[j])` (length m).
-    f: Vec<f64>,
-    /// Truncated absorbed linear kernel `exp(a_log + g − f)`.
-    k_abs: Csr,
-    /// Scratch `exp(x − g)` (n×1) and the linear product (m×1).
+    /// Shared-support absorbed kernel; a seeded op shares the problem's
+    /// cached zero-reference truncation copy-on-write until the first
+    /// re-absorption.
+    kernel: Arc<AbsorbedLogCsr>,
+    /// Scratch `exp(x − ḡ)` (n×N) and the linear product (m×N).
     ex: Mat,
     lin_q: Mat,
-    theta: f64,
+    /// Scratch: candidate reference duals (n) and per-histogram drift
+    /// (N) — the hot loop never allocates.
+    gref: Vec<f64>,
+    drift: Vec<f64>,
     tau: f64,
+    /// Set once a rebuild would need more drift capacity than f64 can
+    /// represent ([`HYBRID_MAX_CAPACITY`]); every product then runs the
+    /// dense logsumexp and counts as a non-linear iteration.
+    dense_fallback: bool,
     threads: usize,
     stats: StabStats,
 }
 
 impl HybridLogBlockOp {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         a_log: Mat,
         t_lin: Vec<f64>,
         log_t: Vec<f64>,
+        t_stride: usize,
         u0_log: Mat,
+        seed: Option<Arc<AbsorbedLogCsr>>,
         stab: &Stabilization,
         threads: usize,
     ) -> Self {
         let (m, n) = (a_log.rows(), a_log.cols());
-        let mut op = Self {
+        let nh = u0_log.cols();
+        let tau = stab.absorb_threshold;
+        let dense_fallback = tau > HYBRID_MAX_CAPACITY;
+        // A usable seed is the same block truncated with the same (θ, τ)
+        // tuning; anything else is rebuilt from the dense kernel (or
+        // skipped entirely when τ already forces the dense fallback).
+        let kernel = if dense_fallback {
+            Arc::new(AbsorbedLogCsr::from_dense_log(
+                &Mat::zeros(0, 0),
+                &[],
+                stab.truncation_theta,
+                0.0,
+                0.0,
+            ))
+        } else {
+            seed.filter(|k| {
+                k.rows() == m
+                    && k.cols() == n
+                    && k.theta() == stab.truncation_theta
+                    && k.sigma() == tau
+                    && k.covered() >= tau
+            })
+            .unwrap_or_else(|| {
+                Arc::new(AbsorbedLogCsr::from_dense_log(
+                    &a_log,
+                    &vec![0.0; n],
+                    stab.truncation_theta,
+                    tau,
+                    tau,
+                ))
+            })
+        };
+        Self {
             a_log,
             t_lin,
             log_t,
+            t_stride,
             u: u0_log,
-            q: Mat::zeros(m, 1),
-            g: vec![0.0; n],
-            f: vec![0.0; m],
-            k_abs: Csr::from_parts(m, n, vec![0; m + 1], Vec::new(), Vec::new()),
-            ex: Mat::zeros(n, 1),
-            lin_q: Mat::zeros(m, 1),
-            theta: stab.truncation_theta,
-            tau: stab.absorb_threshold,
+            q: Mat::zeros(m, nh),
+            kernel,
+            ex: Mat::zeros(n, nh),
+            lin_q: Mat::zeros(m, nh),
+            gref: vec![0.0; n],
+            drift: vec![0.0; nh],
+            tau,
+            dense_fallback,
             threads,
-            stats: StabStats::default(),
-        };
-        op.rebuild();
-        op
-    }
-
-    /// Re-absorb + re-truncate: recompute the row shifts against the
-    /// current `g` and rebuild the truncated absorbed kernel.
-    fn rebuild(&mut self) {
-        let (m, n) = (self.a_log.rows(), self.a_log.cols());
-        let mut row_ptr = Vec::with_capacity(m + 1);
-        let mut col_idx = Vec::new();
-        let mut vals = Vec::new();
-        row_ptr.push(0);
-        for i in 0..m {
-            let arow = self.a_log.row(i);
-            let mut mx = f64::NEG_INFINITY;
-            for j in 0..n {
-                let v = arow[j] + self.g[j];
-                if v > mx {
-                    mx = v;
-                }
-            }
-            self.f[i] = mx;
-            if mx > f64::NEG_INFINITY {
-                for j in 0..n {
-                    let s = arow[j] + self.g[j] - mx;
-                    if s >= self.theta {
-                        col_idx.push(j as u32);
-                        vals.push(s.exp());
-                    }
-                }
-            }
-            row_ptr.push(vals.len());
+            stats: StabStats { absorb_triggers: vec![0; nh], ..StabStats::default() },
         }
-        self.k_abs = Csr::from_parts(m, n, row_ptr, col_idx, vals);
     }
 
-    /// `q = log(A·x)` via the absorbed GEMV, re-absorbing first if the
-    /// scalings have drifted past `τ`. `count_absorb` is set only from
-    /// `update` so that `absorbs / updates` stays a true per-iteration
-    /// ratio — `matvec`/`marginal` may also re-absorb (a convergence
-    /// check with fresh scalings, a star-server product) but those are
-    /// not Sinkhorn iterations and must not skew `linear_fraction`.
+    /// `q = log(A·x)` via the batched absorbed GEMM, re-absorbing first
+    /// if any histogram has drifted past the support's capacity.
+    /// `count_absorb` is set from `update` and `matvec` (the latter is
+    /// the star server's per-iteration product) so that
+    /// `absorbs / updates` stays a true per-iteration ratio — `marginal`
+    /// may also re-absorb (a convergence check with fresh scalings) but
+    /// is not a Sinkhorn iteration and must not skew `linear_fraction`.
     fn product(&mut self, x_log: &Mat, count_absorb: bool) {
-        debug_assert_eq!(x_log.cols(), 1, "hybrid op is single-histogram");
-        let n = self.a_log.cols();
+        let (n, nh) = (self.a_log.cols(), self.u.cols());
         debug_assert_eq!(x_log.rows(), n);
-        let xs = x_log.as_slice();
-        let mut drift: f64 = 0.0;
-        for j in 0..n {
-            drift = drift.max((xs[j] - self.g[j]).abs());
-        }
-        if drift > self.tau {
-            self.g.copy_from_slice(xs);
-            self.rebuild();
+        debug_assert_eq!(x_log.cols(), nh);
+        if self.dense_fallback {
             if count_absorb {
                 self.stats.absorbs += 1;
             }
+            self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+            return;
         }
-        let exs = self.ex.as_mut_slice();
-        for (e, (&x, &g)) in exs.iter_mut().zip(xs.iter().zip(&self.g)) {
-            *e = (x - g).exp();
+        self.kernel.max_drift_into(x_log, &mut self.drift);
+        let covered = self.kernel.covered();
+        if self.drift.iter().any(|&d| d > covered) {
+            // New reference: the column-wise mean across histograms —
+            // it centers the per-histogram corrections, so the residual
+            // spread is the smallest symmetric drift bound.
+            let xs = x_log.as_slice();
+            let inv = 1.0 / nh as f64;
+            let mut spread: f64 = 0.0;
+            for j in 0..n {
+                let xrow = &xs[j * nh..(j + 1) * nh];
+                let mean = xrow.iter().sum::<f64>() * inv;
+                self.gref[j] = mean;
+                for &x in xrow {
+                    spread = spread.max((x - mean).abs());
+                }
+            }
+            // Capacity the rebuilt kernel must cover before the next
+            // re-absorption can trigger: the residual spread plus the
+            // per-histogram drift budget τ.
+            let needed = spread + self.tau;
+            if needed > HYBRID_MAX_CAPACITY || !needed.is_finite() {
+                // Inter-histogram dual spread beyond any representable
+                // shared support: degrade to the dense logsumexp for
+                // the rest of this operator's life.
+                self.dense_fallback = true;
+                if count_absorb {
+                    self.stats.absorbs += 1;
+                    for (t, &d) in self.stats.absorb_triggers.iter_mut().zip(&self.drift) {
+                        if d > covered {
+                            *t += 1;
+                        }
+                    }
+                }
+                self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+                return;
+            }
+            let k = Arc::make_mut(&mut self.kernel);
+            if needed <= k.covered() && k.anchor_shift(&self.gref) <= k.sigma() {
+                k.reabsorb(&self.gref);
+            } else {
+                k.retruncate(&self.a_log, &self.gref, needed);
+                if count_absorb {
+                    self.stats.rebuilds += 1;
+                }
+            }
+            if count_absorb {
+                self.stats.absorbs += 1;
+                for (t, &d) in self.stats.absorb_triggers.iter_mut().zip(&self.drift) {
+                    if d > covered {
+                        *t += 1;
+                    }
+                }
+            }
         }
-        self.k_abs.matmul_into(&self.ex, &mut self.lin_q, self.threads);
-        let qs = self.q.as_mut_slice();
-        // A zero product only happens on a fully masked row (f = −∞):
-        // kept entries are ≥ e^θ and the drift bound keeps exp(x − g)
-        // ≥ e^{−τ}, so no kept term can underflow.
-        for ((qv, &lq), &fi) in qs.iter_mut().zip(self.lin_q.as_slice()).zip(&self.f) {
-            *qv = if lq > 0.0 { fi + lq.ln() } else { f64::NEG_INFINITY };
-        }
+        self.kernel
+            .log_matmul_into(x_log, &mut self.ex, &mut self.lin_q, &mut self.q, self.threads);
     }
 }
 
@@ -500,34 +575,58 @@ impl BlockOp for HybridLogBlockOp {
     }
 
     fn hists(&self) -> usize {
-        1
+        self.u.cols()
     }
 
     fn update(&mut self, x_log: &Mat, alpha: f64) -> &Mat {
         self.product(x_log, true);
         self.stats.updates += 1;
+        let (m, nh) = (self.q.rows(), self.q.cols());
         let beta = 1.0 - alpha;
-        let us = self.u.as_mut_slice();
-        for ((uv, &lti), &qv) in us.iter_mut().zip(&self.log_t).zip(self.q.as_slice()) {
-            *uv = alpha * (lti - qv) + beta * *uv;
+        for i in 0..m {
+            let qrow = self.q.row(i);
+            let urow = self.u.row_mut(i);
+            if self.t_stride == 0 {
+                let lti = self.log_t[i];
+                for j in 0..nh {
+                    urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
+                }
+            } else {
+                let ltrow = &self.log_t[i * self.t_stride..(i + 1) * self.t_stride];
+                for j in 0..nh {
+                    urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
+                }
+            }
         }
         &self.u
     }
 
     fn matvec(&mut self, x_log: &Mat) -> &Mat {
-        self.product(x_log, false);
+        self.product(x_log, true);
+        self.stats.updates += 1;
         &self.q
     }
 
     fn marginal(&mut self, x_log: &Mat, u_log: &Mat) -> Vec<f64> {
         self.product(x_log, false);
-        let mut err = 0.0;
-        for ((&uv, &qv), &ti) in
-            u_log.as_slice().iter().zip(self.q.as_slice()).zip(&self.t_lin)
-        {
-            err += ((uv + qv).exp() - ti).abs();
+        let nh = self.q.cols();
+        let mut err = vec![0.0; nh];
+        for i in 0..self.q.rows() {
+            let qrow = self.q.row(i);
+            let urow = u_log.row(i);
+            if self.t_stride == 0 {
+                let ti = self.t_lin[i];
+                for h in 0..nh {
+                    err[h] += ((urow[h] + qrow[h]).exp() - ti).abs();
+                }
+            } else {
+                let trow = &self.t_lin[i * self.t_stride..(i + 1) * self.t_stride];
+                for h in 0..nh {
+                    err[h] += ((urow[h] + qrow[h]).exp() - trow[h]).abs();
+                }
+            }
         }
-        vec![err]
+        err
     }
 
     fn state(&self) -> &Mat {
@@ -541,7 +640,7 @@ impl BlockOp for HybridLogBlockOp {
     }
 
     fn stab_stats(&self) -> Option<StabStats> {
-        Some(self.stats)
+        Some(self.stats.clone())
     }
 }
 

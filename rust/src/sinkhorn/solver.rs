@@ -117,14 +117,19 @@ impl CentralizedSolver {
         let one = domain.one();
 
         // Log-domain runs go through the stabilized dispatch: the
-        // absorption-hybrid schedule for single histograms, the
-        // θ-truncated sparse logsumexp when the truncated density falls
-        // under the cutoff, dense logsumexp otherwise. The probe is a
-        // non-allocating scan; the CSR itself is built (and cached on
-        // the problem, shared across solves) only when sparse wins.
+        // absorption-hybrid schedule (any histogram count, seeded from
+        // the problem's cached zero-reference absorbed kernel) when
+        // enabled, the θ-truncated sparse logsumexp when the truncated
+        // density falls under the cutoff, dense logsumexp otherwise.
+        // Probes are non-allocating scans; sparse/absorbed kernels are
+        // built (and cached on the problem, shared across solves) only
+        // when their path wins.
+        let use_hybrid = domain == Domain::Log
+            && self.backend.supports_log()
+            && self.stab.hybrid_enabled();
         let use_sparse = domain == Domain::Log
+            && !use_hybrid
             && self.backend.supports_sparse_log()
-            && !(nh == 1 && self.stab.hybrid_enabled())
             && self.stab.sparse_density_cutoff > 0.0
             && crate::linalg::LogCsr::density_of(p.log_kernel(), self.stab.truncation_theta)
                 < self.stab.sparse_density_cutoff;
@@ -133,7 +138,28 @@ impl CentralizedSolver {
         // v-update operator: A = Kᵀ, t = b (per-histogram matrix). The
         // transposes come from the problem's shared caches, so repeated
         // solves on one problem build each exactly once.
-        let (mut u_op, mut v_op) = if use_sparse {
+        let (mut u_op, mut v_op) = if use_hybrid {
+            (
+                self.backend
+                    .log_block_op_stabilized_seeded(
+                        p.log_kernel(),
+                        Some(p.absorbed_log_kernel(&self.stab)),
+                        Target::Vec(&p.a),
+                        Mat::full(n, nh, one),
+                        &self.stab,
+                    )
+                    .expect("u-op"),
+                self.backend
+                    .log_block_op_stabilized_seeded(
+                        p.log_kernel_t(),
+                        Some(p.absorbed_log_kernel_t(&self.stab)),
+                        Target::Mat(&p.b),
+                        Mat::full(n, nh, one),
+                        &self.stab,
+                    )
+                    .expect("v-op"),
+            )
+        } else if use_sparse {
             let k = p.sparse_log_kernel(self.stab.truncation_theta);
             let kt = p.sparse_log_kernel_t(self.stab.truncation_theta);
             (

@@ -1,6 +1,6 @@
 //! Problem generator: marginals, cost families, sparsity, conditioning.
 
-use crate::linalg::{Domain, LogCsr, Mat};
+use crate::linalg::{AbsorbedLogCsr, Domain, LogCsr, Mat, Stabilization};
 use crate::rng::Rng;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -206,6 +206,13 @@ pub struct Problem {
     /// the dense caches.
     sparse_log: Arc<Mutex<BTreeMap<u64, Arc<LogCsr>>>>,
     sparse_log_t: Arc<Mutex<BTreeMap<u64, Arc<LogCsr>>>>,
+    /// Zero-reference absorbed kernels for the hybrid schedule, keyed by
+    /// the (θ, τ) tuning pair (bit patterns — both come from config
+    /// knobs). Hybrid operators start from the shared support and
+    /// copy-on-write at their first re-absorption, so multi-solve
+    /// experiments pay each initial truncation exactly once.
+    absorbed_log: Arc<Mutex<BTreeMap<(u64, u64), Arc<AbsorbedLogCsr>>>>,
+    absorbed_log_t: Arc<Mutex<BTreeMap<(u64, u64), Arc<AbsorbedLogCsr>>>>,
 }
 
 impl Problem {
@@ -267,6 +274,44 @@ impl Problem {
     /// number the runtime's sparse dispatch cutoff is compared against.
     pub fn sparse_log_density(&self, theta: f64) -> f64 {
         self.sparse_log_kernel(theta).density()
+    }
+
+    /// Zero-reference absorbed kernel for the hybrid schedule at the
+    /// given (θ, τ) tuning (built on first use, then cached and shared
+    /// across clones). Seeding hybrid operators from here keeps the
+    /// initial `O(n²)` truncation to one per (problem, tuning) pair.
+    pub fn absorbed_log_kernel(&self, stab: &Stabilization) -> Arc<AbsorbedLogCsr> {
+        Self::absorbed_entry(&self.absorbed_log, self.log_kernel(), stab)
+    }
+
+    /// Cached zero-reference absorbed transpose (the v-update seed).
+    /// Built from the dense transpose, not by transposing the absorbed
+    /// kernel: absorption shifts rows relative to *its own* product
+    /// axis.
+    pub fn absorbed_log_kernel_t(&self, stab: &Stabilization) -> Arc<AbsorbedLogCsr> {
+        Self::absorbed_entry(&self.absorbed_log_t, self.log_kernel_t(), stab)
+    }
+
+    fn absorbed_entry(
+        cache: &Mutex<BTreeMap<(u64, u64), Arc<AbsorbedLogCsr>>>,
+        a_log: &Mat,
+        stab: &Stabilization,
+    ) -> Arc<AbsorbedLogCsr> {
+        let key = (stab.truncation_theta.to_bits(), stab.absorb_threshold.to_bits());
+        let mut cache = cache.lock().expect("absorbed log cache");
+        cache
+            .entry(key)
+            .or_insert_with(|| {
+                let tau = stab.absorb_threshold;
+                Arc::new(AbsorbedLogCsr::from_dense_log(
+                    a_log,
+                    &vec![0.0; a_log.cols()],
+                    stab.truncation_theta,
+                    tau,
+                    tau,
+                ))
+            })
+            .clone()
     }
 
     /// The kernel in the representation `domain` expects.
@@ -342,6 +387,8 @@ impl Problem {
             log_kernel_t: Arc::new(OnceLock::new()),
             sparse_log: Arc::new(Mutex::new(BTreeMap::new())),
             sparse_log_t: Arc::new(Mutex::new(BTreeMap::new())),
+            absorbed_log: Arc::new(Mutex::new(BTreeMap::new())),
+            absorbed_log_t: Arc::new(Mutex::new(BTreeMap::new())),
         }
     }
 }

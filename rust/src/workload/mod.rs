@@ -14,11 +14,12 @@
 //! * `N` target histograms (`b ∈ R^{n×N}`, Cuturi vectorization §IV-B3).
 //!
 //! A [`Problem`] stores the cost matrix and materializes `K`, `log K`,
-//! both transposes, and θ-truncated sparse log kernels (keyed per
-//! threshold, with a density report) lazily — cached, shared across
-//! clones — so small-ε workloads never build an underflowed linear
-//! kernel unless a linear solver asks for one, and the sparse engine
-//! truncates each kernel exactly once.
+//! both transposes, θ-truncated sparse log kernels (keyed per
+//! threshold, with a density report), and zero-reference *absorbed*
+//! kernels for the hybrid schedule (keyed per (θ, τ) tuning) lazily —
+//! cached, shared across clones — so small-ε workloads never build an
+//! underflowed linear kernel unless a linear solver asks for one, and
+//! the stabilized engines truncate each kernel exactly once.
 //!
 //! [`Partition`] slices a problem across `c` clients exactly as the
 //! paper's Fig. 1: client `j` owns `a_j, b_j`, row block `K_j` and the
@@ -132,6 +133,28 @@ mod tests {
         // A different θ is a different cache entry.
         let loose = p.sparse_log_kernel(f64::NEG_INFINITY);
         assert_eq!(loose.nnz(), 32 * 32);
+    }
+
+    #[test]
+    fn absorbed_kernel_cache_is_keyed_by_tuning() {
+        use crate::linalg::Stabilization;
+        use std::sync::Arc;
+        let p = ProblemSpec::new(24).with_eps(0.01).build(17);
+        let stab = Stabilization::default();
+        let k1 = p.absorbed_log_kernel(&stab);
+        let k2 = p.absorbed_log_kernel(&stab);
+        assert!(Arc::ptr_eq(&k1, &k2), "cache must return the same allocation");
+        assert_eq!(k1.rows(), 24);
+        assert_eq!(k1.theta(), stab.truncation_theta);
+        assert_eq!(k1.covered(), stab.absorb_threshold);
+        // Clones see the already-built truncation; the transpose is a
+        // separate entry; a different τ is a different key.
+        let q = p.clone();
+        assert!(Arc::ptr_eq(&q.absorbed_log_kernel(&stab), &k1));
+        let kt = p.absorbed_log_kernel_t(&stab);
+        assert_eq!(kt.rows(), 24);
+        let other = Stabilization { absorb_threshold: 5.0, ..stab };
+        assert!(!Arc::ptr_eq(&p.absorbed_log_kernel(&other), &k1));
     }
 
     #[test]

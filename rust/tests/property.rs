@@ -290,13 +290,15 @@ fn prop_sparse_log_lse_matches_dense() {
 /// `max C/ε` genuinely grows as ε shrinks. (`ProblemSpec` scales its
 /// cost spread *with* ε by design, which keeps conditioning ε-invariant
 /// — useless for exercising the small-ε stabilized path.)
-fn fixed_cost_problem(n: usize, eps: f64, seed: u64) -> Problem {
+fn fixed_cost_problem_hists(n: usize, nh: usize, eps: f64, seed: u64) -> Problem {
     let mut rng = Rng::seed_from(seed);
     let a = rng.dirichlet(n, 1.0);
-    let bcol = rng.dirichlet(n, 1.0);
-    let mut b = Mat::zeros(n, 1);
-    for i in 0..n {
-        b[(i, 0)] = bcol[i];
+    let mut b = Mat::zeros(n, nh);
+    for h in 0..nh {
+        let bcol = rng.dirichlet(n, 1.0);
+        for i in 0..n {
+            b[(i, h)] = bcol[i];
+        }
     }
     let mut cost = Mat::zeros(n, n);
     for i in 0..n {
@@ -307,6 +309,10 @@ fn fixed_cost_problem(n: usize, eps: f64, seed: u64) -> Problem {
         }
     }
     Problem::from_parts(a, b, cost, eps)
+}
+
+fn fixed_cost_problem(n: usize, eps: f64, seed: u64) -> Problem {
+    fixed_cost_problem_hists(n, 1, eps, seed)
 }
 
 /// Absorption-hybrid iterates ≡ pure log-domain iterates: both schedules
@@ -385,6 +391,158 @@ fn hybrid_small_eps_solve_is_mostly_linear_and_accurate() {
         stats.absorbs,
         stats.updates
     );
+}
+
+/// Multi-histogram absorption-hybrid iterates ≡ pure log-domain
+/// iterates: for N ∈ {2, 8} and ε ∈ {0.01, 0.005} both schedules run
+/// exactly 60 undamped iterations on a fixed-cost problem and must land
+/// on the same log-scalings to 1e-10 — per histogram, both against the
+/// vectorized pure solve and against N separate single-histogram pure
+/// solves (the shared-support batched GEMM is a pure refactoring of N
+/// independent logsumexp recursions).
+#[test]
+fn prop_multihist_hybrid_iterates_match_pure_log() {
+    let native = make_backend(BackendKind::Native, "", 1).unwrap();
+    let pure =
+        CentralizedSolver::new(native.clone()).with_stabilization(Stabilization::disabled());
+    let hybrid = CentralizedSolver::new(native);
+    let pol =
+        StopPolicy { threshold: 0.0, max_iters: 60, check_every: 50, ..Default::default() };
+    for &nh in &[2usize, 8] {
+        for (case, &eps) in [0.01f64, 0.005].iter().enumerate() {
+            let p = fixed_cost_problem_hists(
+                32,
+                nh,
+                eps,
+                child_seed(0xAB51, (nh * 10 + case) as u64),
+            );
+            let o_pure = pure.solve_in(&p, pol, 1.0, Domain::Log);
+            let o_hyb = hybrid.solve_in(&p, pol, 1.0, Domain::Log);
+            assert_eq!(o_pure.iterations, 60);
+            assert_eq!(o_hyb.iterations, 60);
+            let stats = o_hyb.stab.clone().expect("hybrid must report stats");
+            assert_eq!(stats.updates, 120, "two ops x 60 iterations");
+            assert_eq!(stats.absorb_triggers.len(), nh, "per-histogram trigger slots");
+            for h in 0..nh {
+                for i in 0..p.n {
+                    let (du, hu) = (o_pure.state.u[(i, h)], o_hyb.state.u[(i, h)]);
+                    assert!(
+                        (du - hu).abs() < 1e-10,
+                        "N={nh} eps {eps} u[{i},{h}]: hybrid {hu} vs pure {du}"
+                    );
+                    let (dv, hv) = (o_pure.state.v[(i, h)], o_hyb.state.v[(i, h)]);
+                    assert!(
+                        (dv - hv).abs() < 1e-10,
+                        "N={nh} eps {eps} v[{i},{h}]: hybrid {hv} vs pure {dv}"
+                    );
+                }
+            }
+            // Per-histogram cross-check: each column of the vectorized
+            // hybrid matches a standalone single-histogram pure solve.
+            for h in 0..nh {
+                let mut bh = Mat::zeros(p.n, 1);
+                for i in 0..p.n {
+                    bh[(i, 0)] = p.b[(i, h)];
+                }
+                let single = Problem::from_parts(p.a.clone(), bh, p.cost.clone(), p.eps);
+                let o_single = pure.solve_in(&single, pol, 1.0, Domain::Log);
+                for i in 0..p.n {
+                    assert!(
+                        (o_single.state.u[(i, 0)] - o_hyb.state.u[(i, h)]).abs() < 1e-10,
+                        "N={nh} eps {eps} hist {h} vs standalone solve, row {i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance bar for the vectorized hybrid engine: an N = 8,
+/// ε = 0.005 solve (max C/ε = 200) converges, matches the pure
+/// log-domain solution's marginal errors within 1e-8 on every
+/// histogram, and spends ≥ 70% of its iterations on the batched linear
+/// GEMM path. (CI drives the n = 512 version of this bar through the
+/// `solve --hists 8` smoke step.)
+#[test]
+fn multihist_small_eps_solve_is_mostly_linear_and_accurate() {
+    let native = make_backend(BackendKind::Native, "", 1).unwrap();
+    let pure =
+        CentralizedSolver::new(native.clone()).with_stabilization(Stabilization::disabled());
+    let hybrid = CentralizedSolver::new(native);
+    let p = fixed_cost_problem_hists(64, 8, 0.005, 0xFEED6);
+    let pol = StopPolicy {
+        threshold: 1e-10,
+        max_iters: 200_000,
+        check_every: 10,
+        ..Default::default()
+    };
+    let o_pure = pure.solve_in(&p, pol, 1.0, Domain::Log);
+    let o_hyb = hybrid.solve_in(&p, pol, 1.0, Domain::Log);
+    assert!(o_pure.converged(), "pure log solve: {:?}", o_pure.stop);
+    assert!(o_hyb.converged(), "hybrid solve: {:?}", o_hyb.stop);
+    for h in 0..8 {
+        let (ea_p, eb_p) = full_marginal_errors(&p, &o_pure.state, h);
+        let (ea_h, eb_h) = full_marginal_errors(&p, &o_hyb.state, h);
+        assert!(
+            (ea_p - ea_h).abs() < 1e-8 && (eb_p - eb_h).abs() < 1e-8,
+            "hist {h} marginal errors diverged: pure ({ea_p:.3e}, {eb_p:.3e}) \
+             hybrid ({ea_h:.3e}, {eb_h:.3e})"
+        );
+    }
+    let stats = o_hyb.stab.expect("hybrid stats");
+    assert!(stats.updates >= 2 * o_hyb.iterations);
+    assert!(
+        stats.linear_fraction() >= 0.7,
+        "only {:.1}% of iterations stayed on the batched GEMM path \
+         ({} absorbs / {} updates)",
+        100.0 * stats.linear_fraction(),
+        stats.absorbs,
+        stats.updates
+    );
+    assert_eq!(stats.absorb_triggers.len(), 8);
+    assert!(
+        stats.absorb_triggers.iter().sum::<usize>() >= stats.absorbs,
+        "every absorb must record its triggering histogram(s)"
+    );
+}
+
+/// Forced per-histogram re-absorption: a tiny τ makes single histograms
+/// trip the drift bound constantly; the schedule must stay a pure
+/// refactoring of the logsumexp recursion (iterates within 1e-10 of the
+/// dense path) while re-absorbing nearly every iteration.
+#[test]
+fn multihist_hybrid_survives_forced_reabsorption() {
+    let native = make_backend(BackendKind::Native, "", 1).unwrap();
+    let pure =
+        CentralizedSolver::new(native.clone()).with_stabilization(Stabilization::disabled());
+    let tight = Stabilization { absorb_threshold: 0.05, ..Stabilization::default() };
+    let hybrid = CentralizedSolver::new(native).with_stabilization(tight);
+    let p = fixed_cost_problem_hists(24, 4, 0.01, 0xF0CE);
+    let pol =
+        StopPolicy { threshold: 0.0, max_iters: 40, check_every: 50, ..Default::default() };
+    let o_pure = pure.solve_in(&p, pol, 1.0, Domain::Log);
+    let o_hyb = hybrid.solve_in(&p, pol, 1.0, Domain::Log);
+    let stats = o_hyb.stab.clone().expect("hybrid stats");
+    assert!(
+        stats.absorbs > o_hyb.iterations,
+        "tau = 0.05 must force re-absorption on most updates ({} absorbs / {} iters)",
+        stats.absorbs,
+        o_hyb.iterations
+    );
+    assert!(stats.rebuilds >= 1, "large early dual moves must re-truncate");
+    assert!(
+        stats.absorb_triggers.iter().all(|&t| t > 0),
+        "every histogram must trip the tiny drift bound: {:?}",
+        stats.absorb_triggers
+    );
+    for h in 0..4 {
+        for i in 0..p.n {
+            assert!(
+                (o_pure.state.u[(i, h)] - o_hyb.state.u[(i, h)]).abs() < 1e-10,
+                "u[{i},{h}] diverged under forced re-absorption"
+            );
+        }
+    }
 }
 
 /// Sparsity monotonicity: higher s never produces a denser kernel.

@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the BENCH_*.json perf-trajectory documents.
+
+Compares a freshly emitted ``BENCH_kernels.json`` (``cargo bench --bench
+bench_kernels``; CI runs it with ``FEDSINK_BENCH_QUICK=1`` for a
+deterministic pinned case list) against the committed
+``BENCH_baseline.json`` and exits non-zero when any hot kernel regressed
+by more than ``--threshold`` (default 30%).
+
+Semantics:
+
+* cases are matched by name; the compared metric is ``min_ms`` by
+  default (the outlier-robust best-case timing — the conventional
+  perf-gate statistic);
+* a case regresses when ``fresh > baseline * (1 + threshold)`` AND the
+  absolute slowdown exceeds ``--min-ms`` (default 0.05 ms), so
+  micro-cases lost in timer noise cannot flip the gate;
+* cases only present on one side are reported but do not fail the gate
+  (renames and new benches require an intentional baseline refresh, not
+  a red CI);
+* a missing baseline file is the bootstrap state: the gate passes with a
+  notice telling you how to seed it.
+
+Refresh flow (intentional): download the ``BENCH_kernels`` artifact from
+a green main run (or run the quick bench locally) and commit it as
+``BENCH_baseline.json`` — or run with ``--write-baseline`` locally.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import shutil
+import sys
+
+
+def load_cases(path):
+    """Return {name: {metric: value}} from a BENCH_*.json document."""
+    with open(path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    cases = {}
+    for case in doc.get("cases", []):
+        name = case.get("name")
+        if isinstance(name, str):
+            cases[name] = case
+    return cases
+
+
+def diff(baseline, fresh, threshold, metric, min_ms, only=None):
+    """Compare case maps; returns (regressions, improvements, notes).
+
+    Each regression/improvement is (name, base_value, fresh_value,
+    ratio). Notes are human-readable remarks about skipped/unmatched
+    cases.
+    """
+    pattern = re.compile(only) if only else None
+    regressions, improvements, notes = [], [], []
+    for name in sorted(set(baseline) | set(fresh)):
+        if pattern and not pattern.search(name):
+            continue
+        if name not in fresh:
+            notes.append(f"case removed (not in fresh run): {name}")
+            continue
+        if name not in baseline:
+            notes.append(f"new case (not in baseline): {name}")
+            continue
+        base = baseline[name].get(metric)
+        new = fresh[name].get(metric)
+        if not isinstance(base, (int, float)) or not isinstance(new, (int, float)):
+            notes.append(f"case lacks metric {metric!r}: {name}")
+            continue
+        if base <= 0.0:
+            notes.append(f"non-positive baseline timing, skipped: {name}")
+            continue
+        ratio = new / base
+        if ratio > 1.0 + threshold and (new - base) > min_ms:
+            regressions.append((name, base, new, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, base, new, ratio))
+    return regressions, improvements, notes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed BENCH_baseline.json")
+    ap.add_argument("--fresh", required=True, help="freshly emitted BENCH_kernels.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.30,
+        help="relative slowdown that fails the gate (0.30 = 30%%)",
+    )
+    ap.add_argument(
+        "--metric",
+        default="min_ms",
+        choices=["min_ms", "median_ms", "mean_ms"],
+        help="which timing statistic to compare",
+    )
+    ap.add_argument(
+        "--min-ms",
+        type=float,
+        default=0.05,
+        help="ignore regressions whose absolute slowdown is below this (timer noise)",
+    )
+    ap.add_argument("--only", default=None, help="regex restricting the compared case names")
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="copy the fresh document over the baseline path and exit (local refresh)",
+    )
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.fresh):
+        print(f"error: fresh bench document not found: {args.fresh}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        shutil.copyfile(args.fresh, args.baseline)
+        print(f"baseline refreshed: {args.fresh} -> {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(
+            f"no committed baseline at {args.baseline} — bootstrap pass.\n"
+            f"Seed it from a green run: commit the fresh {args.fresh} as the baseline\n"
+            f"(or rerun with --write-baseline)."
+        )
+        return 0
+
+    baseline = load_cases(args.baseline)
+    fresh = load_cases(args.fresh)
+    regressions, improvements, notes = diff(
+        baseline, fresh, args.threshold, args.metric, args.min_ms, args.only
+    )
+
+    for note in notes:
+        print(f"note: {note}")
+    for name, base, new, ratio in improvements:
+        print(f"improved  {name}: {base:.4f} -> {new:.4f} ms ({ratio:.2f}x)")
+    for name, base, new, ratio in regressions:
+        print(f"REGRESSED {name}: {base:.4f} -> {new:.4f} ms ({ratio:.2f}x)")
+
+    compared = len(set(baseline) & set(fresh))
+    print(
+        f"compared {compared} case(s) on {args.metric}: "
+        f"{len(regressions)} regression(s), {len(improvements)} improvement(s)"
+    )
+    if regressions:
+        print(
+            f"FAIL: hot kernel(s) regressed > {args.threshold:.0%} vs {args.baseline}. "
+            f"If intentional, refresh the baseline (see tools/bench_diff.py docstring).",
+            file=sys.stderr,
+        )
+        return 1
+    print("perf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
