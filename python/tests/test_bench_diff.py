@@ -112,3 +112,60 @@ def test_write_baseline_refreshes(tmp_path):
     assert refreshed["cases"][0]["min_ms"] == 2.0
     # And a subsequent identical run passes the gate.
     assert run_gate(tmp_path, None, fresh).returncode == 0
+
+
+def noted(cases):
+    """Like doc(), but each value is (min_ms, note-or-None)."""
+    return {
+        "cases": [
+            {"name": n, "reps": 3, "min_ms": v}
+            | ({"note": note} if note else {})
+            for n, (v, note) in cases.items()
+        ]
+    }
+
+
+def test_note_matches_renamed_cases(tmp_path):
+    # The same stable note on both sides: the rename is still gated.
+    base = noted({"old display name": (1.0, "fleet-partial-move-n512")})
+    fresh = noted({"new display name": (2.0, "fleet-partial-move-n512")})
+    proc = run_gate(tmp_path, base, fresh)
+    assert proc.returncode == 1
+    assert "matched by note" in proc.stdout
+    assert "REGRESSED new display name" in proc.stdout
+    # Within threshold, the rename is a note, not a failure.
+    fresh_ok = noted({"new display name": (1.1, "fleet-partial-move-n512")})
+    proc = run_gate(tmp_path, base, fresh_ok)
+    assert proc.returncode == 0, proc.stderr
+    assert "matched by note" in proc.stdout
+
+
+def test_duplicate_notes_do_not_match(tmp_path):
+    # A note that repeats on one side is ambiguous — fall back to the
+    # plain removed/new reporting instead of guessing.
+    base = noted({"a": (1.0, "dup"), "b": (1.0, "dup")})
+    fresh = noted({"c": (9.0, "dup")})
+    proc = run_gate(tmp_path, base, fresh)
+    assert proc.returncode == 0, proc.stderr
+    assert "case removed" in proc.stdout
+    assert "new case" in proc.stdout
+
+
+def test_write_baseline_carries_notes(tmp_path):
+    # Hand-annotated baseline notes survive a --write-baseline refresh
+    # when the fresh run does not emit them itself.
+    base = noted({"k": (1.0, "stable-identity"), "plain": (2.0, None)})
+    fresh = doc({"k": 1.5, "plain": 2.0})
+    proc = run_gate(tmp_path, base, fresh, "--write-baseline")
+    assert proc.returncode == 0, proc.stderr
+    refreshed = {
+        c["name"]: c for c in json.loads((tmp_path / "baseline.json").read_text())["cases"]
+    }
+    assert refreshed["k"]["note"] == "stable-identity"
+    assert refreshed["k"]["min_ms"] == 1.5
+    assert "note" not in refreshed["plain"]
+    # A fresh-side note wins over the old baseline's.
+    fresh2 = noted({"k": (1.6, "renamed-identity")})
+    assert run_gate(tmp_path, base, fresh2, "--write-baseline").returncode == 0
+    refreshed = json.loads((tmp_path / "baseline.json").read_text())
+    assert refreshed["cases"][0]["note"] == "renamed-identity"

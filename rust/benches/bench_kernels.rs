@@ -146,6 +146,33 @@ fn main() {
         );
     }
 
+    section("fleet absorption tiers: partial reference move vs full retruncation");
+    // The two costs a fleet-synchronized absorb command arbitrates per
+    // node: the O(nnz) reference move the shared anchor usually allows
+    // vs the O(m·n) rebuild a drifted anchor forces. These cases carry
+    // stable `note` identities so the perf gate keeps matching them if
+    // the display names are ever reworded (tools/bench_diff.py falls
+    // back to note-based matching and --write-baseline preserves notes).
+    let fleet_shapes: &[usize] = if quick { &[512] } else { &[512, 1024] };
+    for &n in fleet_shapes {
+        let mut rng = Rng::seed_from(child_seed(0xB_0006, n as u64));
+        let a_log = masked_log_kernel(n, 0.9, &mut rng);
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], -60.0, 15.0, 15.0);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-5.0, 5.0)).collect();
+        let mut partial = k.clone();
+        baseline.push(
+            b.run(&format!("fleet partial-move n={n}"), || partial.reabsorb(&gref))
+                .with_note(&format!("fleet-partial-move-n{n}")),
+        );
+        let mut full = k.clone();
+        baseline.push(
+            b.run(&format!("fleet full-retruncate n={n}"), || {
+                full.retruncate(&a_log, &gref, 15.0)
+            })
+            .with_note(&format!("fleet-full-retruncate-n{n}")),
+        );
+    }
+
     if let Err(e) = write_baseline("BENCH_kernels.json", &baseline) {
         eprintln!("could not write BENCH_kernels.json: {e}");
     }

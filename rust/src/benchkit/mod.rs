@@ -13,9 +13,21 @@ pub struct BenchResult {
     pub name: String,
     pub reps: usize,
     pub secs: Summary,
+    /// Stable identity annotation carried into the `BENCH_*.json`
+    /// document. Display names encode parameters and get reworded;
+    /// `tools/bench_diff.py` falls back to matching baseline↔fresh
+    /// cases by note, so annotated cases stay comparable across
+    /// renames (and `--write-baseline` preserves hand-added notes).
+    pub note: Option<String>,
 }
 
 impl BenchResult {
+    /// Attach a stable identity note (builder style).
+    pub fn with_note(mut self, note: &str) -> Self {
+        self.note = Some(note.to_string());
+        self
+    }
+
     pub fn line(&self) -> String {
         format!(
             "{:<56} reps={:<3} mean={:>10.4}ms median={:>10.4}ms std={:>8.4}ms min={:>10.4}ms",
@@ -80,6 +92,7 @@ impl Bench {
             name: name.to_string(),
             reps: times.len(),
             secs: Summary::of(&times),
+            note: None,
         };
         println!("{}", res.line());
         res
@@ -103,14 +116,18 @@ pub fn results_json(results: &[BenchResult]) -> crate::jsonio::Json {
                 results
                     .iter()
                     .map(|r| {
-                        Json::obj(vec![
+                        let mut fields = vec![
                             ("name", r.name.as_str().into()),
                             ("reps", r.reps.into()),
                             ("mean_ms", (r.secs.mean * 1e3).into()),
                             ("median_ms", (r.secs.median * 1e3).into()),
                             ("std_ms", (r.secs.std * 1e3).into()),
                             ("min_ms", (r.secs.min * 1e3).into()),
-                        ])
+                        ];
+                        if let Some(note) = &r.note {
+                            fields.push(("note", note.as_str().into()));
+                        }
+                        Json::obj(fields)
                     })
                     .collect(),
             ),

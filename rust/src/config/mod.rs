@@ -175,6 +175,16 @@ pub struct SolveConfig {
     pub net: crate::net::LatencyModel,
 }
 
+impl SolveConfig {
+    /// The effective bounded-delay window of the async protocols: the
+    /// configured `max_staleness`, floored at 1 so a zero setting cannot
+    /// deadlock the wait loops. Single source of truth for the three
+    /// async wait/gate sites (a2a clients, star server, star clients).
+    pub fn staleness_bound(&self) -> u64 {
+        self.max_staleness.max(1)
+    }
+}
+
 impl Default for SolveConfig {
     fn default() -> Self {
         Self {

@@ -21,11 +21,12 @@
 //! estimate — or gives up at the iteration cap / timeout. A final
 //! consistent exchange then assembles identical `u`, `v` everywhere.
 
+use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{allgather, Endpoint, TagKind};
-use crate::runtime::{StabStats, Target};
+use crate::runtime::{BlockOp, StabStats, Target};
 use crate::sinkhorn::StopReason;
 
 /// The async protocol reuses one tag per kind for the whole run; rounds
@@ -34,6 +35,32 @@ use crate::sinkhorn::StopReason;
 const ASYNC_TAG: u64 = 0;
 /// Control tag announcing "this node stopped".
 const DONE_TAG: u64 = 1;
+
+/// Fleet-absorption sub-tags on [`TagKind::Gref`]: slice probes flow to
+/// rank 0 (the absorption coordinator), reference-dual commands flow
+/// back — one channel per product space (the u-ops' reference lives in
+/// v-space and vice versa). All latest-wins, like the scaling traffic.
+const FLEET_PROBE_U: u64 = 0;
+const FLEET_PROBE_V: u64 = 1;
+const FLEET_CMD_U: u64 = 2;
+const FLEET_CMD_V: u64 = 3;
+
+/// Rank 0's per-channel fleet-coordination state.
+struct FleetCoord {
+    /// Latest probe payload per node (rank 0's own at index 0).
+    probes: Vec<Option<Vec<f64>>>,
+    /// Issued-command count. A probe stamped with an older seq measured
+    /// drift against a superseded reference and is held back until the
+    /// node reports post-command state — this is what prevents a
+    /// command storm from stale probes racing the broadcast.
+    seq: u64,
+}
+
+impl FleetCoord {
+    fn new(c: usize) -> Self {
+        Self { probes: vec![None; c], seq: 0 }
+    }
+}
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
     super::runner::spawn_nodes(ctx.cfg.clients, |id| client(ctx, id))
@@ -51,7 +78,7 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
     let c = ctx.cfg.clients;
     let alpha = ctx.cfg.alpha;
-    let bound = ctx.cfg.max_staleness.max(1);
+    let bound = ctx.cfg.staleness_bound();
     let ep = ctx.net.endpoint(id);
     let clock = Clock::new();
     let mut timer = SplitTimer::new();
@@ -90,6 +117,19 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         .map(|_| PeerView { last_iter: 0, done: false })
         .collect();
 
+    // Fleet-synchronized absorption (`--fleet-absorb`, log-domain hybrid
+    // runs): rank 0 merges the latest slice probes and broadcasts
+    // reference-dual commands; everyone else applies the freshest
+    // command before using an operator. Between commands nobody
+    // re-absorbs on their own — the emergency drift guard inside each
+    // operator covers command latency, so correctness never depends on
+    // delivery timing.
+    let fleet = ctx.fleet_on();
+    let tau = ctx.stab.absorb_threshold;
+    let mut coord_u = FleetCoord::new(c);
+    let mut coord_v = FleetCoord::new(c);
+    let (mut applied_u, mut applied_v) = (0u64, 0u64);
+
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;
     let mut final_err = f64::INFINITY;
@@ -114,6 +154,49 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 drain(&ep, ctx, id, c, k64, &mut peers, &mut u_full, &mut v_full, m);
             }
         });
+
+        // Fleet absorption housekeeping on the freshest drained state:
+        // rank 0 coordinates (merge probes → maybe command + absorb),
+        // everyone else applies the freshest commands before the ops
+        // run their products below.
+        if fleet {
+            if id == 0 {
+                let any_done = (1..c).any(|p| peers[p].done);
+                coordinate(
+                    &mut coord_u,
+                    &ep,
+                    c,
+                    FLEET_PROBE_U,
+                    FLEET_CMD_U,
+                    &mut *u_op,
+                    &v_full,
+                    m,
+                    nh,
+                    tau,
+                    any_done,
+                    k64,
+                    &mut timer,
+                );
+                coordinate(
+                    &mut coord_v,
+                    &ep,
+                    c,
+                    FLEET_PROBE_V,
+                    FLEET_CMD_V,
+                    &mut *v_op,
+                    &u_full,
+                    m,
+                    nh,
+                    tau,
+                    any_done,
+                    k64,
+                    &mut timer,
+                );
+            } else {
+                apply_fleet_command(&ep, &mut *u_op, FLEET_CMD_U, &mut applied_u, &mut timer);
+                apply_fleet_command(&ep, &mut *v_op, FLEET_CMD_V, &mut applied_v, &mut timer);
+            }
+        }
 
         // Marginal error of the *current* state against the freshest v
         // (before the u-update — post-update at α = 1 the block error is
@@ -151,6 +234,35 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 }
             }
         });
+
+        // Non-coordinator nodes report their freshest slice-local drift
+        // to rank 0 (stamped with the last applied command seq, so the
+        // coordinator never acts on drift measured against a reference
+        // it has already superseded).
+        if fleet && id != 0 {
+            send_fleet_probe(
+                &ep,
+                &*v_op,
+                FLEET_PROBE_V,
+                &u_full,
+                shard.r0,
+                m,
+                applied_v,
+                k64,
+                &mut timer,
+            );
+            send_fleet_probe(
+                &ep,
+                &*u_op,
+                FLEET_PROBE_U,
+                &v_full,
+                shard.r0,
+                m,
+                applied_u,
+                k64,
+                &mut timer,
+            );
+        }
 
         // Independent convergence check on the node's own block error,
         // scaled ×c as the global-magnitude estimate.
@@ -241,4 +353,109 @@ fn write_block(full: &mut Mat, block: &[f64], j: usize, m: usize) {
     let nh = full.cols();
     debug_assert_eq!(block.len(), m * nh);
     full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(block);
+}
+
+/// Rank 0's fleet pass for one channel: refresh its own probe, drain
+/// the latest peer probes, and — once every node has reported
+/// current-seq state — merge, decide, broadcast the command and obey it
+/// locally. `hold` freezes decisions once any peer announced done (its
+/// slice probes stop; the remaining nodes keep their emergency guard).
+#[allow(clippy::too_many_arguments)]
+fn coordinate(
+    coord: &mut FleetCoord,
+    ep: &Endpoint,
+    c: usize,
+    probe_tag: u64,
+    cmd_tag: u64,
+    op: &mut dyn BlockOp,
+    x_full: &Mat,
+    m: usize,
+    nh: usize,
+    tau: f64,
+    hold: bool,
+    k64: u64,
+    timer: &mut SplitTimer,
+) {
+    let seq = coord.seq;
+    coord.probes[0] = timer.comp(|| {
+        op.fleet_probe(x_full, 0, m)
+            .map(|p| fleet::probe_payload(seq, &p))
+    });
+    timer.comm(|| {
+        for j in 1..c {
+            if let Some(msg) = ep.try_recv_latest(j, TagKind::Gref, probe_tag) {
+                coord.probes[j] = Some(msg.payload);
+            }
+        }
+    });
+    if hold {
+        return;
+    }
+    // Full, current-seq coverage required: a missing or stale probe
+    // (degraded operator, command still in flight) holds the decision.
+    let mut refs: Vec<&[f64]> = Vec::with_capacity(c);
+    for probe in &coord.probes {
+        match probe {
+            Some(pay) if pay.first().copied().unwrap_or(-1.0) as u64 == coord.seq => {
+                refs.push(pay.as_slice());
+            }
+            _ => return,
+        }
+    }
+    let Some(cmd) = timer.comp(|| fleet::decide(&refs, nh, m, tau)) else {
+        return;
+    };
+    coord.seq += 1;
+    let payload = fleet::command_payload(coord.seq, &cmd);
+    timer.comm(|| {
+        for j in 1..c {
+            ep.send(j, TagKind::Gref, cmd_tag, payload.clone(), k64);
+        }
+    });
+    timer.comp(|| op.fleet_absorb(&cmd.gref, cmd.needed));
+    // Stored probes measured drift against the superseded reference.
+    for probe in coord.probes.iter_mut() {
+        *probe = None;
+    }
+}
+
+/// Apply the freshest coordinator command (if any) to `op`, tracking
+/// the applied sequence so a command is never obeyed twice.
+fn apply_fleet_command(
+    ep: &Endpoint,
+    op: &mut dyn BlockOp,
+    cmd_tag: u64,
+    applied: &mut u64,
+    timer: &mut SplitTimer,
+) {
+    let msg = timer.comm(|| ep.try_recv_latest(0, TagKind::Gref, cmd_tag));
+    if let Some(msg) = msg {
+        let (seq, cmd) = fleet::parse_command(&msg.payload);
+        if seq > *applied {
+            *applied = seq;
+            if let Some((needed, gref)) = cmd {
+                timer.comp(|| op.fleet_absorb(gref, needed));
+            }
+        }
+    }
+}
+
+/// Send this node's slice-local drift probe to rank 0. A degraded
+/// operator (dense fallback) stops probing, which silently pauses fleet
+/// decisions at the coordinator — the intended degrade path.
+#[allow(clippy::too_many_arguments)]
+fn send_fleet_probe(
+    ep: &Endpoint,
+    op: &dyn BlockOp,
+    probe_tag: u64,
+    x_full: &Mat,
+    r0: usize,
+    m: usize,
+    seq: u64,
+    k64: u64,
+    timer: &mut SplitTimer,
+) {
+    if let Some(p) = timer.comp(|| op.fleet_probe(x_full, r0, m)) {
+        timer.comm(|| ep.send(0, TagKind::Gref, probe_tag, fleet::probe_payload(seq, &p), k64));
+    }
 }

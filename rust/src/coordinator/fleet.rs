@@ -1,0 +1,199 @@
+//! Fleet-synchronized absorption — the coordination layer of the
+//! absorption-hybrid engine (ROADMAP "Distributed shared-support
+//! reuse"; pairs Schmitzer's absorption schedule, PAPERS.md 1610.06519,
+//! with the shared-structure reuse of the greedy/stochastic scaling
+//! variants, 1803.01347).
+//!
+//! Without it, every federated node's hybrid operator re-absorbs its
+//! shard kernel on its own clock: the one `O(m·n)` re-truncation the
+//! engine amortizes is decided `c` times, out of lock-step, and shard
+//! supports drift apart. With it, the coordinator (rank 0 in the
+//! all-to-all protocols, the server in the star topology) merges
+//! slice-local drift probes, decides re-absorption **centrally**, and
+//! broadcasts one reference dual `ḡ` — every node then performs the
+//! same partial `O(nnz)` reference move or full re-truncation against
+//! the same reference, in lock-step, so supports stay mutually
+//! consistent and the rebuild is one fleet decision.
+//!
+//! Wire format (all on [`crate::net::TagKind::Gref`], priced by the
+//! same α–β latency model as the scaling exchange):
+//!
+//! * **probe** (node → coordinator, slice-aligned):
+//!   `[seq, covered, spread, drift[0..N], ḡ_slice[0..m]]` — the node's
+//!   per-histogram drift and column-mean reference candidate over the
+//!   `m` state rows it already owns. A node whose operator has no live
+//!   absorbed kernel sends the short *degraded* form `[seq, −1]`, which
+//!   pauses fleet decisions (the emergency guard inside each operator
+//!   keeps correctness).
+//! * **command** (coordinator → nodes): `[seq, 1, needed, ḡ[0..n]]`,
+//!   or the hold `[seq, 0]` in the lock-step variant where every round
+//!   must carry a reply.
+//!
+//! `seq` counts issued commands: probes measured against a superseded
+//! reference (async arrivals) are identified and dropped by the
+//! coordinator, and a node never applies the same command twice.
+
+use crate::linalg::Mat;
+use crate::runtime::{BlockOp, FleetProbe};
+
+/// Probe payload header length: `[seq, covered, spread]`.
+pub const PROBE_HEADER: usize = 3;
+
+/// Encode a slice probe: `[seq, covered, spread, drift[N], ḡ_slice[m]]`.
+pub fn probe_payload(seq: u64, probe: &FleetProbe) -> Vec<f64> {
+    let mut out = Vec::with_capacity(PROBE_HEADER + probe.drift.len() + probe.gref_slice.len());
+    out.push(seq as f64);
+    out.push(probe.covered);
+    out.push(probe.spread);
+    out.extend_from_slice(&probe.drift);
+    out.extend_from_slice(&probe.gref_slice);
+    out
+}
+
+/// The "no live absorbed kernel on this node" probe. Its short length
+/// is the marker: [`decide`] holds off on any round that contains one,
+/// so a degraded node quietly pauses fleet decisions instead of
+/// receiving commands it cannot obey.
+pub fn degraded_payload(seq: u64) -> Vec<f64> {
+    vec![seq as f64, -1.0]
+}
+
+/// A fleet re-absorption decision: the capacity the rebuilt supports
+/// must cover and the assembled full-length reference dual.
+#[derive(Clone, Debug)]
+pub struct FleetCommand {
+    pub needed: f64,
+    pub gref: Vec<f64>,
+}
+
+/// Merge node-ordered slice probes (each from [`probe_payload`], `m`
+/// state rows and `nh` histograms per node) and decide whether the
+/// fleet re-absorbs now.
+///
+/// Mirrors the hybrid operator's internal schedule exactly: trigger
+/// when any histogram's merged drift exceeds the (minimum) covered
+/// capacity; the new capacity is the merged inter-histogram spread plus
+/// the drift budget `τ`. Per-slice column means concatenate into the
+/// full reference, and per-slice spread maxima merge into the exact
+/// full-input spread, because both are per-row quantities — so the
+/// central decision equals the decision a single node would make from
+/// the full state, at `O(m·N)` probe cost per node.
+///
+/// Returns `None` when no re-absorption is due, or when any probe is
+/// degraded/malformed (the hold state).
+pub fn decide(parts: &[&[f64]], nh: usize, m: usize, tau: f64) -> Option<FleetCommand> {
+    let expect = PROBE_HEADER + nh + m;
+    let mut covered = f64::INFINITY;
+    let mut spread: f64 = 0.0;
+    let mut drift_max = vec![0.0; nh];
+    let mut gref = Vec::with_capacity(parts.len() * m);
+    for part in parts {
+        if part.len() != expect {
+            return None;
+        }
+        covered = covered.min(part[1]);
+        spread = spread.max(part[2]);
+        for (d, &p) in drift_max.iter_mut().zip(&part[PROBE_HEADER..PROBE_HEADER + nh]) {
+            if p > *d {
+                *d = p;
+            }
+        }
+        gref.extend_from_slice(&part[PROBE_HEADER + nh..]);
+    }
+    if parts.is_empty() || drift_max.iter().all(|&d| d <= covered) {
+        return None;
+    }
+    Some(FleetCommand { needed: spread + tau, gref })
+}
+
+/// Encode a command broadcast: `[seq, 1, needed, ḡ[n]]`.
+pub fn command_payload(seq: u64, cmd: &FleetCommand) -> Vec<f64> {
+    let mut out = Vec::with_capacity(3 + cmd.gref.len());
+    out.push(seq as f64);
+    out.push(1.0);
+    out.push(cmd.needed);
+    out.extend_from_slice(&cmd.gref);
+    out
+}
+
+/// The lock-step "no re-absorption this round" reply.
+pub fn hold_payload(seq: u64) -> Vec<f64> {
+    vec![seq as f64, 0.0]
+}
+
+/// Decode a command broadcast: `(seq, Some((needed, ḡ)))` for an absorb
+/// command, `(seq, None)` for a hold.
+pub fn parse_command(payload: &[f64]) -> (u64, Option<(f64, &[f64])>) {
+    let seq = payload.first().copied().unwrap_or(0.0) as u64;
+    if payload.len() > 2 && payload[1] > 0.0 {
+        (seq, Some((payload[2], &payload[3..])))
+    } else {
+        (seq, None)
+    }
+}
+
+/// The star topology's degenerate fleet round: the coordinator owns the
+/// kernel, so probe → merge → decide → apply happens locally and the
+/// `Gref` broadcast carries zero messages (its α–β term vanishes — see
+/// the README cost table). Runs the *same* decision logic as the wire
+/// protocol so the fleet counters stay comparable across topologies.
+/// Returns whether an absorb command was applied.
+pub fn local_decide_apply(op: &mut dyn BlockOp, x: &Mat, tau: f64) -> bool {
+    let Some(probe) = op.fleet_probe(x, 0, x.rows()) else {
+        return false;
+    };
+    let nh = probe.drift.len();
+    let payload = probe_payload(0, &probe);
+    let Some(cmd) = decide(&[&payload], nh, x.rows(), tau) else {
+        return false;
+    };
+    op.fleet_absorb(&cmd.gref, cmd.needed);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probe(covered: f64, spread: f64, drift: Vec<f64>, gref_slice: Vec<f64>) -> FleetProbe {
+        FleetProbe { drift, spread, gref_slice, covered }
+    }
+
+    #[test]
+    fn payload_roundtrip() {
+        let p = probe(15.0, 2.5, vec![1.0, 3.0], vec![0.5, -0.5, 0.25]);
+        let pay = probe_payload(7, &p);
+        assert_eq!(pay.len(), PROBE_HEADER + 2 + 3);
+        assert_eq!(pay[0] as u64, 7);
+        let cmd = FleetCommand { needed: 9.0, gref: vec![1.0, 2.0] };
+        let enc = command_payload(3, &cmd);
+        let (seq, parsed) = parse_command(&enc);
+        assert_eq!(seq, 3);
+        let (needed, gref) = parsed.unwrap();
+        assert_eq!(needed, 9.0);
+        assert_eq!(gref, &[1.0, 2.0]);
+        let (seq, parsed) = parse_command(&hold_payload(4));
+        assert_eq!(seq, 4);
+        assert!(parsed.is_none());
+    }
+
+    #[test]
+    fn decide_merges_slices_like_a_full_scan() {
+        let tau = 5.0;
+        // Two nodes, 2 histograms, 2 rows each. Node 1's hist-0 drift
+        // exceeds the (min) covered capacity → absorb with capacity
+        // max-spread + τ and the concatenated reference.
+        let a = probe_payload(0, &probe(10.0, 1.0, vec![2.0, 3.0], vec![0.1, 0.2]));
+        let b = probe_payload(0, &probe(12.0, 4.0, vec![11.0, 0.5], vec![0.3, 0.4]));
+        let cmd = decide(&[&a, &b], 2, 2, tau).expect("drift 11 > covered 10");
+        assert_eq!(cmd.needed, 4.0 + tau);
+        assert_eq!(cmd.gref, vec![0.1, 0.2, 0.3, 0.4]);
+        // Below capacity everywhere → hold.
+        let c = probe_payload(0, &probe(12.0, 4.0, vec![9.0, 0.5], vec![0.3, 0.4]));
+        assert!(decide(&[&a, &c], 2, 2, tau).is_none());
+        // Any degraded probe pauses decisions.
+        let d = degraded_payload(0);
+        assert!(decide(&[&a, &d], 2, 2, tau).is_none());
+        assert!(decide(&[], 2, 2, tau).is_none());
+    }
+}

@@ -17,6 +17,7 @@
 //! [`crate::net::DelayTracker`].
 
 mod async_a2a;
+pub mod fleet;
 mod runner;
 mod star;
 mod sync_a2a;
@@ -205,6 +206,158 @@ mod tests {
         lin_cfg.domain = DomainChoice::Linear;
         let out = run_federated(&p, &lin_cfg, policy(), false);
         assert!(out.stab.is_none());
+    }
+
+    /// Fleet-synchronized absorption must not change what the solvers
+    /// compute. Synchronous variants with `--fleet-absorb` still
+    /// generate the centralized hybrid iterate sequence (Prop. 1 under
+    /// shared absorption), the coordinator's commands drive the
+    /// re-absorptions (fleet counters populated), and the fleet's total
+    /// retruncation count never exceeds the per-node baseline's on the
+    /// same workload.
+    #[test]
+    fn fleet_absorb_sync_variants_match_centralized_hybrid() {
+        use crate::config::DomainChoice;
+        use crate::linalg::Domain;
+        let p = ProblemSpec::new(24)
+            .with_hists(2)
+            .with_eps(0.01)
+            .with_condition(crate::workload::CondClass::Medium)
+            .build(91);
+        let pol = StopPolicy {
+            threshold: 1e-9,
+            max_iters: 30_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        // τ small enough that the drifting duals force several
+        // re-absorptions (and full retruncations) mid-solve.
+        let tau = 0.5;
+        let be = make_backend(BackendKind::Native, "", 1).unwrap();
+        let stab = crate::linalg::Stabilization { absorb_threshold: tau, ..Default::default() };
+        let central = CentralizedSolver::new(be)
+            .with_stabilization(stab)
+            .solve_in(&p, pol, 1.0, Domain::Log);
+        assert!(central.converged(), "centralized hybrid: {:?}", central.stop);
+        for variant in [Variant::SyncA2A, Variant::SyncStar] {
+            for clients in [2usize, 4] {
+                let mut base_cfg = cfg(variant, clients);
+                base_cfg.domain = DomainChoice::Log;
+                base_cfg.stab.absorb_threshold = tau;
+                let base = run_federated(&p, &base_cfg, pol, false);
+                assert!(base.converged, "{} c={clients} baseline", variant.name());
+                let mut fcfg = base_cfg.clone();
+                fcfg.stab.fleet_absorb = true;
+                let out = run_federated(&p, &fcfg, pol, false);
+                assert!(out.converged, "{} c={clients} fleet: {:?}", variant.name(), out.stop);
+                assert!(
+                    out.state.u.allclose(&central.state.u, 1e-10),
+                    "{} c={clients}: u mismatch vs centralized hybrid",
+                    variant.name()
+                );
+                assert!(
+                    out.state.v.allclose(&central.state.v, 1e-10),
+                    "{} c={clients}: v mismatch vs centralized hybrid",
+                    variant.name()
+                );
+                let st = out.stab.as_ref().expect("fleet run reports hybrid stats");
+                let bst = base.stab.as_ref().expect("baseline reports hybrid stats");
+                assert!(st.fleet_commands > 0, "{} c={clients}: no fleet commands", variant.name());
+                assert!(
+                    st.fleet_rebuilds >= 1,
+                    "{} c={clients}: forced retruncation must be fleet-driven",
+                    variant.name()
+                );
+                // The acceptance bar: fleet-total retruncations (summed
+                // over nodes by the merge) never exceed the per-node
+                // baseline's total on the same workload.
+                assert!(
+                    st.rebuilds <= bst.rebuilds,
+                    "{} c={clients}: fleet rebuilds {} > baseline {}",
+                    variant.name(),
+                    st.rebuilds,
+                    bst.rebuilds
+                );
+            }
+        }
+    }
+
+    /// Fleet absorption on the asynchronous variants: convergence to the
+    /// same fixed point (marginals satisfied), hybrid counters present,
+    /// and the async-star server — where the coordinator owns the
+    /// kernel — drives its re-absorptions through fleet commands.
+    #[test]
+    fn fleet_absorb_async_variants_converge() {
+        use crate::config::DomainChoice;
+        let p = ProblemSpec::new(16)
+            .with_hists(2)
+            .with_eps(0.01)
+            .with_condition(crate::workload::CondClass::Medium)
+            .build(92);
+        let pol = StopPolicy {
+            threshold: 1e-9,
+            max_iters: 40_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        for variant in [Variant::AsyncA2A, Variant::AsyncStar] {
+            let mut fcfg = cfg(variant, 2);
+            fcfg.domain = DomainChoice::Log;
+            fcfg.alpha = 0.5;
+            fcfg.stab.absorb_threshold = 0.5;
+            fcfg.stab.fleet_absorb = true;
+            let out = run_federated(&p, &fcfg, pol, false);
+            assert!(out.converged, "{}: {:?}", variant.name(), out.stop);
+            let (ea, eb) = crate::sinkhorn::full_marginal_errors(&p, &out.state, 0);
+            assert!(ea < 1e-6 && eb < 1e-6, "{}: ({ea}, {eb})", variant.name());
+            let st = out.stab.as_ref().expect("fleet run reports hybrid stats");
+            assert!(st.updates > 0 && st.absorbs > 0, "{}", variant.name());
+            if variant == Variant::AsyncStar {
+                // The server decides locally — its commands are not
+                // subject to message timing, so they must be present.
+                assert!(st.fleet_commands > 0, "async-star server issues fleet commands");
+            }
+        }
+    }
+
+    /// A deliberately tiny drift budget forces repeated mid-solve fleet
+    /// retruncations across a wider fleet; the iterates still match the
+    /// centralized hybrid exactly.
+    #[test]
+    fn fleet_forced_retruncations_stay_exact() {
+        use crate::config::DomainChoice;
+        use crate::linalg::Domain;
+        let p = ProblemSpec::new(32)
+            .with_hists(2)
+            .with_eps(0.01)
+            .with_condition(crate::workload::CondClass::Medium)
+            .build(93);
+        let pol = StopPolicy {
+            threshold: 1e-9,
+            max_iters: 30_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        let stab = crate::linalg::Stabilization { absorb_threshold: 0.05, ..Default::default() };
+        let be = make_backend(BackendKind::Native, "", 1).unwrap();
+        let central = CentralizedSolver::new(be)
+            .with_stabilization(stab)
+            .solve_in(&p, pol, 1.0, Domain::Log);
+        assert!(central.converged());
+        let mut fcfg = cfg(Variant::SyncA2A, 4);
+        fcfg.domain = DomainChoice::Log;
+        fcfg.stab.absorb_threshold = 0.05;
+        fcfg.stab.fleet_absorb = true;
+        let out = run_federated(&p, &fcfg, pol, false);
+        assert!(out.converged, "{:?}", out.stop);
+        assert!(out.state.u.allclose(&central.state.u, 1e-10));
+        assert!(out.state.v.allclose(&central.state.v, 1e-10));
+        let st = out.stab.as_ref().unwrap();
+        assert!(
+            st.fleet_rebuilds >= 2,
+            "tiny τ must force repeated fleet retruncations, got {}",
+            st.fleet_rebuilds
+        );
     }
 
     #[test]

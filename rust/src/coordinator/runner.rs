@@ -86,6 +86,16 @@ pub struct RunCtx<'a> {
     pub delays: Arc<DelayTracker>,
 }
 
+impl RunCtx<'_> {
+    /// Whether the fleet-synchronized absorption protocol is active for
+    /// this run: the explicit `--fleet-absorb` toggle plus a log-domain
+    /// hybrid schedule to synchronize. (Non-hybrid operators would only
+    /// ever send degraded probes — skip the traffic entirely.)
+    pub fn fleet_on(&self) -> bool {
+        self.stab.fleet_absorb && self.domain == Domain::Log && self.stab.hybrid_enabled()
+    }
+}
+
 /// Per-node return value from protocol implementations.
 pub struct NodeOutcome {
     pub stats: NodeStats,

@@ -24,6 +24,7 @@
 //! the convergence errors stay linear-domain L1, so the stopping rule is
 //! identical across domains.
 
+use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::{Domain, Mat};
 use crate::metrics::{Clock, SplitTimer};
@@ -95,6 +96,12 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     let mut iterations = 0;
     let mut round: u64 = 0;
 
+    // In the star topology the coordinator *owns* the kernel, so the
+    // fleet-absorption round is local: same decision logic as the wire
+    // protocol, zero extra messages (the Gref α–β term vanishes).
+    let fleet = ctx.fleet_on();
+    let tau = ctx.stab.absorb_threshold;
+
     for k in 1..=ctx.policy.max_iters {
         iterations = k;
         let k64 = k as u64;
@@ -105,6 +112,9 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
         round += 1;
         let v_parts = timer.comm(|| gather(&ep, c, TagKind::V, round, &[], k64).unwrap());
         assemble_clients(&mut v_full, &v_parts, m, c);
+        if fleet {
+            timer.comp(|| fleet::local_decide_apply(&mut *k_op, &v_full, tau));
+        }
         let q = timer.comp(|| k_op.matvec(&v_full).clone());
         round += 1;
         timer.comm(|| {
@@ -144,6 +154,9 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
         round += 1;
         let u_parts = timer.comm(|| gather(&ep, c, TagKind::U, round, &[], k64).unwrap());
         assemble_clients(&mut u_full, &u_parts, m, c);
+        if fleet {
+            timer.comp(|| fleet::local_decide_apply(&mut *kt_op, &u_full, tau));
+        }
         let r = timer.comp(|| kt_op.matvec(&u_full).clone());
         round += 1;
         timer.comm(|| {
@@ -303,19 +316,41 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     // of the slowest live client gets no fresh chunks until the gap
     // closes (the bounded-delay regime of Prop. 2; see async_a2a docs).
     let mut client_iter = vec![0u64; c];
-    let bound = ctx.cfg.max_staleness.max(1);
+    let bound = ctx.cfg.staleness_bound();
     let mut iterations = 0;
-    // A done vote can widen the staleness gate (min_live skips the
-    // finished client) without any fresh u/v arriving; the next pass
-    // must then re-send the current products or a newly eligible,
-    // blocked client would wait forever.
+    // A done vote widens the staleness gate (min_live skips the finished
+    // client) without any fresh u/v arriving; the pass that observes it
+    // must re-send the current products or a newly eligible, blocked
+    // client would starve. The latch is sticky until a pass has honored
+    // it — it must never be *overwritten* by a later vote-less pass
+    // before the resend actually ran.
     let mut resend = false;
+
+    // Star fleet absorption is server-local (see server_sync).
+    let fleet = ctx.fleet_on();
+    let tau = ctx.stab.absorb_threshold;
 
     // The server relays until every client reports done; the cap is a
     // safety net (clients are themselves capped at max_iters).
     for s in 1..=(4 * ctx.policy.max_iters) {
         iterations = s;
         let s64 = s as u64;
+
+        // Done votes first (control tag 2): a vote must take effect on
+        // *this* pass's staleness gate and resend decision, not a full
+        // relay pass later — a client whose vote lands during a stale
+        // relay pass used to be starved for the whole window.
+        timer.comm(|| {
+            for j in 0..c {
+                if ep.try_recv_latest(j, TagKind::Ctl, A_TAG + 2).is_some() {
+                    done[j] = true;
+                    resend = true;
+                }
+            }
+        });
+        if done.iter().all(|&d| d) {
+            break;
+        }
 
         let mut fresh_v = false;
         timer.comm(|| {
@@ -337,6 +372,9 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
         // schedule, *count* — an identical product, burning compute and
         // inflating the hybrid's per-iteration counters with no-ops.
         if fresh_v || s == 1 || resend {
+            if fleet {
+                timer.comp(|| fleet::local_decide_apply(&mut *k_op, &v_full, tau));
+            }
             let q = timer.comp(|| k_op.matvec(&v_full).clone());
             timer.comm(|| {
                 for j in 0..c {
@@ -358,6 +396,9 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             }
         });
         if fresh_u || s == 1 || resend {
+            if fleet {
+                timer.comp(|| fleet::local_decide_apply(&mut *kt_op, &u_full, tau));
+            }
             let r = timer.comp(|| kt_op.matvec(&u_full).clone());
             timer.comm(|| {
                 for j in 0..c {
@@ -368,21 +409,9 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             });
         }
         let any_fresh = fresh_v || fresh_u;
+        // Any pending resend has now been honored by this pass's sends.
+        resend = false;
 
-        // Done votes arrive on the control tag 2.
-        let mut fresh_done = false;
-        timer.comm(|| {
-            for j in 0..c {
-                if ep.try_recv_latest(j, TagKind::Ctl, A_TAG + 2).is_some() {
-                    done[j] = true;
-                    fresh_done = true;
-                }
-            }
-        });
-        resend = fresh_done;
-        if done.iter().all(|&d| d) {
-            break;
-        }
         if !any_fresh {
             // Nothing new from any client: yield briefly instead of
             // recomputing identical products at full spin.
@@ -423,7 +452,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut v_jj = Mat::full(m, nh, domain.one());
     let mut q_latest = vec![domain.one(); m * nh];
     let mut r_latest = vec![domain.one(); m * nh];
-    let bound = ctx.cfg.max_staleness.max(1);
+    let bound = ctx.cfg.staleness_bound();
     let mut stale_rounds: u64 = 0;
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;

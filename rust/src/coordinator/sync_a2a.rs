@@ -11,11 +11,12 @@
 //! contributions) is an exact global marginal error and every node stops
 //! at the same iteration.
 
+use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
-use crate::net::{allgather, TagKind};
-use crate::runtime::{StabStats, Target};
+use crate::net::{allgather, bcast, gather, Endpoint, TagKind};
+use crate::runtime::{BlockOp, StabStats, Target};
 use crate::sinkhorn::StopReason;
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
@@ -64,6 +65,12 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut u_full = Mat::full(n, nh, one);
     let mut v_full = Mat::full(n, nh, one);
 
+    // Fleet-synchronized absorption (`--fleet-absorb`, log-domain hybrid
+    // runs): rank 0 merges slice probes and broadcasts one reference
+    // dual per product space, so every node re-absorbs in lock-step.
+    let fleet = ctx.fleet_on();
+    let tau = ctx.stab.absorb_threshold;
+
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;
     let mut final_err = f64::INFINITY;
@@ -84,6 +91,24 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 allgather(&ep, TagKind::U, round, slice_of(&u_full, shard.r0, m), k as u64)
             });
             assemble(&mut u_full, &u_parts, m);
+            if fleet {
+                // Fleet-synchronized absorption for the v-operators
+                // (their reference lives in u-space): probes ride the
+                // freshly assembled u state.
+                round += 2;
+                fleet_sync(
+                    &ep,
+                    round,
+                    &mut *v_op,
+                    &u_full,
+                    shard.r0,
+                    m,
+                    nh,
+                    tau,
+                    k as u64,
+                    &mut timer,
+                );
+            }
         }
 
         let v_jj = timer.comp(|| v_op.update(&u_full, alpha).clone());
@@ -94,6 +119,22 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 allgather(&ep, TagKind::V, round, slice_of(&v_full, shard.r0, m), k as u64)
             });
             assemble(&mut v_full, &v_parts, m);
+            if fleet {
+                // … and for the u-operators (v-space reference).
+                round += 2;
+                fleet_sync(
+                    &ep,
+                    round,
+                    &mut *u_op,
+                    &v_full,
+                    shard.r0,
+                    m,
+                    nh,
+                    tau,
+                    k as u64,
+                    &mut timer,
+                );
+            }
         }
 
         // Convergence: exact global error via an error AllGather (only
@@ -143,6 +184,48 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         },
         slices: Some((u_op.state().clone(), v_op.state().clone())),
         trace,
+    }
+}
+
+/// One lock-step fleet-absorption round for `op` against the freshly
+/// assembled full state `x_full`: every node probes the `m` rows it
+/// owns (`O(m·N)`, no redundant full scans), rank 0 gathers the probes,
+/// merges + decides, and broadcasts either the reference-dual command
+/// or a hold; every node applies the command to its own block operator.
+/// Uses protocol rounds `base − 1` (gather) and `base` (broadcast) on
+/// [`TagKind::Gref`] — both messages priced by the α–β latency model.
+#[allow(clippy::too_many_arguments)]
+fn fleet_sync(
+    ep: &Endpoint,
+    base_round: u64,
+    op: &mut dyn BlockOp,
+    x_full: &Mat,
+    r0: usize,
+    m: usize,
+    nh: usize,
+    tau: f64,
+    iter: u64,
+    timer: &mut SplitTimer,
+) {
+    let payload = timer.comp(|| match op.fleet_probe(x_full, r0, m) {
+        Some(p) => fleet::probe_payload(0, &p),
+        None => fleet::degraded_payload(0),
+    });
+    let parts = timer.comm(|| gather(ep, 0, TagKind::Gref, base_round - 1, &payload, iter));
+    let reply = if let Some(parts) = parts {
+        // Rank 0: merge + decide, then broadcast the verdict.
+        let refs: Vec<&[f64]> = parts.iter().map(|p| p.as_slice()).collect();
+        let decision = timer.comp(|| fleet::decide(&refs, nh, m, tau));
+        let payload = match &decision {
+            Some(cmd) => fleet::command_payload(0, cmd),
+            None => fleet::hold_payload(0),
+        };
+        timer.comm(|| bcast(ep, 0, TagKind::Gref, base_round, Some(&payload), iter))
+    } else {
+        timer.comm(|| bcast(ep, 0, TagKind::Gref, base_round, None, iter))
+    };
+    if let (_, Some((needed, gref))) = fleet::parse_command(&reply) {
+        timer.comp(|| op.fleet_absorb(gref, needed));
     }
 }
 

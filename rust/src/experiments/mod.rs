@@ -101,12 +101,24 @@ pub fn run_case(
         seed,
         ..Default::default()
     };
-    let out = run_federated(p, &cfg, policy, false);
+    run_case_cfg(p, &cfg, policy, spec_info)
+}
+
+/// [`run_case`] with an explicit full [`SolveConfig`] — drivers that pin
+/// the numerics domain or the stabilized-engine tuning (e.g. the
+/// fleet-absorption comparison) go through here.
+pub fn run_case_cfg(
+    p: &Problem,
+    cfg: &SolveConfig,
+    policy: StopPolicy,
+    spec_info: (f64, CondClass),
+) -> (RunRecord, FederatedOutcome) {
+    let out = run_federated(p, cfg, policy, false);
     let slow = slowest_node(&out.node_stats);
     let rec = RunRecord {
-        variant: variant.name().to_string(),
+        variant: cfg.variant.name().to_string(),
         n: p.n,
-        clients,
+        clients: cfg.clients,
         hists: p.hists(),
         sparsity: spec_info.0,
         cond: spec_info.1.name().to_string(),

@@ -7,9 +7,10 @@
 //! iterations to convergence, and (async) whether it converged — the
 //! exact columns of the paper's appendix tables.
 
-use super::{build_problem, dump_json, run_case, Scale};
-use crate::config::{BackendKind, Variant};
+use super::{build_problem, dump_json, run_case, run_case_cfg, Scale};
+use crate::config::{BackendKind, DomainChoice, SolveConfig, Variant};
 use crate::jsonio::Json;
+use crate::linalg::Stabilization;
 use crate::metrics::{chi2_sf, chi2_stat, RunRecord};
 use crate::net::LatencyModel;
 use crate::sinkhorn::StopPolicy;
@@ -28,6 +29,11 @@ pub struct PerfGridArgs {
     pub net: LatencyModel,
     pub alpha_async: f64,
     pub chi2: bool,
+    /// Add the per-node vs fleet-synchronized absorption comparison
+    /// (`--fleet-compare`): each federated variant on a small-ε
+    /// log-domain workload, with and without the coordinator-broadcast
+    /// re-absorption protocol, reporting both retruncation totals.
+    pub fleet_compare: bool,
     pub out: Option<String>,
 }
 
@@ -64,6 +70,7 @@ impl PerfGridArgs {
             net: LatencyModel::lan(),
             alpha_async: 0.5,
             chi2: false,
+            fleet_compare: false,
             out: None,
         }
     }
@@ -141,6 +148,10 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
         ("rows", Json::Arr(records.iter().map(|r| r.to_json()).collect())),
     ];
 
+    if args.fleet_compare {
+        fields.push(("fleet_absorb", fleet_comparison(args)));
+    }
+
     if args.chi2 {
         fields.push(("chi2", chi2_table(&records)));
     }
@@ -150,6 +161,115 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
         dump_json(path, &doc)?;
     }
     Ok(doc)
+}
+
+/// Per-node vs fleet-synchronized rebuilds: the same small-ε
+/// log-domain workload (the absorption-hybrid's home regime, native
+/// backend — the XLA grid has no log lowering), every federated variant
+/// run with per-node absorption decisions and with the
+/// coordinator-broadcast `Gref` protocol. Reports both retruncation
+/// totals (summed over nodes), the fleet command count, and the
+/// slowest-node timings, so the amortization claim is measurable from
+/// the emitted document.
+fn fleet_comparison(args: &PerfGridArgs) -> Json {
+    // τ = 5 forces several re-absorptions over the solve so the
+    // comparison has signal; threshold/iters pinned for comparability.
+    let (eps, nh, tau) = (0.005, 4, 5.0);
+    let n = args.sizes.iter().copied().min().unwrap_or(256);
+    let policy = StopPolicy {
+        threshold: args.threshold.max(1e-8),
+        max_iters: args.max_iters.max(4000),
+        check_every: 1,
+        ..Default::default()
+    };
+    println!(
+        "\n## Fleet-synchronized absorption: per-node vs fleet rebuilds \
+         (n={n}, N={nh}, eps={eps}, tau={tau}, log domain, native backend)"
+    );
+    println!(
+        "{:>10} {:>3} | {:>7} {:>9} {:>10} | {:>7} {:>9} {:>7} {:>10} {:>5}",
+        "variant",
+        "c",
+        "iters",
+        "rebuilds",
+        "total(s)",
+        "iters",
+        "rebuilds",
+        "cmds",
+        "total(s)",
+        "cvg"
+    );
+    let mut rows = Vec::new();
+    // One fixed workload for the whole comparison (the kernel caches on
+    // `Problem` are shared, so every run truncates/absorbs from the
+    // same dense kernel built exactly once).
+    let p = build_problem(n, nh, eps, 0.0, 4, CondClass::Ill, 29 + n as u64);
+    for &variant in &Variant::ALL_FEDERATED {
+        for &c in &args.nodes {
+            if n % c != 0 {
+                continue;
+            }
+            let alpha = match variant {
+                Variant::AsyncA2A | Variant::AsyncStar => args.alpha_async,
+                _ => 1.0,
+            };
+            let run = |fleet: bool| {
+                let cfg = SolveConfig {
+                    variant,
+                    backend: BackendKind::Native,
+                    domain: DomainChoice::Log,
+                    stab: Stabilization {
+                        absorb_threshold: tau,
+                        fleet_absorb: fleet,
+                        ..Stabilization::default()
+                    },
+                    clients: c,
+                    alpha,
+                    net: args.net,
+                    seed: n as u64 + c as u64,
+                    ..Default::default()
+                };
+                run_case_cfg(&p, &cfg, policy, (0.0, CondClass::Ill))
+            };
+            let (base_rec, base_out) = run(false);
+            let (fleet_rec, fleet_out) = run(true);
+            let base_st = base_out.stab.clone().unwrap_or_default();
+            let fleet_st = fleet_out.stab.clone().unwrap_or_default();
+            println!(
+                "{:>10} {:>3} | {:>7} {:>9} {:>10.3} | {:>7} {:>9} {:>7} {:>10.3} {:>5}",
+                variant.name(),
+                c,
+                base_rec.iterations,
+                base_st.rebuilds,
+                base_rec.total_secs,
+                fleet_rec.iterations,
+                fleet_st.rebuilds,
+                fleet_st.fleet_commands,
+                fleet_rec.total_secs,
+                if fleet_rec.converged { "yes" } else { "no" }
+            );
+            rows.push(Json::obj(vec![
+                ("variant", variant.name().into()),
+                ("clients", c.into()),
+                ("n", n.into()),
+                ("nhist", nh.into()),
+                ("eps", eps.into()),
+                ("tau", tau.into()),
+                ("iterations_per_node", base_rec.iterations.into()),
+                ("rebuilds_per_node", base_st.rebuilds.into()),
+                ("absorbs_per_node", base_st.absorbs.into()),
+                ("total_secs_per_node", base_rec.total_secs.into()),
+                ("iterations_fleet", fleet_rec.iterations.into()),
+                ("rebuilds_fleet", fleet_st.rebuilds.into()),
+                ("absorbs_fleet", fleet_st.absorbs.into()),
+                ("fleet_commands", fleet_st.fleet_commands.into()),
+                ("fleet_rebuilds", fleet_st.fleet_rebuilds.into()),
+                ("total_secs_fleet", fleet_rec.total_secs.into()),
+                ("converged_fleet", fleet_rec.converged.into()),
+            ]));
+        }
+    }
+    Json::Arr(rows)
 }
 
 /// Table VI — χ² test of total execution time across the covariates

@@ -35,6 +35,20 @@
 
 use super::{Csr, Mat};
 
+/// Floor on the effective support threshold `θ_s = θ − 2(σ + covered)`.
+///
+/// Stored absorbed entries are `exp(s)` with `s ∈ [θ_s, 0]`: once `θ_s`
+/// falls below `−ln(f64::MIN_POSITIVE) ≈ −708.4`, entries near the
+/// bottom of the slack range underflow to subnormals/zero — they are
+/// "kept" in structure but degenerate in value, so the exactness
+/// guarantee the slack exists for is silently broken. −700 keeps every
+/// stored value a normal f64 with headroom. Requested capacities whose
+/// slack would cross the floor are clamped (see
+/// [`AbsorbedLogCsr::max_covered`]) and flagged via
+/// [`AbsorbedLogCsr::support_saturated`] so callers can degrade
+/// explicitly instead of iterating on a hollow support.
+pub const THETA_SUPPORT_FLOOR: f64 = -700.0;
+
 /// Absorbed, θ-truncated sparse log-kernel with a shared support across
 /// `N` histograms. The absorbed linear entries live in a [`Csr`] (so
 /// the batched product reuses its threaded SpMM kernels, including the
@@ -60,8 +74,13 @@ pub struct AbsorbedLogCsr {
     /// Per-histogram drift capacity the current support covers.
     covered: f64,
     /// Anchor-shift budget: partial re-absorption is exact while the
-    /// reference stays within `σ` of `g_anchor`.
+    /// reference stays within `σ` of `g_anchor` (inclusive — the slack
+    /// derivation is non-strict throughout, so the boundary
+    /// `anchor_shift == σ` is itself exact).
     sigma: f64,
+    /// Whether the requested drift capacity was clamped because its
+    /// support slack would cross [`THETA_SUPPORT_FLOOR`].
+    saturated: bool,
 }
 
 impl AbsorbedLogCsr {
@@ -78,7 +97,9 @@ impl AbsorbedLogCsr {
         sigma: f64,
     ) -> Self {
         assert_eq!(gref.len(), a_log.cols(), "reference dual length");
+        debug_assert!(covered >= 0.0 && sigma >= 0.0, "capacities are non-negative");
         let (m, n) = (a_log.rows(), a_log.cols());
+        let (covered, saturated) = Self::clamp_covered(theta, covered, sigma);
         let mut out = Self {
             k: Csr::from_parts(m, n, vec![0; m + 1], Vec::new(), Vec::new()),
             log_vals: Vec::new(),
@@ -88,6 +109,7 @@ impl AbsorbedLogCsr {
             theta,
             covered,
             sigma,
+            saturated,
         };
         out.truncate_from(a_log);
         out
@@ -95,15 +117,38 @@ impl AbsorbedLogCsr {
 
     /// Re-truncate the support from the dense log-kernel against a new
     /// reference and drift capacity — the `O(m·n)` tier. Resets the
-    /// anchor.
+    /// anchor. The capacity is clamped to [`AbsorbedLogCsr::max_covered`]
+    /// (flagged via [`AbsorbedLogCsr::support_saturated`]) so the stored
+    /// entries never underflow past [`THETA_SUPPORT_FLOOR`].
     pub fn retruncate(&mut self, a_log: &Mat, gref: &[f64], covered: f64) {
         assert_eq!(a_log.rows(), self.rows(), "kernel rows");
         assert_eq!(a_log.cols(), self.cols(), "kernel cols");
         assert_eq!(gref.len(), self.cols(), "reference dual length");
         self.g.copy_from_slice(gref);
         self.g_anchor.copy_from_slice(gref);
+        let (covered, saturated) = Self::clamp_covered(self.theta, covered, self.sigma);
         self.covered = covered;
+        self.saturated = saturated;
         self.truncate_from(a_log);
+    }
+
+    /// Largest drift capacity whose support slack keeps the effective
+    /// threshold `θ − 2(σ + covered)` at or above
+    /// [`THETA_SUPPORT_FLOOR`] (0 when even a zero-drift support would
+    /// cross it). Callers that need more capacity than this have no
+    /// numerically sound shared support and must degrade to a dense
+    /// logsumexp path.
+    pub fn max_covered(theta: f64, sigma: f64) -> f64 {
+        ((theta - THETA_SUPPORT_FLOOR) / 2.0 - sigma).max(0.0)
+    }
+
+    fn clamp_covered(theta: f64, covered: f64, sigma: f64) -> (f64, bool) {
+        let cap = Self::max_covered(theta, sigma);
+        if covered > cap {
+            (cap, true)
+        } else {
+            (covered, false)
+        }
     }
 
     fn truncate_from(&mut self, a_log: &Mat) {
@@ -142,7 +187,10 @@ impl AbsorbedLogCsr {
     /// Partial re-absorption (`O(nnz)`): move the reference to `gref`
     /// and recompute the row shifts + absorbed values over the existing
     /// support. Exact while `anchor_shift(gref) ≤ sigma` (the caller's
-    /// contract — [`AbsorbedLogCsr::retruncate`] otherwise).
+    /// contract — [`AbsorbedLogCsr::retruncate`] otherwise). The
+    /// boundary is *inclusive*: every inequality in the support-slack
+    /// derivation is non-strict, so `anchor_shift == sigma` is exact —
+    /// pinned by the `partial_reabsorb_exact_at_sigma_boundary` test.
     pub fn reabsorb(&mut self, gref: &[f64]) {
         assert_eq!(gref.len(), self.cols(), "reference dual length");
         self.g.copy_from_slice(gref);
@@ -285,9 +333,25 @@ impl AbsorbedLogCsr {
         self.sigma
     }
 
-    /// Effective support threshold `θ − 2(σ + covered)`.
+    /// Currently absorbed reference duals (length n) — what per-node
+    /// drift probes compare incoming log-scaling slices against.
+    pub fn reference(&self) -> &[f64] {
+        &self.g
+    }
+
+    /// Whether the last (re)truncation clamped the requested drift
+    /// capacity to keep the support representable — the caller's signal
+    /// to stop relying on the full requested slack (degrade path).
+    pub fn support_saturated(&self) -> bool {
+        self.saturated
+    }
+
+    /// Effective support threshold `θ − 2(σ + covered)`, floored at
+    /// [`THETA_SUPPORT_FLOOR`] (the capacity clamp keeps the raw value
+    /// above the floor already; the max is defense in depth for callers
+    /// probing hypothetical tunings).
     pub fn theta_support(&self) -> f64 {
-        self.theta - 2.0 * (self.sigma + self.covered)
+        (self.theta - 2.0 * (self.sigma + self.covered)).max(THETA_SUPPORT_FLOOR)
     }
 }
 
@@ -375,6 +439,87 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn partial_reabsorb_exact_at_sigma_boundary() {
+        // The ≤/< contract at the boundary: a reference move of exactly
+        // σ must still be served exactly by the O(nnz) partial tier —
+        // every inequality in the slack derivation is non-strict. The
+        // kernel range (−400) guarantees genuinely truncated entries, so
+        // a wrong (strict) boundary would surface as a truncation error
+        // against the dense oracle.
+        let mut rng = Rng::seed_from(55);
+        let (m, n, nh) = (19, 11, 3);
+        let a_log = Mat::rand_uniform(m, n, -400.0, 0.0, &mut rng);
+        let (covered, sigma) = (5.0, 5.0);
+        let mut partial =
+            AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], -60.0, covered, sigma);
+        assert!(partial.nnz() < m * n, "the -400 range must truncate something");
+        let mut full = partial.clone();
+        // Shift sitting exactly on the σ boundary (alternating sign so
+        // the move is not a uniform gauge shift).
+        let gref: Vec<f64> = (0..n).map(|j| if j % 2 == 0 { sigma } else { -sigma }).collect();
+        assert_eq!(partial.anchor_shift(&gref), sigma, "exact boundary case");
+        partial.reabsorb(&gref);
+        full.retruncate(&a_log, &gref, covered);
+        // Scalings sitting exactly on the covered-drift boundary too.
+        let mut x_log = Mat::zeros(n, nh);
+        for j in 0..n {
+            for h in 0..nh {
+                x_log[(j, h)] = gref[j] + if (j + h) % 2 == 0 { covered } else { -covered };
+            }
+        }
+        let (mut ex, mut lin, mut o1) = scratch(&partial, nh);
+        let mut o2 = o1.clone();
+        partial.log_matmul_into(&x_log, &mut ex, &mut lin, &mut o1, 1);
+        full.log_matmul_into(&x_log, &mut ex, &mut lin, &mut o2, 1);
+        let want = dense_log_product(&a_log, &x_log);
+        for i in 0..m {
+            for h in 0..nh {
+                let (w, g) = (want[(i, h)], o1[(i, h)]);
+                assert!(
+                    (w - g).abs() <= 1e-11 * w.abs().max(1.0),
+                    "partial ({i},{h}): {g} vs {w}"
+                );
+                let g2 = o2[(i, h)];
+                assert!(
+                    (w - g2).abs() <= 1e-11 * w.abs().max(1.0),
+                    "full ({i},{h}): {g2} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn support_slack_clamps_at_the_representable_floor() {
+        // A capacity request whose slack would push θ_s below the exp
+        // floor is clamped, flagged, and the clamped kernel still
+        // matches the dense oracle within the capacity it reports.
+        let mut rng = Rng::seed_from(56);
+        let (m, n, nh) = (9, 7, 2);
+        let a_log = Mat::rand_uniform(m, n, -30.0, 0.0, &mut rng);
+        let (theta, sigma) = (-60.0, 20.0);
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], theta, 500.0, sigma);
+        assert!(k.support_saturated(), "500 must exceed the representable capacity");
+        let cap = AbsorbedLogCsr::max_covered(theta, sigma);
+        assert_eq!(k.covered(), cap);
+        assert_eq!(k.theta_support(), THETA_SUPPORT_FLOOR);
+        // Every stored absorbed value is a normal (non-degenerate) f64.
+        assert!(k.nnz() > 0);
+        // Within the clamped capacity the product stays exact.
+        let x_log = Mat::rand_uniform(n, nh, -3.0, 3.0, &mut rng);
+        let (mut ex, mut lin, mut out) = scratch(&k, nh);
+        k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut out, 1);
+        assert!(out.allclose(&dense_log_product(&a_log, &x_log), 1e-11));
+        // An unsaturated request reports exactly what it asked for, and
+        // retruncate re-evaluates the clamp.
+        let mut k2 = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], theta, 10.0, sigma);
+        assert!(!k2.support_saturated());
+        assert_eq!(k2.covered(), 10.0);
+        k2.retruncate(&a_log, &vec![0.0; n], 1e6);
+        assert!(k2.support_saturated());
+        assert_eq!(k2.covered(), cap);
     }
 
     #[test]

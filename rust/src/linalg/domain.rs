@@ -72,11 +72,24 @@ pub struct Stabilization {
     /// kernel's density falls below this fraction (1 = always sparse,
     /// 0 = never).
     pub sparse_density_cutoff: f64,
+    /// Fleet-synchronized absorption (`--fleet-absorb`): hybrid
+    /// operators stop deciding re-absorption on their own (beyond the
+    /// emergency drift guard) and instead obey coordinator-broadcast
+    /// reference-dual commands, so every node of a federated run
+    /// re-absorbs the same reference in lock-step and shard supports
+    /// stay mutually consistent. No effect on centralized solves or
+    /// non-hybrid operators.
+    pub fleet_absorb: bool,
 }
 
 impl Default for Stabilization {
     fn default() -> Self {
-        Self { truncation_theta: -60.0, absorb_threshold: 15.0, sparse_density_cutoff: 0.25 }
+        Self {
+            truncation_theta: -60.0,
+            absorb_threshold: 15.0,
+            sparse_density_cutoff: 0.25,
+            fleet_absorb: false,
+        }
     }
 }
 
@@ -89,6 +102,7 @@ impl Stabilization {
             truncation_theta: f64::NEG_INFINITY,
             absorb_threshold: f64::INFINITY,
             sparse_density_cutoff: 0.0,
+            fleet_absorb: false,
         }
     }
 

@@ -34,7 +34,7 @@ mod domain;
 mod log_csr;
 mod ops;
 
-pub use absorbed::AbsorbedLogCsr;
+pub use absorbed::{AbsorbedLogCsr, THETA_SUPPORT_FLOOR};
 pub use csr::Csr;
 pub use dense::Mat;
 pub use domain::{Domain, Stabilization};

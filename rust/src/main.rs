@@ -130,7 +130,8 @@ fn domain_of(p: &Parsed) -> anyhow::Result<DomainChoice> {
 }
 
 /// Stabilized log-path tuning from `--truncation-threshold` /
-/// `--absorb-threshold` (defaults = `Stabilization::default()`).
+/// `--absorb-threshold` / `--fleet-absorb` (defaults =
+/// `Stabilization::default()`).
 fn stab_of(p: &Parsed) -> anyhow::Result<fedsink::linalg::Stabilization> {
     let mut stab = fedsink::linalg::Stabilization::default();
     if p.get("truncation-threshold").is_some() {
@@ -145,6 +146,14 @@ fn stab_of(p: &Parsed) -> anyhow::Result<fedsink::linalg::Stabilization> {
         anyhow::ensure!(
             stab.absorb_threshold > 0.0,
             "--absorb-threshold must be positive (use `inf` to disable the hybrid)"
+        );
+    }
+    stab.fleet_absorb = p.has("fleet-absorb");
+    if stab.fleet_absorb {
+        anyhow::ensure!(
+            stab.hybrid_enabled(),
+            "--fleet-absorb synchronizes the absorption-hybrid schedule; \
+             it needs a finite --absorb-threshold"
         );
     }
     Ok(stab)
@@ -204,6 +213,11 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
                 "TAU",
                 "15",
                 "log-scaling drift before the hybrid re-absorbs the kernel (> 0, inf = off)",
+            )
+            .switch(
+                "fleet-absorb",
+                "fleet-synchronized absorption: the coordinator broadcasts one \
+                 reference dual and every node re-absorbs in lock-step",
             ),
     );
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
@@ -237,6 +251,24 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         seed: p.get_u64("seed")?,
         ..Default::default()
     };
+    if cfg.stab.fleet_absorb {
+        // The fleet protocol synchronizes the log-domain hybrid; don't
+        // let a linear-domain run silently benchmark the baseline.
+        use fedsink::linalg::Domain;
+        if domain == DomainChoice::Linear {
+            anyhow::bail!(
+                "--fleet-absorb synchronizes the log-domain absorption-hybrid \
+                 and has no effect with --domain linear"
+            );
+        }
+        if domain.resolve(&problem) == Domain::Linear {
+            eprintln!(
+                "warning: --fleet-absorb is a no-op here — the auto-resolved \
+                 domain for this problem is linear (the absorption-hybrid only \
+                 runs in the log domain; use --domain log or a smaller --eps)"
+            );
+        }
+    }
     let policy = StopPolicy {
         threshold: p.get_f64("threshold")?,
         max_iters: p.get_usize("max-iters")?,
@@ -264,6 +296,14 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
             let triggers: Vec<String> =
                 st.absorb_triggers.iter().map(|t| t.to_string()).collect();
             println!("  per-histogram absorb triggers: [{}]", triggers.join(", "));
+        }
+        if st.fleet_commands > 0 {
+            println!(
+                "  fleet: {} coordinator commands ({} fleet-driven rebuilds, {} emergency)",
+                st.fleet_commands,
+                st.fleet_rebuilds,
+                st.rebuilds - st.fleet_rebuilds
+            );
         }
     }
     for s in &out.node_stats {
@@ -458,7 +498,11 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
             .opt("sizes", "LIST", "", "problem sizes (empty = scale default)")
             .opt("hists", "LIST", "", "histogram counts (empty = scale default)")
             .opt("nodes", "LIST", "", "node counts (empty = scale default)")
-            .switch("chi2", "add the Table VI chi-square analysis"),
+            .switch("chi2", "add the Table VI chi-square analysis")
+            .switch(
+                "fleet-compare",
+                "add the per-node vs fleet-synchronized absorption rebuild comparison",
+            ),
     );
     let p = spec.parse("perf-grid", args).map_err(anyhow::Error::new)?;
     let mut a = experiments::perf_grid::PerfGridArgs::at_scale(scale_of(&p));
@@ -466,6 +510,7 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
     a.net = net_of(&p)?;
     a.out = out_of(&p);
     a.chi2 = p.has("chi2");
+    a.fleet_compare = p.has("fleet-compare");
     for (flag, field) in [("sizes", 0usize), ("hists", 1), ("nodes", 2)] {
         if p.get(flag).map(|s| !s.is_empty()).unwrap_or(false) {
             let v: Vec<usize> = p.get_list(flag, |s| s.parse().ok())?;

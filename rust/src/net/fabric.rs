@@ -5,8 +5,9 @@ use crate::rng::{child_seed, Rng};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Message kinds — the Sinkhorn protocol only exchanges the two scaling
-/// vectors plus small control payloads.
+/// Message kinds — the Sinkhorn protocol exchanges the two scaling
+/// vectors, small control payloads, and (fleet-absorption runs) the
+/// reference-dual synchronization traffic.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TagKind {
     /// u-slice broadcast.
@@ -15,6 +16,12 @@ pub enum TagKind {
     V,
     /// Control (barriers, convergence votes, scatter/gather frames).
     Ctl,
+    /// Fleet-synchronized absorption: slice-local drift probes to the
+    /// coordinator and the reference-dual `ḡ` broadcast back. Priced by
+    /// the same α–β latency model as every other message (`α` base +
+    /// `β`·bytes), so the protocol's extra per-iteration term shows up
+    /// honestly in the comm-time buckets the paper reports.
+    Gref,
 }
 
 /// One in-flight message.

@@ -4,6 +4,11 @@ use crate::rng::Rng;
 
 /// Latency model: `delay = (base + bytes · per_byte) · jitter (· spike)`.
 ///
+/// This is the α–β cost model of the paper (`base` = α per message,
+/// `per_byte` = β): every message kind pays it — including the
+/// fleet-absorption `Gref` probes/broadcasts, whose extra per-iteration
+/// term therefore shows up honestly in the per-node comm buckets.
+///
 /// `jitter` is lognormal(0, sigma) — multiplicative, median 1 — matching
 /// the heavy-tailed comm-time variability the paper reports (§IV-B4:
 /// "the network's state at time of execution can have a non-deterministic

@@ -47,6 +47,13 @@ pub struct StabStats {
     pub rebuilds: usize,
     /// Per-histogram re-absorption triggers (empty for non-hybrid ops).
     pub absorb_triggers: Vec<usize>,
+    /// Coordinator-issued fleet absorb commands this operator obeyed
+    /// (a subset of `absorbs`; 0 outside `--fleet-absorb` runs).
+    pub fleet_commands: usize,
+    /// Full re-truncations performed on a fleet command (a subset of
+    /// `rebuilds`). `rebuilds − fleet_rebuilds` are local emergency
+    /// rebuilds the coordinator did not anticipate.
+    pub fleet_rebuilds: usize,
 }
 
 impl StabStats {
@@ -85,10 +92,32 @@ impl StabStats {
                     absorbs: x.absorbs + y.absorbs,
                     rebuilds: x.rebuilds + y.rebuilds,
                     absorb_triggers: triggers,
+                    fleet_commands: x.fleet_commands + y.fleet_commands,
+                    fleet_rebuilds: x.fleet_rebuilds + y.fleet_rebuilds,
                 })
             }
         }
     }
+}
+
+/// One node's slice-local view of the fleet-absorption decision inputs,
+/// all computed over rows `[col0, col0 + m)` of a candidate input `x` —
+/// exactly the slice that node already owns in the scaling exchange, so
+/// probes cost `O(m·N)` instead of a redundant `O(n·N)` scan per node.
+#[derive(Clone, Debug)]
+pub struct FleetProbe {
+    /// Per-histogram drift `max_j |x[j,h] − ḡ[j]|` of the slice against
+    /// the operator's currently absorbed reference.
+    pub drift: Vec<f64>,
+    /// Max inter-histogram spread `|x[j,h] − mean_h x[j,·]|` over the
+    /// slice — merged across nodes it is exactly the full-input spread
+    /// (the column mean is a per-row quantity).
+    pub spread: f64,
+    /// Column-mean candidate reference for the slice rows; the
+    /// coordinator concatenates these into the broadcast dual `ḡ`.
+    pub gref_slice: Vec<f64>,
+    /// Current covered drift capacity of the operator's kernel.
+    pub covered: f64,
 }
 
 /// A stateful handle bound to one kernel block `A (m×n)` and one target
@@ -119,6 +148,25 @@ pub trait BlockOp: Send {
     /// stabilized schedule (linear, dense/sparse logsumexp).
     fn stab_stats(&self) -> Option<StabStats> {
         None
+    }
+
+    /// Fleet-absorption drift probe over rows `[col0, col0 + rows)` of
+    /// the candidate input `x` — `None` for operators without a live
+    /// absorbed kernel (non-hybrid schedules, or a hybrid that degraded
+    /// to its dense fallback).
+    fn fleet_probe(&self, x: &Mat, col0: usize, rows: usize) -> Option<FleetProbe> {
+        let _ = (x, col0, rows);
+        None
+    }
+
+    /// Obey a coordinator-broadcast absorb command: move the absorbed
+    /// reference to `gref` with drift capacity `covered` (a cheap
+    /// partial reference move when the support allows it, a full
+    /// re-truncation otherwise). Returns whether a full rebuild was
+    /// paid; no-op (false) for operators without an absorbed kernel.
+    fn fleet_absorb(&mut self, gref: &[f64], covered: f64) -> bool {
+        let _ = (gref, covered);
+        false
     }
 }
 

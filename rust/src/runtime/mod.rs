@@ -19,7 +19,7 @@ mod native;
 #[cfg(feature = "xla-backend")]
 mod pjrt;
 
-pub use backend::{BlockOp, ComputeBackend, StabStats, Target};
+pub use backend::{BlockOp, ComputeBackend, FleetProbe, StabStats, Target};
 pub use manifest::{Manifest, ManifestEntry};
 pub use native::NativeBackend;
 #[cfg(feature = "xla-backend")]
@@ -345,6 +345,68 @@ mod tests {
             stats.absorb_triggers.iter().sum::<usize>() >= stats.absorbs,
             "each absorb must record at least one triggering histogram"
         );
+    }
+
+    #[test]
+    fn fleet_probe_and_absorb_drive_the_hybrid_externally() {
+        use crate::linalg::Stabilization;
+        // The coordinator-driven surface of the hybrid: slice probes
+        // report drift against the absorbed reference (and merge into
+        // exactly the full-input decision), and an external absorb
+        // command moves the reference like the internal schedule would
+        // — products stay equal to the dense logsumexp throughout.
+        let mut rng = Rng::seed_from(61);
+        let (m, n, nh) = (7, 10, 2);
+        let a_log = Mat::rand_uniform(m, n, -30.0, 0.0, &mut rng);
+        let t: Vec<f64> = (0..m).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let be = NativeBackend::new(1);
+        let stab = Stabilization { absorb_threshold: 5.0, ..Stabilization::default() };
+        let mut dense = be
+            .log_block_op(&a_log, Target::Vec(&t), Mat::zeros(m, nh))
+            .unwrap();
+        let mut hybrid = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), Mat::zeros(m, nh), &stab)
+            .unwrap();
+        // Zero drift at the zero reference: nothing to report.
+        let x0 = Mat::zeros(n, nh);
+        let p0 = hybrid.fleet_probe(&x0, 0, n).expect("live hybrid probes");
+        assert_eq!(p0.drift.len(), nh);
+        assert!(p0.drift.iter().all(|&d| d == 0.0));
+        assert_eq!(p0.covered, 5.0);
+        // Drifted input: two disjoint slice probes must merge into the
+        // full-range probe exactly (drift/spread maxima, concatenated
+        // reference candidate).
+        let mut x = Mat::zeros(n, nh);
+        for j in 0..n {
+            for h in 0..nh {
+                x[(j, h)] = -12.0 + (j as f64) * 0.1 + h as f64;
+            }
+        }
+        let full = hybrid.fleet_probe(&x, 0, n).unwrap();
+        let lo = hybrid.fleet_probe(&x, 0, 5).unwrap();
+        let hi = hybrid.fleet_probe(&x, 5, n - 5).unwrap();
+        for h in 0..nh {
+            assert_eq!(full.drift[h], lo.drift[h].max(hi.drift[h]));
+        }
+        assert_eq!(full.spread, lo.spread.max(hi.spread));
+        let mut gref = lo.gref_slice.clone();
+        gref.extend_from_slice(&hi.gref_slice);
+        assert_eq!(gref, full.gref_slice);
+        assert!(full.drift.iter().any(|&d| d > full.covered));
+        // Obey the command; the next update must match dense exactly
+        // without re-triggering the internal schedule.
+        let rebuilt = hybrid.fleet_absorb(&gref, full.spread + 5.0);
+        assert!(rebuilt, "first command moves past the zero anchor");
+        let want = dense.update(&x, 1.0).clone();
+        let got = hybrid.update(&x, 1.0).clone();
+        assert!(got.allclose(&want, 1e-11));
+        let stats = hybrid.stab_stats().unwrap();
+        assert_eq!(stats.fleet_commands, 1);
+        assert_eq!(stats.fleet_rebuilds, 1);
+        assert_eq!(stats.absorbs, 1, "the command pre-empted the update's own trigger");
+        // Non-hybrid operators expose no fleet surface.
+        assert!(dense.fleet_probe(&x, 0, n).is_none());
+        assert!(!dense.fleet_absorb(&gref, 10.0));
     }
 
     #[test]

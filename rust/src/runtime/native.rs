@@ -8,7 +8,7 @@
 //! with a native log-domain operator (row-wise max-absorbed logsumexp) —
 //! the small-ε path the AOT artifact grid does not cover.
 
-use super::backend::{BlockOp, ComputeBackend, StabStats, Target};
+use super::backend::{BlockOp, ComputeBackend, FleetProbe, StabStats, Target};
 use crate::linalg::{AbsorbedLogCsr, Csr, LogCsr, Mat, Stabilization};
 use std::sync::Arc;
 
@@ -47,6 +47,47 @@ const CSR_DENSITY_CUTOFF: f64 = 0.27;
 /// the dense logsumexp permanently instead of silently producing
 /// inf/NaN iterates.
 const HYBRID_MAX_CAPACITY: f64 = 300.0;
+
+/// Whether a shared support with anchor budget `sigma` can represent
+/// drift capacity `needed`: the per-histogram corrections must stay
+/// inside f64's exponent range ([`HYBRID_MAX_CAPACITY`]) *and* the
+/// truncation slack `θ − 2(σ + needed)` must stay above
+/// [`crate::linalg::THETA_SUPPORT_FLOOR`] so no stored absorbed entry
+/// underflows into a degenerate (structurally kept, numerically zero)
+/// support. A tuning that fails either bound has no numerically safe
+/// shared support and the operator degrades to the dense logsumexp.
+fn fits_support(theta: f64, sigma: f64, needed: f64) -> bool {
+    needed.is_finite()
+        && needed <= HYBRID_MAX_CAPACITY
+        && needed <= AbsorbedLogCsr::max_covered(theta, sigma)
+}
+
+/// Column-mean reference candidate and inter-histogram spread over rows
+/// `[r0, r0 + rows)` of the log-scalings `x`, written into
+/// `gref[..rows]`; returns the spread. The ONE implementation shared by
+/// the hybrid's internal schedule (full range, scratch buffer) and the
+/// slice-local fleet probe — slice results merge into exactly the
+/// full-range result only while both sides compute identically, so
+/// there must be a single copy of this arithmetic.
+fn reference_candidate(x: &Mat, r0: usize, rows: usize, gref: &mut [f64]) -> f64 {
+    let nh = x.cols();
+    debug_assert_eq!(gref.len(), rows);
+    let xs = x.as_slice();
+    let inv = 1.0 / nh as f64;
+    let mut spread: f64 = 0.0;
+    for (slot, j) in gref.iter_mut().zip(r0..r0 + rows) {
+        let xrow = &xs[j * nh..(j + 1) * nh];
+        let mean = xrow.iter().sum::<f64>() * inv;
+        *slot = mean;
+        for &xv in xrow {
+            let s = (xv - mean).abs();
+            if s > spread {
+                spread = s;
+            }
+        }
+    }
+    spread
+}
 
 pub struct NativeBackend {
     threads: usize,
@@ -438,7 +479,7 @@ impl HybridLogBlockOp {
         let (m, n) = (a_log.rows(), a_log.cols());
         let nh = u0_log.cols();
         let tau = stab.absorb_threshold;
-        let dense_fallback = tau > HYBRID_MAX_CAPACITY;
+        let dense_fallback = !fits_support(stab.truncation_theta, tau, tau);
         // A usable seed is the same block truncated with the same (θ, τ)
         // tuning; anything else is rebuilt from the dense kernel (or
         // skipped entirely when τ already forces the dense fallback).
@@ -457,6 +498,7 @@ impl HybridLogBlockOp {
                     && k.theta() == stab.truncation_theta
                     && k.sigma() == tau
                     && k.covered() >= tau
+                    && !k.support_saturated()
             })
             .unwrap_or_else(|| {
                 Arc::new(AbsorbedLogCsr::from_dense_log(
@@ -511,22 +553,12 @@ impl HybridLogBlockOp {
             // New reference: the column-wise mean across histograms —
             // it centers the per-histogram corrections, so the residual
             // spread is the smallest symmetric drift bound.
-            let xs = x_log.as_slice();
-            let inv = 1.0 / nh as f64;
-            let mut spread: f64 = 0.0;
-            for j in 0..n {
-                let xrow = &xs[j * nh..(j + 1) * nh];
-                let mean = xrow.iter().sum::<f64>() * inv;
-                self.gref[j] = mean;
-                for &x in xrow {
-                    spread = spread.max((x - mean).abs());
-                }
-            }
+            let spread = reference_candidate(x_log, 0, n, &mut self.gref);
             // Capacity the rebuilt kernel must cover before the next
             // re-absorption can trigger: the residual spread plus the
             // per-histogram drift budget τ.
             let needed = spread + self.tau;
-            if needed > HYBRID_MAX_CAPACITY || !needed.is_finite() {
+            if !fits_support(self.kernel.theta(), self.tau, needed) {
                 // Inter-histogram dual spread beyond any representable
                 // shared support: degrade to the dense logsumexp for
                 // the rest of this operator's life.
@@ -547,9 +579,12 @@ impl HybridLogBlockOp {
                 k.reabsorb(&self.gref);
             } else {
                 k.retruncate(&self.a_log, &self.gref, needed);
-                if count_absorb {
-                    self.stats.rebuilds += 1;
-                }
+                // A full rebuild is a real O(m·n) cost wherever it
+                // happens — update, matvec, or a marginal check — so it
+                // is always counted (the fleet comparison sums these);
+                // only the per-iteration ratio counters below stay
+                // update-gated.
+                self.stats.rebuilds += 1;
             }
             if count_absorb {
                 self.stats.absorbs += 1;
@@ -641,6 +676,63 @@ impl BlockOp for HybridLogBlockOp {
 
     fn stab_stats(&self) -> Option<StabStats> {
         Some(self.stats.clone())
+    }
+
+    /// Slice-local drift probe for the fleet-synchronized absorption
+    /// protocol: drift/spread/reference-candidate over rows
+    /// `[col0, col0 + rows)` of `x` only — the slice this node already
+    /// owns in the scaling exchange.
+    fn fleet_probe(&self, x: &Mat, col0: usize, rows: usize) -> Option<FleetProbe> {
+        if self.dense_fallback {
+            return None;
+        }
+        let nh = self.u.cols();
+        debug_assert_eq!(x.cols(), nh);
+        debug_assert!(col0 + rows <= x.rows());
+        let mut gref_slice = vec![0.0; rows];
+        let spread = reference_candidate(x, col0, rows, &mut gref_slice);
+        let g = self.kernel.reference();
+        let xs = x.as_slice();
+        let mut drift = vec![0.0; nh];
+        for j in col0..col0 + rows {
+            let xrow = &xs[j * nh..(j + 1) * nh];
+            let gj = g[j];
+            for (d, &xv) in drift.iter_mut().zip(xrow) {
+                let dj = (xv - gj).abs();
+                if dj > *d {
+                    *d = dj;
+                }
+            }
+        }
+        Some(FleetProbe { drift, spread, gref_slice, covered: self.kernel.covered() })
+    }
+
+    /// Obey a coordinator absorb command: partial reference move while
+    /// the existing support serves it, full re-truncation otherwise. A
+    /// command whose capacity no shared support can represent degrades
+    /// the operator to the dense logsumexp — consistently fleet-wide,
+    /// since every node receives the same broadcast.
+    fn fleet_absorb(&mut self, gref: &[f64], covered: f64) -> bool {
+        if self.dense_fallback {
+            return false;
+        }
+        debug_assert_eq!(gref.len(), self.a_log.cols());
+        self.stats.absorbs += 1;
+        self.stats.fleet_commands += 1;
+        if !fits_support(self.kernel.theta(), self.tau, covered) {
+            self.dense_fallback = true;
+            return false;
+        }
+        let k = Arc::make_mut(&mut self.kernel);
+        if covered <= k.covered() && k.anchor_shift(gref) <= k.sigma() {
+            k.reabsorb(gref);
+            false
+        } else {
+            k.retruncate(&self.a_log, gref, covered);
+            self.stats.rebuilds += 1;
+            self.stats.fleet_rebuilds += 1;
+            true
+        }
     }
 }
 

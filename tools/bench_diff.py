@@ -18,6 +18,12 @@ Semantics:
 * cases only present on one side are reported but do not fail the gate
   (renames and new benches require an intentional baseline refresh, not
   a red CI);
+* cases may carry a ``note`` field — a stable identity the emitting
+  bench attaches alongside the display name. A case missing by name but
+  whose note uniquely matches one unmatched case on the other side is
+  still compared (rename-tolerant gating), and ``--write-baseline``
+  carries notes from the old baseline through the rewrite so hand-added
+  annotations survive refreshes;
 * a missing baseline file is the bootstrap state: the gate passes with a
   notice telling you how to seed it.
 
@@ -32,7 +38,6 @@ import argparse
 import json
 import os
 import re
-import shutil
 import sys
 
 
@@ -48,26 +53,73 @@ def load_cases(path):
     return cases
 
 
+def _unique_note_index(cases, names):
+    """{note: name} over ``names``, dropping notes that repeat."""
+    index, dupes = {}, set()
+    for name in names:
+        note = cases[name].get("note")
+        if not isinstance(note, str) or not note:
+            continue
+        if note in index or note in dupes:
+            index.pop(note, None)
+            dupes.add(note)
+            continue
+        index[note] = name
+    return index
+
+
+def match_cases(baseline, fresh):
+    """Pair baseline and fresh cases: by name first, then — for the
+    leftovers — by a unique ``note`` identity (rename tolerance).
+
+    Returns (pairs, removed, added): pairs is a list of
+    (base_name, fresh_name), removed/added are the names left unmatched
+    on each side.
+    """
+    pairs = [(n, n) for n in sorted(set(baseline) & set(fresh))]
+    base_only = set(baseline) - set(fresh)
+    fresh_only = set(fresh) - set(baseline)
+    base_by_note = _unique_note_index(baseline, sorted(base_only))
+    fresh_by_note = _unique_note_index(fresh, sorted(fresh_only))
+    for note in sorted(set(base_by_note) & set(fresh_by_note)):
+        b, f = base_by_note[note], fresh_by_note[note]
+        pairs.append((b, f))
+        base_only.discard(b)
+        fresh_only.discard(f)
+    return pairs, sorted(base_only), sorted(fresh_only)
+
+
 def diff(baseline, fresh, threshold, metric, min_ms, only=None):
     """Compare case maps; returns (regressions, improvements, notes).
 
     Each regression/improvement is (name, base_value, fresh_value,
     ratio). Notes are human-readable remarks about skipped/unmatched
-    cases.
+    cases. Cases are matched by name, falling back to a unique ``note``
+    identity so renamed cases stay gated.
     """
     pattern = re.compile(only) if only else None
     regressions, improvements, notes = [], [], []
-    for name in sorted(set(baseline) | set(fresh)):
+    pairs, removed, added = match_cases(baseline, fresh)
+    for name in removed:
         if pattern and not pattern.search(name):
             continue
-        if name not in fresh:
-            notes.append(f"case removed (not in fresh run): {name}")
+        notes.append(f"case removed (not in fresh run): {name}")
+    for name in added:
+        if pattern and not pattern.search(name):
             continue
-        if name not in baseline:
-            notes.append(f"new case (not in baseline): {name}")
+        notes.append(f"new case (not in baseline): {name}")
+    for base_name, fresh_name in sorted(pairs, key=lambda p: p[1]):
+        if pattern and not pattern.search(fresh_name):
             continue
-        base = baseline[name].get(metric)
-        new = fresh[name].get(metric)
+        name = fresh_name
+        if base_name != fresh_name:
+            note = fresh[fresh_name].get("note")
+            notes.append(
+                f"renamed case matched by note {note!r}: "
+                f"{base_name} -> {fresh_name}"
+            )
+        base = baseline[base_name].get(metric)
+        new = fresh[fresh_name].get(metric)
         if not isinstance(base, (int, float)) or not isinstance(new, (int, float)):
             notes.append(f"case lacks metric {metric!r}: {name}")
             continue
@@ -80,6 +132,26 @@ def diff(baseline, fresh, threshold, metric, min_ms, only=None):
         elif ratio < 1.0 - threshold:
             improvements.append((name, base, new, ratio))
     return regressions, improvements, notes
+
+
+def refresh_baseline(baseline_path, fresh_path):
+    """Copy the fresh document over the baseline, carrying per-case
+    ``note`` annotations from the old baseline (matched by name) so
+    hand-added identities survive the rewrite."""
+    with open(fresh_path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if os.path.exists(baseline_path):
+        old = load_cases(baseline_path)
+        for case in doc.get("cases", []):
+            name = case.get("name")
+            if "note" in case or name not in old:
+                continue
+            note = old[name].get("note")
+            if isinstance(note, str) and note:
+                case["note"] = note
+    with open(baseline_path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=1)
+        fh.write("\n")
 
 
 def main(argv=None):
@@ -117,7 +189,7 @@ def main(argv=None):
         return 2
 
     if args.write_baseline:
-        shutil.copyfile(args.fresh, args.baseline)
+        refresh_baseline(args.baseline, args.fresh)
         print(f"baseline refreshed: {args.fresh} -> {args.baseline}")
         return 0
 
@@ -142,7 +214,7 @@ def main(argv=None):
     for name, base, new, ratio in regressions:
         print(f"REGRESSED {name}: {base:.4f} -> {new:.4f} ms ({ratio:.2f}x)")
 
-    compared = len(set(baseline) & set(fresh))
+    compared = len(match_cases(baseline, fresh)[0])
     print(
         f"compared {compared} case(s) on {args.metric}: "
         f"{len(regressions)} regression(s), {len(improvements)} improvement(s)"
