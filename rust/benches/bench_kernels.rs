@@ -146,6 +146,61 @@ fn main() {
         );
     }
 
+    section("absorbed GEMM thread crossover (s=0.9)");
+    // The shape-aware thread dispatch of the hybrid engine
+    // (`ABSORBED_GEMM_PAR_MIN_WORK` in runtime/native.rs) is calibrated
+    // here: at nnz·N below the crossover the banded SpMM loses to its
+    // own spawn cost, above it the configured threads win. Stable
+    // `note` identities keep the perf gate tracking these cases across
+    // rewordings.
+    let xover_shapes: &[(usize, usize)] = if quick {
+        &[(512, 8), (1024, 64)]
+    } else {
+        &[(256, 8), (512, 8), (1024, 8), (1024, 64)]
+    };
+    for &(n, nh) in xover_shapes {
+        let mut rng = Rng::seed_from(child_seed(0xB_0007, (n * 1000 + nh) as u64));
+        let a_log = masked_log_kernel(n, 0.9, &mut rng);
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &vec![0.0; n], -60.0, 15.0, 15.0);
+        let x_log = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        let mut ex = Mat::zeros(n, nh);
+        let mut lin = Mat::zeros(n, nh);
+        let mut out = Mat::zeros(n, nh);
+        for threads in [1usize, 2, 4] {
+            baseline.push(
+                b.run(
+                    &format!(
+                        "absorbed-gemm n={n} N={nh} t={threads} (nnzN={})",
+                        k.nnz() * nh
+                    ),
+                    || k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut out, threads),
+                )
+                .with_note(&format!("absorbed-gemm-xover-n{n}-N{nh}-t{threads}")),
+            );
+        }
+    }
+
+    section("wire codec: encode cost per format (n=4096 slice stream)");
+    // The --wire-format encode path as the fabric pays it: per-slice
+    // scale header + 4-byte lanes + error-feedback residual (f32), plus
+    // the delta reference walk (deltaf32). The clone models the payload
+    // hand-off every send performs, identically across formats.
+    {
+        use fedsink::net::wire::{StreamCodec, WireFormat};
+        let n = 4096usize;
+        let mut rng = Rng::seed_from(child_seed(0xB_0008, n as u64));
+        let values: Vec<f64> = (0..n).map(|_| rng.uniform_range(-50.0, 50.0)).collect();
+        for fmt in [WireFormat::F64, WireFormat::F32, WireFormat::DeltaF32] {
+            let mut codec = StreamCodec::new(fmt);
+            baseline.push(
+                b.run(&format!("wire-encode {} n={n}", fmt.name()), || {
+                    let _ = codec.encode(values.clone());
+                })
+                .with_note(&format!("wire-encode-{}-n{n}", fmt.name())),
+            );
+        }
+    }
+
     section("fleet absorption tiers: partial reference move vs full retruncation");
     // The two costs a fleet-synchronized absorb command arbitrates per
     // node: the O(nnz) reference move the shared anchor usually allows

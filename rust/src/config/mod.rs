@@ -173,6 +173,19 @@ pub struct SolveConfig {
     pub artifacts_dir: String,
     /// Network latency profile.
     pub net: crate::net::LatencyModel,
+    /// Wire codec for the coded scaling/chunk/Gref streams
+    /// (`--wire-format`): latency and byte counters are priced on the
+    /// encoded frames, so the lossy formats halve the β term. Control
+    /// traffic (votes, barriers, stop decisions) always rides exact
+    /// frames.
+    pub wire: crate::net::WireFormat,
+    /// Slice-streaming exchange (`--stream-exchange`): synchronous
+    /// coordinators fold peer scaling slices into the pending block
+    /// product as their frames become deliverable instead of waiting
+    /// out the full gather barrier. Inert for async variants (no
+    /// barrier to stream) and under `--fleet-absorb` (the fleet round
+    /// must see the product *after* the commanded re-absorption).
+    pub stream_exchange: bool,
 }
 
 impl SolveConfig {
@@ -204,6 +217,8 @@ impl Default for SolveConfig {
             seed: 42,
             artifacts_dir: default_artifacts_dir(),
             net: crate::net::LatencyModel::lan(),
+            wire: crate::net::WireFormat::F64,
+            stream_exchange: false,
         }
     }
 }
@@ -363,6 +378,10 @@ mod tests {
         assert!(c.max_iters > 0);
         assert_eq!(c.local_iters, 1);
         assert_eq!(c.domain, DomainChoice::Auto);
+        // The default wire is the exact PR-4 baseline: F64 frames,
+        // barrier exchange.
+        assert_eq!(c.wire, crate::net::WireFormat::F64);
+        assert!(!c.stream_exchange);
     }
 
     #[test]

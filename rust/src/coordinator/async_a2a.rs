@@ -31,7 +31,11 @@ use crate::sinkhorn::StopReason;
 
 /// The async protocol reuses one tag per kind for the whole run; rounds
 /// are implicit in `sent_iter` and latest-wins reads keep only the
-/// freshest slice per peer.
+/// freshest slice per peer. The tag doubles as the coded-stream id:
+/// tags are constant here, so `(dst, kind, tag)` is a stable stream
+/// identity for the wire codec (see `crate::net::wire`). The final
+/// consistent AllGather stays on the exact path so the assembled
+/// outcome state is bit-true.
 const ASYNC_TAG: u64 = 0;
 /// Control tag announcing "this node stopped".
 const DONE_TAG: u64 = 1;
@@ -219,7 +223,14 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         timer.comm(|| {
             for peer in 0..c {
                 if peer != id {
-                    ep.send(peer, TagKind::U, ASYNC_TAG, u_jj.as_slice().to_vec(), k64);
+                    ep.send_coded(
+                        peer,
+                        TagKind::U,
+                        ASYNC_TAG,
+                        ASYNC_TAG,
+                        u_jj.as_slice().to_vec(),
+                        k64,
+                    );
                 }
             }
         });
@@ -230,7 +241,14 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         timer.comm(|| {
             for peer in 0..c {
                 if peer != id {
-                    ep.send(peer, TagKind::V, ASYNC_TAG, v_jj.as_slice().to_vec(), k64);
+                    ep.send_coded(
+                        peer,
+                        TagKind::V,
+                        ASYNC_TAG,
+                        ASYNC_TAG,
+                        v_jj.as_slice().to_vec(),
+                        k64,
+                    );
                 }
             }
         });
@@ -396,7 +414,9 @@ fn coordinate(
     let mut refs: Vec<&[f64]> = Vec::with_capacity(c);
     for probe in &coord.probes {
         match probe {
-            Some(pay) if pay.first().copied().unwrap_or(-1.0) as u64 == coord.seq => {
+            // `.round()`: probe frames may ride a lossy wire format,
+            // so the integer seq lane carries quantization noise ≪ 0.5.
+            Some(pay) if pay.first().copied().unwrap_or(-1.0).round() as u64 == coord.seq => {
                 refs.push(pay.as_slice());
             }
             _ => return,
@@ -409,7 +429,7 @@ fn coordinate(
     let payload = fleet::command_payload(coord.seq, &cmd);
     timer.comm(|| {
         for j in 1..c {
-            ep.send(j, TagKind::Gref, cmd_tag, payload.clone(), k64);
+            ep.send_coded(j, TagKind::Gref, cmd_tag, cmd_tag, payload.clone(), k64);
         }
     });
     timer.comp(|| op.fleet_absorb(&cmd.gref, cmd.needed));
@@ -456,6 +476,7 @@ fn send_fleet_probe(
     timer: &mut SplitTimer,
 ) {
     if let Some(p) = timer.comp(|| op.fleet_probe(x_full, r0, m)) {
-        timer.comm(|| ep.send(0, TagKind::Gref, probe_tag, fleet::probe_payload(seq, &p), k64));
+        let payload = fleet::probe_payload(seq, &p);
+        timer.comm(|| ep.send_coded(0, TagKind::Gref, probe_tag, probe_tag, payload, k64));
     }
 }

@@ -16,7 +16,11 @@
 //! consistent and the rebuild is one fleet decision.
 //!
 //! Wire format (all on [`crate::net::TagKind::Gref`], priced by the
-//! same α–β latency model as the scaling exchange):
+//! same α–β latency model as the scaling exchange — and riding the same
+//! `--wire-format` codec, so probe/command payloads compress with the
+//! scaling slices; quantizing `ḡ` is safe because absorption is an
+//! exact re-parameterization for *any* reference, it only perturbs when
+//! rebuilds trigger):
 //!
 //! * **probe** (node → coordinator, slice-aligned):
 //!   `[seq, covered, spread, drift[0..N], ḡ_slice[0..m]]` — the node's
@@ -122,10 +126,13 @@ pub fn hold_payload(seq: u64) -> Vec<f64> {
 }
 
 /// Decode a command broadcast: `(seq, Some((needed, ḡ)))` for an absorb
-/// command, `(seq, None)` for a hold.
+/// command, `(seq, None)` for a hold. Robust to a lossy wire format:
+/// the integer lanes (seq, absorb flag) may carry quantization noise
+/// well under 0.5, so they are decoded by rounding — a plain `as u64`
+/// truncation would read 6.9999 as 6 and re-apply a stale command.
 pub fn parse_command(payload: &[f64]) -> (u64, Option<(f64, &[f64])>) {
-    let seq = payload.first().copied().unwrap_or(0.0) as u64;
-    if payload.len() > 2 && payload[1] > 0.0 {
+    let seq = payload.first().copied().unwrap_or(0.0).round() as u64;
+    if payload.len() > 2 && payload[1] > 0.5 {
         (seq, Some((payload[2], &payload[3..])))
     } else {
         (seq, None)

@@ -360,6 +360,172 @@ mod tests {
         );
     }
 
+    /// The exact-path streaming guarantee: `--stream-exchange` with the
+    /// default F64 wire reproduces the barrier baseline to ≤ 1e-12 on
+    /// both synchronous topologies, in the linear domain (partial-GEMM
+    /// folds) and the log domain (online-LSE merge / absorbed folds).
+    #[test]
+    fn streamed_exchange_matches_barrier_baseline() {
+        use crate::config::DomainChoice;
+        let lin = ProblemSpec::new(24).with_eps(0.5).build(3);
+        let log = ProblemSpec::new(24)
+            .with_hists(2)
+            .with_eps(0.01)
+            .with_condition(crate::workload::CondClass::Medium)
+            .build(91);
+        let log_pol = StopPolicy {
+            threshold: 1e-9,
+            max_iters: 30_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        for variant in [Variant::SyncA2A, Variant::SyncStar] {
+            for c in [2usize, 4] {
+                for (p, dom, pol) in [
+                    (&lin, DomainChoice::Linear, policy()),
+                    (&log, DomainChoice::Log, log_pol),
+                ] {
+                    let mut base_cfg = cfg(variant, c);
+                    base_cfg.domain = dom;
+                    let base = run_federated(p, &base_cfg, pol, false);
+                    assert!(base.converged, "{} c={c} {dom:?} barrier", variant.name());
+                    let mut scfg = base_cfg.clone();
+                    scfg.stream_exchange = true;
+                    let out = run_federated(p, &scfg, pol, false);
+                    assert!(out.converged, "{} c={c} {dom:?} streamed", variant.name());
+                    assert_eq!(out.iterations, base.iterations, "{} c={c} {dom:?}", variant.name());
+                    assert!(
+                        out.state.u.allclose(&base.state.u, 1e-12),
+                        "{} c={c} {dom:?}: streamed u diverged from barrier",
+                        variant.name()
+                    );
+                    assert!(
+                        out.state.v.allclose(&base.state.v, 1e-12),
+                        "{} c={c} {dom:?}: streamed v diverged from barrier",
+                        variant.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Streaming composes with fleet absorption by deferring to it: the
+    /// combined run still reproduces the centralized hybrid exactly
+    /// (the fleet command must land before the product that consumes
+    /// the exchanged state, so product folding is inert there).
+    #[test]
+    fn streaming_with_fleet_absorption_stays_exact() {
+        use crate::config::DomainChoice;
+        use crate::linalg::Domain;
+        let p = ProblemSpec::new(24)
+            .with_hists(2)
+            .with_eps(0.01)
+            .with_condition(crate::workload::CondClass::Medium)
+            .build(91);
+        let pol = StopPolicy {
+            threshold: 1e-9,
+            max_iters: 30_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        let tau = 0.5;
+        let be = make_backend(BackendKind::Native, "", 1).unwrap();
+        let stab = crate::linalg::Stabilization { absorb_threshold: tau, ..Default::default() };
+        let central = CentralizedSolver::new(be)
+            .with_stabilization(stab)
+            .solve_in(&p, pol, 1.0, Domain::Log);
+        assert!(central.converged());
+        let mut fcfg = cfg(Variant::SyncA2A, 4);
+        fcfg.domain = DomainChoice::Log;
+        fcfg.stab.absorb_threshold = tau;
+        fcfg.stab.fleet_absorb = true;
+        fcfg.stream_exchange = true;
+        let out = run_federated(&p, &fcfg, pol, false);
+        assert!(out.converged, "{:?}", out.stop);
+        assert!(out.state.u.allclose(&central.state.u, 1e-10));
+        assert!(out.state.v.allclose(&central.state.v, 1e-10));
+        assert!(out.stab.as_ref().unwrap().fleet_commands > 0);
+    }
+
+    /// Lossy wire formats: every coordinator still reaches the solver
+    /// tolerance (DeltaF32 to a tight one — its quantization step
+    /// shrinks with the iterate deltas; F32 to a tolerance above its
+    /// slice-range noise floor), and the f32 frames halve the scaling-
+    /// exchange bytes relative to f64.
+    #[test]
+    fn lossy_wire_formats_reach_the_solver_tolerance() {
+        use crate::net::WireFormat;
+        // m·N = 64 per slice keeps the frame bytes well above the fixed
+        // per-message envelope, so the f32-vs-f64 ratio is readable.
+        let p = ProblemSpec::new(32).with_hists(4).with_eps(0.5).build(3);
+        let run = |wire: WireFormat, threshold: f64, stream: bool| {
+            let mut c = cfg(Variant::SyncA2A, 2);
+            c.wire = wire;
+            c.stream_exchange = stream;
+            let pol = StopPolicy { threshold, max_iters: 8000, ..Default::default() };
+            run_federated(&p, &c, pol, false)
+        };
+        let base = run(WireFormat::F64, 1e-10, false);
+        assert!(base.converged);
+        for stream in [false, true] {
+            let delta = run(WireFormat::DeltaF32, 1e-10, stream);
+            assert!(delta.converged, "deltaf32 stream={stream}: {:?}", delta.stop);
+            let (ea, eb) = crate::sinkhorn::full_marginal_errors(&p, &delta.state, 0);
+            assert!(ea < 1e-9 && eb < 1e-9, "deltaf32 stream={stream}: ({ea}, {eb})");
+        }
+        let f32_run = run(WireFormat::F32, 1e-6, false);
+        assert!(f32_run.converged, "f32: {:?}", f32_run.stop);
+        let (ea, eb) = crate::sinkhorn::full_marginal_errors(&p, &f32_run.state, 0);
+        assert!(ea < 1e-5 && eb < 1e-5, "f32: ({ea}, {eb})");
+        // β-term check on the scaling exchange: same protocol, ~half
+        // the U/V bytes (per-message envelope + scale header keep it
+        // just above exactly half).
+        let per_msg_f64 = base.traffic.bytes_of(crate::net::TagKind::U) as f64
+            / base.traffic.by_kind.iter().find(|k| k.0 == "U").unwrap().2 as f64;
+        let per_msg_f32 = f32_run.traffic.bytes_of(crate::net::TagKind::U) as f64
+            / f32_run.traffic.by_kind.iter().find(|k| k.0 == "U").unwrap().2 as f64;
+        assert!(
+            per_msg_f32 < 0.65 * per_msg_f64,
+            "per-message U bytes: f32 {per_msg_f32} vs f64 {per_msg_f64}"
+        );
+    }
+
+    /// The per-TagKind counters cover every kind the protocol uses, and
+    /// a fleet run attributes its probe/command traffic to `Gref`.
+    #[test]
+    fn traffic_counters_split_by_kind() {
+        use crate::config::DomainChoice;
+        use crate::net::TagKind;
+        let p = ProblemSpec::new(16).with_eps(0.5).build(9);
+        let out = run_federated(&p, &cfg(Variant::SyncStar, 4), policy(), false);
+        assert!(out.traffic.bytes_of(TagKind::U) > 0);
+        assert!(out.traffic.bytes_of(TagKind::V) > 0);
+        assert!(out.traffic.bytes_of(TagKind::Ctl) > 0);
+        assert_eq!(out.traffic.bytes_of(TagKind::Gref), 0);
+        assert_eq!(
+            out.traffic.total_bytes,
+            out.traffic.by_kind.iter().map(|&(_, b, _)| b).sum::<u64>()
+        );
+        let p = ProblemSpec::new(24)
+            .with_hists(2)
+            .with_eps(0.01)
+            .with_condition(crate::workload::CondClass::Medium)
+            .build(91);
+        let pol = StopPolicy {
+            threshold: 1e-9,
+            max_iters: 30_000,
+            check_every: 10,
+            ..Default::default()
+        };
+        let mut fcfg = cfg(Variant::SyncA2A, 2);
+        fcfg.domain = DomainChoice::Log;
+        fcfg.stab.absorb_threshold = 0.5;
+        fcfg.stab.fleet_absorb = true;
+        let out = run_federated(&p, &fcfg, pol, false);
+        assert!(out.converged);
+        assert!(out.traffic.bytes_of(TagKind::Gref) > 0, "fleet run must meter Gref traffic");
+    }
+
     #[test]
     fn async_a2a_converges_with_damping() {
         let p = ProblemSpec::new(16).with_eps(0.5).build(5);

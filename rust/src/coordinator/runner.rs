@@ -4,7 +4,7 @@ use super::{aggregate_stop, async_a2a, star, sync_a2a};
 use crate::config::{DomainChoice, SolveConfig, Variant};
 use crate::linalg::{Domain, Mat, Stabilization};
 use crate::metrics::SplitTimer;
-use crate::net::{DelayTracker, LatencyModel, SimNet};
+use crate::net::{DelayTracker, LatencyModel, NetTraffic, SimNet};
 use crate::runtime::{make_backend, StabStats};
 use crate::sinkhorn::{CentralizedSolver, State, StopPolicy, StopReason};
 use crate::workload::{Partition, Problem};
@@ -64,6 +64,10 @@ pub struct FederatedOutcome {
     /// Absorption-hybrid counters merged across every node that ran the
     /// stabilized log schedule (`None` when none did).
     pub stab: Option<StabStats>,
+    /// Per-[`crate::net::TagKind`] wire traffic (bytes priced on the
+    /// encoded frames); default-empty for centralized runs, which have
+    /// no fabric.
+    pub traffic: NetTraffic,
 }
 
 /// Everything a protocol implementation needs.
@@ -93,6 +97,16 @@ impl RunCtx<'_> {
     /// ever send degraded probes — skip the traffic entirely.)
     pub fn fleet_on(&self) -> bool {
         self.stab.fleet_absorb && self.domain == Domain::Log && self.stab.hybrid_enabled()
+    }
+
+    /// Whether the slice-streaming exchange is active
+    /// (`--stream-exchange`): folds peer slices into the pending block
+    /// product as frames land. Disabled under fleet absorption — the
+    /// coordinator's re-absorption command must land *before* the
+    /// product that consumes the exchanged state, which would
+    /// invalidate partials folded against the pre-command kernel.
+    pub fn stream_on(&self) -> bool {
+        self.cfg.stream_exchange && !self.fleet_on()
     }
 }
 
@@ -164,6 +178,7 @@ pub fn run_federated(
             stab: out.stab,
             state: out.state,
             secs: t0.elapsed().as_secs_f64(),
+            traffic: NetTraffic::default(),
         };
     }
 
@@ -173,7 +188,7 @@ pub fn run_federated(
         _ => cfg.clients,
     };
     let latency: LatencyModel = cfg.net;
-    let net = Arc::new(SimNet::new(nodes, latency, cfg.seed));
+    let net = Arc::new(SimNet::with_wire(nodes, latency, cfg.seed, cfg.wire));
     let delays = Arc::new(DelayTracker::new());
 
     let ctx = RunCtx {
@@ -185,7 +200,7 @@ pub fn run_federated(
         domain,
         stab: cfg.stab,
         backend,
-        net,
+        net: net.clone(),
         delays: delays.clone(),
     };
 
@@ -238,6 +253,7 @@ pub fn run_federated(
         trace,
         secs: t0.elapsed().as_secs_f64(),
         stab,
+        traffic: net.traffic(),
     }
 }
 

@@ -28,9 +28,17 @@ use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::{Domain, Mat};
 use crate::metrics::{Clock, SplitTimer};
-use crate::net::{bcast, gather, TagKind};
-use crate::runtime::{StabStats, Target};
+use crate::net::{bcast, gather, Endpoint, TagKind};
+use crate::runtime::{BlockOp, StabStats, Target};
 use crate::sinkhorn::StopReason;
+
+/// Coded-stream ids (stable per logical stream — see
+/// [`crate::net::wire`]): client scaling slices up to the server, and
+/// the server's two product-chunk streams back down. Convergence votes
+/// and stop decisions stay on the exact path.
+const STREAM_SLICE: u64 = 0;
+const STREAM_CHUNK_Q: u64 = 1;
+const STREAM_CHUNK_R: u64 = 2;
 
 pub fn run(ctx: &RunCtx<'_>, async_mode: bool) -> Vec<NodeOutcome> {
     let c = ctx.cfg.clients;
@@ -101,6 +109,11 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     // protocol, zero extra messages (the Gref α–β term vanishes).
     let fleet = ctx.fleet_on();
     let tau = ctx.stab.absorb_threshold;
+    // Streamed exchange: the server folds each client's slice into the
+    // pending product as its frame becomes deliverable instead of
+    // waiting out the whole gather (inert under fleet — the local
+    // decide/apply must see the product after the re-absorption).
+    let stream = ctx.stream_on();
 
     for k in 1..=ctx.policy.max_iters {
         iterations = k;
@@ -110,16 +123,15 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
         // server holds no chunk of its own, so the scatter is explicit
         // per-client sends rather than the equal-split collective.)
         round += 1;
-        let v_parts = timer.comm(|| gather(&ep, c, TagKind::V, round, &[], k64).unwrap());
-        assemble_clients(&mut v_full, &v_parts, m, c);
-        if fleet {
-            timer.comp(|| fleet::local_decide_apply(&mut *k_op, &v_full, tau));
-        }
-        let q = timer.comp(|| k_op.matvec(&v_full).clone());
+        let q = server_product(
+            &ep, TagKind::V, round, &mut *k_op, &mut v_full, m, c, stream, fleet, tau,
+            &mut timer,
+        );
         round += 1;
         timer.comm(|| {
             for j in 0..c {
-                ep.send(j, TagKind::Ctl, round, chunk_of(&q, j, m).to_vec(), k64);
+                let chunk = chunk_of(&q, j, m).to_vec();
+                ep.send_coded(j, TagKind::Ctl, round, STREAM_CHUNK_Q, chunk, k64);
             }
         });
 
@@ -152,16 +164,15 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
 
         // Gather u slices → r = Kᵀ u → scatter the r row chunks.
         round += 1;
-        let u_parts = timer.comm(|| gather(&ep, c, TagKind::U, round, &[], k64).unwrap());
-        assemble_clients(&mut u_full, &u_parts, m, c);
-        if fleet {
-            timer.comp(|| fleet::local_decide_apply(&mut *kt_op, &u_full, tau));
-        }
-        let r = timer.comp(|| kt_op.matvec(&u_full).clone());
+        let r = server_product(
+            &ep, TagKind::U, round, &mut *kt_op, &mut u_full, m, c, stream, fleet, tau,
+            &mut timer,
+        );
         round += 1;
         timer.comm(|| {
             for j in 0..c {
-                ep.send(j, TagKind::Ctl, round, chunk_of(&r, j, m).to_vec(), k64);
+                let chunk = chunk_of(&r, j, m).to_vec();
+                ep.send_coded(j, TagKind::Ctl, round, STREAM_CHUNK_R, chunk, k64);
             }
         });
     }
@@ -209,7 +220,9 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 
         // Send v slice; receive the q = (K v) chunk for this block.
         round += 1;
-        timer.comm(|| gather(&ep, server, TagKind::V, round, v_jj.as_slice(), k64));
+        timer.comm(|| {
+            ep.send_coded(server, TagKind::V, round, STREAM_SLICE, v_jj.as_slice().to_vec(), k64)
+        });
         round += 1;
         let q = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
 
@@ -248,7 +261,9 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 
         // Send u slice; receive r chunk; v_jj ← α b⊘r + (1−α) v_jj.
         round += 1;
-        timer.comm(|| gather(&ep, server, TagKind::U, round, u_jj.as_slice(), k64));
+        timer.comm(|| {
+            ep.send_coded(server, TagKind::U, round, STREAM_SLICE, u_jj.as_slice().to_vec(), k64)
+        });
         round += 1;
         let r = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
         timer.comp(|| targets.damped_v_update(&mut v_jj, &r, alpha));
@@ -379,7 +394,14 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             timer.comm(|| {
                 for j in 0..c {
                     if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
-                        ep.send(j, TagKind::Ctl, A_TAG, chunk_of(&q, j, m).to_vec(), s64);
+                        ep.send_coded(
+                            j,
+                            TagKind::Ctl,
+                            A_TAG,
+                            STREAM_CHUNK_Q,
+                            chunk_of(&q, j, m).to_vec(),
+                            s64,
+                        );
                     }
                 }
             });
@@ -403,7 +425,14 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             timer.comm(|| {
                 for j in 0..c {
                     if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
-                        ep.send(j, TagKind::Ctl, A_TAG + 1, chunk_of(&r, j, m).to_vec(), s64);
+                        ep.send_coded(
+                            j,
+                            TagKind::Ctl,
+                            A_TAG + 1,
+                            STREAM_CHUNK_R,
+                            chunk_of(&r, j, m).to_vec(),
+                            s64,
+                        );
                     }
                 }
             });
@@ -460,7 +489,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut iterations = 0;
 
     // Prime the server with our initial v slice.
-    ep.send(server, TagKind::V, A_TAG, v_jj.as_slice().to_vec(), 0);
+    ep.send_coded(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), 0);
 
     for k in 1..=ctx.policy.max_iters {
         iterations = k;
@@ -495,7 +524,9 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         };
 
         timer.comp(|| targets.damped_u_update(&mut u_jj, &q_latest, alpha));
-        timer.comm(|| ep.send(server, TagKind::U, A_TAG, u_jj.as_slice().to_vec(), k64));
+        timer.comm(|| {
+            ep.send_coded(server, TagKind::U, A_TAG, STREAM_SLICE, u_jj.as_slice().to_vec(), k64)
+        });
 
         // Freshest r chunk, then the damped v update on it.
         timer.comm(|| {
@@ -505,7 +536,9 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             }
         });
         timer.comp(|| targets.damped_v_update(&mut v_jj, &r_latest, alpha));
-        timer.comm(|| ep.send(server, TagKind::V, A_TAG, v_jj.as_slice().to_vec(), k64));
+        timer.comm(|| {
+            ep.send_coded(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), k64)
+        });
 
         if let Some(local) = pre_err {
             let est = local * c as f64;
@@ -545,6 +578,54 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 // --------------------------------------------------------------------------
 // Helpers
 // --------------------------------------------------------------------------
+
+/// Synchronous server-side product over the gathered client slices.
+/// With the streamed exchange live, each client's slice folds into the
+/// operator's pending product the moment its frame is deliverable
+/// (decode + partial compute hide behind the remaining transfers);
+/// otherwise — streaming off, an operator without the accumulation
+/// hooks, or a hybrid fold that aborted on a drift trip — the fully
+/// assembled state goes through the ordinary barrier `matvec`. Fleet's
+/// local decide/apply always runs on the assembled state before a
+/// barrier product, exactly as in the pre-streaming protocol.
+#[allow(clippy::too_many_arguments)]
+fn server_product(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    op: &mut dyn BlockOp,
+    full: &mut Mat,
+    m: usize,
+    c: usize,
+    stream: bool,
+    fleet: bool,
+    tau: f64,
+    timer: &mut SplitTimer,
+) -> Mat {
+    let nh = full.cols();
+    let mut live = stream && op.supports_streaming();
+    if live {
+        op.accum_begin();
+    }
+    let mut pending = vec![true; c];
+    while pending.iter().any(|&p| p) {
+        let msg = timer.comm(|| ep.recv_any_blocking(&pending, kind, round));
+        pending[msg.src] = false;
+        let r0 = msg.src * m;
+        full.as_mut_slice()[r0 * nh..(r0 + m) * nh].copy_from_slice(&msg.payload);
+        if live {
+            live = timer.comp(|| op.accum_fold(r0, m, &msg.payload));
+        }
+    }
+    if fleet {
+        timer.comp(|| fleet::local_decide_apply(op, full, tau));
+    }
+    if live {
+        timer.comp(|| op.accum_matvec().clone())
+    } else {
+        timer.comp(|| op.matvec(full).clone())
+    }
+}
 
 /// Per-client marginal targets in the run's numerics domain. Linear
 /// clients divide by the received product chunk; log clients subtract in
@@ -652,11 +733,4 @@ fn write_block(full: &mut Mat, block: &[f64], j: usize, m: usize) {
     let nh = full.cols();
     debug_assert_eq!(block.len(), m * nh);
     full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(block);
-}
-
-/// Assemble gathered client parts (server side).
-fn assemble_clients(full: &mut Mat, parts: &[Vec<f64>], m: usize, c: usize) {
-    for (j, part) in parts.iter().take(c).enumerate() {
-        write_block(full, part, j, m);
-    }
 }

@@ -15,9 +15,20 @@ use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
-use crate::net::{allgather, bcast, gather, Endpoint, TagKind};
+use crate::net::{allgather, allgather_coded, bcast_coded, gather_coded, Endpoint, TagKind};
 use crate::runtime::{BlockOp, StabStats, Target};
 use crate::sinkhorn::StopReason;
+
+/// Coded-stream ids: each logical stream carries the same quantity
+/// round after round, so the wire codec's delta/error-feedback state
+/// stays coherent (see [`crate::net::wire`]).
+const STREAM_U: u64 = 0;
+const STREAM_V: u64 = 1;
+/// Fleet probe/command stream pairs, one per phase (the v-ops'
+/// reference lives in u-space and vice versa — their probes are
+/// different quantities and must not share a delta stream).
+const STREAM_GREF_V_OPS: u64 = 2;
+const STREAM_GREF_U_OPS: u64 = 4;
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
     super::runner::spawn_nodes(ctx.cfg.clients, |id| client(ctx, id))
@@ -70,6 +81,16 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     // dual per product space, so every node re-absorbs in lock-step.
     let fleet = ctx.fleet_on();
     let tau = ctx.stab.absorb_threshold;
+    // Slice-streaming exchange (`--stream-exchange`): peer slices are
+    // folded into the consuming operator's pending product as their
+    // frames become deliverable, hiding decode + partial compute behind
+    // the transfers still in flight. The U exchange feeds the v-op in
+    // the same iteration; the V exchange feeds the u-op's *next*
+    // update, across the loop boundary (nothing touches `v_full`
+    // between the exchange and that update).
+    let stream = ctx.stream_on();
+    let mut v_accum_live = false;
+    let mut u_accum_live = false;
 
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;
@@ -83,14 +104,43 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // in between, clients iterate on locally-refreshed state.
         let communicate = k % w == 0;
 
-        let u_jj = timer.comp(|| u_op.update(&v_full, alpha).clone());
+        let u_jj = timer.comp(|| {
+            if u_accum_live {
+                u_op.accum_update(alpha).clone()
+            } else {
+                u_op.update(&v_full, alpha).clone()
+            }
+        });
+        u_accum_live = false;
         copy_slice(&mut u_full, &u_jj, shard.r0);
         if communicate {
             round += 1;
-            let u_parts = timer.comm(|| {
-                allgather(&ep, TagKind::U, round, slice_of(&u_full, shard.r0, m), k as u64)
-            });
-            assemble(&mut u_full, &u_parts, m);
+            if stream {
+                v_accum_live = stream_exchange(
+                    &ep,
+                    TagKind::U,
+                    round,
+                    STREAM_U,
+                    &mut u_full,
+                    shard.r0,
+                    m,
+                    k as u64,
+                    &mut *v_op,
+                    &mut timer,
+                );
+            } else {
+                let u_parts = timer.comm(|| {
+                    allgather_coded(
+                        &ep,
+                        TagKind::U,
+                        round,
+                        STREAM_U,
+                        slice_of(&u_full, shard.r0, m),
+                        k as u64,
+                    )
+                });
+                assemble(&mut u_full, &u_parts, m);
+            }
             if fleet {
                 // Fleet-synchronized absorption for the v-operators
                 // (their reference lives in u-space): probes ride the
@@ -99,6 +149,7 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 fleet_sync(
                     &ep,
                     round,
+                    STREAM_GREF_V_OPS,
                     &mut *v_op,
                     &u_full,
                     shard.r0,
@@ -111,20 +162,50 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             }
         }
 
-        let v_jj = timer.comp(|| v_op.update(&u_full, alpha).clone());
+        let v_jj = timer.comp(|| {
+            if v_accum_live {
+                v_op.accum_update(alpha).clone()
+            } else {
+                v_op.update(&u_full, alpha).clone()
+            }
+        });
+        v_accum_live = false;
         copy_slice(&mut v_full, &v_jj, shard.r0);
         if communicate {
             round += 1;
-            let v_parts = timer.comm(|| {
-                allgather(&ep, TagKind::V, round, slice_of(&v_full, shard.r0, m), k as u64)
-            });
-            assemble(&mut v_full, &v_parts, m);
+            if stream {
+                u_accum_live = stream_exchange(
+                    &ep,
+                    TagKind::V,
+                    round,
+                    STREAM_V,
+                    &mut v_full,
+                    shard.r0,
+                    m,
+                    k as u64,
+                    &mut *u_op,
+                    &mut timer,
+                );
+            } else {
+                let v_parts = timer.comm(|| {
+                    allgather_coded(
+                        &ep,
+                        TagKind::V,
+                        round,
+                        STREAM_V,
+                        slice_of(&v_full, shard.r0, m),
+                        k as u64,
+                    )
+                });
+                assemble(&mut v_full, &v_parts, m);
+            }
             if fleet {
                 // … and for the u-operators (v-space reference).
                 round += 2;
                 fleet_sync(
                     &ep,
                     round,
+                    STREAM_GREF_U_OPS,
                     &mut *u_op,
                     &v_full,
                     shard.r0,
@@ -187,17 +268,76 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     }
 }
 
+/// Streamed slice exchange (`--stream-exchange`): send this node's
+/// slice of `full` (rows `[r0, r0+m)`) to every peer on the coded
+/// stream, then consume peer slices *in delivery order* — each is
+/// written into `full` and folded into `op`'s pending product while the
+/// remaining transfers are still in flight. Returns whether the fold
+/// chain survived (the caller then finishes with `accum_update`); a
+/// `false` means the fully assembled `full` must go through the
+/// ordinary barrier `update` instead — `full` is always completely
+/// assembled on return either way.
+#[allow(clippy::too_many_arguments)]
+fn stream_exchange(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    stream: u64,
+    full: &mut Mat,
+    r0: usize,
+    m: usize,
+    iter: u64,
+    op: &mut dyn BlockOp,
+    timer: &mut SplitTimer,
+) -> bool {
+    let me = ep.id();
+    let c = ep.nodes();
+    let nh = full.cols();
+    let mine: Vec<f64> = slice_of(full, r0, m).to_vec();
+    timer.comm(|| {
+        for dst in 0..c {
+            if dst != me {
+                ep.send_coded(dst, kind, round, stream, mine.clone(), iter);
+            }
+        }
+    });
+    let mut live = op.supports_streaming();
+    if live {
+        op.accum_begin();
+        // Own slice folds immediately — free overlap while peers' frames
+        // are still in flight.
+        live = timer.comp(|| op.accum_fold(r0, m, &mine));
+    }
+    let mut pending = vec![true; c];
+    pending[me] = false;
+    while pending.iter().any(|&p| p) {
+        let msg = timer.comm(|| ep.recv_any_blocking(&pending, kind, round));
+        pending[msg.src] = false;
+        let peer_r0 = msg.src * m;
+        full.as_mut_slice()[peer_r0 * nh..(peer_r0 + m) * nh].copy_from_slice(&msg.payload);
+        if live {
+            live = timer.comp(|| op.accum_fold(peer_r0, m, &msg.payload));
+        }
+    }
+    live
+}
+
 /// One lock-step fleet-absorption round for `op` against the freshly
 /// assembled full state `x_full`: every node probes the `m` rows it
 /// owns (`O(m·N)`, no redundant full scans), rank 0 gathers the probes,
 /// merges + decides, and broadcasts either the reference-dual command
 /// or a hold; every node applies the command to its own block operator.
 /// Uses protocol rounds `base − 1` (gather) and `base` (broadcast) on
-/// [`TagKind::Gref`] — both messages priced by the α–β latency model.
+/// [`TagKind::Gref`] — both messages priced by the α–β latency model on
+/// their *encoded* frames (probes ride coded stream `stream`, commands
+/// `stream + 1`, closing the ROADMAP "Gref traffic compression" item;
+/// absorption is exact for any reference, so a quantized `ḡ` only
+/// perturbs *when* rebuilds trigger, never the iterates).
 #[allow(clippy::too_many_arguments)]
 fn fleet_sync(
     ep: &Endpoint,
     base_round: u64,
+    stream: u64,
     op: &mut dyn BlockOp,
     x_full: &Mat,
     r0: usize,
@@ -211,7 +351,8 @@ fn fleet_sync(
         Some(p) => fleet::probe_payload(0, &p),
         None => fleet::degraded_payload(0),
     });
-    let parts = timer.comm(|| gather(ep, 0, TagKind::Gref, base_round - 1, &payload, iter));
+    let parts =
+        timer.comm(|| gather_coded(ep, 0, TagKind::Gref, base_round - 1, stream, &payload, iter));
     let reply = if let Some(parts) = parts {
         // Rank 0: merge + decide, then broadcast the verdict.
         let refs: Vec<&[f64]> = parts.iter().map(|p| p.as_slice()).collect();
@@ -220,9 +361,11 @@ fn fleet_sync(
             Some(cmd) => fleet::command_payload(0, cmd),
             None => fleet::hold_payload(0),
         };
-        timer.comm(|| bcast(ep, 0, TagKind::Gref, base_round, Some(&payload), iter))
+        timer.comm(|| {
+            bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, Some(&payload), iter)
+        })
     } else {
-        timer.comm(|| bcast(ep, 0, TagKind::Gref, base_round, None, iter))
+        timer.comm(|| bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, None, iter))
     };
     if let (_, Some((needed, gref))) = fleet::parse_command(&reply) {
         timer.comp(|| op.fleet_absorb(gref, needed));

@@ -115,6 +115,10 @@ pub fn run_case_cfg(
 ) -> (RunRecord, FederatedOutcome) {
     let out = run_federated(p, cfg, policy, false);
     let slow = slowest_node(&out.node_stats);
+    let mut wire_bytes_by_kind = [0u64; 4];
+    for (slot, &(_, bytes, _)) in wire_bytes_by_kind.iter_mut().zip(&out.traffic.by_kind) {
+        *slot = bytes;
+    }
     let rec = RunRecord {
         variant: cfg.variant.name().to_string(),
         n: p.n,
@@ -128,6 +132,8 @@ pub fn run_case_cfg(
         comm_secs: slow.comm_secs(),
         total_secs: slow.total_secs(),
         final_err: slow.final_err,
+        wire_bytes: out.traffic.total_bytes,
+        wire_bytes_by_kind,
     };
     (rec, out)
 }
@@ -191,5 +197,10 @@ mod tests {
         assert!(rec.converged && out.converged);
         assert_eq!(rec.variant, "sync-a2a");
         assert!(rec.total_secs >= rec.comm_secs);
+        // The wire counters ride along: a federated run moves U, V and
+        // Ctl bytes, and the per-kind split sums to the total.
+        assert!(rec.wire_bytes > 0);
+        assert_eq!(rec.wire_bytes, rec.wire_bytes_by_kind.iter().sum::<u64>());
+        assert!(rec.wire_bytes_by_kind[0] > 0 && rec.wire_bytes_by_kind[1] > 0);
     }
 }

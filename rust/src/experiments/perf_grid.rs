@@ -7,12 +7,12 @@
 //! iterations to convergence, and (async) whether it converged — the
 //! exact columns of the paper's appendix tables.
 
-use super::{build_problem, dump_json, run_case, run_case_cfg, Scale};
+use super::{build_problem, dump_json, run_case_cfg, Scale};
 use crate::config::{BackendKind, DomainChoice, SolveConfig, Variant};
 use crate::jsonio::Json;
 use crate::linalg::Stabilization;
 use crate::metrics::{chi2_sf, chi2_stat, RunRecord};
-use crate::net::LatencyModel;
+use crate::net::{LatencyModel, WireFormat};
 use crate::sinkhorn::StopPolicy;
 use crate::workload::CondClass;
 
@@ -34,6 +34,14 @@ pub struct PerfGridArgs {
     /// log-domain workload, with and without the coordinator-broadcast
     /// re-absorption protocol, reporting both retruncation totals.
     pub fleet_compare: bool,
+    /// Wire codec for the coded streams (`--wire-format`): rows report
+    /// per-iteration comm time and the per-kind byte buckets on the
+    /// *encoded* frames, so an `f32` grid against an `f64` grid shows
+    /// the β term halving directly.
+    pub wire: WireFormat,
+    /// Slice-streaming exchange (`--stream-exchange`) for the sync
+    /// variants.
+    pub stream_exchange: bool,
     pub out: Option<String>,
 }
 
@@ -71,6 +79,8 @@ impl PerfGridArgs {
             alpha_async: 0.5,
             chi2: false,
             fleet_compare: false,
+            wire: WireFormat::F64,
+            stream_exchange: false,
             out: None,
         }
     }
@@ -90,14 +100,31 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
             if variant == Variant::Centralized { vec![1] } else { args.nodes.clone() };
         for &c in &node_grid {
             println!(
-                "\n## Perf grid: {} {}(backend={})",
+                "\n## Perf grid: {} {}(backend={}, wire={}{})",
                 variant.name(),
                 if c > 1 { format!("{c}-node ") } else { String::new() },
-                args.backend.name()
+                args.backend.name(),
+                args.wire.name(),
+                if args.stream_exchange { ", streamed" } else { "" }
             );
+            // Comm buckets: measured wall time, the total encoded bytes,
+            // the deterministic β seconds those bytes cost on this
+            // latency profile (jitter-free — the compression factor is
+            // read off directly), and the per-kind byte split.
             println!(
-                "{:>7} {:>5} {:>7} {:>8} {:>10} {:>10} {:>10} {:>7} {:>5}",
-                "n", "s", "N", "cond", "comp(s)", "comm(s)", "total(s)", "iters", "cvg"
+                "{:>7} {:>5} {:>7} {:>8} {:>10} {:>10} {:>10} {:>7} {:>5} {:>12} {:>10} {:>26}",
+                "n",
+                "s",
+                "N",
+                "cond",
+                "comp(s)",
+                "comm(s)",
+                "total(s)",
+                "iters",
+                "cvg",
+                "wire(B)",
+                "beta(s)",
+                "U/V/Ctl/Gref(B)"
             );
             for &n in &args.sizes {
                 if n % c != 0 {
@@ -112,19 +139,25 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
                             } else {
                                 1.0
                             };
-                            let (rec, _) = run_case(
-                                &p,
+                            let cfg = SolveConfig {
                                 variant,
-                                c,
-                                args.backend,
-                                args.net,
-                                policy,
+                                backend: args.backend,
+                                clients: c,
                                 alpha,
-                                n as u64 + c as u64,
-                                (s, cond),
-                            );
+                                net: args.net,
+                                seed: n as u64 + c as u64,
+                                wire: args.wire,
+                                stream_exchange: args.stream_exchange,
+                                ..Default::default()
+                            };
+                            let (rec, _) = run_case_cfg(&p, &cfg, policy, (s, cond));
+                            let kinds: Vec<String> = rec
+                                .wire_bytes_by_kind
+                                .iter()
+                                .map(|b| b.to_string())
+                                .collect();
                             println!(
-                                "{:>7} {:>5} {:>7} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>7} {:>5}",
+                                "{:>7} {:>5} {:>7} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>7} {:>5} {:>12} {:>10.4} {:>26}",
                                 rec.n,
                                 rec.sparsity,
                                 rec.hists,
@@ -133,7 +166,10 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
                                 rec.comm_secs,
                                 rec.total_secs,
                                 rec.iterations,
-                                if rec.converged { "yes" } else { "no" }
+                                if rec.converged { "yes" } else { "no" },
+                                rec.wire_bytes,
+                                args.net.beta_secs(rec.wire_bytes),
+                                kinds.join("/")
                             );
                             records.push(rec);
                         }
@@ -145,6 +181,11 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
 
     let mut fields: Vec<(&str, Json)> = vec![
         ("experiment", "perf-grid".into()),
+        ("wire_format", args.wire.name().into()),
+        ("stream_exchange", args.stream_exchange.into()),
+        // β seconds = wire_bytes × this; emitting the coefficient keeps
+        // the per-row β term recomputable from the document alone.
+        ("beta_secs_per_byte", args.net.per_byte_secs.into()),
         ("rows", Json::Arr(records.iter().map(|r| r.to_json()).collect())),
     ];
 
@@ -227,6 +268,12 @@ fn fleet_comparison(args: &PerfGridArgs) -> Json {
                     alpha,
                     net: args.net,
                     seed: n as u64 + c as u64,
+                    // The comparison honors the requested wire/stream
+                    // flags: Gref probe/command compression is exactly
+                    // what a `--wire-format f32 --fleet-compare` run is
+                    // meant to measure.
+                    wire: args.wire,
+                    stream_exchange: args.stream_exchange,
                     ..Default::default()
                 };
                 run_case_cfg(&p, &cfg, policy, (0.0, CondClass::Ill))

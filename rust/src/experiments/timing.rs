@@ -11,7 +11,7 @@ use crate::config::{BackendKind, SolveConfig, Variant};
 use crate::coordinator::run_federated;
 use crate::jsonio::Json;
 use crate::metrics::Summary;
-use crate::net::LatencyModel;
+use crate::net::{LatencyModel, WireFormat};
 use crate::sinkhorn::StopPolicy;
 use crate::workload::ProblemSpec;
 
@@ -24,6 +24,12 @@ pub struct TimingArgs {
     pub net: LatencyModel,
     /// Repeats for the per-node distribution plots (Figs 23–24).
     pub repeats: usize,
+    /// Wire codec (`--wire-format`) — the comm columns then measure the
+    /// encoded-frame exchange, and the emitted rows carry the per-kind
+    /// byte buckets so the compression factor is visible.
+    pub wire: WireFormat,
+    /// Slice-streaming exchange (`--stream-exchange`).
+    pub stream_exchange: bool,
     pub out: Option<String>,
 }
 
@@ -43,6 +49,8 @@ impl TimingArgs {
                 Scale::Quick => 1,
                 _ => 3,
             },
+            wire: WireFormat::F64,
+            stream_exchange: false,
             out: None,
         }
     }
@@ -59,11 +67,13 @@ pub fn run(args: &TimingArgs) -> anyhow::Result<Json> {
     let p = ProblemSpec::new(args.n).with_eps(0.05).build(77);
 
     println!(
-        "# Figs 6/14/18: comp vs comm per node, n={}, {} iterations, backend={}, variant={}",
+        "# Figs 6/14/18: comp vs comm per node, n={}, {} iterations, backend={}, variant={}, wire={}{}",
         args.n,
         args.iters,
         args.backend.name(),
-        args.variant.name()
+        args.variant.name(),
+        args.wire.name(),
+        if args.stream_exchange { " (streamed)" } else { "" }
     );
     println!(
         "{:>6} {:>4} {:>12} {:>12} {:>12}  (per-node; slowest node shown, mean of {} runs)",
@@ -79,6 +89,8 @@ pub fn run(args: &TimingArgs) -> anyhow::Result<Json> {
         let mut comps = Vec::new();
         let mut comms = Vec::new();
         let mut node_rows = Vec::new();
+        let mut wire_bytes: u64 = 0;
+        let mut wire_by_kind: Vec<Json> = Vec::new();
         for rep in 0..args.repeats {
             let cfg = SolveConfig {
                 variant,
@@ -86,9 +98,28 @@ pub fn run(args: &TimingArgs) -> anyhow::Result<Json> {
                 clients: c,
                 net: args.net,
                 seed: 1000 + rep as u64,
+                wire: args.wire,
+                stream_exchange: args.stream_exchange,
                 ..Default::default()
             };
             let out = run_federated(&p, &cfg, policy, false);
+            // One rep's snapshot per row: sync fixed-budget runs move
+            // identical byte totals every rep; async reps can differ
+            // (server relay passes are schedule-dependent), so treat
+            // the async byte columns as representative, not exact.
+            wire_bytes = out.traffic.total_bytes;
+            wire_by_kind = out
+                .traffic
+                .by_kind
+                .iter()
+                .map(|&(name, bytes, msgs)| {
+                    Json::obj(vec![
+                        ("kind", name.into()),
+                        ("bytes", bytes.into()),
+                        ("msgs", msgs.into()),
+                    ])
+                })
+                .collect();
             for s in &out.node_stats {
                 node_rows.push(Json::obj(vec![
                     ("nodes", c.into()),
@@ -119,6 +150,9 @@ pub fn run(args: &TimingArgs) -> anyhow::Result<Json> {
             ("comp_std", sc.std.into()),
             ("comm_mean", sm.mean.into()),
             ("comm_std", sm.std.into()),
+            ("wire_bytes", wire_bytes.into()),
+            ("beta_secs", args.net.beta_secs(wire_bytes).into()),
+            ("wire_by_kind", Json::Arr(wire_by_kind)),
             ("per_node", Json::Arr(node_rows)),
         ]));
     }
@@ -127,6 +161,8 @@ pub fn run(args: &TimingArgs) -> anyhow::Result<Json> {
         ("experiment", "timing".into()),
         ("variant", args.variant.name().into()),
         ("backend", args.backend.name().into()),
+        ("wire_format", args.wire.name().into()),
+        ("stream_exchange", args.stream_exchange.into()),
         ("n", args.n.into()),
         ("iters", args.iters.into()),
         ("rows", Json::Arr(rows)),

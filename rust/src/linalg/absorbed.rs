@@ -277,11 +277,51 @@ impl AbsorbedLogCsr {
         }
 
         self.matmul_into(ex, lin, threads);
+        self.log_matmul_finish(lin, out);
+    }
 
-        // Shift back: log(K·x) = f̄ + ln(K̃ · exp(x − ḡ)). A zero product
-        // only happens on a fully masked row (f̄ = −∞): kept entries are
-        // ≥ e^{θ_s} and the drift contract keeps exp(x − ḡ) ≥ e^{−d}, so
-        // no kept term can underflow the sum to zero.
+    /// Streamed partial fold of the absorbed product: `lin +=
+    /// K̃[:, col0..col0+xr) · exp(x_slice − ḡ[col0..])`, with `x_slice`
+    /// the `xr×N` flat log-scaling slice and `ex_slice` caller scratch
+    /// of the same shape. Folding every slice of a column partition
+    /// (any order) then calling [`AbsorbedLogCsr::log_matmul_finish`]
+    /// equals one [`AbsorbedLogCsr::log_matmul_into`] up to
+    /// summation-order round-off. Caller contract (same as the batched
+    /// product): every folded slice stays within the covered drift of
+    /// the reference — checked upstream via
+    /// [`AbsorbedLogCsr::slice_drift`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn log_matmul_fold(
+        &self,
+        col0: usize,
+        xr: usize,
+        x_slice: &[f64],
+        nh: usize,
+        ex_slice: &mut [f64],
+        lin: &mut Mat,
+        threads: usize,
+    ) {
+        assert!(col0 + xr <= self.cols(), "column range");
+        assert_eq!(x_slice.len(), xr * nh, "slice shape");
+        assert_eq!(ex_slice.len(), xr * nh, "ex scratch shape");
+        assert_eq!((lin.rows(), lin.cols()), (self.rows(), nh), "lin shape");
+        for (j, g) in self.g[col0..col0 + xr].iter().enumerate() {
+            for h in 0..nh {
+                ex_slice[j * nh + h] = (x_slice[j * nh + h] - g).exp();
+            }
+        }
+        self.k.matmul_fold(col0, xr, ex_slice, nh, lin.as_mut_slice(), threads);
+    }
+
+    /// Shift a (fully folded or batch-computed) linear accumulator back
+    /// to the log domain: `out = f̄ + ln lin`. A zero accumulator entry
+    /// only happens on a fully masked row (f̄ = −∞): kept entries are
+    /// ≥ e^{θ_s} and the drift contract keeps exp(x − ḡ) ≥ e^{−d}, so
+    /// no kept term can underflow the sum to zero.
+    pub fn log_matmul_finish(&self, lin: &Mat, out: &mut Mat) {
+        let nh = lin.cols();
+        assert_eq!((lin.rows(), nh), (out.rows(), out.cols()), "shape");
+        assert_eq!(lin.rows(), self.rows(), "rows");
         let os = out.as_mut_slice();
         let ls = lin.as_slice();
         for i in 0..self.rows() {
@@ -291,6 +331,26 @@ impl AbsorbedLogCsr {
                 os[i * nh + h] = if lq > 0.0 { fi + lq.ln() } else { f64::NEG_INFINITY };
             }
         }
+    }
+
+    /// Max drift of an `xr×N` log-scaling slice (rows `[col0,
+    /// col0+xr)` of the full input) against the absorbed reference —
+    /// the per-slice admission check of the streamed fold (drift is a
+    /// row-decomposable max, so per-slice checks compose into exactly
+    /// the full-input check).
+    pub fn slice_drift(&self, col0: usize, xr: usize, x_slice: &[f64], nh: usize) -> f64 {
+        assert!(col0 + xr <= self.cols(), "column range");
+        assert_eq!(x_slice.len(), xr * nh, "slice shape");
+        let mut worst: f64 = 0.0;
+        for (j, g) in self.g[col0..col0 + xr].iter().enumerate() {
+            for &x in &x_slice[j * nh..(j + 1) * nh] {
+                let d = (x - g).abs();
+                if d > worst {
+                    worst = d;
+                }
+            }
+        }
+        worst
     }
 
     /// Batched multi-RHS product over the absorbed values: `out = K̃·x`
@@ -520,6 +580,57 @@ mod tests {
         k2.retruncate(&a_log, &vec![0.0; n], 1e6);
         assert!(k2.support_saturated());
         assert_eq!(k2.covered(), cap);
+    }
+
+    #[test]
+    fn streamed_folds_reassemble_the_batched_product() {
+        // Fold a 4-slice column partition in scrambled order, finish,
+        // and compare against the one-shot batched product and the
+        // dense oracle — the streamed-exchange equivalence the
+        // coordinators rely on.
+        let mut rng = Rng::seed_from(57);
+        let (m, n, nh) = (23, 20, 3);
+        let a_log = Mat::rand_uniform(m, n, -200.0, 0.0, &mut rng);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &gref, -60.0, 8.0, 8.0);
+        assert!(k.nnz() < m * n, "the -200 range must truncate something");
+        let mut x_log = Mat::zeros(n, nh);
+        for j in 0..n {
+            for h in 0..nh {
+                x_log[(j, h)] = gref[j] + rng.uniform_range(-6.0, 6.0);
+            }
+        }
+        let (mut ex, mut lin, mut want) = scratch(&k, nh);
+        k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut want, 1);
+        let mut acc = Mat::zeros(m, nh);
+        let mut ex_slice = vec![0.0; 5 * nh];
+        for &j in &[1usize, 3, 0, 2] {
+            let (c0, xr) = (j * 5, 5);
+            let slice = &x_log.as_slice()[c0 * nh..(c0 + xr) * nh];
+            assert!(k.slice_drift(c0, xr, slice, nh) <= k.covered());
+            k.log_matmul_fold(c0, xr, slice, nh, &mut ex_slice, &mut acc, 1);
+        }
+        let mut got = Mat::zeros(m, nh);
+        k.log_matmul_finish(&acc, &mut got);
+        assert!(got.allclose(&want, 1e-12));
+        assert!(got.allclose(&dense_log_product(&a_log, &x_log), 1e-11));
+    }
+
+    #[test]
+    fn slice_drift_composes_into_the_full_drift() {
+        let mut rng = Rng::seed_from(58);
+        let (n, nh) = (12, 2);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        let k = AbsorbedLogCsr::from_dense_log(&Mat::zeros(6, n), &gref, -60.0, 15.0, 15.0);
+        let x = Mat::rand_uniform(n, nh, -3.0, 3.0, &mut rng);
+        let mut full = [0.0; 2];
+        k.max_drift_into(&x, &mut full);
+        let full_max = full.iter().cloned().fold(0.0, f64::max);
+        let merged = [0usize, 1, 2]
+            .iter()
+            .map(|&j| k.slice_drift(j * 4, 4, &x.as_slice()[j * 4 * nh..(j + 1) * 4 * nh], nh))
+            .fold(0.0, f64::max);
+        assert_eq!(merged, full_max);
     }
 
     #[test]

@@ -82,6 +82,54 @@ impl Csr {
         self.nnz() as f64 / (self.rows * self.cols) as f64
     }
 
+    /// Streamed partial fold: `out += self[:, col0..col0+xr) · x_slice`
+    /// (`x_slice` is `xr×N` flat, `out` is `rows×N` flat). Stored
+    /// columns are ascending within each row (every constructor emits
+    /// them that way), so the range bounds come from two binary searches
+    /// per row — `O(nnz_range + rows·log nnz_row)` per fold instead of a
+    /// full `O(nnz)` scan per slice.
+    pub fn matmul_fold(
+        &self,
+        col0: usize,
+        xr: usize,
+        x_slice: &[f64],
+        nh: usize,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        assert!(col0 + xr <= self.cols, "column range");
+        assert_eq!(x_slice.len(), xr * nh, "slice shape");
+        assert_eq!(out.len(), self.rows * nh, "out shape");
+        let hi_col = (col0 + xr) as u32;
+        let run = |band: &mut [f64], r0: usize, r1: usize| {
+            for i in r0..r1 {
+                let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                let cols = &self.col_idx[s..e];
+                debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "CSR columns ascending");
+                let lo = s + cols.partition_point(|&c| c < col0 as u32);
+                let hi = s + cols.partition_point(|&c| c < hi_col);
+                if nh == 1 {
+                    let mut acc = 0.0;
+                    for idx in lo..hi {
+                        acc += self.vals[idx] * x_slice[self.col_idx[idx] as usize - col0];
+                    }
+                    band[i - r0] += acc;
+                } else {
+                    let orow = &mut band[(i - r0) * nh..(i - r0 + 1) * nh];
+                    for idx in lo..hi {
+                        let v = self.vals[idx];
+                        let k = self.col_idx[idx] as usize - col0;
+                        let xrow = &x_slice[k * nh..(k + 1) * nh];
+                        for (o, &xv) in orow.iter_mut().zip(xrow) {
+                            *o += v * xv;
+                        }
+                    }
+                }
+            }
+        };
+        super::dense::band_rows(out, self.rows, nh, threads, run);
+    }
+
     /// `out = self · x`, multi-RHS; `threads > 1` splits rows.
     pub fn matmul_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
         assert_eq!(self.cols, x.rows());
@@ -206,6 +254,41 @@ mod tests {
         let mut par = Mat::zeros(61, 1);
         c.matmul_into(&x, &mut par, 3);
         assert!(par.allclose(&got, 0.0));
+    }
+
+    #[test]
+    fn range_folds_reassemble_the_full_product() {
+        // Folding a column partition slice by slice — in a scrambled
+        // order — must reproduce the one-shot product.
+        let mut rng = Rng::seed_from(23);
+        let (m, n, nh) = (37, 24, 3);
+        let mut d = Mat::rand_uniform(m, n, 0.1, 1.0, &mut rng);
+        for i in 0..m {
+            for j in 0..n {
+                if rng.uniform() < 0.6 {
+                    d[(i, j)] = 0.0;
+                }
+            }
+        }
+        let c = Csr::from_dense(&d, 0.0);
+        let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        let want = d.matmul(&x, 1);
+        let mut acc = vec![0.0; m * nh];
+        for &j in &[2usize, 0, 3, 1] {
+            let (c0, xr) = (j * 6, 6);
+            let slice = &x.as_slice()[c0 * nh..(c0 + xr) * nh];
+            c.matmul_fold(c0, xr, slice, nh, &mut acc, 1);
+        }
+        let got = Mat::from_vec(m, nh, acc);
+        assert!(got.allclose(&want, 1e-12));
+        // Threaded folds agree exactly with serial folds.
+        let mut par = vec![0.0; m * nh];
+        for &j in &[2usize, 0, 3, 1] {
+            let (c0, xr) = (j * 6, 6);
+            let slice = &x.as_slice()[c0 * nh..(c0 + xr) * nh];
+            c.matmul_fold(c0, xr, slice, nh, &mut par, 3);
+        }
+        assert_eq!(par, got.as_slice().to_vec());
     }
 
     #[test]

@@ -245,6 +245,178 @@ impl Mat {
         self.logsumexp_into(x, &mut out, threads);
         out
     }
+
+    /// Streamed partial-GEMM fold: `out += self[:, col0..col0+xr) ·
+    /// x_slice` with `x_slice` an `xr×N` flat block and `out` a
+    /// `rows×N` flat accumulator. Folding every column slice of a
+    /// partition (any order) then reading `out` equals one
+    /// [`Mat::matmul_into`] up to summation-order round-off — the
+    /// slice-streaming exchange consumes peer slices this way as their
+    /// frames become deliverable.
+    pub fn matmul_fold(
+        &self,
+        col0: usize,
+        xr: usize,
+        x_slice: &[f64],
+        nh: usize,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        assert!(col0 + xr <= self.cols, "column range");
+        assert_eq!(x_slice.len(), xr * nh, "slice shape");
+        assert_eq!(out.len(), self.rows * nh, "out shape");
+        let run = |band: &mut [f64], r0: usize, r1: usize| {
+            for i in r0..r1 {
+                let arow = &self.data[i * self.cols + col0..i * self.cols + col0 + xr];
+                if nh == 1 {
+                    let mut acc = 0.0;
+                    for (a, &x) in arow.iter().zip(x_slice) {
+                        acc += a * x;
+                    }
+                    band[i - r0] += acc;
+                } else {
+                    let orow = &mut band[(i - r0) * nh..(i - r0 + 1) * nh];
+                    for (k, &aik) in arow.iter().enumerate() {
+                        let xrow = &x_slice[k * nh..(k + 1) * nh];
+                        for (o, &xv) in orow.iter_mut().zip(xrow) {
+                            *o += aik * xv;
+                        }
+                    }
+                }
+            }
+        };
+        band_rows(out, self.rows, nh, threads, run);
+    }
+
+    /// Streamed online-logsumexp fold over the same column range into
+    /// running `(mx, sum)` accumulators (both `rows×N` flat, seeded to
+    /// `(−∞, 0)`): after folding every slice, `mx + ln sum` equals the
+    /// full [`Mat::logsumexp_into`] row (−∞ where `sum` stayed 0). The
+    /// running-max merge keeps every `exp` argument ≤ 0 regardless of
+    /// the order slices arrive in.
+    #[allow(clippy::too_many_arguments)]
+    pub fn logsumexp_fold(
+        &self,
+        col0: usize,
+        xr: usize,
+        x_slice: &[f64],
+        nh: usize,
+        mx: &mut [f64],
+        sum: &mut [f64],
+        threads: usize,
+    ) {
+        assert!(col0 + xr <= self.cols, "column range");
+        assert_eq!(x_slice.len(), xr * nh, "slice shape");
+        assert_eq!(mx.len(), self.rows * nh, "mx shape");
+        assert_eq!(sum.len(), self.rows * nh, "sum shape");
+        let run = |mx_band: &mut [f64], sum_band: &mut [f64], r0: usize, r1: usize| {
+            for i in r0..r1 {
+                let arow = &self.data[i * self.cols + col0..i * self.cols + col0 + xr];
+                let mrow = &mut mx_band[(i - r0) * nh..(i - r0 + 1) * nh];
+                let srow = &mut sum_band[(i - r0) * nh..(i - r0 + 1) * nh];
+                for (k, &aik) in arow.iter().enumerate() {
+                    if aik == f64::NEG_INFINITY {
+                        continue;
+                    }
+                    let xrow = &x_slice[k * nh..(k + 1) * nh];
+                    for h in 0..nh {
+                        lse_merge(&mut mrow[h], &mut srow[h], aik + xrow[h]);
+                    }
+                }
+            }
+        };
+        band_rows2(mx, sum, self.rows, nh, threads, run);
+    }
+}
+
+/// One step of the online running-max logsumexp merge: fold value `v`
+/// into a `(mx, sum)` accumulator pair (`sum` is the exponential mass
+/// scaled by `e^{−mx}`). The ONE copy of this arithmetic — the streamed
+/// fold kernels in `dense.rs` and `log_csr.rs` must stay bit-identical
+/// for the streamed ≡ barrier exactness pins, so neither may drift.
+#[inline]
+pub(crate) fn lse_merge(mx: &mut f64, sum: &mut f64, v: f64) {
+    if v == f64::NEG_INFINITY {
+        return;
+    }
+    if v <= *mx {
+        *sum += (v - *mx).exp();
+    } else {
+        *sum = *sum * (*mx - v).exp() + 1.0;
+        *mx = v;
+    }
+}
+
+/// Split one `rows×nh` flat output across `threads` scoped workers, one
+/// disjoint row band each (the shared threading shape of every fold
+/// kernel).
+pub(crate) fn band_rows(
+    out: &mut [f64],
+    rows: usize,
+    nh: usize,
+    threads: usize,
+    run: impl Fn(&mut [f64], usize, usize) + Sync,
+) {
+    let threads = threads.max(1).min(rows.max(1));
+    if threads == 1 {
+        run(out, 0, rows);
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    let mut bands: Vec<(&mut [f64], usize, usize)> = Vec::new();
+    let mut rest: &mut [f64] = out;
+    let mut r = 0;
+    while r < rows {
+        let take = rows_per.min(rows - r);
+        let (band, tail) = rest.split_at_mut(take * nh);
+        bands.push((band, r, r + take));
+        rest = tail;
+        r += take;
+    }
+    crossbeam_utils::thread::scope(|s| {
+        for (band, r0, r1) in bands {
+            let run = &run;
+            s.spawn(move |_| run(band, r0, r1));
+        }
+    })
+    .expect("fold worker panicked");
+}
+
+/// [`band_rows`] for fold kernels with two row-aligned accumulators
+/// (the online-logsumexp `mx`/`sum` pair).
+pub(crate) fn band_rows2(
+    a: &mut [f64],
+    b: &mut [f64],
+    rows: usize,
+    nh: usize,
+    threads: usize,
+    run: impl Fn(&mut [f64], &mut [f64], usize, usize) + Sync,
+) {
+    let threads = threads.max(1).min(rows.max(1));
+    if threads == 1 {
+        run(a, b, 0, rows);
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    let mut bands: Vec<(&mut [f64], &mut [f64], usize, usize)> = Vec::new();
+    let (mut rest_a, mut rest_b): (&mut [f64], &mut [f64]) = (a, b);
+    let mut r = 0;
+    while r < rows {
+        let take = rows_per.min(rows - r);
+        let (band_a, tail_a) = rest_a.split_at_mut(take * nh);
+        let (band_b, tail_b) = rest_b.split_at_mut(take * nh);
+        bands.push((band_a, band_b, r, r + take));
+        rest_a = tail_a;
+        rest_b = tail_b;
+        r += take;
+    }
+    crossbeam_utils::thread::scope(|s| {
+        for (band_a, band_b, r0, r1) in bands {
+            let run = &run;
+            s.spawn(move |_| run(band_a, band_b, r0, r1));
+        }
+    })
+    .expect("fold worker panicked");
 }
 
 /// Compute rows `[r0, r1)` of `A·x` into `out` (which holds those rows

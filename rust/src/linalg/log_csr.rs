@@ -199,6 +199,51 @@ impl LogCsr {
         self.logsumexp_into(x, &mut out, threads);
         out
     }
+
+    /// Streamed online-logsumexp fold over stored entries with columns
+    /// in `[col0, col0+xr)`, merging into running `(mx, sum)`
+    /// accumulators (both `rows×N` flat, seeded `(−∞, 0)`): after every
+    /// slice of a column partition has been folded, `mx + ln sum`
+    /// equals the full [`LogCsr::logsumexp_into`] row. Stored columns
+    /// are ascending per row, so the range bounds come from two binary
+    /// searches per row.
+    #[allow(clippy::too_many_arguments)]
+    pub fn logsumexp_fold(
+        &self,
+        col0: usize,
+        xr: usize,
+        x_slice: &[f64],
+        nh: usize,
+        mx: &mut [f64],
+        sum: &mut [f64],
+        threads: usize,
+    ) {
+        assert!(col0 + xr <= self.cols, "column range");
+        assert_eq!(x_slice.len(), xr * nh, "slice shape");
+        assert_eq!(mx.len(), self.rows * nh, "mx shape");
+        assert_eq!(sum.len(), self.rows * nh, "sum shape");
+        let hi_col = (col0 + xr) as u32;
+        let run = |mx_band: &mut [f64], sum_band: &mut [f64], r0: usize, r1: usize| {
+            for i in r0..r1 {
+                let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                let cols = &self.col_idx[s..e];
+                debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "CSR columns ascending");
+                let lo = s + cols.partition_point(|&c| c < col0 as u32);
+                let hi = s + cols.partition_point(|&c| c < hi_col);
+                let mrow = &mut mx_band[(i - r0) * nh..(i - r0 + 1) * nh];
+                let srow = &mut sum_band[(i - r0) * nh..(i - r0 + 1) * nh];
+                for idx in lo..hi {
+                    let aik = self.vals[idx];
+                    let k = self.col_idx[idx] as usize - col0;
+                    let xrow = &x_slice[k * nh..(k + 1) * nh];
+                    for h in 0..nh {
+                        super::dense::lse_merge(&mut mrow[h], &mut srow[h], aik + xrow[h]);
+                    }
+                }
+            }
+        };
+        super::dense::band_rows2(mx, sum, self.rows, nh, threads, run);
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +284,47 @@ mod tests {
         let want = a.logsumexp(&x, 1);
         let got = lc.logsumexp(&x, 1);
         assert!(got.allclose(&want, 1e-13));
+    }
+
+    #[test]
+    fn range_folds_merge_into_the_full_logsumexp() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from(13);
+        let (m, n, nh) = (29, 20, 2);
+        let mut a = Mat::rand_uniform(m, n, -6.0, 0.0, &mut rng);
+        for i in 0..m {
+            for j in 0..n {
+                if rng.uniform() < 0.5 {
+                    a[(i, j)] = f64::NEG_INFINITY;
+                }
+            }
+        }
+        let lc = LogCsr::from_dense_log(&a, f64::NEG_INFINITY);
+        let x = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        let want = lc.logsumexp(&x, 1);
+        let mut mx = vec![f64::NEG_INFINITY; m * nh];
+        let mut sum = vec![0.0; m * nh];
+        // Out-of-order slices — the online merge must not care.
+        for &j in &[3usize, 1, 0, 2] {
+            let (c0, xr) = (j * 5, 5);
+            let slice = &x.as_slice()[c0 * nh..(c0 + xr) * nh];
+            lc.logsumexp_fold(c0, xr, slice, nh, &mut mx, &mut sum, 1);
+        }
+        for i in 0..m {
+            for h in 0..nh {
+                let got = if sum[i * nh + h] > 0.0 {
+                    mx[i * nh + h] + sum[i * nh + h].ln()
+                } else {
+                    f64::NEG_INFINITY
+                };
+                let w = want[(i, h)];
+                if w == f64::NEG_INFINITY {
+                    assert_eq!(got, w, "({i},{h})");
+                } else {
+                    assert!((got - w).abs() <= 1e-12 * w.abs().max(1.0), "({i},{h}): {got} vs {w}");
+                }
+            }
+        }
     }
 
     #[test]

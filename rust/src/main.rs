@@ -7,7 +7,7 @@
 use fedsink::cli::{ArgSpec, CliError, Parsed};
 use fedsink::config::{BackendKind, DomainChoice, SolveConfig, Variant};
 use fedsink::experiments::{self, Scale};
-use fedsink::net::LatencyModel;
+use fedsink::net::{LatencyModel, WireFormat};
 use fedsink::sinkhorn::StopPolicy;
 use fedsink::workload::CondClass;
 
@@ -119,6 +119,28 @@ fn net_of(p: &Parsed) -> anyhow::Result<LatencyModel> {
         .ok_or_else(|| anyhow::anyhow!("bad --net"))
 }
 
+/// The `--wire-format` / `--stream-exchange` flag pair shared by the
+/// solve/timing/perf-grid commands.
+fn wire_spec(spec: ArgSpec) -> ArgSpec {
+    spec.opt(
+        "wire-format",
+        "W",
+        "f64",
+        "f64|f32|deltaf32 wire codec for scaling/chunk/Gref streams (lossy \
+         formats ~halve the beta term; error-feedback keeps the loss bounded)",
+    )
+    .switch(
+        "stream-exchange",
+        "fold peer scaling slices into the block product as their frames \
+         arrive (sync protocols) instead of waiting out the gather barrier",
+    )
+}
+
+fn wire_of(p: &Parsed) -> anyhow::Result<WireFormat> {
+    WireFormat::parse(p.get("wire-format").unwrap_or("f64"))
+        .ok_or_else(|| anyhow::anyhow!("bad --wire-format (expected f64|f32|deltaf32)"))
+}
+
 fn domain_of(p: &Parsed) -> anyhow::Result<DomainChoice> {
     match p.get("domain") {
         // `env` defers to FEDSINK_DOMAIN / the FEDSINK_CONFIG file
@@ -220,6 +242,7 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
                  reference dual and every node re-absorbs in lock-step",
             ),
     );
+    let spec = wire_spec(spec);
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
     let variant = Variant::parse(p.get("variant").unwrap())
         .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
@@ -249,6 +272,8 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         local_iters: p.get_usize("local-iters")?,
         net: net_of(&p)?,
         seed: p.get_u64("seed")?,
+        wire: wire_of(&p)?,
+        stream_exchange: p.has("stream-exchange"),
         ..Default::default()
     };
     if cfg.stab.fleet_absorb {
@@ -316,6 +341,22 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
             s.iterations
         );
     }
+    if out.traffic.total_msgs > 0 {
+        let per: Vec<String> = out
+            .traffic
+            .by_kind
+            .iter()
+            .filter(|&&(_, bytes, _)| bytes > 0)
+            .map(|&(name, bytes, msgs)| format!("{name}={bytes}B/{msgs}msg"))
+            .collect();
+        println!(
+            "  wire[{}{}]: {} bytes total ({})",
+            cfg.wire.name(),
+            if cfg.stream_exchange { ", streamed" } else { "" },
+            out.traffic.total_bytes,
+            per.join(", ")
+        );
+    }
     Ok(())
 }
 
@@ -375,13 +416,13 @@ fn cmd_coherence(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_timing(args: &[String]) -> anyhow::Result<()> {
-    let spec = common_spec(
+    let spec = common_spec(wire_spec(
         ArgSpec::new()
             .opt("variant", "V", "sync-a2a", "federated variant for c > 1")
             .opt("n", "SIZE", "0", "problem size (0 = scale default)")
             .opt("iters", "K", "0", "fixed iteration budget (0 = scale default)")
             .opt("nodes", "LIST", "", "node counts (empty = scale default)"),
-    );
+    ));
     let p = spec.parse("timing", args).map_err(anyhow::Error::new)?;
     let mut a = experiments::timing::TimingArgs::at_scale(scale_of(&p));
     a.variant = Variant::parse(p.get("variant").unwrap())
@@ -389,6 +430,8 @@ fn cmd_timing(args: &[String]) -> anyhow::Result<()> {
     a.backend = backend_of(&p)?;
     a.net = net_of(&p)?;
     a.out = out_of(&p);
+    a.wire = wire_of(&p)?;
+    a.stream_exchange = p.has("stream-exchange");
     if p.get_usize("n")? > 0 {
         a.n = p.get_usize("n")?;
     }
@@ -492,7 +535,7 @@ fn cmd_delays(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
-    let spec = common_spec(
+    let spec = common_spec(wire_spec(
         ArgSpec::new()
             .opt("variant", "V", "all", "all or one of the solver variants")
             .opt("sizes", "LIST", "", "problem sizes (empty = scale default)")
@@ -503,7 +546,7 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
                 "fleet-compare",
                 "add the per-node vs fleet-synchronized absorption rebuild comparison",
             ),
-    );
+    ));
     let p = spec.parse("perf-grid", args).map_err(anyhow::Error::new)?;
     let mut a = experiments::perf_grid::PerfGridArgs::at_scale(scale_of(&p));
     a.backend = backend_of(&p)?;
@@ -511,6 +554,8 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
     a.out = out_of(&p);
     a.chi2 = p.has("chi2");
     a.fleet_compare = p.has("fleet-compare");
+    a.wire = wire_of(&p)?;
+    a.stream_exchange = p.has("stream-exchange");
     for (flag, field) in [("sizes", 0usize), ("hists", 1), ("nodes", 2)] {
         if p.get(flag).map(|s| !s.is_empty()).unwrap_or(false) {
             let v: Vec<usize> = p.get_list(flag, |s| s.parse().ok())?;

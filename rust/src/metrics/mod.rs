@@ -30,6 +30,12 @@ pub struct RunRecord {
     pub comm_secs: f64,
     pub total_secs: f64,
     pub final_err: f64,
+    /// Total fabric bytes of the run, priced on the *encoded* wire
+    /// frames (0 for centralized runs, which have no fabric).
+    pub wire_bytes: u64,
+    /// Per-kind byte split in `[U, V, Ctl, Gref]` order — the comm
+    /// buckets next to the wall-time buckets.
+    pub wire_bytes_by_kind: [u64; 4],
 }
 
 impl RunRecord {
@@ -47,6 +53,11 @@ impl RunRecord {
             ("comm_secs", self.comm_secs.into()),
             ("total_secs", self.total_secs.into()),
             ("final_err", self.final_err.into()),
+            ("wire_bytes", self.wire_bytes.into()),
+            ("bytes_u", self.wire_bytes_by_kind[0].into()),
+            ("bytes_v", self.wire_bytes_by_kind[1].into()),
+            ("bytes_ctl", self.wire_bytes_by_kind[2].into()),
+            ("bytes_gref", self.wire_bytes_by_kind[3].into()),
         ])
     }
 }

@@ -17,11 +17,40 @@ pub fn allgather(
     mine: &[f64],
     iter: u64,
 ) -> Vec<Vec<f64>> {
+    allgather_impl(ep, kind, round, None, mine, iter)
+}
+
+/// [`allgather`] whose slices ride the fabric's wire codec on `stream`
+/// (`parts[me]` stays the sender's exact copy — only the wire hops are
+/// coded). The scaling exchanges use this; control AllGathers stay on
+/// the exact path.
+pub fn allgather_coded(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    stream: u64,
+    mine: &[f64],
+    iter: u64,
+) -> Vec<Vec<f64>> {
+    allgather_impl(ep, kind, round, Some(stream), mine, iter)
+}
+
+fn allgather_impl(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    stream: Option<u64>,
+    mine: &[f64],
+    iter: u64,
+) -> Vec<Vec<f64>> {
     let me = ep.id();
     let c = ep.nodes();
     for dst in 0..c {
         if dst != me {
-            ep.send(dst, kind, round, mine.to_vec(), iter);
+            match stream {
+                Some(s) => ep.send_coded(dst, kind, round, s, mine.to_vec(), iter),
+                None => ep.send(dst, kind, round, mine.to_vec(), iter),
+            }
         }
     }
     let mut parts: Vec<Vec<f64>> = vec![Vec::new(); c];
@@ -43,6 +72,31 @@ pub fn gather(
     mine: &[f64],
     iter: u64,
 ) -> Option<Vec<Vec<f64>>> {
+    gather_impl(ep, root, kind, round, None, mine, iter)
+}
+
+/// [`gather`] whose contributed slice rides the wire codec on `stream`.
+pub fn gather_coded(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    stream: u64,
+    mine: &[f64],
+    iter: u64,
+) -> Option<Vec<Vec<f64>>> {
+    gather_impl(ep, root, kind, round, Some(stream), mine, iter)
+}
+
+fn gather_impl(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    stream: Option<u64>,
+    mine: &[f64],
+    iter: u64,
+) -> Option<Vec<Vec<f64>>> {
     let me = ep.id();
     if me == root {
         let mut parts: Vec<Vec<f64>> = vec![Vec::new(); ep.nodes()];
@@ -54,7 +108,10 @@ pub fn gather(
         }
         Some(parts)
     } else {
-        ep.send(root, kind, round, mine.to_vec(), iter);
+        match stream {
+            Some(s) => ep.send_coded(root, kind, round, s, mine.to_vec(), iter),
+            None => ep.send(root, kind, round, mine.to_vec(), iter),
+        }
         None
     }
 }
@@ -100,12 +157,44 @@ pub fn bcast(
     data: Option<&[f64]>,
     iter: u64,
 ) -> Vec<f64> {
+    bcast_impl(ep, root, kind, round, None, data, iter)
+}
+
+/// [`bcast`] whose data rides the wire codec on `stream`. Note the root
+/// returns its own *exact* copy while peers receive the codec
+/// reconstruction — callers for whom that asymmetry matters (the fleet
+/// command broadcast does not: absorption is exact for any reference)
+/// must use the exact [`bcast`].
+pub fn bcast_coded(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    stream: u64,
+    data: Option<&[f64]>,
+    iter: u64,
+) -> Vec<f64> {
+    bcast_impl(ep, root, kind, round, Some(stream), data, iter)
+}
+
+fn bcast_impl(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    stream: Option<u64>,
+    data: Option<&[f64]>,
+    iter: u64,
+) -> Vec<f64> {
     let me = ep.id();
     if me == root {
         let data = data.expect("root must provide data");
         for dst in 0..ep.nodes() {
             if dst != root {
-                ep.send(dst, kind, round, data.to_vec(), iter);
+                match stream {
+                    Some(s) => ep.send_coded(dst, kind, round, s, data.to_vec(), iter),
+                    None => ep.send(dst, kind, round, data.to_vec(), iter),
+                }
             }
         }
         data.to_vec()

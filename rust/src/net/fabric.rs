@@ -1,7 +1,10 @@
 //! Mailbox fabric: per-node inboxes with delivery deadlines.
 
+use super::wire::{self, StreamCodec, WireFormat};
 use super::LatencyModel;
 use crate::rng::{child_seed, Rng};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -14,7 +17,11 @@ pub enum TagKind {
     U,
     /// v-slice broadcast.
     V,
-    /// Control (barriers, convergence votes, scatter/gather frames).
+    /// Control (barriers, convergence votes, stop decisions) — exact
+    /// frames — plus, in the star topology, the server's q/r product
+    /// chunks, which are bulk data and DO ride the wire codec: a star
+    /// run's `Ctl` byte bucket is therefore dominated by coded chunk
+    /// traffic, not by the (negligible, always-exact) votes.
     Ctl,
     /// Fleet-synchronized absorption: slice-local drift probes to the
     /// coordinator and the reference-dual `ḡ` broadcast back. Priced by
@@ -24,6 +31,35 @@ pub enum TagKind {
     Gref,
 }
 
+impl TagKind {
+    /// Every kind, in counter order.
+    pub const ALL: [TagKind; 4] = [TagKind::U, TagKind::V, TagKind::Ctl, TagKind::Gref];
+
+    /// Stable counter index.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            TagKind::U => 0,
+            TagKind::V => 1,
+            TagKind::Ctl => 2,
+            TagKind::Gref => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TagKind::U => "U",
+            TagKind::V => "V",
+            TagKind::Ctl => "Ctl",
+            TagKind::Gref => "Gref",
+        }
+    }
+}
+
+/// Fixed per-message envelope cost (routing metadata, tag, iteration
+/// stamp) on top of the encoded frame.
+const MSG_HEADER_BYTES: usize = 64;
+
 /// One in-flight message.
 #[derive(Clone, Debug)]
 pub struct Message {
@@ -31,6 +67,10 @@ pub struct Message {
     pub kind: TagKind,
     /// Protocol round or collective id — keeps rounds from crossing.
     pub tag: u64,
+    /// Decoded frame content: for coded streams this is exactly the
+    /// receiver-side reconstruction the wire codec produces (frames of a
+    /// stream decode in send order, so the sender-tracked reconstruction
+    /// *is* the decode — see [`crate::net::wire`]).
     pub payload: Vec<f64>,
     /// Sender's local iteration when it sent (staleness accounting).
     pub sent_iter: u64,
@@ -44,22 +84,56 @@ struct Inbox {
     signal: Condvar,
 }
 
-/// The shared fabric: `nodes` inboxes + the latency model.
+/// Per-[`TagKind`] traffic counters plus totals, read off the fabric's
+/// atomics after a run — the comm-bucket breakdown `perf-grid` and
+/// `timing` surface next to the wall-time buckets.
+#[derive(Clone, Debug, Default)]
+pub struct NetTraffic {
+    pub total_bytes: u64,
+    pub total_msgs: u64,
+    /// `(kind name, bytes, messages)` in [`TagKind::ALL`] order.
+    pub by_kind: Vec<(&'static str, u64, u64)>,
+}
+
+impl NetTraffic {
+    /// Bytes sent on one kind (0 for an unknown name).
+    pub fn bytes_of(&self, kind: TagKind) -> u64 {
+        self.by_kind
+            .iter()
+            .find(|(name, _, _)| *name == kind.name())
+            .map(|&(_, b, _)| b)
+            .unwrap_or(0)
+    }
+}
+
+/// The shared fabric: `nodes` inboxes + the latency model + wire codec.
 pub struct SimNet {
     inboxes: Vec<Inbox>,
     latency: LatencyModel,
     seed: u64,
-    /// Total payload bytes pushed through the fabric (diagnostics).
-    bytes_sent: Mutex<u64>,
+    wire: WireFormat,
+    /// Per-kind traffic counters. Atomics keep the accounting off the
+    /// send hot path's locks (the queue mutex is per-inbox; these are
+    /// global and would otherwise serialize every sender).
+    kind_bytes: [AtomicU64; 4],
+    kind_msgs: [AtomicU64; 4],
 }
 
 impl SimNet {
     pub fn new(nodes: usize, latency: LatencyModel, seed: u64) -> Self {
+        Self::with_wire(nodes, latency, seed, WireFormat::F64)
+    }
+
+    /// Fabric whose coded streams ride `wire` (`--wire-format`); exact
+    /// control traffic is unaffected.
+    pub fn with_wire(nodes: usize, latency: LatencyModel, seed: u64, wire: WireFormat) -> Self {
         Self {
             inboxes: (0..nodes).map(|_| Inbox::default()).collect(),
             latency,
             seed,
-            bytes_sent: Mutex::new(0),
+            wire,
+            kind_bytes: Default::default(),
+            kind_msgs: Default::default(),
         }
     }
 
@@ -67,8 +141,37 @@ impl SimNet {
         self.inboxes.len()
     }
 
+    pub fn wire(&self) -> WireFormat {
+        self.wire
+    }
+
+    /// Total payload bytes pushed through the fabric — priced on the
+    /// *encoded* frames for coded streams.
     pub fn bytes_sent(&self) -> u64 {
-        *self.bytes_sent.lock().unwrap()
+        self.kind_bytes.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Bytes sent on one message kind.
+    pub fn kind_bytes(&self, kind: TagKind) -> u64 {
+        self.kind_bytes[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// Messages sent on one message kind.
+    pub fn kind_msgs(&self, kind: TagKind) -> u64 {
+        self.kind_msgs[kind.index()].load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the per-kind counters.
+    pub fn traffic(&self) -> NetTraffic {
+        let by_kind: Vec<(&'static str, u64, u64)> = TagKind::ALL
+            .iter()
+            .map(|&k| (k.name(), self.kind_bytes(k), self.kind_msgs(k)))
+            .collect();
+        NetTraffic {
+            total_bytes: by_kind.iter().map(|&(_, b, _)| b).sum(),
+            total_msgs: by_kind.iter().map(|&(_, _, m)| m).sum(),
+            by_kind,
+        }
     }
 
     /// Create the handle node `id` uses to talk to the fabric. Each
@@ -80,6 +183,7 @@ impl SimNet {
             net: self.clone(),
             id,
             rng: Mutex::new(Rng::seed_from(child_seed(self.seed, id as u64))),
+            codecs: Mutex::new(HashMap::new()),
         }
     }
 }
@@ -89,6 +193,11 @@ pub struct Endpoint {
     net: std::sync::Arc<SimNet>,
     id: usize,
     rng: Mutex<Rng>,
+    /// Sender-held wire-codec state per `(dst, kind, stream)` coded
+    /// stream (delta reference + error-feedback residual). Only
+    /// [`Endpoint::send_coded`] consults it; exact control sends bypass
+    /// the map entirely.
+    codecs: Mutex<HashMap<(usize, TagKind, u64), StreamCodec>>,
 }
 
 impl Endpoint {
@@ -101,14 +210,60 @@ impl Endpoint {
     }
 
     /// Non-blocking send (MPI `Isend`): stamps a delivery deadline from
-    /// the latency model and enqueues at the destination.
+    /// the latency model and enqueues at the destination. This is the
+    /// *exact* path — control payloads (votes, barriers, convergence
+    /// decisions) must never be quantized, or nodes could disagree on
+    /// lock-step stopping.
     pub fn send(&self, dst: usize, kind: TagKind, tag: u64, payload: Vec<f64>, sent_iter: u64) {
-        let bytes = payload.len() * std::mem::size_of::<f64>() + 64; // + header
+        let bytes = wire::f64_frame_bytes(payload.len());
+        self.enqueue(dst, kind, tag, bytes, payload, sent_iter);
+    }
+
+    /// Send through the fabric's wire codec on stream `stream` (a stable
+    /// caller-chosen id: frames of one stream must carry the same
+    /// logical quantity round after round, or DeltaF32 would difference
+    /// unrelated content). Latency and the byte counters are priced on
+    /// the *encoded* frame; the payload delivered is the decoder's
+    /// reconstruction. With the default [`WireFormat::F64`] this is
+    /// byte-identical to [`Endpoint::send`].
+    pub fn send_coded(
+        &self,
+        dst: usize,
+        kind: TagKind,
+        tag: u64,
+        stream: u64,
+        payload: Vec<f64>,
+        sent_iter: u64,
+    ) {
+        let (bytes, payload) = if self.net.wire == WireFormat::F64 {
+            (wire::f64_frame_bytes(payload.len()), payload)
+        } else {
+            let mut codecs = self.codecs.lock().unwrap();
+            let codec = codecs
+                .entry((dst, kind, stream))
+                .or_insert_with(|| StreamCodec::new(self.net.wire));
+            let enc = codec.encode(payload);
+            (enc.bytes, enc.payload)
+        };
+        self.enqueue(dst, kind, tag, bytes, payload, sent_iter);
+    }
+
+    fn enqueue(
+        &self,
+        dst: usize,
+        kind: TagKind,
+        tag: u64,
+        frame_bytes: usize,
+        payload: Vec<f64>,
+        sent_iter: u64,
+    ) {
+        let bytes = frame_bytes + MSG_HEADER_BYTES;
         let delay = {
             let mut rng = self.rng.lock().unwrap();
             self.net.latency.delay_secs(bytes, &mut rng)
         };
-        *self.net.bytes_sent.lock().unwrap() += bytes as u64;
+        self.net.kind_bytes[kind.index()].fetch_add(bytes as u64, Ordering::Relaxed);
+        self.net.kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
         let msg = Message {
             src: self.id,
             kind,
@@ -127,6 +282,24 @@ impl Endpoint {
     /// deadline has passed — the deadline sleep is what makes simulated
     /// network time real wall time.
     pub fn recv_blocking(&self, src: usize, kind: TagKind, tag: u64) -> Message {
+        self.recv_where(kind, tag, |m| m.src == src)
+    }
+
+    /// Blocking receive of the first *deliverable* `(kind, tag)` match
+    /// from any source still flagged in `pending` — the streamed-
+    /// exchange primitive: slices are consumed in delivery order, so the
+    /// caller's decode + partial compute hide behind the transfers still
+    /// in flight instead of waiting out the slowest peer first.
+    pub fn recv_any_blocking(&self, pending: &[bool], kind: TagKind, tag: u64) -> Message {
+        self.recv_where(kind, tag, |m| pending.get(m.src).copied().unwrap_or(false))
+    }
+
+    fn recv_where(
+        &self,
+        kind: TagKind,
+        tag: u64,
+        matches: impl Fn(&Message) -> bool,
+    ) -> Message {
         let inbox = &self.net.inboxes[self.id];
         let mut queue = inbox.queue.lock().unwrap();
         loop {
@@ -134,7 +307,7 @@ impl Endpoint {
             let mut earliest: Option<Instant> = None;
             let mut take_idx = None;
             for (i, m) in queue.iter().enumerate() {
-                if m.src == src && m.kind == kind && m.tag == tag {
+                if m.kind == kind && m.tag == tag && matches(m) {
                     if m.deliver_at <= now {
                         take_idx = Some(i);
                         break;

@@ -70,6 +70,14 @@ impl LatencyModel {
         }
     }
 
+    /// Deterministic β-term seconds for a byte total on this profile
+    /// (no jitter, no spikes): `bytes · per_byte`. What `perf-grid`
+    /// reports next to the measured comm wall time, so the wire codec's
+    /// compression factor is visible without jitter noise.
+    pub fn beta_secs(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.per_byte_secs
+    }
+
     /// Sample the delivery delay for a `bytes`-sized message.
     pub fn delay_secs(&self, bytes: usize, rng: &mut Rng) -> f64 {
         let mut d = self.base_secs + bytes as f64 * self.per_byte_secs;

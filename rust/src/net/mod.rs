@@ -10,20 +10,30 @@
 //!   §IV-B4/§IV-C4). Delays are enforced by *delivery deadlines*; blocked
 //!   receivers sleep until the deadline so comm time is real wall time.
 //! * [`SimNet`]/[`Endpoint`] — per-node mailboxes with blocking
-//!   (synchronous MPI `send/recv`) and latest-wins non-blocking
-//!   (`Isend`/`Irecv`) receive modes.
+//!   (synchronous MPI `send/recv`), any-source streaming
+//!   (`recv_any_blocking`, the slice-streaming exchange primitive) and
+//!   latest-wins non-blocking (`Isend`/`Irecv`) receive modes.
+//! * [`wire`] — the wire codec (`--wire-format f64|f32|deltaf32`):
+//!   coded streams carry scale-headered reduced-precision / delta
+//!   frames with sender-held error-feedback residuals; latency and the
+//!   per-[`TagKind`] byte counters are priced on the encoded frames.
 //! * [`collectives`] — AllGather / Gather / Scatter / Broadcast / Barrier
 //!   built on point-to-point sends, like MPI's tree-free reference
-//!   algorithms.
+//!   algorithms — plus `_coded` variants whose data slices ride the
+//!   wire codec.
 //! * [`DelayTracker`] — the τ staleness counter of §IV-C4 (Fig 15).
 
 mod collectives;
 mod fabric;
 mod latency;
+pub mod wire;
 
-pub use collectives::{allgather, barrier, bcast, gather, scatter};
-pub use fabric::{Endpoint, Message, SimNet, TagKind};
+pub use collectives::{
+    allgather, allgather_coded, barrier, bcast, bcast_coded, gather, gather_coded, scatter,
+};
+pub use fabric::{Endpoint, Message, NetTraffic, SimNet, TagKind};
 pub use latency::LatencyModel;
+pub use wire::WireFormat;
 
 use std::sync::Mutex;
 
@@ -120,6 +130,59 @@ mod tests {
         assert_eq!(v.payload, vec![20.0]);
         assert_eq!(u2.payload, vec![30.0]);
         assert_eq!(u1.payload, vec![10.0]);
+    }
+
+    #[test]
+    fn coded_sends_price_bytes_on_the_encoded_frame() {
+        // Same payload, three fabrics: the f32/deltaf32 U-traffic must
+        // land near half the f64 bytes, and the per-kind counters must
+        // attribute it to the right bucket.
+        let payload: Vec<f64> = (0..256).map(|i| (i as f64).sin()).collect();
+        let mut totals = Vec::new();
+        for fmt in [WireFormat::F64, WireFormat::F32, WireFormat::DeltaF32] {
+            let net = Arc::new(SimNet::with_wire(2, LatencyModel::zero(), 1, fmt));
+            let a = net.endpoint(0);
+            let b = net.endpoint(1);
+            a.send_coded(1, TagKind::U, 0, 0, payload.clone(), 0);
+            let got = b.recv_blocking(0, TagKind::U, 0);
+            // Reconstruction error bounded by the slice-range step.
+            let err = got
+                .payload
+                .iter()
+                .zip(&payload)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0, f64::max);
+            assert!(err <= 1e-6, "{}: err {err}", fmt.name());
+            assert_eq!(net.kind_msgs(TagKind::U), 1);
+            assert_eq!(net.kind_bytes(TagKind::V), 0);
+            assert_eq!(net.bytes_sent(), net.kind_bytes(TagKind::U));
+            totals.push(net.bytes_sent());
+        }
+        assert!(totals[1] < totals[0] * 6 / 10, "f32 {} vs f64 {}", totals[1], totals[0]);
+        assert_eq!(totals[1], totals[2], "deltaf32 frames are f32-width");
+    }
+
+    #[test]
+    fn recv_any_consumes_slices_in_delivery_order() {
+        // Peer 1's frame is delayed well past peer 2's: the streaming
+        // receive must hand back 2 first, then 1 — not block on the
+        // numerically first source.
+        let net = Arc::new(SimNet::new(3, LatencyModel::zero(), 8));
+        let ep0 = net.endpoint(0);
+        let ep1 = net.endpoint(1);
+        let ep2 = net.endpoint(2);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            ep1.send(0, TagKind::U, 5, vec![1.0], 0);
+        });
+        ep2.send(0, TagKind::U, 5, vec![2.0], 0);
+        let mut pending = vec![false, true, true];
+        let first = ep0.recv_any_blocking(&pending, TagKind::U, 5);
+        assert_eq!(first.src, 2);
+        pending[first.src] = false;
+        let second = ep0.recv_any_blocking(&pending, TagKind::U, 5);
+        assert_eq!(second.src, 1);
+        t.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Wire codec for the scaling-slice exchange.
+//!
+//! The paper's per-iteration communication cost is `α + β·bytes` per
+//! message; as the node count and histogram count grow, the `β` term on
+//! the exchanged scaling slices dominates. On the dual-absorbed hybrid
+//! schedule the exchanged log-scalings move *slowly* between rounds
+//! (that is the whole premise of the absorption engine), which is
+//! exactly the regime where reduced-precision and delta wire formats
+//! pay: the same slice can ride half the bytes with an error far below
+//! the solver tolerance.
+//!
+//! Formats:
+//!
+//! * [`WireFormat::F64`] — exact 8-byte lanes (the PR-4 baseline wire).
+//! * [`WireFormat::F32`] — each frame carries a per-slice scale header
+//!   `(offset, scale)` and 4-byte lanes of the normalized values
+//!   `(v − offset)/scale ∈ [−1, 1]`; the header centers the slice so
+//!   the quantization step is `scale·2⁻²⁴` of the slice *range*, not of
+//!   the (possibly huge, e.g. duals/ε) absolute magnitude.
+//! * [`WireFormat::DeltaF32`] — the first frame of a stream is an
+//!   absolute F32 keyframe; every later frame encodes the *delta*
+//!   against the receiver's current reconstruction in the same
+//!   scale-headered 4-byte lanes. Because consecutive Sinkhorn slices
+//!   differ by the (contracting) iteration step, the delta range — and
+//!   with it the quantization step — shrinks as the solve converges, so
+//!   DeltaF32 reaches tight thresholds F32 cannot.
+//!
+//! Both lossy formats carry a **sender-held error-feedback residual**:
+//! the quantization error of frame `t` is added to the values of frame
+//! `t+1` before encoding, so the error never accumulates across rounds
+//! (the standard error-feedback compressor of decentralized consensus
+//! methods; PAPERS.md 2509.14521). The reconstruction error at any
+//! round is bounded by the carried residual plus one quantization step
+//! of that round's frame — so it is flat over time, never accumulating,
+//! and for DeltaF32 it drops to delta-sized steps one round after the
+//! keyframe (whose f32-sized residual is flushed by the first delta
+//! frame). Pinned by the
+//! `error_feedback_bounds_reconstruction_over_many_rounds` test.
+//!
+//! The simulated fabric applies the codec at *send* time: the encoded
+//! frame size prices the delivery deadline and the byte counters, and
+//! the enqueued payload is exactly the decoder's reconstruction (the
+//! sender must track it anyway for the residual, and frames of a stream
+//! are decoded in send order, so the reconstruction is identical to
+//! what a stateful receiver-side decoder would produce). A frame
+//! containing non-finite values (±∞ scalings from fully masked rows)
+//! falls back to an exact F64 frame — lossy-coding an infinity is
+//! meaningless and the fallback keeps every protocol edge case exact.
+
+/// Frame encoding for coded streams (`--wire-format`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Exact 8-byte lanes.
+    F64,
+    /// Per-slice scale header + 4-byte normalized lanes.
+    F32,
+    /// F32 keyframe, then scale-headered 4-byte *delta* frames against
+    /// the receiver's reconstruction.
+    DeltaF32,
+}
+
+impl WireFormat {
+    pub fn parse(s: &str) -> Option<WireFormat> {
+        match s {
+            "f64" => Some(WireFormat::F64),
+            "f32" => Some(WireFormat::F32),
+            "deltaf32" | "delta-f32" => Some(WireFormat::DeltaF32),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WireFormat::F64 => "f64",
+            WireFormat::F32 => "f32",
+            WireFormat::DeltaF32 => "deltaf32",
+        }
+    }
+
+    /// Whether frames of this format quantize (lossy lanes + residual).
+    pub fn is_lossy(self) -> bool {
+        self != WireFormat::F64
+    }
+}
+
+/// Per-slice scale header of the 4-byte formats: `(offset, scale)` as
+/// two f64 lanes.
+pub const SLICE_SCALE_HEADER_BYTES: usize = 16;
+
+/// Encoded size of an exact frame (`len` f64 lanes).
+pub fn f64_frame_bytes(len: usize) -> usize {
+    8 * len
+}
+
+/// Encoded size of a scale-headered 4-byte frame.
+pub fn f32_frame_bytes(len: usize) -> usize {
+    SLICE_SCALE_HEADER_BYTES + 4 * len
+}
+
+/// One encoded frame: the wire size it pays for, and the receiver-side
+/// reconstruction it delivers.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub bytes: usize,
+    pub payload: Vec<f64>,
+}
+
+/// Sender-held per-stream codec state. One instance per
+/// `(destination, kind, stream)` — streams with unrelated content must
+/// not share a codec, or DeltaF32 would difference across them.
+#[derive(Debug)]
+pub struct StreamCodec {
+    format: WireFormat,
+    /// Receiver's current reconstruction (DeltaF32 reference; empty
+    /// until the keyframe primes the stream or after a length change).
+    reference: Vec<f64>,
+    /// Error-feedback residual: quantization error of the last frame,
+    /// folded into the next frame's target before encoding.
+    residual: Vec<f64>,
+}
+
+impl StreamCodec {
+    pub fn new(format: WireFormat) -> Self {
+        Self { format, reference: Vec::new(), residual: Vec::new() }
+    }
+
+    /// Encode one frame, advancing the stream state. Takes the values by
+    /// value so the exact paths deliver them without a copy.
+    pub fn encode(&mut self, values: Vec<f64>) -> Encoded {
+        match self.format {
+            WireFormat::F64 => {
+                Encoded { bytes: f64_frame_bytes(values.len()), payload: values }
+            }
+            _ if !values.iter().all(|v| v.is_finite()) => {
+                // Non-finite lanes (±∞ scalings): exact fallback frame,
+                // and the stream re-primes on the next finite frame.
+                self.reference.clear();
+                self.residual.clear();
+                Encoded { bytes: f64_frame_bytes(values.len()), payload: values }
+            }
+            WireFormat::F32 => self.encode_f32(values),
+            WireFormat::DeltaF32 => self.encode_delta(values),
+        }
+    }
+
+    /// Absolute scale-headered 4-byte frame with error feedback.
+    fn encode_f32(&mut self, values: Vec<f64>) -> Encoded {
+        let n = values.len();
+        if self.residual.len() != n {
+            self.residual = vec![0.0; n];
+        }
+        // Error feedback: quantize value + carried residual.
+        let mut payload = values;
+        for (v, r) in payload.iter_mut().zip(&self.residual) {
+            *v += r;
+        }
+        let (offset, scale) = offset_scale(&payload);
+        for (v, r) in payload.iter_mut().zip(self.residual.iter_mut()) {
+            let q = quantize(*v, offset, scale);
+            *r = *v - q;
+            *v = q;
+        }
+        Encoded { bytes: f32_frame_bytes(n), payload }
+    }
+
+    /// Delta frame against the receiver's reconstruction; falls back to
+    /// an absolute keyframe whenever the stream is unprimed (first
+    /// frame, length change, post-fallback).
+    fn encode_delta(&mut self, values: Vec<f64>) -> Encoded {
+        let n = values.len();
+        if self.reference.len() != n {
+            self.residual.clear();
+            let enc = self.encode_f32(values);
+            self.reference = enc.payload.clone();
+            return enc;
+        }
+        debug_assert_eq!(self.residual.len(), n);
+        // target = value + residual; delta = target − reference.
+        let mut delta = values;
+        for ((d, r), g) in delta.iter_mut().zip(&self.residual).zip(&self.reference) {
+            *d += r - g;
+        }
+        let (offset, scale) = offset_scale(&delta);
+        for ((d, g), r) in delta
+            .iter_mut()
+            .zip(self.reference.iter_mut())
+            .zip(self.residual.iter_mut())
+        {
+            let qd = quantize(*d, offset, scale);
+            let target = *g + *d;
+            *g += qd;
+            *r = target - *g;
+            *d = *g;
+        }
+        // `delta` now holds the new reconstruction.
+        Encoded { bytes: f32_frame_bytes(n), payload: delta }
+    }
+}
+
+/// Per-slice normalization header: midrange offset and half-range
+/// scale, so normalized lanes sit in `[−1, 1]`.
+fn offset_scale(xs: &[f64]) -> (f64, f64) {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !(lo <= hi) {
+        return (0.0, 0.0); // empty frame
+    }
+    (0.5 * (lo + hi), 0.5 * (hi - lo))
+}
+
+/// Round-trip one lane through the normalized 4-byte representation.
+fn quantize(v: f64, offset: f64, scale: f64) -> f64 {
+    if scale <= 0.0 {
+        // Constant slice: the header alone reconstructs it exactly.
+        return offset;
+    }
+    let norm = ((v - offset) / scale) as f32;
+    offset + norm as f64 * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn max_err(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for f in [WireFormat::F64, WireFormat::F32, WireFormat::DeltaF32] {
+            assert_eq!(WireFormat::parse(f.name()), Some(f));
+        }
+        assert_eq!(WireFormat::parse("delta-f32"), Some(WireFormat::DeltaF32));
+        assert_eq!(WireFormat::parse("bf16"), None);
+        assert!(!WireFormat::F64.is_lossy());
+        assert!(WireFormat::F32.is_lossy() && WireFormat::DeltaF32.is_lossy());
+    }
+
+    #[test]
+    fn f64_frames_are_exact_and_full_width() {
+        let mut c = StreamCodec::new(WireFormat::F64);
+        let v = vec![1.0, -2.5, 1e300, f64::NEG_INFINITY];
+        let enc = c.encode(v.clone());
+        assert_eq!(enc.payload, v);
+        assert_eq!(enc.bytes, 8 * 4);
+    }
+
+    #[test]
+    fn f32_roundtrip_error_scales_with_the_slice_range() {
+        // A slice with a huge common offset (duals/ε regime) but a small
+        // range: the scale header keeps the error at ~2⁻²⁴ of the
+        // *range*, orders of magnitude below a naive f32 cast of the
+        // absolute values.
+        let mut rng = Rng::seed_from(31);
+        let v: Vec<f64> = (0..257).map(|_| -1.0e4 + rng.uniform_range(-2.0, 2.0)).collect();
+        let mut c = StreamCodec::new(WireFormat::F32);
+        let enc = c.encode(v.clone());
+        assert_eq!(enc.bytes, f32_frame_bytes(257));
+        assert!(enc.bytes < f64_frame_bytes(257) * 6 / 10, "≈ half the f64 frame");
+        let step = 2.0 * 2.0f64.powi(-24); // scale ≈ range/2 = 2
+        assert!(max_err(&enc.payload, &v) <= 4.0 * step, "err {}", max_err(&enc.payload, &v));
+        // A naive f32 cast at this magnitude would err by ~1e4·2⁻²⁴ ≈ 6e-4.
+        assert!(max_err(&enc.payload, &v) < 1e-5);
+    }
+
+    #[test]
+    fn constant_and_empty_slices_are_exact() {
+        for fmt in [WireFormat::F32, WireFormat::DeltaF32] {
+            let mut c = StreamCodec::new(fmt);
+            assert!(c.encode(Vec::new()).payload.is_empty());
+            let v = vec![3.25; 9];
+            assert_eq!(c.encode(v.clone()).payload, v, "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn non_finite_frames_fall_back_to_exact() {
+        let mut c = StreamCodec::new(WireFormat::DeltaF32);
+        let _ = c.encode(vec![1.0, 2.0, 3.0]); // primes the stream
+        let v = vec![f64::NEG_INFINITY, 2.0, 3.0];
+        let enc = c.encode(v.clone());
+        assert_eq!(enc.payload, v);
+        assert_eq!(enc.bytes, f64_frame_bytes(3));
+        // Stream re-primes cleanly afterwards.
+        let v2 = vec![1.0, 2.0, 3.0];
+        let enc2 = c.encode(v2.clone());
+        assert!(max_err(&enc2.payload, &v2) < 1e-6);
+    }
+
+    #[test]
+    fn delta_frames_sharpen_as_the_stream_converges() {
+        // A contracting iterate sequence: the delta range shrinks every
+        // round, so the DeltaF32 error floor shrinks with it while the
+        // absolute-F32 floor stays pinned to the slice range.
+        let base: Vec<f64> = (0..64).map(|i| (i as f64 * 0.7).sin() * 50.0).collect();
+        let mut df = StreamCodec::new(WireFormat::DeltaF32);
+        let mut af = StreamCodec::new(WireFormat::F32);
+        let mut delta_err = 0.0;
+        let mut abs_err = 0.0;
+        for round in 0..40 {
+            let shrink = 0.5f64.powi(round);
+            let v: Vec<f64> =
+                base.iter().enumerate().map(|(i, &b)| b + shrink * (i as f64)).collect();
+            delta_err = max_err(&df.encode(v.clone()).payload, &v);
+            abs_err = max_err(&af.encode(v.clone()).payload, &v);
+        }
+        assert!(delta_err < abs_err / 100.0, "delta {delta_err} vs abs {abs_err}");
+    }
+
+    #[test]
+    fn error_feedback_bounds_reconstruction_over_many_rounds() {
+        // ≥100 rounds of a drifting slice: the per-round reconstruction
+        // error must stay bounded by a few quantization steps of that
+        // round's frame — flat over time, not accumulating.
+        let mut rng = Rng::seed_from(37);
+        for fmt in [WireFormat::F32, WireFormat::DeltaF32] {
+            let mut codec = StreamCodec::new(fmt);
+            let mut v: Vec<f64> = (0..128).map(|_| rng.uniform_range(-30.0, 30.0)).collect();
+            let mut early = 0.0f64;
+            let mut late = 0.0f64;
+            for round in 0..120 {
+                for x in v.iter_mut() {
+                    *x += rng.uniform_range(-1e-3, 1e-3);
+                }
+                let err = max_err(&codec.encode(v.clone()).payload, &v);
+                // Frame ranges: F32 ≈ 60 (slice range), DeltaF32 ≈ 2e-3
+                // + residual (delta range); both × 2⁻²⁴, with headroom.
+                // DeltaF32's round 0 is its absolute keyframe and round
+                // 1's delta frame still flushes the keyframe's f32-sized
+                // residual — the delta-sized bound holds from round 2
+                // (cross-checked against the numpy port of this codec).
+                let bound = match fmt {
+                    WireFormat::DeltaF32 if round > 1 => 1e-2 * 2.0f64.powi(-24) * 8.0,
+                    _ => 60.0 * 2.0f64.powi(-24) * 8.0,
+                };
+                assert!(err <= bound, "{} round {round}: err {err} > {bound}", fmt.name());
+                if round < 10 {
+                    early = early.max(err);
+                } else if round >= 110 {
+                    late = late.max(err);
+                }
+            }
+            // No growth: round-110+ errors comparable to round-0..10.
+            assert!(late <= early * 4.0 + 1e-12, "{}: {late} vs {early}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn length_change_reprimes_the_delta_stream() {
+        let mut c = StreamCodec::new(WireFormat::DeltaF32);
+        let _ = c.encode(vec![1.0; 8]);
+        let v = vec![2.0, 4.0, 8.0]; // different length: keyframe
+        let enc = c.encode(v.clone());
+        assert!(max_err(&enc.payload, &v) < 1e-5);
+        let v2 = vec![2.1, 4.1, 8.1];
+        let enc2 = c.encode(v2.clone());
+        assert!(max_err(&enc2.payload, &v2) < 1e-6);
+    }
+}

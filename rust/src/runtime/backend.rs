@@ -168,6 +168,53 @@ pub trait BlockOp: Send {
         let _ = (gref, covered);
         false
     }
+
+    // --- Streamed partial accumulation (`--stream-exchange`) ---------
+    //
+    // The slice-streaming exchange replaces the all-or-nothing gather
+    // barrier: as peer `j`'s frame becomes deliverable, the coordinator
+    // folds `A[:, slice_j]·x_j` into a pending product via these hooks,
+    // hiding decode + partial compute behind the transfers still in
+    // flight. Protocol: `accum_begin`, then one `accum_fold` per slice
+    // of a column partition (any order), then exactly one of
+    // `accum_update` / `accum_matvec`. A `false` from `accum_fold`
+    // means the operator abandoned streaming (e.g. a hybrid drift trip
+    // that needs a re-absorption first): the caller must finish
+    // assembling the full input and run the ordinary `update`/`matvec`
+    // on it instead. The finished streamed product equals the barrier
+    // product up to summation-order round-off (≤ 1e-12 in the
+    // coordinator pins).
+
+    /// Whether this operator implements the streamed accumulation
+    /// protocol. Backends without it (XLA artifact dispatch) keep the
+    /// barrier path.
+    fn supports_streaming(&self) -> bool {
+        false
+    }
+
+    /// Reset the pending streamed product.
+    fn accum_begin(&mut self) {}
+
+    /// Fold rows `[col0, col0+rows)` of the (conceptual) full input into
+    /// the pending product; returns whether streaming is still live.
+    fn accum_fold(&mut self, col0: usize, rows: usize, x_slice: &[f64]) -> bool {
+        let _ = (col0, rows, x_slice);
+        false
+    }
+
+    /// Finish the pending product and apply the damped scaling update —
+    /// the streamed equivalent of [`BlockOp::update`] on the assembled
+    /// input.
+    fn accum_update(&mut self, alpha: f64) -> &Mat {
+        let _ = alpha;
+        unreachable!("operator does not support streamed accumulation")
+    }
+
+    /// Finish the pending product and return it — the streamed
+    /// equivalent of [`BlockOp::matvec`] (star-server step).
+    fn accum_matvec(&mut self) -> &Mat {
+        unreachable!("operator does not support streamed accumulation")
+    }
 }
 
 /// Backend factory: builds [`BlockOp`]s for client blocks.

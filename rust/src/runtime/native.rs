@@ -33,10 +33,62 @@ fn scale_divide_inplace(t: &[f64], t_stride: usize, q: &Mat, alpha: f64, u: &mut
     }
 }
 
+/// In-place damped log-domain update: `log u = α·(log t − q) + (1−α)·
+/// log u` (element-wise, so aliasing old and new state is safe). The
+/// one implementation behind every log operator's `update` — barrier
+/// and streamed paths must apply byte-identical arithmetic.
+fn damped_log_subtract_inplace(log_t: &[f64], t_stride: usize, q: &Mat, alpha: f64, u: &mut Mat) {
+    let (m, nh) = (q.rows(), q.cols());
+    let beta = 1.0 - alpha;
+    for i in 0..m {
+        let qrow = q.row(i);
+        let urow = u.row_mut(i);
+        if t_stride == 0 {
+            let lti = log_t[i];
+            for j in 0..nh {
+                urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
+            }
+        } else {
+            let ltrow = &log_t[i * t_stride..(i + 1) * t_stride];
+            for j in 0..nh {
+                urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
+            }
+        }
+    }
+}
+
+/// Resolve online-logsumexp accumulators into the product buffer:
+/// `q = mx + ln sum` (−∞ where no mass was folded).
+fn finish_lse_accum(mx: &[f64], sum: &[f64], q: &mut Mat) {
+    for (o, (m, s)) in q.as_mut_slice().iter_mut().zip(mx.iter().zip(sum)) {
+        *o = if *s > 0.0 { m + s.ln() } else { f64::NEG_INFINITY };
+    }
+}
+
 /// Density below which CSR dispatch beats dense GEMM for this shape.
 /// Measured in bench_kernels (n=1024): dense wins at density 0.31
 /// (s=0.9), CSR wins at 0.25 (s=1.0) — cutoff set between them.
 const CSR_DENSITY_CUTOFF: f64 = 0.27;
+
+/// Threaded absorbed-GEMM autotuning (ROADMAP item): the banded SpMM
+/// only amortizes its scoped-thread spawn cost above roughly this many
+/// stored-entry FMAs (`nnz·N`); below it the serial lane wins at every
+/// shape in bench_kernels' "absorbed GEMM thread crossover" section
+/// (n×N grid at s=0.9, threads ∈ {1, 2, 4} — re-measure there before
+/// moving this). The hybrid dispatch picks threads per shape from it,
+/// the way the CSR path picks its representation from the measured
+/// [`CSR_DENSITY_CUTOFF`].
+const ABSORBED_GEMM_PAR_MIN_WORK: usize = 1 << 18;
+
+/// Per-shape thread count for the absorbed batched GEMM: serial below
+/// the measured crossover, the configured count above it.
+fn absorbed_gemm_threads(nnz: usize, nh: usize, configured: usize) -> usize {
+    if nnz.saturating_mul(nh.max(1)) < ABSORBED_GEMM_PAR_MIN_WORK {
+        1
+    } else {
+        configured
+    }
+}
 
 /// Drift-capacity ceiling for the shared-support hybrid: the
 /// per-histogram corrections `exp(x − ḡ)` and the row sums they feed
@@ -135,6 +187,8 @@ impl ComputeBackend for NativeBackend {
             t_stride,
             u: u0_log,
             q,
+            acc_mx: Vec::new(),
+            acc_sum: Vec::new(),
             threads: self.threads,
         }))
     }
@@ -163,6 +217,8 @@ impl ComputeBackend for NativeBackend {
             t_stride,
             u: u0_log,
             q,
+            acc_mx: Vec::new(),
+            acc_sum: Vec::new(),
             threads: self.threads,
         }))
     }
@@ -243,6 +299,7 @@ impl ComputeBackend for NativeBackend {
             t_stride,
             u: u0,
             q,
+            acc: Mat::zeros(0, 0),
             threads: self.threads,
         }))
     }
@@ -260,6 +317,10 @@ struct NativeBlockOp {
     u: Mat,
     /// Preallocated product buffer — the hot loop never allocates.
     q: Mat,
+    /// Streamed-exchange accumulator, distinct from `q` so a marginal
+    /// check between folds (its product writes `q`) cannot clobber a
+    /// pending accumulation. Allocated lazily — only streamed runs pay.
+    acc: Mat,
     threads: usize,
 }
 
@@ -329,6 +390,40 @@ impl BlockOp for NativeBlockOp {
         assert_eq!(u.cols(), self.u.cols());
         self.u = u.clone();
     }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn accum_begin(&mut self) {
+        if self.acc.rows() != self.a.rows() {
+            self.acc = Mat::zeros(self.a.rows(), self.u.cols());
+        } else {
+            self.acc.as_mut_slice().fill(0.0);
+        }
+    }
+
+    fn accum_fold(&mut self, col0: usize, rows: usize, x_slice: &[f64]) -> bool {
+        let nh = self.u.cols();
+        match &self.csr {
+            Some(csr) => {
+                csr.matmul_fold(col0, rows, x_slice, nh, self.acc.as_mut_slice(), self.threads)
+            }
+            None => {
+                self.a.matmul_fold(col0, rows, x_slice, nh, self.acc.as_mut_slice(), self.threads)
+            }
+        }
+        true
+    }
+
+    fn accum_update(&mut self, alpha: f64) -> &Mat {
+        scale_divide_inplace(&self.t, self.t_stride, &self.acc, alpha, &mut self.u);
+        &self.u
+    }
+
+    fn accum_matvec(&mut self) -> &Mat {
+        &self.acc
+    }
 }
 
 /// Sparse twin of [`NativeLogBlockOp`]: the block is a θ-truncated
@@ -343,7 +438,18 @@ struct NativeSparseLogBlockOp {
     u: Mat,
     /// Preallocated logsumexp buffer — the hot loop never allocates.
     q: Mat,
+    /// Streamed-exchange online-LSE accumulators (running max + scaled
+    /// sum), distinct from `q` so marginal checks cannot clobber a
+    /// pending accumulation. Lazily allocated.
+    acc_mx: Vec<f64>,
+    acc_sum: Vec<f64>,
     threads: usize,
+}
+
+impl NativeSparseLogBlockOp {
+    fn accum_finish(&mut self) {
+        finish_lse_accum(&self.acc_mx, &self.acc_sum, &mut self.q);
+    }
 }
 
 impl BlockOp for NativeSparseLogBlockOp {
@@ -361,24 +467,44 @@ impl BlockOp for NativeSparseLogBlockOp {
 
     fn update(&mut self, x_log: &Mat, alpha: f64) -> &Mat {
         self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
-        let (m, nh) = (self.q.rows(), self.q.cols());
-        let beta = 1.0 - alpha;
-        for i in 0..m {
-            let qrow = self.q.row(i);
-            let urow = self.u.row_mut(i);
-            if self.t_stride == 0 {
-                let lti = self.log_t[i];
-                for j in 0..nh {
-                    urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
-                }
-            } else {
-                let ltrow = &self.log_t[i * self.t_stride..(i + 1) * self.t_stride];
-                for j in 0..nh {
-                    urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
-                }
-            }
-        }
+        damped_log_subtract_inplace(&self.log_t, self.t_stride, &self.q, alpha, &mut self.u);
         &self.u
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn accum_begin(&mut self) {
+        let len = self.a_log.rows() * self.u.cols();
+        self.acc_mx.resize(len, 0.0);
+        self.acc_sum.resize(len, 0.0);
+        self.acc_mx.fill(f64::NEG_INFINITY);
+        self.acc_sum.fill(0.0);
+    }
+
+    fn accum_fold(&mut self, col0: usize, rows: usize, x_slice: &[f64]) -> bool {
+        self.a_log.logsumexp_fold(
+            col0,
+            rows,
+            x_slice,
+            self.u.cols(),
+            &mut self.acc_mx,
+            &mut self.acc_sum,
+            self.threads,
+        );
+        true
+    }
+
+    fn accum_update(&mut self, alpha: f64) -> &Mat {
+        self.accum_finish();
+        damped_log_subtract_inplace(&self.log_t, self.t_stride, &self.q, alpha, &mut self.u);
+        &self.u
+    }
+
+    fn accum_matvec(&mut self) -> &Mat {
+        self.accum_finish();
+        &self.q
     }
 
     fn matvec(&mut self, x_log: &Mat) -> &Mat {
@@ -460,6 +586,16 @@ struct HybridLogBlockOp {
     /// represent ([`HYBRID_MAX_CAPACITY`]); every product then runs the
     /// dense logsumexp and counts as a non-linear iteration.
     dense_fallback: bool,
+    /// Streamed-exchange state: the linear accumulator of the absorbed
+    /// fold path, the online-LSE accumulators of the dense-fallback
+    /// fold path (all lazy, distinct from the barrier-path scratch so a
+    /// marginal check between folds cannot clobber them), whether an
+    /// accumulation is pending, and which mode it runs in.
+    acc_lin: Mat,
+    acc_mx: Vec<f64>,
+    acc_sum: Vec<f64>,
+    accum_active: bool,
+    acc_dense: bool,
     threads: usize,
     stats: StabStats,
 }
@@ -524,6 +660,11 @@ impl HybridLogBlockOp {
             drift: vec![0.0; nh],
             tau,
             dense_fallback,
+            acc_lin: Mat::zeros(0, 0),
+            acc_mx: Vec::new(),
+            acc_sum: Vec::new(),
+            accum_active: false,
+            acc_dense: false,
             threads,
             stats: StabStats { absorb_triggers: vec![0; nh], ..StabStats::default() },
         }
@@ -550,6 +691,23 @@ impl HybridLogBlockOp {
         self.kernel.max_drift_into(x_log, &mut self.drift);
         let covered = self.kernel.covered();
         if self.drift.iter().any(|&d| d > covered) {
+            if self.accum_active {
+                // A pending streamed accumulation pins the kernel (its
+                // folded partials would go stale under a re-absorption):
+                // serve this product — a marginal check racing the
+                // exchange — densely and leave the re-absorption to the
+                // next unpinned product. Exact either way.
+                if count_absorb {
+                    self.stats.absorbs += 1;
+                    for (t, &d) in self.stats.absorb_triggers.iter_mut().zip(&self.drift) {
+                        if d > covered {
+                            *t += 1;
+                        }
+                    }
+                }
+                self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+                return;
+            }
             // New reference: the column-wise mean across histograms —
             // it centers the per-histogram corrections, so the residual
             // spread is the smallest symmetric drift bound.
@@ -595,8 +753,20 @@ impl HybridLogBlockOp {
                 }
             }
         }
+        let threads = absorbed_gemm_threads(self.kernel.nnz(), nh, self.threads);
         self.kernel
-            .log_matmul_into(x_log, &mut self.ex, &mut self.lin_q, &mut self.q, self.threads);
+            .log_matmul_into(x_log, &mut self.ex, &mut self.lin_q, &mut self.q, threads);
+    }
+
+    /// Resolve a pending streamed accumulation into `q` and release the
+    /// kernel pin.
+    fn accum_finish(&mut self) {
+        if self.acc_dense {
+            finish_lse_accum(&self.acc_mx, &self.acc_sum, &mut self.q);
+        } else {
+            self.kernel.log_matmul_finish(&self.acc_lin, &mut self.q);
+        }
+        self.accum_active = false;
     }
 }
 
@@ -616,29 +786,86 @@ impl BlockOp for HybridLogBlockOp {
     fn update(&mut self, x_log: &Mat, alpha: f64) -> &Mat {
         self.product(x_log, true);
         self.stats.updates += 1;
-        let (m, nh) = (self.q.rows(), self.q.cols());
-        let beta = 1.0 - alpha;
-        for i in 0..m {
-            let qrow = self.q.row(i);
-            let urow = self.u.row_mut(i);
-            if self.t_stride == 0 {
-                let lti = self.log_t[i];
-                for j in 0..nh {
-                    urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
-                }
-            } else {
-                let ltrow = &self.log_t[i * self.t_stride..(i + 1) * self.t_stride];
-                for j in 0..nh {
-                    urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
-                }
-            }
-        }
+        damped_log_subtract_inplace(&self.log_t, self.t_stride, &self.q, alpha, &mut self.u);
         &self.u
     }
 
     fn matvec(&mut self, x_log: &Mat) -> &Mat {
         self.product(x_log, true);
         self.stats.updates += 1;
+        &self.q
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn accum_begin(&mut self) {
+        let (m, nh) = (self.a_log.rows(), self.u.cols());
+        self.acc_dense = self.dense_fallback;
+        if self.acc_dense {
+            self.acc_mx.resize(m * nh, 0.0);
+            self.acc_sum.resize(m * nh, 0.0);
+            self.acc_mx.fill(f64::NEG_INFINITY);
+            self.acc_sum.fill(0.0);
+        } else if self.acc_lin.rows() != m {
+            self.acc_lin = Mat::zeros(m, nh);
+        } else {
+            self.acc_lin.as_mut_slice().fill(0.0);
+        }
+        self.accum_active = true;
+    }
+
+    /// Fold one slice: on the linear path the slice must sit inside the
+    /// support's covered drift — a slice that trips the bound abandons
+    /// streaming (returns `false`) so the caller's barrier fallback can
+    /// re-absorb first; rare by the hybrid's own premise. The
+    /// dense-fallback mode folds through the online LSE and never
+    /// aborts.
+    fn accum_fold(&mut self, col0: usize, rows: usize, x_slice: &[f64]) -> bool {
+        debug_assert!(self.accum_active, "accum_fold without accum_begin");
+        let nh = self.u.cols();
+        if self.acc_dense {
+            self.a_log.logsumexp_fold(
+                col0,
+                rows,
+                x_slice,
+                nh,
+                &mut self.acc_mx,
+                &mut self.acc_sum,
+                self.threads,
+            );
+            return true;
+        }
+        if self.kernel.slice_drift(col0, rows, x_slice, nh) > self.kernel.covered() {
+            self.accum_active = false;
+            return false;
+        }
+        let threads = absorbed_gemm_threads(self.kernel.nnz(), nh, self.threads);
+        let ex_slice = &mut self.ex.as_mut_slice()[col0 * nh..(col0 + rows) * nh];
+        self.kernel
+            .log_matmul_fold(col0, rows, x_slice, nh, ex_slice, &mut self.acc_lin, threads);
+        true
+    }
+
+    fn accum_update(&mut self, alpha: f64) -> &Mat {
+        self.accum_finish();
+        self.stats.updates += 1;
+        if self.acc_dense {
+            // Dense-fallback folds are logsumexp iterations, counted
+            // non-linear exactly like the barrier fallback products.
+            self.stats.absorbs += 1;
+        }
+        damped_log_subtract_inplace(&self.log_t, self.t_stride, &self.q, alpha, &mut self.u);
+        &self.u
+    }
+
+    fn accum_matvec(&mut self) -> &Mat {
+        self.accum_finish();
+        self.stats.updates += 1;
+        if self.acc_dense {
+            self.stats.absorbs += 1;
+        }
         &self.q
     }
 
@@ -752,12 +979,20 @@ struct NativeLogBlockOp {
     u: Mat,
     /// Preallocated logsumexp buffer — the hot loop never allocates.
     q: Mat,
+    /// Streamed-exchange online-LSE accumulators, distinct from `q` so
+    /// marginal checks cannot clobber a pending accumulation. Lazy.
+    acc_mx: Vec<f64>,
+    acc_sum: Vec<f64>,
     threads: usize,
 }
 
 impl NativeLogBlockOp {
     fn product(&mut self, x_log: &Mat) {
         self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+    }
+
+    fn accum_finish(&mut self) {
+        finish_lse_accum(&self.acc_mx, &self.acc_sum, &mut self.q);
     }
 }
 
@@ -780,24 +1015,44 @@ impl BlockOp for NativeLogBlockOp {
         // aliasing old and new state is safe). Note α < 1 damps the
         // *duals* — geometrically in the linear domain — which coincides
         // with linear damping at α = 1 (the Prop.-1 regime).
-        let (m, nh) = (self.q.rows(), self.q.cols());
-        let beta = 1.0 - alpha;
-        for i in 0..m {
-            let qrow = self.q.row(i);
-            let urow = self.u.row_mut(i);
-            if self.t_stride == 0 {
-                let lti = self.log_t[i];
-                for j in 0..nh {
-                    urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
-                }
-            } else {
-                let ltrow = &self.log_t[i * self.t_stride..(i + 1) * self.t_stride];
-                for j in 0..nh {
-                    urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
-                }
-            }
-        }
+        damped_log_subtract_inplace(&self.log_t, self.t_stride, &self.q, alpha, &mut self.u);
         &self.u
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn accum_begin(&mut self) {
+        let len = self.a_log.rows() * self.u.cols();
+        self.acc_mx.resize(len, 0.0);
+        self.acc_sum.resize(len, 0.0);
+        self.acc_mx.fill(f64::NEG_INFINITY);
+        self.acc_sum.fill(0.0);
+    }
+
+    fn accum_fold(&mut self, col0: usize, rows: usize, x_slice: &[f64]) -> bool {
+        self.a_log.logsumexp_fold(
+            col0,
+            rows,
+            x_slice,
+            self.u.cols(),
+            &mut self.acc_mx,
+            &mut self.acc_sum,
+            self.threads,
+        );
+        true
+    }
+
+    fn accum_update(&mut self, alpha: f64) -> &Mat {
+        self.accum_finish();
+        damped_log_subtract_inplace(&self.log_t, self.t_stride, &self.q, alpha, &mut self.u);
+        &self.u
+    }
+
+    fn accum_matvec(&mut self) -> &Mat {
+        self.accum_finish();
+        &self.q
     }
 
     fn matvec(&mut self, x_log: &Mat) -> &Mat {
@@ -838,5 +1093,172 @@ impl BlockOp for NativeLogBlockOp {
         assert_eq!(u.rows(), self.u.rows());
         assert_eq!(u.cols(), self.u.cols());
         self.u = u.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn absorbed_gemm_autotune_crossover() {
+        // Below the measured crossover the dispatch stays serial no
+        // matter what was configured; above it the configured count is
+        // honored.
+        assert_eq!(absorbed_gemm_threads(1000, 8, 4), 1);
+        assert_eq!(absorbed_gemm_threads(ABSORBED_GEMM_PAR_MIN_WORK, 1, 4), 4);
+        assert_eq!(absorbed_gemm_threads(ABSORBED_GEMM_PAR_MIN_WORK / 8, 8, 4), 4);
+        assert_eq!(absorbed_gemm_threads(usize::MAX, 8, 4), 4, "saturating work product");
+    }
+
+    /// Run the streamed accumulation protocol over a scrambled column
+    /// partition and return the updated state.
+    fn streamed_update(op: &mut dyn BlockOp, x: &Mat, slices: usize, alpha: f64) -> Mat {
+        let (n, nh) = (x.rows(), x.cols());
+        assert_eq!(n % slices, 0);
+        let m = n / slices;
+        assert!(op.supports_streaming());
+        op.accum_begin();
+        let mut order: Vec<usize> = (0..slices).collect();
+        order.reverse();
+        for j in order {
+            let slice = &x.as_slice()[j * m * nh..(j + 1) * m * nh];
+            assert!(op.accum_fold(j * m, m, slice), "fold {j} aborted");
+        }
+        op.accum_update(alpha).clone()
+    }
+
+    fn sample_log(n: usize, nh: usize, lo: f64, seed: u64) -> (Mat, Vec<f64>, Mat, Mat) {
+        let mut rng = Rng::seed_from(seed);
+        let a_log = Mat::rand_uniform(n, n, lo, 0.0, &mut rng);
+        let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let x = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        let u0 = Mat::zeros(n, nh);
+        (a_log, t, x, u0)
+    }
+
+    #[test]
+    fn streamed_equals_barrier_linear_op() {
+        let mut rng = Rng::seed_from(71);
+        for density_drop in [0.0, 0.8] {
+            // 0.8 drop pushes the op onto the CSR representation.
+            let (n, nh) = (24, 3);
+            let mut a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j && rng.uniform() < density_drop {
+                        a[(i, j)] = 0.0;
+                    }
+                }
+            }
+            let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+            let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+            let be = NativeBackend::new(2);
+            let mut barrier = be.block_op(&a, Target::Vec(&t), Mat::ones(n, nh)).unwrap();
+            let mut stream = be.block_op(&a, Target::Vec(&t), Mat::ones(n, nh)).unwrap();
+            let want = barrier.update(&x, 0.7).clone();
+            let got = streamed_update(&mut *stream, &x, 4, 0.7);
+            assert!(got.allclose(&want, 1e-12), "drop {density_drop}");
+        }
+    }
+
+    #[test]
+    fn streamed_equals_barrier_log_ops() {
+        // Dense logsumexp and truncated-sparse operators: the online
+        // running-max merge over slices must match the one-shot product.
+        let (a_log, t, x, u0) = sample_log(20, 2, -6.0, 72);
+        let be = NativeBackend::new(2);
+        let mut barrier = be.log_block_op(&a_log, Target::Vec(&t), u0.clone()).unwrap();
+        let mut stream = be.log_block_op(&a_log, Target::Vec(&t), u0.clone()).unwrap();
+        let want = barrier.update(&x, 1.0).clone();
+        let got = streamed_update(&mut *stream, &x, 5, 1.0);
+        assert!(got.allclose(&want, 1e-12), "dense log op");
+
+        let truncated = LogCsr::from_dense_log(&a_log, -4.0);
+        assert!(truncated.nnz() < 20 * 20);
+        let mut barrier = be
+            .sparse_log_block_op(&truncated, Target::Vec(&t), u0.clone())
+            .unwrap();
+        let mut stream = be.sparse_log_block_op(&truncated, Target::Vec(&t), u0).unwrap();
+        let want = barrier.update(&x, 1.0).clone();
+        let got = streamed_update(&mut *stream, &x, 5, 1.0);
+        assert!(got.allclose(&want, 1e-12), "sparse log op");
+    }
+
+    #[test]
+    fn streamed_equals_barrier_hybrid_op() {
+        let (a_log, t, x, u0) = sample_log(24, 2, -200.0, 73);
+        let stab = Stabilization::default();
+        let be = NativeBackend::new(1);
+        let mut barrier = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), u0.clone(), &stab)
+            .unwrap();
+        let mut stream = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), u0, &stab)
+            .unwrap();
+        let want = barrier.update(&x, 1.0).clone();
+        let got = streamed_update(&mut *stream, &x, 4, 1.0);
+        assert!(got.allclose(&want, 1e-12));
+        // Both schedules counted one linear update, no absorbs.
+        let (bs, ss) = (barrier.stab_stats().unwrap(), stream.stab_stats().unwrap());
+        assert_eq!(bs.updates, 1);
+        assert_eq!(ss.updates, 1);
+        assert_eq!(ss.absorbs, bs.absorbs);
+    }
+
+    #[test]
+    fn hybrid_drift_trip_aborts_streaming_then_barrier_recovers() {
+        let (a_log, t, _, u0) = sample_log(24, 2, -200.0, 74);
+        let stab = Stabilization { absorb_threshold: 2.0, ..Stabilization::default() };
+        let be = NativeBackend::new(1);
+        let mut op = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), u0.clone(), &stab)
+            .unwrap();
+        // Scalings far beyond the covered drift: the first fold must
+        // abandon streaming, and the ordinary barrier update must then
+        // re-absorb and stay exact.
+        let mut rng = Rng::seed_from(75);
+        let x = Mat::rand_uniform(24, 2, 5.0, 9.0, &mut rng);
+        op.accum_begin();
+        let slice = &x.as_slice()[0..6 * 2];
+        assert!(!op.accum_fold(0, 6, slice), "drift trip must abort streaming");
+        let got = op.update(&x, 1.0).clone();
+        let st = op.stab_stats().unwrap();
+        assert_eq!(st.absorbs, 1, "the barrier fallback re-absorbed");
+        // Oracle: the pure dense log operator on the same inputs.
+        let mut oracle = be.log_block_op(&a_log, Target::Vec(&t), u0).unwrap();
+        let want = oracle.update(&x, 1.0).clone();
+        assert!(got.allclose(&want, 1e-11));
+    }
+
+    #[test]
+    fn pending_accumulation_pins_the_hybrid_kernel() {
+        // A marginal check whose scalings have drifted past the bound
+        // runs while an accumulation is pending: it must not re-absorb
+        // (the folded partials would go stale) and the finished streamed
+        // update must still match the barrier oracle.
+        let (a_log, t, x, u0) = sample_log(24, 2, -200.0, 76);
+        let stab = Stabilization { absorb_threshold: 2.0, ..Stabilization::default() };
+        let be = NativeBackend::new(1);
+        let mut op = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), u0.clone(), &stab)
+            .unwrap();
+        op.accum_begin();
+        for j in 0..4 {
+            let slice = &x.as_slice()[j * 6 * 2..(j + 1) * 6 * 2];
+            assert!(op.accum_fold(j * 6, 6, slice));
+        }
+        // Far-drifted marginal input mid-stream (served densely).
+        let mut rng = Rng::seed_from(77);
+        let far = Mat::rand_uniform(24, 2, 5.0, 9.0, &mut rng);
+        let u_now = op.state().clone();
+        let _ = op.marginal(&far, &u_now);
+        let got = op.accum_update(1.0).clone();
+        let mut oracle = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), u0, &stab)
+            .unwrap();
+        let want = oracle.update(&x, 1.0).clone();
+        assert!(got.allclose(&want, 1e-12));
     }
 }
