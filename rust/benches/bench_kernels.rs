@@ -147,10 +147,11 @@ fn main() {
     }
 
     section("absorbed GEMM thread crossover (s=0.9)");
-    // The shape-aware thread dispatch of the hybrid engine
-    // (`ABSORBED_GEMM_PAR_MIN_WORK` in runtime/native.rs) is calibrated
-    // here: at nnz·N below the crossover the banded SpMM loses to its
-    // own spawn cost, above it the configured threads win. Stable
+    // The shape-aware thread dispatch of the hybrid engine (the pool's
+    // calibrated `par_min_work` crossover, `FEDSINK_PAR_MIN_WORK` to
+    // override) is charted here: at nnz·N below the crossover the
+    // banded SpMM loses to its own dispatch cost, above it the
+    // configured threads win. Stable
     // `note` identities keep the perf gate tracking these cases across
     // rewordings.
     let xover_shapes: &[(usize, usize)] = if quick {
@@ -225,6 +226,58 @@ fn main() {
                 full.retruncate(&a_log, &gref, 15.0)
             })
             .with_note(&format!("fleet-full-retruncate-n{n}")),
+        );
+    }
+
+    section("spawn vs pool dispatch (banded dot-product loop, t=4)");
+    // The worker-pool runtime's claim, measured: one identical band
+    // body — a plain row·x dot loop — dispatched two ways. The pool
+    // side submits to the resident workers (park/unpark handoff); the
+    // scoped side pays a fresh `crossbeam` thread spawn per call, the
+    // dispatch every hot kernel used before the pool. The gap is pure
+    // dispatch overhead, largest at streamed-fold slice sizes (small
+    // n). Stable `note` identities keep the perf gate matching these.
+    let spawn_shapes: &[usize] = if quick { &[256, 2048] } else { &[256, 512, 1024, 2048] };
+    for &n in spawn_shapes {
+        let mut rng = Rng::seed_from(child_seed(0xB_0009, n as u64));
+        let a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
+        let (data, xs) = (a.as_slice(), x.as_slice());
+        let threads = 4usize;
+        let mut out = vec![0.0; n];
+        let band_dot = |band: &mut [f64], r0: usize| {
+            for (i, oi) in band.iter_mut().enumerate() {
+                let row = &data[(r0 + i) * n..(r0 + i) * n + n];
+                *oi = row.iter().zip(xs).map(|(aij, xj)| aij * xj).sum();
+            }
+        };
+        struct SendPtr(*mut f64);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let pool = fedsink::runtime::Pool::global().with_share(threads);
+        let base = SendPtr(out.as_mut_ptr());
+        baseline.push(
+            b.run(&format!("pool-dispatch banded-dot n={n} t={threads}"), || {
+                pool.run_bands(n, |_, r0, r1| {
+                    // Bands are disjoint, so the aliased writes are safe.
+                    let band = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0), r1 - r0) };
+                    band_dot(band, r0);
+                })
+            })
+            .with_note(&format!("pool-dispatch-dot-n{n}-t{threads}")),
+        );
+        let per = n.div_ceil(threads);
+        baseline.push(
+            b.run(&format!("scoped-spawn  banded-dot n={n} t={threads}"), || {
+                let bd = &band_dot;
+                crossbeam_utils::thread::scope(|s| {
+                    for (bidx, band) in out.chunks_mut(per).enumerate() {
+                        s.spawn(move |_| bd(band, bidx * per));
+                    }
+                })
+                .unwrap();
+            })
+            .with_note(&format!("scoped-spawn-dot-n{n}-t{threads}")),
         );
     }
 

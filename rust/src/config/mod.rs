@@ -186,6 +186,11 @@ pub struct SolveConfig {
     /// barrier to stream) and under `--fleet-absorb` (the fleet round
     /// must see the product *after* the commanded re-absorption).
     pub stream_exchange: bool,
+    /// DeltaF32 keyframe cadence (`--wire-keyframe-every`): force a full
+    /// keyframe frame every K encoded rounds per stream, bounding how
+    /// long a reconstruction can drift from exact state under future
+    /// lossy links. 0 (default) keys only on stream (re)priming.
+    pub wire_keyframe_every: usize,
 }
 
 impl SolveConfig {
@@ -213,12 +218,13 @@ impl Default for SolveConfig {
             timeout_secs: 0.0,
             check_every: 1,
             max_staleness: 8,
-            compute_threads: 1,
+            compute_threads: compute_threads_from_settings(),
             seed: 42,
             artifacts_dir: default_artifacts_dir(),
             net: crate::net::LatencyModel::lan(),
             wire: crate::net::WireFormat::F64,
             stream_exchange: false,
+            wire_keyframe_every: 0,
         }
     }
 }
@@ -255,6 +261,51 @@ pub fn domain_choice_from_settings() -> DomainChoice {
             }
         }
         domain_choice_from(&s)
+    })
+}
+
+/// The compute-thread count carried by a [`Settings`] map (the
+/// `threads` key — `FEDSINK_THREADS` in the environment, `threads = ...`
+/// in a config file). Defaults to `available_parallelism` when absent,
+/// unparseable or zero.
+pub fn compute_threads_from(settings: &Settings) -> usize {
+    match settings.get_usize("threads") {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+static COMPUTE_THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+
+/// Pin the process-default compute-thread count (the `--threads` flag).
+/// First caller wins and must run before the first
+/// `SolveConfig::default()` / `runtime::Pool::global()` — once either
+/// has resolved the count, this is a no-op. Returns the effective value.
+pub fn init_compute_threads(n: usize) -> usize {
+    *COMPUTE_THREADS.get_or_init(|| n.max(1))
+}
+
+/// Resolve the default compute-thread count from the process
+/// environment: `FEDSINK_THREADS` first, then a `threads = ...` key in
+/// the config file named by `FEDSINK_CONFIG`, else
+/// `available_parallelism`. Sizes `SolveConfig::default()` and the
+/// persistent worker pool (`runtime::Pool::global`); resolved once per
+/// process, mirroring [`domain_choice_from_settings`]. A `--threads`
+/// flag pins it first via [`init_compute_threads`].
+pub fn compute_threads_from_settings() -> usize {
+    *COMPUTE_THREADS.get_or_init(|| {
+        let mut s = Settings::default();
+        s.overlay_env();
+        if let Ok(path) = std::env::var("FEDSINK_CONFIG") {
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if let Ok(file) = load_file(&text) {
+                    for (k, v) in file.map {
+                        s.map.entry(k).or_insert(v); // env keys win over file keys
+                    }
+                }
+            }
+        }
+        compute_threads_from(&s)
     })
 }
 
@@ -417,6 +468,33 @@ mod tests {
         // The file loader produces the same key shape.
         let f = load_file("domain = log").unwrap();
         assert_eq!(domain_choice_from(&f), DomainChoice::Log);
+    }
+
+    #[test]
+    fn threads_key_resolves_from_settings() {
+        // The key `FEDSINK_THREADS` lands on via `Settings::overlay_env`
+        // and a config file's `threads =` line both resolve through
+        // `compute_threads_from`; absent, bad, or zero values fall back
+        // to available_parallelism. (Hand-built Settings — mutating the
+        // process environment would race parallel tests.)
+        let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut s = Settings::default();
+        assert_eq!(compute_threads_from(&s), auto);
+        s.set("threads", "3");
+        assert_eq!(compute_threads_from(&s), 3);
+        s.set("threads", "0");
+        assert_eq!(compute_threads_from(&s), auto);
+        s.set("threads", "bogus");
+        assert_eq!(compute_threads_from(&s), auto);
+        let f = load_file("threads = 2").unwrap();
+        assert_eq!(compute_threads_from(&f), 2);
+        // The resolved default sizes SolveConfig.
+        assert!(SolveConfig::default().compute_threads >= 1);
+    }
+
+    #[test]
+    fn keyframe_cadence_defaults_off() {
+        assert_eq!(SolveConfig::default().wire_keyframe_every, 0);
     }
 
     #[test]

@@ -143,8 +143,11 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         iterations = k;
         let k64 = k as u64;
 
-        // Inconsistent reads + bounded-staleness wait.
+        // Inconsistent reads + bounded-staleness wait. The arrival count
+        // is read *before* each drain so a frame landing between the
+        // drain and the park still wakes us immediately.
         timer.comm(|| {
+            let mut seen = ep.inbox_seq();
             drain(&ep, ctx, id, c, k64, &mut peers, &mut u_full, &mut v_full, m);
             // Wait for any peer we have outrun beyond the bound.
             loop {
@@ -154,7 +157,9 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 if !lagging {
                     break;
                 }
-                std::thread::sleep(std::time::Duration::from_micros(50));
+                // Park on the inbox until traffic moves (or a queued
+                // frame matures) instead of a fixed busy-sleep.
+                seen = ep.wait_traffic(seen, std::time::Duration::from_millis(1));
                 drain(&ep, ctx, id, c, k64, &mut peers, &mut u_full, &mut v_full, m);
             }
         });
@@ -282,6 +287,10 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             );
         }
 
+        // Dequantizing the frames this iteration consumed (latest-wins
+        // drains included) is receiver CPU work.
+        timer.add_comp(ep.take_decode_secs());
+
         // Independent convergence check on the node's own block error,
         // scaled ×c as the global-magnitude estimate.
         if let Some(local) = pre_err {
@@ -316,6 +325,7 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         let _ = allgather(&ep, TagKind::U, u64::MAX - 1, u_fin.as_slice(), iterations as u64);
         let _ = allgather(&ep, TagKind::V, u64::MAX, v_fin.as_slice(), iterations as u64);
     });
+    timer.add_comp(ep.take_decode_secs());
 
     NodeOutcome {
         stats: NodeStats {

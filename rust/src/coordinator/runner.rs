@@ -127,7 +127,18 @@ pub fn run_federated(
     traced: bool,
 ) -> FederatedOutcome {
     let t0 = std::time::Instant::now();
-    let backend = make_backend(cfg.backend, &cfg.artifacts_dir, cfg.compute_threads)
+    // A centralized run owns the whole worker pool; a federated run
+    // splits it across simulated nodes (each node thread dispatches with
+    // its share), so `c` nodes never oversubscribe the resident workers
+    // the way `c × compute_threads` scoped spawns used to.
+    let node_share = match cfg.variant {
+        Variant::Centralized => cfg.compute_threads.max(1),
+        Variant::SyncStar | Variant::AsyncStar => {
+            cfg.compute_threads.div_ceil(cfg.clients + 1).max(1)
+        }
+        _ => cfg.compute_threads.div_ceil(cfg.clients.max(1)).max(1),
+    };
+    let backend = make_backend(cfg.backend, &cfg.artifacts_dir, node_share)
         .expect("backend construction");
 
     // Resolve the numerics domain once for the whole run. An *automatic*
@@ -188,7 +199,10 @@ pub fn run_federated(
         _ => cfg.clients,
     };
     let latency: LatencyModel = cfg.net;
-    let net = Arc::new(SimNet::with_wire(nodes, latency, cfg.seed, cfg.wire));
+    let net = Arc::new(
+        SimNet::with_wire(nodes, latency, cfg.seed, cfg.wire)
+            .with_keyframe_every(cfg.wire_keyframe_every),
+    );
     let delays = Arc::new(DelayTracker::new());
 
     let ctx = RunCtx {

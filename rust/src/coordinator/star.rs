@@ -175,7 +175,10 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
                 ep.send_coded(j, TagKind::Ctl, round, STREAM_CHUNK_R, chunk, k64);
             }
         });
+        // Dequantizing the received slice frames is receiver CPU work.
+        timer.add_comp(ep.take_decode_secs());
     }
+    timer.add_comp(ep.take_decode_secs());
 
     NodeOutcome {
         stats: NodeStats {
@@ -267,7 +270,10 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         round += 1;
         let r = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
         timer.comp(|| targets.damped_v_update(&mut v_jj, &r, alpha));
+        // Decode cost of the chunks received this iteration.
+        timer.add_comp(ep.take_decode_secs());
     }
+    timer.add_comp(ep.take_decode_secs());
 
     NodeOutcome {
         stats: NodeStats {
@@ -350,6 +356,9 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     for s in 1..=(4 * ctx.policy.max_iters) {
         iterations = s;
         let s64 = s as u64;
+        // Arrival count *before* this pass's drains: if the whole pass
+        // turns up nothing fresh, we park until the inbox moves past it.
+        let inbox_seen = ep.inbox_seq();
 
         // Done votes first (control tag 2): a vote must take effect on
         // *this* pass's staleness gate and resend decision, not a full
@@ -440,16 +449,21 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
         let any_fresh = fresh_v || fresh_u;
         // Any pending resend has now been honored by this pass's sends.
         resend = false;
+        // Decode cost of every frame this pass consumed (latest-wins
+        // drains included) is receiver CPU work.
+        timer.add_comp(ep.take_decode_secs());
 
         if !any_fresh {
-            // Nothing new from any client: yield briefly instead of
-            // recomputing identical products at full spin.
-            std::thread::sleep(std::time::Duration::from_micros(20));
+            // Nothing new from any client: park on the inbox until
+            // traffic moves past what this pass saw (or a queued frame
+            // matures) instead of burning fixed busy-sleeps at a spin.
+            ep.wait_traffic(inbox_seen, std::time::Duration::from_millis(1));
         }
         if ctx.policy.timeout_secs > 0.0 && clock.now() > 2.0 * ctx.policy.timeout_secs {
             break;
         }
     }
+    timer.add_comp(ep.take_decode_secs());
 
     NodeOutcome {
         stats: NodeStats {
@@ -501,6 +515,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         timer.comm(|| {
             let mut got = false;
             loop {
+                let seen = ep.inbox_seq();
                 if let Some(msg) = ep.try_recv_latest(server, TagKind::Ctl, A_TAG) {
                     ctx.delays.record(msg.sent_iter, k64);
                     q_latest.copy_from_slice(&msg.payload);
@@ -509,7 +524,10 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 if got || stale_rounds < bound {
                     break;
                 }
-                std::thread::sleep(std::time::Duration::from_micros(50));
+                // Over the staleness bound with no fresh chunk: park on
+                // the inbox until traffic moves (or a frame matures)
+                // instead of a fixed busy-sleep.
+                ep.wait_traffic(seen, std::time::Duration::from_millis(1));
             }
             stale_rounds = if got { 0 } else { stale_rounds + 1 };
         });
@@ -539,6 +557,8 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         timer.comm(|| {
             ep.send_coded(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), k64)
         });
+        // Dequantizing the chunks consumed this round is receiver CPU work.
+        timer.add_comp(ep.take_decode_secs());
 
         if let Some(local) = pre_err {
             let est = local * c as f64;
@@ -556,6 +576,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             break;
         }
     }
+    timer.add_comp(ep.take_decode_secs());
 
     // Tell the server we are finished.
     ep.send(server, TagKind::Ctl, A_TAG + 2, vec![1.0], iterations as u64);

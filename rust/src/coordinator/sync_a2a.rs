@@ -251,7 +251,10 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 break 'outer;
             }
         }
+        // Dequantizing this round's received frames is receiver CPU work.
+        timer.add_comp(ep.take_decode_secs());
     }
+    timer.add_comp(ep.take_decode_secs());
 
     NodeOutcome {
         stats: NodeStats {

@@ -42,6 +42,8 @@ pub struct PerfGridArgs {
     /// Slice-streaming exchange (`--stream-exchange`) for the sync
     /// variants.
     pub stream_exchange: bool,
+    /// DeltaF32 keyframe cadence (`--wire-keyframe-every`).
+    pub wire_keyframe_every: usize,
     pub out: Option<String>,
 }
 
@@ -81,6 +83,7 @@ impl PerfGridArgs {
             fleet_compare: false,
             wire: WireFormat::F64,
             stream_exchange: false,
+            wire_keyframe_every: 0,
             out: None,
         }
     }
@@ -148,6 +151,7 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
                                 seed: n as u64 + c as u64,
                                 wire: args.wire,
                                 stream_exchange: args.stream_exchange,
+                                wire_keyframe_every: args.wire_keyframe_every,
                                 ..Default::default()
                             };
                             let (rec, _) = run_case_cfg(&p, &cfg, policy, (s, cond));
@@ -274,6 +278,7 @@ fn fleet_comparison(args: &PerfGridArgs) -> Json {
                     // meant to measure.
                     wire: args.wire,
                     stream_exchange: args.stream_exchange,
+                    wire_keyframe_every: args.wire_keyframe_every,
                     ..Default::default()
                 };
                 run_case_cfg(&p, &cfg, policy, (0.0, CondClass::Ill))

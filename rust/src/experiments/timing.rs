@@ -30,6 +30,8 @@ pub struct TimingArgs {
     pub wire: WireFormat,
     /// Slice-streaming exchange (`--stream-exchange`).
     pub stream_exchange: bool,
+    /// DeltaF32 keyframe cadence (`--wire-keyframe-every`).
+    pub wire_keyframe_every: usize,
     pub out: Option<String>,
 }
 
@@ -51,6 +53,7 @@ impl TimingArgs {
             },
             wire: WireFormat::F64,
             stream_exchange: false,
+            wire_keyframe_every: 0,
             out: None,
         }
     }
@@ -100,6 +103,7 @@ pub fn run(args: &TimingArgs) -> anyhow::Result<Json> {
                 seed: 1000 + rep as u64,
                 wire: args.wire,
                 stream_exchange: args.stream_exchange,
+                wire_keyframe_every: args.wire_keyframe_every,
                 ..Default::default()
             };
             let out = run_federated(&p, &cfg, policy, false);

@@ -178,29 +178,7 @@ impl Csr {
             }
         };
 
-        let threads = threads.max(1).min(self.rows.max(1));
-        if threads == 1 {
-            let rows = self.rows;
-            run(out.as_mut_slice(), 0, rows);
-            return;
-        }
-        let rows_per = self.rows.div_ceil(threads);
-        let mut bands: Vec<(&mut [f64], usize, usize)> = Vec::new();
-        let mut rest: &mut [f64] = out.as_mut_slice();
-        let mut r = 0;
-        while r < self.rows {
-            let take = rows_per.min(self.rows - r);
-            let (band, tail) = rest.split_at_mut(take * nh);
-            bands.push((band, r, r + take));
-            rest = tail;
-            r += take;
-        }
-        crossbeam_utils::thread::scope(|s| {
-            for (band, r0, r1) in bands {
-                s.spawn(move |_| run(band, r0, r1));
-            }
-        })
-        .expect("csr matmul worker panicked");
+        super::dense::band_rows(out.as_mut_slice(), self.rows, nh, threads, run);
     }
 }
 

@@ -132,55 +132,22 @@ impl Mat {
     }
 
     /// `out = self · x`, blocked over (MC, KC) tiles; `threads > 1` splits
-    /// the row dimension across scoped threads. `out` must be pre-shaped —
-    /// the hot loop never allocates.
+    /// the row dimension into disjoint bands dispatched onto the
+    /// persistent worker pool. `out` must be pre-shaped — the hot loop
+    /// never allocates.
     pub fn matmul_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
         assert_eq!(self.cols, x.rows, "inner dims");
         assert_eq!(out.rows, self.rows, "out rows");
         assert_eq!(out.cols, x.cols, "out cols");
         out.data.fill(0.0);
 
-        let threads = threads.max(1).min(self.rows.max(1));
-        if threads == 1 {
-            matmul_rows(
-                &self.data,
-                self.cols,
-                &x.data,
-                x.cols,
-                &mut out.data,
-                0,
-                self.rows,
-            );
-            return;
-        }
-
-        let rows_per = self.rows.div_ceil(threads);
         let n = self.cols;
         let nh = x.cols;
         let a = &self.data;
         let xs = &x.data;
-        // Split the output into disjoint row bands; each thread owns one.
-        let mut bands: Vec<&mut [f64]> = Vec::with_capacity(threads);
-        let mut rest: &mut [f64] = &mut out.data;
-        let mut starts = Vec::with_capacity(threads);
-        let mut r = 0;
-        while r < self.rows {
-            let take = rows_per.min(self.rows - r);
-            let (band, tail) = rest.split_at_mut(take * nh);
-            bands.push(band);
-            starts.push(r);
-            rest = tail;
-            r += take;
-        }
-        crossbeam_utils::thread::scope(|s| {
-            for (band, &r0) in bands.into_iter().zip(&starts) {
-                let rows_here = band.len() / nh;
-                s.spawn(move |_| {
-                    matmul_rows(a, n, xs, nh, band, r0, r0 + rows_here);
-                });
-            }
-        })
-        .expect("matmul worker panicked");
+        band_rows(&mut out.data, self.rows, nh, threads, |band, r0, r1| {
+            matmul_rows(a, n, xs, nh, band, r0, r1);
+        });
     }
 
     /// Convenience allocating product.
@@ -198,45 +165,20 @@ impl Mat {
     /// `−∞` entries (hard-sparsified kernel blocks) contribute zero mass.
     ///
     /// Threading mirrors [`Mat::matmul_into`]: the row dimension is split
-    /// into disjoint bands, one scoped thread each; `out` must be
-    /// pre-shaped and the per-row scratch is O(N).
+    /// into disjoint bands dispatched onto the persistent worker pool;
+    /// `out` must be pre-shaped and the per-row scratch is O(N).
     pub fn logsumexp_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
         assert_eq!(self.cols, x.rows, "inner dims");
         assert_eq!(out.rows, self.rows, "out rows");
         assert_eq!(out.cols, x.cols, "out cols");
 
-        let threads = threads.max(1).min(self.rows.max(1));
-        if threads == 1 {
-            logsumexp_rows(&self.data, self.cols, &x.data, x.cols, &mut out.data, 0, self.rows);
-            return;
-        }
-
-        let rows_per = self.rows.div_ceil(threads);
         let n = self.cols;
         let nh = x.cols;
         let a = &self.data;
         let xs = &x.data;
-        let mut bands: Vec<&mut [f64]> = Vec::with_capacity(threads);
-        let mut rest: &mut [f64] = &mut out.data;
-        let mut starts = Vec::with_capacity(threads);
-        let mut r = 0;
-        while r < self.rows {
-            let take = rows_per.min(self.rows - r);
-            let (band, tail) = rest.split_at_mut(take * nh);
-            bands.push(band);
-            starts.push(r);
-            rest = tail;
-            r += take;
-        }
-        crossbeam_utils::thread::scope(|s| {
-            for (band, &r0) in bands.into_iter().zip(&starts) {
-                let rows_here = band.len() / nh;
-                s.spawn(move |_| {
-                    logsumexp_rows(a, n, xs, nh, band, r0, r0 + rows_here);
-                });
-            }
-        })
-        .expect("logsumexp worker panicked");
+        band_rows(&mut out.data, self.rows, nh, threads, |band, r0, r1| {
+            logsumexp_rows(a, n, xs, nh, band, r0, r1);
+        });
     }
 
     /// Convenience allocating log-domain product.
@@ -347,9 +289,19 @@ pub(crate) fn lse_merge(mx: &mut f64, sum: &mut f64, v: f64) {
     }
 }
 
-/// Split one `rows×nh` flat output across `threads` scoped workers, one
-/// disjoint row band each (the shared threading shape of every fold
-/// kernel).
+/// Band base pointer smuggled into the pool closure. Safety: the
+/// closure only derives `&mut` bands for the disjoint `[r0, r1)` row
+/// ranges [`crate::runtime::Pool::run_bands`] hands out, so no two
+/// executors ever alias.
+struct BandPtr(*mut f64);
+unsafe impl Send for BandPtr {}
+unsafe impl Sync for BandPtr {}
+
+/// Split one `rows×nh` flat output into `threads` disjoint row bands
+/// executed on the persistent worker pool (the shared threading shape
+/// of every batch and fold kernel). `threads` is the band count — the
+/// same `div_ceil` decomposition the old scoped-spawn sites used, so
+/// results stay bit-identical at every thread count.
 pub(crate) fn band_rows(
     out: &mut [f64],
     rows: usize,
@@ -362,24 +314,15 @@ pub(crate) fn band_rows(
         run(out, 0, rows);
         return;
     }
-    let rows_per = rows.div_ceil(threads);
-    let mut bands: Vec<(&mut [f64], usize, usize)> = Vec::new();
-    let mut rest: &mut [f64] = out;
-    let mut r = 0;
-    while r < rows {
-        let take = rows_per.min(rows - r);
-        let (band, tail) = rest.split_at_mut(take * nh);
-        bands.push((band, r, r + take));
-        rest = tail;
-        r += take;
-    }
-    crossbeam_utils::thread::scope(|s| {
-        for (band, r0, r1) in bands {
-            let run = &run;
-            s.spawn(move |_| run(band, r0, r1));
-        }
-    })
-    .expect("fold worker panicked");
+    assert!(out.len() >= rows * nh, "band shape");
+    let base = BandPtr(out.as_mut_ptr());
+    let pool = crate::runtime::Pool::global().with_share(threads);
+    pool.run_bands(rows, |_band, r0, r1| {
+        // Safety: disjoint row ranges (see `BandPtr`), in bounds by the
+        // shape assert above.
+        let band = unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * nh), (r1 - r0) * nh) };
+        run(band, r0, r1);
+    });
 }
 
 /// [`band_rows`] for fold kernels with two row-aligned accumulators
@@ -397,26 +340,21 @@ pub(crate) fn band_rows2(
         run(a, b, 0, rows);
         return;
     }
-    let rows_per = rows.div_ceil(threads);
-    let mut bands: Vec<(&mut [f64], &mut [f64], usize, usize)> = Vec::new();
-    let (mut rest_a, mut rest_b): (&mut [f64], &mut [f64]) = (a, b);
-    let mut r = 0;
-    while r < rows {
-        let take = rows_per.min(rows - r);
-        let (band_a, tail_a) = rest_a.split_at_mut(take * nh);
-        let (band_b, tail_b) = rest_b.split_at_mut(take * nh);
-        bands.push((band_a, band_b, r, r + take));
-        rest_a = tail_a;
-        rest_b = tail_b;
-        r += take;
-    }
-    crossbeam_utils::thread::scope(|s| {
-        for (band_a, band_b, r0, r1) in bands {
-            let run = &run;
-            s.spawn(move |_| run(band_a, band_b, r0, r1));
-        }
-    })
-    .expect("fold worker panicked");
+    assert!(a.len() >= rows * nh && b.len() >= rows * nh, "band shape");
+    let base_a = BandPtr(a.as_mut_ptr());
+    let base_b = BandPtr(b.as_mut_ptr());
+    let pool = crate::runtime::Pool::global().with_share(threads);
+    pool.run_bands(rows, |_band, r0, r1| {
+        // Safety: disjoint row ranges (see `BandPtr`), in bounds by the
+        // shape assert above.
+        let (band_a, band_b) = unsafe {
+            (
+                std::slice::from_raw_parts_mut(base_a.0.add(r0 * nh), (r1 - r0) * nh),
+                std::slice::from_raw_parts_mut(base_b.0.add(r0 * nh), (r1 - r0) * nh),
+            )
+        };
+        run(band_a, band_b, r0, r1);
+    });
 }
 
 /// Compute rows `[r0, r1)` of `A·x` into `out` (which holds those rows

@@ -102,8 +102,8 @@ impl LogCsr {
     /// Sparse log-domain product: `out[i,h] = log Σ_k exp(vals[i,k] +
     /// x[k,h])` over the stored entries only. Mirrors
     /// [`Mat::logsumexp_into`] — max absorption, `nh == 1` LSE-GEMV fast
-    /// path, banded row split across `threads` scoped threads — but
-    /// touches `nnz` entries instead of `rows × cols`.
+    /// path, banded row split dispatched onto the persistent worker
+    /// pool — but touches `nnz` entries instead of `rows × cols`.
     pub fn logsumexp_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
         assert_eq!(self.cols, x.rows(), "inner dims");
         assert_eq!(out.rows(), self.rows, "out rows");
@@ -168,29 +168,7 @@ impl LogCsr {
             }
         };
 
-        let threads = threads.max(1).min(self.rows.max(1));
-        if threads == 1 {
-            let rows = self.rows;
-            run(out.as_mut_slice(), 0, rows);
-            return;
-        }
-        let rows_per = self.rows.div_ceil(threads);
-        let mut bands: Vec<(&mut [f64], usize, usize)> = Vec::new();
-        let mut rest: &mut [f64] = out.as_mut_slice();
-        let mut r = 0;
-        while r < self.rows {
-            let take = rows_per.min(self.rows - r);
-            let (band, tail) = rest.split_at_mut(take * nh);
-            bands.push((band, r, r + take));
-            rest = tail;
-            r += take;
-        }
-        crossbeam_utils::thread::scope(|s| {
-            for (band, r0, r1) in bands {
-                s.spawn(move |_| run(band, r0, r1));
-            }
-        })
-        .expect("log-csr logsumexp worker panicked");
+        super::dense::band_rows(out.as_mut_slice(), self.rows, nh, threads, run);
     }
 
     /// Convenience allocating sparse log-domain product.

@@ -57,7 +57,9 @@ fn print_usage() {
     }
     println!(
         "\nglobal env: FEDSINK_SCALE=quick|default|paper, FEDSINK_ARTIFACTS=<dir>, \
-         FEDSINK_DOMAIN=linear|log|auto, FEDSINK_CONFIG=<file>"
+         FEDSINK_DOMAIN=linear|log|auto, FEDSINK_CONFIG=<file>, \
+         FEDSINK_THREADS=<worker-pool size>, \
+         FEDSINK_PAR_MIN_WORK=<per-band work floor before kernels fan out>"
     );
 }
 
@@ -97,6 +99,32 @@ fn common_spec(spec: ArgSpec) -> ArgSpec {
         .opt("net", "PROFILE", "lan", "zero|lan|wan latency profile")
         .opt_req("out", "PATH", "write the JSON result document here")
         .opt("seed", "U64", "42", "experiment seed")
+        .opt(
+            "threads",
+            "N",
+            "env",
+            "worker-pool size: resident compute threads shared by every node \
+             (default: FEDSINK_THREADS or all cores)",
+        )
+}
+
+/// Resolve `--threads` and size the persistent worker pool before any
+/// solve dispatches kernels (the pool is process-global; first sizing
+/// wins). Returns the effective count.
+fn threads_of(p: &Parsed) -> anyhow::Result<usize> {
+    match p.get("threads") {
+        Some("env") | None => {}
+        Some(s) => {
+            let n: usize = s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --threads (expected a positive integer)"))?;
+            anyhow::ensure!(n >= 1, "--threads must be >= 1");
+            fedsink::config::init_compute_threads(n);
+        }
+    }
+    let n = fedsink::config::compute_threads_from_settings();
+    fedsink::runtime::Pool::init_global(n);
+    Ok(n)
 }
 
 fn scale_of(p: &Parsed) -> Scale {
@@ -133,6 +161,13 @@ fn wire_spec(spec: ArgSpec) -> ArgSpec {
         "stream-exchange",
         "fold peer scaling slices into the block product as their frames \
          arrive (sync protocols) instead of waiting out the gather barrier",
+    )
+    .opt(
+        "wire-keyframe-every",
+        "K",
+        "0",
+        "force a full DeltaF32 keyframe every K encoded rounds per stream, \
+         bounding reconstruction drift (0 = key only on stream (re)priming)",
     )
 }
 
@@ -244,6 +279,7 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     );
     let spec = wire_spec(spec);
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
+    let threads = threads_of(&p)?;
     let variant = Variant::parse(p.get("variant").unwrap())
         .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
     let domain = domain_of(&p)?;
@@ -274,6 +310,8 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         seed: p.get_u64("seed")?,
         wire: wire_of(&p)?,
         stream_exchange: p.has("stream-exchange"),
+        wire_keyframe_every: p.get_usize("wire-keyframe-every")?,
+        compute_threads: threads,
         ..Default::default()
     };
     if cfg.stab.fleet_absorb {
@@ -384,6 +422,7 @@ fn cmd_epsilon(args: &[String]) -> anyhow::Result<()> {
             ),
     );
     let p = spec.parse("epsilon-study", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     // This study always runs on the native backend, so no backend/domain
     // compatibility check is needed here.
     let domain = domain_of(&p)?;
@@ -405,6 +444,7 @@ fn cmd_epsilon(args: &[String]) -> anyhow::Result<()> {
 fn cmd_coherence(args: &[String]) -> anyhow::Result<()> {
     let spec = common_spec(ArgSpec::new().opt("n", "SIZE", "256", "problem size"));
     let p = spec.parse("coherence", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let a = experiments::coherence::CoherenceArgs {
         n: p.get_usize("n")?,
         eps: 0.05,
@@ -424,6 +464,7 @@ fn cmd_timing(args: &[String]) -> anyhow::Result<()> {
             .opt("nodes", "LIST", "", "node counts (empty = scale default)"),
     ));
     let p = spec.parse("timing", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::timing::TimingArgs::at_scale(scale_of(&p));
     a.variant = Variant::parse(p.get("variant").unwrap())
         .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
@@ -432,6 +473,7 @@ fn cmd_timing(args: &[String]) -> anyhow::Result<()> {
     a.out = out_of(&p);
     a.wire = wire_of(&p)?;
     a.stream_exchange = p.has("stream-exchange");
+    a.wire_keyframe_every = p.get_usize("wire-keyframe-every")?;
     if p.get_usize("n")? > 0 {
         a.n = p.get_usize("n")?;
     }
@@ -450,6 +492,7 @@ fn cmd_vectorized(args: &[String]) -> anyhow::Result<()> {
         ArgSpec::new().switch("serial-compare", "also run the §IV-B3 serial-vs-vectorized probe"),
     );
     let p = spec.parse("vectorized", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::vectorized::VectorizedArgs::at_scale(scale_of(&p));
     a.backend = backend_of(&p)?;
     a.net = net_of(&p)?;
@@ -469,6 +512,7 @@ fn cmd_async_study(args: &[String]) -> anyhow::Result<()> {
             .opt("alpha", "A", "1.0", "damping step size"),
     );
     let p = spec.parse("async-study", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::async_study::AsyncStudyArgs::at_scale(scale_of(&p));
     a.backend = backend_of(&p)?;
     a.net = net_of(&p)?;
@@ -487,6 +531,7 @@ fn cmd_stepsize(args: &[String]) -> anyhow::Result<()> {
         ArgSpec::new().opt("alphas", "LIST", "0.1,0.25,0.5", "damping values to sweep"),
     );
     let p = spec.parse("stepsize", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::stepsize::StepsizeArgs::at_scale(scale_of(&p));
     a.alphas = p.get_list("alphas", |s| s.parse().ok())?;
     a.backend = backend_of(&p)?;
@@ -502,6 +547,7 @@ fn cmd_robustness(args: &[String]) -> anyhow::Result<()> {
             .opt("runs", "R", "0", "runs per grid cell (0 = scale default)"),
     );
     let p = spec.parse("robustness", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::robustness::RobustnessArgs::at_scale(scale_of(&p));
     a.backend = backend_of(&p)?;
     a.out = out_of(&p);
@@ -522,6 +568,7 @@ fn cmd_delays(args: &[String]) -> anyhow::Result<()> {
             .opt("iters", "T", "500", "fixed iterations per simulation"),
     );
     let p = spec.parse("delays", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::delays::DelaysArgs::at_scale(scale_of(&p));
     a.backend = backend_of(&p)?;
     a.net = net_of(&p)?;
@@ -548,6 +595,7 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
             ),
     ));
     let p = spec.parse("perf-grid", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::perf_grid::PerfGridArgs::at_scale(scale_of(&p));
     a.backend = backend_of(&p)?;
     a.net = net_of(&p)?;
@@ -556,6 +604,7 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
     a.fleet_compare = p.has("fleet-compare");
     a.wire = wire_of(&p)?;
     a.stream_exchange = p.has("stream-exchange");
+    a.wire_keyframe_every = p.get_usize("wire-keyframe-every")?;
     for (flag, field) in [("sizes", 0usize), ("hists", 1), ("nodes", 2)] {
         if p.get(flag).map(|s| !s.is_empty()).unwrap_or(false) {
             let v: Vec<usize> = p.get_list(flag, |s| s.parse().ok())?;
@@ -581,6 +630,7 @@ fn cmd_local_iters(args: &[String]) -> anyhow::Result<()> {
         ArgSpec::new().opt("ws", "LIST", "1,2,4,8", "local-iteration counts to compare"),
     );
     let p = spec.parse("local-iters", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let mut a = experiments::local_iters::LocalItersArgs::at_scale(scale_of(&p));
     a.ws = p.get_list("ws", |s| s.parse().ok())?;
     a.backend = backend_of(&p)?;
@@ -598,6 +648,7 @@ fn cmd_finance(args: &[String]) -> anyhow::Result<()> {
             .opt("clients", "C", "4", "clients for the synthetic run"),
     );
     let p = spec.parse("finance", args).map_err(anyhow::Error::new)?;
+    threads_of(&p)?;
     let a = experiments::finance_exp::FinanceArgs {
         paper_example: p.has("paper-example"),
         scenarios: p.get_usize("scenarios")?,

@@ -74,6 +74,11 @@ pub struct Message {
     pub payload: Vec<f64>,
     /// Sender's local iteration when it sent (staleness accounting).
     pub sent_iter: u64,
+    /// Receiver-side decode cost of this frame (seconds), stamped at
+    /// enqueue from the latency model's per-byte decode term — the
+    /// receiving endpoint accumulates it on receive and the coordinator
+    /// prices it into its **comp** bucket.
+    decode_secs: f64,
     /// Wall-clock deadline before which the receiver may not observe it.
     deliver_at: Instant,
 }
@@ -82,6 +87,10 @@ pub struct Message {
 struct Inbox {
     queue: Mutex<Vec<Message>>,
     signal: Condvar,
+    /// Monotone arrival counter, bumped under the queue lock on every
+    /// enqueue — the "did anything land since I looked" signal behind
+    /// [`Endpoint::wait_traffic`].
+    seq: AtomicU64,
 }
 
 /// Per-[`TagKind`] traffic counters plus totals, read off the fabric's
@@ -112,6 +121,10 @@ pub struct SimNet {
     latency: LatencyModel,
     seed: u64,
     wire: WireFormat,
+    /// Forced-keyframe cadence for DeltaF32 streams
+    /// (`--wire-keyframe-every`; 0 = off). Handed to every
+    /// [`StreamCodec`] the endpoints create.
+    keyframe_every: usize,
     /// Per-kind traffic counters. Atomics keep the accounting off the
     /// send hot path's locks (the queue mutex is per-inbox; these are
     /// global and would otherwise serialize every sender).
@@ -132,9 +145,17 @@ impl SimNet {
             latency,
             seed,
             wire,
+            keyframe_every: 0,
             kind_bytes: Default::default(),
             kind_msgs: Default::default(),
         }
+    }
+
+    /// Builder: force a DeltaF32 keyframe every `k` frames on every
+    /// coded stream (0 = off, the default).
+    pub fn with_keyframe_every(mut self, k: usize) -> Self {
+        self.keyframe_every = k;
+        self
     }
 
     pub fn nodes(&self) -> usize {
@@ -184,6 +205,7 @@ impl SimNet {
             id,
             rng: Mutex::new(Rng::seed_from(child_seed(self.seed, id as u64))),
             codecs: Mutex::new(HashMap::new()),
+            decode_nanos: AtomicU64::new(0),
         }
     }
 }
@@ -198,6 +220,10 @@ pub struct Endpoint {
     /// [`Endpoint::send_coded`] consults it; exact control sends bypass
     /// the map entirely.
     codecs: Mutex<HashMap<(usize, TagKind, u64), StreamCodec>>,
+    /// Receiver-side decode seconds accumulated (as nanos) across every
+    /// message this endpoint has received since the last
+    /// [`Endpoint::take_decode_secs`] drain.
+    decode_nanos: AtomicU64,
 }
 
 impl Endpoint {
@@ -241,7 +267,9 @@ impl Endpoint {
             let mut codecs = self.codecs.lock().unwrap();
             let codec = codecs
                 .entry((dst, kind, stream))
-                .or_insert_with(|| StreamCodec::new(self.net.wire));
+                .or_insert_with(|| {
+                    StreamCodec::with_keyframe_every(self.net.wire, self.net.keyframe_every)
+                });
             let enc = codec.encode(payload);
             (enc.bytes, enc.payload)
         };
@@ -270,11 +298,80 @@ impl Endpoint {
             tag,
             payload,
             sent_iter,
+            decode_secs: self.net.latency.decode_secs(bytes),
             deliver_at: Instant::now() + Duration::from_secs_f64(delay),
         };
         let inbox = &self.net.inboxes[dst];
-        inbox.queue.lock().unwrap().push(msg);
+        {
+            let mut queue = inbox.queue.lock().unwrap();
+            queue.push(msg);
+            // Bumped under the lock so a wait_traffic holding it cannot
+            // observe the push without the bump.
+            inbox.seq.fetch_add(1, Ordering::Release);
+        }
         inbox.signal.notify_all();
+    }
+
+    /// Record a received frame's decode cost; drained by
+    /// [`Endpoint::take_decode_secs`].
+    fn account_decode(&self, m: &Message) {
+        if m.decode_secs > 0.0 {
+            self.decode_nanos
+                .fetch_add((m.decode_secs * 1e9) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Drain the decode seconds accumulated across every message
+    /// received since the last call. Coordinators fold this into their
+    /// **comp** bucket once per iteration — dequantizing frames is CPU
+    /// work the receiver pays, not network time.
+    pub fn take_decode_secs(&self) -> f64 {
+        self.decode_nanos.swap(0, Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Current inbox arrival count — pair with
+    /// [`Endpoint::wait_traffic`]: read it *before* draining, drain,
+    /// and if nothing useful arrived, wait for the count to move.
+    pub fn inbox_seq(&self) -> u64 {
+        self.net.inboxes[self.id].seq.load(Ordering::Acquire)
+    }
+
+    /// Park until inbox traffic moves past `seen`: returns the fresh
+    /// arrival count as soon as any message is enqueued after the
+    /// caller read `seen`, when a message queued but *undeliverable at
+    /// call entry* passes its delivery deadline, or after `cap`. The
+    /// async coordinators' staleness loops block here instead of
+    /// polling with fixed busy-sleeps. Deadlines are filtered at entry
+    /// so lingering deliverable-but-unmatched traffic (e.g. fleet
+    /// probes awaiting their drain point) cannot turn the wait into a
+    /// spin.
+    pub fn wait_traffic(&self, seen: u64, cap: Duration) -> u64 {
+        let inbox = &self.net.inboxes[self.id];
+        let entry = Instant::now();
+        let mut queue = inbox.queue.lock().unwrap();
+        let next_deadline = queue
+            .iter()
+            .filter(|m| m.deliver_at > entry)
+            .map(|m| m.deliver_at)
+            .min();
+        let until = match next_deadline {
+            Some(d) => d.min(entry + cap),
+            None => entry + cap,
+        };
+        loop {
+            // Read under the lock: an enqueue bumps seq while holding
+            // it, so a bump cannot slip between this check and the wait.
+            let seq = inbox.seq.load(Ordering::Relaxed);
+            if seq != seen {
+                return seq;
+            }
+            let now = Instant::now();
+            if now >= until {
+                return seq;
+            }
+            let (q, _timeout) = inbox.signal.wait_timeout(queue, until - now).unwrap();
+            queue = q;
+        }
     }
 
     /// Blocking receive of the first matching message (MPI `Recv`):
@@ -319,7 +416,9 @@ impl Endpoint {
                 }
             }
             if let Some(i) = take_idx {
-                return queue.swap_remove(i);
+                let m = queue.swap_remove(i);
+                self.account_decode(&m);
+                return m;
             }
             // Sleep until the earliest matching deadline, or until a new
             // message arrives.
@@ -347,6 +446,9 @@ impl Endpoint {
             let m = &queue[i];
             if m.src == src && m.kind == kind && m.tag == tag && m.deliver_at <= now {
                 let m = queue.swap_remove(i);
+                // Superseded frames were still decoded on arrival —
+                // latest-wins drops their *content*, not their cost.
+                self.account_decode(&m);
                 best = match best {
                     Some(b) if b.sent_iter >= m.sent_iter => Some(b),
                     _ => Some(m),

@@ -21,6 +21,12 @@ pub struct LatencyModel {
     pub jitter_sigma: f64,
     pub spike_prob: f64,
     pub spike_mult: f64,
+    /// Receiver-side decode cost per encoded byte: dequantizing a coded
+    /// frame back into f64 lanes is *CPU* work the receiver pays at
+    /// receive time, so the fabric prices it into the **comp** bucket
+    /// (via [`crate::net::Endpoint::take_decode_secs`]) — without it the
+    /// wire codec's byte savings would look free on the comm/comp split.
+    pub decode_per_byte_secs: f64,
 }
 
 impl LatencyModel {
@@ -32,6 +38,7 @@ impl LatencyModel {
             jitter_sigma: 0.0,
             spike_prob: 0.0,
             spike_mult: 1.0,
+            decode_per_byte_secs: 0.0,
         }
     }
 
@@ -46,6 +53,8 @@ impl LatencyModel {
             jitter_sigma: 0.25,
             spike_prob: 0.01,
             spike_mult: 8.0,
+            // ~4 GB/s single-core dequantization throughput.
+            decode_per_byte_secs: 0.25e-9,
         }
     }
 
@@ -58,6 +67,9 @@ impl LatencyModel {
             jitter_sigma: 0.5,
             spike_prob: 0.02,
             spike_mult: 10.0,
+            // Same receiver CPUs as the LAN profile — decode cost is
+            // compute, not network.
+            decode_per_byte_secs: 0.25e-9,
         }
     }
 
@@ -76,6 +88,12 @@ impl LatencyModel {
     /// compression factor is visible without jitter noise.
     pub fn beta_secs(&self, bytes: u64) -> f64 {
         bytes as f64 * self.per_byte_secs
+    }
+
+    /// Deterministic receiver-side decode seconds for one encoded frame
+    /// of `bytes` — the CPU cost of dequantizing it back to f64 lanes.
+    pub fn decode_secs(&self, bytes: usize) -> f64 {
+        bytes as f64 * self.decode_per_byte_secs
     }
 
     /// Sample the delivery delay for a `bytes`-sized message.
@@ -111,9 +129,24 @@ mod tests {
     }
 
     #[test]
+    fn decode_cost_prices_encoded_bytes() {
+        assert_eq!(LatencyModel::zero().decode_secs(1 << 20), 0.0);
+        let lan = LatencyModel::lan();
+        assert!(lan.decode_secs(1 << 20) > 0.0);
+        assert!((lan.decode_secs(4096) - 4096.0 * lan.decode_per_byte_secs).abs() < 1e-18);
+    }
+
+    #[test]
     fn jitter_median_is_about_one() {
         let mut rng = Rng::seed_from(3);
-        let m = LatencyModel { base_secs: 1.0, per_byte_secs: 0.0, jitter_sigma: 0.25, spike_prob: 0.0, spike_mult: 1.0 };
+        let m = LatencyModel {
+            base_secs: 1.0,
+            per_byte_secs: 0.0,
+            jitter_sigma: 0.25,
+            spike_prob: 0.0,
+            spike_mult: 1.0,
+            decode_per_byte_secs: 0.0,
+        };
         let mut ds: Vec<f64> = (0..4001).map(|_| m.delay_secs(0, &mut rng)).collect();
         ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let median = ds[2000];

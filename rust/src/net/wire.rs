@@ -111,6 +111,14 @@ pub struct Encoded {
 #[derive(Debug)]
 pub struct StreamCodec {
     format: WireFormat,
+    /// Forced-keyframe cadence for DeltaF32 (`--wire-keyframe-every`):
+    /// every `K`-th frame is sent as an absolute keyframe, bounding how
+    /// long a receiver joining (or recovering) mid-stream must wait for
+    /// a self-contained frame. 0 disables the cadence (keyframes only
+    /// on priming, length changes and non-finite fallbacks).
+    keyframe_every: usize,
+    /// Frames encoded so far on this stream (drives the cadence).
+    frames: u64,
     /// Receiver's current reconstruction (DeltaF32 reference; empty
     /// until the keyframe primes the stream or after a length change).
     reference: Vec<f64>,
@@ -121,12 +129,26 @@ pub struct StreamCodec {
 
 impl StreamCodec {
     pub fn new(format: WireFormat) -> Self {
-        Self { format, reference: Vec::new(), residual: Vec::new() }
+        Self::with_keyframe_every(format, 0)
+    }
+
+    /// Codec with a forced-keyframe cadence (DeltaF32 only; the other
+    /// formats have no inter-frame state to re-key).
+    pub fn with_keyframe_every(format: WireFormat, keyframe_every: usize) -> Self {
+        Self {
+            format,
+            keyframe_every,
+            frames: 0,
+            reference: Vec::new(),
+            residual: Vec::new(),
+        }
     }
 
     /// Encode one frame, advancing the stream state. Takes the values by
     /// value so the exact paths deliver them without a copy.
     pub fn encode(&mut self, values: Vec<f64>) -> Encoded {
+        let idx = self.frames;
+        self.frames += 1;
         match self.format {
             WireFormat::F64 => {
                 Encoded { bytes: f64_frame_bytes(values.len()), payload: values }
@@ -139,7 +161,14 @@ impl StreamCodec {
                 Encoded { bytes: f64_frame_bytes(values.len()), payload: values }
             }
             WireFormat::F32 => self.encode_f32(values),
-            WireFormat::DeltaF32 => self.encode_delta(values),
+            WireFormat::DeltaF32 => {
+                if self.keyframe_every > 0 && idx > 0 && idx % self.keyframe_every as u64 == 0 {
+                    // Cadence hit: drop the reference so `encode_delta`
+                    // takes its existing keyframe (re-prime) path.
+                    self.reference.clear();
+                }
+                self.encode_delta(values)
+            }
         }
     }
 
@@ -348,6 +377,33 @@ mod tests {
             // No growth: round-110+ errors comparable to round-0..10.
             assert!(late <= early * 4.0 + 1e-12, "{}: {late} vs {early}", fmt.name());
         }
+    }
+
+    #[test]
+    fn forced_keyframes_keep_reconstruction_bounded() {
+        // `--wire-keyframe-every K`: frames K, 2K, … of a DeltaF32
+        // stream are absolute keyframes. A keyframe round (and the
+        // delta frame right after it, which flushes the keyframe's
+        // f32-sized residual) is bounded by the slice-range f32 step;
+        // every other round must hold the much tighter delta-sized
+        // bound — and neither bound may grow across cadence cycles.
+        let mut rng = Rng::seed_from(41);
+        let k = 8usize;
+        let mut codec = StreamCodec::with_keyframe_every(WireFormat::DeltaF32, k);
+        let mut v: Vec<f64> = (0..96).map(|_| rng.uniform_range(-20.0, 20.0)).collect();
+        let key_bound = 40.0 * 2.0f64.powi(-24) * 8.0;
+        let delta_bound = 1e-2 * 2.0f64.powi(-24) * 8.0;
+        let mut worst = 0.0f64;
+        for round in 0..120usize {
+            for x in v.iter_mut() {
+                *x += rng.uniform_range(-1e-3, 1e-3);
+            }
+            let err = max_err(&codec.encode(v.clone()).payload, &v);
+            let bound = if round % k <= 1 { key_bound } else { delta_bound };
+            assert!(err <= bound, "round {round}: err {err} > {bound}");
+            worst = worst.max(err);
+        }
+        assert!(worst <= key_bound, "error grew across forced keyframes: {worst}");
     }
 
     #[test]

@@ -18,10 +18,12 @@ mod manifest;
 mod native;
 #[cfg(feature = "xla-backend")]
 mod pjrt;
+pub mod pool;
 
 pub use backend::{BlockOp, ComputeBackend, FleetProbe, StabStats, Target};
 pub use manifest::{Manifest, ManifestEntry};
 pub use native::NativeBackend;
+pub use pool::Pool;
 #[cfg(feature = "xla-backend")]
 pub use pjrt::{PjrtRuntime, XlaBackend};
 

@@ -9,6 +9,7 @@
 //! the small-ε path the AOT artifact grid does not cover.
 
 use super::backend::{BlockOp, ComputeBackend, FleetProbe, StabStats, Target};
+use super::pool::Pool;
 use crate::linalg::{AbsorbedLogCsr, Csr, LogCsr, Mat, Stabilization};
 use std::sync::Arc;
 
@@ -70,25 +71,13 @@ fn finish_lse_accum(mx: &[f64], sum: &[f64], q: &mut Mat) {
 /// (s=0.9), CSR wins at 0.25 (s=1.0) — cutoff set between them.
 const CSR_DENSITY_CUTOFF: f64 = 0.27;
 
-/// Threaded absorbed-GEMM autotuning (ROADMAP item): the banded SpMM
-/// only amortizes its scoped-thread spawn cost above roughly this many
-/// stored-entry FMAs (`nnz·N`); below it the serial lane wins at every
-/// shape in bench_kernels' "absorbed GEMM thread crossover" section
-/// (n×N grid at s=0.9, threads ∈ {1, 2, 4} — re-measure there before
-/// moving this). The hybrid dispatch picks threads per shape from it,
-/// the way the CSR path picks its representation from the measured
-/// [`CSR_DENSITY_CUTOFF`].
-const ABSORBED_GEMM_PAR_MIN_WORK: usize = 1 << 18;
-
-/// Per-shape thread count for the absorbed batched GEMM: serial below
-/// the measured crossover, the configured count above it.
-fn absorbed_gemm_threads(nnz: usize, nh: usize, configured: usize) -> usize {
-    if nnz.saturating_mul(nh.max(1)) < ABSORBED_GEMM_PAR_MIN_WORK {
-        1
-    } else {
-        configured
-    }
-}
+// Threaded absorbed-GEMM autotuning: the banded SpMM only amortizes
+// its dispatch overhead above the pool-calibrated crossover in
+// stored-entry FMAs (`nnz·N`) — see [`Pool::threads_for_work`], which
+// measures the hand-off cost once at pool construction and can be
+// pinned via `FEDSINK_PAR_MIN_WORK`. The hybrid dispatch picks threads
+// per shape from it, the way the CSR path picks its representation
+// from the measured [`CSR_DENSITY_CUTOFF`].
 
 /// Drift-capacity ceiling for the shared-support hybrid: the
 /// per-histogram corrections `exp(x − ḡ)` and the row sums they feed
@@ -142,12 +131,16 @@ fn reference_candidate(x: &Mat, r0: usize, rows: usize, gref: &mut [f64]) -> f64
 }
 
 pub struct NativeBackend {
-    threads: usize,
+    /// Handle onto the process-wide persistent worker pool, scoped to
+    /// this backend's share of the cores (the per-node share under a
+    /// federated simulation). Every op clones it — kernels dispatch
+    /// bands onto resident workers instead of spawning per call.
+    pool: Pool,
 }
 
 impl NativeBackend {
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        Self { pool: Pool::global().with_share(threads.max(1)) }
     }
 }
 
@@ -189,7 +182,7 @@ impl ComputeBackend for NativeBackend {
             q,
             acc_mx: Vec::new(),
             acc_sum: Vec::new(),
-            threads: self.threads,
+            pool: self.pool.clone(),
         }))
     }
 
@@ -219,7 +212,7 @@ impl ComputeBackend for NativeBackend {
             q,
             acc_mx: Vec::new(),
             acc_sum: Vec::new(),
-            threads: self.threads,
+            pool: self.pool.clone(),
         }))
     }
 
@@ -260,7 +253,7 @@ impl ComputeBackend for NativeBackend {
                 u0_log,
                 seed,
                 stab,
-                self.threads,
+                self.pool.clone(),
             )));
         }
         // Cheap non-allocating probe first; only build the CSR when the
@@ -300,7 +293,7 @@ impl ComputeBackend for NativeBackend {
             u: u0,
             q,
             acc: Mat::zeros(0, 0),
-            threads: self.threads,
+            pool: self.pool.clone(),
         }))
     }
 
@@ -321,14 +314,15 @@ struct NativeBlockOp {
     /// check between folds (its product writes `q`) cannot clobber a
     /// pending accumulation. Allocated lazily — only streamed runs pay.
     acc: Mat,
-    threads: usize,
+    pool: Pool,
 }
 
 impl NativeBlockOp {
     fn product(&mut self, x: &Mat) {
+        let threads = self.pool.share();
         match &self.csr {
-            Some(csr) => csr.matmul_into(x, &mut self.q, self.threads),
-            None => self.a.matmul_into(x, &mut self.q, self.threads),
+            Some(csr) => csr.matmul_into(x, &mut self.q, threads),
+            None => self.a.matmul_into(x, &mut self.q, threads),
         }
     }
 }
@@ -405,13 +399,11 @@ impl BlockOp for NativeBlockOp {
 
     fn accum_fold(&mut self, col0: usize, rows: usize, x_slice: &[f64]) -> bool {
         let nh = self.u.cols();
+        let threads = self.pool.share();
+        let acc = self.acc.as_mut_slice();
         match &self.csr {
-            Some(csr) => {
-                csr.matmul_fold(col0, rows, x_slice, nh, self.acc.as_mut_slice(), self.threads)
-            }
-            None => {
-                self.a.matmul_fold(col0, rows, x_slice, nh, self.acc.as_mut_slice(), self.threads)
-            }
+            Some(csr) => csr.matmul_fold(col0, rows, x_slice, nh, acc, threads),
+            None => self.a.matmul_fold(col0, rows, x_slice, nh, acc, threads),
         }
         true
     }
@@ -443,7 +435,7 @@ struct NativeSparseLogBlockOp {
     /// pending accumulation. Lazily allocated.
     acc_mx: Vec<f64>,
     acc_sum: Vec<f64>,
-    threads: usize,
+    pool: Pool,
 }
 
 impl NativeSparseLogBlockOp {
@@ -466,7 +458,7 @@ impl BlockOp for NativeSparseLogBlockOp {
     }
 
     fn update(&mut self, x_log: &Mat, alpha: f64) -> &Mat {
-        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
         damped_log_subtract_inplace(&self.log_t, self.t_stride, &self.q, alpha, &mut self.u);
         &self.u
     }
@@ -491,7 +483,7 @@ impl BlockOp for NativeSparseLogBlockOp {
             self.u.cols(),
             &mut self.acc_mx,
             &mut self.acc_sum,
-            self.threads,
+            self.pool.share(),
         );
         true
     }
@@ -508,12 +500,12 @@ impl BlockOp for NativeSparseLogBlockOp {
     }
 
     fn matvec(&mut self, x_log: &Mat) -> &Mat {
-        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
         &self.q
     }
 
     fn marginal(&mut self, x_log: &Mat, u_log: &Mat) -> Vec<f64> {
-        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
         let nh = self.q.cols();
         let mut err = vec![0.0; nh];
         for i in 0..self.q.rows() {
@@ -596,7 +588,7 @@ struct HybridLogBlockOp {
     acc_sum: Vec<f64>,
     accum_active: bool,
     acc_dense: bool,
-    threads: usize,
+    pool: Pool,
     stats: StabStats,
 }
 
@@ -610,7 +602,7 @@ impl HybridLogBlockOp {
         u0_log: Mat,
         seed: Option<Arc<AbsorbedLogCsr>>,
         stab: &Stabilization,
-        threads: usize,
+        pool: Pool,
     ) -> Self {
         let (m, n) = (a_log.rows(), a_log.cols());
         let nh = u0_log.cols();
@@ -665,7 +657,7 @@ impl HybridLogBlockOp {
             acc_sum: Vec::new(),
             accum_active: false,
             acc_dense: false,
-            threads,
+            pool,
             stats: StabStats { absorb_triggers: vec![0; nh], ..StabStats::default() },
         }
     }
@@ -685,7 +677,7 @@ impl HybridLogBlockOp {
             if count_absorb {
                 self.stats.absorbs += 1;
             }
-            self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+            self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
             return;
         }
         self.kernel.max_drift_into(x_log, &mut self.drift);
@@ -705,7 +697,7 @@ impl HybridLogBlockOp {
                         }
                     }
                 }
-                self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+                self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
                 return;
             }
             // New reference: the column-wise mean across histograms —
@@ -729,7 +721,7 @@ impl HybridLogBlockOp {
                         }
                     }
                 }
-                self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+                self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
                 return;
             }
             let k = Arc::make_mut(&mut self.kernel);
@@ -753,7 +745,7 @@ impl HybridLogBlockOp {
                 }
             }
         }
-        let threads = absorbed_gemm_threads(self.kernel.nnz(), nh, self.threads);
+        let threads = self.pool.threads_for_work(self.kernel.nnz().saturating_mul(nh.max(1)));
         self.kernel
             .log_matmul_into(x_log, &mut self.ex, &mut self.lin_q, &mut self.q, threads);
     }
@@ -833,7 +825,7 @@ impl BlockOp for HybridLogBlockOp {
                 nh,
                 &mut self.acc_mx,
                 &mut self.acc_sum,
-                self.threads,
+                self.pool.share(),
             );
             return true;
         }
@@ -841,7 +833,7 @@ impl BlockOp for HybridLogBlockOp {
             self.accum_active = false;
             return false;
         }
-        let threads = absorbed_gemm_threads(self.kernel.nnz(), nh, self.threads);
+        let threads = self.pool.threads_for_work(self.kernel.nnz().saturating_mul(nh.max(1)));
         let ex_slice = &mut self.ex.as_mut_slice()[col0 * nh..(col0 + rows) * nh];
         self.kernel
             .log_matmul_fold(col0, rows, x_slice, nh, ex_slice, &mut self.acc_lin, threads);
@@ -983,12 +975,12 @@ struct NativeLogBlockOp {
     /// marginal checks cannot clobber a pending accumulation. Lazy.
     acc_mx: Vec<f64>,
     acc_sum: Vec<f64>,
-    threads: usize,
+    pool: Pool,
 }
 
 impl NativeLogBlockOp {
     fn product(&mut self, x_log: &Mat) {
-        self.a_log.logsumexp_into(x_log, &mut self.q, self.threads);
+        self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
     }
 
     fn accum_finish(&mut self) {
@@ -1039,7 +1031,7 @@ impl BlockOp for NativeLogBlockOp {
             self.u.cols(),
             &mut self.acc_mx,
             &mut self.acc_sum,
-            self.threads,
+            self.pool.share(),
         );
         true
     }
@@ -1103,13 +1095,22 @@ mod tests {
 
     #[test]
     fn absorbed_gemm_autotune_crossover() {
-        // Below the measured crossover the dispatch stays serial no
-        // matter what was configured; above it the configured count is
-        // honored.
-        assert_eq!(absorbed_gemm_threads(1000, 8, 4), 1);
-        assert_eq!(absorbed_gemm_threads(ABSORBED_GEMM_PAR_MIN_WORK, 1, 4), 4);
-        assert_eq!(absorbed_gemm_threads(ABSORBED_GEMM_PAR_MIN_WORK / 8, 8, 4), 4);
-        assert_eq!(absorbed_gemm_threads(usize::MAX, 8, 4), 4, "saturating work product");
+        // Below the pool-calibrated crossover the dispatch stays serial
+        // no matter what share was configured; at or above it the
+        // backend's share is honored. The crossover itself is measured
+        // at pool construction (clamped to [2^12, 2^22]), so the test
+        // pins behavior relative to `par_min_work()` rather than to a
+        // fixed constant.
+        let pool = Pool::new(4);
+        let share = pool.with_share(4);
+        let xover = share.par_min_work();
+        assert!(xover >= 1, "calibration yields a usable crossover");
+        assert_eq!(share.threads_for_work(0), 1);
+        assert_eq!(share.threads_for_work(xover.saturating_sub(1)), 1);
+        assert_eq!(share.threads_for_work(xover), 4);
+        assert_eq!(share.threads_for_work(usize::MAX), 4, "saturating work product");
+        // A serial pool never goes parallel, whatever the work size.
+        assert_eq!(Pool::new(1).threads_for_work(usize::MAX), 1);
     }
 
     /// Run the streamed accumulation protocol over a scrambled column

@@ -1,0 +1,487 @@
+//! Persistent worker pool: resident threads executing banded closures.
+//!
+//! Every threaded kernel in the stack used to pay a fresh
+//! `crossbeam_utils::thread::scope` spawn on each call — fatal for the
+//! streamed-fold path, where each fold carries only `1/c` of a band's
+//! work and the spawn dominates. The pool keeps a fixed set of workers
+//! parked between dispatches (short bounded spin first, so back-to-back
+//! kernel calls never touch the scheduler) and hands them band tickets
+//! through an atomic counter, which makes a dispatch a few atomic ops
+//! instead of thread creation.
+//!
+//! Shape contract: [`Pool::run_bands`] splits `n_items` into at most
+//! `share` contiguous bands — the same `div_ceil` decomposition the old
+//! scoped-spawn call sites used — and every item is processed serially
+//! inside exactly one band, so results are bit-identical to the scoped
+//! code at every thread count (pinned by the linalg identity tests).
+//!
+//! Sizing: the process-wide pool behind [`Pool::global`] takes its size
+//! from `--threads` / `FEDSINK_THREADS` (default `available_parallelism`)
+//! via [`crate::config::compute_threads_from_settings`]. Under simulated
+//! federation each node holds a [`Pool::with_share`] handle, so `c`
+//! nodes split the resident workers instead of oversubscribing
+//! `c × available_parallelism` spawned threads.
+//!
+//! Crossover: construction measures the pool's own dispatch overhead
+//! against a serial FMA unit cost and derives the work-unit count
+//! (`nnz·N` currency) below which parallel dispatch loses to its own
+//! hand-off — replacing the old fixed `ABSORBED_GEMM_PAR_MIN_WORK`
+//! constant. Override with `FEDSINK_PAR_MIN_WORK=<units>`.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread::{self, JoinHandle, Thread};
+use std::time::{Duration, Instant};
+
+/// Spin rounds an idle worker (or a waiting submitter) burns before
+/// parking — keeps back-to-back kernel dispatches off the scheduler.
+const IDLE_SPIN_ROUNDS: u32 = 64;
+
+/// Backstop park timeout. The unpark-before-park token protocol already
+/// prevents lost wakeups; the timeout is pure insurance.
+const IDLE_PARK: Duration = Duration::from_millis(2);
+
+/// Clamp range for the calibrated crossover (work units ≈ one FMA each,
+/// the `nnz·N` currency the kernels dispatch on).
+const MIN_CROSSOVER: usize = 1 << 12;
+const MAX_CROSSOVER: usize = 1 << 22;
+
+/// One banded dispatch. Workers (and the submitter) claim band indices
+/// through `next`; the job is finished when `remaining` hits zero.
+struct Job {
+    /// Type-erased banded closure, lifetime-erased to `'static`: the
+    /// submitting thread blocks in [`PoolCore::run`] until `remaining`
+    /// reaches zero, and a worker only dereferences `f` while it holds
+    /// a valid ticket (`band < n_bands`) — every such ticket completes
+    /// before the submitter can return, so the pointee outlives every
+    /// dereference.
+    f: *const (dyn Fn(usize) + Sync),
+    n_bands: usize,
+    next: AtomicUsize,
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+    owner: Thread,
+}
+
+// Safety: `f` is only dereferenced under the blocking protocol described
+// on the field; every other field is an atomic or immutable.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// Erase the closure's borrow lifetime so it can sit in the shared job
+/// list. Safety: the caller must block until the job completes (see
+/// [`Job::f`]).
+unsafe fn erase<'a>(f: &'a (dyn Fn(usize) + Sync)) -> *const (dyn Fn(usize) + Sync) {
+    std::mem::transmute::<
+        *const (dyn Fn(usize) + Sync + 'a),
+        *const (dyn Fn(usize) + Sync + 'static),
+    >(f)
+}
+
+/// Claim and execute tickets until the job runs dry. Shared by workers
+/// and the submitting thread (which always participates, so a fully
+/// busy pool degrades to inline execution rather than deadlock).
+fn run_tickets(job: &Job) {
+    loop {
+        let band = job.next.fetch_add(1, Ordering::Relaxed);
+        if band >= job.n_bands {
+            return;
+        }
+        // Safety: valid ticket ⇒ the submitter is still blocked in
+        // `PoolCore::run`, keeping the closure alive (see `Job::f`).
+        let f = unsafe { &*job.f };
+        if panic::catch_unwind(AssertUnwindSafe(|| f(band))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // Release pairs with the submitter's Acquire load: band writes
+        // become visible through the `remaining` release sequence.
+        if job.remaining.fetch_sub(1, Ordering::Release) == 1 {
+            job.owner.unpark();
+        }
+    }
+}
+
+/// State shared with the worker threads.
+struct Shared {
+    jobs: Mutex<Vec<Arc<Job>>>,
+    shutdown: AtomicBool,
+}
+
+fn worker_main(shared: Arc<Shared>) {
+    let mut idle_rounds = 0u32;
+    loop {
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let job = {
+            let jobs = shared.jobs.lock().unwrap();
+            jobs.iter()
+                .find(|j| j.next.load(Ordering::Relaxed) < j.n_bands)
+                .cloned()
+        };
+        match job {
+            Some(job) => {
+                idle_rounds = 0;
+                run_tickets(&job);
+            }
+            None => {
+                idle_rounds += 1;
+                if idle_rounds <= IDLE_SPIN_ROUNDS {
+                    std::hint::spin_loop();
+                } else {
+                    // Submitters unpark every worker after pushing a
+                    // job, and an unpark before this park leaves a
+                    // token that makes it return immediately — no lost
+                    // wakeup window.
+                    thread::park_timeout(IDLE_PARK);
+                    idle_rounds = 0;
+                }
+            }
+        }
+    }
+}
+
+/// The resident worker set: `threads − 1` spawned workers (the
+/// submitting thread is the remaining executor).
+struct PoolCore {
+    shared: Arc<Shared>,
+    /// Worker thread handles for wakeups (immutable after construction).
+    unparkers: Vec<Thread>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    threads: usize,
+    par_min_work: AtomicUsize,
+}
+
+impl PoolCore {
+    fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            jobs: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut handles = Vec::new();
+        let mut unparkers = Vec::new();
+        for i in 0..threads - 1 {
+            let sh = Arc::clone(&shared);
+            let h = thread::Builder::new()
+                .name(format!("fedsink-pool-{i}"))
+                .spawn(move || worker_main(sh))
+                .expect("spawn pool worker");
+            unparkers.push(h.thread().clone());
+            handles.push(h);
+        }
+        let core = PoolCore {
+            shared,
+            unparkers,
+            handles: Mutex::new(handles),
+            threads,
+            par_min_work: AtomicUsize::new(MAX_CROSSOVER),
+        };
+        let xover = core.calibrate();
+        core.par_min_work.store(xover, Ordering::Relaxed);
+        core
+    }
+
+    /// Execute `n_bands` tickets of `f`, the calling thread included.
+    /// Returns once every band finished; re-panics if any band did.
+    fn run(&self, n_bands: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_bands == 0 {
+            return;
+        }
+        if n_bands == 1 || self.unparkers.is_empty() {
+            for band in 0..n_bands {
+                f(band);
+            }
+            return;
+        }
+        let job = Arc::new(Job {
+            f: unsafe { erase(f) },
+            n_bands,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n_bands),
+            panicked: AtomicBool::new(false),
+            owner: thread::current(),
+        });
+        self.shared.jobs.lock().unwrap().push(Arc::clone(&job));
+        for t in &self.unparkers {
+            t.unpark();
+        }
+        run_tickets(&job);
+        // Straggler wait: bounded spin, then park until the last worker
+        // unparks us on `remaining → 0` (timeout is insurance).
+        let mut spins = 0u32;
+        while job.remaining.load(Ordering::Acquire) != 0 {
+            spins += 1;
+            if spins <= IDLE_SPIN_ROUNDS {
+                std::hint::spin_loop();
+            } else {
+                thread::park_timeout(Duration::from_micros(50));
+            }
+        }
+        let mut jobs = self.shared.jobs.lock().unwrap();
+        if let Some(pos) = jobs.iter().position(|j| Arc::ptr_eq(j, &job)) {
+            jobs.remove(pos);
+        }
+        drop(jobs);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("worker-pool band panicked (propagated to the submitting thread)");
+        }
+    }
+
+    /// Measure the crossover work-unit count: pool dispatch overhead
+    /// (best-of empty two-band hand-offs, min filters scheduler noise)
+    /// against a serial FMA as the stand-in for one `nnz·N` work unit.
+    fn calibrate(&self) -> usize {
+        if let Ok(v) = std::env::var("FEDSINK_PAR_MIN_WORK") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        if self.unparkers.is_empty() {
+            // A serial pool can never profit from parallel dispatch.
+            return usize::MAX;
+        }
+        let mut overhead = f64::INFINITY;
+        for _ in 0..32 {
+            let t0 = Instant::now();
+            self.run(2, &|_band| {});
+            overhead = overhead.min(t0.elapsed().as_secs_f64());
+        }
+        let reps = 1usize << 16;
+        let mut acc = 1.0f64;
+        let t0 = Instant::now();
+        for i in 0..reps {
+            acc = acc.mul_add(0.999_999, (i & 7) as f64 * 1.0e-3);
+        }
+        std::hint::black_box(acc);
+        let per_unit = t0.elapsed().as_secs_f64() / reps as f64;
+        if per_unit <= 0.0 || !overhead.is_finite() {
+            return MIN_CROSSOVER;
+        }
+        // Parallel pays once the compute it offloads (≈ half the work
+        // at two bands) beats the hand-off: crossover ≈ 2·overhead/unit.
+        ((2.0 * overhead / per_unit) as usize).clamp(MIN_CROSSOVER, MAX_CROSSOVER)
+    }
+}
+
+impl Drop for PoolCore {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for t in &self.unparkers {
+            t.unpark();
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cheap cloneable handle on a resident worker set: an `Arc` of the
+/// core plus the band-count `share` this handle dispatches with.
+#[derive(Clone)]
+pub struct Pool {
+    core: Arc<PoolCore>,
+    share: usize,
+}
+
+static GLOBAL: OnceLock<Pool> = OnceLock::new();
+
+impl Pool {
+    /// Dedicated pool with its own `threads − 1` resident workers.
+    /// Dropping the last clone shuts them down and joins them.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        Pool { core: Arc::new(PoolCore::new(threads)), share: threads }
+    }
+
+    /// The process-wide pool, sized on first use from `--threads` /
+    /// `FEDSINK_THREADS` (default `available_parallelism`).
+    /// [`Pool::init_global`] can pin the size earlier.
+    pub fn global() -> &'static Pool {
+        GLOBAL.get_or_init(|| Pool::new(crate::config::compute_threads_from_settings()))
+    }
+
+    /// Size the global pool explicitly (the CLI `--threads` path).
+    /// First caller wins; returns the global either way.
+    pub fn init_global(threads: usize) -> &'static Pool {
+        GLOBAL.get_or_init(|| Pool::new(threads))
+    }
+
+    /// A handle dispatching at most `share` bands per call — one
+    /// simulated node's share of the resident workers.
+    pub fn with_share(&self, share: usize) -> Pool {
+        Pool { core: Arc::clone(&self.core), share: share.max(1) }
+    }
+
+    /// Band count this handle dispatches with.
+    pub fn share(&self) -> usize {
+        self.share
+    }
+
+    /// Resident executor count (spawned workers + submitting thread).
+    pub fn threads(&self) -> usize {
+        self.core.threads
+    }
+
+    /// Calibrated work-unit crossover below which parallel dispatch
+    /// loses to its own hand-off (`FEDSINK_PAR_MIN_WORK` overrides).
+    pub fn par_min_work(&self) -> usize {
+        self.core.par_min_work.load(Ordering::Relaxed)
+    }
+
+    /// Band count worth dispatching for `work` units: the full share at
+    /// or above the calibrated crossover, serial below it.
+    pub fn threads_for_work(&self, work: usize) -> usize {
+        if work >= self.par_min_work() {
+            self.share
+        } else {
+            1
+        }
+    }
+
+    /// Split `n_items` into at most `share` contiguous bands (the same
+    /// `div_ceil` decomposition the scoped-spawn call sites used) and
+    /// run `f(band, r0, r1)` for each on the resident workers, the
+    /// calling thread included. Blocks until every band finished;
+    /// panics if any band panicked.
+    pub fn run_bands(&self, n_items: usize, f: impl Fn(usize, usize, usize) + Sync) {
+        if n_items == 0 {
+            return;
+        }
+        let n_bands = self.share.min(n_items);
+        if n_bands <= 1 {
+            f(0, 0, n_items);
+            return;
+        }
+        let per = n_items.div_ceil(n_bands);
+        let n_bands = n_items.div_ceil(per);
+        self.core.run(n_bands, &|band| {
+            let r0 = band * per;
+            let r1 = (r0 + per).min(n_items);
+            f(band, r0, r1);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bands_cover_every_item_exactly_once() {
+        let pool = Pool::new(4);
+        for n_items in [1usize, 2, 3, 4, 5, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> = (0..n_items).map(|_| AtomicUsize::new(0)).collect();
+            pool.run_bands(n_items, |_band, r0, r1| {
+                for hit in &hits[r0..r1] {
+                    hit.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n_items {n_items}: some item missed or double-banded"
+            );
+        }
+    }
+
+    #[test]
+    fn banding_matches_the_scoped_spawn_decomposition() {
+        // Same div_ceil split the old crossbeam call sites computed.
+        let pool = Pool::new(3);
+        let bands = Mutex::new(Vec::new());
+        pool.run_bands(10, |band, r0, r1| {
+            bands.lock().unwrap().push((band, r0, r1));
+        });
+        let mut got = bands.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![(0, 0, 4), (1, 4, 8), (2, 8, 10)]);
+    }
+
+    #[test]
+    fn share_one_runs_inline_on_the_submitter() {
+        let pool = Pool::new(4).with_share(1);
+        let caller = thread::current().id();
+        pool.run_bands(100, |_band, r0, r1| {
+            assert_eq!((r0, r1), (0, 100), "share 1 must be one band");
+            assert_eq!(thread::current().id(), caller);
+        });
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_workers() {
+        // Two simulated nodes dispatching against one core at once —
+        // both sums must come out exact.
+        let pool = Pool::new(3);
+        let total = 5000usize;
+        thread::scope(|s| {
+            for _ in 0..2 {
+                let p = pool.with_share(3);
+                s.spawn(move || {
+                    let sum = AtomicUsize::new(0);
+                    for _ in 0..50 {
+                        sum.store(0, Ordering::Relaxed);
+                        p.run_bands(total, |_b, r0, r1| {
+                            sum.fetch_add(r1 - r0, Ordering::Relaxed);
+                        });
+                        assert_eq!(sum.load(Ordering::Relaxed), total);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn band_panic_propagates_and_pool_stays_usable() {
+        let pool = Pool::new(2);
+        let r = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_bands(2, |band, _r0, _r1| {
+                if band == 1 {
+                    panic!("aborted solve");
+                }
+            });
+        }));
+        assert!(r.is_err(), "band panic must reach the submitter");
+        // Clean re-entry: the same workers keep serving jobs.
+        let count = AtomicUsize::new(0);
+        pool.run_bands(64, |_b, r0, r1| {
+            count.fetch_add(r1 - r0, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn drop_joins_workers_without_leaks() {
+        let pool = Pool::new(4);
+        let weak = Arc::downgrade(&pool.core.shared);
+        pool.run_bands(32, |_b, _r0, _r1| {});
+        drop(pool);
+        // Workers hold the only other refs to the shared state; a dead
+        // weak proves every worker exited and was joined.
+        assert!(weak.upgrade().is_none(), "worker leaked past Drop");
+        // Fresh pool after a shutdown works (clean re-entry).
+        let again = Pool::new(2);
+        let count = AtomicUsize::new(0);
+        again.run_bands(8, |_b, r0, r1| {
+            count.fetch_add(r1 - r0, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn crossover_gates_threads_for_work() {
+        let pool = Pool::new(4);
+        let xover = pool.par_min_work();
+        assert!(xover >= 1);
+        if xover > 1 {
+            assert_eq!(pool.threads_for_work(xover - 1), 1);
+        }
+        if xover != usize::MAX {
+            assert_eq!(pool.threads_for_work(xover), 4);
+            assert_eq!(pool.with_share(2).threads_for_work(xover), 2);
+        }
+        // A serial pool never goes parallel.
+        let serial = Pool::new(1);
+        assert_eq!(serial.threads_for_work(usize::MAX), 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! Pool ≡ scoped-spawn identity pins.
+//!
+//! The persistent worker pool replaced per-call `crossbeam` scoped
+//! spawns in every banded kernel. Its shape contract — the same
+//! `div_ceil` row decomposition, every row processed serially inside
+//! exactly one band — makes results bit-identical to the old scoped
+//! code at every thread count. These tests pin that: each of the four
+//! kernel families (dense GEMM, CSR GEMM, log-CSR logsumexp, absorbed
+//! log-GEMM) is compared against an inline scoped-spawn reference that
+//! computes each band on its own spawned thread, at thread counts
+//! {1, 2, available_parallelism}. The streamed folds are pinned
+//! against their batch twins at the same counts.
+
+use fedsink::linalg::{AbsorbedLogCsr, Csr, LogCsr, Mat};
+use fedsink::rng::{child_seed, Rng};
+
+/// The pinned thread counts: serial, the smallest parallel split, and
+/// the machine's full width (deduplicated on narrow CI runners).
+fn thread_counts() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut ts = vec![1, 2, avail];
+    ts.sort_unstable();
+    ts.dedup();
+    ts
+}
+
+/// The exact band decomposition `Pool::run_bands` computes (and the old
+/// scoped-spawn call sites computed): at most `threads` contiguous
+/// `div_ceil`-sized row bands.
+fn bands(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.max(1).min(rows.max(1));
+    let per = rows.div_ceil(t);
+    (0..rows.div_ceil(per)).map(|b| (b * per, ((b + 1) * per).min(rows))).collect()
+}
+
+/// Scoped-spawn reference executor: one freshly spawned thread per
+/// band, each computing its `[r0, r1)` rows via `per_band`, assembled
+/// into one `rows×nh` flat result — exactly what the retired
+/// `crossbeam_utils::thread::scope` kernel sites did.
+fn scoped_rows(
+    rows: usize,
+    nh: usize,
+    threads: usize,
+    per_band: impl Fn(usize, usize) -> Vec<f64> + Sync,
+) -> Vec<f64> {
+    let mut out = vec![0.0; rows * nh];
+    crossbeam_utils::thread::scope(|s| {
+        let handles: Vec<_> = bands(rows, threads)
+            .into_iter()
+            .map(|(r0, r1)| {
+                let f = &per_band;
+                s.spawn(move |_| (r0, f(r0, r1)))
+            })
+            .collect();
+        for h in handles {
+            let (r0, band) = h.join().expect("band thread");
+            out[r0 * nh..r0 * nh + band.len()].copy_from_slice(&band);
+        }
+    })
+    .expect("scope");
+    out
+}
+
+fn assert_bit_identical(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(g.to_bits() == w.to_bits(), "{what}: index {i} differs: got {g:e}, want {w:e}");
+    }
+}
+
+/// A ~30% masked dense matrix (linear entries; zeros for the CSR view).
+fn sparse_dense(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    let mut m = Mat::rand_uniform(rows, cols, 0.1, 1.0, rng);
+    for i in 0..rows {
+        for j in 0..cols {
+            if rng.uniform() < 0.3 {
+                m[(i, j)] = 0.0;
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn dense_matmul_pool_matches_scoped_spawn() {
+    for (case, &(rows, n, nh)) in [(37usize, 29usize, 3usize), (64, 51, 1)].iter().enumerate() {
+        let mut rng = Rng::seed_from(child_seed(0x9001, case as u64));
+        let a = Mat::rand_uniform(rows, n, 0.1, 1.0, &mut rng);
+        let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        for t in thread_counts() {
+            let got = a.matmul(&x, t);
+            let want = scoped_rows(rows, nh, t, |r0, r1| {
+                a.row_block(r0, r1).matmul(&x, 1).as_slice().to_vec()
+            });
+            assert_bit_identical(
+                got.as_slice(),
+                &want,
+                &format!("dense matmul ({rows}x{n}x{nh}) at {t} threads"),
+            );
+        }
+    }
+}
+
+#[test]
+fn csr_matmul_pool_matches_scoped_spawn() {
+    for (case, &(rows, n, nh)) in [(41usize, 33usize, 4usize), (58, 23, 1)].iter().enumerate() {
+        let mut rng = Rng::seed_from(child_seed(0x9002, case as u64));
+        let dense = sparse_dense(rows, n, &mut rng);
+        let csr = Csr::from_dense(&dense, 0.0);
+        let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        for t in thread_counts() {
+            let mut got = Mat::zeros(rows, nh);
+            csr.matmul_into(&x, &mut got, t);
+            let want = scoped_rows(rows, nh, t, |r0, r1| {
+                let block = Csr::from_dense(&dense.row_block(r0, r1), 0.0);
+                let mut out = Mat::zeros(r1 - r0, nh);
+                block.matmul_into(&x, &mut out, 1);
+                out.as_slice().to_vec()
+            });
+            assert_bit_identical(
+                got.as_slice(),
+                &want,
+                &format!("csr matmul ({rows}x{n}x{nh}) at {t} threads"),
+            );
+        }
+    }
+}
+
+#[test]
+fn log_csr_logsumexp_pool_matches_scoped_spawn() {
+    // θ truncation is row-relative, so a row block re-truncated at the
+    // same θ keeps exactly the per-row support of the full kernel.
+    let theta = -5.0;
+    for (case, &(rows, n, nh)) in [(37usize, 31usize, 3usize), (49, 27, 1)].iter().enumerate() {
+        let mut rng = Rng::seed_from(child_seed(0x9003, case as u64));
+        let a_log = Mat::rand_uniform(rows, n, -8.0, 0.0, &mut rng);
+        let lc = LogCsr::from_dense_log(&a_log, theta);
+        let x = Mat::rand_uniform(n, nh, -1.0, 1.0, &mut rng);
+        for t in thread_counts() {
+            let got = lc.logsumexp(&x, t);
+            let want = scoped_rows(rows, nh, t, |r0, r1| {
+                LogCsr::from_dense_log(&a_log.row_block(r0, r1), theta)
+                    .logsumexp(&x, 1)
+                    .as_slice()
+                    .to_vec()
+            });
+            assert_bit_identical(
+                got.as_slice(),
+                &want,
+                &format!("log-csr logsumexp ({rows}x{n}x{nh}) at {t} threads"),
+            );
+        }
+    }
+}
+
+#[test]
+fn absorbed_log_matmul_pool_matches_scoped_spawn() {
+    let (theta, covered, sigma) = (-30.0, 2.0, 0.5);
+    for (case, &(rows, n, nh)) in [(37usize, 29usize, 3usize), (45, 21, 1)].iter().enumerate() {
+        let mut rng = Rng::seed_from(child_seed(0x9004, case as u64));
+        let a_log = Mat::rand_uniform(rows, n, -6.0, 0.0, &mut rng);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-0.5, 0.5)).collect();
+        let ak = AbsorbedLogCsr::from_dense_log(&a_log, &gref, theta, covered, sigma);
+        // Scalings within the covered drift of the reference.
+        let xv: Vec<f64> = (0..n * nh)
+            .map(|i| gref[i / nh] + rng.uniform_range(-covered, covered))
+            .collect();
+        let x_log = Mat::from_vec(n, nh, xv);
+        for t in thread_counts() {
+            let mut ex = Mat::zeros(n, nh);
+            let mut lin = Mat::zeros(rows, nh);
+            let mut got = Mat::zeros(rows, nh);
+            ak.log_matmul_into(&x_log, &mut ex, &mut lin, &mut got, t);
+            let want = scoped_rows(rows, nh, t, |r0, r1| {
+                let block = a_log.row_block(r0, r1);
+                let blk = AbsorbedLogCsr::from_dense_log(&block, &gref, theta, covered, sigma);
+                let mut ex = Mat::zeros(n, nh);
+                let mut lin = Mat::zeros(r1 - r0, nh);
+                let mut out = Mat::zeros(r1 - r0, nh);
+                blk.log_matmul_into(&x_log, &mut ex, &mut lin, &mut out, 1);
+                out.as_slice().to_vec()
+            });
+            assert_bit_identical(
+                got.as_slice(),
+                &want,
+                &format!("absorbed log-matmul ({rows}x{n}x{nh}) at {t} threads"),
+            );
+        }
+    }
+}
+
+/// Partition `[0, n)` into three uneven column slices (n ≥ 6 here).
+fn col_slices(n: usize) -> Vec<(usize, usize)> {
+    let (a, b) = (n / 3, n / 2);
+    vec![(0, a), (a, b), (b, n)]
+}
+
+/// Rows `[c0, c1)` of an `n×nh` flat matrix as an owned slice payload.
+fn rows_of(x: &Mat, c0: usize, c1: usize) -> Vec<f64> {
+    x.as_slice()[c0 * x.cols()..c1 * x.cols()].to_vec()
+}
+
+#[test]
+fn dense_fold_matches_batch_at_every_thread_count() {
+    let (rows, n, nh) = (37usize, 30usize, 3usize);
+    let mut rng = Rng::seed_from(child_seed(0x9005, 0));
+    let a = Mat::rand_uniform(rows, n, 0.1, 1.0, &mut rng);
+    let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+    let mut batch = Mat::zeros(rows, nh);
+    a.matmul_into(&x, &mut batch, 1);
+    let fold_at = |t: usize| {
+        let mut out = vec![0.0; rows * nh];
+        for &(c0, c1) in &col_slices(n) {
+            a.matmul_fold(c0, c1 - c0, &rows_of(&x, c0, c1), nh, &mut out, t);
+        }
+        out
+    };
+    let serial = fold_at(1);
+    let folded = Mat::from_vec(rows, nh, serial.clone());
+    assert!(folded.allclose(&batch, 1e-12), "fold != batch (summation-order tolerance)");
+    for t in thread_counts() {
+        // Banding is per-row, so the fold is bit-stable across counts.
+        assert_bit_identical(&fold_at(t), &serial, &format!("dense fold at {t} threads"));
+    }
+}
+
+#[test]
+fn csr_fold_matches_batch_at_every_thread_count() {
+    let (rows, n, nh) = (41usize, 27usize, 2usize);
+    let mut rng = Rng::seed_from(child_seed(0x9006, 0));
+    let dense = sparse_dense(rows, n, &mut rng);
+    let csr = Csr::from_dense(&dense, 0.0);
+    let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+    let mut batch = Mat::zeros(rows, nh);
+    csr.matmul_into(&x, &mut batch, 1);
+    let fold_at = |t: usize| {
+        let mut out = vec![0.0; rows * nh];
+        for &(c0, c1) in &col_slices(n) {
+            csr.matmul_fold(c0, c1 - c0, &rows_of(&x, c0, c1), nh, &mut out, t);
+        }
+        out
+    };
+    let serial = fold_at(1);
+    let folded = Mat::from_vec(rows, nh, serial.clone());
+    assert!(folded.allclose(&batch, 1e-12), "csr fold != batch");
+    for t in thread_counts() {
+        assert_bit_identical(&fold_at(t), &serial, &format!("csr fold at {t} threads"));
+    }
+}
+
+#[test]
+fn log_csr_fold_matches_batch_at_every_thread_count() {
+    let (rows, n, nh) = (37usize, 24usize, 3usize);
+    let mut rng = Rng::seed_from(child_seed(0x9007, 0));
+    let a_log = Mat::rand_uniform(rows, n, -8.0, 0.0, &mut rng);
+    let lc = LogCsr::from_dense_log(&a_log, -5.0);
+    let x = Mat::rand_uniform(n, nh, -1.0, 1.0, &mut rng);
+    let batch = lc.logsumexp(&x, 1);
+    let fold_at = |t: usize| {
+        let mut mx = vec![f64::NEG_INFINITY; rows * nh];
+        let mut sum = vec![0.0; rows * nh];
+        for &(c0, c1) in &col_slices(n) {
+            lc.logsumexp_fold(c0, c1 - c0, &rows_of(&x, c0, c1), nh, &mut mx, &mut sum, t);
+        }
+        mx.iter()
+            .zip(&sum)
+            .map(|(&m, &s)| if s > 0.0 { m + s.ln() } else { f64::NEG_INFINITY })
+            .collect::<Vec<f64>>()
+    };
+    let serial = fold_at(1);
+    let folded = Mat::from_vec(rows, nh, serial.clone());
+    assert!(folded.allclose(&batch, 1e-12), "log-csr fold != batch");
+    for t in thread_counts() {
+        assert_bit_identical(&fold_at(t), &serial, &format!("log-csr fold at {t} threads"));
+    }
+}
+
+#[test]
+fn absorbed_fold_matches_batch_at_every_thread_count() {
+    let (rows, n, nh) = (37usize, 24usize, 3usize);
+    let (theta, covered, sigma) = (-30.0, 2.0, 0.5);
+    let mut rng = Rng::seed_from(child_seed(0x9008, 0));
+    let a_log = Mat::rand_uniform(rows, n, -6.0, 0.0, &mut rng);
+    let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-0.5, 0.5)).collect();
+    let ak = AbsorbedLogCsr::from_dense_log(&a_log, &gref, theta, covered, sigma);
+    let xv: Vec<f64> = (0..n * nh)
+        .map(|i| gref[i / nh] + rng.uniform_range(-covered, covered))
+        .collect();
+    let x_log = Mat::from_vec(n, nh, xv);
+    let mut ex = Mat::zeros(n, nh);
+    let mut lin = Mat::zeros(rows, nh);
+    let mut batch = Mat::zeros(rows, nh);
+    ak.log_matmul_into(&x_log, &mut ex, &mut lin, &mut batch, 1);
+    let fold_at = |t: usize| {
+        let mut lin = Mat::zeros(rows, nh);
+        let mut out = Mat::zeros(rows, nh);
+        for &(c0, c1) in &col_slices(n) {
+            let slice = rows_of(&x_log, c0, c1);
+            assert!(ak.slice_drift(c0, c1 - c0, &slice, nh) <= covered, "drift contract");
+            let mut ex_slice = vec![0.0; slice.len()];
+            ak.log_matmul_fold(c0, c1 - c0, &slice, nh, &mut ex_slice, &mut lin, t);
+        }
+        ak.log_matmul_finish(&lin, &mut out);
+        out.as_slice().to_vec()
+    };
+    let serial = fold_at(1);
+    let folded = Mat::from_vec(rows, nh, serial.clone());
+    assert!(folded.allclose(&batch, 1e-12), "absorbed fold != batch");
+    for t in thread_counts() {
+        assert_bit_identical(&fold_at(t), &serial, &format!("absorbed fold at {t} threads"));
+    }
+}
