@@ -191,6 +191,14 @@ pub struct SolveConfig {
     /// long a reconstruction can drift from exact state under future
     /// lossy links. 0 (default) keys only on stream (re)priming.
     pub wire_keyframe_every: usize,
+    /// Fault-injection schedule (`--drop-prob` / `--dup-prob` /
+    /// `--reorder-prob` / `--crash-at` / …). The inactive default keeps
+    /// every fabric path byte-for-byte on the lossless code.
+    pub faults: crate::net::FaultPlan,
+    /// Peer-death detection + node-loss policy (`--recv-timeout` /
+    /// `--strikes` / `--on-node-loss`). Only consulted when the fault
+    /// plan is active — lossless runs never arm recovery timeouts.
+    pub recovery: crate::net::Recovery,
 }
 
 impl SolveConfig {
@@ -225,6 +233,8 @@ impl Default for SolveConfig {
             wire: crate::net::WireFormat::F64,
             stream_exchange: false,
             wire_keyframe_every: 0,
+            faults: crate::net::FaultPlan::none(),
+            recovery: crate::net::Recovery::default(),
         }
     }
 }
@@ -433,6 +443,10 @@ mod tests {
         // barrier exchange.
         assert_eq!(c.wire, crate::net::WireFormat::F64);
         assert!(!c.stream_exchange);
+        // Lossless fabric + abort-on-loss recovery by default.
+        assert!(!c.faults.is_active());
+        assert_eq!(c.recovery.on_node_loss, crate::net::NodeLoss::Abort);
+        assert!(c.recovery.death_secs() > 0.0);
     }
 
     #[test]

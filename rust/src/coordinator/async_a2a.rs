@@ -25,9 +25,10 @@ use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
-use crate::net::{allgather, Endpoint, TagKind};
+use crate::net::{allgather, allgather_resilient, Endpoint, Recovery, TagKind};
 use crate::runtime::{BlockOp, StabStats, Target};
 use crate::sinkhorn::StopReason;
+use std::time::Instant;
 
 /// The async protocol reuses one tag per kind for the whole run; rounds
 /// are implicit in `sent_iter` and latest-wins reads keep only the
@@ -121,6 +122,19 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         .map(|_| PeerView { last_iter: 0, done: false })
         .collect();
 
+    // Self-healing state, armed only under an active fault plan. Node
+    // death folds into the existing done-vote path: a *lagging* peer
+    // that has also been wall-clock silent past the recovery death
+    // budget can only have crashed (reliable frames always get through,
+    // and latest-wins slices flow every iteration), so it is marked
+    // done-and-lost — the staleness gate releases and the final
+    // consistent exchange skips it.
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(id);
+    let mut dead = vec![false; c];
+    let mut last_heard: Vec<Instant> = vec![Instant::now(); c];
+
     // Fleet-synchronized absorption (`--fleet-absorb`, log-domain hybrid
     // runs): rank 0 merges the latest slice probes and broadcasts
     // reference-dual commands; everyone else applies the freshest
@@ -140,6 +154,13 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut iterations = 0;
 
     for k in 1..=ctx.policy.max_iters {
+        // Crash injection fires at an iteration boundary: the node
+        // exits cleanly — no done vote, no final exchange — and peers
+        // discover the silence through the death budget below.
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break;
+        }
         iterations = k;
         let k64 = k as u64;
 
@@ -148,7 +169,18 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // drain and the park still wakes us immediately.
         timer.comm(|| {
             let mut seen = ep.inbox_seq();
-            drain(&ep, ctx, id, c, k64, &mut peers, &mut u_full, &mut v_full, m);
+            drain(
+                &ep,
+                ctx,
+                id,
+                c,
+                k64,
+                &mut peers,
+                &mut u_full,
+                &mut v_full,
+                m,
+                &mut last_heard,
+            );
             // Wait for any peer we have outrun beyond the bound.
             loop {
                 let lagging = (0..c).any(|p| {
@@ -157,10 +189,36 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 if !lagging {
                     break;
                 }
+                if resilient {
+                    // A lagging peer silent past the death budget has
+                    // crashed: fold it into the done votes so the gate
+                    // releases, and remember the loss.
+                    for p in 0..c {
+                        if p != id
+                            && !peers[p].done
+                            && k64.saturating_sub(peers[p].last_iter) > bound
+                            && last_heard[p].elapsed().as_secs_f64() >= recovery.death_secs()
+                        {
+                            peers[p].done = true;
+                            dead[p] = true;
+                        }
+                    }
+                }
                 // Park on the inbox until traffic moves (or a queued
                 // frame matures) instead of a fixed busy-sleep.
                 seen = ep.wait_traffic(seen, std::time::Duration::from_millis(1));
-                drain(&ep, ctx, id, c, k64, &mut peers, &mut u_full, &mut v_full, m);
+                drain(
+                    &ep,
+                    ctx,
+                    id,
+                    c,
+                    k64,
+                    &mut peers,
+                    &mut u_full,
+                    &mut v_full,
+                    m,
+                    &mut last_heard,
+                );
             }
         });
 
@@ -223,12 +281,16 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         };
 
         // u_jj = α a_j/(K_j v) + (1−α) u_jj, then inconsistent broadcast.
+        // Latest-wins delivery class: a dropped slice is superseded by
+        // next iteration's send rather than retransmitted (the codec
+        // re-keys so reconstruction never diverges) — identical to
+        // `send_coded` when the fault plan is inactive.
         let u_jj = timer.comp(|| u_op.update(&v_full, alpha).clone());
         write_block(&mut u_full, u_jj.as_slice(), id, m);
         timer.comm(|| {
             for peer in 0..c {
-                if peer != id {
-                    ep.send_coded(
+                if peer != id && !dead[peer] {
+                    ep.send_coded_latest(
                         peer,
                         TagKind::U,
                         ASYNC_TAG,
@@ -245,8 +307,8 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         write_block(&mut v_full, v_jj.as_slice(), id, m);
         timer.comm(|| {
             for peer in 0..c {
-                if peer != id {
-                    ep.send_coded(
+                if peer != id && !dead[peer] {
+                    ep.send_coded_latest(
                         peer,
                         TagKind::V,
                         ASYNC_TAG,
@@ -310,22 +372,63 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         }
     }
 
-    // Announce we stopped, so lagging peers don't wait on us …
-    for peer in 0..c {
-        if peer != id {
-            ep.send(peer, TagKind::Ctl, DONE_TAG, vec![1.0], iterations as u64);
-        }
-    }
-    // … then the final consistent broadcast (paper: "a consistent
-    // broadcast ensures that all nodes have the same fully updated u and
-    // v").
     let u_fin = u_op.state().clone();
     let v_fin = v_op.state().clone();
-    timer.comm(|| {
-        let _ = allgather(&ep, TagKind::U, u64::MAX - 1, u_fin.as_slice(), iterations as u64);
-        let _ = allgather(&ep, TagKind::V, u64::MAX, v_fin.as_slice(), iterations as u64);
-    });
-    timer.add_comp(ep.take_decode_secs());
+    if stop != StopReason::Dead {
+        // Announce we stopped, so lagging peers don't wait on us …
+        for peer in 0..c {
+            if peer != id {
+                ep.send(peer, TagKind::Ctl, DONE_TAG, vec![1.0], iterations as u64);
+            }
+        }
+        // … then the final consistent broadcast (paper: "a consistent
+        // broadcast ensures that all nodes have the same fully updated u
+        // and v"). Under an active fault plan the exchange is
+        // crash-tolerant: peers already declared dead are skipped, and a
+        // peer that never shows up within the stretched death budget is
+        // struck dead here instead of hanging the run. (The runner
+        // assembles the outcome from each node's own slices, so a struck
+        // peer only costs us its copy, never correctness.)
+        timer.comm(|| {
+            if resilient {
+                let fin = Recovery {
+                    recv_timeout_secs: recovery.death_secs().max(1e-3),
+                    ..recovery
+                };
+                let mut alive: Vec<bool> = dead.iter().map(|&d| !d).collect();
+                let _ = allgather_resilient(
+                    &ep,
+                    TagKind::U,
+                    u64::MAX - 1,
+                    None,
+                    u_fin.as_slice(),
+                    iterations as u64,
+                    &mut alive,
+                    &fin,
+                );
+                let _ = allgather_resilient(
+                    &ep,
+                    TagKind::V,
+                    u64::MAX,
+                    None,
+                    v_fin.as_slice(),
+                    iterations as u64,
+                    &mut alive,
+                    &fin,
+                );
+                for (p, &a) in alive.iter().enumerate() {
+                    if !a {
+                        dead[p] = true;
+                    }
+                }
+            } else {
+                let _ =
+                    allgather(&ep, TagKind::U, u64::MAX - 1, u_fin.as_slice(), iterations as u64);
+                let _ = allgather(&ep, TagKind::V, u64::MAX, v_fin.as_slice(), iterations as u64);
+            }
+        });
+        timer.add_comp(ep.take_decode_secs());
+    }
 
     NodeOutcome {
         stats: NodeStats {
@@ -336,6 +439,11 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             stop,
             final_err,
             stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            lost_peers: dead
+                .iter()
+                .enumerate()
+                .filter_map(|(p, &d)| d.then_some(p))
+                .collect(),
         },
         slices: Some((u_fin, v_fin)),
         trace,
@@ -343,7 +451,8 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 }
 
 /// Drain every deliverable peer message: fold the freshest u/v slices
-/// into the local state, record staleness, note done votes.
+/// into the local state, record staleness, note done votes, and stamp
+/// `heard` (the wall-clock liveness evidence behind the death budget).
 #[allow(clippy::too_many_arguments)]
 fn drain(
     ep: &Endpoint,
@@ -355,6 +464,7 @@ fn drain(
     u_full: &mut Mat,
     v_full: &mut Mat,
     m: usize,
+    heard: &mut [Instant],
 ) {
     for peer in 0..c {
         if peer == id {
@@ -364,14 +474,17 @@ fn drain(
             ctx.delays.record(msg.sent_iter, k64);
             peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
             write_block(v_full, &msg.payload, peer, m);
+            heard[peer] = Instant::now();
         }
         if let Some(msg) = ep.try_recv_latest(peer, TagKind::U, ASYNC_TAG) {
             ctx.delays.record(msg.sent_iter, k64);
             peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
             write_block(u_full, &msg.payload, peer, m);
+            heard[peer] = Instant::now();
         }
         if ep.try_recv_latest(peer, TagKind::Ctl, DONE_TAG).is_some() {
             peers[peer].done = true;
+            heard[peer] = Instant::now();
         }
     }
 }
@@ -472,7 +585,10 @@ fn apply_fleet_command(
 
 /// Send this node's slice-local drift probe to rank 0. A degraded
 /// operator (dense fallback) stops probing, which silently pauses fleet
-/// decisions at the coordinator — the intended degrade path.
+/// decisions at the coordinator — the intended degrade path. Probes
+/// ride the latest-wins delivery class: a dropped probe is superseded
+/// by next iteration's, and a stalled probe channel merely holds the
+/// coordinator's decision (the same hold state).
 #[allow(clippy::too_many_arguments)]
 fn send_fleet_probe(
     ep: &Endpoint,
@@ -487,6 +603,6 @@ fn send_fleet_probe(
 ) {
     if let Some(p) = timer.comp(|| op.fleet_probe(x_full, r0, m)) {
         let payload = fleet::probe_payload(seq, &p);
-        timer.comm(|| ep.send_coded(0, TagKind::Gref, probe_tag, probe_tag, payload, k64));
+        timer.comm(|| ep.send_coded_latest(0, TagKind::Gref, probe_tag, probe_tag, payload, k64));
     }
 }

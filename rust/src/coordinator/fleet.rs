@@ -44,6 +44,16 @@ use crate::runtime::{BlockOp, FleetProbe};
 pub const PROBE_HEADER: usize = 3;
 
 /// Encode a slice probe: `[seq, covered, spread, drift[N], ḡ_slice[m]]`.
+///
+/// **The seq lane is a filter, not an input.** Only the *async*
+/// coordinator consumes it — to drop probes measured against a
+/// superseded reference before they reach [`decide`]. The lock-step
+/// sync paths (`sync_a2a`, and the degraded substitution the resilient
+/// gather makes for a dead node) hardcode `seq = 0` because their
+/// gather/broadcast rounds already order frames; [`decide`] itself
+/// never reads the lane, so the two framings can share one decoder and
+/// the retransmit layer cannot confuse them. Pinned by
+/// `decide_ignores_the_seq_lane` below.
 pub fn probe_payload(seq: u64, probe: &FleetProbe) -> Vec<f64> {
     let mut out = Vec::with_capacity(PROBE_HEADER + probe.drift.len() + probe.gref_slice.len());
     out.push(seq as f64);
@@ -57,7 +67,10 @@ pub fn probe_payload(seq: u64, probe: &FleetProbe) -> Vec<f64> {
 /// The "no live absorbed kernel on this node" probe. Its short length
 /// is the marker: [`decide`] holds off on any round that contains one,
 /// so a degraded node quietly pauses fleet decisions instead of
-/// receiving commands it cannot obey.
+/// receiving commands it cannot obey. As with [`probe_payload`], the
+/// seq lane is only a staleness filter for the async coordinator; the
+/// sync paths pass `0` and [`decide`] ignores it (the length alone
+/// carries the hold signal).
 pub fn degraded_payload(seq: u64) -> Vec<f64> {
     vec![seq as f64, -1.0]
 }
@@ -202,5 +215,29 @@ mod tests {
         let d = degraded_payload(0);
         assert!(decide(&[&a, &d], 2, 2, tau).is_none());
         assert!(decide(&[], 2, 2, tau).is_none());
+    }
+
+    #[test]
+    fn decide_ignores_the_seq_lane() {
+        // The sync-path contract: gather/broadcast rounds already order
+        // frames, so sync coordinators stamp every probe (and the
+        // degraded substitute for a dead node) with seq 0 while the
+        // async path threads real command seqs through the same
+        // encoding. `decide` must produce the identical command either
+        // way — the seq lane is consumed only by the async coordinator's
+        // staleness filter, never by the decision.
+        let tau = 5.0;
+        let p0 = probe(10.0, 1.0, vec![2.0, 3.0], vec![0.1, 0.2]);
+        let p1 = probe(12.0, 4.0, vec![11.0, 0.5], vec![0.3, 0.4]);
+        for seqs in [[0u64, 0u64], [7, 3], [u32::MAX as u64, 1]] {
+            let a = probe_payload(seqs[0], &p0);
+            let b = probe_payload(seqs[1], &p1);
+            let cmd = decide(&[&a, &b], 2, 2, tau).expect("drift 11 > covered 10");
+            assert_eq!(cmd.needed, 4.0 + tau);
+            assert_eq!(cmd.gref, vec![0.1, 0.2, 0.3, 0.4]);
+            // The degraded hold is seq-independent too.
+            let d = degraded_payload(seqs[1]);
+            assert!(decide(&[&a, &d], 2, 2, tau).is_none());
+        }
     }
 }

@@ -35,9 +35,21 @@ pub fn slowest_node(stats: &[NodeStats]) -> &NodeStats {
         .expect("at least one node")
 }
 
-/// Aggregate stop reason across nodes.
+/// Aggregate stop reason across nodes. Fault-plan runs: a crashed node
+/// ([`StopReason::Dead`]) does not veto the survivors' verdict — an
+/// `--on-node-loss exclude` run that converges over the live slice is
+/// `Converged` (the outcome's `degraded` flag records the loss); a
+/// recovery abort anywhere is `PeerLoss`; all nodes dead is `Dead`.
 pub fn aggregate_stop(stats: &[NodeStats]) -> StopReason {
-    if stats.iter().all(|s| s.stop == StopReason::Converged) {
+    if stats.iter().any(|s| s.stop == StopReason::PeerLoss) {
+        StopReason::PeerLoss
+    } else if stats.iter().all(|s| s.stop == StopReason::Dead) {
+        StopReason::Dead
+    } else if stats
+        .iter()
+        .filter(|s| s.stop != StopReason::Dead)
+        .all(|s| s.stop == StopReason::Converged)
+    {
         StopReason::Converged
     } else if stats.iter().any(|s| s.stop == StopReason::Timeout) {
         StopReason::Timeout

@@ -24,6 +24,9 @@ pub struct NodeStats {
     /// stabilized schedule (linear domain, dense/sparse logsumexp, pure
     /// element-wise star clients).
     pub stab: Option<StabStats>,
+    /// Peers this node declared dead under the recovery policy (empty on
+    /// lossless runs and for nodes that saw every peer respond).
+    pub lost_peers: Vec<usize>,
 }
 
 impl NodeStats {
@@ -68,6 +71,14 @@ pub struct FederatedOutcome {
     /// encoded frames); default-empty for centralized runs, which have
     /// no fabric.
     pub traffic: NetTraffic,
+    /// Whether the run lost a node: a crash injection fired or a peer
+    /// was declared dead. A degraded outcome's `state` is partial —
+    /// dead slices hold their last received value (`exclude`) or their
+    /// abort-time value (`abort`).
+    pub degraded: bool,
+    /// The ids every node agrees are gone (crashed nodes plus the union
+    /// of `NodeStats::lost_peers`), sorted.
+    pub lost_nodes: Vec<usize>,
 }
 
 /// Everything a protocol implementation needs.
@@ -179,6 +190,7 @@ pub fn run_federated(
                 stop: out.stop,
                 final_err: out.final_err,
                 stab: out.stab.clone(),
+                lost_peers: Vec::new(),
             }],
             taus: Vec::new(),
             trace: out
@@ -190,6 +202,8 @@ pub fn run_federated(
             state: out.state,
             secs: t0.elapsed().as_secs_f64(),
             traffic: NetTraffic::default(),
+            degraded: false,
+            lost_nodes: Vec::new(),
         };
     }
 
@@ -201,7 +215,8 @@ pub fn run_federated(
     let latency: LatencyModel = cfg.net;
     let net = Arc::new(
         SimNet::with_wire(nodes, latency, cfg.seed, cfg.wire)
-            .with_keyframe_every(cfg.wire_keyframe_every),
+            .with_keyframe_every(cfg.wire_keyframe_every)
+            .with_faults(cfg.faults.clone()),
     );
     let delays = Arc::new(DelayTracker::new());
 
@@ -248,6 +263,17 @@ pub fn run_federated(
         .iter()
         .fold(None, |acc, s| StabStats::merged(acc, s.stab.clone()));
     let stop = aggregate_stop(&node_stats);
+    // Node-loss bookkeeping: crashed nodes + every peer anyone struck
+    // dead. Nonempty (or a PeerLoss abort) flags the outcome degraded.
+    let mut lost_nodes: Vec<usize> = node_stats
+        .iter()
+        .filter(|s| s.stop == StopReason::Dead)
+        .map(|s| s.id)
+        .chain(node_stats.iter().flat_map(|s| s.lost_peers.iter().copied()))
+        .collect();
+    lost_nodes.sort_unstable();
+    lost_nodes.dedup();
+    let degraded = !lost_nodes.is_empty() || stop == StopReason::PeerLoss;
     let iterations = node_stats.iter().map(|s| s.iterations).max().unwrap_or(0);
     // Node 0's trace is the representative curve (paper plots "the first
     // node"); sync traces are identical across nodes anyway.
@@ -268,6 +294,8 @@ pub fn run_federated(
         secs: t0.elapsed().as_secs_f64(),
         stab,
         traffic: net.traffic(),
+        degraded,
+        lost_nodes,
     }
 }
 

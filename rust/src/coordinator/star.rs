@@ -28,9 +28,12 @@ use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::{Domain, Mat};
 use crate::metrics::{Clock, SplitTimer};
-use crate::net::{bcast, gather, Endpoint, TagKind};
+use crate::net::{
+    bcast, bcast_resilient, gather, gather_resilient, Endpoint, NodeLoss, Recovery, TagKind,
+};
 use crate::runtime::{BlockOp, StabStats, Target};
 use crate::sinkhorn::StopReason;
+use std::time::{Duration, Instant};
 
 /// Coded-stream ids (stable per logical stream — see
 /// [`crate::net::wire`]): client scaling slices up to the server, and
@@ -104,6 +107,16 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     let mut iterations = 0;
     let mut round: u64 = 0;
 
+    // Self-healing state (active fault plans only): `alive` spans every
+    // node (clients 0..c, server at c). A client that stays silent
+    // through the full strike budget inside a product gather is dead;
+    // `abort` stops with a structured partial outcome, `exclude` freezes
+    // its slice rows and keeps going degraded.
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(c);
+    let mut alive = vec![true; c + 1];
+
     // In the star topology the coordinator *owns* the kernel, so the
     // fleet-absorption round is local: same decision logic as the wire
     // protocol, zero extra messages (the Gref α–β term vanishes).
@@ -115,7 +128,14 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     // decide/apply must see the product after the re-absorption).
     let stream = ctx.stream_on();
 
-    for k in 1..=ctx.policy.max_iters {
+    'outer: for k in 1..=ctx.policy.max_iters {
+        // Crash injection fires at an iteration boundary: the server
+        // exits cleanly; clients discover the silence through their own
+        // strike budgets and abort with PeerLoss.
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break;
+        }
         iterations = k;
         let k64 = k as u64;
 
@@ -123,15 +143,36 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
         // server holds no chunk of its own, so the scatter is explicit
         // per-client sends rather than the equal-split collective.)
         round += 1;
+        let was_alive = count_alive(&alive);
         let q = server_product(
-            &ep, TagKind::V, round, &mut *k_op, &mut v_full, m, c, stream, fleet, tau,
+            &ep,
+            TagKind::V,
+            round,
+            &mut *k_op,
+            &mut v_full,
+            m,
+            c,
+            stream,
+            fleet,
+            tau,
             &mut timer,
+            &mut alive[..c],
+            resilient.then_some(&recovery),
         );
+        if resilient
+            && count_alive(&alive) < was_alive
+            && recovery.on_node_loss == NodeLoss::Abort
+        {
+            stop = StopReason::PeerLoss;
+            break 'outer;
+        }
         round += 1;
         timer.comm(|| {
             for j in 0..c {
-                let chunk = chunk_of(&q, j, m).to_vec();
-                ep.send_coded(j, TagKind::Ctl, round, STREAM_CHUNK_Q, chunk, k64);
+                if alive[j] {
+                    let chunk = chunk_of(&q, j, m).to_vec();
+                    ep.send_coded(j, TagKind::Ctl, round, STREAM_CHUNK_Q, chunk, k64);
+                }
             }
         });
 
@@ -141,17 +182,55 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
         // read identically zero at α = 1 since u = a/q by construction).
         if ctx.policy.check_at(k) {
             round += 1;
-            let errs =
-                timer.comm(|| gather(&ep, c, TagKind::Ctl, round, &[0.0, 0.0], k64).unwrap());
-            let total: f64 = errs.iter().take(c).map(|e| e[0]).sum();
-            let mut any_timeout = errs.iter().take(c).any(|e| e[1] > 0.0);
+            let (total, mut any_timeout) = if resilient {
+                // Dead clients' slots come back `None`: their frozen
+                // rows contribute no marginal error and cast no votes.
+                let parts = timer
+                    .comm(|| {
+                        gather_resilient(
+                            &ep,
+                            c,
+                            TagKind::Ctl,
+                            round,
+                            None,
+                            &[0.0, 0.0],
+                            k64,
+                            &mut alive,
+                            &recovery,
+                        )
+                    })
+                    .expect("the root always collects");
+                let total: f64 = parts.iter().take(c).flatten().map(|e| e[0]).sum();
+                let timed = parts.iter().take(c).flatten().any(|e| e[1] > 0.0);
+                (total, timed)
+            } else {
+                let errs =
+                    timer.comm(|| gather(&ep, c, TagKind::Ctl, round, &[0.0, 0.0], k64).unwrap());
+                let total: f64 = errs.iter().take(c).map(|e| e[0]).sum();
+                (total, errs.iter().take(c).any(|e| e[1] > 0.0))
+            };
             any_timeout |=
                 ctx.policy.timeout_secs > 0.0 && clock.now() > ctx.policy.timeout_secs;
             final_err = total;
             round += 1;
-            timer.comm(|| {
-                bcast(&ep, c, TagKind::Ctl, round, Some(&[total, any_timeout as u8 as f64]), k64)
-            });
+            let decision = [total, any_timeout as u8 as f64];
+            if resilient {
+                let _ = timer.comm(|| {
+                    bcast_resilient(
+                        &ep,
+                        c,
+                        TagKind::Ctl,
+                        round,
+                        None,
+                        Some(&decision),
+                        k64,
+                        &mut alive,
+                        &recovery,
+                    )
+                });
+            } else {
+                timer.comm(|| bcast(&ep, c, TagKind::Ctl, round, Some(&decision), k64));
+            }
             if total < ctx.policy.threshold {
                 stop = StopReason::Converged;
                 break;
@@ -164,15 +243,36 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
 
         // Gather u slices → r = Kᵀ u → scatter the r row chunks.
         round += 1;
+        let was_alive = count_alive(&alive);
         let r = server_product(
-            &ep, TagKind::U, round, &mut *kt_op, &mut u_full, m, c, stream, fleet, tau,
+            &ep,
+            TagKind::U,
+            round,
+            &mut *kt_op,
+            &mut u_full,
+            m,
+            c,
+            stream,
+            fleet,
+            tau,
             &mut timer,
+            &mut alive[..c],
+            resilient.then_some(&recovery),
         );
+        if resilient
+            && count_alive(&alive) < was_alive
+            && recovery.on_node_loss == NodeLoss::Abort
+        {
+            stop = StopReason::PeerLoss;
+            break 'outer;
+        }
         round += 1;
         timer.comm(|| {
             for j in 0..c {
-                let chunk = chunk_of(&r, j, m).to_vec();
-                ep.send_coded(j, TagKind::Ctl, round, STREAM_CHUNK_R, chunk, k64);
+                if alive[j] {
+                    let chunk = chunk_of(&r, j, m).to_vec();
+                    ep.send_coded(j, TagKind::Ctl, round, STREAM_CHUNK_R, chunk, k64);
+                }
             }
         });
         // Dequantizing the received slice frames is receiver CPU work.
@@ -189,6 +289,7 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
             stop,
             final_err,
             stab: StabStats::merged(k_op.stab_stats(), kt_op.stab_stats()),
+            lost_peers: lost_of(&alive),
         },
         slices: None,
         trace: Vec::new(),
@@ -217,7 +318,21 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut iterations = 0;
     let mut round: u64 = 0;
 
+    // Self-healing state (active fault plans only). A silent server is
+    // always fatal — it owns the kernel, so there is nothing to exclude
+    // down to: strike out → PeerLoss regardless of `--on-node-loss`.
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(id);
+    let mut alive = vec![true; c + 1];
+
     for k in 1..=ctx.policy.max_iters {
+        // Crash injection: exit cleanly at an iteration boundary; the
+        // server's strike budget discovers the silence.
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break;
+        }
         iterations = k;
         let k64 = k as u64;
 
@@ -227,7 +342,11 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             ep.send_coded(server, TagKind::V, round, STREAM_SLICE, v_jj.as_slice().to_vec(), k64)
         });
         round += 1;
-        let q = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
+        let Some(q) = timer.comm(|| recv_chunk(&ep, server, round, resilient, &recovery)) else {
+            alive[server] = false;
+            stop = StopReason::PeerLoss;
+            break;
+        };
 
         // Convergence check *before* the u-update: err_j = Σ|u∘q − a_j|
         // is the true marginal error of the current (u, v); checking
@@ -237,12 +356,44 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             let local = timer.comp(|| block_err(&u_jj, &q, &shard.a, m, nh, domain));
             let timed_out = ctx.policy.timeout_secs > 0.0
                 && clock.now() > ctx.policy.timeout_secs;
+            let vote = [local, timed_out as u8 as f64];
             round += 1;
-            timer.comm(|| {
-                gather(&ep, server, TagKind::Ctl, round, &[local, timed_out as u8 as f64], k64)
-            });
-            round += 1;
-            let decision = timer.comm(|| bcast(&ep, server, TagKind::Ctl, round, None, k64));
+            let decision = if resilient {
+                timer.comm(|| {
+                    let _ = gather_resilient(
+                        &ep,
+                        server,
+                        TagKind::Ctl,
+                        round,
+                        None,
+                        &vote,
+                        k64,
+                        &mut alive,
+                        &recovery,
+                    );
+                    round += 1;
+                    bcast_resilient(
+                        &ep,
+                        server,
+                        TagKind::Ctl,
+                        round,
+                        None,
+                        None,
+                        k64,
+                        &mut alive,
+                        &recovery,
+                    )
+                })
+            } else {
+                timer.comm(|| gather(&ep, server, TagKind::Ctl, round, &vote, k64));
+                round += 1;
+                Some(timer.comm(|| bcast(&ep, server, TagKind::Ctl, round, None, k64)))
+            };
+            let Some(decision) = decision else {
+                // The server never answered the decision broadcast.
+                stop = StopReason::PeerLoss;
+                break;
+            };
             let total = decision[0];
             final_err = total;
             if ctx.traced {
@@ -268,7 +419,11 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             ep.send_coded(server, TagKind::U, round, STREAM_SLICE, u_jj.as_slice().to_vec(), k64)
         });
         round += 1;
-        let r = timer.comm(|| ep.recv_blocking(server, TagKind::Ctl, round).payload);
+        let Some(r) = timer.comm(|| recv_chunk(&ep, server, round, resilient, &recovery)) else {
+            alive[server] = false;
+            stop = StopReason::PeerLoss;
+            break;
+        };
         timer.comp(|| targets.damped_v_update(&mut v_jj, &r, alpha));
         // Decode cost of the chunks received this iteration.
         timer.add_comp(ep.take_decode_secs());
@@ -286,6 +441,7 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             // Star clients run element-wise updates only — the server
             // owns the kernel operators and their hybrid counters.
             stab: None,
+            lost_peers: lost_of(&alive),
         },
         slices: Some((u_jj, v_jj)),
         trace,
@@ -339,6 +495,17 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     let mut client_iter = vec![0u64; c];
     let bound = ctx.cfg.staleness_bound();
     let mut iterations = 0;
+
+    // Self-healing state (active fault plans only): a client that is
+    // wall-clock silent past the death budget is folded into the done
+    // votes (its chunks stop, the staleness gate skips it) and recorded
+    // lost — the async analogue of `--on-node-loss exclude`.
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(c);
+    let mut dead = vec![false; c];
+    let mut last_heard: Vec<Instant> = vec![Instant::now(); c];
+    let mut crashed = false;
     // A done vote widens the staleness gate (min_live skips the finished
     // client) without any fresh u/v arriving; the pass that observes it
     // must re-send the current products or a newly eligible, blocked
@@ -354,6 +521,12 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     // The server relays until every client reports done; the cap is a
     // safety net (clients are themselves capped at max_iters).
     for s in 1..=(4 * ctx.policy.max_iters) {
+        // Crash injection: the relay goes silent at a pass boundary;
+        // clients discover it through their own death budgets.
+        if crash_at.is_some_and(|ci| s as u64 >= ci) {
+            crashed = true;
+            break;
+        }
         iterations = s;
         let s64 = s as u64;
         // Arrival count *before* this pass's drains: if the whole pass
@@ -368,10 +541,23 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             for j in 0..c {
                 if ep.try_recv_latest(j, TagKind::Ctl, A_TAG + 2).is_some() {
                     done[j] = true;
+                    last_heard[j] = Instant::now();
                     resend = true;
                 }
             }
         });
+        if resilient {
+            // A client that is wall-clock silent past the death budget
+            // has crashed: treat it as done so the relay stops waiting
+            // on it, and remember the loss.
+            for j in 0..c {
+                if !done[j] && last_heard[j].elapsed().as_secs_f64() >= recovery.death_secs() {
+                    done[j] = true;
+                    dead[j] = true;
+                    resend = true;
+                }
+            }
+        }
         if done.iter().all(|&d| d) {
             break;
         }
@@ -382,6 +568,7 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
                 if let Some(msg) = ep.try_recv_latest(j, TagKind::V, A_TAG) {
                     write_block(&mut v_full, &msg.payload, j, m);
                     client_iter[j] = client_iter[j].max(msg.sent_iter);
+                    last_heard[j] = Instant::now();
                     fresh_v = true;
                 }
             }
@@ -403,7 +590,9 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             timer.comm(|| {
                 for j in 0..c {
                     if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
-                        ep.send_coded(
+                        // Latest-wins class: a dropped chunk is simply
+                        // superseded by the next product's.
+                        ep.send_coded_latest(
                             j,
                             TagKind::Ctl,
                             A_TAG,
@@ -422,6 +611,7 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
                 if let Some(msg) = ep.try_recv_latest(j, TagKind::U, A_TAG) {
                     write_block(&mut u_full, &msg.payload, j, m);
                     client_iter[j] = client_iter[j].max(msg.sent_iter);
+                    last_heard[j] = Instant::now();
                     fresh_u = true;
                 }
             }
@@ -434,7 +624,7 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             timer.comm(|| {
                 for j in 0..c {
                     if !done[j] && client_iter[j].saturating_sub(min_live) <= bound {
-                        ep.send_coded(
+                        ep.send_coded_latest(
                             j,
                             TagKind::Ctl,
                             A_TAG + 1,
@@ -471,9 +661,16 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             role: "server",
             timer,
             iterations,
-            stop: StopReason::Converged, // the server has no own criterion
+            // The relay has no convergence criterion of its own; a
+            // crash injection is the one way it stops "for itself".
+            stop: if crashed { StopReason::Dead } else { StopReason::Converged },
             final_err: 0.0,
             stab: StabStats::merged(k_op.stab_stats(), kt_op.stab_stats()),
+            lost_peers: dead
+                .iter()
+                .enumerate()
+                .filter_map(|(j, &d)| d.then_some(j))
+                .collect(),
         },
         slices: None,
         trace: Vec::new(),
@@ -502,10 +699,25 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut final_err = f64::INFINITY;
     let mut iterations = 0;
 
-    // Prime the server with our initial v slice.
-    ep.send_coded(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), 0);
+    // Self-healing state (active fault plans only). A server that stays
+    // wall-clock silent while we are blocked on the staleness gate is
+    // dead — and the kernel owner has no substitute, so it's PeerLoss.
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(id);
+    let mut server_dead = false;
+
+    // Prime the server with our initial v slice (latest-wins, like all
+    // the async scaling traffic: a drop is superseded, never resent).
+    ep.send_coded_latest(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), 0);
 
     for k in 1..=ctx.policy.max_iters {
+        // Crash injection: exit cleanly at an iteration boundary; the
+        // server's death budget folds us into the done set.
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break;
+        }
         iterations = k;
         let k64 = k as u64;
 
@@ -514,6 +726,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // fresh chunk (bounded-delay assumption, see async_a2a docs).
         timer.comm(|| {
             let mut got = false;
+            let wait_start = Instant::now();
             loop {
                 let seen = ep.inbox_seq();
                 if let Some(msg) = ep.try_recv_latest(server, TagKind::Ctl, A_TAG) {
@@ -524,6 +737,10 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 if got || stale_rounds < bound {
                     break;
                 }
+                if resilient && wait_start.elapsed().as_secs_f64() >= recovery.death_secs() {
+                    server_dead = true;
+                    break;
+                }
                 // Over the staleness bound with no fresh chunk: park on
                 // the inbox until traffic moves (or a frame matures)
                 // instead of a fixed busy-sleep.
@@ -531,6 +748,10 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             }
             stale_rounds = if got { 0 } else { stale_rounds + 1 };
         });
+        if server_dead {
+            stop = StopReason::PeerLoss;
+            break;
+        }
 
         // Marginal error of the *current* state against the freshest q
         // (before the u-update — post-update it is (1−α)-scaled and
@@ -543,7 +764,14 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 
         timer.comp(|| targets.damped_u_update(&mut u_jj, &q_latest, alpha));
         timer.comm(|| {
-            ep.send_coded(server, TagKind::U, A_TAG, STREAM_SLICE, u_jj.as_slice().to_vec(), k64)
+            ep.send_coded_latest(
+                server,
+                TagKind::U,
+                A_TAG,
+                STREAM_SLICE,
+                u_jj.as_slice().to_vec(),
+                k64,
+            )
         });
 
         // Freshest r chunk, then the damped v update on it.
@@ -555,7 +783,14 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         });
         timer.comp(|| targets.damped_v_update(&mut v_jj, &r_latest, alpha));
         timer.comm(|| {
-            ep.send_coded(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), k64)
+            ep.send_coded_latest(
+                server,
+                TagKind::V,
+                A_TAG,
+                STREAM_SLICE,
+                v_jj.as_slice().to_vec(),
+                k64,
+            )
         });
         // Dequantizing the chunks consumed this round is receiver CPU work.
         timer.add_comp(ep.take_decode_secs());
@@ -578,8 +813,11 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     }
     timer.add_comp(ep.take_decode_secs());
 
-    // Tell the server we are finished.
-    ep.send(server, TagKind::Ctl, A_TAG + 2, vec![1.0], iterations as u64);
+    // Tell the server we are finished — unless a crash injection took
+    // us out, in which case we go silent and let the death budget talk.
+    if stop != StopReason::Dead {
+        ep.send(server, TagKind::Ctl, A_TAG + 2, vec![1.0], iterations as u64);
+    }
 
     NodeOutcome {
         stats: NodeStats {
@@ -590,6 +828,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             stop,
             final_err,
             stab: None, // element-wise only; the server owns the kernel ops
+            lost_peers: if server_dead { vec![server] } else { Vec::new() },
         },
         slices: Some((u_jj, v_jj)),
         trace,
@@ -609,6 +848,13 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 /// assembled state goes through the ordinary barrier `matvec`. Fleet's
 /// local decide/apply always runs on the assembled state before a
 /// barrier product, exactly as in the pre-streaming protocol.
+///
+/// With `rec` set (active fault plan), the gather is strikes-bounded:
+/// clients still pending after the full death budget are struck dead in
+/// `alive`, their rows stay frozen at the last received slice, and the
+/// product falls back to the barrier `matvec` (a partial accumulation
+/// cannot represent the frozen rows). Already-dead clients are never
+/// waited on, so an `exclude` run pays the budget once per loss.
 #[allow(clippy::too_many_arguments)]
 fn server_product(
     ep: &Endpoint,
@@ -622,30 +868,84 @@ fn server_product(
     fleet: bool,
     tau: f64,
     timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
 ) -> Mat {
     let nh = full.cols();
-    let mut live = stream && op.supports_streaming();
-    if live {
+    let mut folding = stream && op.supports_streaming() && alive.iter().all(|&a| a);
+    if folding {
         op.accum_begin();
     }
-    let mut pending = vec![true; c];
+    let mut pending = alive.to_vec();
     while pending.iter().any(|&p| p) {
-        let msg = timer.comm(|| ep.recv_any_blocking(&pending, kind, round));
+        let msg = match rec {
+            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, round))),
+            Some(rec) => timer.comm(|| {
+                let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
+                (0..rec.strikes.max(1))
+                    .find_map(|_| ep.recv_any_timeout(&pending, kind, round, per_try))
+            }),
+        };
+        let Some(msg) = msg else {
+            // Struck out: everyone still pending is dead. Their rows in
+            // `full` stay frozen; the caller decides abort vs exclude.
+            for (j, p) in pending.iter_mut().enumerate() {
+                if *p {
+                    alive[j] = false;
+                    *p = false;
+                }
+            }
+            folding = false;
+            break;
+        };
         pending[msg.src] = false;
         let r0 = msg.src * m;
         full.as_mut_slice()[r0 * nh..(r0 + m) * nh].copy_from_slice(&msg.payload);
-        if live {
-            live = timer.comp(|| op.accum_fold(r0, m, &msg.payload));
+        if folding {
+            folding = timer.comp(|| op.accum_fold(r0, m, &msg.payload));
         }
     }
     if fleet {
         timer.comp(|| fleet::local_decide_apply(op, full, tau));
     }
-    if live {
+    if folding {
         timer.comp(|| op.accum_matvec().clone())
     } else {
         timer.comp(|| op.matvec(full).clone())
     }
+}
+
+/// Strikes-bounded chunk receive from the star server (the exact path —
+/// chunks are round-tagged). `None` only after the full death budget of
+/// a resilient run; lossless runs block forever, as before.
+fn recv_chunk(
+    ep: &Endpoint,
+    server: usize,
+    round: u64,
+    resilient: bool,
+    rec: &Recovery,
+) -> Option<Vec<f64>> {
+    if !resilient {
+        return Some(ep.recv_blocking(server, TagKind::Ctl, round).payload);
+    }
+    let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
+    (0..rec.strikes.max(1))
+        .find_map(|_| ep.recv_timeout(server, TagKind::Ctl, round, per_try))
+        .map(|msg| msg.payload)
+}
+
+/// Number of live entries in a node mask.
+fn count_alive(alive: &[bool]) -> usize {
+    alive.iter().filter(|&&a| a).count()
+}
+
+/// Ids marked dead in a node mask.
+fn lost_of(alive: &[bool]) -> Vec<usize> {
+    alive
+        .iter()
+        .enumerate()
+        .filter_map(|(j, &a)| (!a).then_some(j))
+        .collect()
 }
 
 /// Per-client marginal targets in the run's numerics domain. Linear

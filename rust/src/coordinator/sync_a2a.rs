@@ -15,9 +15,13 @@ use super::fleet;
 use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
-use crate::net::{allgather, allgather_coded, bcast_coded, gather_coded, Endpoint, TagKind};
+use crate::net::{
+    allgather, allgather_coded, allgather_resilient, bcast_coded, bcast_resilient, gather_coded,
+    gather_resilient, Endpoint, NodeLoss, Recovery, TagKind,
+};
 use crate::runtime::{BlockOp, StabStats, Target};
 use crate::sinkhorn::StopReason;
+use std::time::Duration;
 
 /// Coded-stream ids: each logical stream carries the same quantity
 /// round after round, so the wire codec's delta/error-feedback state
@@ -92,6 +96,15 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut v_accum_live = false;
     let mut u_accum_live = false;
 
+    // Fault-plan resilience: only an *active* plan arms the recovery
+    // timeouts — lossless runs keep the unbounded blocking paths
+    // byte-for-byte. Under loss the reliable ARQ still delivers every
+    // frame, so a strikeout can only mean the sender crashed.
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(id);
+    let mut alive = vec![true; ctx.cfg.clients];
+
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;
     let mut final_err = f64::INFINITY;
@@ -99,6 +112,12 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut round: u64 = 0;
 
     'outer: for k in 1..=ctx.policy.max_iters {
+        // Crash injection: exit cleanly at the iteration boundary —
+        // peers see the silence and strike this node dead.
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break 'outer;
+        }
         iterations = k;
         // Paper Alg. 1: communicate on iterations with mod(k, w) = 0;
         // in between, clients iterate on locally-refreshed state.
@@ -115,31 +134,28 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         copy_slice(&mut u_full, &u_jj, shard.r0);
         if communicate {
             round += 1;
-            if stream {
-                v_accum_live = stream_exchange(
-                    &ep,
-                    TagKind::U,
-                    round,
-                    STREAM_U,
-                    &mut u_full,
-                    shard.r0,
-                    m,
-                    k as u64,
-                    &mut *v_op,
-                    &mut timer,
-                );
-            } else {
-                let u_parts = timer.comm(|| {
-                    allgather_coded(
-                        &ep,
-                        TagKind::U,
-                        round,
-                        STREAM_U,
-                        slice_of(&u_full, shard.r0, m),
-                        k as u64,
-                    )
-                });
-                assemble(&mut u_full, &u_parts, m);
+            let was_alive = count_alive(&alive);
+            v_accum_live = exchange(
+                &ep,
+                TagKind::U,
+                round,
+                STREAM_U,
+                &mut u_full,
+                shard.r0,
+                m,
+                k as u64,
+                &mut *v_op,
+                &mut timer,
+                stream,
+                &mut alive,
+                resilient.then_some(&recovery),
+            );
+            if resilient
+                && count_alive(&alive) < was_alive
+                && recovery.on_node_loss == NodeLoss::Abort
+            {
+                stop = StopReason::PeerLoss;
+                break 'outer;
             }
             if fleet {
                 // Fleet-synchronized absorption for the v-operators
@@ -158,6 +174,8 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                     tau,
                     k as u64,
                     &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
                 );
             }
         }
@@ -173,31 +191,28 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         copy_slice(&mut v_full, &v_jj, shard.r0);
         if communicate {
             round += 1;
-            if stream {
-                u_accum_live = stream_exchange(
-                    &ep,
-                    TagKind::V,
-                    round,
-                    STREAM_V,
-                    &mut v_full,
-                    shard.r0,
-                    m,
-                    k as u64,
-                    &mut *u_op,
-                    &mut timer,
-                );
-            } else {
-                let v_parts = timer.comm(|| {
-                    allgather_coded(
-                        &ep,
-                        TagKind::V,
-                        round,
-                        STREAM_V,
-                        slice_of(&v_full, shard.r0, m),
-                        k as u64,
-                    )
-                });
-                assemble(&mut v_full, &v_parts, m);
+            let was_alive = count_alive(&alive);
+            u_accum_live = exchange(
+                &ep,
+                TagKind::V,
+                round,
+                STREAM_V,
+                &mut v_full,
+                shard.r0,
+                m,
+                k as u64,
+                &mut *u_op,
+                &mut timer,
+                stream,
+                &mut alive,
+                resilient.then_some(&recovery),
+            );
+            if resilient
+                && count_alive(&alive) < was_alive
+                && recovery.on_node_loss == NodeLoss::Abort
+            {
+                stop = StopReason::PeerLoss;
+                break 'outer;
             }
             if fleet {
                 // … and for the u-operators (v-space reference).
@@ -214,6 +229,8 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                     tau,
                     k as u64,
                     &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
                 );
             }
         }
@@ -233,11 +250,47 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             let timed_out = ctx.policy.timeout_secs > 0.0
                 && clock.now() > ctx.policy.timeout_secs;
             round += 1;
-            let parts = timer.comm(|| {
-                allgather(&ep, TagKind::Ctl, round, &[local, timed_out as u8 as f64], k as u64)
-            });
-            let err: f64 = parts.iter().map(|p| p[0]).sum();
-            let any_timeout = parts.iter().any(|p| p[1] > 0.0);
+            // Under `exclude`, dead blocks are frozen and drop out of
+            // the vote — the error is over the surviving slice.
+            let (err, any_timeout) = if resilient {
+                let was_alive = count_alive(&alive);
+                let parts = timer.comm(|| {
+                    allgather_resilient(
+                        &ep,
+                        TagKind::Ctl,
+                        round,
+                        None,
+                        &[local, timed_out as u8 as f64],
+                        k as u64,
+                        &mut alive,
+                        &recovery,
+                    )
+                });
+                if count_alive(&alive) < was_alive
+                    && recovery.on_node_loss == NodeLoss::Abort
+                {
+                    stop = StopReason::PeerLoss;
+                    break 'outer;
+                }
+                (
+                    parts.iter().flatten().map(|p| p[0]).sum(),
+                    parts.iter().flatten().any(|p| p[1] > 0.0),
+                )
+            } else {
+                let parts = timer.comm(|| {
+                    allgather(
+                        &ep,
+                        TagKind::Ctl,
+                        round,
+                        &[local, timed_out as u8 as f64],
+                        k as u64,
+                    )
+                });
+                (
+                    parts.iter().map(|p| p[0]).sum(),
+                    parts.iter().any(|p| p[1] > 0.0),
+                )
+            };
             final_err = err;
             if ctx.traced {
                 trace.push(TracePoint { iter: k, secs: clock.now(), err });
@@ -265,9 +318,73 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             stop,
             final_err, // the AllGathered global error — identical on all nodes
             stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            lost_peers: lost_of(&alive),
         },
         slices: Some((u_op.state().clone(), v_op.state().clone())),
         trace,
+    }
+}
+
+/// Survivor count of a live mask.
+fn count_alive(alive: &[bool]) -> usize {
+    alive.iter().filter(|&&l| l).count()
+}
+
+/// The dead peer ids a live mask records.
+fn lost_of(alive: &[bool]) -> Vec<usize> {
+    alive
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| !l)
+        .map(|(j, _)| j)
+        .collect()
+}
+
+/// One slice exchange: streamed fold, resilient barrier, or the exact
+/// lossless barrier, depending on the run's flags. Returns whether a
+/// streamed fold chain survived (caller finishes with `accum_update`);
+/// barrier paths always return `false`. Under a recovery policy
+/// (`rec = Some`), silent peers are struck dead in `alive` and their
+/// rows of `full` stay frozen at the last received value.
+#[allow(clippy::too_many_arguments)]
+fn exchange(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    stream_id: u64,
+    full: &mut Mat,
+    r0: usize,
+    m: usize,
+    iter: u64,
+    op: &mut dyn BlockOp,
+    timer: &mut SplitTimer,
+    stream: bool,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
+) -> bool {
+    if stream {
+        stream_exchange(ep, kind, round, stream_id, full, r0, m, iter, op, timer, alive, rec)
+    } else if let Some(rec) = rec {
+        let parts = timer.comm(|| {
+            allgather_resilient(
+                ep,
+                kind,
+                round,
+                Some(stream_id),
+                slice_of(full, r0, m),
+                iter,
+                alive,
+                rec,
+            )
+        });
+        assemble_opt(full, &parts, m);
+        false
+    } else {
+        let parts = timer.comm(|| {
+            allgather_coded(ep, kind, round, stream_id, slice_of(full, r0, m), iter)
+        });
+        assemble(full, &parts, m);
+        false
     }
 }
 
@@ -279,7 +396,10 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 /// chain survived (the caller then finishes with `accum_update`); a
 /// `false` means the fully assembled `full` must go through the
 /// ordinary barrier `update` instead — `full` is always completely
-/// assembled on return either way.
+/// assembled on return either way (dead peers' rows frozen). With
+/// `rec = Some`, the delivery-order receive is bounded: after `strikes`
+/// consecutive empty windows every still-missing peer is declared dead
+/// and the fold chain is abandoned (its slices never arrived).
 #[allow(clippy::too_many_arguments)]
 fn stream_exchange(
     ep: &Endpoint,
@@ -292,6 +412,8 @@ fn stream_exchange(
     iter: u64,
     op: &mut dyn BlockOp,
     timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
 ) -> bool {
     let me = ep.id();
     let c = ep.nodes();
@@ -299,7 +421,7 @@ fn stream_exchange(
     let mine: Vec<f64> = slice_of(full, r0, m).to_vec();
     timer.comm(|| {
         for dst in 0..c {
-            if dst != me {
+            if dst != me && alive[dst] {
                 ep.send_coded(dst, kind, round, stream, mine.clone(), iter);
             }
         }
@@ -311,10 +433,38 @@ fn stream_exchange(
         // are still in flight.
         live = timer.comp(|| op.accum_fold(r0, m, &mine));
     }
-    let mut pending = vec![true; c];
+    let mut pending = alive.to_vec();
     pending[me] = false;
     while pending.iter().any(|&p| p) {
-        let msg = timer.comm(|| ep.recv_any_blocking(&pending, kind, round));
+        let msg = match rec {
+            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, round))),
+            Some(rec) => {
+                let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
+                let mut got = None;
+                for _ in 0..rec.strikes.max(1) {
+                    if let Some(msg) =
+                        timer.comm(|| ep.recv_any_timeout(&pending, kind, round, per_try))
+                    {
+                        got = Some(msg);
+                        break;
+                    }
+                }
+                got
+            }
+        };
+        let Some(msg) = msg else {
+            // Strikeout: every still-missing peer is dead. Their rows of
+            // `full` stay frozen; the incomplete fold chain is abandoned
+            // so the caller re-runs the product on the assembled state.
+            for (j, p) in pending.iter_mut().enumerate() {
+                if *p {
+                    alive[j] = false;
+                    *p = false;
+                }
+            }
+            live = false;
+            break;
+        };
         pending[msg.src] = false;
         let peer_r0 = msg.src * m;
         full.as_mut_slice()[peer_r0 * nh..(peer_r0 + m) * nh].copy_from_slice(&msg.payload);
@@ -349,13 +499,44 @@ fn fleet_sync(
     tau: f64,
     iter: u64,
     timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
 ) {
     let payload = timer.comp(|| match op.fleet_probe(x_full, r0, m) {
         Some(p) => fleet::probe_payload(0, &p),
         None => fleet::degraded_payload(0),
     });
-    let parts =
-        timer.comm(|| gather_coded(ep, 0, TagKind::Gref, base_round - 1, stream, &payload, iter));
+    // A dead peer's missing probe is substituted with the degraded
+    // payload, which makes `decide` hold — fleet absorption freezes
+    // while the fleet is degraded rather than re-absorbing against a
+    // partial view (the fleet.rs hold state, reachable from real
+    // faults). A dead rank 0 means no commands ever again: survivors
+    // keep their current references (absorption stays exact for any
+    // reference — only rebuild cadence degrades).
+    let parts: Option<Vec<Vec<f64>>> = match rec {
+        None => timer
+            .comm(|| gather_coded(ep, 0, TagKind::Gref, base_round - 1, stream, &payload, iter)),
+        Some(rec) => timer
+            .comm(|| {
+                gather_resilient(
+                    ep,
+                    0,
+                    TagKind::Gref,
+                    base_round - 1,
+                    Some(stream),
+                    &payload,
+                    iter,
+                    alive,
+                    rec,
+                )
+            })
+            .map(|parts| {
+                parts
+                    .into_iter()
+                    .map(|p| p.unwrap_or_else(|| fleet::degraded_payload(0)))
+                    .collect()
+            }),
+    };
     let reply = if let Some(parts) = parts {
         // Rank 0: merge + decide, then broadcast the verdict.
         let refs: Vec<&[f64]> = parts.iter().map(|p| p.as_slice()).collect();
@@ -364,14 +545,49 @@ fn fleet_sync(
             Some(cmd) => fleet::command_payload(0, cmd),
             None => fleet::hold_payload(0),
         };
-        timer.comm(|| {
-            bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, Some(&payload), iter)
-        })
+        match rec {
+            None => Some(timer.comm(|| {
+                bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, Some(&payload), iter)
+            })),
+            Some(rec) => timer.comm(|| {
+                bcast_resilient(
+                    ep,
+                    0,
+                    TagKind::Gref,
+                    base_round,
+                    Some(stream + 1),
+                    Some(&payload),
+                    iter,
+                    alive,
+                    rec,
+                )
+            }),
+        }
     } else {
-        timer.comm(|| bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, None, iter))
+        match rec {
+            None => Some(
+                timer
+                    .comm(|| bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, None, iter)),
+            ),
+            Some(rec) => timer.comm(|| {
+                bcast_resilient(
+                    ep,
+                    0,
+                    TagKind::Gref,
+                    base_round,
+                    Some(stream + 1),
+                    None,
+                    iter,
+                    alive,
+                    rec,
+                )
+            }),
+        }
     };
-    if let (_, Some((needed, gref))) = fleet::parse_command(&reply) {
-        timer.comp(|| op.fleet_absorb(gref, needed));
+    if let Some(reply) = reply {
+        if let (_, Some((needed, gref))) = fleet::parse_command(&reply) {
+            timer.comp(|| op.fleet_absorb(gref, needed));
+        }
     }
 }
 
@@ -394,5 +610,17 @@ fn assemble(full: &mut Mat, parts: &[Vec<f64>], m: usize) {
     for (j, part) in parts.iter().enumerate() {
         debug_assert_eq!(part.len(), m * nh);
         full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(part);
+    }
+}
+
+/// [`assemble`] over resilient parts: a dead peer's `None` slot leaves
+/// its rows of `full` frozen at the last received value.
+fn assemble_opt(full: &mut Mat, parts: &[Option<Vec<f64>>], m: usize) {
+    let nh = full.cols();
+    for (j, part) in parts.iter().enumerate() {
+        if let Some(part) = part {
+            debug_assert_eq!(part.len(), m * nh);
+            full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(part);
+        }
     }
 }

@@ -14,7 +14,7 @@ use crate::config::{BackendKind, SolveConfig, Variant};
 use crate::coordinator::run_federated;
 use crate::jsonio::Json;
 use crate::metrics::Summary;
-use crate::net::LatencyModel;
+use crate::net::{FaultPlan, LatencyModel, Recovery};
 use crate::sinkhorn::{StopPolicy, StopReason};
 use crate::workload::ProblemSpec;
 
@@ -31,6 +31,11 @@ pub struct RobustnessArgs {
     pub sweep_alpha: Option<Vec<f64>>,
     pub backend: BackendKind,
     pub out: Option<String>,
+    /// Fault plan replayed in every cell run (inactive by default) and
+    /// the recovery policy that answers it — the chaos columns of the
+    /// grid report what the plan actually did.
+    pub faults: FaultPlan,
+    pub recovery: Recovery,
 }
 
 impl RobustnessArgs {
@@ -54,6 +59,8 @@ impl RobustnessArgs {
             sweep_alpha: None,
             backend: BackendKind::Native,
             out: None,
+            faults: FaultPlan::none(),
+            recovery: Recovery::default(),
         }
     }
 }
@@ -63,6 +70,12 @@ struct GridCell {
     pct_conv: f64,
     pct_timeout: f64,
     pct_div: f64,
+    /// % of runs that lost a node (crash injection or struck peer).
+    pct_lost: f64,
+    /// Fault-layer counters summed across the cell's runs.
+    drops: u64,
+    dups: u64,
+    retransmits: u64,
 }
 
 pub fn run(args: &RobustnessArgs) -> anyhow::Result<Json> {
@@ -86,16 +99,18 @@ pub fn run(args: &RobustnessArgs) -> anyhow::Result<Json> {
                 String::new()
             });
             println!(
-                "{:>8} {:>8} {:>12} {:>10} {:>10} {:>10}",
-                "limit", "thresh", "avg time(s)", "% conv", "% t/out", "% div"
+                "{:>8} {:>8} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}",
+                "limit", "thresh", "avg time(s)", "% conv", "% t/out", "% div", "% lost",
+                "drops", "dups", "rexmit"
             );
             let mut cells = Vec::new();
             for (tl_label, timeout) in &args.timeouts {
                 for (th_label, threshold) in &args.thresholds {
                     let cell = grid_cell(args, *variant, c, *alpha, *threshold, *timeout);
                     println!(
-                        "{:>8} {:>8} {:>12.2} {:>10.1} {:>10.1} {:>10.1}",
-                        tl_label, th_label, cell.avg_secs, cell.pct_conv, cell.pct_timeout, cell.pct_div
+                        "{:>8} {:>8} {:>12.2} {:>10.1} {:>10.1} {:>10.1} {:>10.1} {:>8} {:>8} {:>8}",
+                        tl_label, th_label, cell.avg_secs, cell.pct_conv, cell.pct_timeout,
+                        cell.pct_div, cell.pct_lost, cell.drops, cell.dups, cell.retransmits
                     );
                     cells.push(Json::obj(vec![
                         ("limit", (*tl_label).into()),
@@ -104,6 +119,10 @@ pub fn run(args: &RobustnessArgs) -> anyhow::Result<Json> {
                         ("pct_convergence", cell.pct_conv.into()),
                         ("pct_timeout", cell.pct_timeout.into()),
                         ("pct_divergence", cell.pct_div.into()),
+                        ("pct_node_loss", cell.pct_lost.into()),
+                        ("drops", (cell.drops as f64).into()),
+                        ("dups", (cell.dups as f64).into()),
+                        ("retransmits", (cell.retransmits as f64).into()),
                     ]));
                 }
             }
@@ -154,7 +173,8 @@ fn grid_cell(
     timeout: f64,
 ) -> GridCell {
     let mut times = Vec::new();
-    let (mut conv, mut tout, mut div) = (0usize, 0usize, 0usize);
+    let (mut conv, mut tout, mut div, mut lost) = (0usize, 0usize, 0usize, 0usize);
+    let (mut drops, mut dups, mut retransmits) = (0u64, 0u64, 0u64);
     for r in 0..args.runs {
         // Randomized inputs per simulation (paper: "new random inputs
         // were generated for each simulation").
@@ -173,15 +193,26 @@ fn grid_cell(
             alpha,
             net: LatencyModel::lan(),
             seed: 100 + r as u64,
+            faults: args.faults.clone(),
+            recovery: args.recovery,
             ..Default::default()
         };
         let out = run_federated(&p, &cfg, policy, false);
         times.push(out.secs);
+        if out.degraded {
+            lost += 1;
+        }
         match out.stop {
             StopReason::Converged => conv += 1,
             StopReason::Timeout => tout += 1,
             StopReason::MaxIters => div += 1,
+            // Node-loss terminations: a crash injection emptied the run
+            // or the recovery policy aborted on a struck peer.
+            StopReason::Dead | StopReason::PeerLoss => div += 1,
         }
+        drops += out.traffic.drops;
+        dups += out.traffic.dups;
+        retransmits += out.traffic.retransmits;
     }
     let pct = |k: usize| 100.0 * k as f64 / args.runs as f64;
     GridCell {
@@ -189,5 +220,9 @@ fn grid_cell(
         pct_conv: pct(conv),
         pct_timeout: pct(tout),
         pct_div: pct(div),
+        pct_lost: pct(lost),
+        drops,
+        dups,
+        retransmits,
     }
 }

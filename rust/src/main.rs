@@ -176,6 +176,102 @@ fn wire_of(p: &Parsed) -> anyhow::Result<WireFormat> {
         .ok_or_else(|| anyhow::anyhow!("bad --wire-format (expected f64|f32|deltaf32)"))
 }
 
+/// Chaos flag group (solve/robustness): a deterministic fault plan plus
+/// the recovery policy that answers it. All probabilities apply to every
+/// link; crash/straggler injections target one node.
+fn fault_spec(spec: ArgSpec) -> ArgSpec {
+    spec.opt("drop-prob", "P", "0", "per-attempt frame drop probability on every link")
+        .opt("dup-prob", "P", "0", "per-frame duplicate-delivery probability")
+        .opt("reorder-prob", "P", "0", "per-frame reorder probability")
+        .opt("fault-spike-prob", "P", "0", "fault-layer delay-spike probability")
+        .opt("fault-spike-mult", "M", "8", "delay multiplier when a spike fires")
+        .opt(
+            "crash-at",
+            "NODE:ITER",
+            "",
+            "crash injection: NODE exits silently at local iteration ITER \
+             (bare ITER = node 0; star servers are node C)",
+        )
+        .opt("straggler", "NODE:MULT", "", "multiply every send delay of NODE by MULT")
+        .opt("fault-seed", "U64", "7", "fault-schedule seed (independent of --seed)")
+        .opt(
+            "recv-timeout",
+            "SECS",
+            "0.5",
+            "per-attempt receive timeout once the fault plan is active",
+        )
+        .opt("strikes", "R", "4", "consecutive timeouts before a peer is declared dead")
+        .opt(
+            "on-node-loss",
+            "MODE",
+            "abort",
+            "abort|exclude: stop with a structured partial outcome, or freeze \
+             the dead node's slice and continue degraded (sync protocols)",
+        )
+}
+
+fn faults_of(p: &Parsed) -> anyhow::Result<fedsink::net::FaultPlan> {
+    let mut plan = fedsink::net::FaultPlan::none();
+    plan.seed = p.get_u64("fault-seed")?;
+    plan.default_link.drop_prob = p.get_f64("drop-prob")?;
+    plan.default_link.dup_prob = p.get_f64("dup-prob")?;
+    plan.default_link.reorder_prob = p.get_f64("reorder-prob")?;
+    plan.default_link.delay_spike =
+        (p.get_f64("fault-spike-prob")?, p.get_f64("fault-spike-mult")?);
+    for prob in [
+        plan.default_link.drop_prob,
+        plan.default_link.dup_prob,
+        plan.default_link.reorder_prob,
+        plan.default_link.delay_spike.0,
+    ] {
+        anyhow::ensure!((0.0..=1.0).contains(&prob), "fault probabilities must be in [0, 1]");
+    }
+    if let Some(s) = p.get("crash-at") {
+        if !s.is_empty() {
+            let (node, iter) = match s.split_once(':') {
+                Some((n, i)) => (
+                    n.parse()
+                        .map_err(|_| anyhow::anyhow!("bad --crash-at node (expected NODE:ITER)"))?,
+                    i.parse()
+                        .map_err(|_| anyhow::anyhow!("bad --crash-at iter (expected NODE:ITER)"))?,
+                ),
+                None => (
+                    0usize,
+                    s.parse()
+                        .map_err(|_| anyhow::anyhow!("bad --crash-at (expected ITER or NODE:ITER)"))?,
+                ),
+            };
+            plan.nodes.entry(node).or_default().crash_at_iter = Some(iter);
+        }
+    }
+    if let Some(s) = p.get("straggler") {
+        if !s.is_empty() {
+            let (node, mult) = s
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad --straggler (expected NODE:MULT)"))?;
+            let node: usize = node
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --straggler node (expected NODE:MULT)"))?;
+            let mult: f64 = mult
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad --straggler mult (expected NODE:MULT)"))?;
+            anyhow::ensure!(mult >= 1.0, "--straggler multiplier must be >= 1");
+            plan.nodes.entry(node).or_default().straggler_mult = mult;
+        }
+    }
+    Ok(plan)
+}
+
+fn recovery_of(p: &Parsed) -> anyhow::Result<fedsink::net::Recovery> {
+    let on_node_loss = fedsink::net::NodeLoss::parse(p.get("on-node-loss").unwrap_or("abort"))
+        .ok_or_else(|| anyhow::anyhow!("bad --on-node-loss (expected abort|exclude)"))?;
+    let recv_timeout_secs = p.get_f64("recv-timeout")?;
+    anyhow::ensure!(recv_timeout_secs > 0.0, "--recv-timeout must be positive");
+    let strikes = p.get_u64("strikes")? as u32;
+    anyhow::ensure!(strikes >= 1, "--strikes must be >= 1");
+    Ok(fedsink::net::Recovery { recv_timeout_secs, strikes, on_node_loss })
+}
+
 fn domain_of(p: &Parsed) -> anyhow::Result<DomainChoice> {
     match p.get("domain") {
         // `env` defers to FEDSINK_DOMAIN / the FEDSINK_CONFIG file
@@ -277,7 +373,7 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
                  reference dual and every node re-absorbs in lock-step",
             ),
     );
-    let spec = wire_spec(spec);
+    let spec = fault_spec(wire_spec(spec));
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
     let threads = threads_of(&p)?;
     let variant = Variant::parse(p.get("variant").unwrap())
@@ -312,6 +408,8 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         stream_exchange: p.has("stream-exchange"),
         wire_keyframe_every: p.get_usize("wire-keyframe-every")?,
         compute_threads: threads,
+        faults: faults_of(&p)?,
+        recovery: recovery_of(&p)?,
         ..Default::default()
     };
     if cfg.stab.fleet_absorb {
@@ -393,6 +491,21 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
             if cfg.stream_exchange { ", streamed" } else { "" },
             out.traffic.total_bytes,
             per.join(", ")
+        );
+    }
+    let t = &out.traffic;
+    if t.drops + t.dups + t.reorders + t.retransmits + t.spikes > 0 {
+        println!(
+            "  faults: drops={} dups={} reorders={} retransmits={} spikes={}",
+            t.drops, t.dups, t.reorders, t.retransmits, t.spikes
+        );
+    }
+    if out.degraded {
+        println!(
+            "  degraded: lost nodes {:?} ({} of {} survived)",
+            out.lost_nodes,
+            out.node_stats.len() - out.lost_nodes.len(),
+            out.node_stats.len()
         );
     }
     Ok(())
@@ -541,16 +654,18 @@ fn cmd_stepsize(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_robustness(args: &[String]) -> anyhow::Result<()> {
-    let spec = common_spec(
+    let spec = common_spec(fault_spec(
         ArgSpec::new()
             .switch("sweep-alpha", "add the Fig 13 alpha sweep")
             .opt("runs", "R", "0", "runs per grid cell (0 = scale default)"),
-    );
+    ));
     let p = spec.parse("robustness", args).map_err(anyhow::Error::new)?;
     threads_of(&p)?;
     let mut a = experiments::robustness::RobustnessArgs::at_scale(scale_of(&p));
     a.backend = backend_of(&p)?;
     a.out = out_of(&p);
+    a.faults = faults_of(&p)?;
+    a.recovery = recovery_of(&p)?;
     if p.get_usize("runs")? > 0 {
         a.runs = p.get_usize("runs")?;
     }

@@ -6,7 +6,9 @@
 //! with ≤ 8 nodes the paper's clusters never justify tree algorithms,
 //! and flat keeps per-node comm time directly interpretable.
 
+use super::faults::Recovery;
 use super::{Endpoint, TagKind};
+use std::time::Duration;
 
 /// AllGather: contribute `mine`, get back every node's part (indexed by
 /// node id; `parts[me]` is a copy of `mine`).
@@ -206,4 +208,156 @@ fn bcast_impl(
 /// Barrier: an empty AllGather on the control tag.
 pub fn barrier(ep: &Endpoint, round: u64) {
     let _ = allgather(ep, TagKind::Ctl, round, &[], 0);
+}
+
+// ---------------------------------------------------------------------
+// Resilient collectives (fault-plan runs only).
+//
+// Same flat shape as the exact collectives, but every receive is bounded
+// by the recovery policy: `strikes` consecutive per-attempt timeouts on
+// one peer declare it dead (`live[peer] = false`), the slot comes back
+// `None`, and the collective completes over the survivors. Because the
+// reliable streams always deliver (fast-forward ARQ), a missing frame
+// can only mean the sender is gone — a strikeout is a death verdict,
+// not packet loss. The sync protocols are lock-step, so every survivor
+// waits on the same missing frame and converges on the same live set at
+// the same round.
+
+/// Receive `(src, kind, round)` under the recovery policy: up to
+/// `strikes` attempts of `recv_timeout_secs` each; `None` = peer dead.
+fn recv_striked(
+    ep: &Endpoint,
+    src: usize,
+    kind: TagKind,
+    round: u64,
+    rec: &Recovery,
+) -> Option<Vec<f64>> {
+    let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
+    for _ in 0..rec.strikes.max(1) {
+        if let Some(m) = ep.recv_timeout(src, kind, round, per_try) {
+            return Some(m.payload);
+        }
+    }
+    None
+}
+
+/// [`allgather`] bounded by the recovery policy: exchanges only with
+/// peers still flagged in `live`, strikes silent peers dead, and
+/// returns `None` in a dead peer's slot. `stream = Some(s)` rides the
+/// wire codec like [`allgather_coded`].
+#[allow(clippy::too_many_arguments)]
+pub fn allgather_resilient(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    stream: Option<u64>,
+    mine: &[f64],
+    iter: u64,
+    live: &mut [bool],
+    rec: &Recovery,
+) -> Vec<Option<Vec<f64>>> {
+    let me = ep.id();
+    let c = ep.nodes();
+    assert_eq!(live.len(), c, "live mask must cover every node");
+    for dst in 0..c {
+        if dst != me && live[dst] {
+            match stream {
+                Some(s) => ep.send_coded(dst, kind, round, s, mine.to_vec(), iter),
+                None => ep.send(dst, kind, round, mine.to_vec(), iter),
+            }
+        }
+    }
+    let mut parts: Vec<Option<Vec<f64>>> = vec![None; c];
+    parts[me] = Some(mine.to_vec());
+    for src in 0..c {
+        if src != me && live[src] {
+            match recv_striked(ep, src, kind, round, rec) {
+                Some(p) => parts[src] = Some(p),
+                None => live[src] = false,
+            }
+        }
+    }
+    parts
+}
+
+/// [`gather`] bounded by the recovery policy. The root strikes silent
+/// peers dead and returns `Some(parts)` with `None` slots for them;
+/// non-root nodes contribute (skipping a dead root) and return `None`.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_resilient(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    stream: Option<u64>,
+    mine: &[f64],
+    iter: u64,
+    live: &mut [bool],
+    rec: &Recovery,
+) -> Option<Vec<Option<Vec<f64>>>> {
+    let me = ep.id();
+    assert_eq!(live.len(), ep.nodes(), "live mask must cover every node");
+    if me == root {
+        let mut parts: Vec<Option<Vec<f64>>> = vec![None; ep.nodes()];
+        parts[me] = Some(mine.to_vec());
+        for src in 0..ep.nodes() {
+            if src != root && live[src] {
+                match recv_striked(ep, src, kind, round, rec) {
+                    Some(p) => parts[src] = Some(p),
+                    None => live[src] = false,
+                }
+            }
+        }
+        Some(parts)
+    } else {
+        if live[root] {
+            match stream {
+                Some(s) => ep.send_coded(root, kind, round, s, mine.to_vec(), iter),
+                None => ep.send(root, kind, round, mine.to_vec(), iter),
+            }
+        }
+        None
+    }
+}
+
+/// [`bcast`] bounded by the recovery policy: the root sends to live
+/// peers only; a non-root that strikes out on the root marks it dead
+/// and gets `None` — for the star clients that is the server-loss
+/// signal (`StopReason::PeerLoss`).
+#[allow(clippy::too_many_arguments)]
+pub fn bcast_resilient(
+    ep: &Endpoint,
+    root: usize,
+    kind: TagKind,
+    round: u64,
+    stream: Option<u64>,
+    data: Option<&[f64]>,
+    iter: u64,
+    live: &mut [bool],
+    rec: &Recovery,
+) -> Option<Vec<f64>> {
+    let me = ep.id();
+    assert_eq!(live.len(), ep.nodes(), "live mask must cover every node");
+    if me == root {
+        let data = data.expect("root must provide data");
+        for dst in 0..ep.nodes() {
+            if dst != root && live[dst] {
+                match stream {
+                    Some(s) => ep.send_coded(dst, kind, round, s, data.to_vec(), iter),
+                    None => ep.send(dst, kind, round, data.to_vec(), iter),
+                }
+            }
+        }
+        Some(data.to_vec())
+    } else if !live[root] {
+        None
+    } else {
+        match recv_striked(ep, root, kind, round, rec) {
+            Some(p) => Some(p),
+            None => {
+                live[root] = false;
+                None
+            }
+        }
+    }
 }

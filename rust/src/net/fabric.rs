@@ -1,5 +1,6 @@
 //! Mailbox fabric: per-node inboxes with delivery deadlines.
 
+use super::faults::{self, FaultPlan, FrameFaults};
 use super::wire::{self, StreamCodec, WireFormat};
 use super::LatencyModel;
 use crate::rng::{child_seed, Rng};
@@ -60,6 +61,25 @@ impl TagKind {
 /// stamp) on top of the encoded frame.
 const MSG_HEADER_BYTES: usize = 64;
 
+/// A gap-detection nack is a header-only control frame; each failed
+/// attempt of a reliable frame is priced as frame-out + nack-back.
+const NACK_FRAME_BYTES: usize = MSG_HEADER_BYTES;
+
+/// `FEDSINK_STALL_SECS` — stall watchdog of the unbounded blocking
+/// receives: after this many seconds without a matching deliverable
+/// frame the node panics with a dump of its pending inbox instead of
+/// hanging silently. Unset/non-positive = off (the default). Read per
+/// receive so tests can toggle it.
+fn stall_limit() -> Option<Duration> {
+    parse_stall(std::env::var("FEDSINK_STALL_SECS").ok().as_deref())
+}
+
+fn parse_stall(v: Option<&str>) -> Option<Duration> {
+    v.and_then(|s| s.trim().parse::<f64>().ok())
+        .filter(|&s| s > 0.0)
+        .map(Duration::from_secs_f64)
+}
+
 /// One in-flight message.
 #[derive(Clone, Debug)]
 pub struct Message {
@@ -74,6 +94,10 @@ pub struct Message {
     pub payload: Vec<f64>,
     /// Sender's local iteration when it sent (staleness accounting).
     pub sent_iter: u64,
+    /// Per-link send sequence number (0 when the fault layer is
+    /// inactive). A duplicated frame's copies share it — the receive
+    /// paths sweep same-`(src, kind, tag, seq)` siblings on take.
+    pub seq: u64,
     /// Receiver-side decode cost of this frame (seconds), stamped at
     /// enqueue from the latency model's per-byte decode term — the
     /// receiving endpoint accumulates it on receive and the coordinator
@@ -102,6 +126,15 @@ pub struct NetTraffic {
     pub total_msgs: u64,
     /// `(kind name, bytes, messages)` in [`TagKind::ALL`] order.
     pub by_kind: Vec<(&'static str, u64, u64)>,
+    /// Fault-layer counters (all zero when the [`FaultPlan`] is
+    /// inactive): lost transmission attempts, delivered duplicate
+    /// copies, reordered frames, backoff-priced retransmissions on the
+    /// reliable streams, and fault-layer delay spikes.
+    pub drops: u64,
+    pub dups: u64,
+    pub reorders: u64,
+    pub retransmits: u64,
+    pub spikes: u64,
 }
 
 impl NetTraffic {
@@ -130,6 +163,20 @@ pub struct SimNet {
     /// global and would otherwise serialize every sender).
     kind_bytes: [AtomicU64; 4],
     kind_msgs: [AtomicU64; 4],
+    /// Fault-injection schedule (`FaultPlan::none()` = lossless fabric,
+    /// the byte-for-byte pre-fault send/receive paths).
+    faults: FaultPlan,
+    /// Per-link send sequence counters, indexed `src · nodes + dst`.
+    /// Each counter is only ever advanced by node `src`'s own sends, so
+    /// the sequence a frame draws its fault roll from is program order
+    /// on one thread — deterministic at any thread interleaving.
+    link_seq: Vec<AtomicU64>,
+    /// Fault counters: drops, dups, reorders, retransmits, spikes.
+    n_drops: AtomicU64,
+    n_dups: AtomicU64,
+    n_reorders: AtomicU64,
+    n_retransmits: AtomicU64,
+    n_spikes: AtomicU64,
 }
 
 impl SimNet {
@@ -148,6 +195,13 @@ impl SimNet {
             keyframe_every: 0,
             kind_bytes: Default::default(),
             kind_msgs: Default::default(),
+            faults: FaultPlan::none(),
+            link_seq: (0..nodes * nodes).map(|_| AtomicU64::new(0)).collect(),
+            n_drops: AtomicU64::new(0),
+            n_dups: AtomicU64::new(0),
+            n_reorders: AtomicU64::new(0),
+            n_retransmits: AtomicU64::new(0),
+            n_spikes: AtomicU64::new(0),
         }
     }
 
@@ -156,6 +210,18 @@ impl SimNet {
     pub fn with_keyframe_every(mut self, k: usize) -> Self {
         self.keyframe_every = k;
         self
+    }
+
+    /// Builder: inject faults per `plan`. An inactive plan leaves every
+    /// send/receive path on the lossless code.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = plan;
+        self
+    }
+
+    /// The fault schedule this fabric runs under.
+    pub fn faults(&self) -> &FaultPlan {
+        &self.faults
     }
 
     pub fn nodes(&self) -> usize {
@@ -192,6 +258,11 @@ impl SimNet {
             total_bytes: by_kind.iter().map(|&(_, b, _)| b).sum(),
             total_msgs: by_kind.iter().map(|&(_, _, m)| m).sum(),
             by_kind,
+            drops: self.n_drops.load(Ordering::Relaxed),
+            dups: self.n_dups.load(Ordering::Relaxed),
+            reorders: self.n_reorders.load(Ordering::Relaxed),
+            retransmits: self.n_retransmits.load(Ordering::Relaxed),
+            spikes: self.n_spikes.load(Ordering::Relaxed),
         }
     }
 
@@ -205,8 +276,14 @@ impl SimNet {
             id,
             rng: Mutex::new(Rng::seed_from(child_seed(self.seed, id as u64))),
             codecs: Mutex::new(HashMap::new()),
+            release: Mutex::new(HashMap::new()),
             decode_nanos: AtomicU64::new(0),
         }
+    }
+
+    /// Reserve the next send sequence number of link `(src, dst)`.
+    fn next_link_seq(&self, src: usize, dst: usize) -> u64 {
+        self.link_seq[src * self.nodes() + dst].fetch_add(1, Ordering::Relaxed)
     }
 }
 
@@ -220,6 +297,14 @@ pub struct Endpoint {
     /// [`Endpoint::send_coded`] consults it; exact control sends bypass
     /// the map entirely.
     codecs: Mutex<HashMap<(usize, TagKind, u64), StreamCodec>>,
+    /// In-order release clamp of the reliable streams under faults: the
+    /// latest delivery deadline enqueued per `(dst, kind)`. A frame
+    /// delayed by retransmit backoff holds every later frame of the
+    /// same stream behind it (TCP-style head-of-line blocking), so
+    /// recovery delay propagates honestly instead of being absorbed by
+    /// out-of-order delivery. Untouched when the fault plan is
+    /// inactive.
+    release: Mutex<HashMap<(usize, TagKind), Instant>>,
     /// Receiver-side decode seconds accumulated (as nanos) across every
     /// message this endpoint has received since the last
     /// [`Endpoint::take_decode_secs`] drain.
@@ -239,10 +324,13 @@ impl Endpoint {
     /// the latency model and enqueues at the destination. This is the
     /// *exact* path — control payloads (votes, barriers, convergence
     /// decisions) must never be quantized, or nodes could disagree on
-    /// lock-step stopping.
+    /// lock-step stopping. Under a [`FaultPlan`] this is a *reliable*
+    /// stream: dropped attempts are retransmitted (backoff-priced into
+    /// the delivery deadline and the byte counters), so the frame
+    /// always arrives.
     pub fn send(&self, dst: usize, kind: TagKind, tag: u64, payload: Vec<f64>, sent_iter: u64) {
         let bytes = wire::f64_frame_bytes(payload.len());
-        self.enqueue(dst, kind, tag, bytes, payload, sent_iter);
+        self.enqueue(dst, kind, tag, bytes, payload, sent_iter, true);
     }
 
     /// Send through the fabric's wire codec on stream `stream` (a stable
@@ -251,7 +339,8 @@ impl Endpoint {
     /// unrelated content). Latency and the byte counters are priced on
     /// the *encoded* frame; the payload delivered is the decoder's
     /// reconstruction. With the default [`WireFormat::F64`] this is
-    /// byte-identical to [`Endpoint::send`].
+    /// byte-identical to [`Endpoint::send`]. Reliable under faults,
+    /// like [`Endpoint::send`].
     pub fn send_coded(
         &self,
         dst: usize,
@@ -260,6 +349,39 @@ impl Endpoint {
         stream: u64,
         payload: Vec<f64>,
         sent_iter: u64,
+    ) {
+        self.send_coded_class(dst, kind, tag, stream, payload, sent_iter, true);
+    }
+
+    /// [`Endpoint::send_coded`] on a *latest-wins* stream (async duals,
+    /// fleet probes/commands, async-star chunks): the next send
+    /// supersedes this frame, so under a [`FaultPlan`] a dropped or
+    /// reordered frame is not retransmitted — it is lost (priced and
+    /// counted, never delivered) and a DeltaF32 stream re-keys so the
+    /// next delivered frame is an absolute keyframe and reconstruction
+    /// never diverges.
+    pub fn send_coded_latest(
+        &self,
+        dst: usize,
+        kind: TagKind,
+        tag: u64,
+        stream: u64,
+        payload: Vec<f64>,
+        sent_iter: u64,
+    ) {
+        self.send_coded_class(dst, kind, tag, stream, payload, sent_iter, false);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn send_coded_class(
+        &self,
+        dst: usize,
+        kind: TagKind,
+        tag: u64,
+        stream: u64,
+        payload: Vec<f64>,
+        sent_iter: u64,
+        reliable: bool,
     ) {
         let (bytes, payload) = if self.net.wire == WireFormat::F64 {
             (wire::f64_frame_bytes(payload.len()), payload)
@@ -273,9 +395,20 @@ impl Endpoint {
             let enc = codec.encode(payload);
             (enc.bytes, enc.payload)
         };
-        self.enqueue(dst, kind, tag, bytes, payload, sent_iter);
+        let delivered = self.enqueue(dst, kind, tag, bytes, payload, sent_iter, reliable);
+        if !delivered && self.net.wire != WireFormat::F64 {
+            // The receiver never saw this frame: force the next frame
+            // of the stream to an absolute keyframe.
+            if let Some(codec) = self.codecs.lock().unwrap().get_mut(&(dst, kind, stream)) {
+                codec.rekey();
+            }
+        }
     }
 
+    /// Returns whether the frame was delivered (always true on reliable
+    /// streams; false when a latest-wins frame is lost to the fault
+    /// schedule).
+    #[allow(clippy::too_many_arguments)]
     fn enqueue(
         &self,
         dst: usize,
@@ -284,32 +417,109 @@ impl Endpoint {
         frame_bytes: usize,
         payload: Vec<f64>,
         sent_iter: u64,
-    ) {
+        reliable: bool,
+    ) -> bool {
         let bytes = frame_bytes + MSG_HEADER_BYTES;
-        let delay = {
+        let faulty = self.net.faults.is_active();
+        let (seq, faults) = if faulty {
+            let seq = self.net.next_link_seq(self.id, dst);
+            (seq, self.net.faults.roll(self.id, dst, seq))
+        } else {
+            (0, FrameFaults::none())
+        };
+        let mut delay = {
             let mut rng = self.rng.lock().unwrap();
             self.net.latency.delay_secs(bytes, &mut rng)
         };
+        // The surviving attempt's traffic.
         self.net.kind_bytes[kind.index()].fetch_add(bytes as u64, Ordering::Relaxed);
         self.net.kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
+        let mut lost = false;
+        if faulty {
+            let rto = faults::rto_secs(&self.net.latency, bytes);
+            if faults.spike_mult > 1.0 {
+                self.net.n_spikes.fetch_add(1, Ordering::Relaxed);
+                delay *= faults.spike_mult;
+            }
+            if faults.drops > 0 {
+                self.net.n_drops.fetch_add(faults.drops as u64, Ordering::Relaxed);
+                if reliable {
+                    // Fast-forward ARQ: price every failed attempt
+                    // (frame out + nack back) and stretch the deadline
+                    // by the accumulated exponential backoff.
+                    self.net
+                        .n_retransmits
+                        .fetch_add(faults.drops as u64, Ordering::Relaxed);
+                    let extra = (bytes + NACK_FRAME_BYTES) as u64 * faults.drops as u64;
+                    self.net.kind_bytes[kind.index()].fetch_add(extra, Ordering::Relaxed);
+                    self.net.kind_msgs[kind.index()]
+                        .fetch_add(faults.drops as u64, Ordering::Relaxed);
+                    delay += faults::backoff_secs(rto, faults.drops);
+                } else {
+                    lost = true;
+                }
+            }
+            if faults.reordered {
+                self.net.n_reorders.fetch_add(1, Ordering::Relaxed);
+                if reliable {
+                    // In-order delivery holds the frame one timeout.
+                    delay += rto;
+                } else {
+                    // Would arrive already superseded.
+                    lost = true;
+                }
+            }
+            let straggler = self.net.faults.straggler_mult(self.id);
+            if straggler > 1.0 {
+                delay *= straggler;
+            }
+        }
+        if lost {
+            return false;
+        }
+        let mut deliver_at = Instant::now() + Duration::from_secs_f64(delay);
+        if faulty && reliable {
+            // In-order release clamp: never deliver before an earlier
+            // frame of the same (dst, kind) stream.
+            let mut release = self.release.lock().unwrap();
+            let slot = release.entry((dst, kind)).or_insert(deliver_at);
+            deliver_at = deliver_at.max(*slot);
+            *slot = deliver_at;
+        }
         let msg = Message {
             src: self.id,
             kind,
             tag,
             payload,
             sent_iter,
+            seq,
             decode_secs: self.net.latency.decode_secs(bytes),
-            deliver_at: Instant::now() + Duration::from_secs_f64(delay),
+            deliver_at,
+        };
+        let dup = if faulty && faults.duplicated {
+            self.net.n_dups.fetch_add(1, Ordering::Relaxed);
+            self.net.kind_bytes[kind.index()].fetch_add(bytes as u64, Ordering::Relaxed);
+            self.net.kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
+            let mut copy = msg.clone();
+            copy.deliver_at = deliver_at
+                + Duration::from_secs_f64(faults::rto_secs(&self.net.latency, bytes));
+            Some(copy)
+        } else {
+            None
         };
         let inbox = &self.net.inboxes[dst];
         {
             let mut queue = inbox.queue.lock().unwrap();
             queue.push(msg);
+            if let Some(copy) = dup {
+                queue.push(copy);
+            }
             // Bumped under the lock so a wait_traffic holding it cannot
             // observe the push without the bump.
             inbox.seq.fetch_add(1, Ordering::Release);
         }
         inbox.signal.notify_all();
+        true
     }
 
     /// Record a received frame's decode cost; drained by
@@ -379,7 +589,8 @@ impl Endpoint {
     /// deadline has passed — the deadline sleep is what makes simulated
     /// network time real wall time.
     pub fn recv_blocking(&self, src: usize, kind: TagKind, tag: u64) -> Message {
-        self.recv_where(kind, tag, |m| m.src == src)
+        self.recv_where(kind, tag, |m| m.src == src, None)
+            .expect("unbounded receive cannot time out")
     }
 
     /// Blocking receive of the first *deliverable* `(kind, tag)` match
@@ -388,7 +599,39 @@ impl Endpoint {
     /// caller's decode + partial compute hide behind the transfers still
     /// in flight instead of waiting out the slowest peer first.
     pub fn recv_any_blocking(&self, pending: &[bool], kind: TagKind, tag: u64) -> Message {
-        self.recv_where(kind, tag, |m| pending.get(m.src).copied().unwrap_or(false))
+        self.recv_where(kind, tag, |m| pending.get(m.src).copied().unwrap_or(false), None)
+            .expect("unbounded receive cannot time out")
+    }
+
+    /// [`Endpoint::recv_blocking`] with a deadline: `None` after
+    /// `timeout` without a deliverable match — the peer-death detection
+    /// primitive (the coordinators strike a peer after R consecutive
+    /// timeouts, see [`super::faults::Recovery`]).
+    pub fn recv_timeout(
+        &self,
+        src: usize,
+        kind: TagKind,
+        tag: u64,
+        timeout: Duration,
+    ) -> Option<Message> {
+        self.recv_where(kind, tag, |m| m.src == src, Some(Instant::now() + timeout))
+    }
+
+    /// [`Endpoint::recv_any_blocking`] with a deadline (see
+    /// [`Endpoint::recv_timeout`]).
+    pub fn recv_any_timeout(
+        &self,
+        pending: &[bool],
+        kind: TagKind,
+        tag: u64,
+        timeout: Duration,
+    ) -> Option<Message> {
+        self.recv_where(
+            kind,
+            tag,
+            |m| pending.get(m.src).copied().unwrap_or(false),
+            Some(Instant::now() + timeout),
+        )
     }
 
     fn recv_where(
@@ -396,7 +639,15 @@ impl Endpoint {
         kind: TagKind,
         tag: u64,
         matches: impl Fn(&Message) -> bool,
-    ) -> Message {
+        deadline: Option<Instant>,
+    ) -> Option<Message> {
+        // The stall watchdog only arms unbounded receives — a timeout
+        // receive already has a bounded wait and a live failure path.
+        let stall = match deadline {
+            None => stall_limit().map(|d| Instant::now() + d),
+            Some(_) => None,
+        };
+        let sweep_dups = self.net.faults.is_active();
         let inbox = &self.net.inboxes[self.id];
         let mut queue = inbox.queue.lock().unwrap();
         loop {
@@ -417,14 +668,68 @@ impl Endpoint {
             }
             if let Some(i) = take_idx {
                 let m = queue.swap_remove(i);
+                if sweep_dups {
+                    // Discard queued duplicate copies of the taken
+                    // frame (same link sequence number) — a real
+                    // receiver decodes and drops them.
+                    let mut j = 0;
+                    while j < queue.len() {
+                        let d = &queue[j];
+                        if d.src == m.src && d.kind == m.kind && d.tag == m.tag && d.seq == m.seq
+                        {
+                            let d = queue.swap_remove(j);
+                            self.account_decode(&d);
+                        } else {
+                            j += 1;
+                        }
+                    }
+                }
                 self.account_decode(&m);
-                return m;
+                return Some(m);
+            }
+            if let Some(d) = deadline {
+                if now >= d {
+                    return None;
+                }
+            }
+            if let Some(s) = stall {
+                if now >= s {
+                    let dump: Vec<String> = queue
+                        .iter()
+                        .map(|m| {
+                            format!(
+                                "src={} kind={} tag={} seq={} sent_iter={} due_in={:.3}s",
+                                m.src,
+                                m.kind.name(),
+                                m.tag,
+                                m.seq,
+                                m.sent_iter,
+                                m.deliver_at.saturating_duration_since(now).as_secs_f64()
+                            )
+                        })
+                        .collect();
+                    panic!(
+                        "FEDSINK_STALL_SECS watchdog: node {} stalled waiting for \
+                         (kind={}, tag={}); pending inbox [{}]",
+                        self.id,
+                        kind.name(),
+                        tag,
+                        dump.join("; ")
+                    );
+                }
             }
             // Sleep until the earliest matching deadline, or until a new
-            // message arrives.
-            let wait = earliest
+            // message arrives — capped by the receive deadline and the
+            // stall watchdog so both stay responsive.
+            let mut wait = earliest
                 .map(|e| e.saturating_duration_since(now))
                 .unwrap_or(Duration::from_millis(50));
+            if let Some(d) = deadline {
+                wait = wait.min(d.saturating_duration_since(now));
+            }
+            if let Some(s) = stall {
+                wait = wait.min(s.saturating_duration_since(now));
+            }
             let (q, _timeout) = inbox
                 .signal
                 .wait_timeout(queue, wait.max(Duration::from_micros(20)))

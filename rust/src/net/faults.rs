@@ -1,0 +1,389 @@
+//! Deterministic fault injection for the simulated fabric.
+//!
+//! The paper's protocols assume a reliable, lossless exchange; real
+//! federated deployments (and the decentralized topologies on the
+//! roadmap) do not get one. A [`FaultPlan`] describes per-link loss
+//! behaviour — drop / duplicate / reorder probabilities and delay
+//! spikes — plus node-level injections (crash at an iteration,
+//! straggler slowdown). The fabric consults the plan on every send.
+//!
+//! **Determinism.** Every frame's fault roll is drawn from an RNG
+//! seeded purely by `(plan seed, src, dst, link sequence number)` —
+//! see [`FaultPlan::roll`]. The link sequence counter for `(src, dst)`
+//! is only ever advanced by node `src`'s own sends, so the counter
+//! value a frame observes is a function of program order on that one
+//! thread, never of cross-thread interleaving: a given seed replays
+//! the exact same drop/dup/reorder/spike schedule at any thread count.
+//! The `pool_parity`-style property test in `rust/tests/faults.rs`
+//! pins this.
+//!
+//! **Two delivery classes.** The fabric heals faults differently per
+//! stream class (see [`crate::net::Endpoint`]):
+//!
+//! * *Reliable* (`send`/`send_coded`) — lock-step sync traffic, votes,
+//!   final gathers. A dropped attempt is retransmitted after a
+//!   deadline-based timeout with exponential backoff ([`rto_secs`] /
+//!   [`backoff_secs`]); because the schedule is decided at send time,
+//!   the fabric "fast-forwards" the ARQ: it prices every failed
+//!   attempt (frame bytes + a nack frame) into the traffic counters
+//!   and stretches the delivery deadline by the accumulated backoff,
+//!   then enqueues the surviving copy. The delivered payload is
+//!   byte-identical to the lossless wire — only *when* it arrives (and
+//!   what it cost) changes, which is why sync iterates stay bit-exact
+//!   under loss.
+//! * *Latest-wins* (`send_latest`/`send_coded_latest`) — async duals,
+//!   fleet probes/commands, async star chunks. Retransmitting a stale
+//!   frame is pointless when the next send supersedes it, so a dropped
+//!   or reordered frame is simply lost (priced, counted, never
+//!   delivered) and a DeltaF32 stream re-keys
+//!   ([`crate::net::wire::StreamCodec::rekey`]) so the receiver's
+//!   reconstruction can never diverge from the sender's reference.
+
+use super::LatencyModel;
+use crate::rng::{splitmix64, Rng};
+use std::collections::HashMap;
+
+/// Per-link fault probabilities, applied independently per frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFault {
+    /// Probability one transmission attempt is lost.
+    pub drop_prob: f64,
+    /// Probability the frame is delivered twice.
+    pub dup_prob: f64,
+    /// Probability the frame arrives out of order (reliable streams
+    /// absorb this as head-of-line delay; latest-wins streams lose the
+    /// frame — it would arrive already superseded).
+    pub reorder_prob: f64,
+    /// `(probability, multiplier)` of a fault-layer delay spike on top
+    /// of the latency model's own jitter/spikes.
+    pub delay_spike: (f64, f64),
+}
+
+impl LinkFault {
+    /// A clean link.
+    pub fn none() -> Self {
+        Self { drop_prob: 0.0, dup_prob: 0.0, reorder_prob: 0.0, delay_spike: (0.0, 1.0) }
+    }
+
+    /// Whether any fault can fire on this link.
+    pub fn is_active(&self) -> bool {
+        self.drop_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.reorder_prob > 0.0
+            || self.delay_spike.0 > 0.0
+    }
+}
+
+impl Default for LinkFault {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Node-level injections.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeFault {
+    /// Crash (silent exit) when the node's local iteration counter
+    /// reaches this value — checked at the top of each coordinator
+    /// iteration, so peers see a clean cut at a round boundary.
+    pub crash_at_iter: Option<u64>,
+    /// Multiplier on every delivery delay of frames this node *sends*
+    /// (a slow node is late on the wire); 1.0 = none.
+    pub straggler_mult: f64,
+}
+
+impl Default for NodeFault {
+    fn default() -> Self {
+        Self { crash_at_iter: None, straggler_mult: 1.0 }
+    }
+}
+
+/// Cap on consecutive dropped attempts of one frame, so a pathological
+/// drop probability cannot stall a reliable stream unboundedly.
+pub const MAX_DROPS_PER_FRAME: u32 = 16;
+
+/// The faults rolled for one frame, in fixed draw order (drop
+/// attempts, dup, reorder, spike) so a `(seed, src, dst, seq)` tuple
+/// always yields the same schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrameFaults {
+    /// Transmission attempts lost before the surviving one. Reliable
+    /// streams retransmit (backoff-priced); latest-wins streams lose
+    /// the frame whenever this is nonzero.
+    pub drops: u32,
+    pub duplicated: bool,
+    pub reordered: bool,
+    /// Delay multiplier from the spike roll (1.0 = no spike).
+    pub spike_mult: f64,
+}
+
+impl FrameFaults {
+    /// A clean roll.
+    pub fn none() -> Self {
+        Self { drops: 0, duplicated: false, reordered: false, spike_mult: 1.0 }
+    }
+}
+
+impl Default for FrameFaults {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+/// Fault-injection schedule for one run: a default link fault, per-link
+/// overrides keyed `(src, dst)`, and per-node injections.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed of the fault schedule — independent of the solver seed so
+    /// the same faults can replay across different problems.
+    pub seed: u64,
+    /// Fault applied to every link without an override.
+    pub default_link: LinkFault,
+    /// Per-link overrides.
+    pub links: HashMap<(usize, usize), LinkFault>,
+    /// Per-node injections.
+    pub nodes: HashMap<usize, NodeFault>,
+}
+
+impl FaultPlan {
+    /// The empty plan: every link clean, no node injections.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Whether any fault can ever fire — the fabric's fast-path guard:
+    /// an inactive plan leaves the send/receive paths byte-for-byte on
+    /// the lossless code.
+    pub fn is_active(&self) -> bool {
+        self.default_link.is_active()
+            || self.links.values().any(|l| l.is_active())
+            || self
+                .nodes
+                .values()
+                .any(|n| n.crash_at_iter.is_some() || n.straggler_mult != 1.0)
+    }
+
+    /// Effective fault of link `(src, dst)`.
+    pub fn link(&self, src: usize, dst: usize) -> LinkFault {
+        self.links.get(&(src, dst)).copied().unwrap_or(self.default_link)
+    }
+
+    /// Crash iteration of node `id`, if injected.
+    pub fn crash_at(&self, id: usize) -> Option<u64> {
+        self.nodes.get(&id).and_then(|n| n.crash_at_iter)
+    }
+
+    /// Send-delay multiplier of node `id` (1.0 when clean).
+    pub fn straggler_mult(&self, id: usize) -> f64 {
+        self.nodes.get(&id).map(|n| n.straggler_mult).unwrap_or(1.0)
+    }
+
+    /// Roll the faults of frame `seq` on link `(src, dst)`. Pure in
+    /// `(self.seed, src, dst, seq)` — same tuple, same roll, regardless
+    /// of when or on which thread the send happens.
+    pub fn roll(&self, src: usize, dst: usize, seq: u64) -> FrameFaults {
+        let lf = self.link(src, dst);
+        if !lf.is_active() {
+            return FrameFaults::none();
+        }
+        let mut state = self
+            .seed
+            .wrapping_add((src as u64).wrapping_mul(0x9E3779B97F4A7C15))
+            .wrapping_add((dst as u64).wrapping_mul(0xC2B2AE3D27D4EB4F))
+            .wrapping_add(seq.wrapping_mul(0x165667B19E3779F9));
+        let mut rng = Rng::seed_from(splitmix64(&mut state));
+        let mut drops = 0u32;
+        while lf.drop_prob > 0.0
+            && drops < MAX_DROPS_PER_FRAME
+            && rng.uniform() < lf.drop_prob
+        {
+            drops += 1;
+        }
+        let duplicated = lf.dup_prob > 0.0 && rng.uniform() < lf.dup_prob;
+        let reordered = lf.reorder_prob > 0.0 && rng.uniform() < lf.reorder_prob;
+        let spike_mult = if lf.delay_spike.0 > 0.0 && rng.uniform() < lf.delay_spike.0 {
+            lf.delay_spike.1.max(1.0)
+        } else {
+            1.0
+        };
+        FrameFaults { drops, duplicated, reordered, spike_mult }
+    }
+}
+
+/// What a sync coordinator does when a peer is declared dead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeLoss {
+    /// Abort the solve with a structured partial outcome
+    /// (`StopReason::PeerLoss`, `degraded = true`).
+    Abort,
+    /// Freeze the dead node's slice at its last received value and keep
+    /// iterating over the survivors; the outcome is flagged degraded.
+    Exclude,
+}
+
+impl NodeLoss {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "abort" => Some(NodeLoss::Abort),
+            "exclude" => Some(NodeLoss::Exclude),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeLoss::Abort => "abort",
+            NodeLoss::Exclude => "exclude",
+        }
+    }
+}
+
+/// Peer-death detection parameters (`--recv-timeout` / `--strikes` /
+/// `--on-node-loss`): a blocking receive that times out `strikes`
+/// times in a row on the same peer declares it dead.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Recovery {
+    /// Per-attempt receive timeout in seconds.
+    pub recv_timeout_secs: f64,
+    /// Consecutive timeouts before a peer is declared dead.
+    pub strikes: u32,
+    pub on_node_loss: NodeLoss,
+}
+
+impl Default for Recovery {
+    fn default() -> Self {
+        Self { recv_timeout_secs: 0.5, strikes: 4, on_node_loss: NodeLoss::Abort }
+    }
+}
+
+impl Recovery {
+    /// Wall-clock budget before a silent peer is declared dead.
+    pub fn death_secs(&self) -> f64 {
+        self.recv_timeout_secs * self.strikes as f64
+    }
+}
+
+/// Retransmit timeout for a `bytes`-sized frame on `latency`: twice the
+/// deterministic one-way transfer estimate, floored so zero-latency
+/// test fabrics still pay a visible per-loss penalty.
+pub fn rto_secs(latency: &LatencyModel, bytes: usize) -> f64 {
+    (2.0 * (latency.base_secs + latency.beta_secs(bytes as u64))).max(100e-6)
+}
+
+/// Total backoff delay of `attempts` consecutive failed transmissions
+/// under exponential backoff (`rto`, `2·rto`, `4·rto`, …):
+/// `rto · (2^attempts − 1)`.
+pub fn backoff_secs(rto: f64, attempts: u32) -> f64 {
+    if attempts == 0 {
+        return 0.0;
+    }
+    rto * ((1u64 << attempts.min(32)) - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lossy() -> FaultPlan {
+        FaultPlan {
+            seed: 9,
+            default_link: LinkFault {
+                drop_prob: 0.2,
+                dup_prob: 0.1,
+                reorder_prob: 0.1,
+                delay_spike: (0.05, 6.0),
+            },
+            ..FaultPlan::none()
+        }
+    }
+
+    #[test]
+    fn empty_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        assert_eq!(p.roll(0, 1, 7), FrameFaults::none());
+        assert_eq!(p.crash_at(3), None);
+        assert_eq!(p.straggler_mult(3), 1.0);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let (a, b) = (lossy(), lossy());
+        for src in 0..4 {
+            for dst in 0..4 {
+                for seq in 0..200 {
+                    assert_eq!(a.roll(src, dst, seq), b.roll(src, dst, seq));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_varies_by_link_seq_and_seed() {
+        let a = lossy();
+        let b = FaultPlan { seed: 10, ..lossy() };
+        let differs = |f: &dyn Fn(u64) -> FrameFaults, g: &dyn Fn(u64) -> FrameFaults| {
+            (0..300).any(|s| f(s) != g(s))
+        };
+        assert!(differs(&|s| a.roll(0, 1, s), &|s| a.roll(1, 0, s)));
+        assert!(differs(&|s| a.roll(0, 1, s), &|s| a.roll(0, 2, s)));
+        assert!(differs(&|s| a.roll(0, 1, s), &|s| b.roll(0, 1, s)));
+        // And the schedule actually exercises every fault type.
+        let rolls: Vec<FrameFaults> = (0..500).map(|s| a.roll(0, 1, s)).collect();
+        assert!(rolls.iter().any(|f| f.drops > 0));
+        assert!(rolls.iter().any(|f| f.duplicated));
+        assert!(rolls.iter().any(|f| f.reordered));
+        assert!(rolls.iter().any(|f| f.spike_mult > 1.0));
+    }
+
+    #[test]
+    fn drop_rate_tracks_probability() {
+        let p = FaultPlan {
+            seed: 3,
+            default_link: LinkFault { drop_prob: 0.3, ..LinkFault::none() },
+            ..FaultPlan::none()
+        };
+        let n = 20_000u64;
+        let lost = (0..n).filter(|&s| p.roll(0, 1, s).drops > 0).count() as f64;
+        assert!((lost / n as f64 - 0.3).abs() < 0.02, "rate {}", lost / n as f64);
+    }
+
+    #[test]
+    fn per_link_overrides_and_node_injections() {
+        let mut p = FaultPlan::none();
+        assert!(!p.is_active());
+        p.links.insert((2, 0), LinkFault { drop_prob: 1.0, ..LinkFault::none() });
+        p.nodes
+            .insert(1, NodeFault { crash_at_iter: Some(40), straggler_mult: 3.0 });
+        assert!(p.is_active());
+        assert_eq!(p.roll(0, 2, 0), FrameFaults::none());
+        assert_eq!(p.roll(2, 0, 0).drops, MAX_DROPS_PER_FRAME);
+        assert_eq!(p.crash_at(1), Some(40));
+        assert_eq!(p.crash_at(2), None);
+        assert_eq!(p.straggler_mult(1), 3.0);
+        assert_eq!(p.straggler_mult(0), 1.0);
+    }
+
+    #[test]
+    fn backoff_doubles_and_rto_floors() {
+        let zero = LatencyModel::zero();
+        let rto = rto_secs(&zero, 1024);
+        assert!(rto >= 100e-6, "zero-latency floor");
+        assert_eq!(backoff_secs(rto, 0), 0.0);
+        assert!((backoff_secs(rto, 1) - rto).abs() < 1e-12);
+        assert!((backoff_secs(rto, 3) - 7.0 * rto).abs() < 1e-12);
+        let lan = LatencyModel::lan();
+        assert!(rto_secs(&lan, 1 << 20) > rto_secs(&lan, 64));
+    }
+
+    #[test]
+    fn node_loss_parse_roundtrip() {
+        for m in [NodeLoss::Abort, NodeLoss::Exclude] {
+            assert_eq!(NodeLoss::parse(m.name()), Some(m));
+        }
+        assert_eq!(NodeLoss::parse("panic"), None);
+        assert_eq!(Recovery::default().on_node_loss, NodeLoss::Abort);
+        let r = Recovery { recv_timeout_secs: 0.25, strikes: 4, ..Recovery::default() };
+        assert!((r.death_secs() - 1.0).abs() < 1e-12);
+    }
+}

@@ -96,6 +96,17 @@ impl LatencyModel {
         bytes as f64 * self.decode_per_byte_secs
     }
 
+    /// Expected transmissions per reliable frame under an independent
+    /// per-attempt drop probability `p` (geometric attempt count):
+    /// `E[attempts] = 1 / (1 − p)`. The retransmit factor the README's
+    /// α–β per-iteration cost table applies to lossy links — the fabric
+    /// itself rolls actual attempt counts per frame
+    /// (see [`crate::net::faults::FaultPlan::roll`]); this is the
+    /// closed-form expectation those counts converge to.
+    pub fn expected_attempts(p: f64) -> f64 {
+        1.0 / (1.0 - p.clamp(0.0, 0.999_999))
+    }
+
     /// Sample the delivery delay for a `bytes`-sized message.
     pub fn delay_secs(&self, bytes: usize, rng: &mut Rng) -> f64 {
         let mut d = self.base_secs + bytes as f64 * self.per_byte_secs;
@@ -134,6 +145,14 @@ mod tests {
         let lan = LatencyModel::lan();
         assert!(lan.decode_secs(1 << 20) > 0.0);
         assert!((lan.decode_secs(4096) - 4096.0 * lan.decode_per_byte_secs).abs() < 1e-18);
+    }
+
+    #[test]
+    fn expected_attempts_is_geometric() {
+        assert_eq!(LatencyModel::expected_attempts(0.0), 1.0);
+        assert!((LatencyModel::expected_attempts(0.5) - 2.0).abs() < 1e-12);
+        assert!((LatencyModel::expected_attempts(0.05) - 1.0 / 0.95).abs() < 1e-12);
+        assert!(LatencyModel::expected_attempts(1.0).is_finite());
     }
 
     #[test]

@@ -20,18 +20,27 @@
 //! * [`collectives`] — AllGather / Gather / Scatter / Broadcast / Barrier
 //!   built on point-to-point sends, like MPI's tree-free reference
 //!   algorithms — plus `_coded` variants whose data slices ride the
-//!   wire codec.
+//!   wire codec and `_resilient` variants bounded by the recovery
+//!   policy (timeout → strikes → peer declared dead).
+//! * [`faults`] — deterministic fault injection (`--drop-prob` etc.):
+//!   per-link drop/dup/reorder/delay-spike schedules replayed exactly
+//!   from a seed, node crash/straggler injections, and the
+//!   retransmit/backoff parameters of the self-healing reliable
+//!   streams. All recovery traffic is priced through [`LatencyModel`].
 //! * [`DelayTracker`] — the τ staleness counter of §IV-C4 (Fig 15).
 
 mod collectives;
 mod fabric;
+pub mod faults;
 mod latency;
 pub mod wire;
 
 pub use collectives::{
-    allgather, allgather_coded, barrier, bcast, bcast_coded, gather, gather_coded, scatter,
+    allgather, allgather_coded, allgather_resilient, barrier, bcast, bcast_coded,
+    bcast_resilient, gather, gather_coded, gather_resilient, scatter,
 };
 pub use fabric::{Endpoint, Message, NetTraffic, SimNet, TagKind};
+pub use faults::{FaultPlan, FrameFaults, LinkFault, NodeFault, NodeLoss, Recovery};
 pub use latency::LatencyModel;
 pub use wire::WireFormat;
 
@@ -312,6 +321,236 @@ mod tests {
         }
         let results: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(results, vec![0.0, 20.0, 40.0, 60.0]);
+    }
+
+    #[test]
+    fn reliable_streams_heal_drops_and_price_the_recovery() {
+        use faults::{FaultPlan, LinkFault};
+        let rounds = 200u64;
+        let run = |plan: FaultPlan| {
+            let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 21).with_faults(plan));
+            let a = net.endpoint(0);
+            let b = net.endpoint(1);
+            for k in 0..rounds {
+                a.send(1, TagKind::U, k, vec![k as f64, -(k as f64)], k);
+            }
+            for k in 0..rounds {
+                let m = b.recv_blocking(0, TagKind::U, k);
+                assert_eq!(m.payload, vec![k as f64, -(k as f64)], "round {k}");
+            }
+            net.traffic()
+        };
+        let clean = run(FaultPlan::none());
+        let lossy = run(FaultPlan {
+            seed: 5,
+            default_link: LinkFault { drop_prob: 0.15, ..LinkFault::none() },
+            ..FaultPlan::none()
+        });
+        assert_eq!(clean.drops, 0);
+        assert_eq!(clean.retransmits, 0);
+        assert!(lossy.drops > 0, "schedule must actually drop");
+        assert_eq!(
+            lossy.retransmits, lossy.drops,
+            "every reliable drop is a priced retransmission"
+        );
+        // Recovery cost lands in the byte/message counters.
+        assert!(lossy.total_bytes > clean.total_bytes);
+        assert!(lossy.total_msgs > clean.total_msgs);
+    }
+
+    #[test]
+    fn duplicate_copies_are_swept_on_take() {
+        use faults::{FaultPlan, LinkFault};
+        let plan = FaultPlan {
+            seed: 1,
+            default_link: LinkFault { dup_prob: 1.0, ..LinkFault::none() },
+            ..FaultPlan::none()
+        };
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 22).with_faults(plan));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send(1, TagKind::U, 0, vec![7.0], 0);
+        assert_eq!(b.pending(), 2, "original + duplicate queued");
+        let m = b.recv_blocking(0, TagKind::U, 0);
+        assert_eq!(m.payload, vec![7.0]);
+        assert_eq!(b.pending(), 0, "same-seq sibling swept on take");
+        assert_eq!(net.traffic().dups, 1);
+    }
+
+    #[test]
+    fn latest_wins_frames_are_lost_not_retransmitted() {
+        use faults::{FaultPlan, LinkFault};
+        let mut plan = FaultPlan { seed: 2, ..FaultPlan::none() };
+        plan.links
+            .insert((0, 1), LinkFault { drop_prob: 1.0, ..LinkFault::none() });
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 23).with_faults(plan));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send_coded_latest(1, TagKind::V, 3, 0, vec![1.0, 2.0], 0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(b.try_recv_latest(0, TagKind::V, 3).is_none(), "blackholed");
+        let t = net.traffic();
+        assert!(t.drops > 0);
+        assert_eq!(t.retransmits, 0, "latest-wins never retransmits");
+    }
+
+    #[test]
+    fn deltaf32_rekeys_after_latest_wins_loss() {
+        use faults::{FaultPlan, LinkFault};
+        // A lossy latest-wins DeltaF32 stream: whenever a frame IS
+        // delivered its reconstruction must be near-exact, because the
+        // sender re-keys after every lost frame (without the rekey the
+        // receiver would difference against frames it never saw).
+        let plan = FaultPlan {
+            seed: 17,
+            default_link: LinkFault { drop_prob: 0.4, ..LinkFault::none() },
+            ..FaultPlan::none()
+        };
+        let net = Arc::new(
+            SimNet::with_wire(2, LatencyModel::zero(), 24, WireFormat::DeltaF32)
+                .with_faults(plan),
+        );
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let mut delivered = 0;
+        for round in 0..60u64 {
+            let v: Vec<f64> = (0..64)
+                .map(|i| (i as f64 * 0.37).sin() * 3.0 + round as f64 * 0.71)
+                .collect();
+            a.send_coded_latest(1, TagKind::U, 9, 0, v.clone(), round);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            if let Some(m) = b.try_recv_latest(0, TagKind::U, 9) {
+                delivered += 1;
+                let err =
+                    m.payload.iter().zip(&v).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+                assert!(err < 1e-3, "round {round}: reconstruction err {err}");
+            }
+        }
+        assert!(delivered > 10, "only {delivered}/60 delivered");
+        assert!(net.traffic().drops > 0);
+    }
+
+    #[test]
+    fn fault_schedule_is_identical_across_runs() {
+        use faults::{FaultPlan, LinkFault};
+        let plan = FaultPlan {
+            seed: 77,
+            default_link: LinkFault {
+                drop_prob: 0.2,
+                dup_prob: 0.1,
+                reorder_prob: 0.1,
+                delay_spike: (0.1, 4.0),
+            },
+            ..FaultPlan::none()
+        };
+        let run = |plan: FaultPlan| {
+            let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 25).with_faults(plan));
+            let a = net.endpoint(0);
+            let b = net.endpoint(1);
+            let mut seqs = Vec::new();
+            for k in 0..150u64 {
+                a.send(1, TagKind::U, k, vec![k as f64], k);
+                seqs.push(b.recv_blocking(0, TagKind::U, k).seq);
+            }
+            (seqs, net.traffic())
+        };
+        let (seq_a, ta) = run(plan.clone());
+        let (seq_b, tb) = run(plan);
+        assert_eq!(seq_a, seq_b, "link sequence numbering replays exactly");
+        assert_eq!((ta.drops, ta.dups, ta.reorders, ta.retransmits, ta.spikes), (
+            tb.drops, tb.dups, tb.reorders, tb.retransmits, tb.spikes
+        ));
+        assert!(ta.drops > 0 && ta.dups > 0 && ta.reorders > 0 && ta.spikes > 0);
+    }
+
+    #[test]
+    fn recv_timeout_bounds_the_wait() {
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 26));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let t0 = std::time::Instant::now();
+        let miss = b.recv_timeout(0, TagKind::U, 0, std::time::Duration::from_millis(30));
+        assert!(miss.is_none());
+        let dt = t0.elapsed().as_secs_f64();
+        assert!((0.02..1.0).contains(&dt), "timed out near the deadline, got {dt}");
+        a.send(1, TagKind::U, 0, vec![4.0], 0);
+        let hit = b.recv_timeout(0, TagKind::U, 0, std::time::Duration::from_secs(2));
+        assert_eq!(hit.expect("delivered").payload, vec![4.0]);
+    }
+
+    #[test]
+    fn resilient_allgather_strikes_a_silent_peer_dead() {
+        use faults::Recovery;
+        // Node 2 never shows up: 0 and 1 must exchange, mark 2 dead, and
+        // agree on the survivor parts — without hanging.
+        let net = Arc::new(SimNet::new(3, LatencyModel::zero(), 27));
+        let rec = Recovery { recv_timeout_secs: 0.05, ..Recovery::default() };
+        let mut handles = Vec::new();
+        for me in 0..2 {
+            let net = net.clone();
+            handles.push(std::thread::spawn(move || {
+                let ep = net.endpoint(me);
+                let mut live = vec![true; 3];
+                let parts = allgather_resilient(
+                    &ep,
+                    TagKind::U,
+                    4,
+                    None,
+                    &[me as f64],
+                    0,
+                    &mut live,
+                    &rec,
+                );
+                (live, parts)
+            }));
+        }
+        for h in handles {
+            let (live, parts) = h.join().unwrap();
+            assert_eq!(live, vec![true, true, false]);
+            assert_eq!(parts[0].as_deref(), Some(&[0.0][..]));
+            assert_eq!(parts[1].as_deref(), Some(&[1.0][..]));
+            assert!(parts[2].is_none());
+        }
+    }
+
+    #[test]
+    fn resilient_bcast_reports_a_dead_root() {
+        use faults::Recovery;
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 28));
+        let ep = net.endpoint(1);
+        let rec = Recovery { recv_timeout_secs: 0.02, strikes: 2, ..Recovery::default() };
+        let mut live = vec![true; 2];
+        let got = bcast_resilient(&ep, 0, TagKind::Ctl, 9, None, None, 0, &mut live, &rec);
+        assert!(got.is_none());
+        assert!(!live[0], "silent root declared dead");
+        // A later call against the known-dead root returns immediately.
+        let t0 = std::time::Instant::now();
+        let again = bcast_resilient(&ep, 0, TagKind::Ctl, 10, None, None, 0, &mut live, &rec);
+        assert!(again.is_none());
+        assert!(t0.elapsed().as_secs_f64() < 0.02, "no re-strike on a dead peer");
+    }
+
+    #[test]
+    fn stall_watchdog_dumps_the_inbox_instead_of_hanging() {
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 29));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        // Something unrelated is queued, so the dump has content.
+        a.send(1, TagKind::V, 3, vec![1.0], 5);
+        std::env::set_var("FEDSINK_STALL_SECS", "0.3");
+        let t = std::thread::spawn(move || {
+            // Nothing will ever match (kind=U, tag=0): must panic, not hang.
+            let _ = b.recv_blocking(0, TagKind::U, 0);
+        });
+        let joined = t.join();
+        std::env::remove_var("FEDSINK_STALL_SECS");
+        let err = joined.expect_err("watchdog must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "non-string panic".to_string());
+        assert!(msg.contains("FEDSINK_STALL_SECS"), "got: {msg}");
+        assert!(msg.contains("kind=V tag=3"), "inbox dump missing: {msg}");
     }
 
     #[test]

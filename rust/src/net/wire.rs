@@ -144,6 +144,16 @@ impl StreamCodec {
         }
     }
 
+    /// Force the next frame to an absolute keyframe: the fault layer
+    /// calls this when a latest-wins frame is lost in flight, so the
+    /// receiver's reconstruction can never diverge from the sender's
+    /// reference. Clears the error-feedback residual too — it tracked a
+    /// reconstruction the receiver never saw.
+    pub fn rekey(&mut self) {
+        self.reference.clear();
+        self.residual.clear();
+    }
+
     /// Encode one frame, advancing the stream state. Takes the values by
     /// value so the exact paths deliver them without a copy.
     pub fn encode(&mut self, values: Vec<f64>) -> Encoded {
@@ -404,6 +414,24 @@ mod tests {
             worst = worst.max(err);
         }
         assert!(worst <= key_bound, "error grew across forced keyframes: {worst}");
+    }
+
+    #[test]
+    fn rekey_resets_the_stream_state() {
+        // After rekey() the codec must behave exactly like a fresh
+        // stream — the fault layer relies on this to keep receiver
+        // reconstruction convergent after a lost latest-wins frame.
+        let mut used = StreamCodec::new(WireFormat::DeltaF32);
+        let _ = used.encode(vec![1.0, 2.0, 3.0]);
+        let _ = used.encode(vec![1.1, 2.1, 3.1]);
+        used.rekey();
+        let mut fresh = StreamCodec::new(WireFormat::DeltaF32);
+        let v = vec![5.0, -2.0, 0.5];
+        assert_eq!(used.encode(v.clone()).payload, fresh.encode(v).payload);
+        // And the stream keeps delta-coding cleanly afterwards.
+        let v2 = vec![5.001, -1.999, 0.501];
+        let enc = used.encode(v2.clone());
+        assert!(max_err(&enc.payload, &v2) < 1e-6);
     }
 
     #[test]

@@ -14,6 +14,14 @@ pub enum StopReason {
     Converged,
     MaxIters,
     Timeout,
+    /// Federated only: this node was crashed by a fault-plan injection
+    /// (`crash_at_iter`) — it exited cleanly at an iteration boundary
+    /// with whatever state it had.
+    Dead,
+    /// Federated only: the node aborted after declaring a peer dead
+    /// (recovery policy `--on-node-loss abort`) — a structured partial
+    /// outcome, never a hang.
+    PeerLoss,
 }
 
 /// One convergence-history sample (ε-study, Figs 4/9/19–22 traces).

@@ -1,0 +1,270 @@
+//! Lossy-fabric integrity pins: fault determinism, exactness under
+//! recovery, and crash-never-hangs.
+//!
+//! The fault layer's contract has three legs. (1) Schedules are pure in
+//! `(seed, src, dst, seq)`, so a faulted run is as replayable as a
+//! lossless one — at every thread count, extending the `pool_parity.rs`
+//! bit-identity discipline to the fault layer. (2) Recovery is *exact*
+//! for the lock-step protocols: the reliable streams retransmit until
+//! delivery, so drop/dup/reorder faults change timing and traffic
+//! counters but never a payload byte — sync iterates at the F64 wire
+//! must match the lossless baseline bit for bit, with the same
+//! iteration counts. (The async protocols are timing-nondeterministic
+//! by design — latest-wins frames are genuinely lost — so there the pin
+//! is convergence through the lossy fabric, not bit equality.)
+//! (3) Crash injection degrades, never hangs: every blocking wait in a
+//! resilient run is bounded by the recovery policy, pinned here by a
+//! hard-timeout harness that fails the test instead of wedging it.
+
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::{run_federated, FederatedOutcome};
+use fedsink::net::{FaultPlan, LatencyModel, LinkFault, NodeFault, NodeLoss, Recovery};
+use fedsink::sinkhorn::{StopPolicy, StopReason};
+use fedsink::workload::ProblemSpec;
+use std::time::Duration;
+
+/// The pinned thread counts: serial, the smallest parallel split, and
+/// the machine's full width (deduplicated on narrow CI runners).
+fn thread_counts() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut ts = vec![1, 2, avail];
+    ts.sort_unstable();
+    ts.dedup();
+    ts
+}
+
+/// A busy lossy link: drops force retransmits on the reliable streams,
+/// dups and reorders exercise the receive-side filters, spikes ride the
+/// latency pricing.
+fn lossy_link() -> LinkFault {
+    LinkFault { drop_prob: 0.15, dup_prob: 0.05, reorder_prob: 0.05, delay_spike: (0.02, 4.0) }
+}
+
+fn lossy_plan(seed: u64) -> FaultPlan {
+    FaultPlan { seed, default_link: lossy_link(), ..FaultPlan::none() }
+}
+
+/// Crash `node` (its local iteration counter hits `at`), links clean.
+fn crash_plan(node: usize, at: u64) -> FaultPlan {
+    let mut plan = FaultPlan::none();
+    plan.nodes.insert(node, NodeFault { crash_at_iter: Some(at), ..NodeFault::default() });
+    plan
+}
+
+/// Tight recovery budget so struck peers are declared dead in ~0.1 s.
+fn fast_recovery(on_node_loss: NodeLoss) -> Recovery {
+    Recovery { recv_timeout_secs: 0.05, strikes: 2, on_node_loss }
+}
+
+fn cfg(variant: Variant, faults: FaultPlan, recovery: Recovery) -> SolveConfig {
+    SolveConfig {
+        variant,
+        backend: BackendKind::Native,
+        clients: 2,
+        alpha: if matches!(variant, Variant::AsyncA2A | Variant::AsyncStar) { 0.5 } else { 1.0 },
+        net: LatencyModel::zero(),
+        compute_threads: 2,
+        seed: 11,
+        faults,
+        recovery,
+        ..Default::default()
+    }
+}
+
+fn assert_bit_identical(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(g.to_bits() == w.to_bits(), "{what}: index {i} differs: got {g:e}, want {w:e}");
+    }
+}
+
+/// Run `f` on its own thread and fail — rather than wedge the test
+/// binary — if it has not returned within `secs`. This is the
+/// "crash injection never hangs" acceptance pin: a recovery-path bug
+/// that blocks forever shows up as a clean test failure.
+fn run_with_timeout(
+    what: &str,
+    secs: u64,
+    f: impl FnOnce() -> FederatedOutcome + Send + 'static,
+) -> FederatedOutcome {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(secs))
+        .unwrap_or_else(|e| panic!("{what}: run did not finish within {secs}s ({e:?})"))
+}
+
+#[test]
+fn fault_schedules_replay_exactly_from_the_seed() {
+    // Pure in (seed, src, dst, seq): two plans with the same seed roll
+    // identical schedules over an exhaustive sweep; a different seed
+    // diverges somewhere in the same sweep.
+    let (a, b, c) = (lossy_plan(7), lossy_plan(7), lossy_plan(8));
+    let mut diverged = false;
+    for src in 0..3 {
+        for dst in 0..3 {
+            for seq in 0..200u64 {
+                assert_eq!(a.roll(src, dst, seq), b.roll(src, dst, seq), "same seed must replay");
+                diverged |= a.roll(src, dst, seq) != c.roll(src, dst, seq);
+            }
+        }
+    }
+    assert!(diverged, "different seeds should produce different schedules");
+}
+
+#[test]
+fn faulted_sync_iterates_are_bit_identical_at_every_thread_count() {
+    // The pool_parity discipline extended to the fault layer: one
+    // faulted sync run, replayed at thread counts {1, 2, width} and
+    // twice at the same count, always lands on the same iterates.
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-11, max_iters: 1500, ..Default::default() };
+    let run = |threads: usize| {
+        let mut c = cfg(Variant::SyncA2A, lossy_plan(3), Recovery::default());
+        c.compute_threads = threads;
+        run_federated(&p, &c, policy, false)
+    };
+    let base = run(1);
+    assert!(base.converged, "stop={:?}", base.stop);
+    assert!(base.traffic.drops > 0 && base.traffic.retransmits > 0, "plan never fired");
+    for t in thread_counts() {
+        let reps = if t == 1 { 2 } else { 1 };
+        for rep in 0..reps {
+            let out = run(t);
+            assert_eq!(out.iterations, base.iterations, "{t} threads rep {rep}");
+            let what = format!("faulted sync u at {t} threads rep {rep}");
+            assert_bit_identical(out.state.u.as_slice(), base.state.u.as_slice(), &what);
+            assert_bit_identical(out.state.v.as_slice(), base.state.v.as_slice(), &what);
+        }
+    }
+}
+
+#[test]
+fn sync_recovery_is_exact_under_drop_dup_reorder() {
+    // Acceptance pin: with drop/dup/reorder faults (no crash) at the
+    // F64 wire, both lock-step coordinators reproduce the lossless
+    // baseline bit for bit with the same iteration counts — the ARQ
+    // layer repriced the run but never touched a payload.
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-11, max_iters: 1500, ..Default::default() };
+    for variant in [Variant::SyncA2A, Variant::SyncStar] {
+        let lossless = cfg(variant, FaultPlan::none(), Recovery::default());
+        let lossy = cfg(variant, lossy_plan(21), Recovery::default());
+        let clean = run_federated(&p, &lossless, policy, false);
+        let faulted = run_federated(&p, &lossy, policy, false);
+        let name = variant.name();
+        assert!(clean.converged, "{name} lossless: stop={:?}", clean.stop);
+        assert_eq!(faulted.stop, clean.stop, "{name}");
+        assert_eq!(faulted.iterations, clean.iterations, "{name}");
+        assert_bit_identical(
+            faulted.state.u.as_slice(),
+            clean.state.u.as_slice(),
+            &format!("{name} u under faults"),
+        );
+        assert_bit_identical(
+            faulted.state.v.as_slice(),
+            clean.state.v.as_slice(),
+            &format!("{name} v under faults"),
+        );
+        assert!(!faulted.degraded && faulted.lost_nodes.is_empty(), "{name}: no crash injected");
+        assert_eq!(clean.traffic.drops + clean.traffic.retransmits, 0, "{name} lossless");
+        assert!(
+            faulted.traffic.drops > 0 && faulted.traffic.retransmits > 0,
+            "{name}: counters must show the plan fired (drops={}, retransmits={})",
+            faulted.traffic.drops,
+            faulted.traffic.retransmits
+        );
+    }
+}
+
+#[test]
+fn async_protocols_converge_through_a_lossy_fabric() {
+    // Latest-wins streams genuinely lose dropped frames, so the async
+    // pin is convergence-to-threshold with live fault counters, not bit
+    // equality (those protocols are timing-nondeterministic even on a
+    // clean fabric).
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-8, max_iters: 4000, ..Default::default() };
+    for variant in [Variant::AsyncA2A, Variant::AsyncStar] {
+        let lossy = cfg(variant, lossy_plan(5), Recovery::default());
+        let out = run_federated(&p, &lossy, policy, false);
+        let name = variant.name();
+        assert!(out.converged, "{name}: stop={:?} after {} iters", out.stop, out.iterations);
+        assert!(out.traffic.drops > 0, "{name}: plan never fired");
+        assert!(!out.degraded && out.lost_nodes.is_empty(), "{name}: no crash injected");
+    }
+}
+
+#[test]
+fn sync_a2a_abort_flags_peer_loss_without_hanging() {
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-11, max_iters: 300, ..Default::default() };
+    let c = cfg(Variant::SyncA2A, crash_plan(1, 3), fast_recovery(NodeLoss::Abort));
+    let out = run_with_timeout("sync-a2a abort", 30, move || run_federated(&p, &c, policy, false));
+    assert_eq!(out.stop, StopReason::PeerLoss);
+    assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
+    assert!(!out.converged);
+}
+
+#[test]
+fn sync_a2a_exclude_continues_degraded() {
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-11, max_iters: 60, ..Default::default() };
+    let c = cfg(Variant::SyncA2A, crash_plan(1, 3), fast_recovery(NodeLoss::Exclude));
+    let out = run_with_timeout("sync-a2a exclude", 30, move || {
+        run_federated(&p, &c, policy, false)
+    });
+    // The survivor runs the protocol to completion against node 1's
+    // frozen slice — degraded and flagged, but never aborted.
+    assert_ne!(out.stop, StopReason::PeerLoss, "exclude must not abort");
+    assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
+}
+
+#[test]
+fn sync_star_server_crash_aborts_clients() {
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-11, max_iters: 300, ..Default::default() };
+    // Node id 2 is the server of a 2-client star; losing it is always
+    // fatal to the clients — it owns the kernel — even under `exclude`.
+    let c = cfg(Variant::SyncStar, crash_plan(2, 3), fast_recovery(NodeLoss::Exclude));
+    let out = run_with_timeout("sync-star server crash", 30, move || {
+        run_federated(&p, &c, policy, false)
+    });
+    assert_eq!(out.stop, StopReason::PeerLoss);
+    assert!(out.degraded && out.lost_nodes.contains(&2), "lost={:?}", out.lost_nodes);
+}
+
+#[test]
+fn sync_star_client_crash_excludes_and_finishes() {
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-11, max_iters: 60, ..Default::default() };
+    let c = cfg(Variant::SyncStar, crash_plan(0, 3), fast_recovery(NodeLoss::Exclude));
+    let out = run_with_timeout("sync-star client crash", 30, move || {
+        run_federated(&p, &c, policy, false)
+    });
+    assert_ne!(out.stop, StopReason::PeerLoss, "exclude must not abort");
+    assert!(out.degraded && out.lost_nodes.contains(&0), "lost={:?}", out.lost_nodes);
+}
+
+#[test]
+fn async_a2a_crash_degrades_gracefully() {
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-8, max_iters: 600, ..Default::default() };
+    let c = cfg(Variant::AsyncA2A, crash_plan(1, 5), fast_recovery(NodeLoss::Exclude));
+    let out = run_with_timeout("async-a2a crash", 30, move || run_federated(&p, &c, policy, false));
+    // The survivor folds the dead peer into its done votes and finishes
+    // on its own slice; the outcome is flagged, never a hang.
+    assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
+}
+
+#[test]
+fn async_star_client_crash_degrades_gracefully() {
+    let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
+    let policy = StopPolicy { threshold: 1e-8, max_iters: 600, ..Default::default() };
+    let c = cfg(Variant::AsyncStar, crash_plan(1, 5), fast_recovery(NodeLoss::Exclude));
+    let out = run_with_timeout("async-star client crash", 30, move || {
+        run_federated(&p, &c, policy, false)
+    });
+    assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
+}
