@@ -1,0 +1,11 @@
+"""Make the `compile` package importable from any invocation directory.
+
+CI runs pytest from `rust/` (`python3 -m pytest ../python/tests/... -q`);
+developers run it from the repo root or from `python/`. Pin sys.path to
+the package parent so all three work.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -16,7 +16,9 @@ import tempfile
 
 import pytest
 
-from compile import aot, model
+pytest.importorskip("jax")
+
+from compile import aot, model  # noqa: E402
 
 ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 

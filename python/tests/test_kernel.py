@@ -8,13 +8,15 @@ ever executes what these kernels lower to.
 
 from __future__ import annotations
 
-import jax
+import pytest
+
+jax = pytest.importorskip("jax")
+pytest.importorskip("hypothesis")
 
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-import pytest  # noqa: E402
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from compile.kernels import ref  # noqa: E402

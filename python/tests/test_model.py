@@ -2,13 +2,14 @@
 
 from __future__ import annotations
 
-import jax
+import pytest
+
+jax = pytest.importorskip("jax")
 
 jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-import pytest  # noqa: E402
 
 from compile import model  # noqa: E402
 

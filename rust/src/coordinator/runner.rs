@@ -321,3 +321,61 @@ where
     outcomes.sort_by_key(|o| o.stats.id);
     outcomes
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::workload::ProblemSpec;
+
+    /// Build a minimal [`RunCtx`] over `cfg` and read back the
+    /// exchange-mode precedence flags.
+    fn probe(
+        cfg: &SolveConfig,
+        p: &Problem,
+        partition: &Partition,
+        domain: Domain,
+    ) -> (bool, bool) {
+        let net = Arc::new(SimNet::with_wire(cfg.clients, cfg.net, cfg.seed, cfg.wire));
+        let ctx = RunCtx {
+            problem: p,
+            partition,
+            cfg,
+            policy: StopPolicy::default(),
+            traced: false,
+            domain,
+            stab: cfg.stab,
+            backend: make_backend(BackendKind::Native, "", 1).unwrap(),
+            net,
+            delays: Arc::new(DelayTracker::new()),
+        };
+        (ctx.fleet_on(), ctx.stream_on())
+    }
+
+    #[test]
+    fn fleet_absorb_takes_precedence_over_stream_exchange() {
+        let p = ProblemSpec::new(8).with_eps(0.5).build(9);
+        let mut cfg = SolveConfig {
+            backend: BackendKind::Native,
+            clients: 2,
+            stream_exchange: true,
+            ..Default::default()
+        };
+        cfg.stab.fleet_absorb = true;
+        let partition = Partition::new_in(&p, cfg.clients, Domain::Log);
+        // Both flags set in the log domain: fleet wins, streaming
+        // silently defers (the CLI warns about exactly this).
+        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
+        assert!(fleet && !stream, "fleet must suppress streaming");
+        // Fleet off again: streaming is honored.
+        cfg.stab.fleet_absorb = false;
+        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
+        assert!(!fleet && stream);
+        // Fleet requested but the hybrid disabled (τ = ∞): there is no
+        // absorption schedule to synchronize, so streaming stays on.
+        cfg.stab.fleet_absorb = true;
+        cfg.stab.absorb_threshold = f64::INFINITY;
+        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
+        assert!(!fleet && stream);
+    }
+}

@@ -33,5 +33,7 @@ pub mod metrics;
 pub mod net;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod sinkhorn;
+pub mod testkit;
 pub mod workload;

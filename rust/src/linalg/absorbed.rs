@@ -313,6 +313,47 @@ impl AbsorbedLogCsr {
         self.k.matmul_fold(col0, xr, ex_slice, nh, lin.as_mut_slice(), threads);
     }
 
+    /// Column-subset absorbed product for per-column freezing without
+    /// repacking: compute the batched product for the `active` columns
+    /// only (strictly increasing indices into `x_log`'s histograms),
+    /// writing packed results — `out[:, k]` is the product of column
+    /// `active[k]`. Bit-identical to `x_log.select_cols(active)` followed
+    /// by [`AbsorbedLogCsr::log_matmul_into`], minus the intermediate
+    /// copy: callers that keep full-width state while converged columns
+    /// are frozen pay O(nnz·|active|) instead of O(nnz·N). `ex` (n×w)
+    /// and `lin` (m×w) are caller scratch with `w = active.len()`.
+    pub fn log_matmul_select(
+        &self,
+        x_log: &Mat,
+        active: &[usize],
+        ex: &mut Mat,
+        lin: &mut Mat,
+        out: &mut Mat,
+        threads: usize,
+    ) {
+        let nh = x_log.cols();
+        let w = active.len();
+        debug_assert!(active.windows(2).all(|p| p[0] < p[1]), "active strictly increasing");
+        assert!(active.iter().all(|&c| c < nh), "active column in range");
+        assert_eq!(x_log.rows(), self.cols(), "inner dims");
+        assert_eq!((ex.rows(), ex.cols()), (self.cols(), w), "ex scratch shape");
+        assert_eq!((lin.rows(), lin.cols()), (self.rows(), w), "lin scratch shape");
+        assert_eq!((out.rows(), out.cols()), (self.rows(), w), "out shape");
+        {
+            let xs = x_log.as_slice();
+            let es = ex.as_mut_slice();
+            for j in 0..self.cols() {
+                let gj = self.g[j];
+                let xrow = &xs[j * nh..(j + 1) * nh];
+                for (k, &c) in active.iter().enumerate() {
+                    es[j * w + k] = (xrow[c] - gj).exp();
+                }
+            }
+        }
+        self.matmul_into(ex, lin, threads);
+        self.log_matmul_finish(lin, out);
+    }
+
     /// Shift a (fully folded or batch-computed) linear accumulator back
     /// to the log domain: `out = f̄ + ln lin`. A zero accumulator entry
     /// only happens on a fully masked row (f̄ = −∞): kept entries are
@@ -631,6 +672,37 @@ mod tests {
             .map(|&j| k.slice_drift(j * 4, 4, &x.as_slice()[j * 4 * nh..(j + 1) * 4 * nh], nh))
             .fold(0.0, f64::max);
         assert_eq!(merged, full_max);
+    }
+
+    #[test]
+    fn select_product_matches_packed_full_product() {
+        // The per-column-freeze primitive: producing only the active
+        // columns must be bit-identical to packing the scalings first
+        // and running the full batched product.
+        let mut rng = Rng::seed_from(59);
+        let (m, n, nh) = (15, 12, 5);
+        let a_log = Mat::rand_uniform(m, n, -200.0, 0.0, &mut rng);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &gref, -60.0, 8.0, 8.0);
+        let mut x_log = Mat::zeros(n, nh);
+        for j in 0..n {
+            for h in 0..nh {
+                x_log[(j, h)] = gref[j] + rng.uniform_range(-6.0, 6.0);
+            }
+        }
+        let active = [0usize, 2, 3];
+        let w = active.len();
+        let (mut ex, mut lin) = (Mat::zeros(n, w), Mat::zeros(m, w));
+        let mut got = Mat::zeros(m, w);
+        k.log_matmul_select(&x_log, &active, &mut ex, &mut lin, &mut got, 1);
+        let packed = x_log.select_cols(&active);
+        let (mut ex2, mut lin2, mut want) = scratch(&k, w);
+        k.log_matmul_into(&packed, &mut ex2, &mut lin2, &mut want, 1);
+        assert!(got.allclose(&want, 0.0), "select ≡ pack + full product");
+        assert!(got.allclose(
+            &dense_log_product(&a_log, &x_log).select_cols(&active),
+            1e-11
+        ));
     }
 
     #[test]

@@ -93,6 +93,23 @@ impl Mat {
         out
     }
 
+    /// Gather an arbitrary column subset into a packed matrix:
+    /// `out[:, k] = self[:, cols[k]]`. The batched-solve compaction
+    /// primitive — freezing converged histogram columns packs the
+    /// survivors left so subsequent N-RHS products shrink with them.
+    pub fn select_cols(&self, cols: &[usize]) -> Mat {
+        let w = cols.len();
+        let mut out = Mat::zeros(self.rows, w);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (k, &c) in cols.iter().enumerate() {
+                dst[k] = src[c];
+            }
+        }
+        out
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         // Tiled transpose to stay cache-friendly for big kernels.

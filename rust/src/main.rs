@@ -13,6 +13,7 @@ use fedsink::workload::CondClass;
 
 const COMMANDS: &[(&str, &str)] = &[
     ("solve", "run one federated/centralized solve on a synthetic problem"),
+    ("serve", "multi-tenant solve service: batched absorbed solves over a shared geometry"),
     ("epsilon-study", "Figs 4-5: regularization sweep on the 4x4 example"),
     ("coherence", "§IV-B1: federated == centralized objective check"),
     ("timing", "Figs 6/14/18/23/24: comp vs comm per node"),
@@ -66,6 +67,7 @@ fn print_usage() {
 fn dispatch(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
     match cmd {
         "solve" => cmd_solve(rest),
+        "serve" => cmd_serve(rest),
         "epsilon-study" => cmd_epsilon(rest),
         "coherence" => cmd_coherence(rest),
         "timing" => cmd_timing(rest),
@@ -430,6 +432,14 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
             );
         }
     }
+    if cfg.stream_exchange && cfg.stab.fleet_absorb {
+        // RunCtx::stream_on() silently defers to the fleet protocol
+        // (streamed folds can't replay a mid-product retruncation).
+        eprintln!(
+            "warning: --stream-exchange is deferred under --fleet-absorb — \
+             fleet-synchronized runs exchange on the gather barrier"
+        );
+    }
     let policy = StopPolicy {
         threshold: p.get_f64("threshold")?,
         max_iters: p.get_usize("max-iters")?,
@@ -507,6 +517,140 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
             out.node_stats.len() - out.lost_nodes.len(),
             out.node_stats.len()
         );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new()
+        .opt("n", "SIZE", "192", "shared cost-geometry size")
+        .opt("eps", "EPS", "0.005", "entropic regularization of the request stream")
+        .opt("cond", "CLASS", "ill", "well|medium|ill cost conditioning")
+        .opt("requests", "R", "64", "synthetic requests to serve")
+        .opt("tenants", "T", "8", "tenant (base-histogram) count")
+        .opt("perturb", "P", "1.0", "log-space per-request histogram perturbation scale")
+        .opt(
+            "arrival-rate",
+            "L",
+            "0",
+            "open-loop Poisson arrivals per virtual second (0 = one burst at t=0)",
+        )
+        .opt("threshold", "E", "1e-9", "base per-request marginal tolerance")
+        .opt(
+            "tolerance-jitter",
+            "J",
+            "1.0",
+            "per-request tolerance jitter in decades (drives per-column stopping)",
+        )
+        .opt("max-batch", "W", "32", "max histograms coalesced into one batched solve")
+        .opt(
+            "drift-margin",
+            "M",
+            "0.5",
+            "fraction of the absorb threshold a member's predicted dual drift \
+             may consume before admission opens a new batch",
+        )
+        .opt("alpha", "A", "1.0", "damping step size")
+        .opt("max-iters", "K", "6000", "per-batch iteration cap")
+        .opt(
+            "domain",
+            "D",
+            "env",
+            "linear|log|auto numerics domain (default: FEDSINK_DOMAIN or auto)",
+        )
+        .opt(
+            "truncation-threshold",
+            "TH",
+            "-60",
+            "log-space sparse truncation threshold theta (< 0)",
+        )
+        .opt(
+            "absorb-threshold",
+            "TAU",
+            "15",
+            "log-scaling drift before the hybrid re-absorbs the kernel (> 0, inf = off)",
+        )
+        .opt("seed", "U64", "42", "geometry + workload seed")
+        .opt("threads", "N", "env", "worker-pool size (default: FEDSINK_THREADS or all cores)")
+        .opt_req("out", "PATH", "write the BENCH_service.json report here")
+        .switch(
+            "compare-standalone",
+            "also solve every request standalone at its own tolerance and \
+             report the rebuild/iteration amortization of batching",
+        );
+    let p = spec.parse("serve", args).map_err(anyhow::Error::new)?;
+    use fedsink::service::{run_service, synth_requests, ServiceConfig, WorkloadSpec};
+    let threads = threads_of(&p)?;
+    let n = p.get_usize("n")?;
+    let eps = p.get_f64("eps")?;
+    let cond = CondClass::parse(p.get("cond").unwrap())
+        .ok_or_else(|| anyhow::anyhow!("bad --cond"))?;
+    let seed = p.get_u64("seed")?;
+    let geometry = experiments::build_problem(n, 1, eps, 0.0, 2, cond, seed);
+    let domain = domain_of(&p)?.resolve(&geometry);
+    let wl = WorkloadSpec {
+        requests: p.get_usize("requests")?,
+        tenants: p.get_usize("tenants")?,
+        perturb: p.get_f64("perturb")?,
+        arrival_rate: p.get_f64("arrival-rate")?,
+        threshold: p.get_f64("threshold")?,
+        tolerance_jitter: p.get_f64("tolerance-jitter")?,
+        seed,
+    };
+    anyhow::ensure!(wl.requests >= 1, "--requests must be >= 1");
+    let mut requests = synth_requests(n, &wl);
+    for r in &mut requests {
+        r.eps = eps;
+    }
+    let cfg = ServiceConfig {
+        alpha: p.get_f64("alpha")?,
+        max_iters: p.get_usize("max-iters")?,
+        max_batch: p.get_usize("max-batch")?,
+        drift_margin: p.get_f64("drift-margin")?,
+        stab: stab_of(&p)?,
+        domain,
+        compare_standalone: p.has("compare-standalone"),
+    };
+    anyhow::ensure!(cfg.max_batch >= 1, "--max-batch must be >= 1");
+    let backend = fedsink::runtime::make_backend(BackendKind::Native, "", threads)?;
+    let rep = run_service(backend, &geometry, &requests, &cfg);
+    println!(
+        "serve [{} domain]: n={n} eps={eps} requests={} tenants={} -> \
+         batches={} splits={} occupancy={:.2}",
+        domain.name(),
+        rep.requests.len(),
+        wl.tenants,
+        rep.batches.len(),
+        rep.splits,
+        rep.occupancy_mean
+    );
+    println!(
+        "  latency: p50={:.4}s p90={:.4}s p99={:.4}s throughput={:.2} req/s makespan={:.3}s",
+        rep.latency_p50, rep.latency_p90, rep.latency_p99, rep.throughput_rps, rep.makespan_secs
+    );
+    println!(
+        "  batched: unconverged={} early_frozen={} compactions={} rebuilds={} absorbs={}",
+        rep.unconverged(),
+        rep.early_frozen(),
+        rep.batches.iter().map(|b| b.compactions).sum::<usize>(),
+        rep.rebuilds(),
+        rep.absorbs()
+    );
+    if let Some(s) = rep.standalone {
+        println!(
+            "  standalone: solves={} iterations={} rebuilds={} absorbs={} unconverged={} \
+             (batched amortization: {} rebuilds vs {} standalone)",
+            s.solves,
+            s.iterations,
+            s.rebuilds,
+            s.absorbs,
+            s.unconverged,
+            rep.rebuilds(),
+            s.rebuilds
+        );
+    }
+    if let Some(path) = out_of(&p) {
+        experiments::dump_json(&path, &rep.to_json())?;
     }
     Ok(())
 }

@@ -10,7 +10,7 @@
 mod stats;
 mod timer;
 
-pub use stats::{chi2_sf, chi2_stat, Histogram, Summary};
+pub use stats::{chi2_sf, chi2_stat, percentile, Histogram, Summary};
 pub use timer::{Clock, SplitTimer};
 
 use crate::jsonio::Json;
@@ -109,6 +109,17 @@ mod tests {
         assert!((chi2_sf(5.991, 2) - 0.05).abs() < 2e-3);
         // χ²(df=10): P(X > 18.307) ≈ 0.05
         assert!((chi2_sf(18.307, 10) - 0.05).abs() < 2e-3);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.9), 5.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        // Rank floors at 1: tiny q returns the minimum.
+        assert_eq!(percentile(&xs, 0.01), 1.0);
+        assert!(percentile(&[], 0.5).is_nan());
     }
 
     #[test]

@@ -41,6 +41,21 @@ impl Summary {
     }
 }
 
+/// Nearest-rank percentile: smallest element with at least `q·n` of the
+/// series at or below it (`q` in `(0, 1]`). The latency-tail reduction
+/// for the serving report — p50/p90/p99 over per-request latencies.
+/// Returns NaN on an empty series.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    assert!(q > 0.0 && q <= 1.0, "percentile rank out of (0, 1]");
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
 /// Equal-width histogram — the discrete stand-in for the paper's KDE
 /// plots (Figs 16–17): `density()` normalizes to unit area.
 #[derive(Clone, Debug)]

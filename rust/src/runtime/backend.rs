@@ -169,6 +169,23 @@ pub trait BlockOp: Send {
         false
     }
 
+    /// Per-column stopping support: irreversibly drop every histogram
+    /// column except the selected ones (strictly increasing indices into
+    /// the current batch) — state, per-column targets, counters, and
+    /// scratch are packed left so subsequent products cost
+    /// O(nnz·|active|). The kernel itself is column-count independent
+    /// and survives untouched (no rebuild: an absorbed reference keeps
+    /// its support and anchor). Returns `false` — and changes nothing —
+    /// for operators without compaction support or while a streamed
+    /// accumulation is pending; callers then fall back to rebuilding
+    /// the operator around a packed state. Per-histogram
+    /// `absorb_triggers` of dropped columns are dropped with them; the
+    /// scalar counters keep running across the compaction.
+    fn compact_columns(&mut self, active: &[usize]) -> bool {
+        let _ = active;
+        false
+    }
+
     // --- Streamed partial accumulation (`--stream-exchange`) ---------
     //
     // The slice-streaming exchange replaces the all-or-nothing gather

@@ -22,7 +22,7 @@ pub mod pool;
 
 pub use backend::{BlockOp, ComputeBackend, FleetProbe, StabStats, Target};
 pub use manifest::{Manifest, ManifestEntry};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, HYBRID_MAX_CAPACITY};
 pub use pool::Pool;
 #[cfg(feature = "xla-backend")]
 pub use pjrt::{PjrtRuntime, XlaBackend};

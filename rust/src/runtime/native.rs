@@ -87,7 +87,7 @@ const CSR_DENSITY_CUTOFF: f64 = 0.27;
 /// numerically safe shared support — the operator then falls back to
 /// the dense logsumexp permanently instead of silently producing
 /// inf/NaN iterates.
-const HYBRID_MAX_CAPACITY: f64 = 300.0;
+pub const HYBRID_MAX_CAPACITY: f64 = 300.0;
 
 /// Whether a shared support with anchor budget `sigma` can represent
 /// drift capacity `needed`: the per-histogram corrections must stay
@@ -893,6 +893,54 @@ impl BlockOp for HybridLogBlockOp {
         self.u = u.clone();
     }
 
+    /// Drop frozen histogram columns from the batch: pack the state,
+    /// per-column targets, counters, and scratch to the `active` subset.
+    /// The absorbed kernel is untouched — its support, reference, and
+    /// anchor are column-count independent, so compaction costs a few
+    /// memcpys and no rebuild. Refused (false) while a streamed
+    /// accumulation is pending: the folded partials are full-width.
+    fn compact_columns(&mut self, active: &[usize]) -> bool {
+        if self.accum_active {
+            return false;
+        }
+        let nh = self.u.cols();
+        debug_assert!(active.windows(2).all(|p| p[0] < p[1]), "active strictly increasing");
+        assert!(active.iter().all(|&c| c < nh), "active column in range");
+        if active.len() == nh {
+            return true;
+        }
+        let (m, n) = (self.a_log.rows(), self.a_log.cols());
+        let w = active.len();
+        self.u = self.u.select_cols(active);
+        self.q = self.q.select_cols(active);
+        if self.t_stride > 0 {
+            let stride = self.t_stride;
+            let pack = |src: &[f64]| {
+                let mut out = vec![0.0; m * w];
+                for i in 0..m {
+                    for (k, &c) in active.iter().enumerate() {
+                        out[i * w + k] = src[i * stride + c];
+                    }
+                }
+                out
+            };
+            self.t_lin = pack(&self.t_lin);
+            self.log_t = pack(&self.log_t);
+            self.t_stride = w;
+        }
+        self.ex = Mat::zeros(n, w);
+        self.lin_q = Mat::zeros(m, w);
+        self.drift = vec![0.0; w];
+        self.stats.absorb_triggers =
+            active.iter().map(|&c| self.stats.absorb_triggers[c]).collect();
+        // Streamed accumulators are lazy; zeroing the shapes forces the
+        // next accum_begin to reallocate at the packed width.
+        self.acc_lin = Mat::zeros(0, 0);
+        self.acc_mx.clear();
+        self.acc_sum.clear();
+        true
+    }
+
     fn stab_stats(&self) -> Option<StabStats> {
         Some(self.stats.clone())
     }
@@ -1231,6 +1279,60 @@ mod tests {
         let mut oracle = be.log_block_op(&a_log, Target::Vec(&t), u0).unwrap();
         let want = oracle.update(&x, 1.0).clone();
         assert!(got.allclose(&want, 1e-11));
+    }
+
+    #[test]
+    fn compacted_hybrid_continues_like_a_packed_fresh_op() {
+        // Freeze columns 1 and 3 out of a 4-wide hybrid batch after an
+        // update: the compacted op must keep iterating exactly like the
+        // dense-log oracle over the packed columns — state, per-column
+        // targets (Target::Mat), marginals, and the absorb schedule
+        // (the kernel survives compaction untouched).
+        let mut rng = Rng::seed_from(78);
+        let (n, nh) = (20, 4);
+        let a_log = Mat::rand_uniform(n, n, -200.0, 0.0, &mut rng);
+        let b = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        let stab = Stabilization::default();
+        let be = NativeBackend::new(1);
+        let mut op = be
+            .log_block_op_stabilized(&a_log, Target::Mat(&b), Mat::zeros(n, nh), &stab)
+            .unwrap();
+        let mut oracle =
+            be.log_block_op(&a_log, Target::Mat(&b), Mat::zeros(n, nh)).unwrap();
+        let x1 = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+        op.update(&x1, 0.8);
+        oracle.update(&x1, 0.8);
+        assert!(op.state().allclose(oracle.state(), 1e-11));
+
+        let active = [0usize, 2];
+        let packed_state = oracle.state().select_cols(&active);
+        assert!(op.compact_columns(&active), "hybrid supports compaction");
+        assert_eq!(op.hists(), 2);
+        assert!(op.state().allclose(&packed_state, 1e-11));
+        let b_packed = b.select_cols(&active);
+        let mut oracle = be
+            .log_block_op(&a_log, Target::Mat(&b_packed), packed_state)
+            .unwrap();
+        // Keep iterating with packed inputs, the later ones drifted far
+        // enough to trip re-absorption on the compacted kernel.
+        for k in 0..3 {
+            let off = 12.0 * k as f64;
+            let x = Mat::rand_uniform(n, 2, -2.0 + off, 2.0 + off, &mut rng);
+            let got = op.update(&x, 0.8).clone();
+            let want = oracle.update(&x, 0.8).clone();
+            assert!(got.allclose(&want, 1e-11), "post-compaction update {k}");
+            let errs_got = op.marginal(&x, &got);
+            let errs_want = oracle.marginal(&x, &want);
+            for (eg, ew) in errs_got.iter().zip(&errs_want) {
+                assert!((eg - ew).abs() <= 1e-9 * ew.max(1.0), "marginal parity");
+            }
+        }
+        let st = op.stab_stats().unwrap();
+        assert!(st.absorbs >= 1, "shifted inputs re-absorbed post-compaction");
+        assert_eq!(st.absorb_triggers.len(), 2, "trigger counters packed");
+        // A pending streamed accumulation pins the width.
+        op.accum_begin();
+        assert!(!op.compact_columns(&[0]), "pending accumulation refuses compaction");
     }
 
     #[test]

@@ -1,0 +1,203 @@
+//! Admission policy: which requests may share one absorbed batch.
+//!
+//! Everything in a batch iterates against a *single* θ-truncated,
+//! dual-absorbed kernel support. The support stays exact while every
+//! column's dual reference drifts less than the covered capacity from
+//! the batch anchor, so the thing to control at admission time is the
+//! *spread* of the member histograms: column `h`'s scaling duals track
+//! `ln b_h` up to a common shift, so two members whose log-histograms
+//! differ by `Δ` in some coordinate pull their duals ~`Δ` apart and eat
+//! `Δ/2` each of the shared covered-drift budget. A request whose
+//! predicted spread would blow that budget opens a **new** batch instead
+//! of forcing fleet-wide retruncations on everyone already admitted.
+
+use super::SolveRequest;
+use crate::linalg::AbsorbedLogCsr;
+use crate::runtime::HYBRID_MAX_CAPACITY;
+
+/// Floor for `ln b` of an (allowed) zero histogram entry — keeps the
+/// spread metric finite; a coordinate that is ~0 in every member
+/// contributes nothing to the spread either way.
+const LOG_FLOOR: f64 = 1e-300;
+
+/// Batching rules shared by every batch the service opens.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// Hard cap on members per batch (GEMM width).
+    pub max_batch: usize,
+    /// The stabilization pair of the solver the batch will run under —
+    /// the absorbed support is built with these.
+    pub truncation_theta: f64,
+    pub absorb_threshold: f64,
+    /// Fraction of the absorb threshold τ the *predicted* per-column
+    /// drift may consume (0.5 means a member may sit half an absorption
+    /// away from the batch anchor before it is refused). Lower values
+    /// trade batch occupancy for fewer mid-solve retruncations.
+    pub drift_margin: f64,
+}
+
+impl AdmissionPolicy {
+    /// Largest admissible spread `max_j (max_h − min_h) ln b_j^h` of a
+    /// batch's log-histograms. The worst member sits ~spread/2 from the
+    /// batch anchor, so the soft budget is `2 · margin·τ`, clipped by
+    /// the hard representability bound of the shared support
+    /// (`max_covered`, itself capped by [`HYBRID_MAX_CAPACITY`]) — a
+    /// batch is never opened wider than the kernel can stay exact for,
+    /// no matter the margin.
+    pub fn spread_budget(&self) -> f64 {
+        let tau = self.absorb_threshold;
+        let hard = AbsorbedLogCsr::max_covered(self.truncation_theta, tau)
+            .min(HYBRID_MAX_CAPACITY);
+        if !tau.is_finite() {
+            // Hybrid disabled: no shared support to protect, only the
+            // width cap applies.
+            return f64::INFINITY;
+        }
+        2.0 * (self.drift_margin * tau).min(hard).max(0.0)
+    }
+
+    /// Open a fresh batch seeded with `first` (always admitted — a batch
+    /// of one is trivially compatible with itself).
+    pub fn open(&self, first: &SolveRequest) -> Batcher {
+        let lo: Vec<f64> = first.b.iter().map(|&x| x.max(LOG_FLOOR).ln()).collect();
+        Batcher {
+            eps: first.eps,
+            hi: lo.clone(),
+            lo,
+            count: 1,
+            budget: self.spread_budget(),
+            max_batch: self.max_batch.max(1),
+        }
+    }
+}
+
+/// One open batch accumulating drift-compatible members.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    eps: f64,
+    /// Per-coordinate envelope of the members' `ln b`.
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    count: usize,
+    budget: f64,
+    max_batch: usize,
+}
+
+impl Batcher {
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Try to admit `req`. Admission requires the same ε (different
+    /// regularizations mean different kernels — nothing to share), room
+    /// under the width cap, and a post-admission log-histogram spread
+    /// within the drift budget. On refusal the batch is unchanged and
+    /// the caller opens a new one.
+    pub fn admit(&mut self, req: &SolveRequest) -> bool {
+        if req.eps != self.eps || self.count >= self.max_batch {
+            return false;
+        }
+        debug_assert_eq!(req.b.len(), self.lo.len(), "histogram length");
+        let mut spread = 0.0f64;
+        for (j, &x) in req.b.iter().enumerate() {
+            let lx = x.max(LOG_FLOOR).ln();
+            spread = spread.max(self.hi[j].max(lx) - self.lo[j].min(lx));
+            if spread > self.budget {
+                return false;
+            }
+        }
+        for (j, &x) in req.b.iter().enumerate() {
+            let lx = x.max(LOG_FLOOR).ln();
+            self.lo[j] = self.lo[j].min(lx);
+            self.hi[j] = self.hi[j].max(lx);
+        }
+        self.count += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(b: Vec<f64>, eps: f64) -> SolveRequest {
+        SolveRequest { id: 0, b, eps, threshold: 1e-9, arrival: 0.0 }
+    }
+
+    fn policy() -> AdmissionPolicy {
+        AdmissionPolicy {
+            max_batch: 4,
+            truncation_theta: -60.0,
+            absorb_threshold: 15.0,
+            drift_margin: 0.5,
+        }
+    }
+
+    #[test]
+    fn identical_histograms_fill_to_the_width_cap() {
+        let p = policy();
+        let r = req(vec![0.25; 4], 0.01);
+        let mut batch = p.open(&r);
+        assert!(batch.admit(&r));
+        assert!(batch.admit(&r));
+        assert!(batch.admit(&r));
+        assert_eq!(batch.len(), 4);
+        // Width cap, not drift, refuses the fifth.
+        assert!(!batch.admit(&r));
+        assert_eq!(batch.len(), 4);
+    }
+
+    #[test]
+    fn default_tuning_budget_is_margin_limited() {
+        // margin·τ = 7.5 binds before the hard capacity (300): budget 15.
+        assert!((policy().spread_budget() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn far_histogram_opens_a_new_batch() {
+        let p = policy();
+        let near = req(vec![0.25, 0.25, 0.25, 0.25], 0.01);
+        // One coordinate 20 decades of e below the seed: spread ≈ 20 > 15.
+        let far = req(vec![0.25 * (-20.0f64).exp(), 0.25, 0.25, 0.25], 0.01);
+        let mut batch = p.open(&near);
+        assert!(!batch.admit(&far));
+        assert_eq!(batch.len(), 1);
+        // The refused request seeds its own batch fine.
+        let mut other = p.open(&far);
+        assert!(other.admit(&far));
+    }
+
+    #[test]
+    fn eps_mismatch_never_shares_a_batch() {
+        let p = policy();
+        let r1 = req(vec![0.5, 0.5], 0.01);
+        let r2 = req(vec![0.5, 0.5], 0.02);
+        let mut batch = p.open(&r1);
+        assert!(!batch.admit(&r2));
+    }
+
+    #[test]
+    fn margin_tightens_the_budget() {
+        let mut p = policy();
+        let seed = req(vec![0.5, 0.5], 0.01);
+        // Spread of ~2.0 between these two.
+        let near = req(vec![0.5 * (-2.0f64).exp(), 0.5], 0.01);
+        assert!(p.open(&seed).admit(&near));
+        p.drift_margin = 0.05; // budget 2·0.75 = 1.5 < 2.0
+        assert!(!p.open(&seed).admit(&near));
+    }
+
+    #[test]
+    fn disabled_hybrid_has_no_drift_budget() {
+        let mut p = policy();
+        p.absorb_threshold = f64::INFINITY;
+        assert_eq!(p.spread_budget(), f64::INFINITY);
+        let seed = req(vec![0.5, 0.5], 0.01);
+        let far = req(vec![0.5 * (-40.0f64).exp(), 0.5], 0.01);
+        assert!(p.open(&seed).admit(&far));
+    }
+}

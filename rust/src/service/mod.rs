@@ -1,0 +1,465 @@
+//! Multi-tenant solve service: many concurrent solve requests against a
+//! **shared cost geometry**, coalesced into batched absorbed solves.
+//!
+//! The paper's workloads solve one histogram set per run; a serving
+//! deployment instead sees a stream of `(b, ε, tol)` requests over one
+//! cost matrix. Because the Sinkhorn iteration is column-separable,
+//! requests admitted into the same batch run as extra GEMM columns for
+//! nearly free — one θ-truncation, one absorbed support, one operator —
+//! while [`admission`] keeps incompatible histograms (predicted dual
+//! drift past the covered capacity) out of the batch rather than letting
+//! them force fleet-wide retruncations. Inside a batch, per-column
+//! stopping ([`crate::sinkhorn::CentralizedSolver::solve_columns`])
+//! freezes each request at *its own* tolerance and streams it back while
+//! the rest keep iterating.
+//!
+//! Scheduling is a deterministic open-loop simulation: request arrivals
+//! come from the workload (virtual seconds), service times are the
+//! measured wall time of each batch solve, and the queue drains in FIFO
+//! order one batch at a time.
+
+pub mod admission;
+pub mod workload;
+
+pub use admission::{AdmissionPolicy, Batcher};
+pub use workload::{synth_requests, WorkloadSpec};
+
+use crate::jsonio::Json;
+use crate::linalg::{Domain, Mat, Stabilization};
+use crate::metrics::percentile;
+use crate::runtime::ComputeBackend;
+use crate::sinkhorn::{CentralizedSolver, StopPolicy};
+use crate::workload::Problem;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// One tenant request: a target histogram over the shared geometry's
+/// support, its own regularization ε and convergence tolerance, and an
+/// arrival time in virtual seconds.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub id: u64,
+    /// Target marginal, length `n`, unit mass.
+    pub b: Vec<f64>,
+    pub eps: f64,
+    /// Per-request a-marginal L1 tolerance (per-column stopping target).
+    pub threshold: f64,
+    /// Arrival time (virtual seconds from service start).
+    pub arrival: f64,
+}
+
+/// Per-request outcome.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    /// Index into [`ServiceReport::batches`] of the batch that served it.
+    pub batch: usize,
+    /// Iteration the column froze at (batch-local count).
+    pub iterations: usize,
+    pub err: f64,
+    pub threshold: f64,
+    pub converged: bool,
+    /// Seconds queued before its batch started.
+    pub queue_wait: f64,
+    /// Seconds from batch start to this column's freeze.
+    pub solve_secs: f64,
+    /// `queue_wait + solve_secs` — what the tenant observes.
+    pub latency: f64,
+    /// The scaling pair frozen at convergence (domain of the run) —
+    /// what a real deployment would stream back to the tenant.
+    pub u: Vec<f64>,
+    pub v: Vec<f64>,
+}
+
+/// Per-batch accounting.
+#[derive(Clone, Debug)]
+pub struct BatchRecord {
+    pub size: usize,
+    /// Iterations of the slowest surviving column.
+    pub iterations: usize,
+    pub secs: f64,
+    pub compactions: usize,
+    /// Members frozen strictly before the batch finished.
+    pub early_frozen: usize,
+    pub updates: usize,
+    pub absorbs: usize,
+    pub rebuilds: usize,
+}
+
+/// Service knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub alpha: f64,
+    pub max_iters: usize,
+    pub max_batch: usize,
+    /// See [`AdmissionPolicy::drift_margin`].
+    pub drift_margin: f64,
+    pub stab: Stabilization,
+    pub domain: Domain,
+    /// Also run every request standalone (same tolerance) and report the
+    /// amortization: batched rebuild/absorb totals vs the sum over
+    /// standalone runs.
+    pub compare_standalone: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            alpha: 1.0,
+            max_iters: 6000,
+            max_batch: 32,
+            drift_margin: 0.5,
+            stab: Stabilization::default(),
+            domain: Domain::Log,
+            compare_standalone: false,
+        }
+    }
+}
+
+/// Totals of the per-request standalone baseline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StandaloneBaseline {
+    pub solves: usize,
+    pub iterations: usize,
+    pub rebuilds: usize,
+    pub absorbs: usize,
+    pub unconverged: usize,
+}
+
+/// Everything a `serve` run reports.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    /// Per-request outcomes, in request-id order.
+    pub requests: Vec<RequestResult>,
+    pub batches: Vec<BatchRecord>,
+    /// Admission refusals that closed an otherwise-open batch.
+    pub splits: usize,
+    pub makespan_secs: f64,
+    pub throughput_rps: f64,
+    pub latency_p50: f64,
+    pub latency_p90: f64,
+    pub latency_p99: f64,
+    /// Mean batch width.
+    pub occupancy_mean: f64,
+    pub standalone: Option<StandaloneBaseline>,
+}
+
+impl ServiceReport {
+    pub fn unconverged(&self) -> usize {
+        self.requests.iter().filter(|r| !r.converged).count()
+    }
+
+    pub fn early_frozen(&self) -> usize {
+        self.batches.iter().map(|b| b.early_frozen).sum()
+    }
+
+    pub fn rebuilds(&self) -> usize {
+        self.batches.iter().map(|b| b.rebuilds).sum()
+    }
+
+    pub fn absorbs(&self) -> usize {
+        self.batches.iter().map(|b| b.absorbs).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let latencies: Vec<f64> = self.requests.iter().map(|r| r.latency).collect();
+        let sizes: Vec<f64> = self.batches.iter().map(|b| b.size as f64).collect();
+        let mut pairs = vec![
+            ("requests", Json::from(self.requests.len())),
+            ("batches", Json::from(self.batches.len())),
+            ("splits", Json::from(self.splits)),
+            ("makespan_secs", Json::from(self.makespan_secs)),
+            ("throughput_rps", Json::from(self.throughput_rps)),
+            ("latency_p50", Json::from(self.latency_p50)),
+            ("latency_p90", Json::from(self.latency_p90)),
+            ("latency_p99", Json::from(self.latency_p99)),
+            ("occupancy_mean", Json::from(self.occupancy_mean)),
+            ("early_frozen", Json::from(self.early_frozen())),
+            ("unconverged", Json::from(self.unconverged())),
+            ("compactions", Json::from(self.batches.iter().map(|b| b.compactions).sum::<usize>())),
+            ("rebuilds", Json::from(self.rebuilds())),
+            ("absorbs", Json::from(self.absorbs())),
+            ("updates", Json::from(self.batches.iter().map(|b| b.updates).sum::<usize>())),
+            ("batch_sizes", Json::nums(&sizes)),
+            ("latencies", Json::nums(&latencies)),
+        ];
+        if let Some(s) = self.standalone {
+            pairs.push((
+                "standalone",
+                Json::obj(vec![
+                    ("solves", s.solves.into()),
+                    ("iterations", s.iterations.into()),
+                    ("rebuilds", s.rebuilds.into()),
+                    ("absorbs", s.absorbs.into()),
+                    ("unconverged", s.unconverged.into()),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Derive the per-ε problem for a batch: the geometry's cost matrix with
+/// the batch's packed histogram columns. Cloning the per-ε base shares
+/// every lazily-built kernel cache (`Arc`-backed), so all batches at one
+/// ε pay the θ-truncation exactly once; a *new* ε needs its own caches
+/// and gets a fresh [`Problem::from_parts`].
+fn problem_for(
+    geometry: &Problem,
+    eps_map: &mut BTreeMap<u64, Problem>,
+    eps: f64,
+    b: Mat,
+) -> Problem {
+    let base = eps_map.entry(eps.to_bits()).or_insert_with(|| {
+        if eps == geometry.eps {
+            geometry.clone()
+        } else {
+            let mut p = Problem::from_parts(
+                geometry.a.clone(),
+                geometry.b.clone(),
+                geometry.cost.clone(),
+                eps,
+            );
+            p.masked_cost_min = geometry.masked_cost_min;
+            p
+        }
+    });
+    let mut p = base.clone();
+    p.b = b;
+    p
+}
+
+/// Drain `requests` (any order; scheduled FIFO by arrival) through
+/// batched absorbed solves over `geometry`'s cost matrix. Returns the
+/// per-request, per-batch, and aggregate accounting.
+pub fn run_service(
+    backend: Arc<dyn ComputeBackend>,
+    geometry: &Problem,
+    requests: &[SolveRequest],
+    cfg: &ServiceConfig,
+) -> ServiceReport {
+    assert!(!requests.is_empty(), "empty request stream");
+    let n = geometry.n;
+    for r in requests {
+        assert_eq!(r.b.len(), n, "request {} histogram length", r.id);
+    }
+    let policy = AdmissionPolicy {
+        max_batch: cfg.max_batch,
+        truncation_theta: cfg.stab.truncation_theta,
+        absorb_threshold: cfg.stab.absorb_threshold,
+        drift_margin: cfg.drift_margin,
+    };
+    let solver = CentralizedSolver::new(backend.clone()).with_stabilization(cfg.stab);
+    let stop = StopPolicy {
+        threshold: 0.0, // ignored: per-column thresholds rule
+        max_iters: cfg.max_iters,
+        timeout_secs: 0.0,
+        check_every: 1,
+    };
+
+    // FIFO by arrival (ties keep submission order).
+    let mut order: Vec<usize> = (0..requests.len()).collect();
+    order.sort_by(|&i, &j| {
+        requests[i]
+            .arrival
+            .partial_cmp(&requests[j].arrival)
+            .unwrap()
+            .then(i.cmp(&j))
+    });
+
+    let mut eps_map: BTreeMap<u64, Problem> = BTreeMap::new();
+    let mut results: Vec<Option<RequestResult>> = vec![None; requests.len()];
+    let mut batches = Vec::new();
+    let mut splits = 0usize;
+    let mut t_free = 0.0f64;
+    let mut next = 0usize;
+
+    while next < order.len() {
+        let first = &requests[order[next]];
+        // The server goes idle until the head request arrives.
+        let t_start = t_free.max(first.arrival);
+        let mut batch = policy.open(first);
+        let mut members = vec![order[next]];
+        next += 1;
+        // Coalesce the arrived FIFO prefix while admission allows; the
+        // first refusal closes the batch (a split) so the stream stays
+        // in order.
+        while next < order.len() {
+            let r = &requests[order[next]];
+            if r.arrival > t_start || batch.len() >= cfg.max_batch {
+                break;
+            }
+            if !batch.admit(r) {
+                splits += 1;
+                break;
+            }
+            members.push(order[next]);
+            next += 1;
+        }
+
+        let w = members.len();
+        let mut b_pack = Mat::zeros(n, w);
+        for (k, &m) in members.iter().enumerate() {
+            for i in 0..n {
+                b_pack[(i, k)] = requests[m].b[i];
+            }
+        }
+        let pb = problem_for(geometry, &mut eps_map, first.eps, b_pack);
+        let thresholds: Vec<f64> = members.iter().map(|&m| requests[m].threshold).collect();
+        let outcome = solver.solve_columns(
+            &pb,
+            stop,
+            &thresholds,
+            cfg.alpha,
+            cfg.domain,
+            // Results are collected below; nothing streams out-of-process.
+            &mut |_col, _out| {},
+        );
+
+        let batch_idx = batches.len();
+        let mut early = 0usize;
+        for (k, &m) in members.iter().enumerate() {
+            let col = &outcome.columns[k];
+            if col.converged && col.iterations < outcome.iterations {
+                early += 1;
+            }
+            let queue_wait = t_start - requests[m].arrival;
+            results[m] = Some(RequestResult {
+                id: requests[m].id,
+                batch: batch_idx,
+                iterations: col.iterations,
+                err: col.err,
+                threshold: requests[m].threshold,
+                converged: col.converged,
+                queue_wait,
+                solve_secs: col.secs,
+                latency: queue_wait + col.secs,
+                u: col.u.clone(),
+                v: col.v.clone(),
+            });
+        }
+        let stab = outcome.stab.clone().unwrap_or_default();
+        batches.push(BatchRecord {
+            size: w,
+            iterations: outcome.iterations,
+            secs: outcome.secs,
+            compactions: outcome.compactions,
+            early_frozen: early,
+            updates: stab.updates,
+            absorbs: stab.absorbs,
+            rebuilds: stab.rebuilds,
+        });
+        t_free = t_start + outcome.secs;
+    }
+
+    let standalone = cfg.compare_standalone.then(|| {
+        let mut base = StandaloneBaseline { solves: requests.len(), ..Default::default() };
+        for r in requests {
+            let mut b1 = Mat::zeros(n, 1);
+            for i in 0..n {
+                b1[(i, 0)] = r.b[i];
+            }
+            let p1 = problem_for(geometry, &mut eps_map, r.eps, b1);
+            let out = solver.solve_in(
+                &p1,
+                StopPolicy { threshold: r.threshold, ..stop },
+                cfg.alpha,
+                cfg.domain,
+            );
+            base.iterations += out.iterations;
+            if !out.converged() {
+                base.unconverged += 1;
+            }
+            if let Some(s) = out.stab {
+                base.rebuilds += s.rebuilds;
+                base.absorbs += s.absorbs;
+            }
+        }
+        base
+    });
+
+    let requests_out: Vec<RequestResult> = results.into_iter().map(Option::unwrap).collect();
+    let latencies: Vec<f64> = requests_out.iter().map(|r| r.latency).collect();
+    let makespan = t_free.max(f64::MIN_POSITIVE);
+    let occupancy = requests_out.len() as f64 / batches.len().max(1) as f64;
+    ServiceReport {
+        splits,
+        makespan_secs: makespan,
+        throughput_rps: requests_out.len() as f64 / makespan,
+        latency_p50: percentile(&latencies, 0.50),
+        latency_p90: percentile(&latencies, 0.90),
+        latency_p99: percentile(&latencies, 0.99),
+        occupancy_mean: occupancy,
+        requests: requests_out,
+        batches,
+        standalone,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::experiments::build_problem;
+    use crate::runtime::make_backend;
+    use crate::workload::CondClass;
+
+    fn native() -> Arc<dyn ComputeBackend> {
+        make_backend(BackendKind::Native, "", 1).unwrap()
+    }
+
+    #[test]
+    fn burst_workload_batches_and_converges() {
+        let geometry = build_problem(24, 1, 0.05, 0.0, 2, CondClass::Well, 11);
+        let spec = WorkloadSpec {
+            requests: 12,
+            tenants: 3,
+            perturb: 0.3,
+            arrival_rate: 0.0,
+            threshold: 1e-8,
+            tolerance_jitter: 1.0,
+            seed: 5,
+        };
+        let mut reqs = synth_requests(24, &spec);
+        for r in &mut reqs {
+            r.eps = geometry.eps;
+        }
+        let cfg = ServiceConfig { max_batch: 8, ..Default::default() };
+        let rep = run_service(native(), &geometry, &reqs, &cfg);
+        assert_eq!(rep.requests.len(), 12);
+        assert_eq!(rep.unconverged(), 0, "{rep:?}");
+        // Burst + small spread: far fewer batches than requests.
+        assert!(rep.batches.len() <= 4, "batches {}", rep.batches.len());
+        assert!(rep.occupancy_mean >= 3.0);
+        for r in &rep.requests {
+            assert!(r.err < r.threshold, "req {}: {} !< {}", r.id, r.err, r.threshold);
+            assert!(r.latency >= r.solve_secs);
+        }
+        // Heterogeneous tolerances ⇒ some column froze before the batch.
+        assert!(rep.early_frozen() > 0);
+        let j = rep.to_json();
+        assert_eq!(j.get("requests").and_then(Json::as_usize), Some(12));
+        assert_eq!(j.get("unconverged").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn incompatible_eps_lands_in_separate_batches() {
+        let geometry = build_problem(16, 1, 0.05, 0.0, 2, CondClass::Well, 3);
+        let b: Vec<f64> = (0..16).map(|i| geometry.b[(i, 0)]).collect();
+        let mk = |id: u64, eps: f64| SolveRequest {
+            id,
+            b: b.clone(),
+            eps,
+            threshold: 1e-8,
+            arrival: 0.0,
+        };
+        let reqs = vec![mk(0, 0.05), mk(1, 0.1), mk(2, 0.05)];
+        let cfg = ServiceConfig { max_batch: 8, ..Default::default() };
+        let rep = run_service(native(), &geometry, &reqs, &cfg);
+        assert_eq!(rep.unconverged(), 0);
+        // FIFO split at the ε boundary: [0], [1], [2] or [0], [1], [2]
+        // merged never — 3 batches, ≥1 split counted at the refusal.
+        assert_eq!(rep.batches.len(), 3);
+        assert!(rep.splits >= 1);
+    }
+}

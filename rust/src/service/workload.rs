@@ -1,0 +1,141 @@
+//! Synthetic open-loop request workload for the solve service.
+//!
+//! Models a multi-tenant population sharing one cost geometry: each
+//! tenant owns a base histogram; its requests perturb that base in log
+//! space (so perturbation scale maps directly onto the admission
+//! policy's spread metric), arrive as a Poisson stream, and carry
+//! per-request convergence tolerances jittered across decades.
+
+use super::SolveRequest;
+use crate::rng::{child_seed, Rng};
+
+/// Generator knobs for [`synth_requests`].
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSpec {
+    /// Total requests to emit.
+    pub requests: usize,
+    /// Tenant (base-histogram) count; request `i` belongs to tenant
+    /// `i % tenants`.
+    pub tenants: usize,
+    /// Log-space perturbation scale: each request's log-weights are the
+    /// tenant base plus `perturb · U[−1, 1]` per coordinate. Directly
+    /// comparable to the admission spread budget.
+    pub perturb: f64,
+    /// Open-loop Poisson arrival rate (requests/sec of virtual time);
+    /// `0` means the whole workload arrives as one burst at t = 0.
+    pub arrival_rate: f64,
+    /// Base marginal-error tolerance.
+    pub threshold: f64,
+    /// Per-request tolerance jitter in decades: request tolerance is
+    /// `threshold · 10^(−U[0,1]·jitter)`, so some requests demand up to
+    /// `jitter` decades tighter convergence than others — the per-column
+    /// stopping path is pointless without this heterogeneity.
+    pub tolerance_jitter: f64,
+    pub seed: u64,
+}
+
+/// Emit `spec.requests` histogram-solve requests of dimension `n`,
+/// sorted by (strictly increasing) arrival time, ids dense from 0.
+pub fn synth_requests(n: usize, spec: &WorkloadSpec) -> Vec<SolveRequest> {
+    assert!(n > 0 && spec.requests > 0 && spec.tenants > 0);
+    let mut bases = Vec::with_capacity(spec.tenants);
+    for t in 0..spec.tenants {
+        let mut rng = Rng::seed_from(child_seed(spec.seed, 1 + t as u64));
+        let base: Vec<f64> = (0..n).map(|_| rng.uniform_range(-1.0, 1.0)).collect();
+        bases.push(base);
+    }
+    let mut rng = Rng::seed_from(child_seed(spec.seed, 0));
+    let mut t_arrive = 0.0f64;
+    let mut out = Vec::with_capacity(spec.requests);
+    for i in 0..spec.requests {
+        let base = &bases[i % spec.tenants];
+        let logw: Vec<f64> = base
+            .iter()
+            .map(|&w| w + spec.perturb * rng.uniform_range(-1.0, 1.0))
+            .collect();
+        // Softmax-normalize into a unit-mass histogram.
+        let mx = logw.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut b: Vec<f64> = logw.iter().map(|&w| (w - mx).exp()).collect();
+        let mass: f64 = b.iter().sum();
+        for x in &mut b {
+            *x /= mass;
+        }
+        if spec.arrival_rate > 0.0 {
+            t_arrive += -(1.0 - rng.uniform()).ln() / spec.arrival_rate;
+        }
+        let threshold =
+            spec.threshold * 10f64.powf(-rng.uniform() * spec.tolerance_jitter);
+        out.push(SolveRequest { id: i as u64, b, eps: 0.0, threshold, arrival: t_arrive });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            requests: 24,
+            tenants: 4,
+            perturb: 0.5,
+            arrival_rate: 10.0,
+            threshold: 1e-9,
+            tolerance_jitter: 1.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn requests_are_unit_mass_and_time_ordered() {
+        let reqs = synth_requests(32, &spec());
+        assert_eq!(reqs.len(), 24);
+        let mut last = -1.0;
+        for r in &reqs {
+            let mass: f64 = r.b.iter().sum();
+            assert!((mass - 1.0).abs() < 1e-12);
+            assert!(r.b.iter().all(|&x| x > 0.0));
+            assert!(r.arrival > last);
+            last = r.arrival;
+            assert!(r.threshold <= 1e-9 && r.threshold >= 1e-10 - 1e-25);
+        }
+    }
+
+    #[test]
+    fn burst_mode_arrives_at_time_zero() {
+        let mut s = spec();
+        s.arrival_rate = 0.0;
+        assert!(synth_requests(8, &s).iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn same_tenant_requests_cluster_in_log_space() {
+        let mut s = spec();
+        s.perturb = 0.1;
+        let reqs = synth_requests(16, &s);
+        // Requests 0 and 4 share tenant 0; 0 and 1 do not. The intra-
+        // tenant log-spread should be far below the inter-tenant one on
+        // average (perturb ≪ base range).
+        let spread = |x: &SolveRequest, y: &SolveRequest| {
+            x.b.iter()
+                .zip(&y.b)
+                .map(|(&p, &q)| (p.ln() - q.ln()).abs())
+                .fold(0.0f64, f64::max)
+        };
+        let intra = spread(&reqs[0], &reqs[4]);
+        let inter = spread(&reqs[0], &reqs[1]);
+        assert!(intra < inter, "intra {intra} vs inter {inter}");
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let a = synth_requests(16, &spec());
+        let b = synth_requests(16, &spec());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.b, y.b);
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.threshold, y.threshold);
+        }
+    }
+}

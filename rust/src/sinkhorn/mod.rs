@@ -10,7 +10,9 @@ mod ops;
 mod solver;
 
 pub use ops::{full_marginal_errors, objective, transport_plan};
-pub use solver::{CentralizedSolver, HistoryPoint, SolveOutcome, StopReason};
+pub use solver::{
+    BatchOutcome, CentralizedSolver, ColumnOutcome, HistoryPoint, SolveOutcome, StopReason,
+};
 
 use crate::linalg::{Domain, Mat};
 

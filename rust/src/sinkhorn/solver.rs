@@ -4,7 +4,7 @@ use super::ops::convergence_sample;
 use super::{State, StopPolicy};
 use crate::linalg::{Domain, Mat, Stabilization};
 use crate::metrics::Clock;
-use crate::runtime::{ComputeBackend, StabStats, Target};
+use crate::runtime::{BlockOp, ComputeBackend, StabStats, Target};
 use crate::workload::Problem;
 use std::sync::Arc;
 
@@ -53,6 +53,39 @@ impl SolveOutcome {
     pub fn converged(&self) -> bool {
         self.stop == StopReason::Converged
     }
+}
+
+/// Per-column result of a batched multi-histogram solve with per-column
+/// stopping ([`CentralizedSolver::solve_columns`]): the frozen scaling
+/// pair, the iteration the column converged at (or the batch's last),
+/// and its marginal error at the freeze check.
+#[derive(Clone, Debug)]
+pub struct ColumnOutcome {
+    /// Frozen log/linear scalings of this histogram column (length m).
+    pub u: Vec<f64>,
+    pub v: Vec<f64>,
+    pub iterations: usize,
+    /// a-marginal L1 error at the freeze (or final) check.
+    pub err: f64,
+    pub converged: bool,
+    /// Wall-clock seconds from batch start to this column's freeze.
+    pub secs: f64,
+}
+
+/// Batch-level result of [`CentralizedSolver::solve_columns`].
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// One outcome per histogram column, in the problem's column order.
+    pub columns: Vec<ColumnOutcome>,
+    /// Iterations the *batch* ran (its slowest surviving column).
+    pub iterations: usize,
+    pub stop: StopReason,
+    pub secs: f64,
+    /// Merged absorption-hybrid counters across every operator epoch
+    /// (compaction rebuilds included); `None` off the stabilized path.
+    pub stab: Option<StabStats>,
+    /// How many times frozen columns were packed out of the operators.
+    pub compactions: usize,
 }
 
 /// The centralized baseline: both scaling updates on one node, dispatched
@@ -111,27 +144,29 @@ impl CentralizedSolver {
         self.run(p, policy, alpha, domain, true)
     }
 
-    fn run(
+    /// Build the (u-op, v-op) pair for `p`'s geometry with an explicit
+    /// target-histogram matrix `b` and state seeds — the ONE dispatch
+    /// over the stabilized paths, shared by [`CentralizedSolver::run`]
+    /// (where `b = p.b` and the seeds are all-ones) and the batched
+    /// per-column solver (which rebuilds packed ops after freezes when
+    /// in-place compaction is unsupported).
+    ///
+    /// Log-domain construction goes through the stabilized dispatch: the
+    /// absorption-hybrid schedule (any histogram count, seeded from the
+    /// problem's cached zero-reference absorbed kernel) when enabled,
+    /// the θ-truncated sparse logsumexp when the truncated density falls
+    /// under the cutoff, dense logsumexp otherwise. Probes are
+    /// non-allocating scans; sparse/absorbed kernels are built (and
+    /// cached on the problem, shared across solves) only when their path
+    /// wins.
+    fn build_ops(
         &self,
         p: &Problem,
-        policy: StopPolicy,
-        alpha: f64,
         domain: Domain,
-        traced: bool,
-    ) -> SolveOutcome {
-        let n = p.n;
-        let nh = p.hists();
-        let clock = Clock::new();
-        let one = domain.one();
-
-        // Log-domain runs go through the stabilized dispatch: the
-        // absorption-hybrid schedule (any histogram count, seeded from
-        // the problem's cached zero-reference absorbed kernel) when
-        // enabled, the θ-truncated sparse logsumexp when the truncated
-        // density falls under the cutoff, dense logsumexp otherwise.
-        // Probes are non-allocating scans; sparse/absorbed kernels are
-        // built (and cached on the problem, shared across solves) only
-        // when their path wins.
+        b: &Mat,
+        u0: Mat,
+        v0: Mat,
+    ) -> (Box<dyn BlockOp>, Box<dyn BlockOp>) {
         let use_hybrid = domain == Domain::Log
             && self.backend.supports_log()
             && self.stab.hybrid_enabled();
@@ -146,14 +181,14 @@ impl CentralizedSolver {
         // v-update operator: A = Kᵀ, t = b (per-histogram matrix). The
         // transposes come from the problem's shared caches, so repeated
         // solves on one problem build each exactly once.
-        let (mut u_op, mut v_op) = if use_hybrid {
+        if use_hybrid {
             (
                 self.backend
                     .log_block_op_stabilized_seeded(
                         p.log_kernel(),
                         Some(p.absorbed_log_kernel(&self.stab)),
                         Target::Vec(&p.a),
-                        Mat::full(n, nh, one),
+                        u0,
                         &self.stab,
                     )
                     .expect("u-op"),
@@ -161,8 +196,8 @@ impl CentralizedSolver {
                     .log_block_op_stabilized_seeded(
                         p.log_kernel_t(),
                         Some(p.absorbed_log_kernel_t(&self.stab)),
-                        Target::Mat(&p.b),
-                        Mat::full(n, nh, one),
+                        Target::Mat(b),
+                        v0,
                         &self.stab,
                     )
                     .expect("v-op"),
@@ -172,10 +207,10 @@ impl CentralizedSolver {
             let kt = p.sparse_log_kernel_t(self.stab.truncation_theta);
             (
                 self.backend
-                    .sparse_log_block_op(&k, Target::Vec(&p.a), Mat::full(n, nh, one))
+                    .sparse_log_block_op(&k, Target::Vec(&p.a), u0)
                     .expect("u-op"),
                 self.backend
-                    .sparse_log_block_op(&kt, Target::Mat(&p.b), Mat::full(n, nh, one))
+                    .sparse_log_block_op(&kt, Target::Mat(b), v0)
                     .expect("v-op"),
             )
         } else {
@@ -185,7 +220,7 @@ impl CentralizedSolver {
                         domain,
                         p.kernel_for(domain),
                         Target::Vec(&p.a),
-                        Mat::full(n, nh, one),
+                        u0,
                         &self.stab,
                     )
                     .expect("u-op"),
@@ -193,13 +228,30 @@ impl CentralizedSolver {
                     .block_op_in_stabilized(
                         domain,
                         p.kernel_t_for(domain),
-                        Target::Mat(&p.b),
-                        Mat::full(n, nh, one),
+                        Target::Mat(b),
+                        v0,
                         &self.stab,
                     )
                     .expect("v-op"),
             )
-        };
+        }
+    }
+
+    fn run(
+        &self,
+        p: &Problem,
+        policy: StopPolicy,
+        alpha: f64,
+        domain: Domain,
+        traced: bool,
+    ) -> SolveOutcome {
+        let n = p.n;
+        let nh = p.hists();
+        let clock = Clock::new();
+        let one = domain.one();
+
+        let (mut u_op, mut v_op) =
+            self.build_ops(p, domain, &p.b, Mat::full(n, nh, one), Mat::full(n, nh, one));
 
         let mut history = Vec::new();
         let mut iterations = 0;
@@ -251,4 +303,154 @@ impl CentralizedSolver {
             stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
         }
     }
+
+    /// Batched multi-histogram solve with **per-column stopping**: every
+    /// histogram column of `p.b` carries its own convergence threshold
+    /// (`thresholds[h]` replaces `policy.threshold`, which is ignored),
+    /// and a column that reaches it is *frozen* — its scaling pair
+    /// snapshotted and streamed to `on_frozen(column, outcome)`
+    /// immediately — while the rest of the batch keeps iterating.
+    ///
+    /// Column `h` of the Sinkhorn iteration depends only on column `h`
+    /// (products, targets, and damping are all column-separable), so a
+    /// frozen column riding along never perturbs the survivors; it only
+    /// costs GEMM width. Once at least a quarter of the current batch is
+    /// frozen the operators are compacted: the hybrid packs its state
+    /// and per-column buffers in place (the absorbed kernel is
+    /// column-count independent and survives untouched), other paths
+    /// rebuild packed operators around the surviving state. The
+    /// quarter-width hysteresis bounds compactions to O(log N) per
+    /// batch instead of one per freeze.
+    ///
+    /// Columns still unconverged at `policy.max_iters` (or timeout) are
+    /// returned with `converged = false` and their last checked error;
+    /// `on_frozen` fires only for converged columns.
+    pub fn solve_columns(
+        &self,
+        p: &Problem,
+        policy: StopPolicy,
+        thresholds: &[f64],
+        alpha: f64,
+        domain: Domain,
+        on_frozen: &mut dyn FnMut(usize, &ColumnOutcome),
+    ) -> BatchOutcome {
+        let n = p.n;
+        let nh = p.hists();
+        assert_eq!(thresholds.len(), nh, "one tolerance per histogram column");
+        let clock = Clock::new();
+        let one = domain.one();
+        let (mut u_op, mut v_op) =
+            self.build_ops(p, domain, &p.b, Mat::full(n, nh, one), Mat::full(n, nh, one));
+
+        // active[slot] = original column of the packed operators' slot.
+        let mut active: Vec<usize> = (0..nh).collect();
+        let mut results: Vec<Option<ColumnOutcome>> = vec![None; nh];
+        let mut last_err = vec![f64::INFINITY; nh];
+        let mut retired_stats: Option<StabStats> = None;
+        let mut compactions = 0usize;
+        let mut iterations = 0usize;
+        let mut stop = StopReason::MaxIters;
+
+        for k in 1..=policy.max_iters {
+            iterations = k;
+            let u = u_op.update(v_op.state(), alpha);
+            let _v = v_op.update(u, alpha);
+
+            if policy.check_at(k) {
+                let u_now = u_op.state().clone();
+                let errs = u_op.marginal(v_op.state(), &u_now);
+                let mut frozen_any = false;
+                for (slot, &orig) in active.iter().enumerate() {
+                    last_err[orig] = errs[slot];
+                    if results[orig].is_some() {
+                        continue; // frozen already, riding until compaction
+                    }
+                    if errs[slot] < thresholds[orig] {
+                        let col = ColumnOutcome {
+                            u: col_of(u_op.state(), slot),
+                            v: col_of(v_op.state(), slot),
+                            iterations: k,
+                            err: errs[slot],
+                            converged: true,
+                            secs: clock.now(),
+                        };
+                        on_frozen(orig, &col);
+                        results[orig] = Some(col);
+                        frozen_any = true;
+                    }
+                }
+                let riding = active.iter().filter(|&&o| results[o].is_some()).count();
+                if riding == active.len() {
+                    stop = StopReason::Converged;
+                    break;
+                }
+                if frozen_any && riding * 4 >= active.len() {
+                    let keep: Vec<usize> = (0..active.len())
+                        .filter(|&s| results[active[s]].is_none())
+                        .collect();
+                    let u_ok = u_op.compact_columns(&keep);
+                    let v_ok = u_ok && v_op.compact_columns(&keep);
+                    if !(u_ok && v_ok) {
+                        // Non-compactable path: rebuild packed operators
+                        // around the surviving state, merging the
+                        // retiring epoch's counters first.
+                        retired_stats = StabStats::merged(
+                            retired_stats,
+                            StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+                        );
+                        let u_pack = if u_ok {
+                            u_op.state().clone()
+                        } else {
+                            u_op.state().select_cols(&keep)
+                        };
+                        let v_pack = v_op.state().select_cols(&keep);
+                        let kept_origs: Vec<usize> =
+                            keep.iter().map(|&s| active[s]).collect();
+                        let b_pack = p.b.select_cols(&kept_origs);
+                        let (nu, nv) = self.build_ops(p, domain, &b_pack, u_pack, v_pack);
+                        u_op = nu;
+                        v_op = nv;
+                    }
+                    active = keep.iter().map(|&s| active[s]).collect();
+                    compactions += 1;
+                }
+            }
+            if policy.timeout_secs > 0.0 && clock.now() > policy.timeout_secs {
+                stop = StopReason::Timeout;
+                break;
+            }
+        }
+
+        // Columns still live at exit: returned unconverged with their
+        // last checked error (∞ if no check ever ran).
+        for (slot, &orig) in active.iter().enumerate() {
+            if results[orig].is_none() {
+                results[orig] = Some(ColumnOutcome {
+                    u: col_of(u_op.state(), slot),
+                    v: col_of(v_op.state(), slot),
+                    iterations,
+                    err: last_err[orig],
+                    converged: false,
+                    secs: clock.now(),
+                });
+            }
+        }
+        let stab = StabStats::merged(
+            retired_stats,
+            StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+        );
+        BatchOutcome {
+            columns: results.into_iter().map(Option::unwrap).collect(),
+            iterations,
+            stop,
+            secs: clock.now(),
+            stab,
+            compactions,
+        }
+    }
+}
+
+/// Copy one column of an m×N scaling state.
+fn col_of(m: &Mat, c: usize) -> Vec<f64> {
+    (0..m.rows()).map(|i| m[(i, c)]).collect()
 }

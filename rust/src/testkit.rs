@@ -1,0 +1,46 @@
+//! Shared test-harness substrate: the hard-timeout wrapper that pins
+//! "this run degrades, never hangs" across the integration suites.
+//!
+//! Lives in the library (not a `tests/` helper module) so every test
+//! binary — faults, pool parity, service — bounds its blocking runs by
+//! the **same** budget, and so CI's job-level `timeout-minutes` can be
+//! reasoned about against one number instead of per-file copies.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Hard wall-clock budget for any single bounded test run. Deliberately
+/// far above what a healthy run needs on a loaded CI runner: tripping it
+/// means a liveness bug (a blocking wait the recovery policy does not
+/// bound), not a slow machine.
+pub const HARD_TIMEOUT_SECS: u64 = 30;
+
+/// Run `f` on its own thread and fail — rather than wedge the test
+/// binary — if it has not returned within [`HARD_TIMEOUT_SECS`]. A
+/// recovery-path bug that blocks forever shows up as a clean test
+/// failure with `what` in the message.
+pub fn run_with_timeout<T: Send + 'static>(
+    what: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(Duration::from_secs(HARD_TIMEOUT_SECS)).unwrap_or_else(|e| {
+        panic!("{what}: run did not finish within {HARD_TIMEOUT_SECS}s ({e:?})")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_the_closure_result_through() {
+        // (The timeout leg itself is exercised by the fault suite's
+        // crash tests — tripping it here would cost HARD_TIMEOUT_SECS
+        // of wall time per run.)
+        assert_eq!(run_with_timeout("quick", || 41 + 1), 42);
+    }
+}

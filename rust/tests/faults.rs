@@ -17,11 +17,11 @@
 //! hard-timeout harness that fails the test instead of wedging it.
 
 use fedsink::config::{BackendKind, SolveConfig, Variant};
-use fedsink::coordinator::{run_federated, FederatedOutcome};
+use fedsink::coordinator::run_federated;
 use fedsink::net::{FaultPlan, LatencyModel, LinkFault, NodeFault, NodeLoss, Recovery};
 use fedsink::sinkhorn::{StopPolicy, StopReason};
+use fedsink::testkit::run_with_timeout;
 use fedsink::workload::ProblemSpec;
-use std::time::Duration;
 
 /// The pinned thread counts: serial, the smallest parallel split, and
 /// the machine's full width (deduplicated on narrow CI runners).
@@ -76,23 +76,6 @@ fn assert_bit_identical(got: &[f64], want: &[f64], what: &str) {
     for (i, (g, w)) in got.iter().zip(want).enumerate() {
         assert!(g.to_bits() == w.to_bits(), "{what}: index {i} differs: got {g:e}, want {w:e}");
     }
-}
-
-/// Run `f` on its own thread and fail — rather than wedge the test
-/// binary — if it has not returned within `secs`. This is the
-/// "crash injection never hangs" acceptance pin: a recovery-path bug
-/// that blocks forever shows up as a clean test failure.
-fn run_with_timeout(
-    what: &str,
-    secs: u64,
-    f: impl FnOnce() -> FederatedOutcome + Send + 'static,
-) -> FederatedOutcome {
-    let (tx, rx) = std::sync::mpsc::channel();
-    std::thread::spawn(move || {
-        let _ = tx.send(f());
-    });
-    rx.recv_timeout(Duration::from_secs(secs))
-        .unwrap_or_else(|e| panic!("{what}: run did not finish within {secs}s ({e:?})"))
 }
 
 #[test]
@@ -201,7 +184,7 @@ fn sync_a2a_abort_flags_peer_loss_without_hanging() {
     let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
     let policy = StopPolicy { threshold: 1e-11, max_iters: 300, ..Default::default() };
     let c = cfg(Variant::SyncA2A, crash_plan(1, 3), fast_recovery(NodeLoss::Abort));
-    let out = run_with_timeout("sync-a2a abort", 30, move || run_federated(&p, &c, policy, false));
+    let out = run_with_timeout("sync-a2a abort", move || run_federated(&p, &c, policy, false));
     assert_eq!(out.stop, StopReason::PeerLoss);
     assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
     assert!(!out.converged);
@@ -212,7 +195,7 @@ fn sync_a2a_exclude_continues_degraded() {
     let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
     let policy = StopPolicy { threshold: 1e-11, max_iters: 60, ..Default::default() };
     let c = cfg(Variant::SyncA2A, crash_plan(1, 3), fast_recovery(NodeLoss::Exclude));
-    let out = run_with_timeout("sync-a2a exclude", 30, move || {
+    let out = run_with_timeout("sync-a2a exclude", move || {
         run_federated(&p, &c, policy, false)
     });
     // The survivor runs the protocol to completion against node 1's
@@ -228,7 +211,7 @@ fn sync_star_server_crash_aborts_clients() {
     // Node id 2 is the server of a 2-client star; losing it is always
     // fatal to the clients — it owns the kernel — even under `exclude`.
     let c = cfg(Variant::SyncStar, crash_plan(2, 3), fast_recovery(NodeLoss::Exclude));
-    let out = run_with_timeout("sync-star server crash", 30, move || {
+    let out = run_with_timeout("sync-star server crash", move || {
         run_federated(&p, &c, policy, false)
     });
     assert_eq!(out.stop, StopReason::PeerLoss);
@@ -240,7 +223,7 @@ fn sync_star_client_crash_excludes_and_finishes() {
     let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
     let policy = StopPolicy { threshold: 1e-11, max_iters: 60, ..Default::default() };
     let c = cfg(Variant::SyncStar, crash_plan(0, 3), fast_recovery(NodeLoss::Exclude));
-    let out = run_with_timeout("sync-star client crash", 30, move || {
+    let out = run_with_timeout("sync-star client crash", move || {
         run_federated(&p, &c, policy, false)
     });
     assert_ne!(out.stop, StopReason::PeerLoss, "exclude must not abort");
@@ -252,7 +235,7 @@ fn async_a2a_crash_degrades_gracefully() {
     let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
     let policy = StopPolicy { threshold: 1e-8, max_iters: 600, ..Default::default() };
     let c = cfg(Variant::AsyncA2A, crash_plan(1, 5), fast_recovery(NodeLoss::Exclude));
-    let out = run_with_timeout("async-a2a crash", 30, move || run_federated(&p, &c, policy, false));
+    let out = run_with_timeout("async-a2a crash", move || run_federated(&p, &c, policy, false));
     // The survivor folds the dead peer into its done votes and finishes
     // on its own slice; the outcome is flagged, never a hang.
     assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
@@ -263,7 +246,7 @@ fn async_star_client_crash_degrades_gracefully() {
     let p = ProblemSpec::new(32).with_eps(0.5).build(0xFA17);
     let policy = StopPolicy { threshold: 1e-8, max_iters: 600, ..Default::default() };
     let c = cfg(Variant::AsyncStar, crash_plan(1, 5), fast_recovery(NodeLoss::Exclude));
-    let out = run_with_timeout("async-star client crash", 30, move || {
+    let out = run_with_timeout("async-star client crash", move || {
         run_federated(&p, &c, policy, false)
     });
     assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);

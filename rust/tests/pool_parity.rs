@@ -13,6 +13,7 @@
 
 use fedsink::linalg::{AbsorbedLogCsr, Csr, LogCsr, Mat};
 use fedsink::rng::{child_seed, Rng};
+use fedsink::testkit::run_with_timeout;
 
 /// The pinned thread counts: serial, the smallest parallel split, and
 /// the machine's full width (deduplicated on narrow CI runners).
@@ -83,22 +84,27 @@ fn sparse_dense(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
 
 #[test]
 fn dense_matmul_pool_matches_scoped_spawn() {
-    for (case, &(rows, n, nh)) in [(37usize, 29usize, 3usize), (64, 51, 1)].iter().enumerate() {
-        let mut rng = Rng::seed_from(child_seed(0x9001, case as u64));
-        let a = Mat::rand_uniform(rows, n, 0.1, 1.0, &mut rng);
-        let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
-        for t in thread_counts() {
-            let got = a.matmul(&x, t);
-            let want = scoped_rows(rows, nh, t, |r0, r1| {
-                a.row_block(r0, r1).matmul(&x, 1).as_slice().to_vec()
-            });
-            assert_bit_identical(
-                got.as_slice(),
-                &want,
-                &format!("dense matmul ({rows}x{n}x{nh}) at {t} threads"),
-            );
+    // Bounded by the shared harness: this leg mixes pool dispatch with
+    // fresh scoped spawns, so a pool liveness bug would wedge it.
+    run_with_timeout("dense pool parity", || {
+        for (case, &(rows, n, nh)) in [(37usize, 29usize, 3usize), (64, 51, 1)].iter().enumerate()
+        {
+            let mut rng = Rng::seed_from(child_seed(0x9001, case as u64));
+            let a = Mat::rand_uniform(rows, n, 0.1, 1.0, &mut rng);
+            let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+            for t in thread_counts() {
+                let got = a.matmul(&x, t);
+                let want = scoped_rows(rows, nh, t, |r0, r1| {
+                    a.row_block(r0, r1).matmul(&x, 1).as_slice().to_vec()
+                });
+                assert_bit_identical(
+                    got.as_slice(),
+                    &want,
+                    &format!("dense matmul ({rows}x{n}x{nh}) at {t} threads"),
+                );
+            }
         }
-    }
+    });
 }
 
 #[test]

@@ -1,0 +1,169 @@
+//! Multi-tenant service acceptance pins.
+//!
+//! Three contracts from the serving layer, on a ≥64-request workload
+//! over one shared ill-conditioned geometry:
+//!
+//! 1. **Tolerance** — every request converges, and the a-marginal L1
+//!    error recomputed from its *frozen* scaling pair (dense log-domain
+//!    oracle, independent of the solver's absorbed kernels) honors the
+//!    request's own tolerance.
+//! 2. **Parity** — batching is invisible to the answer: the Sinkhorn
+//!    iteration is column-separable, so a batched column's marginals
+//!    match a standalone single-histogram solve to ≤ 1e-8.
+//! 3. **Amortization** — one shared absorbed support per batch means
+//!    the batched run's total full retruncations stay *strictly* below
+//!    the sum over standalone runs.
+//!
+//! Plus the per-column stopping pin: jittered tolerances must freeze
+//! different columns at different iterations.
+
+use fedsink::config::BackendKind;
+use fedsink::experiments::build_problem;
+use fedsink::linalg::{Domain, Mat};
+use fedsink::runtime::make_backend;
+use fedsink::service::{run_service, synth_requests, ServiceConfig, WorkloadSpec};
+use fedsink::sinkhorn::{CentralizedSolver, StopPolicy};
+use fedsink::testkit::run_with_timeout;
+use fedsink::workload::{CondClass, Problem};
+
+const N: usize = 48;
+const EPS: f64 = 0.005;
+const MAX_ITERS: usize = 20_000;
+
+/// Dense log-domain oracle for the a-marginal of one column:
+/// `exp(u_i + logsumexp_j(log K_ij + v_j))`. Deliberately bypasses the
+/// truncated/absorbed kernels the solver iterated on.
+fn a_marginal(p: &Problem, u: &[f64], v: &[f64]) -> Vec<f64> {
+    let lk = p.log_kernel();
+    (0..p.n)
+        .map(|i| {
+            let row = lk.row(i);
+            let mut mx = f64::NEG_INFINITY;
+            for j in 0..p.n {
+                mx = mx.max(row[j] + v[j]);
+            }
+            if mx == f64::NEG_INFINITY {
+                return 0.0;
+            }
+            let s: f64 = (0..p.n).map(|j| (row[j] + v[j] - mx).exp()).sum();
+            (u[i] + mx + s.ln()).exp()
+        })
+        .collect()
+}
+
+fn l1(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+#[test]
+fn batched_service_matches_standalone_within_tolerance_and_amortizes_rebuilds() {
+    let geometry = build_problem(N, 1, EPS, 0.0, 2, CondClass::Ill, 0x5E21);
+    let wl = WorkloadSpec {
+        requests: 64,
+        tenants: 8,
+        perturb: 1.0,
+        arrival_rate: 0.0, // one burst: batches fill to max_batch
+        threshold: 1e-9,
+        tolerance_jitter: 1.0,
+        seed: 0xBEE5,
+    };
+    let mut requests = synth_requests(N, &wl);
+    for r in &mut requests {
+        r.eps = EPS;
+    }
+    let cfg = ServiceConfig {
+        max_iters: MAX_ITERS,
+        max_batch: 16,
+        domain: Domain::Log,
+        ..Default::default()
+    };
+    let backend = make_backend(BackendKind::Native, "", 1).unwrap();
+
+    let rep = {
+        let (backend, geometry, requests, cfg) =
+            (backend.clone(), geometry.clone(), requests.clone(), cfg.clone());
+        run_with_timeout("batched service run", move || {
+            run_service(backend, &geometry, &requests, &cfg)
+        })
+    };
+    assert_eq!(rep.requests.len(), 64);
+    assert_eq!(rep.unconverged(), 0, "every request must converge");
+    // Burst + max_batch 16 + modest perturbation: full batches.
+    let sizes: Vec<usize> = rep.batches.iter().map(|b| b.size).collect();
+    assert_eq!(rep.batches.len(), 4, "sizes {sizes:?}");
+
+    // Per-column stopping actually fired: jittered tolerances freeze
+    // different columns at different iterations.
+    assert!(rep.early_frozen() > 0, "no column froze before its batch finished");
+    let mut iter_spread = false;
+    for b in 0..rep.batches.len() {
+        let iters: Vec<usize> = rep
+            .requests
+            .iter()
+            .filter(|r| r.batch == b)
+            .map(|r| r.iterations)
+            .collect();
+        iter_spread |= iters.iter().any(|&k| k != iters[0]);
+    }
+    assert!(iter_spread, "all columns froze in lock-step — jitter had no effect");
+
+    // Standalone baseline: every request solved alone at its own
+    // tolerance, capturing both the scalings (for parity) and the
+    // hybrid counters (for the amortization pin).
+    let solver = CentralizedSolver::new(backend);
+    let mut standalone_rebuilds = 0usize;
+    let mut frozen_by_id: Vec<(Vec<f64>, Vec<f64>)> = Vec::with_capacity(64);
+    for req in &requests {
+        let mut b1 = Mat::zeros(N, 1);
+        for i in 0..N {
+            b1[(i, 0)] = req.b[i];
+        }
+        let mut p1 = Problem::from_parts(geometry.a.clone(), b1, geometry.cost.clone(), EPS);
+        p1.masked_cost_min = geometry.masked_cost_min;
+        let out = solver.solve_in(
+            &p1,
+            StopPolicy { threshold: req.threshold, max_iters: MAX_ITERS, ..Default::default() },
+            cfg.alpha,
+            Domain::Log,
+        );
+        assert!(out.converged(), "standalone request {} stalled: {:?}", req.id, out.stop);
+        standalone_rebuilds += out.stab.as_ref().map(|s| s.rebuilds).unwrap_or(0);
+        let u: Vec<f64> = (0..N).map(|i| out.state.u[(i, 0)]).collect();
+        let v: Vec<f64> = (0..N).map(|i| out.state.v[(i, 0)]).collect();
+        frozen_by_id.push((u, v));
+    }
+
+    // Tolerance + parity, per request.
+    for req in &requests {
+        let got = &rep.requests[req.id as usize];
+        assert_eq!(got.id, req.id);
+        assert!(got.converged);
+        // The frozen pair honors the request tolerance against the
+        // dense oracle (small slack for the oracle-vs-absorbed
+        // round-off at the freeze check).
+        let ma = a_marginal(&geometry, &got.u, &got.v);
+        let err = l1(&ma, &geometry.a);
+        assert!(
+            err <= req.threshold + 1e-11,
+            "request {}: recomputed err {err:.3e} vs tolerance {:.3e}",
+            req.id,
+            req.threshold
+        );
+        // Parity with the standalone solve: same iterate sequence by
+        // column separability, so the marginals agree to ≤ 1e-8.
+        let (su, sv) = &frozen_by_id[req.id as usize];
+        let sa = a_marginal(&geometry, su, sv);
+        let gap = l1(&ma, &sa);
+        assert!(gap <= 1e-8, "request {}: batched vs standalone marginal gap {gap:.3e}", req.id);
+    }
+
+    // Amortization: one shared support per batch beats per-request
+    // supports — strictly, and the baseline actually retruncated (else
+    // the pin is vacuous).
+    let batched_rebuilds = rep.rebuilds();
+    assert!(standalone_rebuilds > 0, "baseline never rebuilt — workload too easy to pin");
+    assert!(
+        batched_rebuilds < standalone_rebuilds,
+        "batched rebuilds {batched_rebuilds} not strictly below standalone sum {standalone_rebuilds}"
+    );
+}

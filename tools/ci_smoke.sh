@@ -1,0 +1,179 @@
+#!/usr/bin/env bash
+# CI smoke stages for the fedsink binary — THE single home for smoke
+# commands (the workflow calls `tools/ci_smoke.sh <stage>`; nothing is
+# inlined in ci.yml). Run locally after `cargo build --release`:
+#
+#   tools/ci_smoke.sh            # every stage
+#   tools/ci_smoke.sh service    # one named stage
+#
+# Override the binary with FEDSINK_BIN (defaults to the release build).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${FEDSINK_BIN:-rust/target/release/fedsink}
+TMP=$(mktemp -d)
+trap 'rm -rf "$TMP"' EXIT
+
+# Sparse stabilized path: FEDSINK_DOMAIN exercises the Settings wiring;
+# the log domain at small ε drives the absorption-hybrid /
+# truncated-sparse engine.
+stage_sparse() {
+  FEDSINK_DOMAIN=log "$BIN" solve \
+    --variant centralized --backend native --n 128 --eps 0.005 \
+    --cond ill --max-iters 2000 --threshold 1e-8
+}
+
+# The multi-histogram absorption engine at the ROADMAP's acceptance
+# shape: n=512, N=8, eps=0.005 on the shared-support batched GEMM
+# schedule (prints the linear-iteration fraction).
+stage_vectorized() {
+  FEDSINK_DOMAIN=log "$BIN" solve \
+    --variant centralized --backend native --n 512 --hists 8 \
+    --eps 0.005 --cond ill --max-iters 3000 --threshold 1e-8
+}
+
+# Fleet-synchronized absorption on all four coordinators: n=512, c=4,
+# eps=0.005 with the coordinator-broadcast reference dual (async
+# variants damped, per the paper's stable regime). Prints the fleet
+# command/rebuild counters.
+stage_fleet() {
+  for v in sync-a2a sync-star; do
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 4000 --threshold 1e-8 \
+      --fleet-absorb
+  done
+  for v in async-a2a async-star; do
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 8000 --threshold 1e-8 \
+      --fleet-absorb --alpha 0.5
+  done
+}
+
+# Compressed streaming exchange on all four coordinators: delta-coded
+# f32 frames plus the slice-streaming fold. DeltaF32's quantization step
+# shrinks with the iterate deltas, so the tight 1e-8 threshold stays
+# reachable; the solve output prints the per-kind byte buckets.
+stage_wire() {
+  for v in sync-a2a sync-star; do
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 4000 --threshold 1e-8 \
+      --wire-format deltaf32 --stream-exchange
+  done
+  for v in async-a2a async-star; do
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 8000 --threshold 1e-8 \
+      --wire-format deltaf32 --stream-exchange --alpha 0.5
+  done
+}
+
+# The wire-codec shape again, now over faulted links: 5% drops plus
+# dup/reorder on every link. Reliable streams retransmit
+# (backoff-priced ARQ), latest-wins streams lose frames and rekey the
+# delta codec — every coordinator must still reach 1e-8. The greps
+# assert each run both converged and actually exercised the fault
+# layer: nonzero retransmits on the lock-step protocols, nonzero drops
+# on the latest-wins ones.
+stage_chaos() {
+  local chaos="--drop-prob 0.05 --dup-prob 0.02 --reorder-prob 0.02"
+  for v in sync-a2a sync-star; do
+    # shellcheck disable=SC2086
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 4000 --threshold 1e-8 \
+      --wire-format deltaf32 --stream-exchange $chaos \
+      | tee "$TMP/chaos.log"
+    grep -q "stop=Converged" "$TMP/chaos.log"
+    grep -Eq "retransmits=[1-9]" "$TMP/chaos.log"
+  done
+  for v in async-a2a async-star; do
+    # shellcheck disable=SC2086
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 8000 --threshold 1e-8 \
+      --wire-format deltaf32 --stream-exchange --alpha 0.5 $chaos \
+      | tee "$TMP/chaos.log"
+    grep -q "stop=Converged" "$TMP/chaos.log"
+    grep -Eq " drops=[1-9]" "$TMP/chaos.log"
+  done
+}
+
+# The streaming shape pinned at both ends of the pool-sizing range: a
+# serial pool (never fans out) and a 4-thread pool sharing workers
+# across all five node threads. Banding is per-row, so both must reach
+# the same 1e-8 threshold in the same iterations.
+stage_threads() {
+  for t in 1 4; do
+    FEDSINK_THREADS="$t" FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant sync-a2a --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 4000 --threshold 1e-8 \
+      --wire-format deltaf32 --stream-exchange
+    FEDSINK_THREADS="$t" FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant async-star --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 8000 --threshold 1e-8 \
+      --wire-format deltaf32 --stream-exchange --alpha 0.5
+  done
+}
+
+# Multi-tenant serve: 64 requests over one shared geometry. --perturb 8
+# puts the log-histogram spread (≈ 2 + 2·8 = 18) above the default
+# admission budget (2 · 0.5·τ = 15), so the stream MUST split into
+# multiple batches (a degraded batch shape, not one lucky mega-batch);
+# jittered tolerances drive per-column stopping (early_frozen > 0). The
+# JSON assert pins the headline amortization claim: batched rebuilds
+# strictly below the standalone sum.
+stage_service() {
+  "$BIN" serve \
+    --n 192 --eps 0.005 --cond ill --requests 64 --tenants 8 \
+    --perturb 8 --threshold 1e-8 --tolerance-jitter 1.0 \
+    --max-batch 16 --max-iters 6000 --domain log \
+    --compare-standalone --out "$TMP/BENCH_service.json" \
+    | tee "$TMP/service.log"
+  grep -Eq "batches=([2-9]|[1-9][0-9]+)" "$TMP/service.log"
+  grep -q "splits=[1-9]" "$TMP/service.log"
+  grep -q "unconverged=0" "$TMP/service.log"
+  grep -Eq "early_frozen=[1-9]" "$TMP/service.log"
+  python3 - "$TMP/BENCH_service.json" <<'PY'
+import json, sys
+
+doc = json.load(open(sys.argv[1]))
+assert doc["unconverged"] == 0, f"unconverged requests: {doc['unconverged']}"
+batched = doc["rebuilds"]
+standalone = doc["standalone"]["rebuilds"]
+assert standalone > 0, "standalone baseline never rebuilt - nothing amortized"
+assert batched < standalone, f"rebuilds not amortized: {batched} vs {standalone}"
+print(f"service amortization OK: {batched} batched rebuilds vs {standalone} standalone")
+PY
+}
+
+STAGES=(sparse vectorized fleet wire chaos threads service)
+
+usage() {
+  local IFS='|'
+  echo "usage: $0 [all|${STAGES[*]}]" >&2
+  exit 2
+}
+
+main() {
+  local pick=${1:-all}
+  if [ "$pick" = all ]; then
+    for s in "${STAGES[@]}"; do
+      echo "==> smoke stage: $s"
+      "stage_$s"
+    done
+    return
+  fi
+  for s in "${STAGES[@]}"; do
+    if [ "$pick" = "$s" ]; then
+      echo "==> smoke stage: $s"
+      "stage_$s"
+      return
+    fi
+  done
+  usage
+}
+
+main "$@"
