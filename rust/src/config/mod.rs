@@ -14,8 +14,9 @@ use crate::linalg::{Domain, Stabilization};
 use crate::workload::{CondClass, Problem};
 use std::collections::BTreeMap;
 
-/// Which federated variant to run — the paper's four protocols plus the
-/// centralized baseline.
+/// Which federated variant to run — the paper's four protocols, the two
+/// decentralized topologies (ring, gossip), and the centralized
+/// baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
     Centralized,
@@ -23,6 +24,8 @@ pub enum Variant {
     AsyncA2A,
     SyncStar,
     AsyncStar,
+    Ring,
+    Gossip,
 }
 
 impl Variant {
@@ -33,6 +36,8 @@ impl Variant {
             "async-a2a" | "async_a2a" => Some(Variant::AsyncA2A),
             "sync-star" | "sync_star" => Some(Variant::SyncStar),
             "async-star" | "async_star" => Some(Variant::AsyncStar),
+            "ring" => Some(Variant::Ring),
+            "gossip" => Some(Variant::Gossip),
             _ => None,
         }
     }
@@ -44,14 +49,42 @@ impl Variant {
             Variant::AsyncA2A => "async-a2a",
             Variant::SyncStar => "sync-star",
             Variant::AsyncStar => "async-star",
+            Variant::Ring => "ring",
+            Variant::Gossip => "gossip",
         }
     }
 
+    /// The exchange-graph name of the variant (the `topology` column of
+    /// the experiment grids): the paper's four protocols factor into
+    /// synchrony × topology, and ring/gossip add two more graphs.
+    pub fn topology_name(self) -> &'static str {
+        match self {
+            Variant::Centralized => "none",
+            Variant::SyncA2A | Variant::AsyncA2A => "a2a",
+            Variant::SyncStar | Variant::AsyncStar => "star",
+            Variant::Ring => "ring",
+            Variant::Gossip => "gossip",
+        }
+    }
+
+    /// The paper's four protocols (the synchrony × {a2a, star} matrix).
+    /// Deliberately excludes ring/gossip: drivers that iterate this set
+    /// (e.g. the fleet-absorption comparison) assume paper semantics.
     pub const ALL_FEDERATED: [Variant; 4] = [
         Variant::SyncA2A,
         Variant::AsyncA2A,
         Variant::SyncStar,
         Variant::AsyncStar,
+    ];
+
+    /// Every federated topology, including the decentralized pair.
+    pub const ALL_TOPOLOGIES: [Variant; 6] = [
+        Variant::SyncA2A,
+        Variant::AsyncA2A,
+        Variant::SyncStar,
+        Variant::AsyncStar,
+        Variant::Ring,
+        Variant::Gossip,
     ];
 }
 
@@ -414,10 +447,31 @@ mod tests {
             Variant::AsyncA2A,
             Variant::SyncStar,
             Variant::AsyncStar,
+            Variant::Ring,
+            Variant::Gossip,
         ] {
             assert_eq!(Variant::parse(v.name()), Some(v));
         }
         assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn topology_sets_and_names() {
+        // ALL_FEDERATED stays the paper's 2×2 matrix — drivers that
+        // assume paper semantics iterate it; the decentralized pair only
+        // appears in ALL_TOPOLOGIES.
+        assert_eq!(Variant::ALL_FEDERATED.len(), 4);
+        assert!(!Variant::ALL_FEDERATED.contains(&Variant::Ring));
+        assert!(!Variant::ALL_FEDERATED.contains(&Variant::Gossip));
+        assert_eq!(Variant::ALL_TOPOLOGIES.len(), 6);
+        for v in Variant::ALL_FEDERATED {
+            assert!(Variant::ALL_TOPOLOGIES.contains(&v));
+        }
+        assert_eq!(Variant::SyncA2A.topology_name(), "a2a");
+        assert_eq!(Variant::AsyncStar.topology_name(), "star");
+        assert_eq!(Variant::Ring.topology_name(), "ring");
+        assert_eq!(Variant::Gossip.topology_name(), "gossip");
+        assert_eq!(Variant::Centralized.topology_name(), "none");
     }
 
     #[test]

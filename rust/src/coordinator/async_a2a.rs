@@ -19,14 +19,22 @@
 //! Stopping (paper §II-A2): each node meets its convergence criterion
 //! independently — its *block* marginal error scaled ×c as the global
 //! estimate — or gives up at the iteration cap / timeout. A final
-//! consistent exchange then assembles identical `u`, `v` everywhere.
+//! consistent exchange ([`engine::finish_consistent`]) then assembles
+//! identical `u`, `v` everywhere.
+//!
+//! The fleet-absorption probe/command routing ([`engine::FleetCoord`],
+//! [`engine::coordinate`], …) and the strike/death machinery live in
+//! [`super::engine`]; this module keeps the free-running client loop.
 
-use super::fleet;
-use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
+use super::engine::{
+    apply_fleet_command, coordinate, finish_consistent, send_fleet_probe, write_block, FleetCoord,
+};
+use super::outcome::{NodeOutcome, NodeStats, TracePoint};
+use super::RunCtx;
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
-use crate::net::{allgather, allgather_resilient, Endpoint, Recovery, TagKind};
-use crate::runtime::{BlockOp, StabStats, Target};
+use crate::net::{Endpoint, TagKind};
+use crate::runtime::{StabStats, Target};
 use crate::sinkhorn::StopReason;
 use std::time::Instant;
 
@@ -49,23 +57,6 @@ const FLEET_PROBE_U: u64 = 0;
 const FLEET_PROBE_V: u64 = 1;
 const FLEET_CMD_U: u64 = 2;
 const FLEET_CMD_V: u64 = 3;
-
-/// Rank 0's per-channel fleet-coordination state.
-struct FleetCoord {
-    /// Latest probe payload per node (rank 0's own at index 0).
-    probes: Vec<Option<Vec<f64>>>,
-    /// Issued-command count. A probe stamped with an older seq measured
-    /// drift against a superseded reference and is held back until the
-    /// node reports post-command state — this is what prevents a
-    /// command storm from stale probes racing the broadcast.
-    seq: u64,
-}
-
-impl FleetCoord {
-    fn new(c: usize) -> Self {
-        Self { probes: vec![None; c], seq: 0 }
-    }
-}
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
     super::runner::spawn_nodes(ctx.cfg.clients, |id| client(ctx, id))
@@ -375,59 +366,17 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let u_fin = u_op.state().clone();
     let v_fin = v_op.state().clone();
     if stop != StopReason::Dead {
-        // Announce we stopped, so lagging peers don't wait on us …
-        for peer in 0..c {
-            if peer != id {
-                ep.send(peer, TagKind::Ctl, DONE_TAG, vec![1.0], iterations as u64);
-            }
-        }
-        // … then the final consistent broadcast (paper: "a consistent
-        // broadcast ensures that all nodes have the same fully updated u
-        // and v"). Under an active fault plan the exchange is
-        // crash-tolerant: peers already declared dead are skipped, and a
-        // peer that never shows up within the stretched death budget is
-        // struck dead here instead of hanging the run. (The runner
-        // assembles the outcome from each node's own slices, so a struck
-        // peer only costs us its copy, never correctness.)
-        timer.comm(|| {
-            if resilient {
-                let fin = Recovery {
-                    recv_timeout_secs: recovery.death_secs().max(1e-3),
-                    ..recovery
-                };
-                let mut alive: Vec<bool> = dead.iter().map(|&d| !d).collect();
-                let _ = allgather_resilient(
-                    &ep,
-                    TagKind::U,
-                    u64::MAX - 1,
-                    None,
-                    u_fin.as_slice(),
-                    iterations as u64,
-                    &mut alive,
-                    &fin,
-                );
-                let _ = allgather_resilient(
-                    &ep,
-                    TagKind::V,
-                    u64::MAX,
-                    None,
-                    v_fin.as_slice(),
-                    iterations as u64,
-                    &mut alive,
-                    &fin,
-                );
-                for (p, &a) in alive.iter().enumerate() {
-                    if !a {
-                        dead[p] = true;
-                    }
-                }
-            } else {
-                let _ =
-                    allgather(&ep, TagKind::U, u64::MAX - 1, u_fin.as_slice(), iterations as u64);
-                let _ = allgather(&ep, TagKind::V, u64::MAX, v_fin.as_slice(), iterations as u64);
-            }
-        });
-        timer.add_comp(ep.take_decode_secs());
+        finish_consistent(
+            &ep,
+            DONE_TAG,
+            &u_fin,
+            &v_fin,
+            iterations,
+            resilient,
+            &recovery,
+            &mut dead,
+            &mut timer,
+        );
     }
 
     NodeOutcome {
@@ -486,123 +435,5 @@ fn drain(
             peers[peer].done = true;
             heard[peer] = Instant::now();
         }
-    }
-}
-
-/// Write peer `j`'s m×N flat block into the full state.
-fn write_block(full: &mut Mat, block: &[f64], j: usize, m: usize) {
-    let nh = full.cols();
-    debug_assert_eq!(block.len(), m * nh);
-    full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(block);
-}
-
-/// Rank 0's fleet pass for one channel: refresh its own probe, drain
-/// the latest peer probes, and — once every node has reported
-/// current-seq state — merge, decide, broadcast the command and obey it
-/// locally. `hold` freezes decisions once any peer announced done (its
-/// slice probes stop; the remaining nodes keep their emergency guard).
-#[allow(clippy::too_many_arguments)]
-fn coordinate(
-    coord: &mut FleetCoord,
-    ep: &Endpoint,
-    c: usize,
-    probe_tag: u64,
-    cmd_tag: u64,
-    op: &mut dyn BlockOp,
-    x_full: &Mat,
-    m: usize,
-    nh: usize,
-    tau: f64,
-    hold: bool,
-    k64: u64,
-    timer: &mut SplitTimer,
-) {
-    let seq = coord.seq;
-    coord.probes[0] = timer.comp(|| {
-        op.fleet_probe(x_full, 0, m)
-            .map(|p| fleet::probe_payload(seq, &p))
-    });
-    timer.comm(|| {
-        for j in 1..c {
-            if let Some(msg) = ep.try_recv_latest(j, TagKind::Gref, probe_tag) {
-                coord.probes[j] = Some(msg.payload);
-            }
-        }
-    });
-    if hold {
-        return;
-    }
-    // Full, current-seq coverage required: a missing or stale probe
-    // (degraded operator, command still in flight) holds the decision.
-    let mut refs: Vec<&[f64]> = Vec::with_capacity(c);
-    for probe in &coord.probes {
-        match probe {
-            // `.round()`: probe frames may ride a lossy wire format,
-            // so the integer seq lane carries quantization noise ≪ 0.5.
-            Some(pay) if pay.first().copied().unwrap_or(-1.0).round() as u64 == coord.seq => {
-                refs.push(pay.as_slice());
-            }
-            _ => return,
-        }
-    }
-    let Some(cmd) = timer.comp(|| fleet::decide(&refs, nh, m, tau)) else {
-        return;
-    };
-    coord.seq += 1;
-    let payload = fleet::command_payload(coord.seq, &cmd);
-    timer.comm(|| {
-        for j in 1..c {
-            ep.send_coded(j, TagKind::Gref, cmd_tag, cmd_tag, payload.clone(), k64);
-        }
-    });
-    timer.comp(|| op.fleet_absorb(&cmd.gref, cmd.needed));
-    // Stored probes measured drift against the superseded reference.
-    for probe in coord.probes.iter_mut() {
-        *probe = None;
-    }
-}
-
-/// Apply the freshest coordinator command (if any) to `op`, tracking
-/// the applied sequence so a command is never obeyed twice.
-fn apply_fleet_command(
-    ep: &Endpoint,
-    op: &mut dyn BlockOp,
-    cmd_tag: u64,
-    applied: &mut u64,
-    timer: &mut SplitTimer,
-) {
-    let msg = timer.comm(|| ep.try_recv_latest(0, TagKind::Gref, cmd_tag));
-    if let Some(msg) = msg {
-        let (seq, cmd) = fleet::parse_command(&msg.payload);
-        if seq > *applied {
-            *applied = seq;
-            if let Some((needed, gref)) = cmd {
-                timer.comp(|| op.fleet_absorb(gref, needed));
-            }
-        }
-    }
-}
-
-/// Send this node's slice-local drift probe to rank 0. A degraded
-/// operator (dense fallback) stops probing, which silently pauses fleet
-/// decisions at the coordinator — the intended degrade path. Probes
-/// ride the latest-wins delivery class: a dropped probe is superseded
-/// by next iteration's, and a stalled probe channel merely holds the
-/// coordinator's decision (the same hold state).
-#[allow(clippy::too_many_arguments)]
-fn send_fleet_probe(
-    ep: &Endpoint,
-    op: &dyn BlockOp,
-    probe_tag: u64,
-    x_full: &Mat,
-    r0: usize,
-    m: usize,
-    seq: u64,
-    k64: u64,
-    timer: &mut SplitTimer,
-) {
-    if let Some(p) = timer.comp(|| op.fleet_probe(x_full, r0, m)) {
-        let payload = fleet::probe_payload(seq, &p);
-        timer.comm(|| ep.send_coded_latest(0, TagKind::Gref, probe_tag, probe_tag, payload, k64));
     }
 }

@@ -1,0 +1,108 @@
+//! The shared run context handed to every topology: problem, partition,
+//! resolved numerics domain, backend handle, and the simulated fabric.
+
+use crate::config::SolveConfig;
+use crate::linalg::{Domain, Stabilization};
+use crate::net::{DelayTracker, SimNet};
+use crate::sinkhorn::StopPolicy;
+use crate::workload::{Partition, Problem};
+use std::sync::Arc;
+
+/// Everything a protocol implementation needs.
+pub struct RunCtx<'a> {
+    pub problem: &'a Problem,
+    pub partition: &'a Partition,
+    pub cfg: &'a SolveConfig,
+    pub policy: StopPolicy,
+    pub traced: bool,
+    /// Resolved numerics domain (cfg.domain is a *choice*; this is the
+    /// per-problem decision every node follows, so the whole run
+    /// exchanges one kind of scaling slice).
+    pub domain: Domain,
+    /// Stabilized log-path tuning every node's operators share: the
+    /// absorption-hybrid schedule keeps GEMV cost on most iterations
+    /// while the wire still carries plain log-scaling slices.
+    pub stab: Stabilization,
+    pub backend: Arc<dyn crate::runtime::ComputeBackend>,
+    pub net: Arc<SimNet>,
+    pub delays: Arc<DelayTracker>,
+}
+
+impl RunCtx<'_> {
+    /// Whether the fleet-synchronized absorption protocol is active for
+    /// this run: the explicit `--fleet-absorb` toggle plus a log-domain
+    /// hybrid schedule to synchronize. (Non-hybrid operators would only
+    /// ever send degraded probes — skip the traffic entirely.)
+    pub fn fleet_on(&self) -> bool {
+        self.stab.fleet_absorb && self.domain == Domain::Log && self.stab.hybrid_enabled()
+    }
+
+    /// Whether the slice-streaming exchange is active
+    /// (`--stream-exchange`): folds peer slices into the pending block
+    /// product as frames land. Disabled under fleet absorption — the
+    /// coordinator's re-absorption command must land *before* the
+    /// product that consumes the exchanged state, which would
+    /// invalidate partials folded against the pre-command kernel.
+    pub fn stream_on(&self) -> bool {
+        self.cfg.stream_exchange && !self.fleet_on()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+    use crate::runtime::make_backend;
+    use crate::workload::ProblemSpec;
+
+    /// Build a minimal [`RunCtx`] over `cfg` and read back the
+    /// exchange-mode precedence flags.
+    fn probe(
+        cfg: &SolveConfig,
+        p: &Problem,
+        partition: &Partition,
+        domain: Domain,
+    ) -> (bool, bool) {
+        let net = Arc::new(SimNet::with_wire(cfg.clients, cfg.net, cfg.seed, cfg.wire));
+        let ctx = RunCtx {
+            problem: p,
+            partition,
+            cfg,
+            policy: StopPolicy::default(),
+            traced: false,
+            domain,
+            stab: cfg.stab,
+            backend: make_backend(BackendKind::Native, "", 1).unwrap(),
+            net,
+            delays: Arc::new(DelayTracker::new()),
+        };
+        (ctx.fleet_on(), ctx.stream_on())
+    }
+
+    #[test]
+    fn fleet_absorb_takes_precedence_over_stream_exchange() {
+        let p = ProblemSpec::new(8).with_eps(0.5).build(9);
+        let mut cfg = SolveConfig {
+            backend: BackendKind::Native,
+            clients: 2,
+            stream_exchange: true,
+            ..Default::default()
+        };
+        cfg.stab.fleet_absorb = true;
+        let partition = Partition::new_in(&p, cfg.clients, Domain::Log);
+        // Both flags set in the log domain: fleet wins, streaming
+        // silently defers (the CLI warns about exactly this).
+        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
+        assert!(fleet && !stream, "fleet must suppress streaming");
+        // Fleet off again: streaming is honored.
+        cfg.stab.fleet_absorb = false;
+        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
+        assert!(!fleet && stream);
+        // Fleet requested but the hybrid disabled (τ = ∞): there is no
+        // absorption schedule to synchronize, so streaming stays on.
+        cfg.stab.fleet_absorb = true;
+        cfg.stab.absorb_threshold = f64::INFINITY;
+        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
+        assert!(!fleet && stream);
+    }
+}

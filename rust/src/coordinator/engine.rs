@@ -1,0 +1,1220 @@
+//! The protocol core every topology runs on.
+//!
+//! A coordinator used to be a monolith: exchange + streamed folds,
+//! `Recovery` strike-tracking, peer-death handling, and fleet-absorption
+//! plumbing were hand-reimplemented per protocol. This module owns all
+//! of that once:
+//!
+//! * [`Topology`] — the dispatch seam: a topology names itself, sizes
+//!   its node set, and runs the per-node protocol over a [`RunCtx`].
+//! * [`LockstepPlan`] — the synchronous per-iteration exchange plan:
+//!   [`lockstep_client`] is the entire lock-step client loop (Alg. 1 —
+//!   update, exchange, fleet round, convergence AllGather), generic
+//!   over *how* one half-iteration assembles the full state. AllToAll
+//!   plugs in the flat AllGather; [`super::ring`] plugs in the
+//!   neighbor-pair rotation. Same loop, bit-identical where the plans
+//!   deliver identical bits.
+//! * Exchange machinery — [`stream_exchange`] (streamed-fold admission
+//!   with strike-bounded delivery-order receive), [`fleet_sync`]
+//!   (lock-step probe/command routing), [`server_product`] (the star
+//!   hub's gather + fold + product), the strike-bounded receive
+//!   primitives ([`recv_bounded`], [`recv_any_bounded`]), and the
+//!   async machinery ([`FleetCoord`], [`coordinate`],
+//!   [`apply_fleet_command`], [`send_fleet_probe`],
+//!   [`finish_consistent`]).
+//! * Slice plumbing shared by every protocol: [`slice_of`],
+//!   [`copy_slice`], [`assemble`], [`write_block`], [`chunk_of`],
+//!   [`ClientTargets`], [`block_err`], [`count_alive`], [`lost_of`].
+//!
+//! Delivery classes are chosen here, not in topologies: lock-step
+//! exchanges ride the reliable ARQ streams (`send`/`send_coded` —
+//! retransmits priced per frame + NACK), async scaling traffic rides
+//! latest-wins (`send_coded_latest` — losses supersede, the delta codec
+//! re-keys).
+
+use super::ctx::RunCtx;
+use super::fleet;
+use super::outcome::{NodeOutcome, NodeStats, TracePoint};
+use super::{async_a2a, gossip, ring, star, sync_a2a};
+use crate::config::Variant;
+use crate::linalg::{Domain, Mat};
+use crate::metrics::{Clock, SplitTimer};
+use crate::net::{
+    allgather, allgather_coded, allgather_resilient, bcast_coded, bcast_resilient, gather_coded,
+    gather_resilient, Endpoint, Message, NodeLoss, Recovery, TagKind,
+};
+use crate::runtime::{BlockOp, StabStats, Target};
+use crate::sinkhorn::StopReason;
+use std::time::Duration;
+
+// --------------------------------------------------------------------------
+// Topology dispatch
+// --------------------------------------------------------------------------
+
+/// A federated exchange topology: the one seam a new protocol has to
+/// fill in. Everything else — strike-based recovery, streamed folds,
+/// fleet routing, stop aggregation — is engine machinery it calls into.
+pub trait Topology: Sync {
+    /// Display name (the `topology` column of the experiment grids).
+    fn name(&self) -> &'static str;
+
+    /// Node-thread count for `clients` data shards (the star adds its
+    /// kernel-owning server; everyone else is client-only).
+    fn nodes(&self, clients: usize) -> usize {
+        clients
+    }
+
+    /// Run the per-node protocol and return one outcome per node.
+    fn run(&self, ctx: &RunCtx<'_>) -> Vec<NodeOutcome>;
+}
+
+struct AllToAll {
+    async_mode: bool,
+}
+
+impl Topology for AllToAll {
+    fn name(&self) -> &'static str {
+        "a2a"
+    }
+
+    fn run(&self, ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+        if self.async_mode {
+            async_a2a::run(ctx)
+        } else {
+            sync_a2a::run(ctx)
+        }
+    }
+}
+
+struct Star {
+    async_mode: bool,
+}
+
+impl Topology for Star {
+    fn name(&self) -> &'static str {
+        "star"
+    }
+
+    fn nodes(&self, clients: usize) -> usize {
+        clients + 1 // + the kernel-owning server
+    }
+
+    fn run(&self, ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+        star::run(ctx, self.async_mode)
+    }
+}
+
+struct RingTopo;
+
+impl Topology for RingTopo {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn run(&self, ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+        ring::run(ctx)
+    }
+}
+
+struct GossipTopo;
+
+impl Topology for GossipTopo {
+    fn name(&self) -> &'static str {
+        "gossip"
+    }
+
+    fn run(&self, ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+        gossip::run(ctx)
+    }
+}
+
+static SYNC_A2A: AllToAll = AllToAll { async_mode: false };
+static ASYNC_A2A: AllToAll = AllToAll { async_mode: true };
+static SYNC_STAR: Star = Star { async_mode: false };
+static ASYNC_STAR: Star = Star { async_mode: true };
+static RING: RingTopo = RingTopo;
+static GOSSIP: GossipTopo = GossipTopo;
+
+/// The topology instance behind a federated variant.
+pub fn topology_for(variant: Variant) -> &'static dyn Topology {
+    match variant {
+        Variant::SyncA2A => &SYNC_A2A,
+        Variant::AsyncA2A => &ASYNC_A2A,
+        Variant::SyncStar => &SYNC_STAR,
+        Variant::AsyncStar => &ASYNC_STAR,
+        Variant::Ring => &RING,
+        Variant::Gossip => &GOSSIP,
+        Variant::Centralized => unreachable!("centralized runs have no topology"),
+    }
+}
+
+/// Entry point the runner calls once the [`RunCtx`] is assembled.
+pub fn run_topology(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+    topology_for(ctx.cfg.variant).run(ctx)
+}
+
+// --------------------------------------------------------------------------
+// The lock-step client loop (Alg. 1, topology-generic)
+// --------------------------------------------------------------------------
+
+/// Coded-stream ids: each logical stream carries the same quantity
+/// round after round, so the wire codec's delta/error-feedback state
+/// stays coherent (see [`crate::net::wire`]).
+pub const STREAM_U: u64 = 0;
+pub const STREAM_V: u64 = 1;
+/// Fleet probe/command stream pairs, one per phase (the v-ops'
+/// reference lives in u-space and vice versa — their probes are
+/// different quantities and must not share a delta stream).
+pub const STREAM_GREF_V_OPS: u64 = 2;
+pub const STREAM_GREF_U_OPS: u64 = 4;
+
+/// How one half-iteration of a lock-step protocol assembles the full
+/// scaling state from the per-node slices. The plan owns its protocol
+/// rounds (it advances `round` by however many exchange legs it needs)
+/// and reports whether a streamed fold chain into `op` survived.
+pub trait LockstepPlan: Sync {
+    /// Whether losing any peer tears down the whole exchange graph. A
+    /// flat AllGather can freeze a dead peer's rows and keep going
+    /// (`--on-node-loss exclude`); a ring cannot — every slice transits
+    /// every link, so a strikeout forces the abort path regardless of
+    /// the configured policy.
+    fn loss_is_fatal(&self) -> bool {
+        false
+    }
+
+    /// One slice exchange: `full` holds this node's freshly written
+    /// rows `[r0, r0+m)`; on return every live peer's rows are
+    /// assembled (dead peers' rows frozen at the last received value).
+    /// Returns whether a streamed fold chain into `op` survived (the
+    /// caller then finishes with `accum_update`); `false` means the
+    /// assembled `full` must go through the ordinary barrier update.
+    #[allow(clippy::too_many_arguments)]
+    fn exchange(
+        &self,
+        ep: &Endpoint,
+        kind: TagKind,
+        round: &mut u64,
+        stream_id: u64,
+        full: &mut Mat,
+        r0: usize,
+        m: usize,
+        iter: u64,
+        op: &mut dyn BlockOp,
+        timer: &mut SplitTimer,
+        stream: bool,
+        alive: &mut [bool],
+        rec: Option<&Recovery>,
+    ) -> bool;
+}
+
+/// The flat AllGather plan — Alg. 1's exchange, verbatim: streamed
+/// fold, resilient barrier, or the exact lossless barrier.
+pub struct AllGatherPlan;
+
+impl LockstepPlan for AllGatherPlan {
+    #[allow(clippy::too_many_arguments)]
+    fn exchange(
+        &self,
+        ep: &Endpoint,
+        kind: TagKind,
+        round: &mut u64,
+        stream_id: u64,
+        full: &mut Mat,
+        r0: usize,
+        m: usize,
+        iter: u64,
+        op: &mut dyn BlockOp,
+        timer: &mut SplitTimer,
+        stream: bool,
+        alive: &mut [bool],
+        rec: Option<&Recovery>,
+    ) -> bool {
+        *round += 1;
+        if stream {
+            stream_exchange(ep, kind, *round, stream_id, full, r0, m, iter, op, timer, alive, rec)
+        } else if let Some(rec) = rec {
+            let parts = timer.comm(|| {
+                allgather_resilient(
+                    ep,
+                    kind,
+                    *round,
+                    Some(stream_id),
+                    slice_of(full, r0, m),
+                    iter,
+                    alive,
+                    rec,
+                )
+            });
+            assemble_opt(full, &parts, m);
+            false
+        } else {
+            let parts = timer.comm(|| {
+                allgather_coded(ep, kind, *round, stream_id, slice_of(full, r0, m), iter)
+            });
+            assemble(full, &parts, m);
+            false
+        }
+    }
+}
+
+/// The whole lock-step client (Alg. 1): damped block updates, the
+/// plan's half-iteration exchanges, optional fleet-absorption rounds,
+/// and the exact convergence AllGather — every node stops at the same
+/// iteration. With [`AllGatherPlan`] this is byte-for-byte the paper's
+/// synchronous All-to-All client; other plans reuse the loop unchanged.
+pub fn lockstep_client(ctx: &RunCtx<'_>, id: usize, plan: &dyn LockstepPlan) -> NodeOutcome {
+    let shard = &ctx.partition.shards[id];
+    let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
+    let w = ctx.cfg.local_iters.max(1);
+    let alpha = ctx.cfg.alpha;
+    let ep = ctx.net.endpoint(id);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    // Block operators: the client's two kernel blocks stay resident in
+    // the backend (device memory for XLA) for the whole run. In the log
+    // domain the blocks hold `log K` and the op iterates log-scalings —
+    // the exchanged slices below are then exactly the communicated
+    // log-scalings the paper's privacy layer measures. The stabilized
+    // dispatch may run them on the absorption-hybrid / truncated-sparse
+    // schedule; the exchanged slices are identical either way.
+    let one = ctx.domain.one();
+    let mut u_op = ctx
+        .backend
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_row,
+            Target::Vec(&shard.a),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
+        .expect("u-op");
+    let mut v_op = ctx
+        .backend
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_col_t,
+            Target::Mat(&shard.b),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
+        .expect("v-op");
+
+    // Full scaling state, refreshed by the plan's exchanges.
+    let mut u_full = Mat::full(n, nh, one);
+    let mut v_full = Mat::full(n, nh, one);
+
+    // Fleet-synchronized absorption (`--fleet-absorb`, log-domain hybrid
+    // runs): rank 0 merges slice probes and broadcasts one reference
+    // dual per product space, so every node re-absorbs in lock-step.
+    let fleet = ctx.fleet_on();
+    let tau = ctx.stab.absorb_threshold;
+    // Slice-streaming exchange (`--stream-exchange`): peer slices are
+    // folded into the consuming operator's pending product as their
+    // frames become deliverable, hiding decode + partial compute behind
+    // the transfers still in flight. The U exchange feeds the v-op in
+    // the same iteration; the V exchange feeds the u-op's *next*
+    // update, across the loop boundary (nothing touches `v_full`
+    // between the exchange and that update).
+    let stream = ctx.stream_on();
+    let mut v_accum_live = false;
+    let mut u_accum_live = false;
+
+    // Fault-plan resilience: only an *active* plan arms the recovery
+    // timeouts — lossless runs keep the unbounded blocking paths
+    // byte-for-byte. Under loss the reliable ARQ still delivers every
+    // frame, so a strikeout can only mean the sender crashed.
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(id);
+    let mut alive = vec![true; ctx.cfg.clients];
+
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+    let mut round: u64 = 0;
+
+    'outer: for k in 1..=ctx.policy.max_iters {
+        // Crash injection: exit cleanly at the iteration boundary —
+        // peers see the silence and strike this node dead.
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break 'outer;
+        }
+        iterations = k;
+        // Paper Alg. 1: communicate on iterations with mod(k, w) = 0;
+        // in between, clients iterate on locally-refreshed state.
+        let communicate = k % w == 0;
+
+        let u_jj = timer.comp(|| {
+            if u_accum_live {
+                u_op.accum_update(alpha).clone()
+            } else {
+                u_op.update(&v_full, alpha).clone()
+            }
+        });
+        u_accum_live = false;
+        copy_slice(&mut u_full, &u_jj, shard.r0);
+        if communicate {
+            let was_alive = count_alive(&alive);
+            v_accum_live = plan.exchange(
+                &ep,
+                TagKind::U,
+                &mut round,
+                STREAM_U,
+                &mut u_full,
+                shard.r0,
+                m,
+                k as u64,
+                &mut *v_op,
+                &mut timer,
+                stream,
+                &mut alive,
+                resilient.then_some(&recovery),
+            );
+            if resilient
+                && count_alive(&alive) < was_alive
+                && (plan.loss_is_fatal() || recovery.on_node_loss == NodeLoss::Abort)
+            {
+                stop = StopReason::PeerLoss;
+                break 'outer;
+            }
+            if fleet {
+                // Fleet-synchronized absorption for the v-operators
+                // (their reference lives in u-space): probes ride the
+                // freshly assembled u state.
+                round += 2;
+                fleet_sync(
+                    &ep,
+                    round,
+                    STREAM_GREF_V_OPS,
+                    &mut *v_op,
+                    &u_full,
+                    shard.r0,
+                    m,
+                    nh,
+                    tau,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                );
+            }
+        }
+
+        let v_jj = timer.comp(|| {
+            if v_accum_live {
+                v_op.accum_update(alpha).clone()
+            } else {
+                v_op.update(&u_full, alpha).clone()
+            }
+        });
+        v_accum_live = false;
+        copy_slice(&mut v_full, &v_jj, shard.r0);
+        if communicate {
+            let was_alive = count_alive(&alive);
+            u_accum_live = plan.exchange(
+                &ep,
+                TagKind::V,
+                &mut round,
+                STREAM_V,
+                &mut v_full,
+                shard.r0,
+                m,
+                k as u64,
+                &mut *u_op,
+                &mut timer,
+                stream,
+                &mut alive,
+                resilient.then_some(&recovery),
+            );
+            if resilient
+                && count_alive(&alive) < was_alive
+                && (plan.loss_is_fatal() || recovery.on_node_loss == NodeLoss::Abort)
+            {
+                stop = StopReason::PeerLoss;
+                break 'outer;
+            }
+            if fleet {
+                // … and for the u-operators (v-space reference).
+                round += 2;
+                fleet_sync(
+                    &ep,
+                    round,
+                    STREAM_GREF_U_OPS,
+                    &mut *u_op,
+                    &v_full,
+                    shard.r0,
+                    m,
+                    nh,
+                    tau,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                );
+            }
+        }
+
+        // Convergence: exact global error via an error AllGather (only
+        // on communication rounds — nodes must check in lock-step).
+        // Timeout is part of the same exchange: a unilateral break would
+        // deadlock the peers inside their blocking collectives, so each
+        // node contributes a timed-out flag and everyone honors the OR.
+        if communicate && ctx.policy.check_at(k) {
+            let u_now = u_op.state().clone();
+            let local: f64 = timer
+                .comp(|| u_op.marginal(&v_full, &u_now))
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            let timed_out = ctx.policy.timeout_secs > 0.0
+                && clock.now() > ctx.policy.timeout_secs;
+            round += 1;
+            // Under `exclude`, dead blocks are frozen and drop out of
+            // the vote — the error is over the surviving slice.
+            let (err, any_timeout) = if resilient {
+                let was_alive = count_alive(&alive);
+                let parts = timer.comm(|| {
+                    allgather_resilient(
+                        &ep,
+                        TagKind::Ctl,
+                        round,
+                        None,
+                        &[local, timed_out as u8 as f64],
+                        k as u64,
+                        &mut alive,
+                        &recovery,
+                    )
+                });
+                if count_alive(&alive) < was_alive
+                    && (plan.loss_is_fatal() || recovery.on_node_loss == NodeLoss::Abort)
+                {
+                    stop = StopReason::PeerLoss;
+                    break 'outer;
+                }
+                (
+                    parts.iter().flatten().map(|p| p[0]).sum(),
+                    parts.iter().flatten().any(|p| p[1] > 0.0),
+                )
+            } else {
+                let parts = timer.comm(|| {
+                    allgather(
+                        &ep,
+                        TagKind::Ctl,
+                        round,
+                        &[local, timed_out as u8 as f64],
+                        k as u64,
+                    )
+                });
+                (
+                    parts.iter().map(|p| p[0]).sum(),
+                    parts.iter().any(|p| p[1] > 0.0),
+                )
+            };
+            final_err = err;
+            if ctx.traced {
+                trace.push(TracePoint { iter: k, secs: clock.now(), err });
+            }
+            if err < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break 'outer;
+            }
+            if any_timeout {
+                stop = StopReason::Timeout;
+                break 'outer;
+            }
+        }
+        // Dequantizing this round's received frames is receiver CPU work.
+        timer.add_comp(ep.take_decode_secs());
+    }
+    timer.add_comp(ep.take_decode_secs());
+
+    NodeOutcome {
+        stats: NodeStats {
+            id,
+            role: "client",
+            timer,
+            iterations,
+            stop,
+            final_err, // the AllGathered global error — identical on all nodes
+            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            lost_peers: lost_of(&alive),
+        },
+        slices: Some((u_op.state().clone(), v_op.state().clone())),
+        trace,
+    }
+}
+
+// --------------------------------------------------------------------------
+// Exchange machinery
+// --------------------------------------------------------------------------
+
+/// Streamed slice exchange (`--stream-exchange`): send this node's
+/// slice of `full` (rows `[r0, r0+m)`) to every peer on the coded
+/// stream, then consume peer slices *in delivery order* — each is
+/// written into `full` and folded into `op`'s pending product while the
+/// remaining transfers are still in flight. Returns whether the fold
+/// chain survived (the caller then finishes with `accum_update`); a
+/// `false` means the fully assembled `full` must go through the
+/// ordinary barrier `update` instead — `full` is always completely
+/// assembled on return either way (dead peers' rows frozen). With
+/// `rec = Some`, the delivery-order receive is bounded: after `strikes`
+/// consecutive empty windows every still-missing peer is declared dead
+/// and the fold chain is abandoned (its slices never arrived).
+#[allow(clippy::too_many_arguments)]
+pub fn stream_exchange(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    stream: u64,
+    full: &mut Mat,
+    r0: usize,
+    m: usize,
+    iter: u64,
+    op: &mut dyn BlockOp,
+    timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
+) -> bool {
+    let me = ep.id();
+    let c = ep.nodes();
+    let nh = full.cols();
+    let mine: Vec<f64> = slice_of(full, r0, m).to_vec();
+    timer.comm(|| {
+        for dst in 0..c {
+            if dst != me && alive[dst] {
+                ep.send_coded(dst, kind, round, stream, mine.clone(), iter);
+            }
+        }
+    });
+    let mut live = op.supports_streaming();
+    if live {
+        op.accum_begin();
+        // Own slice folds immediately — free overlap while peers' frames
+        // are still in flight.
+        live = timer.comp(|| op.accum_fold(r0, m, &mine));
+    }
+    let mut pending = alive.to_vec();
+    pending[me] = false;
+    while pending.iter().any(|&p| p) {
+        let msg = match rec {
+            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, round))),
+            Some(rec) => timer.comm(|| recv_any_bounded(ep, &pending, kind, round, rec)),
+        };
+        let Some(msg) = msg else {
+            // Strikeout: every still-missing peer is dead. Their rows of
+            // `full` stay frozen; the incomplete fold chain is abandoned
+            // so the caller re-runs the product on the assembled state.
+            for (j, p) in pending.iter_mut().enumerate() {
+                if *p {
+                    alive[j] = false;
+                    *p = false;
+                }
+            }
+            live = false;
+            break;
+        };
+        pending[msg.src] = false;
+        let peer_r0 = msg.src * m;
+        full.as_mut_slice()[peer_r0 * nh..(peer_r0 + m) * nh].copy_from_slice(&msg.payload);
+        if live {
+            live = timer.comp(|| op.accum_fold(peer_r0, m, &msg.payload));
+        }
+    }
+    live
+}
+
+/// One lock-step fleet-absorption round for `op` against the freshly
+/// assembled full state `x_full`: every node probes the `m` rows it
+/// owns (`O(m·N)`, no redundant full scans), rank 0 gathers the probes,
+/// merges + decides, and broadcasts either the reference-dual command
+/// or a hold; every node applies the command to its own block operator.
+/// Uses protocol rounds `base − 1` (gather) and `base` (broadcast) on
+/// [`TagKind::Gref`] — both messages priced by the α–β latency model on
+/// their *encoded* frames (probes ride coded stream `stream`, commands
+/// `stream + 1`; absorption is exact for any reference, so a quantized
+/// `ḡ` only perturbs *when* rebuilds trigger, never the iterates).
+#[allow(clippy::too_many_arguments)]
+pub fn fleet_sync(
+    ep: &Endpoint,
+    base_round: u64,
+    stream: u64,
+    op: &mut dyn BlockOp,
+    x_full: &Mat,
+    r0: usize,
+    m: usize,
+    nh: usize,
+    tau: f64,
+    iter: u64,
+    timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
+) {
+    let payload = timer.comp(|| match op.fleet_probe(x_full, r0, m) {
+        Some(p) => fleet::probe_payload(0, &p),
+        None => fleet::degraded_payload(0),
+    });
+    // A dead peer's missing probe is substituted with the degraded
+    // payload, which makes `decide` hold — fleet absorption freezes
+    // while the fleet is degraded rather than re-absorbing against a
+    // partial view (the fleet.rs hold state, reachable from real
+    // faults). A dead rank 0 means no commands ever again: survivors
+    // keep their current references (absorption stays exact for any
+    // reference — only rebuild cadence degrades).
+    let parts: Option<Vec<Vec<f64>>> = match rec {
+        None => timer
+            .comm(|| gather_coded(ep, 0, TagKind::Gref, base_round - 1, stream, &payload, iter)),
+        Some(rec) => timer
+            .comm(|| {
+                gather_resilient(
+                    ep,
+                    0,
+                    TagKind::Gref,
+                    base_round - 1,
+                    Some(stream),
+                    &payload,
+                    iter,
+                    alive,
+                    rec,
+                )
+            })
+            .map(|parts| {
+                parts
+                    .into_iter()
+                    .map(|p| p.unwrap_or_else(|| fleet::degraded_payload(0)))
+                    .collect()
+            }),
+    };
+    let reply = if let Some(parts) = parts {
+        // Rank 0: merge + decide, then broadcast the verdict.
+        let refs: Vec<&[f64]> = parts.iter().map(|p| p.as_slice()).collect();
+        let decision = timer.comp(|| fleet::decide(&refs, nh, m, tau));
+        let payload = match &decision {
+            Some(cmd) => fleet::command_payload(0, cmd),
+            None => fleet::hold_payload(0),
+        };
+        match rec {
+            None => Some(timer.comm(|| {
+                bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, Some(&payload), iter)
+            })),
+            Some(rec) => timer.comm(|| {
+                bcast_resilient(
+                    ep,
+                    0,
+                    TagKind::Gref,
+                    base_round,
+                    Some(stream + 1),
+                    Some(&payload),
+                    iter,
+                    alive,
+                    rec,
+                )
+            }),
+        }
+    } else {
+        match rec {
+            None => Some(
+                timer
+                    .comm(|| bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, None, iter)),
+            ),
+            Some(rec) => timer.comm(|| {
+                bcast_resilient(
+                    ep,
+                    0,
+                    TagKind::Gref,
+                    base_round,
+                    Some(stream + 1),
+                    None,
+                    iter,
+                    alive,
+                    rec,
+                )
+            }),
+        }
+    };
+    if let Some(reply) = reply {
+        if let (_, Some((needed, gref))) = fleet::parse_command(&reply) {
+            timer.comp(|| op.fleet_absorb(gref, needed));
+        }
+    }
+}
+
+/// Synchronous server-side product over the gathered client slices.
+/// With the streamed exchange live, each client's slice folds into the
+/// operator's pending product the moment its frame is deliverable
+/// (decode + partial compute hide behind the remaining transfers);
+/// otherwise — streaming off, an operator without the accumulation
+/// hooks, or a hybrid fold that aborted on a drift trip — the fully
+/// assembled state goes through the ordinary barrier `matvec`. Fleet's
+/// local decide/apply always runs on the assembled state before a
+/// barrier product, exactly as in the pre-streaming protocol.
+///
+/// With `rec` set (active fault plan), the gather is strikes-bounded:
+/// clients still pending after the full death budget are struck dead in
+/// `alive`, their rows stay frozen at the last received slice, and the
+/// product falls back to the barrier `matvec` (a partial accumulation
+/// cannot represent the frozen rows). Already-dead clients are never
+/// waited on, so an `exclude` run pays the budget once per loss.
+#[allow(clippy::too_many_arguments)]
+pub fn server_product(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    op: &mut dyn BlockOp,
+    full: &mut Mat,
+    m: usize,
+    c: usize,
+    stream: bool,
+    fleet_on: bool,
+    tau: f64,
+    timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
+) -> Mat {
+    let nh = full.cols();
+    let mut folding = stream && op.supports_streaming() && alive.iter().all(|&a| a);
+    if folding {
+        op.accum_begin();
+    }
+    let mut pending = alive.to_vec();
+    while pending.iter().any(|&p| p) {
+        let msg = match rec {
+            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, round))),
+            Some(rec) => timer.comm(|| recv_any_bounded(ep, &pending, kind, round, rec)),
+        };
+        let Some(msg) = msg else {
+            // Struck out: everyone still pending is dead. Their rows in
+            // `full` stay frozen; the caller decides abort vs exclude.
+            for (j, p) in pending.iter_mut().enumerate() {
+                if *p {
+                    alive[j] = false;
+                    *p = false;
+                }
+            }
+            folding = false;
+            break;
+        };
+        pending[msg.src] = false;
+        let r0 = msg.src * m;
+        full.as_mut_slice()[r0 * nh..(r0 + m) * nh].copy_from_slice(&msg.payload);
+        if folding {
+            folding = timer.comp(|| op.accum_fold(r0, m, &msg.payload));
+        }
+    }
+    if fleet_on {
+        timer.comp(|| fleet::local_decide_apply(op, full, tau));
+    }
+    if folding {
+        timer.comp(|| op.accum_matvec().clone())
+    } else {
+        timer.comp(|| op.matvec(full).clone())
+    }
+}
+
+/// Strikes-bounded chunk receive from the star server (the exact path —
+/// chunks are round-tagged). `None` only after the full death budget of
+/// a resilient run; lossless runs block forever, as before.
+pub fn recv_chunk(
+    ep: &Endpoint,
+    server: usize,
+    round: u64,
+    resilient: bool,
+    rec: &Recovery,
+) -> Option<Vec<f64>> {
+    if !resilient {
+        return Some(ep.recv_blocking(server, TagKind::Ctl, round).payload);
+    }
+    recv_bounded(ep, server, TagKind::Ctl, round, rec).map(|msg| msg.payload)
+}
+
+/// Strike-bounded point-to-point receive: `strikes` windows of
+/// `recv_timeout_secs` each; `None` means the sender burned the whole
+/// death budget in silence.
+pub fn recv_bounded(
+    ep: &Endpoint,
+    src: usize,
+    kind: TagKind,
+    round: u64,
+    rec: &Recovery,
+) -> Option<Message> {
+    let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
+    (0..rec.strikes.max(1)).find_map(|_| ep.recv_timeout(src, kind, round, per_try))
+}
+
+/// Strike-bounded any-source receive over the `pending` mask — the
+/// delivery-order analogue of [`recv_bounded`].
+pub fn recv_any_bounded(
+    ep: &Endpoint,
+    pending: &[bool],
+    kind: TagKind,
+    round: u64,
+    rec: &Recovery,
+) -> Option<Message> {
+    let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
+    (0..rec.strikes.max(1)).find_map(|_| ep.recv_any_timeout(pending, kind, round, per_try))
+}
+
+// --------------------------------------------------------------------------
+// Async fleet-absorption routing (rank-0 coordinator over latest-wins)
+// --------------------------------------------------------------------------
+
+/// Rank 0's per-channel fleet-coordination state.
+pub struct FleetCoord {
+    /// Latest probe payload per node (rank 0's own at index 0).
+    probes: Vec<Option<Vec<f64>>>,
+    /// Issued-command count. A probe stamped with an older seq measured
+    /// drift against a superseded reference and is held back until the
+    /// node reports post-command state — this is what prevents a
+    /// command storm from stale probes racing the broadcast.
+    seq: u64,
+}
+
+impl FleetCoord {
+    pub fn new(c: usize) -> Self {
+        Self { probes: vec![None; c], seq: 0 }
+    }
+}
+
+/// Rank 0's fleet pass for one channel: refresh its own probe, drain
+/// the latest peer probes, and — once every node has reported
+/// current-seq state — merge, decide, broadcast the command and obey it
+/// locally. `hold` freezes decisions once any peer announced done (its
+/// slice probes stop; the remaining nodes keep their emergency guard).
+#[allow(clippy::too_many_arguments)]
+pub fn coordinate(
+    coord: &mut FleetCoord,
+    ep: &Endpoint,
+    c: usize,
+    probe_tag: u64,
+    cmd_tag: u64,
+    op: &mut dyn BlockOp,
+    x_full: &Mat,
+    m: usize,
+    nh: usize,
+    tau: f64,
+    hold: bool,
+    k64: u64,
+    timer: &mut SplitTimer,
+) {
+    let seq = coord.seq;
+    coord.probes[0] = timer.comp(|| {
+        op.fleet_probe(x_full, 0, m)
+            .map(|p| fleet::probe_payload(seq, &p))
+    });
+    timer.comm(|| {
+        for j in 1..c {
+            if let Some(msg) = ep.try_recv_latest(j, TagKind::Gref, probe_tag) {
+                coord.probes[j] = Some(msg.payload);
+            }
+        }
+    });
+    if hold {
+        return;
+    }
+    // Full, current-seq coverage required: a missing or stale probe
+    // (degraded operator, command still in flight) holds the decision.
+    let mut refs: Vec<&[f64]> = Vec::with_capacity(c);
+    for probe in &coord.probes {
+        match probe {
+            // `.round()`: probe frames may ride a lossy wire format,
+            // so the integer seq lane carries quantization noise ≪ 0.5.
+            Some(pay) if pay.first().copied().unwrap_or(-1.0).round() as u64 == coord.seq => {
+                refs.push(pay.as_slice());
+            }
+            _ => return,
+        }
+    }
+    let Some(cmd) = timer.comp(|| fleet::decide(&refs, nh, m, tau)) else {
+        return;
+    };
+    coord.seq += 1;
+    let payload = fleet::command_payload(coord.seq, &cmd);
+    timer.comm(|| {
+        for j in 1..c {
+            ep.send_coded(j, TagKind::Gref, cmd_tag, cmd_tag, payload.clone(), k64);
+        }
+    });
+    timer.comp(|| op.fleet_absorb(&cmd.gref, cmd.needed));
+    // Stored probes measured drift against the superseded reference.
+    for probe in coord.probes.iter_mut() {
+        *probe = None;
+    }
+}
+
+/// Apply the freshest coordinator command (if any) to `op`, tracking
+/// the applied sequence so a command is never obeyed twice.
+pub fn apply_fleet_command(
+    ep: &Endpoint,
+    op: &mut dyn BlockOp,
+    cmd_tag: u64,
+    applied: &mut u64,
+    timer: &mut SplitTimer,
+) {
+    let msg = timer.comm(|| ep.try_recv_latest(0, TagKind::Gref, cmd_tag));
+    if let Some(msg) = msg {
+        let (seq, cmd) = fleet::parse_command(&msg.payload);
+        if seq > *applied {
+            *applied = seq;
+            if let Some((needed, gref)) = cmd {
+                timer.comp(|| op.fleet_absorb(gref, needed));
+            }
+        }
+    }
+}
+
+/// Send this node's slice-local drift probe to rank 0. A degraded
+/// operator (dense fallback) stops probing, which silently pauses fleet
+/// decisions at the coordinator — the intended degrade path. Probes
+/// ride the latest-wins delivery class: a dropped probe is superseded
+/// by next iteration's, and a stalled probe channel merely holds the
+/// coordinator's decision (the same hold state).
+#[allow(clippy::too_many_arguments)]
+pub fn send_fleet_probe(
+    ep: &Endpoint,
+    op: &dyn BlockOp,
+    probe_tag: u64,
+    x_full: &Mat,
+    r0: usize,
+    m: usize,
+    seq: u64,
+    k64: u64,
+    timer: &mut SplitTimer,
+) {
+    if let Some(p) = timer.comp(|| op.fleet_probe(x_full, r0, m)) {
+        let payload = fleet::probe_payload(seq, &p);
+        timer.comm(|| ep.send_coded_latest(0, TagKind::Gref, probe_tag, probe_tag, payload, k64));
+    }
+}
+
+/// The asynchronous finish: announce "done" to every peer on the
+/// reliable control path, then run the final consistent AllGather pair
+/// (paper: "a consistent broadcast ensures that all nodes have the same
+/// fully updated u and v") at the reserved rounds `u64::MAX − 1` (U)
+/// and `u64::MAX` (V). Under an active fault plan the exchange is
+/// crash-tolerant: peers already in `dead` are skipped, and a peer that
+/// never shows up within the stretched death budget is struck into
+/// `dead` here instead of hanging the run. (The runner assembles the
+/// outcome from each node's own slices, so a struck peer only costs us
+/// its copy, never correctness.)
+#[allow(clippy::too_many_arguments)]
+pub fn finish_consistent(
+    ep: &Endpoint,
+    done_tag: u64,
+    u_fin: &Mat,
+    v_fin: &Mat,
+    iterations: usize,
+    resilient: bool,
+    recovery: &Recovery,
+    dead: &mut [bool],
+    timer: &mut SplitTimer,
+) {
+    let c = ep.nodes();
+    let id = ep.id();
+    // Announce we stopped, so lagging peers don't wait on us …
+    for peer in 0..c {
+        if peer != id {
+            ep.send(peer, TagKind::Ctl, done_tag, vec![1.0], iterations as u64);
+        }
+    }
+    timer.comm(|| {
+        if resilient {
+            let fin = Recovery {
+                recv_timeout_secs: recovery.death_secs().max(1e-3),
+                ..*recovery
+            };
+            let mut alive: Vec<bool> = dead.iter().map(|&d| !d).collect();
+            let _ = allgather_resilient(
+                ep,
+                TagKind::U,
+                u64::MAX - 1,
+                None,
+                u_fin.as_slice(),
+                iterations as u64,
+                &mut alive,
+                &fin,
+            );
+            let _ = allgather_resilient(
+                ep,
+                TagKind::V,
+                u64::MAX,
+                None,
+                v_fin.as_slice(),
+                iterations as u64,
+                &mut alive,
+                &fin,
+            );
+            for (p, &a) in alive.iter().enumerate() {
+                if !a {
+                    dead[p] = true;
+                }
+            }
+        } else {
+            let _ = allgather(ep, TagKind::U, u64::MAX - 1, u_fin.as_slice(), iterations as u64);
+            let _ = allgather(ep, TagKind::V, u64::MAX, v_fin.as_slice(), iterations as u64);
+        }
+    });
+    timer.add_comp(ep.take_decode_secs());
+}
+
+// --------------------------------------------------------------------------
+// Slice plumbing & client-side element-wise updates
+// --------------------------------------------------------------------------
+
+/// Survivor count of a live mask.
+pub fn count_alive(alive: &[bool]) -> usize {
+    alive.iter().filter(|&&l| l).count()
+}
+
+/// The dead peer ids a live mask records.
+pub fn lost_of(alive: &[bool]) -> Vec<usize> {
+    alive
+        .iter()
+        .enumerate()
+        .filter(|(_, &l)| !l)
+        .map(|(j, _)| j)
+        .collect()
+}
+
+/// Rows `[r0, r0+m)` of `full` as a flat slice (row-major m×N block).
+pub fn slice_of(full: &Mat, r0: usize, m: usize) -> &[f64] {
+    let nh = full.cols();
+    &full.as_slice()[r0 * nh..(r0 + m) * nh]
+}
+
+/// Write a client's block into the full state at row `r0`.
+pub fn copy_slice(full: &mut Mat, block: &Mat, r0: usize) {
+    let nh = full.cols();
+    let m = block.rows();
+    full.as_mut_slice()[r0 * nh..(r0 + m) * nh].copy_from_slice(block.as_slice());
+}
+
+/// Assemble AllGather parts (node-indexed, each m×N flat) into `full`.
+pub fn assemble(full: &mut Mat, parts: &[Vec<f64>], m: usize) {
+    let nh = full.cols();
+    for (j, part) in parts.iter().enumerate() {
+        debug_assert_eq!(part.len(), m * nh);
+        full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(part);
+    }
+}
+
+/// [`assemble`] over resilient parts: a dead peer's `None` slot leaves
+/// its rows of `full` frozen at the last received value.
+pub fn assemble_opt(full: &mut Mat, parts: &[Option<Vec<f64>>], m: usize) {
+    let nh = full.cols();
+    for (j, part) in parts.iter().enumerate() {
+        if let Some(part) = part {
+            debug_assert_eq!(part.len(), m * nh);
+            full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(part);
+        }
+    }
+}
+
+/// Client `j`'s rows of a full n×N matrix, flattened.
+pub fn chunk_of(full: &Mat, j: usize, m: usize) -> &[f64] {
+    let nh = full.cols();
+    &full.as_slice()[j * m * nh..(j + 1) * m * nh]
+}
+
+/// Write client `j`'s m×N flat block into the full state.
+pub fn write_block(full: &mut Mat, block: &[f64], j: usize, m: usize) {
+    let nh = full.cols();
+    debug_assert_eq!(block.len(), m * nh);
+    full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(block);
+}
+
+/// Per-client marginal targets in the run's numerics domain. Linear
+/// clients divide by the received product chunk; log clients subtract in
+/// log space (`log a`, `log b` precomputed once per run, not per
+/// iteration).
+pub struct ClientTargets<'a> {
+    a: &'a [f64],
+    b: &'a Mat,
+    log_a: Vec<f64>,
+    /// Row-major m×N, only populated in the log domain.
+    log_b: Vec<f64>,
+    domain: Domain,
+}
+
+impl<'a> ClientTargets<'a> {
+    pub fn new(shard: &'a crate::workload::ClientShard, domain: Domain) -> Self {
+        let (log_a, log_b) = match domain {
+            Domain::Linear => (Vec::new(), Vec::new()),
+            Domain::Log => (
+                shard.a.iter().map(|&x| x.ln()).collect(),
+                shard.b.as_slice().iter().map(|&x| x.ln()).collect(),
+            ),
+        };
+        Self { a: &shard.a, b: &shard.b, log_a, log_b, domain }
+    }
+
+    /// `u ← α a⊘q + (1−α) u` — division is a log-subtraction in the log
+    /// domain (`a` broadcasts across histograms).
+    pub fn damped_u_update(&self, u_jj: &mut Mat, q: &[f64], alpha: f64) {
+        let (m, nh) = (u_jj.rows(), u_jj.cols());
+        let beta = 1.0 - alpha;
+        match self.domain {
+            Domain::Linear => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let qv = q[i * nh + h];
+                        u_jj[(i, h)] = alpha * (self.a[i] / qv) + beta * u_jj[(i, h)];
+                    }
+                }
+            }
+            Domain::Log => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let qv = q[i * nh + h];
+                        u_jj[(i, h)] = alpha * (self.log_a[i] - qv) + beta * u_jj[(i, h)];
+                    }
+                }
+            }
+        }
+    }
+
+    /// `v ← α b⊘r + (1−α) v` (per-histogram target).
+    pub fn damped_v_update(&self, v_jj: &mut Mat, r: &[f64], alpha: f64) {
+        let (m, nh) = (v_jj.rows(), v_jj.cols());
+        let beta = 1.0 - alpha;
+        match self.domain {
+            Domain::Linear => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let rv = r[i * nh + h];
+                        v_jj[(i, h)] = alpha * (self.b[(i, h)] / rv) + beta * v_jj[(i, h)];
+                    }
+                }
+            }
+            Domain::Log => {
+                for i in 0..m {
+                    for h in 0..nh {
+                        let rv = r[i * nh + h];
+                        v_jj[(i, h)] =
+                            alpha * (self.log_b[i * nh + h] - rv) + beta * v_jj[(i, h)];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Block a-marginal error `max_h Σ_i |u∘q − a|` from a flat q chunk —
+/// always reported in the linear domain (log states exponentiate
+/// `log u + q`, the log of the marginal entry).
+pub fn block_err(u_jj: &Mat, q: &[f64], a: &[f64], m: usize, nh: usize, domain: Domain) -> f64 {
+    let mut best: f64 = 0.0;
+    for h in 0..nh {
+        let mut e = 0.0;
+        for i in 0..m {
+            let entry = match domain {
+                Domain::Linear => u_jj[(i, h)] * q[i * nh + h],
+                Domain::Log => (u_jj[(i, h)] + q[i * nh + h]).exp(),
+            };
+            e += (entry - a[i]).abs();
+        }
+        best = best.max(e);
+    }
+    best
+}

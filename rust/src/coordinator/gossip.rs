@@ -1,0 +1,403 @@
+//! Gossip topology: asynchronous Federated Sinkhorn by seeded push
+//! dissemination over the lossy fabric.
+//!
+//! Each iteration a node picks ONE peer — [`gossip_peer`] is pure in
+//! `(seed, iter, rank)`, so the schedule replays identically at every
+//! thread count — and pushes its entire stamped view: a payload of
+//! `c` per-slice freshness stamps (stamp\[j\] = the iteration at which
+//! owner `j` produced the slice this view holds) followed by the full
+//! n×N state. The receiver merges slice-by-slice, keeping whichever
+//! copy carries the newer stamp, so information spreads epidemically:
+//! O(log c) expected rounds to full coverage instead of the ring's
+//! deterministic c−1 hops or All-to-All's c−1 messages per round.
+//! Per half-iteration each node sends exactly one frame: `α +
+//! β·B·(n·N + c)` — constant message *count* per node, the cheapest α
+//! regime of all four exchange graphs, paid for with staleness.
+//!
+//! Views ride the latest-wins delivery class (a dropped push is
+//! superseded by the next; the delta codec re-keys on loss). Stamps
+//! travel as floats and are `.round()`ed on merge — same convention as
+//! the fleet seq lane — so lossy wire formats only carry quantization
+//! noise ≪ 0.5 into the integer stamp.
+//!
+//! **Bounded staleness.** Prop. 2's bounded-delay assumption is
+//! enforced per *slice*: a node that has outrun any live owner's stamp
+//! by more than `cfg.max_staleness` blocks until fresher state arrives.
+//! While blocked it keeps re-pushing its own stamped view round-robin
+//! (targets rotate through every peer) — a frozen push graph could
+//! disconnect and livelock the gate; round-robin re-pushes guarantee
+//! every peer hears from a blocked node within c−1 spins. The spin
+//! count is wall-clock-dependent (like all async scheduling); only the
+//! main k-indexed peer schedule is replay-deterministic.
+//!
+//! Stopping mirrors the async All-to-All: independent block-error
+//! estimate ×c, done votes on the reliable control path, then the
+//! engine's final consistent exchange assembles identical state
+//! everywhere. Fleet absorption is not routed over gossip (there is no
+//! rank-0 probe path on a randomized graph); requesting both warns and
+//! runs with per-node emergency absorption only.
+
+use super::engine::{finish_consistent, write_block};
+use super::outcome::{NodeOutcome, NodeStats, TracePoint};
+use super::RunCtx;
+use crate::linalg::Mat;
+use crate::metrics::{Clock, SplitTimer};
+use crate::net::{Endpoint, TagKind};
+use crate::rng::splitmix64;
+use crate::runtime::{StabStats, Target};
+use crate::sinkhorn::StopReason;
+use std::time::Instant;
+
+/// One tag per kind for the whole run (doubles as the coded-stream id,
+/// like the async protocol).
+const GOSSIP_TAG: u64 = 0;
+/// Control tag announcing "this node stopped".
+const DONE_TAG: u64 = 1;
+
+/// The push target for `rank` at iteration `iter`: uniform over the
+/// other `c−1` nodes, pure in `(seed, iter, rank)` — no RNG state, no
+/// wall clock — so any two runs with the same seed walk the same push
+/// schedule regardless of thread interleaving.
+pub fn gossip_peer(seed: u64, iter: u64, rank: usize, c: usize) -> usize {
+    debug_assert!(c > 1, "gossip needs at least two nodes");
+    let mut s = seed
+        .wrapping_add(iter.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        .wrapping_add((rank as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    let r = splitmix64(&mut s);
+    let pick = (r % (c as u64 - 1)) as usize;
+    // Skip self: map picks at or past our own rank up by one.
+    if pick >= rank {
+        pick + 1
+    } else {
+        pick
+    }
+}
+
+pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+    super::runner::spawn_nodes(ctx.cfg.clients, |id| client(ctx, id))
+}
+
+/// Stamped view of one scaling matrix: the full state plus, per owner,
+/// the iteration its slice was produced at.
+struct View {
+    full: Mat,
+    stamps: Vec<u64>,
+    /// Wall-clock instant each owner's stamp last *advanced* — the
+    /// liveness evidence behind the death budget (a crashed owner's
+    /// stamp freezes fleet-wide).
+    heard: Vec<Instant>,
+}
+
+impl View {
+    fn new(n: usize, nh: usize, c: usize, one: f64) -> Self {
+        Self {
+            full: Mat::full(n, nh, one),
+            stamps: vec![0; c],
+            heard: vec![Instant::now(); c],
+        }
+    }
+
+    /// The wire payload: `c` stamps then the flattened state.
+    fn payload(&self) -> Vec<f64> {
+        let mut p = Vec::with_capacity(self.stamps.len() + self.full.as_slice().len());
+        p.extend(self.stamps.iter().map(|&s| s as f64));
+        p.extend_from_slice(self.full.as_slice());
+        p
+    }
+
+    /// Merge a received stamped view slice-by-slice: adopt owner `j`'s
+    /// rows iff the incoming stamp is strictly newer. Returns whether
+    /// anything merged fresh.
+    fn merge(&mut self, payload: &[f64], m: usize, c: usize, k64: u64, ctx: &RunCtx<'_>) -> bool {
+        let nh = self.full.cols();
+        if payload.len() != c + self.full.as_slice().len() {
+            return false; // malformed frame — latest-wins traffic, just skip
+        }
+        let mut fresh = false;
+        for j in 0..c {
+            // Stamps ride a possibly-lossy wire format: round off the
+            // quantization noise (≪ 0.5, the fleet seq-lane convention).
+            let stamp = payload[j].round().max(0.0) as u64;
+            if stamp > self.stamps[j] {
+                self.stamps[j] = stamp;
+                self.heard[j] = Instant::now();
+                ctx.delays.record(stamp, k64);
+                let rows = &payload[c + j * m * nh..c + (j + 1) * m * nh];
+                write_block(&mut self.full, rows, j, m);
+                fresh = true;
+            }
+        }
+        fresh
+    }
+}
+
+fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
+    let shard = &ctx.partition.shards[id];
+    let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
+    let c = ctx.cfg.clients;
+    let alpha = ctx.cfg.alpha;
+    let bound = ctx.cfg.staleness_bound();
+    let seed = ctx.cfg.seed;
+    let ep = ctx.net.endpoint(id);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    if id == 0 && ctx.fleet_on() {
+        eprintln!(
+            "warning: fleet absorption is not routed over the gossip topology \
+             (no coordinator path on a randomized push graph); relying on \
+             per-node emergency absorption"
+        );
+    }
+
+    let one = ctx.domain.one();
+    let mut u_op = ctx
+        .backend
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_row,
+            Target::Vec(&shard.a),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
+        .expect("u-op");
+    let mut v_op = ctx
+        .backend
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_col_t,
+            Target::Mat(&shard.b),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
+        .expect("v-op");
+
+    let mut u_view = View::new(n, nh, c, one);
+    let mut v_view = View::new(n, nh, c, one);
+    let mut done = vec![false; c];
+    let mut dead = vec![false; c];
+
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(id);
+
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+
+    for k in 1..=ctx.policy.max_iters {
+        // Crash injection: exit cleanly at an iteration boundary — no
+        // done vote, no final exchange; peers watch our stamp freeze and
+        // fold us into the done set through the death budget.
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break;
+        }
+        iterations = k;
+        let k64 = k as u64;
+
+        // Drain every peer's freshest pushes and done votes, then
+        // enforce the per-slice staleness bound.
+        timer.comm(|| {
+            let mut seen = ep.inbox_seq();
+            drain(&ep, ctx, id, c, m, k64, &mut u_view, &mut v_view, &mut done);
+            let mut spins: usize = 0;
+            loop {
+                let lagging = (0..c).any(|j| {
+                    j != id
+                        && !done[j]
+                        && (k64.saturating_sub(u_view.stamps[j]) > bound
+                            || k64.saturating_sub(v_view.stamps[j]) > bound)
+                });
+                if !lagging || c == 1 {
+                    break;
+                }
+                if resilient {
+                    // A lagging owner whose stamp has been frozen past
+                    // the death budget has crashed: fold it into the
+                    // done set so the gate releases, and note the loss.
+                    for j in 0..c {
+                        if j != id
+                            && !done[j]
+                            && (k64.saturating_sub(u_view.stamps[j]) > bound
+                                || k64.saturating_sub(v_view.stamps[j]) > bound)
+                            && u_view.heard[j].elapsed().as_secs_f64() >= recovery.death_secs()
+                            && v_view.heard[j].elapsed().as_secs_f64() >= recovery.death_secs()
+                        {
+                            done[j] = true;
+                            dead[j] = true;
+                        }
+                    }
+                }
+                // Re-push our stamped views round-robin while blocked: a
+                // frozen push graph could disconnect (everyone blocked,
+                // nobody's chosen target is anyone's missing source);
+                // rotating targets reaches every peer within c−1 spins,
+                // so some stamp somewhere always advances.
+                let target = (id + 1 + (spins % (c - 1))) % c;
+                if !dead[target] {
+                    ep.send_coded_latest(
+                        target,
+                        TagKind::U,
+                        GOSSIP_TAG,
+                        GOSSIP_TAG,
+                        u_view.payload(),
+                        k64,
+                    );
+                    ep.send_coded_latest(
+                        target,
+                        TagKind::V,
+                        GOSSIP_TAG,
+                        GOSSIP_TAG,
+                        v_view.payload(),
+                        k64,
+                    );
+                }
+                spins += 1;
+                seen = ep.wait_traffic(seen, std::time::Duration::from_millis(1));
+                drain(&ep, ctx, id, c, m, k64, &mut u_view, &mut v_view, &mut done);
+            }
+        });
+
+        // Marginal error of the *current* state against the freshest v
+        // view (pre-update, as everywhere else: post-update the block
+        // error is identically zero at α = 1).
+        let pre_err = if ctx.policy.check_at(k) {
+            let u_now = u_op.state().clone();
+            let local: f64 = timer
+                .comp(|| u_op.marginal(&v_view.full, &u_now))
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            Some(local)
+        } else {
+            None
+        };
+
+        // u_jj = α a_j/(K_j v) + (1−α) u_jj; stamp, then push the whole
+        // stamped view to this iteration's seeded peer. One frame per
+        // half-iteration — the peer relays our slice onward for us.
+        let u_jj = timer.comp(|| u_op.update(&v_view.full, alpha).clone());
+        write_block(&mut u_view.full, u_jj.as_slice(), id, m);
+        u_view.stamps[id] = k64;
+        let peer = if c > 1 { gossip_peer(seed, k64, id, c) } else { id };
+        if c > 1 && !dead[peer] {
+            timer.comm(|| {
+                ep.send_coded_latest(
+                    peer,
+                    TagKind::U,
+                    GOSSIP_TAG,
+                    GOSSIP_TAG,
+                    u_view.payload(),
+                    k64,
+                )
+            });
+        }
+
+        // v_jj = α b_j/(K_jᵀ u) + (1−α) v_jj, stamped + pushed to the
+        // same peer (one seeded choice per iteration).
+        let v_jj = timer.comp(|| v_op.update(&u_view.full, alpha).clone());
+        write_block(&mut v_view.full, v_jj.as_slice(), id, m);
+        v_view.stamps[id] = k64;
+        if c > 1 && !dead[peer] {
+            timer.comm(|| {
+                ep.send_coded_latest(
+                    peer,
+                    TagKind::V,
+                    GOSSIP_TAG,
+                    GOSSIP_TAG,
+                    v_view.payload(),
+                    k64,
+                )
+            });
+        }
+
+        // Dequantizing the frames this iteration consumed is receiver
+        // CPU work.
+        timer.add_comp(ep.take_decode_secs());
+
+        // Independent convergence estimate, ×c like the async protocol.
+        if let Some(local) = pre_err {
+            let est = local * c as f64;
+            final_err = est;
+            if ctx.traced {
+                trace.push(TracePoint { iter: k, secs: clock.now(), err: est });
+            }
+            if est < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break;
+            }
+        }
+        if ctx.policy.timeout_secs > 0.0 && clock.now() > ctx.policy.timeout_secs {
+            stop = StopReason::Timeout;
+            break;
+        }
+    }
+
+    let u_fin = u_op.state().clone();
+    let v_fin = v_op.state().clone();
+    if stop != StopReason::Dead {
+        finish_consistent(
+            &ep,
+            DONE_TAG,
+            &u_fin,
+            &v_fin,
+            iterations,
+            resilient,
+            &recovery,
+            &mut dead,
+            &mut timer,
+        );
+    }
+
+    NodeOutcome {
+        stats: NodeStats {
+            id,
+            role: "client",
+            timer,
+            iterations,
+            stop,
+            final_err,
+            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            lost_peers: dead
+                .iter()
+                .enumerate()
+                .filter_map(|(p, &d)| d.then_some(p))
+                .collect(),
+        },
+        slices: Some((u_fin, v_fin)),
+        trace,
+    }
+}
+
+/// Drain the freshest stamped view from every peer (both kinds) plus
+/// done votes. Any peer's push may carry third-party slices newer than
+/// what we hold — that relay is the whole point of the epidemic.
+#[allow(clippy::too_many_arguments)]
+fn drain(
+    ep: &Endpoint,
+    ctx: &RunCtx<'_>,
+    id: usize,
+    c: usize,
+    m: usize,
+    k64: u64,
+    u_view: &mut View,
+    v_view: &mut View,
+    done: &mut [bool],
+) {
+    for peer in 0..c {
+        if peer == id {
+            continue;
+        }
+        if let Some(msg) = ep.try_recv_latest(peer, TagKind::U, GOSSIP_TAG) {
+            u_view.merge(&msg.payload, m, c, k64, ctx);
+        }
+        if let Some(msg) = ep.try_recv_latest(peer, TagKind::V, GOSSIP_TAG) {
+            v_view.merge(&msg.payload, m, c, k64, ctx);
+        }
+        if ep.try_recv_latest(peer, TagKind::Ctl, DONE_TAG).is_some() {
+            done[peer] = true;
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! L3 — the paper's coordination contribution: Federated Sinkhorn.
 //!
-//! Four protocols over the simulated fabric ([`crate::net`]), one OS
-//! thread per node:
+//! Six topologies over the simulated fabric ([`crate::net`]), one OS
+//! thread per node, all driven by the protocol core in [`engine`]:
 //!
 //! * [`sync_a2a`] — Alg. 1: peer-to-peer, lock-step AllGather of the
 //!   `u`/`v` slices every `w` iterations.
@@ -11,52 +11,37 @@
 //!   `K`, does the heavy products, scatters the intermediates.
 //! * [`star`] (async) — the star topology without lock-step (the fourth
 //!   cell of the paper's synchrony × topology matrix).
+//! * [`ring`] — lock-step neighbor-pair slice rotation: c−1 hops per
+//!   half-iteration give full coverage with only degree-1 links.
+//! * [`gossip`] — seeded push-style dissemination with per-slice
+//!   freshness stamps (peer choice pure in `(seed, iter, rank)`).
+//!
+//! The run context lives in [`ctx`], the outcome types in [`outcome`],
+//! and the shared per-iteration machinery (exchange + streamed folds,
+//! strike-based peer death, fleet-absorption routing) in [`engine`] —
+//! a topology implements [`engine::Topology`] and inherits all of it.
 //!
 //! Every node accounts its wall time into the computation/communication
 //! buckets the paper reports, and async nodes feed the shared
 //! [`crate::net::DelayTracker`].
 
 mod async_a2a;
+mod ctx;
+pub mod engine;
 pub mod fleet;
+mod gossip;
+mod outcome;
+mod ring;
 mod runner;
 mod star;
 mod sync_a2a;
 
-pub use runner::{run_federated, FederatedOutcome, NodeStats, TracePoint};
-
-use crate::sinkhorn::StopReason;
-
-/// The paper's summary-row convention: the slowest node defines the run
-/// ("only the node with the highest total execution time was kept").
-pub fn slowest_node(stats: &[NodeStats]) -> &NodeStats {
-    stats
-        .iter()
-        .max_by(|a, b| a.total_secs().partial_cmp(&b.total_secs()).unwrap())
-        .expect("at least one node")
-}
-
-/// Aggregate stop reason across nodes. Fault-plan runs: a crashed node
-/// ([`StopReason::Dead`]) does not veto the survivors' verdict — an
-/// `--on-node-loss exclude` run that converges over the live slice is
-/// `Converged` (the outcome's `degraded` flag records the loss); a
-/// recovery abort anywhere is `PeerLoss`; all nodes dead is `Dead`.
-pub fn aggregate_stop(stats: &[NodeStats]) -> StopReason {
-    if stats.iter().any(|s| s.stop == StopReason::PeerLoss) {
-        StopReason::PeerLoss
-    } else if stats.iter().all(|s| s.stop == StopReason::Dead) {
-        StopReason::Dead
-    } else if stats
-        .iter()
-        .filter(|s| s.stop != StopReason::Dead)
-        .all(|s| s.stop == StopReason::Converged)
-    {
-        StopReason::Converged
-    } else if stats.iter().any(|s| s.stop == StopReason::Timeout) {
-        StopReason::Timeout
-    } else {
-        StopReason::MaxIters
-    }
-}
+pub use ctx::RunCtx;
+pub use gossip::gossip_peer;
+pub use outcome::{
+    aggregate_stop, slowest_node, FederatedOutcome, NodeOutcome, NodeStats, TracePoint,
+};
+pub use runner::run_federated;
 
 #[cfg(test)]
 mod tests {

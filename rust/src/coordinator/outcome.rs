@@ -1,0 +1,121 @@
+//! Per-node and aggregate run outcomes — the result types every
+//! topology returns and every experiment driver consumes.
+
+use crate::metrics::SplitTimer;
+use crate::net::NetTraffic;
+use crate::runtime::StabStats;
+use crate::sinkhorn::{State, StopReason};
+
+/// Per-node result.
+#[derive(Clone, Debug)]
+pub struct NodeStats {
+    pub id: usize,
+    pub role: &'static str,
+    pub timer: SplitTimer,
+    pub iterations: usize,
+    pub stop: StopReason,
+    pub final_err: f64,
+    /// Absorption-hybrid counters of this node's operators (u-op + v-op,
+    /// or the star server's two kernel ops); `None` when the node ran no
+    /// stabilized schedule (linear domain, dense/sparse logsumexp, pure
+    /// element-wise star clients).
+    pub stab: Option<StabStats>,
+    /// Peers this node declared dead under the recovery policy (empty on
+    /// lossless runs and for nodes that saw every peer respond).
+    pub lost_peers: Vec<usize>,
+}
+
+impl NodeStats {
+    pub fn comp_secs(&self) -> f64 {
+        self.timer.comp_secs()
+    }
+
+    pub fn comm_secs(&self) -> f64 {
+        self.timer.comm_secs()
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.timer.total_secs()
+    }
+}
+
+/// One point of a traced error curve (Figs 9–12, 19–22).
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub iter: usize,
+    pub secs: f64,
+    /// Aggregated (sync) or node-0-estimated (async) a-marginal L1 error.
+    pub err: f64,
+}
+
+/// Aggregate run outcome.
+#[derive(Clone, Debug)]
+pub struct FederatedOutcome {
+    pub state: State,
+    pub iterations: usize,
+    pub converged: bool,
+    pub stop: StopReason,
+    pub node_stats: Vec<NodeStats>,
+    /// Staleness samples (async variants only).
+    pub taus: Vec<u64>,
+    pub trace: Vec<TracePoint>,
+    pub secs: f64,
+    /// Absorption-hybrid counters merged across every node that ran the
+    /// stabilized log schedule (`None` when none did).
+    pub stab: Option<StabStats>,
+    /// Per-[`crate::net::TagKind`] wire traffic (bytes priced on the
+    /// encoded frames); default-empty for centralized runs, which have
+    /// no fabric.
+    pub traffic: NetTraffic,
+    /// Whether the run lost a node: a crash injection fired or a peer
+    /// was declared dead. A degraded outcome's `state` is partial —
+    /// dead slices hold their last received value (`exclude`) or their
+    /// abort-time value (`abort`).
+    pub degraded: bool,
+    /// The ids every node agrees are gone (crashed nodes plus the union
+    /// of `NodeStats::lost_peers`), sorted.
+    pub lost_nodes: Vec<usize>,
+}
+
+/// Per-node return value from protocol implementations.
+pub struct NodeOutcome {
+    pub stats: NodeStats,
+    /// Final consistent slices (u_jj, v_jj) — (m × N) each; `None` for
+    /// pure-relay nodes (the star server).
+    pub slices: Option<(Mat, Mat)>,
+    pub trace: Vec<TracePoint>,
+}
+
+use crate::linalg::Mat;
+
+/// The paper's summary-row convention: the slowest node defines the run
+/// ("only the node with the highest total execution time was kept").
+pub fn slowest_node(stats: &[NodeStats]) -> &NodeStats {
+    stats
+        .iter()
+        .max_by(|a, b| a.total_secs().partial_cmp(&b.total_secs()).unwrap())
+        .expect("at least one node")
+}
+
+/// Aggregate stop reason across nodes. Fault-plan runs: a crashed node
+/// ([`StopReason::Dead`]) does not veto the survivors' verdict — an
+/// `--on-node-loss exclude` run that converges over the live slice is
+/// `Converged` (the outcome's `degraded` flag records the loss); a
+/// recovery abort anywhere is `PeerLoss`; all nodes dead is `Dead`.
+pub fn aggregate_stop(stats: &[NodeStats]) -> StopReason {
+    if stats.iter().any(|s| s.stop == StopReason::PeerLoss) {
+        StopReason::PeerLoss
+    } else if stats.iter().all(|s| s.stop == StopReason::Dead) {
+        StopReason::Dead
+    } else if stats
+        .iter()
+        .filter(|s| s.stop != StopReason::Dead)
+        .all(|s| s.stop == StopReason::Converged)
+    {
+        StopReason::Converged
+    } else if stats.iter().any(|s| s.stop == StopReason::Timeout) {
+        StopReason::Timeout
+    } else {
+        StopReason::MaxIters
+    }
+}

@@ -1,0 +1,112 @@
+//! Ring topology: synchronous Federated Sinkhorn over a neighbor-pair
+//! ring, on the same lock-step engine as All-to-All.
+//!
+//! Each exchange leg is a rotation AllGather: at hop `h ∈ 1..c` every
+//! node forwards the slice it received `h−1` hops ago to its right
+//! neighbor `(me+1) mod c` and receives the slice originating `h` hops
+//! to its left — after `c−1` hops every node holds all `c` slices.
+//! Per half-iteration each node therefore pays `(c−1)·α` latency terms
+//! and `(c−1)·β·B·m·N` bytes, the same total volume as flat All-to-All
+//! but with constant per-node degree (2 links), which is the regime
+//! where the α term dominates the cost model.
+//!
+//! Slices ride the *reliable* ARQ class on per-owner coded streams
+//! (stream id = originating node), so each relay link carries `c−1`
+//! coherent delta streams and a drop is retransmit-priced, never lost.
+//! Because every slice transits every link, a dead neighbor partitions
+//! the ring — there is no "exclude" degrade path: the plan reports
+//! [`super::engine::LockstepPlan::loss_is_fatal`] and a strikeout
+//! aborts the run with `PeerLoss` regardless of `--on-node-loss`.
+//!
+//! The assembled state per iteration is bit-identical to the sync
+//! All-to-All assembly under the f64 wire format (values are only
+//! copied); under lossy formats (deltaf32) each hop re-quantizes, so
+//! parity is within wire tolerance only. Fleet-absorption rounds and
+//! convergence votes reuse the engine's flat collectives unchanged.
+
+use super::engine::{self, LockstepPlan};
+use super::outcome::NodeOutcome;
+use super::RunCtx;
+use crate::linalg::Mat;
+use crate::metrics::SplitTimer;
+use crate::net::{Endpoint, Recovery, TagKind};
+use crate::runtime::BlockOp;
+
+pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
+    super::runner::spawn_nodes(ctx.cfg.clients, |id| {
+        engine::lockstep_client(ctx, id, &RingPlan)
+    })
+}
+
+struct RingPlan;
+
+impl LockstepPlan for RingPlan {
+    fn loss_is_fatal(&self) -> bool {
+        true // every slice transits every link: a dead neighbor partitions the ring
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exchange(
+        &self,
+        ep: &Endpoint,
+        kind: TagKind,
+        round: &mut u64,
+        _stream_id: u64,
+        full: &mut Mat,
+        r0: usize,
+        m: usize,
+        iter: u64,
+        op: &mut dyn BlockOp,
+        timer: &mut SplitTimer,
+        stream: bool,
+        alive: &mut [bool],
+        rec: Option<&Recovery>,
+    ) -> bool {
+        let me = ep.id();
+        let c = ep.nodes();
+        let nh = full.cols();
+        let right = (me + 1) % c;
+        let left = (me + c - 1) % c;
+
+        // Streamed-fold admission: the ring is naturally streaming —
+        // each hop's slice can fold into the pending product while the
+        // next hop is still in flight. Own slice folds first, then
+        // arrivals in hop order (deterministic — delivery order on a
+        // ring *is* hop order).
+        let mut live = stream && op.supports_streaming();
+        if live {
+            op.accum_begin();
+            live = timer.comp(|| op.accum_fold(r0, m, engine::slice_of(full, r0, m)));
+        }
+
+        for h in 1..c {
+            *round += 1;
+            // The slice forwarded at hop h originated h−1 positions to
+            // our left (h = 1 forwards our own); the one received
+            // originated h positions to our left.
+            let send_owner = (me + c - (h - 1)) % c;
+            let recv_owner = (me + c - h) % c;
+            let payload: Vec<f64> = engine::slice_of(full, send_owner * m, m).to_vec();
+            // Per-owner stream id: each of the c−1 logical slice streams
+            // crossing this link keeps its own coherent delta state.
+            timer.comm(|| ep.send_coded(right, kind, *round, send_owner as u64, payload, iter));
+            let msg = match rec {
+                None => Some(timer.comm(|| ep.recv_blocking(left, kind, *round))),
+                Some(rec) => timer.comm(|| engine::recv_bounded(ep, left, kind, *round, rec)),
+            };
+            let Some(msg) = msg else {
+                // The left neighbor burned the whole death budget: the
+                // ring is partitioned. Mark it dead; the engine's client
+                // loop sees the fatal loss and aborts with PeerLoss.
+                alive[left] = false;
+                return false;
+            };
+            full.as_mut_slice()[recv_owner * m * nh..(recv_owner + 1) * m * nh]
+                .copy_from_slice(&msg.payload);
+            if live {
+                live = timer.comp(|| op.accum_fold(recv_owner * m, m, &msg.payload));
+            }
+        }
+        live
+    }
+}

@@ -1,134 +1,16 @@
 //! Shared scaffolding: spawn node threads, collect per-node outcomes.
 
-use super::{aggregate_stop, async_a2a, star, sync_a2a};
+use super::ctx::RunCtx;
+use super::engine;
+use super::outcome::{aggregate_stop, FederatedOutcome, NodeOutcome, NodeStats, TracePoint};
 use crate::config::{DomainChoice, SolveConfig, Variant};
-use crate::linalg::{Domain, Mat, Stabilization};
+use crate::linalg::Domain;
 use crate::metrics::SplitTimer;
 use crate::net::{DelayTracker, LatencyModel, NetTraffic, SimNet};
 use crate::runtime::{make_backend, StabStats};
 use crate::sinkhorn::{CentralizedSolver, State, StopPolicy, StopReason};
 use crate::workload::{Partition, Problem};
 use std::sync::Arc;
-
-/// Per-node result.
-#[derive(Clone, Debug)]
-pub struct NodeStats {
-    pub id: usize,
-    pub role: &'static str,
-    pub timer: SplitTimer,
-    pub iterations: usize,
-    pub stop: StopReason,
-    pub final_err: f64,
-    /// Absorption-hybrid counters of this node's operators (u-op + v-op,
-    /// or the star server's two kernel ops); `None` when the node ran no
-    /// stabilized schedule (linear domain, dense/sparse logsumexp, pure
-    /// element-wise star clients).
-    pub stab: Option<StabStats>,
-    /// Peers this node declared dead under the recovery policy (empty on
-    /// lossless runs and for nodes that saw every peer respond).
-    pub lost_peers: Vec<usize>,
-}
-
-impl NodeStats {
-    pub fn comp_secs(&self) -> f64 {
-        self.timer.comp_secs()
-    }
-
-    pub fn comm_secs(&self) -> f64 {
-        self.timer.comm_secs()
-    }
-
-    pub fn total_secs(&self) -> f64 {
-        self.timer.total_secs()
-    }
-}
-
-/// One point of a traced error curve (Figs 9–12, 19–22).
-#[derive(Clone, Copy, Debug)]
-pub struct TracePoint {
-    pub iter: usize,
-    pub secs: f64,
-    /// Aggregated (sync) or node-0-estimated (async) a-marginal L1 error.
-    pub err: f64,
-}
-
-/// Aggregate run outcome.
-#[derive(Clone, Debug)]
-pub struct FederatedOutcome {
-    pub state: State,
-    pub iterations: usize,
-    pub converged: bool,
-    pub stop: StopReason,
-    pub node_stats: Vec<NodeStats>,
-    /// Staleness samples (async variants only).
-    pub taus: Vec<u64>,
-    pub trace: Vec<TracePoint>,
-    pub secs: f64,
-    /// Absorption-hybrid counters merged across every node that ran the
-    /// stabilized log schedule (`None` when none did).
-    pub stab: Option<StabStats>,
-    /// Per-[`crate::net::TagKind`] wire traffic (bytes priced on the
-    /// encoded frames); default-empty for centralized runs, which have
-    /// no fabric.
-    pub traffic: NetTraffic,
-    /// Whether the run lost a node: a crash injection fired or a peer
-    /// was declared dead. A degraded outcome's `state` is partial —
-    /// dead slices hold their last received value (`exclude`) or their
-    /// abort-time value (`abort`).
-    pub degraded: bool,
-    /// The ids every node agrees are gone (crashed nodes plus the union
-    /// of `NodeStats::lost_peers`), sorted.
-    pub lost_nodes: Vec<usize>,
-}
-
-/// Everything a protocol implementation needs.
-pub struct RunCtx<'a> {
-    pub problem: &'a Problem,
-    pub partition: &'a Partition,
-    pub cfg: &'a SolveConfig,
-    pub policy: StopPolicy,
-    pub traced: bool,
-    /// Resolved numerics domain (cfg.domain is a *choice*; this is the
-    /// per-problem decision every node follows, so the whole run
-    /// exchanges one kind of scaling slice).
-    pub domain: Domain,
-    /// Stabilized log-path tuning every node's operators share: the
-    /// absorption-hybrid schedule keeps GEMV cost on most iterations
-    /// while the wire still carries plain log-scaling slices.
-    pub stab: Stabilization,
-    pub backend: Arc<dyn crate::runtime::ComputeBackend>,
-    pub net: Arc<SimNet>,
-    pub delays: Arc<DelayTracker>,
-}
-
-impl RunCtx<'_> {
-    /// Whether the fleet-synchronized absorption protocol is active for
-    /// this run: the explicit `--fleet-absorb` toggle plus a log-domain
-    /// hybrid schedule to synchronize. (Non-hybrid operators would only
-    /// ever send degraded probes — skip the traffic entirely.)
-    pub fn fleet_on(&self) -> bool {
-        self.stab.fleet_absorb && self.domain == Domain::Log && self.stab.hybrid_enabled()
-    }
-
-    /// Whether the slice-streaming exchange is active
-    /// (`--stream-exchange`): folds peer slices into the pending block
-    /// product as frames land. Disabled under fleet absorption — the
-    /// coordinator's re-absorption command must land *before* the
-    /// product that consumes the exchanged state, which would
-    /// invalidate partials folded against the pre-command kernel.
-    pub fn stream_on(&self) -> bool {
-        self.cfg.stream_exchange && !self.fleet_on()
-    }
-}
-
-/// Per-node return value from protocol implementations.
-pub struct NodeOutcome {
-    pub stats: NodeStats,
-    /// Final consistent slices (u_jj, v_jj) — (m × N) each; `None` for
-    /// pure-relay nodes (the star server).
-    pub slices: Option<(Mat, Mat)>,
-    pub trace: Vec<TracePoint>,
-}
 
 /// Entry point: run `cfg.variant` on `p` and assemble the global state.
 pub fn run_federated(
@@ -233,13 +115,7 @@ pub fn run_federated(
         delays: delays.clone(),
     };
 
-    let outcomes: Vec<NodeOutcome> = match cfg.variant {
-        Variant::SyncA2A => sync_a2a::run(&ctx),
-        Variant::AsyncA2A => async_a2a::run(&ctx),
-        Variant::SyncStar => star::run(&ctx, false),
-        Variant::AsyncStar => star::run(&ctx, true),
-        Variant::Centralized => unreachable!(),
-    };
+    let outcomes: Vec<NodeOutcome> = engine::run_topology(&ctx);
 
     // Assemble the global state from client slices (paper: a consistent
     // broadcast at the end gives every node the full u, v).
@@ -320,62 +196,4 @@ where
     let mut outcomes: Vec<NodeOutcome> = outcomes.into_iter().map(Option::unwrap).collect();
     outcomes.sort_by_key(|o| o.stats.id);
     outcomes
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::config::BackendKind;
-    use crate::workload::ProblemSpec;
-
-    /// Build a minimal [`RunCtx`] over `cfg` and read back the
-    /// exchange-mode precedence flags.
-    fn probe(
-        cfg: &SolveConfig,
-        p: &Problem,
-        partition: &Partition,
-        domain: Domain,
-    ) -> (bool, bool) {
-        let net = Arc::new(SimNet::with_wire(cfg.clients, cfg.net, cfg.seed, cfg.wire));
-        let ctx = RunCtx {
-            problem: p,
-            partition,
-            cfg,
-            policy: StopPolicy::default(),
-            traced: false,
-            domain,
-            stab: cfg.stab,
-            backend: make_backend(BackendKind::Native, "", 1).unwrap(),
-            net,
-            delays: Arc::new(DelayTracker::new()),
-        };
-        (ctx.fleet_on(), ctx.stream_on())
-    }
-
-    #[test]
-    fn fleet_absorb_takes_precedence_over_stream_exchange() {
-        let p = ProblemSpec::new(8).with_eps(0.5).build(9);
-        let mut cfg = SolveConfig {
-            backend: BackendKind::Native,
-            clients: 2,
-            stream_exchange: true,
-            ..Default::default()
-        };
-        cfg.stab.fleet_absorb = true;
-        let partition = Partition::new_in(&p, cfg.clients, Domain::Log);
-        // Both flags set in the log domain: fleet wins, streaming
-        // silently defers (the CLI warns about exactly this).
-        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
-        assert!(fleet && !stream, "fleet must suppress streaming");
-        // Fleet off again: streaming is honored.
-        cfg.stab.fleet_absorb = false;
-        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
-        assert!(!fleet && stream);
-        // Fleet requested but the hybrid disabled (τ = ∞): there is no
-        // absorption schedule to synchronize, so streaming stays on.
-        cfg.stab.fleet_absorb = true;
-        cfg.stab.absorb_threshold = f64::INFINITY;
-        let (fleet, stream) = probe(&cfg, &p, &partition, Domain::Log);
-        assert!(!fleet && stream);
-    }
 }

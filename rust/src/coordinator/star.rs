@@ -23,17 +23,24 @@
 //! privacy layer instruments). Client updates divide in log space and
 //! the convergence errors stay linear-domain L1, so the stopping rule is
 //! identical across domains.
+//!
+//! The generic machinery — strike-bounded receives, the streamed-fold
+//! server product, element-wise client updates — lives in
+//! [`super::engine`]; this module keeps only the four star node loops.
 
-use super::fleet;
-use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
-use crate::linalg::{Domain, Mat};
-use crate::metrics::{Clock, SplitTimer};
-use crate::net::{
-    bcast, bcast_resilient, gather, gather_resilient, Endpoint, NodeLoss, Recovery, TagKind,
+use super::engine::{
+    block_err, chunk_of, count_alive, lost_of, recv_chunk, server_product, write_block,
+    ClientTargets,
 };
-use crate::runtime::{BlockOp, StabStats, Target};
+use super::fleet;
+use super::outcome::{NodeOutcome, NodeStats, TracePoint};
+use super::RunCtx;
+use crate::linalg::Mat;
+use crate::metrics::{Clock, SplitTimer};
+use crate::net::{bcast, bcast_resilient, gather, gather_resilient, NodeLoss, TagKind};
+use crate::runtime::{StabStats, Target};
 use crate::sinkhorn::StopReason;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 /// Coded-stream ids (stable per logical stream — see
 /// [`crate::net::wire`]): client scaling slices up to the server, and
@@ -833,225 +840,4 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         slices: Some((u_jj, v_jj)),
         trace,
     }
-}
-
-// --------------------------------------------------------------------------
-// Helpers
-// --------------------------------------------------------------------------
-
-/// Synchronous server-side product over the gathered client slices.
-/// With the streamed exchange live, each client's slice folds into the
-/// operator's pending product the moment its frame is deliverable
-/// (decode + partial compute hide behind the remaining transfers);
-/// otherwise — streaming off, an operator without the accumulation
-/// hooks, or a hybrid fold that aborted on a drift trip — the fully
-/// assembled state goes through the ordinary barrier `matvec`. Fleet's
-/// local decide/apply always runs on the assembled state before a
-/// barrier product, exactly as in the pre-streaming protocol.
-///
-/// With `rec` set (active fault plan), the gather is strikes-bounded:
-/// clients still pending after the full death budget are struck dead in
-/// `alive`, their rows stay frozen at the last received slice, and the
-/// product falls back to the barrier `matvec` (a partial accumulation
-/// cannot represent the frozen rows). Already-dead clients are never
-/// waited on, so an `exclude` run pays the budget once per loss.
-#[allow(clippy::too_many_arguments)]
-fn server_product(
-    ep: &Endpoint,
-    kind: TagKind,
-    round: u64,
-    op: &mut dyn BlockOp,
-    full: &mut Mat,
-    m: usize,
-    c: usize,
-    stream: bool,
-    fleet: bool,
-    tau: f64,
-    timer: &mut SplitTimer,
-    alive: &mut [bool],
-    rec: Option<&Recovery>,
-) -> Mat {
-    let nh = full.cols();
-    let mut folding = stream && op.supports_streaming() && alive.iter().all(|&a| a);
-    if folding {
-        op.accum_begin();
-    }
-    let mut pending = alive.to_vec();
-    while pending.iter().any(|&p| p) {
-        let msg = match rec {
-            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, round))),
-            Some(rec) => timer.comm(|| {
-                let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
-                (0..rec.strikes.max(1))
-                    .find_map(|_| ep.recv_any_timeout(&pending, kind, round, per_try))
-            }),
-        };
-        let Some(msg) = msg else {
-            // Struck out: everyone still pending is dead. Their rows in
-            // `full` stay frozen; the caller decides abort vs exclude.
-            for (j, p) in pending.iter_mut().enumerate() {
-                if *p {
-                    alive[j] = false;
-                    *p = false;
-                }
-            }
-            folding = false;
-            break;
-        };
-        pending[msg.src] = false;
-        let r0 = msg.src * m;
-        full.as_mut_slice()[r0 * nh..(r0 + m) * nh].copy_from_slice(&msg.payload);
-        if folding {
-            folding = timer.comp(|| op.accum_fold(r0, m, &msg.payload));
-        }
-    }
-    if fleet {
-        timer.comp(|| fleet::local_decide_apply(op, full, tau));
-    }
-    if folding {
-        timer.comp(|| op.accum_matvec().clone())
-    } else {
-        timer.comp(|| op.matvec(full).clone())
-    }
-}
-
-/// Strikes-bounded chunk receive from the star server (the exact path —
-/// chunks are round-tagged). `None` only after the full death budget of
-/// a resilient run; lossless runs block forever, as before.
-fn recv_chunk(
-    ep: &Endpoint,
-    server: usize,
-    round: u64,
-    resilient: bool,
-    rec: &Recovery,
-) -> Option<Vec<f64>> {
-    if !resilient {
-        return Some(ep.recv_blocking(server, TagKind::Ctl, round).payload);
-    }
-    let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
-    (0..rec.strikes.max(1))
-        .find_map(|_| ep.recv_timeout(server, TagKind::Ctl, round, per_try))
-        .map(|msg| msg.payload)
-}
-
-/// Number of live entries in a node mask.
-fn count_alive(alive: &[bool]) -> usize {
-    alive.iter().filter(|&&a| a).count()
-}
-
-/// Ids marked dead in a node mask.
-fn lost_of(alive: &[bool]) -> Vec<usize> {
-    alive
-        .iter()
-        .enumerate()
-        .filter_map(|(j, &a)| (!a).then_some(j))
-        .collect()
-}
-
-/// Per-client marginal targets in the run's numerics domain. Linear
-/// clients divide by the received product chunk; log clients subtract in
-/// log space (`log a`, `log b` precomputed once per run, not per
-/// iteration).
-struct ClientTargets<'a> {
-    a: &'a [f64],
-    b: &'a Mat,
-    log_a: Vec<f64>,
-    /// Row-major m×N, only populated in the log domain.
-    log_b: Vec<f64>,
-    domain: Domain,
-}
-
-impl<'a> ClientTargets<'a> {
-    fn new(shard: &'a crate::workload::ClientShard, domain: Domain) -> Self {
-        let (log_a, log_b) = match domain {
-            Domain::Linear => (Vec::new(), Vec::new()),
-            Domain::Log => (
-                shard.a.iter().map(|&x| x.ln()).collect(),
-                shard.b.as_slice().iter().map(|&x| x.ln()).collect(),
-            ),
-        };
-        Self { a: &shard.a, b: &shard.b, log_a, log_b, domain }
-    }
-
-    /// `u ← α a⊘q + (1−α) u` — division is a log-subtraction in the log
-    /// domain (`a` broadcasts across histograms).
-    fn damped_u_update(&self, u_jj: &mut Mat, q: &[f64], alpha: f64) {
-        let (m, nh) = (u_jj.rows(), u_jj.cols());
-        let beta = 1.0 - alpha;
-        match self.domain {
-            Domain::Linear => {
-                for i in 0..m {
-                    for h in 0..nh {
-                        let qv = q[i * nh + h];
-                        u_jj[(i, h)] = alpha * (self.a[i] / qv) + beta * u_jj[(i, h)];
-                    }
-                }
-            }
-            Domain::Log => {
-                for i in 0..m {
-                    for h in 0..nh {
-                        let qv = q[i * nh + h];
-                        u_jj[(i, h)] = alpha * (self.log_a[i] - qv) + beta * u_jj[(i, h)];
-                    }
-                }
-            }
-        }
-    }
-
-    /// `v ← α b⊘r + (1−α) v` (per-histogram target).
-    fn damped_v_update(&self, v_jj: &mut Mat, r: &[f64], alpha: f64) {
-        let (m, nh) = (v_jj.rows(), v_jj.cols());
-        let beta = 1.0 - alpha;
-        match self.domain {
-            Domain::Linear => {
-                for i in 0..m {
-                    for h in 0..nh {
-                        let rv = r[i * nh + h];
-                        v_jj[(i, h)] = alpha * (self.b[(i, h)] / rv) + beta * v_jj[(i, h)];
-                    }
-                }
-            }
-            Domain::Log => {
-                for i in 0..m {
-                    for h in 0..nh {
-                        let rv = r[i * nh + h];
-                        v_jj[(i, h)] =
-                            alpha * (self.log_b[i * nh + h] - rv) + beta * v_jj[(i, h)];
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Block a-marginal error `max_h Σ_i |u∘q − a|` from a flat q chunk —
-/// always reported in the linear domain (log states exponentiate
-/// `log u + q`, the log of the marginal entry).
-fn block_err(u_jj: &Mat, q: &[f64], a: &[f64], m: usize, nh: usize, domain: Domain) -> f64 {
-    let mut best: f64 = 0.0;
-    for h in 0..nh {
-        let mut e = 0.0;
-        for i in 0..m {
-            let entry = match domain {
-                Domain::Linear => u_jj[(i, h)] * q[i * nh + h],
-                Domain::Log => (u_jj[(i, h)] + q[i * nh + h]).exp(),
-            };
-            e += (entry - a[i]).abs();
-        }
-        best = best.max(e);
-    }
-    best
-}
-
-/// Client `j`'s rows of a full n×N matrix, flattened.
-fn chunk_of(full: &Mat, j: usize, m: usize) -> &[f64] {
-    let nh = full.cols();
-    &full.as_slice()[j * m * nh..(j + 1) * m * nh]
-}
-
-/// Write client `j`'s m×N flat block into the full state.
-fn write_block(full: &mut Mat, block: &[f64], j: usize, m: usize) {
-    let nh = full.cols();
-    debug_assert_eq!(block.len(), m * nh);
-    full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(block);
 }

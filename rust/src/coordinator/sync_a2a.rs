@@ -10,617 +10,18 @@
 //! sequence, so the convergence check (an AllGather of per-block error
 //! contributions) is an exact global marginal error and every node stops
 //! at the same iteration.
+//!
+//! The entire client loop lives in [`engine::lockstep_client`]; this
+//! protocol is the engine's [`engine::AllGatherPlan`] — the flat
+//! AllGather (streamed-fold, resilient, or exact lossless barrier) as
+//! the per-half-iteration exchange.
 
-use super::fleet;
-use super::runner::{NodeOutcome, NodeStats, RunCtx, TracePoint};
-use crate::linalg::Mat;
-use crate::metrics::{Clock, SplitTimer};
-use crate::net::{
-    allgather, allgather_coded, allgather_resilient, bcast_coded, bcast_resilient, gather_coded,
-    gather_resilient, Endpoint, NodeLoss, Recovery, TagKind,
-};
-use crate::runtime::{BlockOp, StabStats, Target};
-use crate::sinkhorn::StopReason;
-use std::time::Duration;
-
-/// Coded-stream ids: each logical stream carries the same quantity
-/// round after round, so the wire codec's delta/error-feedback state
-/// stays coherent (see [`crate::net::wire`]).
-const STREAM_U: u64 = 0;
-const STREAM_V: u64 = 1;
-/// Fleet probe/command stream pairs, one per phase (the v-ops'
-/// reference lives in u-space and vice versa — their probes are
-/// different quantities and must not share a delta stream).
-const STREAM_GREF_V_OPS: u64 = 2;
-const STREAM_GREF_U_OPS: u64 = 4;
+use super::engine;
+use super::outcome::NodeOutcome;
+use super::RunCtx;
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
-    super::runner::spawn_nodes(ctx.cfg.clients, |id| client(ctx, id))
-}
-
-fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
-    let shard = &ctx.partition.shards[id];
-    let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
-    let w = ctx.cfg.local_iters.max(1);
-    let alpha = ctx.cfg.alpha;
-    let ep = ctx.net.endpoint(id);
-    let clock = Clock::new();
-    let mut timer = SplitTimer::new();
-
-    // Block operators: the client's two kernel blocks stay resident in
-    // the backend (device memory for XLA) for the whole run. In the log
-    // domain the blocks hold `log K` and the op iterates log-scalings —
-    // the AllGathered slices below are then exactly the communicated
-    // log-scalings the paper's privacy layer measures. The stabilized
-    // dispatch may run them on the absorption-hybrid / truncated-sparse
-    // schedule; the exchanged slices are identical either way.
-    let one = ctx.domain.one();
-    let mut u_op = ctx
-        .backend
-        .block_op_in_stabilized(
-            ctx.domain,
-            &shard.k_row,
-            Target::Vec(&shard.a),
-            Mat::full(m, nh, one),
-            &ctx.stab,
-        )
-        .expect("u-op");
-    let mut v_op = ctx
-        .backend
-        .block_op_in_stabilized(
-            ctx.domain,
-            &shard.k_col_t,
-            Target::Mat(&shard.b),
-            Mat::full(m, nh, one),
-            &ctx.stab,
-        )
-        .expect("v-op");
-
-    // Full scaling state, refreshed by AllGathers.
-    let mut u_full = Mat::full(n, nh, one);
-    let mut v_full = Mat::full(n, nh, one);
-
-    // Fleet-synchronized absorption (`--fleet-absorb`, log-domain hybrid
-    // runs): rank 0 merges slice probes and broadcasts one reference
-    // dual per product space, so every node re-absorbs in lock-step.
-    let fleet = ctx.fleet_on();
-    let tau = ctx.stab.absorb_threshold;
-    // Slice-streaming exchange (`--stream-exchange`): peer slices are
-    // folded into the consuming operator's pending product as their
-    // frames become deliverable, hiding decode + partial compute behind
-    // the transfers still in flight. The U exchange feeds the v-op in
-    // the same iteration; the V exchange feeds the u-op's *next*
-    // update, across the loop boundary (nothing touches `v_full`
-    // between the exchange and that update).
-    let stream = ctx.stream_on();
-    let mut v_accum_live = false;
-    let mut u_accum_live = false;
-
-    // Fault-plan resilience: only an *active* plan arms the recovery
-    // timeouts — lossless runs keep the unbounded blocking paths
-    // byte-for-byte. Under loss the reliable ARQ still delivers every
-    // frame, so a strikeout can only mean the sender crashed.
-    let resilient = ctx.cfg.faults.is_active();
-    let recovery = ctx.cfg.recovery;
-    let crash_at = ctx.cfg.faults.crash_at(id);
-    let mut alive = vec![true; ctx.cfg.clients];
-
-    let mut trace = Vec::new();
-    let mut stop = StopReason::MaxIters;
-    let mut final_err = f64::INFINITY;
-    let mut iterations = 0;
-    let mut round: u64 = 0;
-
-    'outer: for k in 1..=ctx.policy.max_iters {
-        // Crash injection: exit cleanly at the iteration boundary —
-        // peers see the silence and strike this node dead.
-        if crash_at.is_some_and(|ci| k as u64 >= ci) {
-            stop = StopReason::Dead;
-            break 'outer;
-        }
-        iterations = k;
-        // Paper Alg. 1: communicate on iterations with mod(k, w) = 0;
-        // in between, clients iterate on locally-refreshed state.
-        let communicate = k % w == 0;
-
-        let u_jj = timer.comp(|| {
-            if u_accum_live {
-                u_op.accum_update(alpha).clone()
-            } else {
-                u_op.update(&v_full, alpha).clone()
-            }
-        });
-        u_accum_live = false;
-        copy_slice(&mut u_full, &u_jj, shard.r0);
-        if communicate {
-            round += 1;
-            let was_alive = count_alive(&alive);
-            v_accum_live = exchange(
-                &ep,
-                TagKind::U,
-                round,
-                STREAM_U,
-                &mut u_full,
-                shard.r0,
-                m,
-                k as u64,
-                &mut *v_op,
-                &mut timer,
-                stream,
-                &mut alive,
-                resilient.then_some(&recovery),
-            );
-            if resilient
-                && count_alive(&alive) < was_alive
-                && recovery.on_node_loss == NodeLoss::Abort
-            {
-                stop = StopReason::PeerLoss;
-                break 'outer;
-            }
-            if fleet {
-                // Fleet-synchronized absorption for the v-operators
-                // (their reference lives in u-space): probes ride the
-                // freshly assembled u state.
-                round += 2;
-                fleet_sync(
-                    &ep,
-                    round,
-                    STREAM_GREF_V_OPS,
-                    &mut *v_op,
-                    &u_full,
-                    shard.r0,
-                    m,
-                    nh,
-                    tau,
-                    k as u64,
-                    &mut timer,
-                    &mut alive,
-                    resilient.then_some(&recovery),
-                );
-            }
-        }
-
-        let v_jj = timer.comp(|| {
-            if v_accum_live {
-                v_op.accum_update(alpha).clone()
-            } else {
-                v_op.update(&u_full, alpha).clone()
-            }
-        });
-        v_accum_live = false;
-        copy_slice(&mut v_full, &v_jj, shard.r0);
-        if communicate {
-            round += 1;
-            let was_alive = count_alive(&alive);
-            u_accum_live = exchange(
-                &ep,
-                TagKind::V,
-                round,
-                STREAM_V,
-                &mut v_full,
-                shard.r0,
-                m,
-                k as u64,
-                &mut *u_op,
-                &mut timer,
-                stream,
-                &mut alive,
-                resilient.then_some(&recovery),
-            );
-            if resilient
-                && count_alive(&alive) < was_alive
-                && recovery.on_node_loss == NodeLoss::Abort
-            {
-                stop = StopReason::PeerLoss;
-                break 'outer;
-            }
-            if fleet {
-                // … and for the u-operators (v-space reference).
-                round += 2;
-                fleet_sync(
-                    &ep,
-                    round,
-                    STREAM_GREF_U_OPS,
-                    &mut *u_op,
-                    &v_full,
-                    shard.r0,
-                    m,
-                    nh,
-                    tau,
-                    k as u64,
-                    &mut timer,
-                    &mut alive,
-                    resilient.then_some(&recovery),
-                );
-            }
-        }
-
-        // Convergence: exact global error via an error AllGather (only
-        // on communication rounds — nodes must check in lock-step).
-        // Timeout is part of the same exchange: a unilateral break would
-        // deadlock the peers inside their blocking collectives, so each
-        // node contributes a timed-out flag and everyone honors the OR.
-        if communicate && ctx.policy.check_at(k) {
-            let u_now = u_op.state().clone();
-            let local: f64 = timer
-                .comp(|| u_op.marginal(&v_full, &u_now))
-                .iter()
-                .cloned()
-                .fold(0.0, f64::max);
-            let timed_out = ctx.policy.timeout_secs > 0.0
-                && clock.now() > ctx.policy.timeout_secs;
-            round += 1;
-            // Under `exclude`, dead blocks are frozen and drop out of
-            // the vote — the error is over the surviving slice.
-            let (err, any_timeout) = if resilient {
-                let was_alive = count_alive(&alive);
-                let parts = timer.comm(|| {
-                    allgather_resilient(
-                        &ep,
-                        TagKind::Ctl,
-                        round,
-                        None,
-                        &[local, timed_out as u8 as f64],
-                        k as u64,
-                        &mut alive,
-                        &recovery,
-                    )
-                });
-                if count_alive(&alive) < was_alive
-                    && recovery.on_node_loss == NodeLoss::Abort
-                {
-                    stop = StopReason::PeerLoss;
-                    break 'outer;
-                }
-                (
-                    parts.iter().flatten().map(|p| p[0]).sum(),
-                    parts.iter().flatten().any(|p| p[1] > 0.0),
-                )
-            } else {
-                let parts = timer.comm(|| {
-                    allgather(
-                        &ep,
-                        TagKind::Ctl,
-                        round,
-                        &[local, timed_out as u8 as f64],
-                        k as u64,
-                    )
-                });
-                (
-                    parts.iter().map(|p| p[0]).sum(),
-                    parts.iter().any(|p| p[1] > 0.0),
-                )
-            };
-            final_err = err;
-            if ctx.traced {
-                trace.push(TracePoint { iter: k, secs: clock.now(), err });
-            }
-            if err < ctx.policy.threshold {
-                stop = StopReason::Converged;
-                break 'outer;
-            }
-            if any_timeout {
-                stop = StopReason::Timeout;
-                break 'outer;
-            }
-        }
-        // Dequantizing this round's received frames is receiver CPU work.
-        timer.add_comp(ep.take_decode_secs());
-    }
-    timer.add_comp(ep.take_decode_secs());
-
-    NodeOutcome {
-        stats: NodeStats {
-            id,
-            role: "client",
-            timer,
-            iterations,
-            stop,
-            final_err, // the AllGathered global error — identical on all nodes
-            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
-            lost_peers: lost_of(&alive),
-        },
-        slices: Some((u_op.state().clone(), v_op.state().clone())),
-        trace,
-    }
-}
-
-/// Survivor count of a live mask.
-fn count_alive(alive: &[bool]) -> usize {
-    alive.iter().filter(|&&l| l).count()
-}
-
-/// The dead peer ids a live mask records.
-fn lost_of(alive: &[bool]) -> Vec<usize> {
-    alive
-        .iter()
-        .enumerate()
-        .filter(|(_, &l)| !l)
-        .map(|(j, _)| j)
-        .collect()
-}
-
-/// One slice exchange: streamed fold, resilient barrier, or the exact
-/// lossless barrier, depending on the run's flags. Returns whether a
-/// streamed fold chain survived (caller finishes with `accum_update`);
-/// barrier paths always return `false`. Under a recovery policy
-/// (`rec = Some`), silent peers are struck dead in `alive` and their
-/// rows of `full` stay frozen at the last received value.
-#[allow(clippy::too_many_arguments)]
-fn exchange(
-    ep: &Endpoint,
-    kind: TagKind,
-    round: u64,
-    stream_id: u64,
-    full: &mut Mat,
-    r0: usize,
-    m: usize,
-    iter: u64,
-    op: &mut dyn BlockOp,
-    timer: &mut SplitTimer,
-    stream: bool,
-    alive: &mut [bool],
-    rec: Option<&Recovery>,
-) -> bool {
-    if stream {
-        stream_exchange(ep, kind, round, stream_id, full, r0, m, iter, op, timer, alive, rec)
-    } else if let Some(rec) = rec {
-        let parts = timer.comm(|| {
-            allgather_resilient(
-                ep,
-                kind,
-                round,
-                Some(stream_id),
-                slice_of(full, r0, m),
-                iter,
-                alive,
-                rec,
-            )
-        });
-        assemble_opt(full, &parts, m);
-        false
-    } else {
-        let parts = timer.comm(|| {
-            allgather_coded(ep, kind, round, stream_id, slice_of(full, r0, m), iter)
-        });
-        assemble(full, &parts, m);
-        false
-    }
-}
-
-/// Streamed slice exchange (`--stream-exchange`): send this node's
-/// slice of `full` (rows `[r0, r0+m)`) to every peer on the coded
-/// stream, then consume peer slices *in delivery order* — each is
-/// written into `full` and folded into `op`'s pending product while the
-/// remaining transfers are still in flight. Returns whether the fold
-/// chain survived (the caller then finishes with `accum_update`); a
-/// `false` means the fully assembled `full` must go through the
-/// ordinary barrier `update` instead — `full` is always completely
-/// assembled on return either way (dead peers' rows frozen). With
-/// `rec = Some`, the delivery-order receive is bounded: after `strikes`
-/// consecutive empty windows every still-missing peer is declared dead
-/// and the fold chain is abandoned (its slices never arrived).
-#[allow(clippy::too_many_arguments)]
-fn stream_exchange(
-    ep: &Endpoint,
-    kind: TagKind,
-    round: u64,
-    stream: u64,
-    full: &mut Mat,
-    r0: usize,
-    m: usize,
-    iter: u64,
-    op: &mut dyn BlockOp,
-    timer: &mut SplitTimer,
-    alive: &mut [bool],
-    rec: Option<&Recovery>,
-) -> bool {
-    let me = ep.id();
-    let c = ep.nodes();
-    let nh = full.cols();
-    let mine: Vec<f64> = slice_of(full, r0, m).to_vec();
-    timer.comm(|| {
-        for dst in 0..c {
-            if dst != me && alive[dst] {
-                ep.send_coded(dst, kind, round, stream, mine.clone(), iter);
-            }
-        }
-    });
-    let mut live = op.supports_streaming();
-    if live {
-        op.accum_begin();
-        // Own slice folds immediately — free overlap while peers' frames
-        // are still in flight.
-        live = timer.comp(|| op.accum_fold(r0, m, &mine));
-    }
-    let mut pending = alive.to_vec();
-    pending[me] = false;
-    while pending.iter().any(|&p| p) {
-        let msg = match rec {
-            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, round))),
-            Some(rec) => {
-                let per_try = Duration::from_secs_f64(rec.recv_timeout_secs.max(1e-3));
-                let mut got = None;
-                for _ in 0..rec.strikes.max(1) {
-                    if let Some(msg) =
-                        timer.comm(|| ep.recv_any_timeout(&pending, kind, round, per_try))
-                    {
-                        got = Some(msg);
-                        break;
-                    }
-                }
-                got
-            }
-        };
-        let Some(msg) = msg else {
-            // Strikeout: every still-missing peer is dead. Their rows of
-            // `full` stay frozen; the incomplete fold chain is abandoned
-            // so the caller re-runs the product on the assembled state.
-            for (j, p) in pending.iter_mut().enumerate() {
-                if *p {
-                    alive[j] = false;
-                    *p = false;
-                }
-            }
-            live = false;
-            break;
-        };
-        pending[msg.src] = false;
-        let peer_r0 = msg.src * m;
-        full.as_mut_slice()[peer_r0 * nh..(peer_r0 + m) * nh].copy_from_slice(&msg.payload);
-        if live {
-            live = timer.comp(|| op.accum_fold(peer_r0, m, &msg.payload));
-        }
-    }
-    live
-}
-
-/// One lock-step fleet-absorption round for `op` against the freshly
-/// assembled full state `x_full`: every node probes the `m` rows it
-/// owns (`O(m·N)`, no redundant full scans), rank 0 gathers the probes,
-/// merges + decides, and broadcasts either the reference-dual command
-/// or a hold; every node applies the command to its own block operator.
-/// Uses protocol rounds `base − 1` (gather) and `base` (broadcast) on
-/// [`TagKind::Gref`] — both messages priced by the α–β latency model on
-/// their *encoded* frames (probes ride coded stream `stream`, commands
-/// `stream + 1`, closing the ROADMAP "Gref traffic compression" item;
-/// absorption is exact for any reference, so a quantized `ḡ` only
-/// perturbs *when* rebuilds trigger, never the iterates).
-#[allow(clippy::too_many_arguments)]
-fn fleet_sync(
-    ep: &Endpoint,
-    base_round: u64,
-    stream: u64,
-    op: &mut dyn BlockOp,
-    x_full: &Mat,
-    r0: usize,
-    m: usize,
-    nh: usize,
-    tau: f64,
-    iter: u64,
-    timer: &mut SplitTimer,
-    alive: &mut [bool],
-    rec: Option<&Recovery>,
-) {
-    let payload = timer.comp(|| match op.fleet_probe(x_full, r0, m) {
-        Some(p) => fleet::probe_payload(0, &p),
-        None => fleet::degraded_payload(0),
-    });
-    // A dead peer's missing probe is substituted with the degraded
-    // payload, which makes `decide` hold — fleet absorption freezes
-    // while the fleet is degraded rather than re-absorbing against a
-    // partial view (the fleet.rs hold state, reachable from real
-    // faults). A dead rank 0 means no commands ever again: survivors
-    // keep their current references (absorption stays exact for any
-    // reference — only rebuild cadence degrades).
-    let parts: Option<Vec<Vec<f64>>> = match rec {
-        None => timer
-            .comm(|| gather_coded(ep, 0, TagKind::Gref, base_round - 1, stream, &payload, iter)),
-        Some(rec) => timer
-            .comm(|| {
-                gather_resilient(
-                    ep,
-                    0,
-                    TagKind::Gref,
-                    base_round - 1,
-                    Some(stream),
-                    &payload,
-                    iter,
-                    alive,
-                    rec,
-                )
-            })
-            .map(|parts| {
-                parts
-                    .into_iter()
-                    .map(|p| p.unwrap_or_else(|| fleet::degraded_payload(0)))
-                    .collect()
-            }),
-    };
-    let reply = if let Some(parts) = parts {
-        // Rank 0: merge + decide, then broadcast the verdict.
-        let refs: Vec<&[f64]> = parts.iter().map(|p| p.as_slice()).collect();
-        let decision = timer.comp(|| fleet::decide(&refs, nh, m, tau));
-        let payload = match &decision {
-            Some(cmd) => fleet::command_payload(0, cmd),
-            None => fleet::hold_payload(0),
-        };
-        match rec {
-            None => Some(timer.comm(|| {
-                bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, Some(&payload), iter)
-            })),
-            Some(rec) => timer.comm(|| {
-                bcast_resilient(
-                    ep,
-                    0,
-                    TagKind::Gref,
-                    base_round,
-                    Some(stream + 1),
-                    Some(&payload),
-                    iter,
-                    alive,
-                    rec,
-                )
-            }),
-        }
-    } else {
-        match rec {
-            None => Some(
-                timer
-                    .comm(|| bcast_coded(ep, 0, TagKind::Gref, base_round, stream + 1, None, iter)),
-            ),
-            Some(rec) => timer.comm(|| {
-                bcast_resilient(
-                    ep,
-                    0,
-                    TagKind::Gref,
-                    base_round,
-                    Some(stream + 1),
-                    None,
-                    iter,
-                    alive,
-                    rec,
-                )
-            }),
-        }
-    };
-    if let Some(reply) = reply {
-        if let (_, Some((needed, gref))) = fleet::parse_command(&reply) {
-            timer.comp(|| op.fleet_absorb(gref, needed));
-        }
-    }
-}
-
-/// Rows `[r0, r0+m)` of `full` as a flat slice (row-major m×N block).
-fn slice_of(full: &Mat, r0: usize, m: usize) -> &[f64] {
-    let nh = full.cols();
-    &full.as_slice()[r0 * nh..(r0 + m) * nh]
-}
-
-/// Write a client's block into the full state at row `r0`.
-fn copy_slice(full: &mut Mat, block: &Mat, r0: usize) {
-    let nh = full.cols();
-    let m = block.rows();
-    full.as_mut_slice()[r0 * nh..(r0 + m) * nh].copy_from_slice(block.as_slice());
-}
-
-/// Assemble AllGather parts (node-indexed, each m×N flat) into `full`.
-fn assemble(full: &mut Mat, parts: &[Vec<f64>], m: usize) {
-    let nh = full.cols();
-    for (j, part) in parts.iter().enumerate() {
-        debug_assert_eq!(part.len(), m * nh);
-        full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(part);
-    }
-}
-
-/// [`assemble`] over resilient parts: a dead peer's `None` slot leaves
-/// its rows of `full` frozen at the last received value.
-fn assemble_opt(full: &mut Mat, parts: &[Option<Vec<f64>>], m: usize) {
-    let nh = full.cols();
-    for (j, part) in parts.iter().enumerate() {
-        if let Some(part) = part {
-            debug_assert_eq!(part.len(), m * nh);
-            full.as_mut_slice()[j * m * nh..(j + 1) * m * nh].copy_from_slice(part);
-        }
-    }
+    super::runner::spawn_nodes(ctx.cfg.clients, |id| {
+        engine::lockstep_client(ctx, id, &engine::AllGatherPlan)
+    })
 }

@@ -121,6 +121,7 @@ pub fn run_case_cfg(
     }
     let rec = RunRecord {
         variant: cfg.variant.name().to_string(),
+        topology: cfg.variant.topology_name().to_string(),
         n: p.n,
         clients: cfg.clients,
         hists: p.hists(),
@@ -196,6 +197,7 @@ mod tests {
         );
         assert!(rec.converged && out.converged);
         assert_eq!(rec.variant, "sync-a2a");
+        assert_eq!(rec.topology, "a2a");
         assert!(rec.total_secs >= rec.comm_secs);
         // The wire counters ride along: a federated run moves U, V and
         // Ctl bytes, and the per-kind split sums to the total.

@@ -2,10 +2,13 @@
 //! Table VI.
 //!
 //! Grid: n × sparsity s × N histograms × condition class, for each
-//! variant (centralized / sync-a2a / sync-star / async-a2a) × node
-//! count. Each row reports comp/comm/total seconds of the slowest node,
-//! iterations to convergence, and (async) whether it converged — the
-//! exact columns of the paper's appendix tables.
+//! variant (centralized / sync-a2a / sync-star / async-a2a, plus the
+//! decentralized ring and gossip topologies) × node count. Each row
+//! reports comp/comm/total seconds of the slowest node, iterations to
+//! convergence, and (async) whether it converged — the exact columns of
+//! the paper's appendix tables, plus a `topology` column grouping the
+//! per-topology comm terms (a2a / star / ring / gossip pay different
+//! α–β mixes for the same solve).
 
 use super::{build_problem, dump_json, run_case_cfg, Scale};
 use crate::config::{BackendKind, DomainChoice, SolveConfig, Variant};
@@ -60,6 +63,8 @@ impl PerfGridArgs {
                 Variant::SyncA2A,
                 Variant::SyncStar,
                 Variant::AsyncA2A,
+                Variant::Ring,
+                Variant::Gossip,
             ],
             sizes,
             sparsities: vec![0.0, 0.5, 0.9, 1.0],
@@ -103,9 +108,10 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
             if variant == Variant::Centralized { vec![1] } else { args.nodes.clone() };
         for &c in &node_grid {
             println!(
-                "\n## Perf grid: {} {}(backend={}, wire={}{})",
+                "\n## Perf grid: {} {}(topology={}, backend={}, wire={}{})",
                 variant.name(),
                 if c > 1 { format!("{c}-node ") } else { String::new() },
+                variant.topology_name(),
                 args.backend.name(),
                 args.wire.name(),
                 if args.stream_exchange { ", streamed" } else { "" }
@@ -137,10 +143,14 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
                     for &nh in &args.hists {
                         for &cond in &args.conds {
                             let p = build_problem(n, nh, 0.05, s, 4, cond, 17 + n as u64);
-                            let alpha = if variant == Variant::AsyncA2A {
-                                args.alpha_async
-                            } else {
-                                1.0
+                            // Damped step for the asynchronous exchange
+                            // graphs (gossip's stale views need the same
+                            // contraction margin as the async duals).
+                            let alpha = match variant {
+                                Variant::AsyncA2A | Variant::AsyncStar | Variant::Gossip => {
+                                    args.alpha_async
+                                }
+                                _ => 1.0,
                             };
                             let cfg = SolveConfig {
                                 variant,

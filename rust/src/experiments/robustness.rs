@@ -83,6 +83,10 @@ pub fn run(args: &RobustnessArgs) -> anyhow::Result<Json> {
         ("Synchronous All-To-All", Variant::SyncA2A, 1.0),
         ("Synchronous Star-Network", Variant::SyncStar, 1.0),
         ("Asynchronous", Variant::AsyncA2A, args.alpha_async),
+        // The decentralized topologies on the same grid: the ring is
+        // lock-step (α = 1), gossip needs the async damping margin.
+        ("Synchronous Ring", Variant::Ring, 1.0),
+        ("Gossip", Variant::Gossip, args.alpha_async),
     ];
 
     let mut tables = Vec::new();
@@ -93,11 +97,11 @@ pub fn run(args: &RobustnessArgs) -> anyhow::Result<Json> {
         println!("\n## Tables II-IV: robustness grid, {c} nodes (n={}, {} runs/cell)", args.n, args.runs);
         let mut setting_rows = Vec::new();
         for (label, variant, alpha) in &settings {
-            println!("### {label}{}", if *variant == Variant::AsyncA2A {
-                format!(" (α={alpha})")
-            } else {
-                String::new()
-            });
+            println!(
+                "### {label} [topology={}]{}",
+                variant.topology_name(),
+                if *alpha != 1.0 { format!(" (α={alpha})") } else { String::new() }
+            );
             println!(
                 "{:>8} {:>8} {:>12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}",
                 "limit", "thresh", "avg time(s)", "% conv", "% t/out", "% div", "% lost",
@@ -128,6 +132,8 @@ pub fn run(args: &RobustnessArgs) -> anyhow::Result<Json> {
             }
             setting_rows.push(Json::obj(vec![
                 ("setting", (*label).into()),
+                ("variant", variant.name().into()),
+                ("topology", variant.topology_name().into()),
                 ("alpha", (*alpha).into()),
                 ("cells", Json::Arr(cells)),
             ]));

@@ -339,7 +339,19 @@ fn out_of(p: &Parsed) -> Option<String> {
 fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     let spec = common_spec(
         ArgSpec::new()
-            .opt("variant", "V", "sync-a2a", "centralized|sync-a2a|async-a2a|sync-star|async-star")
+            .opt(
+                "variant",
+                "V",
+                "sync-a2a",
+                "centralized|sync-a2a|async-a2a|sync-star|async-star|ring|gossip",
+            )
+            .opt(
+                "coordinator",
+                "TOPO",
+                "",
+                "alias for --variant by topology name (e.g. --coordinator ring|gossip); \
+                 overrides --variant when set",
+            )
             .opt("n", "SIZE", "256", "problem size")
             .opt("clients", "C", "4", "number of clients")
             .opt("hists", "N", "1", "target histograms")
@@ -378,8 +390,11 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     let spec = fault_spec(wire_spec(spec));
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
     let threads = threads_of(&p)?;
-    let variant = Variant::parse(p.get("variant").unwrap())
-        .ok_or_else(|| anyhow::anyhow!("bad --variant"))?;
+    let variant = match p.get("coordinator").filter(|s| !s.is_empty()) {
+        Some(s) => Variant::parse(s).ok_or_else(|| anyhow::anyhow!("bad --coordinator"))?,
+        None => Variant::parse(p.get("variant").unwrap())
+            .ok_or_else(|| anyhow::anyhow!("bad --variant"))?,
+    };
     let domain = domain_of(&p)?;
     let backend = backend_of(&p)?;
     check_domain_backend(domain, backend)?;
@@ -715,7 +730,7 @@ fn cmd_coherence(args: &[String]) -> anyhow::Result<()> {
 fn cmd_timing(args: &[String]) -> anyhow::Result<()> {
     let spec = common_spec(wire_spec(
         ArgSpec::new()
-            .opt("variant", "V", "sync-a2a", "federated variant for c > 1")
+            .opt("variant", "V", "sync-a2a", "federated variant/topology for c > 1 (incl. ring|gossip)")
             .opt("n", "SIZE", "0", "problem size (0 = scale default)")
             .opt("iters", "K", "0", "fixed iteration budget (0 = scale default)")
             .opt("nodes", "LIST", "", "node counts (empty = scale default)"),
@@ -843,7 +858,7 @@ fn cmd_delays(args: &[String]) -> anyhow::Result<()> {
 fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
     let spec = common_spec(wire_spec(
         ArgSpec::new()
-            .opt("variant", "V", "all", "all or one of the solver variants")
+            .opt("variant", "V", "all", "all or one of the solver variants (incl. ring|gossip)")
             .opt("sizes", "LIST", "", "problem sizes (empty = scale default)")
             .opt("hists", "LIST", "", "histogram counts (empty = scale default)")
             .opt("nodes", "LIST", "", "node counts (empty = scale default)")

@@ -19,6 +19,10 @@ use crate::jsonio::Json;
 #[derive(Clone, Debug)]
 pub struct RunRecord {
     pub variant: String,
+    /// Exchange-graph family of the variant (`none`, `a2a`, `star`,
+    /// `ring`, `gossip`) — the column the perf/robustness grids group
+    /// per-topology comm terms by.
+    pub topology: String,
     pub n: usize,
     pub clients: usize,
     pub hists: usize,
@@ -42,6 +46,7 @@ impl RunRecord {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("variant", self.variant.as_str().into()),
+            ("topology", self.topology.as_str().into()),
             ("n", self.n.into()),
             ("clients", self.clients.into()),
             ("nhist", self.hists.into()),

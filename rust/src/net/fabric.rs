@@ -1,6 +1,6 @@
 //! Mailbox fabric: per-node inboxes with delivery deadlines.
 
-use super::faults::{self, FaultPlan, FrameFaults};
+use super::faults::{self, FaultPlan, FrameFaults, LinkRtt};
 use super::wire::{self, StreamCodec, WireFormat};
 use super::LatencyModel;
 use crate::rng::{child_seed, Rng};
@@ -171,6 +171,13 @@ pub struct SimNet {
     /// the sequence a frame draws its fault roll from is program order
     /// on one thread — deterministic at any thread interleaving.
     link_seq: Vec<AtomicU64>,
+    /// Per-link adaptive retransmit-timer state, indexed
+    /// `src · nodes + dst` like `link_seq`. Only the sender of a link
+    /// ever touches its entry (samples are folded at enqueue, on the
+    /// sending thread), so the lock is uncontended and — like the fault
+    /// rolls — the estimator's trajectory is pure program order on one
+    /// thread, deterministic at any thread count.
+    link_rtt: Vec<Mutex<LinkRtt>>,
     /// Fault counters: drops, dups, reorders, retransmits, spikes.
     n_drops: AtomicU64,
     n_dups: AtomicU64,
@@ -197,6 +204,7 @@ impl SimNet {
             kind_msgs: Default::default(),
             faults: FaultPlan::none(),
             link_seq: (0..nodes * nodes).map(|_| AtomicU64::new(0)).collect(),
+            link_rtt: (0..nodes * nodes).map(|_| Mutex::new(LinkRtt::new())).collect(),
             n_drops: AtomicU64::new(0),
             n_dups: AtomicU64::new(0),
             n_reorders: AtomicU64::new(0),
@@ -284,6 +292,25 @@ impl SimNet {
     /// Reserve the next send sequence number of link `(src, dst)`.
     fn next_link_seq(&self, src: usize, dst: usize) -> u64 {
         self.link_seq[src * self.nodes() + dst].fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Adaptive retransmit timeout of link `(src, dst)`: the EWMA
+    /// estimate once the link is primed, else `prior` (the
+    /// deterministic [`faults::rto_secs`] transfer estimate).
+    fn link_rto(&self, src: usize, dst: usize, prior: f64) -> f64 {
+        self.link_rtt[src * self.nodes() + dst].lock().unwrap().rto_secs(prior)
+    }
+
+    /// Fold one clean delivery-delay sample into link `(src, dst)`'s
+    /// retransmit-timer state.
+    fn observe_link_delay(&self, src: usize, dst: usize, sample: f64) {
+        self.link_rtt[src * self.nodes() + dst].lock().unwrap().observe(sample);
+    }
+
+    /// Snapshot of link `(src, dst)`'s adaptive retransmit-timer state
+    /// — tests and diagnostics.
+    pub fn link_rtt(&self, src: usize, dst: usize) -> LinkRtt {
+        *self.link_rtt[src * self.nodes() + dst].lock().unwrap()
     }
 }
 
@@ -435,8 +462,17 @@ impl Endpoint {
         self.net.kind_bytes[kind.index()].fetch_add(bytes as u64, Ordering::Relaxed);
         self.net.kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
         let mut lost = false;
+        // Link-quality-adaptive retransmit timer: read the estimate
+        // *before* this frame's own delay is observed, like a real ARQ
+        // sender whose timer is armed from past traffic only. The
+        // deterministic transfer estimate is the cold-start prior.
+        let rto = if faulty {
+            self.net
+                .link_rto(self.id, dst, faults::rto_secs(&self.net.latency, bytes))
+        } else {
+            0.0
+        };
         if faulty {
-            let rto = faults::rto_secs(&self.net.latency, bytes);
             if faults.spike_mult > 1.0 {
                 self.net.n_spikes.fetch_add(1, Ordering::Relaxed);
                 delay *= faults.spike_mult;
@@ -473,6 +509,16 @@ impl Endpoint {
             if straggler > 1.0 {
                 delay *= straggler;
             }
+            // Karn's rule: only clean first-transmission deliveries
+            // sample the timer — a retransmitted or reorder-held frame's
+            // delay includes the backoff the timer itself decided, and
+            // feeding that back would inflate the estimate unboundedly.
+            // At this point `delay` carries the spike and straggler
+            // multipliers but no backoff/hold terms, which is exactly
+            // the delivery delay a live sender would measure.
+            if faults.drops == 0 && !faults.reordered && !lost {
+                self.net.observe_link_delay(self.id, dst, delay);
+            }
         }
         if lost {
             return false;
@@ -501,8 +547,7 @@ impl Endpoint {
             self.net.kind_bytes[kind.index()].fetch_add(bytes as u64, Ordering::Relaxed);
             self.net.kind_msgs[kind.index()].fetch_add(1, Ordering::Relaxed);
             let mut copy = msg.clone();
-            copy.deliver_at = deliver_at
-                + Duration::from_secs_f64(faults::rto_secs(&self.net.latency, bytes));
+            copy.deliver_at = deliver_at + Duration::from_secs_f64(rto);
             Some(copy)
         } else {
             None

@@ -22,8 +22,11 @@
 //!
 //! * *Reliable* (`send`/`send_coded`) — lock-step sync traffic, votes,
 //!   final gathers. A dropped attempt is retransmitted after a
-//!   deadline-based timeout with exponential backoff ([`rto_secs`] /
-//!   [`backoff_secs`]); because the schedule is decided at send time,
+//!   deadline-based timeout with exponential backoff; the timeout is
+//!   the per-link adaptive [`LinkRtt`] estimate once the link has seen
+//!   clean traffic, with the deterministic [`rto_secs`] transfer
+//!   estimate as cold-start prior (backoff via [`backoff_secs`]).
+//!   Because the schedule is decided at send time,
 //!   the fabric "fast-forwards" the ARQ: it prices every failed
 //!   attempt (frame bytes + a nack frame) into the traffic counters
 //!   and stretches the delivery deadline by the accumulated backoff,
@@ -263,11 +266,72 @@ impl Recovery {
     }
 }
 
-/// Retransmit timeout for a `bytes`-sized frame on `latency`: twice the
-/// deterministic one-way transfer estimate, floored so zero-latency
-/// test fabrics still pay a visible per-loss penalty.
+/// Deterministic retransmit-timeout *prior* for a `bytes`-sized frame
+/// on `latency`: twice the one-way transfer estimate, floored so
+/// zero-latency test fabrics still pay a visible per-loss penalty.
+///
+/// This is only the cold-start estimate: once a link has seen a clean
+/// delivery, the fabric's per-link [`LinkRtt`] EWMA supersedes it (see
+/// [`LinkRtt::rto_secs`]) — jittery or spiky links earn a wider timer
+/// than the model's deterministic terms predict, quiet ones a tighter
+/// one, exactly like a TCP sender's adaptive RTO.
 pub fn rto_secs(latency: &LatencyModel, bytes: usize) -> f64 {
     (2.0 * (latency.base_secs + latency.beta_secs(bytes as u64))).max(100e-6)
+}
+
+/// Per-link smoothed delivery-delay estimator driving the adaptive
+/// retransmit timer — the RFC 6298 EWMA pair (SRTT / RTTVAR).
+///
+/// The fabric keeps one per directed link and folds in the delay of
+/// every *clean* delivery: frames that were dropped (retransmitted) or
+/// reorder-held never sample the timer (Karn's rule — their delay
+/// includes the very backoff the timer decides, so sampling them would
+/// feed the estimator its own output). Until the first sample lands the
+/// link is unprimed and [`LinkRtt::rto_secs`] falls back to the
+/// deterministic [`rto_secs`] prior.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LinkRtt {
+    /// Smoothed delivery delay (EWMA, gain 1/8).
+    pub srtt: f64,
+    /// Smoothed delay deviation (EWMA, gain 1/4).
+    pub rttvar: f64,
+    /// Whether any sample has landed (unprimed links use the prior).
+    pub primed: bool,
+}
+
+impl LinkRtt {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one clean delivery-delay sample (seconds). Non-finite or
+    /// negative samples are ignored.
+    pub fn observe(&mut self, sample: f64) {
+        if !sample.is_finite() || sample < 0.0 {
+            return;
+        }
+        if !self.primed {
+            // RFC 6298 §2.2 first-sample initialization.
+            self.srtt = sample;
+            self.rttvar = sample / 2.0;
+            self.primed = true;
+        } else {
+            // §2.3: RTTVAR before SRTT, so the deviation is measured
+            // against the pre-update mean.
+            self.rttvar = 0.75 * self.rttvar + 0.25 * (self.srtt - sample).abs();
+            self.srtt = 0.875 * self.srtt + 0.125 * sample;
+        }
+    }
+
+    /// The adaptive retransmit timeout: `SRTT + 4·RTTVAR` once primed
+    /// (floored like the deterministic prior), else `prior` itself.
+    pub fn rto_secs(&self, prior: f64) -> f64 {
+        if self.primed {
+            (self.srtt + 4.0 * self.rttvar).max(100e-6)
+        } else {
+            prior
+        }
+    }
 }
 
 /// Total backoff delay of `attempts` consecutive failed transmissions
@@ -374,6 +438,48 @@ mod tests {
         assert!((backoff_secs(rto, 3) - 7.0 * rto).abs() < 1e-12);
         let lan = LatencyModel::lan();
         assert!(rto_secs(&lan, 1 << 20) > rto_secs(&lan, 64));
+    }
+
+    #[test]
+    fn link_rtt_cold_start_uses_prior() {
+        let r = LinkRtt::new();
+        assert!(!r.primed);
+        assert_eq!(r.rto_secs(0.5), 0.5);
+        // Garbage samples leave the estimator unprimed.
+        let mut g = LinkRtt::new();
+        g.observe(f64::NAN);
+        g.observe(-1.0);
+        assert!(!g.primed);
+        assert_eq!(g.rto_secs(0.25), 0.25);
+    }
+
+    #[test]
+    fn link_rtt_ewma_tracks_samples() {
+        let mut r = LinkRtt::new();
+        r.observe(0.010);
+        assert!(r.primed);
+        assert!((r.srtt - 0.010).abs() < 1e-12);
+        assert!((r.rttvar - 0.005).abs() < 1e-12);
+        assert!((r.rto_secs(9.0) - 0.030).abs() < 1e-12, "srtt + 4·rttvar");
+        // Steady samples collapse the variance term toward the mean.
+        for _ in 0..200 {
+            r.observe(0.010);
+        }
+        assert!((r.srtt - 0.010).abs() < 1e-9);
+        assert!(r.rto_secs(9.0) < 0.011);
+        // A delay burst inflates the timer; steady traffic relaxes it.
+        r.observe(0.100);
+        let inflated = r.rto_secs(9.0);
+        assert!(inflated > 0.05, "burst must widen the timer: {inflated}");
+        for _ in 0..300 {
+            r.observe(0.010);
+        }
+        assert!(r.rto_secs(9.0) < inflated / 4.0);
+        // The primed timer never collapses below the floor.
+        let mut tiny = LinkRtt::new();
+        tiny.observe(0.0);
+        assert!(tiny.primed);
+        assert_eq!(tiny.rto_secs(9.0), 100e-6);
     }
 
     #[test]

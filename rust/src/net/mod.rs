@@ -40,7 +40,7 @@ pub use collectives::{
     bcast_resilient, gather, gather_coded, gather_resilient, scatter,
 };
 pub use fabric::{Endpoint, Message, NetTraffic, SimNet, TagKind};
-pub use faults::{FaultPlan, FrameFaults, LinkFault, NodeFault, NodeLoss, Recovery};
+pub use faults::{FaultPlan, FrameFaults, LinkFault, LinkRtt, NodeFault, NodeLoss, Recovery};
 pub use latency::LatencyModel;
 pub use wire::WireFormat;
 

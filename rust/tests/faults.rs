@@ -97,6 +97,34 @@ fn fault_schedules_replay_exactly_from_the_seed() {
 }
 
 #[test]
+fn adaptive_rto_samples_clean_deliveries_only() {
+    // Karn's rule at the fabric level: a link whose every attempt is
+    // dropped (and so retransmitted) never samples the adaptive
+    // retransmit timer — its delivery delays include the backoff the
+    // timer itself decided — while clean deliveries on a healthy link
+    // of the same faulted fabric prime the EWMA.
+    use fedsink::net::{SimNet, TagKind};
+    use std::sync::Arc;
+    let mut plan = FaultPlan::none();
+    plan.links.insert((0, 1), LinkFault { drop_prob: 1.0, ..LinkFault::none() });
+    let net = Arc::new(SimNet::new(3, LatencyModel::zero(), 1).with_faults(plan));
+    let (e0, e1, e2) = (net.endpoint(0), net.endpoint(1), net.endpoint(2));
+    for i in 0..8u64 {
+        e0.send(1, TagKind::Ctl, i, vec![i as f64], i);
+        e0.send(2, TagKind::Ctl, i, vec![i as f64], i);
+    }
+    for i in 0..8u64 {
+        e1.recv_blocking(0, TagKind::Ctl, i);
+        e2.recv_blocking(0, TagKind::Ctl, i);
+    }
+    assert!(net.traffic().retransmits > 0, "the (0,1) drops must have fired");
+    assert!(!net.link_rtt(0, 1).primed, "retransmitted frames must not sample the timer");
+    let rtt = net.link_rtt(0, 2);
+    assert!(rtt.primed && rtt.srtt >= 0.0 && rtt.rttvar >= 0.0);
+    assert!(!net.link_rtt(1, 0).primed, "links that never sent stay on the prior");
+}
+
+#[test]
 fn faulted_sync_iterates_are_bit_identical_at_every_thread_count() {
     // The pool_parity discipline extended to the fault layer: one
     // faulted sync run, replayed at thread counts {1, 2, width} and

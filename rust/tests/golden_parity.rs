@@ -1,0 +1,135 @@
+//! Golden-parity pins for the topology-engine refactor.
+//!
+//! The four legacy coordinators were collapsed onto one protocol core
+//! (`coordinator::engine`): the lock-step client loop, streamed-fold
+//! admission, ARQ delivery-class choice, strike-based peer death, and
+//! fleet probe/command routing all live in the engine, with each
+//! topology reduced to a thin exchange plan. That refactor must be
+//! *invisible* in the numbers: the sync protocols are bit-deterministic
+//! by design — pure fault schedules, sender-thread-only link state, a
+//! row-banded compute pool that splits identically at every width — so
+//! any engine regression that reorders a fold, renumbers a wire round,
+//! or drops a retransmit shows up here as a flipped mantissa bit.
+//!
+//! These tests pin the refactored AllToAll and Star lock-step paths to
+//! one golden run each: bit-identical scaling iterates and identical
+//! iteration counts across compute-thread counts {1, 2, width}, on a
+//! lossless fabric AND under a drop/dup/reorder fault plan, at both the
+//! exact f64 wire and the lossy-but-reliable deltaf32 wire.
+
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::run_federated;
+use fedsink::net::{FaultPlan, LatencyModel, LinkFault, WireFormat};
+use fedsink::sinkhorn::StopPolicy;
+use fedsink::workload::{Problem, ProblemSpec};
+
+/// The pinned thread counts: serial, the smallest parallel split, and
+/// the machine's full width (deduplicated on narrow CI runners).
+fn thread_counts() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut ts = vec![1, 2, avail];
+    ts.sort_unstable();
+    ts.dedup();
+    ts
+}
+
+fn assert_bit_identical(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(g.to_bits() == w.to_bits(), "{what}: index {i} differs: got {g:e}, want {w:e}");
+    }
+}
+
+fn problem() -> Problem {
+    ProblemSpec::new(32).with_eps(0.5).build(0x601D)
+}
+
+fn policy(wire: WireFormat) -> StopPolicy {
+    // The delta codec reaches tight thresholds too, but its quantized
+    // early rounds take longer — give it a softer target and more room.
+    match wire {
+        WireFormat::F64 => StopPolicy { threshold: 1e-11, max_iters: 1500, ..Default::default() },
+        _ => StopPolicy { threshold: 1e-10, max_iters: 4000, ..Default::default() },
+    }
+}
+
+/// A busy lossy fabric: drops exercise the ARQ fast-forward, dups and
+/// reorders the receive-side filters, spikes the latency pricing.
+fn lossy_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        default_link: LinkFault {
+            drop_prob: 0.15,
+            dup_prob: 0.05,
+            reorder_prob: 0.05,
+            delay_spike: (0.02, 4.0),
+        },
+        ..FaultPlan::none()
+    }
+}
+
+fn cfg(variant: Variant, faults: FaultPlan, wire: WireFormat, threads: usize) -> SolveConfig {
+    SolveConfig {
+        variant,
+        backend: BackendKind::Native,
+        clients: 4,
+        net: LatencyModel::zero(),
+        compute_threads: threads,
+        seed: 13,
+        wire,
+        faults,
+        ..Default::default()
+    }
+}
+
+/// The golden-parity sweep: one baseline run (1 thread, lossless), then
+/// every combination of {lossless, faulted} × thread counts must land
+/// on the same stop, the same iteration count, and bit-identical u/v.
+fn golden_sweep(variant: Variant, wire: WireFormat) {
+    let p = problem();
+    let name = variant.name();
+    let base = run_federated(&p, &cfg(variant, FaultPlan::none(), wire, 1), policy(wire), false);
+    assert!(base.converged, "{name} baseline: stop={:?}", base.stop);
+    for faulted in [false, true] {
+        for t in thread_counts() {
+            let plan = if faulted { lossy_plan(21) } else { FaultPlan::none() };
+            let out = run_federated(&p, &cfg(variant, plan, wire, t), policy(wire), false);
+            let what = format!("{name} ({wire:?}, faulted={faulted}, {t} threads)");
+            assert_eq!(out.stop, base.stop, "{what}");
+            assert_eq!(out.iterations, base.iterations, "{what}");
+            assert_bit_identical(out.state.u.as_slice(), base.state.u.as_slice(), &what);
+            assert_bit_identical(out.state.v.as_slice(), base.state.v.as_slice(), &what);
+            if faulted {
+                assert!(
+                    out.traffic.drops > 0 && out.traffic.retransmits > 0,
+                    "{what}: the fault plan never fired"
+                );
+            } else {
+                assert_eq!(out.traffic.drops + out.traffic.retransmits, 0, "{what}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sync_a2a_golden_parity_f64() {
+    golden_sweep(Variant::SyncA2A, WireFormat::F64);
+}
+
+#[test]
+fn sync_star_golden_parity_f64() {
+    golden_sweep(Variant::SyncStar, WireFormat::F64);
+}
+
+#[test]
+fn sync_a2a_golden_parity_deltaf32() {
+    // The reliable class never loses a frame, so even the stateful
+    // delta codec sees the exact same frame sequence under faults —
+    // coded iterates stay bit-identical to the lossless coded run.
+    golden_sweep(Variant::SyncA2A, WireFormat::DeltaF32);
+}
+
+#[test]
+fn sync_star_golden_parity_deltaf32() {
+    golden_sweep(Variant::SyncStar, WireFormat::DeltaF32);
+}

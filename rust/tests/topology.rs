@@ -1,0 +1,252 @@
+//! Ring & gossip topology pins.
+//!
+//! The two decentralized topologies ride the same protocol engine as
+//! the flat coordinators, so their contracts are pinned against the
+//! established baselines rather than in isolation:
+//!
+//! * **Ring** is a rotation AllGather — after c−1 relay hops every node
+//!   holds all c slices, so at the exact f64 wire its assembled state
+//!   (and therefore every iterate) must be *bit-identical* to the sync
+//!   All-to-All run with the same config. Slices ride the reliable ARQ
+//!   class, so a chaos plan changes timing and counters, never bits.
+//! * **Gossip** is an epidemic push protocol on the latest-wins class:
+//!   timing-nondeterministic by design, so its pins are convergence to
+//!   the centralized solution within tolerance, chaos survival with
+//!   live fault counters, and the purity of the seeded peer schedule
+//!   (the one piece that must replay exactly at any thread count).
+
+use fedsink::config::{BackendKind, SolveConfig, Variant};
+use fedsink::coordinator::{gossip_peer, run_federated};
+use fedsink::net::{FaultPlan, LatencyModel, LinkFault, NodeFault, NodeLoss, Recovery};
+use fedsink::sinkhorn::{full_marginal_errors, StopPolicy, StopReason};
+use fedsink::testkit::run_with_timeout;
+use fedsink::workload::{Problem, ProblemSpec};
+
+/// The pinned thread counts: serial, the smallest parallel split, and
+/// the machine's full width (deduplicated on narrow CI runners).
+fn thread_counts() -> Vec<usize> {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut ts = vec![1, 2, avail];
+    ts.sort_unstable();
+    ts.dedup();
+    ts
+}
+
+fn assert_bit_identical(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(g.to_bits() == w.to_bits(), "{what}: index {i} differs: got {g:e}, want {w:e}");
+    }
+}
+
+fn problem() -> Problem {
+    ProblemSpec::new(32).with_eps(0.5).build(0x2106)
+}
+
+fn lossy_plan(seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        default_link: LinkFault {
+            drop_prob: 0.15,
+            dup_prob: 0.05,
+            reorder_prob: 0.05,
+            delay_spike: (0.02, 4.0),
+        },
+        ..FaultPlan::none()
+    }
+}
+
+fn cfg(variant: Variant, clients: usize) -> SolveConfig {
+    SolveConfig {
+        variant,
+        backend: BackendKind::Native,
+        clients,
+        alpha: if variant == Variant::Gossip { 0.5 } else { 1.0 },
+        net: LatencyModel::zero(),
+        compute_threads: 2,
+        seed: 17,
+        ..Default::default()
+    }
+}
+
+fn sync_policy() -> StopPolicy {
+    StopPolicy { threshold: 1e-11, max_iters: 1500, ..Default::default() }
+}
+
+#[test]
+fn ring_matches_sync_a2a_bit_for_bit() {
+    // The rotation allgather assembles the exact same slice values as
+    // the flat allgather (f64 wire copies, never re-encodes), so the
+    // two topologies must walk identical iterates to the same stop.
+    let p = problem();
+    let a2a = run_federated(&p, &cfg(Variant::SyncA2A, 4), sync_policy(), false);
+    let ring = run_federated(&p, &cfg(Variant::Ring, 4), sync_policy(), false);
+    assert!(a2a.converged, "a2a: stop={:?}", a2a.stop);
+    assert_eq!(ring.stop, a2a.stop);
+    assert_eq!(ring.iterations, a2a.iterations);
+    assert_bit_identical(ring.state.u.as_slice(), a2a.state.u.as_slice(), "ring vs a2a u");
+    assert_bit_identical(ring.state.v.as_slice(), a2a.state.v.as_slice(), "ring vs a2a v");
+}
+
+#[test]
+fn ring_parity_across_thread_counts_and_faults() {
+    // The golden-parity discipline extended to the ring: lossless and
+    // chaos-plan runs at every thread count land on the same bits —
+    // every slice rides the reliable class, so the ARQ reprices the
+    // run but never touches a payload.
+    let p = problem();
+    let run = |faults: FaultPlan, threads: usize| {
+        let mut c = cfg(Variant::Ring, 4);
+        c.faults = faults;
+        c.compute_threads = threads;
+        run_federated(&p, &c, sync_policy(), false)
+    };
+    let base = run(FaultPlan::none(), 1);
+    assert!(base.converged, "stop={:?}", base.stop);
+    for faulted in [false, true] {
+        for t in thread_counts() {
+            let plan = if faulted { lossy_plan(33) } else { FaultPlan::none() };
+            let out = run(plan, t);
+            let what = format!("ring (faulted={faulted}, {t} threads)");
+            assert_eq!(out.iterations, base.iterations, "{what}");
+            assert_bit_identical(out.state.u.as_slice(), base.state.u.as_slice(), &what);
+            assert_bit_identical(out.state.v.as_slice(), base.state.v.as_slice(), &what);
+            if faulted {
+                assert!(
+                    out.traffic.drops > 0 && out.traffic.retransmits > 0,
+                    "{what}: chaos plan never fired"
+                );
+                assert!(!out.degraded, "{what}: no crash injected");
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_and_gossip_converge_to_the_centralized_solution() {
+    let p = problem();
+    for clients in [4usize, 8] {
+        let central = run_federated(&p, &cfg(Variant::Centralized, clients), sync_policy(), false);
+        assert!(central.converged, "centralized: stop={:?}", central.stop);
+
+        let ring = run_federated(&p, &cfg(Variant::Ring, clients), sync_policy(), false);
+        assert!(ring.converged, "ring c={clients}: stop={:?}", ring.stop);
+        assert!(
+            ring.state.u.allclose(&central.state.u, 1e-9)
+                && ring.state.v.allclose(&central.state.v, 1e-9),
+            "ring c={clients}: iterates drifted from centralized"
+        );
+
+        let pol = StopPolicy { threshold: 1e-9, max_iters: 8000, ..Default::default() };
+        let gossip = run_federated(&p, &cfg(Variant::Gossip, clients), pol, false);
+        assert!(
+            gossip.converged,
+            "gossip c={clients}: stop={:?} after {} iters",
+            gossip.stop,
+            gossip.iterations
+        );
+        // One order looser than the async-a2a pin: gossip views are
+        // staler (one push per half-iteration), so the final assembled
+        // slices carry more cross-slice lag at the same threshold.
+        let (ea, eb) = full_marginal_errors(&p, &gossip.state, 0);
+        assert!(ea < 1e-5 && eb < 1e-5, "gossip c={clients}: marginals ({ea}, {eb})");
+    }
+}
+
+#[test]
+fn gossip_survives_chaos_with_live_counters() {
+    // Latest-wins pushes genuinely lose dropped frames (no retransmit),
+    // but the done votes and the final consistent exchange ride the
+    // reliable class — so a chaos run must show both loss *and* ARQ
+    // recovery in the counters while still reaching the threshold.
+    let p = problem();
+    let mut c = cfg(Variant::Gossip, 4);
+    c.faults = lossy_plan(5);
+    let pol = StopPolicy { threshold: 1e-8, max_iters: 8000, ..Default::default() };
+    let out = run_with_timeout("gossip chaos", move || run_federated(&p, &c, pol, false));
+    assert!(out.converged, "stop={:?} after {} iters", out.stop, out.iterations);
+    assert!(out.traffic.drops > 0, "chaos plan never fired");
+    assert!(out.traffic.retransmits > 0, "the reliable finish leg never recovered a drop");
+    assert!(!out.degraded && out.lost_nodes.is_empty(), "no crash injected");
+}
+
+#[test]
+fn ring_neighbor_crash_is_fatal_even_under_exclude() {
+    // Every slice transits every link, so a dead neighbor partitions
+    // the ring: there is no degrade path, and even `exclude` must abort
+    // with a structured PeerLoss — bounded by the recovery budget, not
+    // a hang.
+    let p = problem();
+    let mut c = cfg(Variant::Ring, 4);
+    c.faults = FaultPlan {
+        nodes: [(1usize, NodeFault { crash_at_iter: Some(3), ..NodeFault::default() })]
+            .into_iter()
+            .collect(),
+        ..FaultPlan::none()
+    };
+    c.recovery = Recovery { recv_timeout_secs: 0.05, strikes: 2, on_node_loss: NodeLoss::Exclude };
+    let pol = StopPolicy { threshold: 1e-11, max_iters: 300, ..Default::default() };
+    let out = run_with_timeout("ring crash", move || run_federated(&p, &c, pol, false));
+    assert_eq!(out.stop, StopReason::PeerLoss);
+    assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
+    assert!(!out.converged);
+}
+
+#[test]
+fn gossip_node_crash_degrades_gracefully() {
+    // Survivors watch the dead node's stamp freeze past the death
+    // budget, fold it into the done set, and finish on their own slices
+    // — degraded and flagged, never a hang.
+    let p = problem();
+    let mut c = cfg(Variant::Gossip, 4);
+    c.faults = FaultPlan {
+        nodes: [(1usize, NodeFault { crash_at_iter: Some(5), ..NodeFault::default() })]
+            .into_iter()
+            .collect(),
+        ..FaultPlan::none()
+    };
+    c.recovery = Recovery { recv_timeout_secs: 0.05, strikes: 2, on_node_loss: NodeLoss::Exclude };
+    let pol = StopPolicy { threshold: 1e-8, max_iters: 600, ..Default::default() };
+    let out = run_with_timeout("gossip crash", move || run_federated(&p, &c, pol, false));
+    assert!(out.degraded && out.lost_nodes.contains(&1), "lost={:?}", out.lost_nodes);
+}
+
+#[test]
+fn gossip_peer_schedule_is_pure_and_replays_across_threads() {
+    // The push schedule is the only randomized piece of the gossip
+    // protocol that must be deterministic: pure in (seed, iter, rank),
+    // in-range, never self, and identical no matter which thread
+    // computes it.
+    let c = 8;
+    for seed in [0u64, 17, 0xDEAD] {
+        for iter in 1..=200u64 {
+            for rank in 0..c {
+                let peer = gossip_peer(seed, iter, rank, c);
+                assert!(peer < c, "out of range");
+                assert_ne!(peer, rank, "a node must never push to itself");
+                assert_eq!(peer, gossip_peer(seed, iter, rank, c), "not pure");
+            }
+        }
+    }
+    // The schedule varies with the iteration (a frozen push graph could
+    // disconnect) and with the seed.
+    let varies = (1..=50u64).any(|k| gossip_peer(17, k, 0, c) != gossip_peer(17, k + 1, 0, c));
+    assert!(varies, "schedule frozen across iterations");
+    let seeded = (1..=50u64).any(|k| gossip_peer(17, k, 0, c) != gossip_peer(18, k, 0, c));
+    assert!(seeded, "schedule ignores the seed");
+    // Replay across threads: every worker computes the same schedule.
+    let golden: Vec<usize> =
+        (1..=100u64).flat_map(|k| (0..c).map(move |r| gossip_peer(17, k, r, c))).collect();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            std::thread::spawn(move || {
+                (1..=100u64)
+                    .flat_map(|k| (0..c).map(move |r| gossip_peer(17, k, r, c)))
+                    .collect::<Vec<usize>>()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().expect("schedule thread"), golden, "schedule must replay");
+    }
+}

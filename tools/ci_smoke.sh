@@ -101,6 +101,41 @@ stage_chaos() {
   done
 }
 
+# Decentralized topologies on the shared protocol engine, selected via
+# the --coordinator alias: the ring's rotation allgather (reliable ARQ
+# relays, c−1 hops) and the gossip push protocol (latest-wins stamped
+# views), each over the delta-coded wire, lossless and again under the
+# chaos plan. The greps assert the chaos runs converged AND exercised
+# the expected delivery class: retransmits on the ring's reliable
+# relays, genuine drops on gossip's latest-wins pushes.
+stage_topology() {
+  local chaos="--drop-prob 0.05 --dup-prob 0.02 --reorder-prob 0.02"
+  FEDSINK_DOMAIN=log "$BIN" solve \
+    --coordinator ring --backend native --n 512 --clients 4 \
+    --eps 0.005 --cond ill --max-iters 4000 --threshold 1e-8 \
+    --wire-format deltaf32
+  # shellcheck disable=SC2086
+  FEDSINK_DOMAIN=log "$BIN" solve \
+    --coordinator ring --backend native --n 512 --clients 4 \
+    --eps 0.005 --cond ill --max-iters 4000 --threshold 1e-8 \
+    --wire-format deltaf32 $chaos \
+    | tee "$TMP/topology.log"
+  grep -q "stop=Converged" "$TMP/topology.log"
+  grep -Eq "retransmits=[1-9]" "$TMP/topology.log"
+  FEDSINK_DOMAIN=log "$BIN" solve \
+    --coordinator gossip --backend native --n 512 --clients 4 \
+    --eps 0.005 --cond ill --max-iters 8000 --threshold 1e-8 \
+    --wire-format deltaf32 --alpha 0.5
+  # shellcheck disable=SC2086
+  FEDSINK_DOMAIN=log "$BIN" solve \
+    --coordinator gossip --backend native --n 512 --clients 4 \
+    --eps 0.005 --cond ill --max-iters 8000 --threshold 1e-8 \
+    --wire-format deltaf32 --alpha 0.5 $chaos \
+    | tee "$TMP/topology.log"
+  grep -q "stop=Converged" "$TMP/topology.log"
+  grep -Eq " drops=[1-9]" "$TMP/topology.log"
+}
+
 # The streaming shape pinned at both ends of the pool-sizing range: a
 # serial pool (never fans out) and a 4-thread pool sharing workers
 # across all five node threads. Banding is per-row, so both must reach
@@ -149,7 +184,7 @@ print(f"service amortization OK: {batched} batched rebuilds vs {standalone} stan
 PY
 }
 
-STAGES=(sparse vectorized fleet wire chaos threads service)
+STAGES=(sparse vectorized fleet wire chaos topology threads service)
 
 usage() {
   local IFS='|'
