@@ -112,6 +112,55 @@ fn main() {
         }));
     }
 
+    section("greedy top-k row folds vs full products (s=0.9, N=1)");
+    // The greedy exchange's compute claim: a k-row violation update
+    // pays ~k/n of the full fold. Packed row-subset kernels against
+    // the full products on the same operands — linear CSR GEMV and
+    // sparse-log LSE — at k = n/8 and n/2. Stable `note` identities
+    // keep the perf gate matching these across rewordings.
+    let topk_shapes: &[usize] = if quick { &[1024] } else { &[1024, 4096] };
+    for &n in topk_shapes {
+        let mut rng = Rng::seed_from(child_seed(0xB_000A, n as u64));
+        let p = fedsink::workload::ProblemSpec::new(n).with_sparsity(0.9, 4).build(7);
+        let csr = fedsink::linalg::Csr::from_dense(p.kernel(), 1e-300);
+        let x = Mat::rand_uniform(n, 1, 0.1, 1.0, &mut rng);
+        let mut full_out = Mat::zeros(n, 1);
+        baseline.push(
+            b.run(&format!("csr full-fold  n={n}"), || csr.matmul_into(&x, &mut full_out, 1))
+                .with_note(&format!("topk-csr-full-n{n}")),
+        );
+        for &k in &[n / 8, n / 2] {
+            let sel: Vec<u32> = (0..n as u32).step_by(n / k).take(k).collect();
+            let mut out = vec![0.0; sel.len()];
+            baseline.push(
+                b.run(&format!("csr top-k fold n={n} k={k}"), || {
+                    csr.matmul_select_rows(&sel, &x, &mut out, 1)
+                })
+                .with_note(&format!("topk-csr-select-n{n}-k{k}")),
+            );
+        }
+        let a_log = masked_log_kernel(n, 0.9, &mut rng);
+        let lc = LogCsr::from_dense_log(&a_log, f64::NEG_INFINITY);
+        let x_log = Mat::rand_uniform(n, 1, -2.0, 2.0, &mut rng);
+        let mut lse_full = Mat::zeros(n, 1);
+        baseline.push(
+            b.run(&format!("log full-lse   n={n}"), || {
+                lc.logsumexp_into(&x_log, &mut lse_full, 1)
+            })
+            .with_note(&format!("topk-log-full-n{n}")),
+        );
+        for &k in &[n / 8, n / 2] {
+            let sel: Vec<u32> = (0..n as u32).step_by(n / k).take(k).collect();
+            let mut out = vec![0.0; sel.len()];
+            baseline.push(
+                b.run(&format!("log top-k lse  n={n} k={k}"), || {
+                    lc.logsumexp_rows(&sel, &x_log, &mut out, 1)
+                })
+                .with_note(&format!("topk-log-select-n{n}-k{k}")),
+            );
+        }
+    }
+
     section("multi-histogram absorbed sparse GEMM vs dense LSE (s=0.9)");
     // The vectorized hybrid's linear hot path: one shared-support
     // absorbed kernel, per-histogram column corrections, batched

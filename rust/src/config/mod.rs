@@ -11,6 +11,7 @@ mod file;
 pub use file::{load_file, FileError};
 
 use crate::linalg::{Domain, Stabilization};
+use crate::runtime::GreedySpec;
 use crate::workload::{CondClass, Problem};
 use std::collections::BTreeMap;
 
@@ -169,6 +170,52 @@ impl BackendKind {
     }
 }
 
+/// What the coordinators put on the wire each communication round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExchangeMode {
+    /// Dense slice exchange — every coordinate of the owned scaling
+    /// slice moves every round (the paper's protocols as written).
+    Full,
+    /// Greedy top-k exchange: each half-iteration updates only the rows
+    /// with the largest marginal violations and ships just those
+    /// coordinates as sparse index+value frames. Convergence checks
+    /// still use the full marginal, so greedy can never report a
+    /// converged state that full exchange would reject.
+    Greedy,
+}
+
+impl ExchangeMode {
+    pub fn parse(s: &str) -> Option<ExchangeMode> {
+        match s {
+            "full" | "dense" => Some(ExchangeMode::Full),
+            "greedy" | "topk" | "top-k" => Some(ExchangeMode::Greedy),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExchangeMode::Full => "full",
+            ExchangeMode::Greedy => "greedy",
+        }
+    }
+}
+
+/// Scale an async staleness bound by the observed round-trip time. Pure
+/// rule shared by every SRTT-gated wait site: with no primed RTT
+/// estimate (or degenerate inputs) the nominal bound stands; otherwise
+/// the bound stretches by `srtt / nominal`, clamped to `[1, 8]×` so a
+/// pathological estimate can neither tighten the bound below the
+/// configured window nor unbound the ARock delay assumption.
+pub fn srtt_scaled_bound(bound: u64, srtt_secs: f64, nominal_secs: f64) -> u64 {
+    let unusable = |v: f64| v <= 0.0 || !v.is_finite();
+    if unusable(srtt_secs) || unusable(nominal_secs) {
+        return bound;
+    }
+    let scale = (srtt_secs / nominal_secs).clamp(1.0, 8.0);
+    ((bound as f64) * scale).round() as u64
+}
+
 /// Full solver configuration (defaults mirror the paper's settings).
 #[derive(Clone, Debug)]
 pub struct SolveConfig {
@@ -232,6 +279,18 @@ pub struct SolveConfig {
     /// `--strikes` / `--on-node-loss`). Only consulted when the fault
     /// plan is active — lossless runs never arm recovery timeouts.
     pub recovery: crate::net::Recovery,
+    /// Dense or greedy top-k slice exchange (`--exchange full|greedy`).
+    pub exchange: ExchangeMode,
+    /// Greedy row budget per half-iteration (`--greedy-topk`): `0.5`
+    /// covers half the violation mass, `k=16` a fixed row count. Only
+    /// consulted under `ExchangeMode::Greedy`.
+    pub greedy_topk: GreedySpec,
+    /// SRTT-scaled async staleness bounds (`--srtt-staleness`): stretch
+    /// the bounded-delay window per link by the measured round-trip
+    /// estimate so slow-but-alive links under fault injection are not
+    /// throttled as if they were LAN-fast. Inert on lossless runs —
+    /// the RTT estimator only primes under an active fault plan.
+    pub srtt_staleness: bool,
 }
 
 impl SolveConfig {
@@ -241,6 +300,19 @@ impl SolveConfig {
     /// async wait/gate sites (a2a clients, star server, star clients).
     pub fn staleness_bound(&self) -> u64 {
         self.max_staleness.max(1)
+    }
+
+    /// The staleness bound for one link, optionally SRTT-scaled: under
+    /// `--srtt-staleness` the nominal bound stretches by the link's
+    /// smoothed RTT relative to the configured base latency (see
+    /// [`srtt_scaled_bound`]); otherwise, and whenever the estimator is
+    /// unprimed, the nominal bound stands.
+    pub fn staleness_bound_for(&self, srtt_secs: f64) -> u64 {
+        let bound = self.staleness_bound();
+        if !self.srtt_staleness {
+            return bound;
+        }
+        srtt_scaled_bound(bound, srtt_secs, self.net.base_secs)
     }
 }
 
@@ -268,6 +340,9 @@ impl Default for SolveConfig {
             wire_keyframe_every: 0,
             faults: crate::net::FaultPlan::none(),
             recovery: crate::net::Recovery::default(),
+            exchange: ExchangeMode::Full,
+            greedy_topk: GreedySpec::MassFraction(0.5),
+            srtt_staleness: false,
         }
     }
 }
@@ -563,6 +638,41 @@ mod tests {
     #[test]
     fn keyframe_cadence_defaults_off() {
         assert_eq!(SolveConfig::default().wire_keyframe_every, 0);
+    }
+
+    #[test]
+    fn exchange_defaults_to_full_dense() {
+        let c = SolveConfig::default();
+        assert_eq!(c.exchange, ExchangeMode::Full);
+        assert_eq!(c.greedy_topk, GreedySpec::MassFraction(0.5));
+        assert!(!c.srtt_staleness);
+        for m in [ExchangeMode::Full, ExchangeMode::Greedy] {
+            assert_eq!(ExchangeMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ExchangeMode::parse("topk"), Some(ExchangeMode::Greedy));
+        assert_eq!(ExchangeMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn srtt_scaling_clamps_and_falls_back() {
+        // Unprimed / degenerate estimates leave the nominal bound alone.
+        assert_eq!(srtt_scaled_bound(8, 0.0, 1e-3), 8);
+        assert_eq!(srtt_scaled_bound(8, -1.0, 1e-3), 8);
+        assert_eq!(srtt_scaled_bound(8, f64::NAN, 1e-3), 8);
+        assert_eq!(srtt_scaled_bound(8, 1e-3, 0.0), 8);
+        // A fast link never tightens below the configured window...
+        assert_eq!(srtt_scaled_bound(8, 1e-4, 1e-3), 8);
+        // ...a 3× RTT stretches it 3×, and the stretch caps at 8×.
+        assert_eq!(srtt_scaled_bound(8, 3e-3, 1e-3), 24);
+        assert_eq!(srtt_scaled_bound(8, 1.0, 1e-3), 64);
+        // The config method gates on the flag.
+        let mut c = SolveConfig::default();
+        c.max_staleness = 8;
+        let slow = c.net.base_secs * 4.0;
+        assert_eq!(c.staleness_bound_for(slow), 8);
+        c.srtt_staleness = true;
+        assert_eq!(c.staleness_bound_for(slow), 32);
+        assert_eq!(c.staleness_bound_for(0.0), 8);
     }
 
     #[test]

@@ -22,19 +22,29 @@
 //! consistent exchange ([`engine::finish_consistent`]) then assembles
 //! identical `u`, `v` everywhere.
 //!
+//! Under `--exchange greedy` each free-running iteration damps only the
+//! top-k most-violated rows (the operators' incremental
+//! `greedy_update`) and broadcasts just those coordinates as sparse
+//! latest-wins frames, drained oldest-first on the receive side. A
+//! frame superseded in flight loses its coordinates at that receiver,
+//! but the scheme self-heals: values are absolute and selection is
+//! violation-driven, so any row a stale receiver still has wrong keeps
+//! producing violation at the sender and is re-shipped.
+//!
 //! The fleet-absorption probe/command routing ([`engine::FleetCoord`],
 //! [`engine::coordinate`], …) and the strike/death machinery live in
 //! [`super::engine`]; this module keeps the free-running client loop.
 
 use super::engine::{
-    apply_fleet_command, coordinate, finish_consistent, send_fleet_probe, write_block, FleetCoord,
+    apply_fleet_command, coordinate, finish_consistent, merge_rows, pack_rows, scatter_sparse,
+    send_fleet_probe, write_block, FleetCoord,
 };
 use super::outcome::{NodeOutcome, NodeStats, TracePoint};
 use super::RunCtx;
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{Endpoint, TagKind};
-use crate::runtime::{StabStats, Target};
+use crate::runtime::{GreedyStats, StabStats, Target};
 use crate::sinkhorn::StopReason;
 use std::time::Instant;
 
@@ -74,7 +84,6 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
     let c = ctx.cfg.clients;
     let alpha = ctx.cfg.alpha;
-    let bound = ctx.cfg.staleness_bound();
     let ep = ctx.net.endpoint(id);
     let clock = Clock::new();
     let mut timer = SplitTimer::new();
@@ -108,6 +117,22 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     // Local (possibly stale) copies of the full scaling state.
     let mut u_full = Mat::full(n, nh, one);
     let mut v_full = Mat::full(n, nh, one);
+
+    // Greedy bookkeeping (`--exchange greedy`): rows of the full mats
+    // that have moved since the corresponding operator's last greedy
+    // refresh — `changed_v` feeds the u-op (it reads `v_full`) and vice
+    // versa. `None` = the op has not run yet and pays one full refresh.
+    let greedy = ctx.greedy_on();
+    let spec = ctx.cfg.greedy_topk;
+    let mut gstats = GreedyStats::default();
+    let mut changed_u: Option<Vec<u32>> = None;
+    let mut changed_v: Option<Vec<u32>> = None;
+    if greedy {
+        assert!(
+            u_op.supports_greedy() && v_op.supports_greedy(),
+            "--exchange greedy needs operators with greedy support (use --backend native)"
+        );
+    }
 
     let mut peers: Vec<PeerView> = (0..c)
         .map(|_| PeerView { last_iter: 0, done: false })
@@ -171,11 +196,20 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 &mut v_full,
                 m,
                 &mut last_heard,
+                &mut changed_u,
+                &mut changed_v,
             );
-            // Wait for any peer we have outrun beyond the bound.
+            // Wait for any peer we have outrun beyond the bound. The
+            // bound is re-read per peer: under `--srtt-staleness` it
+            // scales with that link's measured round-trip, so slow
+            // links widen the tolerated gap instead of stalling us.
+            let bound_for =
+                |p: usize| ctx.cfg.staleness_bound_for(ctx.net.link_rtt(p, id).srtt);
             loop {
                 let lagging = (0..c).any(|p| {
-                    p != id && !peers[p].done && k64.saturating_sub(peers[p].last_iter) > bound
+                    p != id
+                        && !peers[p].done
+                        && k64.saturating_sub(peers[p].last_iter) > bound_for(p)
                 });
                 if !lagging {
                     break;
@@ -187,7 +221,7 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                     for p in 0..c {
                         if p != id
                             && !peers[p].done
-                            && k64.saturating_sub(peers[p].last_iter) > bound
+                            && k64.saturating_sub(peers[p].last_iter) > bound_for(p)
                             && last_heard[p].elapsed().as_secs_f64() >= recovery.death_secs()
                         {
                             peers[p].done = true;
@@ -209,6 +243,8 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                     &mut v_full,
                     m,
                     &mut last_heard,
+                    &mut changed_u,
+                    &mut changed_v,
                 );
             }
         });
@@ -275,41 +311,100 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // Latest-wins delivery class: a dropped slice is superseded by
         // next iteration's send rather than retransmitted (the codec
         // re-keys so reconstruction never diverges) — identical to
-        // `send_coded` when the fault plan is inactive.
-        let u_jj = timer.comp(|| u_op.update(&v_full, alpha).clone());
-        write_block(&mut u_full, u_jj.as_slice(), id, m);
-        timer.comm(|| {
-            for peer in 0..c {
-                if peer != id && !dead[peer] {
-                    ep.send_coded_latest(
-                        peer,
-                        TagKind::U,
-                        ASYNC_TAG,
-                        ASYNC_TAG,
-                        u_jj.as_slice().to_vec(),
-                        k64,
-                    );
-                }
+        // `send_coded` when the fault plan is inactive. Greedy damps
+        // only the top-k violated rows and ships just those coordinates.
+        if greedy {
+            let o = timer.comp(|| u_op.greedy_update(&v_full, alpha, spec, changed_v.as_deref()));
+            changed_v = Some(Vec::new());
+            gstats.record(&o, m);
+            let u_jj = u_op.state().clone();
+            write_block(&mut u_full, u_jj.as_slice(), id, m);
+            if let Some(ch) = changed_u.as_mut() {
+                let own: Vec<u32> = o.rows.iter().map(|&r| shard.r0 as u32 + r).collect();
+                merge_rows(ch, &own);
             }
-        });
+            let (idx, vals) = pack_rows(&u_jj, 0, &o.rows, nh);
+            timer.comm(|| {
+                for peer in 0..c {
+                    if peer != id && !dead[peer] {
+                        ep.send_sparse_coded_latest(
+                            peer,
+                            TagKind::SparseU,
+                            ASYNC_TAG,
+                            ASYNC_TAG,
+                            idx.clone(),
+                            vals.clone(),
+                            m * nh,
+                            k64,
+                        );
+                    }
+                }
+            });
+        } else {
+            let u_jj = timer.comp(|| u_op.update(&v_full, alpha).clone());
+            write_block(&mut u_full, u_jj.as_slice(), id, m);
+            timer.comm(|| {
+                for peer in 0..c {
+                    if peer != id && !dead[peer] {
+                        ep.send_coded_latest(
+                            peer,
+                            TagKind::U,
+                            ASYNC_TAG,
+                            ASYNC_TAG,
+                            u_jj.as_slice().to_vec(),
+                            k64,
+                        );
+                    }
+                }
+            });
+        }
 
         // v_jj = α b_j/(K_jᵀ u) + (1−α) v_jj, then broadcast.
-        let v_jj = timer.comp(|| v_op.update(&u_full, alpha).clone());
-        write_block(&mut v_full, v_jj.as_slice(), id, m);
-        timer.comm(|| {
-            for peer in 0..c {
-                if peer != id && !dead[peer] {
-                    ep.send_coded_latest(
-                        peer,
-                        TagKind::V,
-                        ASYNC_TAG,
-                        ASYNC_TAG,
-                        v_jj.as_slice().to_vec(),
-                        k64,
-                    );
-                }
+        if greedy {
+            let o = timer.comp(|| v_op.greedy_update(&u_full, alpha, spec, changed_u.as_deref()));
+            changed_u = Some(Vec::new());
+            gstats.record(&o, m);
+            let v_jj = v_op.state().clone();
+            write_block(&mut v_full, v_jj.as_slice(), id, m);
+            if let Some(ch) = changed_v.as_mut() {
+                let own: Vec<u32> = o.rows.iter().map(|&r| shard.r0 as u32 + r).collect();
+                merge_rows(ch, &own);
             }
-        });
+            let (idx, vals) = pack_rows(&v_jj, 0, &o.rows, nh);
+            timer.comm(|| {
+                for peer in 0..c {
+                    if peer != id && !dead[peer] {
+                        ep.send_sparse_coded_latest(
+                            peer,
+                            TagKind::SparseV,
+                            ASYNC_TAG,
+                            ASYNC_TAG,
+                            idx.clone(),
+                            vals.clone(),
+                            m * nh,
+                            k64,
+                        );
+                    }
+                }
+            });
+        } else {
+            let v_jj = timer.comp(|| v_op.update(&u_full, alpha).clone());
+            write_block(&mut v_full, v_jj.as_slice(), id, m);
+            timer.comm(|| {
+                for peer in 0..c {
+                    if peer != id && !dead[peer] {
+                        ep.send_coded_latest(
+                            peer,
+                            TagKind::V,
+                            ASYNC_TAG,
+                            ASYNC_TAG,
+                            v_jj.as_slice().to_vec(),
+                            k64,
+                        );
+                    }
+                }
+            });
+        }
 
         // Non-coordinator nodes report their freshest slice-local drift
         // to rank 0 (stamped with the last applied command seq, so the
@@ -388,6 +483,7 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             stop,
             final_err,
             stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            greedy: if greedy { Some(gstats) } else { None },
             lost_peers: dead
                 .iter()
                 .enumerate()
@@ -402,6 +498,12 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 /// Drain every deliverable peer message: fold the freshest u/v slices
 /// into the local state, record staleness, note done votes, and stamp
 /// `heard` (the wall-clock liveness evidence behind the death budget).
+///
+/// Under greedy the slices arrive as sparse coordinate frames; every
+/// deliverable frame is drained oldest-first and scattered (each
+/// carries a different coordinate set, so "latest" alone is not enough)
+/// with the touched rows merged into the `changed_*` accumulators the
+/// operators' incremental refresh consumes.
 #[allow(clippy::too_many_arguments)]
 fn drain(
     ep: &Endpoint,
@@ -414,22 +516,40 @@ fn drain(
     v_full: &mut Mat,
     m: usize,
     heard: &mut [Instant],
+    changed_u: &mut Option<Vec<u32>>,
+    changed_v: &mut Option<Vec<u32>>,
 ) {
+    let greedy = ctx.greedy_on();
     for peer in 0..c {
         if peer == id {
             continue;
         }
-        if let Some(msg) = ep.try_recv_latest(peer, TagKind::V, ASYNC_TAG) {
-            ctx.delays.record(msg.sent_iter, k64);
-            peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
-            write_block(v_full, &msg.payload, peer, m);
-            heard[peer] = Instant::now();
-        }
-        if let Some(msg) = ep.try_recv_latest(peer, TagKind::U, ASYNC_TAG) {
-            ctx.delays.record(msg.sent_iter, k64);
-            peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
-            write_block(u_full, &msg.payload, peer, m);
-            heard[peer] = Instant::now();
+        if greedy {
+            for msg in ep.try_recv_all(peer, TagKind::SparseV, ASYNC_TAG) {
+                ctx.delays.record(msg.sent_iter, k64);
+                peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
+                scatter_sparse(v_full, peer * m, &msg.indices, &msg.payload, changed_v);
+                heard[peer] = Instant::now();
+            }
+            for msg in ep.try_recv_all(peer, TagKind::SparseU, ASYNC_TAG) {
+                ctx.delays.record(msg.sent_iter, k64);
+                peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
+                scatter_sparse(u_full, peer * m, &msg.indices, &msg.payload, changed_u);
+                heard[peer] = Instant::now();
+            }
+        } else {
+            if let Some(msg) = ep.try_recv_latest(peer, TagKind::V, ASYNC_TAG) {
+                ctx.delays.record(msg.sent_iter, k64);
+                peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
+                write_block(v_full, &msg.payload, peer, m);
+                heard[peer] = Instant::now();
+            }
+            if let Some(msg) = ep.try_recv_latest(peer, TagKind::U, ASYNC_TAG) {
+                ctx.delays.record(msg.sent_iter, k64);
+                peers[peer].last_iter = peers[peer].last_iter.max(msg.sent_iter);
+                write_block(u_full, &msg.payload, peer, m);
+                heard[peer] = Instant::now();
+            }
         }
         if ep.try_recv_latest(peer, TagKind::Ctl, DONE_TAG).is_some() {
             peers[peer].done = true;

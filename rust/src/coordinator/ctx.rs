@@ -44,7 +44,15 @@ impl RunCtx<'_> {
     /// product that consumes the exchanged state, which would
     /// invalidate partials folded against the pre-command kernel.
     pub fn stream_on(&self) -> bool {
-        self.cfg.stream_exchange && !self.fleet_on()
+        self.cfg.stream_exchange && !self.fleet_on() && !self.greedy_on()
+    }
+
+    /// Whether the greedy top-k exchange is active (`--exchange
+    /// greedy`). Takes precedence over slice streaming: greedy frames
+    /// are sparse index+value sets, not the dense slices the streamed
+    /// accumulation folds.
+    pub fn greedy_on(&self) -> bool {
+        self.cfg.exchange == crate::config::ExchangeMode::Greedy
     }
 }
 

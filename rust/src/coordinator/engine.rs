@@ -43,7 +43,7 @@ use crate::net::{
     allgather, allgather_coded, allgather_resilient, bcast_coded, bcast_resilient, gather_coded,
     gather_resilient, Endpoint, Message, NodeLoss, Recovery, TagKind,
 };
-use crate::runtime::{BlockOp, StabStats, Target};
+use crate::runtime::{BlockOp, GreedyStats, StabStats, Target};
 use crate::sinkhorn::StopReason;
 use std::time::Duration;
 
@@ -540,11 +540,498 @@ pub fn lockstep_client(ctx: &RunCtx<'_>, id: usize, plan: &dyn LockstepPlan) -> 
             stop,
             final_err, // the AllGathered global error — identical on all nodes
             stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            greedy: None,
             lost_peers: lost_of(&alive),
         },
         slices: Some((u_op.state().clone(), v_op.state().clone())),
         trace,
     }
+}
+
+// --------------------------------------------------------------------------
+// The greedy lock-step client (`--exchange greedy`, Greenkhorn-style)
+// --------------------------------------------------------------------------
+
+/// The greedy lock-step client: each half-iteration damps only the
+/// top-k rows by marginal violation ([`crate::runtime::GreedySpec`])
+/// and ships exactly those coordinates as sparse index+value frames
+/// ([`TagKind::SparseU`]/[`TagKind::SparseV`]) instead of the dense
+/// slice — the federated Greenkhorn step. Operators maintain their
+/// block product incrementally from the declared changed-coordinate
+/// sets (own selections plus every peer coordinate received), so a
+/// half-iteration costs `O(k·n)` instead of `O(m·n)` between
+/// convergence checks. Convergence still rides the exact full-marginal
+/// AllGather of [`lockstep_client`], so greedy can never report a
+/// converged state the dense protocol would reject. `ring = true`
+/// relays the sparse frames around the neighbor ring (per-owner
+/// streams, loss fatal) instead of the flat exchange.
+pub fn greedy_lockstep_client(ctx: &RunCtx<'_>, id: usize, ring: bool) -> NodeOutcome {
+    let shard = &ctx.partition.shards[id];
+    let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
+    let w = ctx.cfg.local_iters.max(1);
+    let alpha = ctx.cfg.alpha;
+    let spec = ctx.cfg.greedy_topk;
+    let ep = ctx.net.endpoint(id);
+    let clock = Clock::new();
+    let mut timer = SplitTimer::new();
+
+    let one = ctx.domain.one();
+    let mut u_op = ctx
+        .backend
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_row,
+            Target::Vec(&shard.a),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
+        .expect("u-op");
+    let mut v_op = ctx
+        .backend
+        .block_op_in_stabilized(
+            ctx.domain,
+            &shard.k_col_t,
+            Target::Mat(&shard.b),
+            Mat::full(m, nh, one),
+            &ctx.stab,
+        )
+        .expect("v-op");
+    assert!(
+        u_op.supports_greedy() && v_op.supports_greedy(),
+        "--exchange greedy needs operators with greedy support (use --backend native)"
+    );
+
+    let mut u_full = Mat::full(n, nh, one);
+    let mut v_full = Mat::full(n, nh, one);
+
+    let fleet = ctx.fleet_on();
+    let tau = ctx.stab.absorb_threshold;
+    let resilient = ctx.cfg.faults.is_active();
+    let recovery = ctx.cfg.recovery;
+    let crash_at = ctx.cfg.faults.crash_at(id);
+    let mut alive = vec![true; ctx.cfg.clients];
+
+    // Incremental-maintenance bookkeeping. `changed_u` accumulates the
+    // global u-rows that moved since the *v-op's* last greedy call (own
+    // selections + scattered peer frames) and vice versa; `None` until
+    // the op's first call, which pays its one full refresh. `pending_*`
+    // hold this node's locally selected rows awaiting the next exchange
+    // (they accumulate across the `w − 1` non-communicating iterations;
+    // values are read from the current state at send time).
+    let mut changed_u: Option<Vec<u32>> = None;
+    let mut changed_v: Option<Vec<u32>> = None;
+    let mut pending_u: Vec<u32> = Vec::new();
+    let mut pending_v: Vec<u32> = Vec::new();
+    let mut gstats = GreedyStats::default();
+
+    let mut trace = Vec::new();
+    let mut stop = StopReason::MaxIters;
+    let mut final_err = f64::INFINITY;
+    let mut iterations = 0;
+    let mut round: u64 = 0;
+
+    'outer: for k in 1..=ctx.policy.max_iters {
+        if crash_at.is_some_and(|ci| k as u64 >= ci) {
+            stop = StopReason::Dead;
+            break 'outer;
+        }
+        iterations = k;
+        let communicate = k % w == 0;
+
+        let ou = timer.comp(|| u_op.greedy_update(&v_full, alpha, spec, changed_v.as_deref()));
+        changed_v = Some(Vec::new());
+        gstats.record(&ou, m);
+        copy_slice(&mut u_full, u_op.state(), shard.r0);
+        if let Some(ch) = changed_u.as_mut() {
+            let own: Vec<u32> = ou.rows.iter().map(|&r| shard.r0 as u32 + r).collect();
+            merge_rows(ch, &own);
+        }
+        merge_rows(&mut pending_u, &ou.rows);
+        if communicate {
+            let was_alive = count_alive(&alive);
+            if ring {
+                greedy_ring_exchange(
+                    &ep,
+                    TagKind::SparseU,
+                    &mut round,
+                    &mut u_full,
+                    m,
+                    &pending_u,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                    &mut changed_u,
+                );
+            } else {
+                greedy_allgather(
+                    &ep,
+                    TagKind::SparseU,
+                    &mut round,
+                    STREAM_U,
+                    &mut u_full,
+                    shard.r0,
+                    m,
+                    &pending_u,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                    &mut changed_u,
+                );
+            }
+            pending_u.clear();
+            if resilient
+                && count_alive(&alive) < was_alive
+                && (ring || recovery.on_node_loss == NodeLoss::Abort)
+            {
+                stop = StopReason::PeerLoss;
+                break 'outer;
+            }
+            if fleet {
+                round += 2;
+                fleet_sync(
+                    &ep,
+                    round,
+                    STREAM_GREF_V_OPS,
+                    &mut *v_op,
+                    &u_full,
+                    shard.r0,
+                    m,
+                    nh,
+                    tau,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                );
+            }
+        }
+
+        let ov = timer.comp(|| v_op.greedy_update(&u_full, alpha, spec, changed_u.as_deref()));
+        changed_u = Some(Vec::new());
+        gstats.record(&ov, m);
+        copy_slice(&mut v_full, v_op.state(), shard.r0);
+        if let Some(ch) = changed_v.as_mut() {
+            let own: Vec<u32> = ov.rows.iter().map(|&r| shard.r0 as u32 + r).collect();
+            merge_rows(ch, &own);
+        }
+        merge_rows(&mut pending_v, &ov.rows);
+        if communicate {
+            let was_alive = count_alive(&alive);
+            if ring {
+                greedy_ring_exchange(
+                    &ep,
+                    TagKind::SparseV,
+                    &mut round,
+                    &mut v_full,
+                    m,
+                    &pending_v,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                    &mut changed_v,
+                );
+            } else {
+                greedy_allgather(
+                    &ep,
+                    TagKind::SparseV,
+                    &mut round,
+                    STREAM_V,
+                    &mut v_full,
+                    shard.r0,
+                    m,
+                    &pending_v,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                    &mut changed_v,
+                );
+            }
+            pending_v.clear();
+            if resilient
+                && count_alive(&alive) < was_alive
+                && (ring || recovery.on_node_loss == NodeLoss::Abort)
+            {
+                stop = StopReason::PeerLoss;
+                break 'outer;
+            }
+            if fleet {
+                round += 2;
+                fleet_sync(
+                    &ep,
+                    round,
+                    STREAM_GREF_U_OPS,
+                    &mut *u_op,
+                    &v_full,
+                    shard.r0,
+                    m,
+                    nh,
+                    tau,
+                    k as u64,
+                    &mut timer,
+                    &mut alive,
+                    resilient.then_some(&recovery),
+                );
+            }
+        }
+
+        // Convergence: the exact full-marginal AllGather, identical to
+        // the dense lock-step client — the greedy schedule changes what
+        // moves per iteration, never what "converged" means.
+        if communicate && ctx.policy.check_at(k) {
+            let u_now = u_op.state().clone();
+            let local: f64 = timer
+                .comp(|| u_op.marginal(&v_full, &u_now))
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+            let timed_out = ctx.policy.timeout_secs > 0.0
+                && clock.now() > ctx.policy.timeout_secs;
+            round += 1;
+            let (err, any_timeout) = if resilient {
+                let was_alive = count_alive(&alive);
+                let parts = timer.comm(|| {
+                    allgather_resilient(
+                        &ep,
+                        TagKind::Ctl,
+                        round,
+                        None,
+                        &[local, timed_out as u8 as f64],
+                        k as u64,
+                        &mut alive,
+                        &recovery,
+                    )
+                });
+                if count_alive(&alive) < was_alive
+                    && (ring || recovery.on_node_loss == NodeLoss::Abort)
+                {
+                    stop = StopReason::PeerLoss;
+                    break 'outer;
+                }
+                (
+                    parts.iter().flatten().map(|p| p[0]).sum(),
+                    parts.iter().flatten().any(|p| p[1] > 0.0),
+                )
+            } else {
+                let parts = timer.comm(|| {
+                    allgather(
+                        &ep,
+                        TagKind::Ctl,
+                        round,
+                        &[local, timed_out as u8 as f64],
+                        k as u64,
+                    )
+                });
+                (
+                    parts.iter().map(|p| p[0]).sum(),
+                    parts.iter().any(|p| p[1] > 0.0),
+                )
+            };
+            final_err = err;
+            if ctx.traced {
+                trace.push(TracePoint { iter: k, secs: clock.now(), err });
+            }
+            if err < ctx.policy.threshold {
+                stop = StopReason::Converged;
+                break 'outer;
+            }
+            if any_timeout {
+                stop = StopReason::Timeout;
+                break 'outer;
+            }
+        }
+        timer.add_comp(ep.take_decode_secs());
+    }
+    timer.add_comp(ep.take_decode_secs());
+
+    NodeOutcome {
+        stats: NodeStats {
+            id,
+            role: "client",
+            timer,
+            iterations,
+            stop,
+            final_err,
+            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            greedy: Some(gstats),
+            lost_peers: lost_of(&alive),
+        },
+        slices: Some((u_op.state().clone(), v_op.state().clone())),
+        trace,
+    }
+}
+
+/// Flat sparse AllGather of one greedy half-iteration: send this node's
+/// selected coordinates of rows `[r0, r0+m)` to every live peer, then
+/// scatter each peer's frame into `full` as it arrives (dead peers'
+/// rows frozen). Every received row is recorded into the consuming
+/// operator's changed-set accumulator. With `rec = Some` the receive is
+/// strike-bounded, mirroring [`stream_exchange`]'s strikeout handling.
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_allgather(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: &mut u64,
+    stream_id: u64,
+    full: &mut Mat,
+    r0: usize,
+    m: usize,
+    rows: &[u32],
+    iter: u64,
+    timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
+    changed: &mut Option<Vec<u32>>,
+) {
+    *round += 1;
+    let me = ep.id();
+    let c = ep.nodes();
+    let nh = full.cols();
+    let (idx, vals) = pack_rows(full, r0, rows, nh);
+    timer.comm(|| {
+        for dst in 0..c {
+            if dst != me && alive[dst] {
+                ep.send_sparse_coded(
+                    dst,
+                    kind,
+                    *round,
+                    stream_id,
+                    idx.clone(),
+                    vals.clone(),
+                    m * nh,
+                    iter,
+                );
+            }
+        }
+    });
+    let mut pending = alive.to_vec();
+    pending[me] = false;
+    while pending.iter().any(|&p| p) {
+        let msg = match rec {
+            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, *round))),
+            Some(rec) => timer.comm(|| recv_any_bounded(ep, &pending, kind, *round, rec)),
+        };
+        let Some(msg) = msg else {
+            for (j, p) in pending.iter_mut().enumerate() {
+                if *p {
+                    alive[j] = false;
+                    *p = false;
+                }
+            }
+            break;
+        };
+        pending[msg.src] = false;
+        scatter_sparse(full, msg.src * m, &msg.indices, &msg.payload, changed);
+    }
+}
+
+/// Ring relay of the greedy sparse frames: at hop `h ∈ 1..c` every node
+/// forwards the frame it received `h−1` hops ago (hop 1 sends its own)
+/// on the originating owner's coded stream and scatters the one
+/// arriving from its left. Indices stay owner-slice-local, so any relay
+/// can scatter without re-indexing. Loss is fatal exactly as in the
+/// dense [`super::ring`] plan — every frame transits every link.
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_ring_exchange(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: &mut u64,
+    full: &mut Mat,
+    m: usize,
+    rows: &[u32],
+    iter: u64,
+    timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
+    changed: &mut Option<Vec<u32>>,
+) {
+    let me = ep.id();
+    let c = ep.nodes();
+    let nh = full.cols();
+    let right = (me + 1) % c;
+    let left = (me + c - 1) % c;
+    let (mut relay_idx, mut relay_val) = pack_rows(full, me * m, rows, nh);
+    for h in 1..c {
+        *round += 1;
+        let send_owner = (me + c - (h - 1)) % c;
+        let recv_owner = (me + c - h) % c;
+        timer.comm(|| {
+            ep.send_sparse_coded(
+                right,
+                kind,
+                *round,
+                send_owner as u64,
+                relay_idx.clone(),
+                relay_val.clone(),
+                m * nh,
+                iter,
+            )
+        });
+        let msg = match rec {
+            None => Some(timer.comm(|| ep.recv_blocking(left, kind, *round))),
+            Some(rec) => timer.comm(|| recv_bounded(ep, left, kind, *round, rec)),
+        };
+        let Some(msg) = msg else {
+            alive[left] = false;
+            return;
+        };
+        scatter_sparse(full, recv_owner * m, &msg.indices, &msg.payload, changed);
+        relay_idx = msg.indices;
+        relay_val = msg.payload;
+    }
+}
+
+/// Pack the selected local rows of this node's slice (rows `[r0,
+/// r0+m)` of `full`) into a sparse frame: indices are flat positions
+/// `row·N + h` within the slice (strictly increasing — `rows` is
+/// sorted), values the current absolute scalings.
+pub fn pack_rows(full: &Mat, r0: usize, rows: &[u32], nh: usize) -> (Vec<u32>, Vec<f64>) {
+    let mut idx = Vec::with_capacity(rows.len() * nh);
+    let mut vals = Vec::with_capacity(rows.len() * nh);
+    for &r in rows {
+        for h in 0..nh {
+            idx.push(r * nh as u32 + h as u32);
+            vals.push(full[(r0 + r as usize, h)]);
+        }
+    }
+    (idx, vals)
+}
+
+/// Scatter one received sparse frame into the sender's rows of `full`
+/// (slice origin row `row0`) and record the touched global rows into
+/// the consuming operator's changed-set accumulator (when live).
+pub fn scatter_sparse(
+    full: &mut Mat,
+    row0: usize,
+    indices: &[u32],
+    values: &[f64],
+    changed: &mut Option<Vec<u32>>,
+) {
+    let nh = full.cols();
+    let flat = full.as_mut_slice();
+    let mut rows: Vec<u32> = Vec::new();
+    for (&i, &v) in indices.iter().zip(values) {
+        flat[row0 * nh + i as usize] = v;
+        let row = row0 as u32 + i / nh as u32;
+        if rows.last() != Some(&row) {
+            rows.push(row);
+        }
+    }
+    if let Some(ch) = changed.as_mut() {
+        merge_rows(ch, &rows);
+    }
+}
+
+/// Merge a sorted row set into an accumulator, keeping it sorted
+/// ascending and deduplicated — the invariant every `changed` consumer
+/// (and the sparse frame codec) requires.
+pub fn merge_rows(dst: &mut Vec<u32>, src: &[u32]) {
+    dst.extend_from_slice(src);
+    dst.sort_unstable();
+    dst.dedup();
 }
 
 // --------------------------------------------------------------------------
@@ -810,6 +1297,42 @@ pub fn server_product(
         timer.comp(|| op.accum_matvec().clone())
     } else {
         timer.comp(|| op.matvec(full).clone())
+    }
+}
+
+/// Star-server gather of the clients' greedy sparse uplink frames: one
+/// frame per live client at `round`, each scattered into `full` as it
+/// arrives (dead clients' rows frozen at the last received value). With
+/// `rec = Some` the receive is strike-bounded and a strikeout marks
+/// every still-pending client dead, mirroring [`server_product`].
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_server_gather(
+    ep: &Endpoint,
+    kind: TagKind,
+    round: u64,
+    full: &mut Mat,
+    m: usize,
+    timer: &mut SplitTimer,
+    alive: &mut [bool],
+    rec: Option<&Recovery>,
+) {
+    let mut pending = alive.to_vec();
+    while pending.iter().any(|&p| p) {
+        let msg = match rec {
+            None => Some(timer.comm(|| ep.recv_any_blocking(&pending, kind, round))),
+            Some(rec) => timer.comm(|| recv_any_bounded(ep, &pending, kind, round, rec)),
+        };
+        let Some(msg) = msg else {
+            for (j, p) in pending.iter_mut().enumerate() {
+                if *p {
+                    alive[j] = false;
+                    *p = false;
+                }
+            }
+            break;
+        };
+        pending[msg.src] = false;
+        scatter_sparse(full, msg.src * m, &msg.indices, &msg.payload, &mut None);
     }
 }
 
@@ -1195,6 +1718,78 @@ impl<'a> ClientTargets<'a> {
                             alpha * (self.log_b[i * nh + h] - rv) + beta * v_jj[(i, h)];
                     }
                 }
+            }
+        }
+    }
+
+    /// Per-row violation mass `Σ_h |u∘q − a|_i` of the u-block against
+    /// a flat product chunk — the ranking the greedy star client
+    /// selects on (log states exponentiate `log u + q`, the log of the
+    /// marginal entry).
+    pub fn row_violations_u(&self, u_jj: &Mat, q: &[f64]) -> Vec<f64> {
+        let (m, nh) = (u_jj.rows(), u_jj.cols());
+        let mut viol = vec![0.0; m];
+        for (i, vi) in viol.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for h in 0..nh {
+                let entry = match self.domain {
+                    Domain::Linear => u_jj[(i, h)] * q[i * nh + h],
+                    Domain::Log => (u_jj[(i, h)] + q[i * nh + h]).exp(),
+                };
+                s += (entry - self.a[i]).abs();
+            }
+            *vi = s;
+        }
+        viol
+    }
+
+    /// Per-row violation mass of the v-block (per-histogram target b).
+    pub fn row_violations_v(&self, v_jj: &Mat, r: &[f64]) -> Vec<f64> {
+        let (m, nh) = (v_jj.rows(), v_jj.cols());
+        let mut viol = vec![0.0; m];
+        for (i, vi) in viol.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for h in 0..nh {
+                let entry = match self.domain {
+                    Domain::Linear => v_jj[(i, h)] * r[i * nh + h],
+                    Domain::Log => (v_jj[(i, h)] + r[i * nh + h]).exp(),
+                };
+                s += (entry - self.b[(i, h)]).abs();
+            }
+            *vi = s;
+        }
+        viol
+    }
+
+    /// [`ClientTargets::damped_u_update`] restricted to the selected
+    /// rows — the greedy half-step leaves every other scaling untouched.
+    pub fn damped_u_update_rows(&self, u_jj: &mut Mat, q: &[f64], alpha: f64, rows: &[u32]) {
+        let nh = u_jj.cols();
+        let beta = 1.0 - alpha;
+        for &ri in rows {
+            let i = ri as usize;
+            for h in 0..nh {
+                let qv = q[i * nh + h];
+                u_jj[(i, h)] = match self.domain {
+                    Domain::Linear => alpha * (self.a[i] / qv) + beta * u_jj[(i, h)],
+                    Domain::Log => alpha * (self.log_a[i] - qv) + beta * u_jj[(i, h)],
+                };
+            }
+        }
+    }
+
+    /// [`ClientTargets::damped_v_update`] restricted to the selected rows.
+    pub fn damped_v_update_rows(&self, v_jj: &mut Mat, r: &[f64], alpha: f64, rows: &[u32]) {
+        let nh = v_jj.cols();
+        let beta = 1.0 - alpha;
+        for &ri in rows {
+            let i = ri as usize;
+            for h in 0..nh {
+                let rv = r[i * nh + h];
+                v_jj[(i, h)] = match self.domain {
+                    Domain::Linear => alpha * (self.b[(i, h)] / rv) + beta * v_jj[(i, h)],
+                    Domain::Log => alpha * (self.log_b[i * nh + h] - rv) + beta * v_jj[(i, h)],
+                };
             }
         }
     }

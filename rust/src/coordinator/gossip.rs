@@ -36,15 +36,24 @@
 //! everywhere. Fleet absorption is not routed over gossip (there is no
 //! rank-0 probe path on a randomized graph); requesting both warns and
 //! runs with per-node emergency absorption only.
+//!
+//! **Greedy on gossip is compute-local.** `--exchange greedy` runs the
+//! operators' incremental top-k schedule — damping only the
+//! most-violated rows, with adopted owners' slices and own selected
+//! rows feeding the incremental refresh — but the wire payload stays
+//! the full stamped view: the merge rule adopts whole per-owner slices
+//! by stamp, which is incompatible with sparse coordinate frames (a
+//! partial slice under a newer stamp would clobber rows it does not
+//! carry). Greedy here buys update compute, not gossip bytes.
 
-use super::engine::{finish_consistent, write_block};
+use super::engine::{finish_consistent, merge_rows, write_block};
 use super::outcome::{NodeOutcome, NodeStats, TracePoint};
 use super::RunCtx;
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{Endpoint, TagKind};
 use crate::rng::splitmix64;
-use crate::runtime::{StabStats, Target};
+use crate::runtime::{GreedyStats, StabStats, Target};
 use crate::sinkhorn::StopReason;
 use std::time::Instant;
 
@@ -107,8 +116,19 @@ impl View {
 
     /// Merge a received stamped view slice-by-slice: adopt owner `j`'s
     /// rows iff the incoming stamp is strictly newer. Returns whether
-    /// anything merged fresh.
-    fn merge(&mut self, payload: &[f64], m: usize, c: usize, k64: u64, ctx: &RunCtx<'_>) -> bool {
+    /// anything merged fresh. Adopted owners' full row ranges are
+    /// merged into `changed` (when tracking is armed) — the adoption is
+    /// whole-slice, so the conservative changed set is every row of it.
+    #[allow(clippy::too_many_arguments)]
+    fn merge(
+        &mut self,
+        payload: &[f64],
+        m: usize,
+        c: usize,
+        k64: u64,
+        ctx: &RunCtx<'_>,
+        changed: &mut Option<Vec<u32>>,
+    ) -> bool {
         let nh = self.full.cols();
         if payload.len() != c + self.full.as_slice().len() {
             return false; // malformed frame — latest-wins traffic, just skip
@@ -124,7 +144,16 @@ impl View {
                 ctx.delays.record(stamp, k64);
                 let rows = &payload[c + j * m * nh..c + (j + 1) * m * nh];
                 write_block(&mut self.full, rows, j, m);
+                if let Some(ch) = changed.as_mut() {
+                    ch.extend((j * m) as u32..((j + 1) * m) as u32);
+                }
                 fresh = true;
+            }
+        }
+        if fresh {
+            if let Some(ch) = changed.as_mut() {
+                ch.sort_unstable();
+                ch.dedup();
             }
         }
         fresh
@@ -136,7 +165,6 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let (n, m, nh) = (ctx.problem.n, shard.m(), ctx.problem.hists());
     let c = ctx.cfg.clients;
     let alpha = ctx.cfg.alpha;
-    let bound = ctx.cfg.staleness_bound();
     let seed = ctx.cfg.seed;
     let ep = ctx.net.endpoint(id);
     let clock = Clock::new();
@@ -177,6 +205,22 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut done = vec![false; c];
     let mut dead = vec![false; c];
 
+    // Greedy bookkeeping (`--exchange greedy`, compute-local here — see
+    // the module docs): rows of each view that moved since the
+    // corresponding operator's last incremental refresh. `None` = the
+    // op has not run yet and pays one full refresh.
+    let greedy = ctx.greedy_on();
+    let spec = ctx.cfg.greedy_topk;
+    let mut gstats = GreedyStats::default();
+    let mut changed_u: Option<Vec<u32>> = None;
+    let mut changed_v: Option<Vec<u32>> = None;
+    if greedy {
+        assert!(
+            u_op.supports_greedy() && v_op.supports_greedy(),
+            "--exchange greedy needs operators with greedy support (use --backend native)"
+        );
+    }
+
     let resilient = ctx.cfg.faults.is_active();
     let recovery = ctx.cfg.recovery;
     let crash_at = ctx.cfg.faults.crash_at(id);
@@ -198,10 +242,30 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         let k64 = k as u64;
 
         // Drain every peer's freshest pushes and done votes, then
-        // enforce the per-slice staleness bound.
+        // enforce the per-slice staleness bound. Under
+        // `--srtt-staleness` the bound scales with the hottest measured
+        // incoming link — stamps relay over arbitrary paths, so the
+        // slowest link into this node is the per-owner worst case.
         timer.comm(|| {
+            let srtt_max = (0..c)
+                .filter(|&p| p != id)
+                .map(|p| ctx.net.link_rtt(p, id).srtt)
+                .fold(0.0, f64::max);
+            let bound = ctx.cfg.staleness_bound_for(srtt_max);
             let mut seen = ep.inbox_seq();
-            drain(&ep, ctx, id, c, m, k64, &mut u_view, &mut v_view, &mut done);
+            drain(
+                &ep,
+                ctx,
+                id,
+                c,
+                m,
+                k64,
+                &mut u_view,
+                &mut v_view,
+                &mut done,
+                &mut changed_u,
+                &mut changed_v,
+            );
             let mut spins: usize = 0;
             loop {
                 let lagging = (0..c).any(|j| {
@@ -256,7 +320,19 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 }
                 spins += 1;
                 seen = ep.wait_traffic(seen, std::time::Duration::from_millis(1));
-                drain(&ep, ctx, id, c, m, k64, &mut u_view, &mut v_view, &mut done);
+                drain(
+                    &ep,
+                    ctx,
+                    id,
+                    c,
+                    m,
+                    k64,
+                    &mut u_view,
+                    &mut v_view,
+                    &mut done,
+                    &mut changed_u,
+                    &mut changed_v,
+                );
             }
         });
 
@@ -278,7 +354,22 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // u_jj = α a_j/(K_j v) + (1−α) u_jj; stamp, then push the whole
         // stamped view to this iteration's seeded peer. One frame per
         // half-iteration — the peer relays our slice onward for us.
-        let u_jj = timer.comp(|| u_op.update(&v_view.full, alpha).clone());
+        // Greedy damps only the top-k violated rows, but the push and
+        // the stamp still cover the whole slice (the untouched rows are
+        // simply unchanged values).
+        let u_jj = if greedy {
+            let o =
+                timer.comp(|| u_op.greedy_update(&v_view.full, alpha, spec, changed_v.as_deref()));
+            changed_v = Some(Vec::new());
+            gstats.record(&o, m);
+            if let Some(ch) = changed_u.as_mut() {
+                let own: Vec<u32> = o.rows.iter().map(|&r| shard.r0 as u32 + r).collect();
+                merge_rows(ch, &own);
+            }
+            u_op.state().clone()
+        } else {
+            timer.comp(|| u_op.update(&v_view.full, alpha).clone())
+        };
         write_block(&mut u_view.full, u_jj.as_slice(), id, m);
         u_view.stamps[id] = k64;
         let peer = if c > 1 { gossip_peer(seed, k64, id, c) } else { id };
@@ -297,7 +388,19 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 
         // v_jj = α b_j/(K_jᵀ u) + (1−α) v_jj, stamped + pushed to the
         // same peer (one seeded choice per iteration).
-        let v_jj = timer.comp(|| v_op.update(&u_view.full, alpha).clone());
+        let v_jj = if greedy {
+            let o =
+                timer.comp(|| v_op.greedy_update(&u_view.full, alpha, spec, changed_u.as_deref()));
+            changed_u = Some(Vec::new());
+            gstats.record(&o, m);
+            if let Some(ch) = changed_v.as_mut() {
+                let own: Vec<u32> = o.rows.iter().map(|&r| shard.r0 as u32 + r).collect();
+                merge_rows(ch, &own);
+            }
+            v_op.state().clone()
+        } else {
+            timer.comp(|| v_op.update(&u_view.full, alpha).clone())
+        };
         write_block(&mut v_view.full, v_jj.as_slice(), id, m);
         v_view.stamps[id] = k64;
         if c > 1 && !dead[peer] {
@@ -360,6 +463,7 @@ fn client(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             stop,
             final_err,
             stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            greedy: if greedy { Some(gstats) } else { None },
             lost_peers: dead
                 .iter()
                 .enumerate()
@@ -385,16 +489,18 @@ fn drain(
     u_view: &mut View,
     v_view: &mut View,
     done: &mut [bool],
+    changed_u: &mut Option<Vec<u32>>,
+    changed_v: &mut Option<Vec<u32>>,
 ) {
     for peer in 0..c {
         if peer == id {
             continue;
         }
         if let Some(msg) = ep.try_recv_latest(peer, TagKind::U, GOSSIP_TAG) {
-            u_view.merge(&msg.payload, m, c, k64, ctx);
+            u_view.merge(&msg.payload, m, c, k64, ctx, changed_u);
         }
         if let Some(msg) = ep.try_recv_latest(peer, TagKind::V, GOSSIP_TAG) {
-            v_view.merge(&msg.payload, m, c, k64, ctx);
+            v_view.merge(&msg.payload, m, c, k64, ctx, changed_v);
         }
         if ep.try_recv_latest(peer, TagKind::Ctl, DONE_TAG).is_some() {
             done[peer] = true;

@@ -618,6 +618,129 @@ mod tests {
         assert_eq!(aggregate_stop(&out.node_stats), StopReason::Converged);
     }
 
+    /// `--exchange greedy` on every topology: the top-k violation
+    /// schedule converges to the full-exchange solution at equal ε.
+    /// Scalings may differ from the dense run by a per-histogram
+    /// constant (greedy walks a different iterate path), so agreement
+    /// is judged on the scaling-invariant entropic objective and the
+    /// full marginals, not on `u`/`v` directly. Every run must also
+    /// surface the merged selection telemetry.
+    #[test]
+    fn greedy_exchange_converges_on_every_topology() {
+        use crate::config::ExchangeMode;
+        let p = ProblemSpec::new(16).with_eps(0.5).build(13);
+        let central = solve_central(&p);
+        assert!(central.converged());
+        let obj_full = crate::sinkhorn::objective(&p, &central.state, 0);
+        for variant in [
+            Variant::SyncA2A,
+            Variant::SyncStar,
+            Variant::AsyncA2A,
+            Variant::AsyncStar,
+            Variant::Ring,
+            Variant::Gossip,
+        ] {
+            let mut c = cfg(variant, 4);
+            c.exchange = ExchangeMode::Greedy;
+            if matches!(variant, Variant::AsyncA2A | Variant::AsyncStar | Variant::Gossip) {
+                c.alpha = 0.5;
+            }
+            let pol = StopPolicy { threshold: 1e-9, max_iters: 20_000, ..Default::default() };
+            let out = run_federated(&p, &c, pol, false);
+            assert!(out.converged, "{} greedy: {:?}", variant.name(), out.stop);
+            let (ea, eb) = crate::sinkhorn::full_marginal_errors(&p, &out.state, 0);
+            assert!(ea < 1e-6 && eb < 1e-6, "{} greedy: ({ea}, {eb})", variant.name());
+            let obj = crate::sinkhorn::objective(&p, &out.state, 0);
+            assert!(
+                (obj - obj_full).abs() < 1e-6 * obj_full.abs().max(1.0),
+                "{} greedy objective {obj} vs full {obj_full}",
+                variant.name()
+            );
+            let g = out.greedy.as_ref().unwrap_or_else(|| {
+                panic!("{}: greedy run must report selection stats", variant.name())
+            });
+            assert!(g.calls > 0, "{}", variant.name());
+            assert!(
+                g.row_fraction() > 0.0 && g.row_fraction() <= 1.0,
+                "{}: row fraction {}",
+                variant.name(),
+                g.row_fraction()
+            );
+        }
+    }
+
+    /// Greedy on the decentralized ring vs the centralized solves (full
+    /// and Greenkhorn-style greedy schedule): all three land on the
+    /// same optimal plan, per histogram.
+    #[test]
+    fn greedy_ring_matches_centralized_solution() {
+        use crate::config::ExchangeMode;
+        let p = ProblemSpec::new(24).with_hists(2).with_eps(0.5).build(14);
+        let central = solve_central(&p);
+        assert!(central.converged());
+        let pol = StopPolicy { threshold: 1e-10, max_iters: 20_000, ..Default::default() };
+        let mut ring_cfg = cfg(Variant::Ring, 4);
+        ring_cfg.exchange = ExchangeMode::Greedy;
+        let ring = run_federated(&p, &ring_cfg, pol, false);
+        assert!(ring.converged, "greedy ring: {:?}", ring.stop);
+        let mut central_cfg = cfg(Variant::Centralized, 1);
+        central_cfg.exchange = ExchangeMode::Greedy;
+        let cg = run_federated(&p, &central_cfg, pol, false);
+        assert!(cg.converged, "centralized greedy: {:?}", cg.stop);
+        assert!(cg.greedy.is_some(), "centralized greedy reports selection stats");
+        for h in 0..p.hists() {
+            let reference = crate::sinkhorn::objective(&p, &central.state, h);
+            for (name, st) in [("ring", &ring.state), ("centralized-greedy", &cg.state)] {
+                let obj = crate::sinkhorn::objective(&p, st, h);
+                assert!(
+                    (obj - reference).abs() < 1e-6 * reference.abs().max(1.0),
+                    "{name} h={h}: objective {obj} vs full {reference}"
+                );
+            }
+        }
+    }
+
+    /// The acceptance bar of the greedy schedule: at equal ε and equal
+    /// tolerance, the sparse coordinate frames move strictly fewer
+    /// scaling-exchange bytes per iteration than the dense slices, for
+    /// c ∈ {4, 8} — and a greedy run moves *no* dense scaling frames.
+    #[test]
+    fn greedy_moves_fewer_scaling_bytes_per_iteration_than_full() {
+        use crate::config::ExchangeMode;
+        use crate::net::TagKind;
+        let p = ProblemSpec::new(32).with_hists(2).with_eps(0.5).build(15);
+        for clients in [4usize, 8] {
+            for variant in [Variant::SyncA2A, Variant::SyncStar] {
+                let base = run_federated(&p, &cfg(variant, clients), policy(), false);
+                assert!(base.converged, "{} c={clients} full", variant.name());
+                let mut gcfg = cfg(variant, clients);
+                gcfg.exchange = ExchangeMode::Greedy;
+                let pol =
+                    StopPolicy { threshold: 1e-11, max_iters: 20_000, ..Default::default() };
+                let out = run_federated(&p, &gcfg, pol, false);
+                assert!(out.converged, "{} c={clients} greedy: {:?}", variant.name(), out.stop);
+                let dense = base.traffic.bytes_of(TagKind::U) + base.traffic.bytes_of(TagKind::V);
+                let sparse = out.traffic.bytes_of(TagKind::SparseU)
+                    + out.traffic.bytes_of(TagKind::SparseV);
+                assert!(sparse > 0, "{} c={clients}: no sparse frames metered", variant.name());
+                assert_eq!(
+                    out.traffic.bytes_of(TagKind::U) + out.traffic.bytes_of(TagKind::V),
+                    0,
+                    "{} c={clients}: greedy run must not move dense scaling frames",
+                    variant.name()
+                );
+                let per_iter_full = dense as f64 / base.iterations.max(1) as f64;
+                let per_iter_greedy = sparse as f64 / out.iterations.max(1) as f64;
+                assert!(
+                    per_iter_greedy < per_iter_full,
+                    "{} c={clients}: greedy {per_iter_greedy:.1} B/iter vs full \
+                     {per_iter_full:.1} B/iter",
+                    variant.name()
+                );
+            }
+        }
+    }
+
     #[test]
     fn undamped_async_may_or_may_not_converge_but_never_panics() {
         // α = 1 async is the paper's unstable regime (§IV-C1) — we only

@@ -3,7 +3,7 @@
 
 use crate::metrics::SplitTimer;
 use crate::net::NetTraffic;
-use crate::runtime::StabStats;
+use crate::runtime::{GreedyStats, StabStats};
 use crate::sinkhorn::{State, StopReason};
 
 /// Per-node result.
@@ -20,6 +20,9 @@ pub struct NodeStats {
     /// stabilized schedule (linear domain, dense/sparse logsumexp, pure
     /// element-wise star clients).
     pub stab: Option<StabStats>,
+    /// Greedy top-k counters of this node's operators (`--exchange
+    /// greedy` only; `None` under the full dense exchange).
+    pub greedy: Option<GreedyStats>,
     /// Peers this node declared dead under the recovery policy (empty on
     /// lossless runs and for nodes that saw every peer respond).
     pub lost_peers: Vec<usize>,
@@ -63,6 +66,9 @@ pub struct FederatedOutcome {
     /// Absorption-hybrid counters merged across every node that ran the
     /// stabilized log schedule (`None` when none did).
     pub stab: Option<StabStats>,
+    /// Greedy top-k counters merged across every node (`None` when the
+    /// run used the full dense exchange).
+    pub greedy: Option<GreedyStats>,
     /// Per-[`crate::net::TagKind`] wire traffic (bytes priced on the
     /// encoded frames); default-empty for centralized runs, which have
     /// no fabric.

@@ -34,7 +34,14 @@ use crate::runtime::BlockOp;
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
     super::runner::spawn_nodes(ctx.cfg.clients, |id| {
-        engine::lockstep_client(ctx, id, &RingPlan)
+        if ctx.greedy_on() {
+            // Greedy top-k exchange: the same c−1 hop rotation relays
+            // sparse index+value frames instead of dense slices (loss
+            // stays fatal — every frame transits every link).
+            engine::greedy_lockstep_client(ctx, id, true)
+        } else {
+            engine::lockstep_client(ctx, id, &RingPlan)
+        }
     })
 }
 

@@ -3,11 +3,11 @@
 use super::ctx::RunCtx;
 use super::engine;
 use super::outcome::{aggregate_stop, FederatedOutcome, NodeOutcome, NodeStats, TracePoint};
-use crate::config::{DomainChoice, SolveConfig, Variant};
+use crate::config::{DomainChoice, ExchangeMode, SolveConfig, Variant};
 use crate::linalg::Domain;
 use crate::metrics::SplitTimer;
 use crate::net::{DelayTracker, LatencyModel, NetTraffic, SimNet};
-use crate::runtime::{make_backend, StabStats};
+use crate::runtime::{make_backend, GreedyStats, StabStats};
 use crate::sinkhorn::{CentralizedSolver, State, StopPolicy, StopReason};
 use crate::workload::{Partition, Problem};
 use std::sync::Arc;
@@ -53,7 +53,12 @@ pub fn run_federated(
 
     if cfg.variant == Variant::Centralized {
         let solver = CentralizedSolver::new(backend).with_stabilization(cfg.stab);
-        let out = if traced {
+        // `--exchange greedy` on the centralized baseline runs the
+        // Greenkhorn-style top-k schedule — the reference iterate
+        // sequence the federated greedy runs are compared against.
+        let out = if cfg.exchange == ExchangeMode::Greedy {
+            solver.solve_greedy_in(p, policy, cfg.alpha, domain, cfg.greedy_topk)
+        } else if traced {
             solver.solve_traced_in(p, policy, cfg.alpha, domain)
         } else {
             solver.solve_in(p, policy, cfg.alpha, domain)
@@ -72,6 +77,7 @@ pub fn run_federated(
                 stop: out.stop,
                 final_err: out.final_err,
                 stab: out.stab.clone(),
+                greedy: out.greedy.clone(),
                 lost_peers: Vec::new(),
             }],
             taus: Vec::new(),
@@ -81,6 +87,7 @@ pub fn run_federated(
                 .map(|h| TracePoint { iter: h.iter, secs: h.secs, err: h.err_a })
                 .collect(),
             stab: out.stab,
+            greedy: out.greedy,
             state: out.state,
             secs: t0.elapsed().as_secs_f64(),
             traffic: NetTraffic::default(),
@@ -138,6 +145,9 @@ pub fn run_federated(
     let stab = node_stats
         .iter()
         .fold(None, |acc, s| StabStats::merged(acc, s.stab.clone()));
+    let greedy = node_stats
+        .iter()
+        .fold(None, |acc, s| GreedyStats::merged(acc, s.greedy.clone()));
     let stop = aggregate_stop(&node_stats);
     // Node-loss bookkeeping: crashed nodes + every peer anyone struck
     // dead. Nonempty (or a PeerLoss abort) flags the outcome degraded.
@@ -169,6 +179,7 @@ pub fn run_federated(
         trace,
         secs: t0.elapsed().as_secs_f64(),
         stab,
+        greedy,
         traffic: net.traffic(),
         degraded,
         lost_nodes,

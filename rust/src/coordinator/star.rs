@@ -24,13 +24,22 @@
 //! the convergence errors stay linear-domain L1, so the stopping rule is
 //! identical across domains.
 //!
+//! Under `--exchange greedy` the clients damp only their top-k
+//! most-violated rows per half-iteration and uplink just those
+//! coordinates as sparse index+value frames (sync: reliable class,
+//! gathered by [`super::engine::greedy_server_gather`]; async:
+//! latest-wins with oldest-first drains). The downlink chunks stay
+//! dense — the kernel couples every product row to every input row
+//! regardless of how sparse the input moved — so greedy buys its
+//! savings on the uplink α–β term and the clients' update compute.
+//!
 //! The generic machinery — strike-bounded receives, the streamed-fold
 //! server product, element-wise client updates — lives in
 //! [`super::engine`]; this module keeps only the four star node loops.
 
 use super::engine::{
-    block_err, chunk_of, count_alive, lost_of, recv_chunk, server_product, write_block,
-    ClientTargets,
+    block_err, chunk_of, count_alive, greedy_server_gather, lost_of, pack_rows, recv_chunk,
+    scatter_sparse, server_product, write_block, ClientTargets,
 };
 use super::fleet;
 use super::outcome::{NodeOutcome, NodeStats, TracePoint};
@@ -38,7 +47,7 @@ use super::RunCtx;
 use crate::linalg::Mat;
 use crate::metrics::{Clock, SplitTimer};
 use crate::net::{bcast, bcast_resilient, gather, gather_resilient, NodeLoss, TagKind};
-use crate::runtime::{StabStats, Target};
+use crate::runtime::{GreedyStats, StabStats, Target};
 use crate::sinkhorn::StopReason;
 use std::time::Instant;
 
@@ -134,6 +143,12 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
     // waiting out the whole gather (inert under fleet — the local
     // decide/apply must see the product after the re-absorption).
     let stream = ctx.stream_on();
+    // Greedy top-k exchange: clients uplink only the coordinates their
+    // damped update touched, scattered into the resident full state.
+    // The downlink chunks stay dense — the product rows move wherever
+    // the kernel couples them regardless of how sparse the input moved,
+    // so greedy saves the uplink bytes and the clients' update compute.
+    let greedy = ctx.greedy_on();
 
     'outer: for k in 1..=ctx.policy.max_iters {
         // Crash injection fires at an iteration boundary: the server
@@ -151,21 +166,38 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
         // per-client sends rather than the equal-split collective.)
         round += 1;
         let was_alive = count_alive(&alive);
-        let q = server_product(
-            &ep,
-            TagKind::V,
-            round,
-            &mut *k_op,
-            &mut v_full,
-            m,
-            c,
-            stream,
-            fleet,
-            tau,
-            &mut timer,
-            &mut alive[..c],
-            resilient.then_some(&recovery),
-        );
+        let q = if greedy {
+            greedy_server_gather(
+                &ep,
+                TagKind::SparseV,
+                round,
+                &mut v_full,
+                m,
+                &mut timer,
+                &mut alive[..c],
+                resilient.then_some(&recovery),
+            );
+            if fleet {
+                timer.comp(|| fleet::local_decide_apply(&mut *k_op, &v_full, tau));
+            }
+            timer.comp(|| k_op.matvec(&v_full).clone())
+        } else {
+            server_product(
+                &ep,
+                TagKind::V,
+                round,
+                &mut *k_op,
+                &mut v_full,
+                m,
+                c,
+                stream,
+                fleet,
+                tau,
+                &mut timer,
+                &mut alive[..c],
+                resilient.then_some(&recovery),
+            )
+        };
         if resilient
             && count_alive(&alive) < was_alive
             && recovery.on_node_loss == NodeLoss::Abort
@@ -251,21 +283,38 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
         // Gather u slices → r = Kᵀ u → scatter the r row chunks.
         round += 1;
         let was_alive = count_alive(&alive);
-        let r = server_product(
-            &ep,
-            TagKind::U,
-            round,
-            &mut *kt_op,
-            &mut u_full,
-            m,
-            c,
-            stream,
-            fleet,
-            tau,
-            &mut timer,
-            &mut alive[..c],
-            resilient.then_some(&recovery),
-        );
+        let r = if greedy {
+            greedy_server_gather(
+                &ep,
+                TagKind::SparseU,
+                round,
+                &mut u_full,
+                m,
+                &mut timer,
+                &mut alive[..c],
+                resilient.then_some(&recovery),
+            );
+            if fleet {
+                timer.comp(|| fleet::local_decide_apply(&mut *kt_op, &u_full, tau));
+            }
+            timer.comp(|| kt_op.matvec(&u_full).clone())
+        } else {
+            server_product(
+                &ep,
+                TagKind::U,
+                round,
+                &mut *kt_op,
+                &mut u_full,
+                m,
+                c,
+                stream,
+                fleet,
+                tau,
+                &mut timer,
+                &mut alive[..c],
+                resilient.then_some(&recovery),
+            )
+        };
         if resilient
             && count_alive(&alive) < was_alive
             && recovery.on_node_loss == NodeLoss::Abort
@@ -296,6 +345,9 @@ fn server_sync(ctx: &RunCtx<'_>) -> NodeOutcome {
             stop,
             final_err,
             stab: StabStats::merged(k_op.stab_stats(), kt_op.stab_stats()),
+            // Row selection happens client-side; the server only
+            // scatters the frames, so it keeps no greedy counters.
+            greedy: None,
             lost_peers: lost_of(&alive),
         },
         slices: None,
@@ -325,6 +377,17 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut iterations = 0;
     let mut round: u64 = 0;
 
+    // Greedy top-k exchange (`--exchange greedy`): damp only the rows
+    // with the largest marginal violation and uplink just those
+    // coordinates. `pending_*` holds the rows damped since the last
+    // uplink — empty on the first frame, which is correct: the server's
+    // resident state starts at the same all-ones init as ours.
+    let greedy = ctx.greedy_on();
+    let spec = ctx.cfg.greedy_topk;
+    let mut gstats = GreedyStats::default();
+    let mut pending_u: Vec<u32> = Vec::new();
+    let mut pending_v: Vec<u32> = Vec::new();
+
     // Self-healing state (active fault plans only). A silent server is
     // always fatal — it owns the kernel, so there is nothing to exclude
     // down to: strike out → PeerLoss regardless of `--on-node-loss`.
@@ -343,11 +406,36 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         iterations = k;
         let k64 = k as u64;
 
-        // Send v slice; receive the q = (K v) chunk for this block.
+        // Send v slice (sparse coordinates under greedy); receive the
+        // q = (K v) chunk for this block.
         round += 1;
-        timer.comm(|| {
-            ep.send_coded(server, TagKind::V, round, STREAM_SLICE, v_jj.as_slice().to_vec(), k64)
-        });
+        if greedy {
+            let (idx, vals) = pack_rows(&v_jj, 0, &pending_v, nh);
+            timer.comm(|| {
+                ep.send_sparse_coded(
+                    server,
+                    TagKind::SparseV,
+                    round,
+                    STREAM_SLICE,
+                    idx,
+                    vals,
+                    m * nh,
+                    k64,
+                )
+            });
+            pending_v.clear();
+        } else {
+            timer.comm(|| {
+                ep.send_coded(
+                    server,
+                    TagKind::V,
+                    round,
+                    STREAM_SLICE,
+                    v_jj.as_slice().to_vec(),
+                    k64,
+                )
+            });
+        }
         round += 1;
         let Some(q) = timer.comm(|| recv_chunk(&ep, server, round, resilient, &recovery)) else {
             alive[server] = false;
@@ -417,21 +505,62 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         }
 
         // u_jj ← α a⊘q + (1−α) u_jj (division is a log-subtraction in
-        // the log domain).
-        timer.comp(|| targets.damped_u_update(&mut u_jj, &q, alpha));
+        // the log domain). Greedy damps only the top-k violated rows;
+        // the untouched rows stay put, so the next uplink skips them.
+        if greedy {
+            let viol = timer.comp(|| targets.row_violations_u(&u_jj, &q));
+            let o = spec.select(&viol);
+            timer.comp(|| targets.damped_u_update_rows(&mut u_jj, &q, alpha, &o.rows));
+            gstats.record(&o, m);
+            pending_u = o.rows;
+        } else {
+            timer.comp(|| targets.damped_u_update(&mut u_jj, &q, alpha));
+        }
 
         // Send u slice; receive r chunk; v_jj ← α b⊘r + (1−α) v_jj.
         round += 1;
-        timer.comm(|| {
-            ep.send_coded(server, TagKind::U, round, STREAM_SLICE, u_jj.as_slice().to_vec(), k64)
-        });
+        if greedy {
+            let (idx, vals) = pack_rows(&u_jj, 0, &pending_u, nh);
+            timer.comm(|| {
+                ep.send_sparse_coded(
+                    server,
+                    TagKind::SparseU,
+                    round,
+                    STREAM_SLICE,
+                    idx,
+                    vals,
+                    m * nh,
+                    k64,
+                )
+            });
+            pending_u.clear();
+        } else {
+            timer.comm(|| {
+                ep.send_coded(
+                    server,
+                    TagKind::U,
+                    round,
+                    STREAM_SLICE,
+                    u_jj.as_slice().to_vec(),
+                    k64,
+                )
+            });
+        }
         round += 1;
         let Some(r) = timer.comm(|| recv_chunk(&ep, server, round, resilient, &recovery)) else {
             alive[server] = false;
             stop = StopReason::PeerLoss;
             break;
         };
-        timer.comp(|| targets.damped_v_update(&mut v_jj, &r, alpha));
+        if greedy {
+            let viol = timer.comp(|| targets.row_violations_v(&v_jj, &r));
+            let o = spec.select(&viol);
+            timer.comp(|| targets.damped_v_update_rows(&mut v_jj, &r, alpha, &o.rows));
+            gstats.record(&o, m);
+            pending_v = o.rows;
+        } else {
+            timer.comp(|| targets.damped_v_update(&mut v_jj, &r, alpha));
+        }
         // Decode cost of the chunks received this iteration.
         timer.add_comp(ep.take_decode_secs());
     }
@@ -448,6 +577,7 @@ fn client_sync(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             // Star clients run element-wise updates only — the server
             // owns the kernel operators and their hybrid counters.
             stab: None,
+            greedy: if greedy { Some(gstats) } else { None },
             lost_peers: lost_of(&alive),
         },
         slices: Some((u_jj, v_jj)),
@@ -500,7 +630,7 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
     // of the slowest live client gets no fresh chunks until the gap
     // closes (the bounded-delay regime of Prop. 2; see async_a2a docs).
     let mut client_iter = vec![0u64; c];
-    let bound = ctx.cfg.staleness_bound();
+    let greedy = ctx.greedy_on();
     let mut iterations = 0;
 
     // Self-healing state (active fault plans only): a client that is
@@ -572,7 +702,22 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
         let mut fresh_v = false;
         timer.comm(|| {
             for j in 0..c {
-                if let Some(msg) = ep.try_recv_latest(j, TagKind::V, A_TAG) {
+                if greedy {
+                    // Sparse frames ride the latest-wins class like all
+                    // async scaling traffic, but each frame carries a
+                    // *different* coordinate set, so every delivered one
+                    // is drained oldest-first and scattered — only
+                    // frames superseded in flight are lost, and those
+                    // self-heal: values are absolute and the client's
+                    // violation-driven selection re-ships any row the
+                    // server's resident copy still has wrong.
+                    for msg in ep.try_recv_all(j, TagKind::SparseV, A_TAG) {
+                        scatter_sparse(&mut v_full, j * m, &msg.indices, &msg.payload, &mut None);
+                        client_iter[j] = client_iter[j].max(msg.sent_iter);
+                        last_heard[j] = Instant::now();
+                        fresh_v = true;
+                    }
+                } else if let Some(msg) = ep.try_recv_latest(j, TagKind::V, A_TAG) {
                     write_block(&mut v_full, &msg.payload, j, m);
                     client_iter[j] = client_iter[j].max(msg.sent_iter);
                     last_heard[j] = Instant::now();
@@ -585,6 +730,16 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             .map(|j| client_iter[j])
             .min()
             .unwrap_or(0);
+        // Staleness gate for this pass, optionally SRTT-scaled
+        // (`--srtt-staleness`): on a fabric whose measured round-trips
+        // run hot, the same iteration gap represents less real drift,
+        // so the bound widens with the slowest live uplink instead of
+        // throttling fast clients against a nominal-latency yardstick.
+        let srtt_max = (0..c)
+            .filter(|&j| !done[j])
+            .map(|j| ctx.net.link_rtt(j, c).srtt)
+            .fold(0.0, f64::max);
+        let bound = ctx.cfg.staleness_bound_for(srtt_max);
         // Products only run on fresh input (s == 1 primes the clients):
         // a stale pass would recompute — and, on the stabilized log
         // schedule, *count* — an identical product, burning compute and
@@ -615,7 +770,14 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
         let mut fresh_u = false;
         timer.comm(|| {
             for j in 0..c {
-                if let Some(msg) = ep.try_recv_latest(j, TagKind::U, A_TAG) {
+                if greedy {
+                    for msg in ep.try_recv_all(j, TagKind::SparseU, A_TAG) {
+                        scatter_sparse(&mut u_full, j * m, &msg.indices, &msg.payload, &mut None);
+                        client_iter[j] = client_iter[j].max(msg.sent_iter);
+                        last_heard[j] = Instant::now();
+                        fresh_u = true;
+                    }
+                } else if let Some(msg) = ep.try_recv_latest(j, TagKind::U, A_TAG) {
                     write_block(&mut u_full, &msg.payload, j, m);
                     client_iter[j] = client_iter[j].max(msg.sent_iter);
                     last_heard[j] = Instant::now();
@@ -673,6 +835,7 @@ fn server_async(ctx: &RunCtx<'_>) -> NodeOutcome {
             stop: if crashed { StopReason::Dead } else { StopReason::Converged },
             final_err: 0.0,
             stab: StabStats::merged(k_op.stab_stats(), kt_op.stab_stats()),
+            greedy: None, // selection is client-side (see server_sync)
             lost_peers: dead
                 .iter()
                 .enumerate()
@@ -699,8 +862,10 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
     let mut v_jj = Mat::full(m, nh, domain.one());
     let mut q_latest = vec![domain.one(); m * nh];
     let mut r_latest = vec![domain.one(); m * nh];
-    let bound = ctx.cfg.staleness_bound();
     let mut stale_rounds: u64 = 0;
+    let greedy = ctx.greedy_on();
+    let spec = ctx.cfg.greedy_topk;
+    let mut gstats = GreedyStats::default();
     let mut trace = Vec::new();
     let mut stop = StopReason::MaxIters;
     let mut final_err = f64::INFINITY;
@@ -716,7 +881,23 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
 
     // Prime the server with our initial v slice (latest-wins, like all
     // the async scaling traffic: a drop is superseded, never resent).
-    ep.send_coded_latest(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), 0);
+    // Under greedy the prime is an empty sparse frame — the server's
+    // resident state starts at the same all-ones init as ours, so there
+    // is nothing to ship yet and the frame just stamps the stream.
+    if greedy {
+        ep.send_sparse_coded_latest(
+            server,
+            TagKind::SparseV,
+            A_TAG,
+            STREAM_SLICE,
+            Vec::new(),
+            Vec::new(),
+            m * nh,
+            0,
+        );
+    } else {
+        ep.send_coded_latest(server, TagKind::V, A_TAG, STREAM_SLICE, v_jj.as_slice().to_vec(), 0);
+    }
 
     for k in 1..=ctx.policy.max_iters {
         // Crash injection: exit cleanly at an iteration boundary; the
@@ -731,6 +912,10 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
         // Freshest q chunk (server's K·v rows for this block); if we
         // have outrun the server beyond the staleness bound, wait for a
         // fresh chunk (bounded-delay assumption, see async_a2a docs).
+        // The bound is re-read per iteration: under `--srtt-staleness`
+        // it scales with the measured server round-trip, so a congested
+        // downlink widens the tolerated gap instead of stalling us.
+        let bound = ctx.cfg.staleness_bound_for(ctx.net.link_rtt(server, id).srtt);
         timer.comm(|| {
             let mut got = false;
             let wait_start = Instant::now();
@@ -769,17 +954,37 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             None
         };
 
-        timer.comp(|| targets.damped_u_update(&mut u_jj, &q_latest, alpha));
-        timer.comm(|| {
-            ep.send_coded_latest(
-                server,
-                TagKind::U,
-                A_TAG,
-                STREAM_SLICE,
-                u_jj.as_slice().to_vec(),
-                k64,
-            )
-        });
+        if greedy {
+            let viol = timer.comp(|| targets.row_violations_u(&u_jj, &q_latest));
+            let o = spec.select(&viol);
+            timer.comp(|| targets.damped_u_update_rows(&mut u_jj, &q_latest, alpha, &o.rows));
+            gstats.record(&o, m);
+            let (idx, vals) = pack_rows(&u_jj, 0, &o.rows, nh);
+            timer.comm(|| {
+                ep.send_sparse_coded_latest(
+                    server,
+                    TagKind::SparseU,
+                    A_TAG,
+                    STREAM_SLICE,
+                    idx,
+                    vals,
+                    m * nh,
+                    k64,
+                )
+            });
+        } else {
+            timer.comp(|| targets.damped_u_update(&mut u_jj, &q_latest, alpha));
+            timer.comm(|| {
+                ep.send_coded_latest(
+                    server,
+                    TagKind::U,
+                    A_TAG,
+                    STREAM_SLICE,
+                    u_jj.as_slice().to_vec(),
+                    k64,
+                )
+            });
+        }
 
         // Freshest r chunk, then the damped v update on it.
         timer.comm(|| {
@@ -788,17 +993,37 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
                 r_latest.copy_from_slice(&msg.payload);
             }
         });
-        timer.comp(|| targets.damped_v_update(&mut v_jj, &r_latest, alpha));
-        timer.comm(|| {
-            ep.send_coded_latest(
-                server,
-                TagKind::V,
-                A_TAG,
-                STREAM_SLICE,
-                v_jj.as_slice().to_vec(),
-                k64,
-            )
-        });
+        if greedy {
+            let viol = timer.comp(|| targets.row_violations_v(&v_jj, &r_latest));
+            let o = spec.select(&viol);
+            timer.comp(|| targets.damped_v_update_rows(&mut v_jj, &r_latest, alpha, &o.rows));
+            gstats.record(&o, m);
+            let (idx, vals) = pack_rows(&v_jj, 0, &o.rows, nh);
+            timer.comm(|| {
+                ep.send_sparse_coded_latest(
+                    server,
+                    TagKind::SparseV,
+                    A_TAG,
+                    STREAM_SLICE,
+                    idx,
+                    vals,
+                    m * nh,
+                    k64,
+                )
+            });
+        } else {
+            timer.comp(|| targets.damped_v_update(&mut v_jj, &r_latest, alpha));
+            timer.comm(|| {
+                ep.send_coded_latest(
+                    server,
+                    TagKind::V,
+                    A_TAG,
+                    STREAM_SLICE,
+                    v_jj.as_slice().to_vec(),
+                    k64,
+                )
+            });
+        }
         // Dequantizing the chunks consumed this round is receiver CPU work.
         timer.add_comp(ep.take_decode_secs());
 
@@ -835,6 +1060,7 @@ fn client_async(ctx: &RunCtx<'_>, id: usize) -> NodeOutcome {
             stop,
             final_err,
             stab: None, // element-wise only; the server owns the kernel ops
+            greedy: if greedy { Some(gstats) } else { None },
             lost_peers: if server_dead { vec![server] } else { Vec::new() },
         },
         slices: Some((u_jj, v_jj)),

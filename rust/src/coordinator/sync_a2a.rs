@@ -14,7 +14,9 @@
 //! The entire client loop lives in [`engine::lockstep_client`]; this
 //! protocol is the engine's [`engine::AllGatherPlan`] — the flat
 //! AllGather (streamed-fold, resilient, or exact lossless barrier) as
-//! the per-half-iteration exchange.
+//! the per-half-iteration exchange. Under `--exchange greedy` the nodes
+//! run [`engine::greedy_lockstep_client`] instead: top-k damped
+//! half-iterations with the flat sparse coordinate exchange.
 
 use super::engine;
 use super::outcome::NodeOutcome;
@@ -22,6 +24,10 @@ use super::RunCtx;
 
 pub fn run(ctx: &RunCtx<'_>) -> Vec<NodeOutcome> {
     super::runner::spawn_nodes(ctx.cfg.clients, |id| {
-        engine::lockstep_client(ctx, id, &engine::AllGatherPlan)
+        if ctx.greedy_on() {
+            engine::greedy_lockstep_client(ctx, id, false)
+        } else {
+            engine::lockstep_client(ctx, id, &engine::AllGatherPlan)
+        }
     })
 }

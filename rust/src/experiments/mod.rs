@@ -115,10 +115,13 @@ pub fn run_case_cfg(
 ) -> (RunRecord, FederatedOutcome) {
     let out = run_federated(p, cfg, policy, false);
     let slow = slowest_node(&out.node_stats);
-    let mut wire_bytes_by_kind = [0u64; 4];
-    for (slot, &(_, bytes, _)) in wire_bytes_by_kind.iter_mut().zip(&out.traffic.by_kind) {
-        *slot = bytes;
-    }
+    let wire_bytes_by_kind: Vec<(&'static str, u64)> =
+        out.traffic.by_kind.iter().map(|&(name, bytes, _)| (name, bytes)).collect();
+    let wire_bytes_per_iter = if out.iterations > 0 {
+        out.traffic.total_bytes as f64 / out.iterations as f64
+    } else {
+        0.0
+    };
     let rec = RunRecord {
         variant: cfg.variant.name().to_string(),
         topology: cfg.variant.topology_name().to_string(),
@@ -135,6 +138,10 @@ pub fn run_case_cfg(
         final_err: slow.final_err,
         wire_bytes: out.traffic.total_bytes,
         wire_bytes_by_kind,
+        exchange: cfg.exchange.name().to_string(),
+        wire_bytes_per_iter,
+        greedy_row_fraction: out.greedy.as_ref().map(|g| g.row_fraction()),
+        greedy_mass_fraction: out.greedy.as_ref().map(|g| g.mass_fraction()),
     };
     (rec, out)
 }
@@ -200,9 +207,13 @@ mod tests {
         assert_eq!(rec.topology, "a2a");
         assert!(rec.total_secs >= rec.comm_secs);
         // The wire counters ride along: a federated run moves U, V and
-        // Ctl bytes, and the per-kind split sums to the total.
+        // Ctl bytes, and the kind-generic split sums to the total.
         assert!(rec.wire_bytes > 0);
-        assert_eq!(rec.wire_bytes, rec.wire_bytes_by_kind.iter().sum::<u64>());
-        assert!(rec.wire_bytes_by_kind[0] > 0 && rec.wire_bytes_by_kind[1] > 0);
+        let kind_sum: u64 = rec.wire_bytes_by_kind.iter().map(|&(_, b)| b).sum();
+        assert_eq!(rec.wire_bytes, kind_sum);
+        assert!(rec.bytes_of("U") > 0 && rec.bytes_of("V") > 0);
+        assert_eq!(rec.exchange, "full");
+        assert!(rec.wire_bytes_per_iter > 0.0);
+        assert!(rec.greedy_row_fraction.is_none());
     }
 }

@@ -11,11 +11,12 @@
 //! α–β mixes for the same solve).
 
 use super::{build_problem, dump_json, run_case_cfg, Scale};
-use crate::config::{BackendKind, DomainChoice, SolveConfig, Variant};
+use crate::config::{BackendKind, DomainChoice, ExchangeMode, SolveConfig, Variant};
 use crate::jsonio::Json;
 use crate::linalg::Stabilization;
 use crate::metrics::{chi2_sf, chi2_stat, RunRecord};
 use crate::net::{LatencyModel, WireFormat};
+use crate::runtime::GreedySpec;
 use crate::sinkhorn::StopPolicy;
 use crate::workload::CondClass;
 
@@ -47,6 +48,14 @@ pub struct PerfGridArgs {
     pub stream_exchange: bool,
     /// DeltaF32 keyframe cadence (`--wire-keyframe-every`).
     pub wire_keyframe_every: usize,
+    /// Exchange schedule (`--exchange`): `full` dense slices, or
+    /// `greedy` top-k violation rows as sparse coordinate frames. Rows
+    /// report per-iteration exchanged bytes and the violation-mass
+    /// share the selected rows covered, so a greedy grid against a full
+    /// grid shows the α–β uplink saving directly.
+    pub exchange: ExchangeMode,
+    /// Greedy row budget (`--greedy-topk`), unused under `full`.
+    pub greedy_topk: GreedySpec,
     pub out: Option<String>,
 }
 
@@ -89,6 +98,8 @@ impl PerfGridArgs {
             wire: WireFormat::F64,
             stream_exchange: false,
             wire_keyframe_every: 0,
+            exchange: ExchangeMode::Full,
+            greedy_topk: GreedySpec::MassFraction(0.5),
             out: None,
         }
     }
@@ -108,20 +119,25 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
             if variant == Variant::Centralized { vec![1] } else { args.nodes.clone() };
         for &c in &node_grid {
             println!(
-                "\n## Perf grid: {} {}(topology={}, backend={}, wire={}{})",
+                "\n## Perf grid: {} {}(topology={}, backend={}, wire={}{}, exchange={})",
                 variant.name(),
                 if c > 1 { format!("{c}-node ") } else { String::new() },
                 variant.topology_name(),
                 args.backend.name(),
                 args.wire.name(),
-                if args.stream_exchange { ", streamed" } else { "" }
+                if args.stream_exchange { ", streamed" } else { "" },
+                args.exchange.name()
             );
             // Comm buckets: measured wall time, the total encoded bytes,
-            // the deterministic β seconds those bytes cost on this
-            // latency profile (jitter-free — the compression factor is
-            // read off directly), and the per-kind byte split.
+            // the per-iteration exchanged bytes (the α–β term the greedy
+            // schedule shrinks), the deterministic β seconds those bytes
+            // cost on this latency profile (jitter-free — the
+            // compression factor is read off directly), the per-kind
+            // byte split, and the violation-mass share the greedy rows
+            // covered (`-` on full-exchange runs).
             println!(
-                "{:>7} {:>5} {:>7} {:>8} {:>10} {:>10} {:>10} {:>7} {:>5} {:>12} {:>10} {:>26}",
+                "{:>7} {:>5} {:>7} {:>8} {:>10} {:>10} {:>10} {:>7} {:>5} {:>12} {:>10} \
+                 {:>10} {:>6} {:>30}",
                 "n",
                 "s",
                 "N",
@@ -132,8 +148,10 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
                 "iters",
                 "cvg",
                 "wire(B)",
+                "B/iter",
                 "beta(s)",
-                "U/V/Ctl/Gref(B)"
+                "viol%",
+                "by-kind(B)"
             );
             for &n in &args.sizes {
                 if n % c != 0 {
@@ -162,16 +180,24 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
                                 wire: args.wire,
                                 stream_exchange: args.stream_exchange,
                                 wire_keyframe_every: args.wire_keyframe_every,
+                                exchange: args.exchange,
+                                greedy_topk: args.greedy_topk,
                                 ..Default::default()
                             };
                             let (rec, _) = run_case_cfg(&p, &cfg, policy, (s, cond));
                             let kinds: Vec<String> = rec
                                 .wire_bytes_by_kind
                                 .iter()
-                                .map(|b| b.to_string())
+                                .filter(|&&(_, b)| b > 0)
+                                .map(|&(k, b)| format!("{k}={b}"))
                                 .collect();
+                            let viol = rec
+                                .greedy_mass_fraction
+                                .map(|f| format!("{:.1}", 100.0 * f))
+                                .unwrap_or_else(|| "-".to_string());
                             println!(
-                                "{:>7} {:>5} {:>7} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>7} {:>5} {:>12} {:>10.4} {:>26}",
+                                "{:>7} {:>5} {:>7} {:>8} {:>10.3} {:>10.3} {:>10.3} {:>7} \
+                                 {:>5} {:>12} {:>10.0} {:>10.4} {:>6} {:>30}",
                                 rec.n,
                                 rec.sparsity,
                                 rec.hists,
@@ -182,7 +208,9 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
                                 rec.iterations,
                                 if rec.converged { "yes" } else { "no" },
                                 rec.wire_bytes,
+                                rec.wire_bytes_per_iter,
                                 args.net.beta_secs(rec.wire_bytes),
+                                viol,
                                 kinds.join("/")
                             );
                             records.push(rec);
@@ -197,6 +225,7 @@ pub fn run(args: &PerfGridArgs) -> anyhow::Result<Json> {
         ("experiment", "perf-grid".into()),
         ("wire_format", args.wire.name().into()),
         ("stream_exchange", args.stream_exchange.into()),
+        ("exchange", args.exchange.name().into()),
         // β seconds = wire_bytes × this; emitting the coefficient keeps
         // the per-row β term recomputable from the document alone.
         ("beta_secs_per_byte", args.net.per_byte_secs.into()),

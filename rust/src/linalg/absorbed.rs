@@ -354,6 +354,104 @@ impl AbsorbedLogCsr {
         self.log_matmul_finish(lin, out);
     }
 
+    /// Incremental greedy fold: `lin += K̃[:, changed] · dex`, with
+    /// `changed` a strictly increasing set of *columns* of the absorbed
+    /// kernel and `dex` the packed `k×N` block of correction deltas
+    /// `exp(x_new − ḡ) − exp(x_old − ḡ)` at those columns. Folding the
+    /// delta into a previously computed full accumulator is exact (the
+    /// batched product is linear in `ex`), so a k-coordinate dual update
+    /// refreshes the product in `O(k·nnz_col)` instead of `O(nnz)` —
+    /// provided every updated scaling stays within the covered drift of
+    /// the reference (the caller's admission check, same contract as
+    /// [`AbsorbedLogCsr::log_matmul_fold`]). Delegates to
+    /// [`Csr::matmul_delta_cols`]: banded, bit-identical at any thread
+    /// count.
+    pub fn matmul_delta_cols(
+        &self,
+        changed: &[u32],
+        dex: &[f64],
+        nh: usize,
+        lin: &mut Mat,
+        threads: usize,
+    ) {
+        assert_eq!((lin.rows(), lin.cols()), (self.rows(), nh), "lin shape");
+        self.k.matmul_delta_cols(changed, dex, nh, lin.as_mut_slice(), threads);
+    }
+
+    /// Row-subset absorbed product for greedy row refresh: computes
+    /// `out[p,h] = log Σ_j exp(log K[rows_sel[p],j] + x[j,h])` for the
+    /// selected rows only (strictly increasing), `lin` and `out` packed
+    /// `k×N` caller scratch, `ex` full `n×N` scratch. Equivalent to the
+    /// matching rows of [`AbsorbedLogCsr::log_matmul_into`] — the
+    /// correction pass is identical and the selected-row reductions run
+    /// in the same stored order — at `O(n·N + Σ_{i∈sel} nnz_i)` cost.
+    #[allow(clippy::too_many_arguments)]
+    pub fn log_matmul_rows(
+        &self,
+        x_log: &Mat,
+        rows_sel: &[u32],
+        ex: &mut Mat,
+        lin: &mut Mat,
+        out: &mut Mat,
+        threads: usize,
+    ) {
+        let nh = x_log.cols();
+        let w = rows_sel.len();
+        assert_eq!(x_log.rows(), self.cols(), "inner dims");
+        assert_eq!((ex.rows(), ex.cols()), (self.cols(), nh), "ex scratch shape");
+        assert_eq!((lin.rows(), lin.cols()), (w, nh), "lin scratch shape");
+        assert_eq!((out.rows(), out.cols()), (w, nh), "out shape");
+        {
+            let xs = x_log.as_slice();
+            let es = ex.as_mut_slice();
+            for j in 0..self.cols() {
+                let gj = self.g[j];
+                for h in 0..nh {
+                    es[j * nh + h] = (xs[j * nh + h] - gj).exp();
+                }
+            }
+        }
+        self.k.matmul_select_rows(rows_sel, ex, lin.as_mut_slice(), threads);
+        let os = out.as_mut_slice();
+        let ls = lin.as_slice();
+        for (p, &ri) in rows_sel.iter().enumerate() {
+            let fi = self.f[ri as usize];
+            for h in 0..nh {
+                let lq = ls[p * nh + h];
+                os[p * nh + h] = if lq > 0.0 { fi + lq.ln() } else { f64::NEG_INFINITY };
+            }
+        }
+    }
+
+    /// Row shifts `f̄` (length m) — greedy callers that maintain the
+    /// linear accumulator incrementally finish selected rows themselves
+    /// as `f̄[i] + ln lin[i]`.
+    pub fn row_shifts(&self) -> &[f64] {
+        &self.f
+    }
+
+    /// Max drift of a scattered coordinate set against the absorbed
+    /// reference: `max_p max_h |vals[p,h] − ḡ[changed[p]]|`, with `vals`
+    /// the packed `k×N` block of updated log-scalings. The greedy
+    /// admission check — a sparse update whose coordinates all sit
+    /// within the covered drift can ride the incremental
+    /// [`AbsorbedLogCsr::matmul_delta_cols`] fold; anything beyond the
+    /// budget must take the re-absorption path.
+    pub fn coords_drift(&self, changed: &[u32], vals: &[f64], nh: usize) -> f64 {
+        assert_eq!(vals.len(), changed.len() * nh, "coords shape");
+        let mut worst: f64 = 0.0;
+        for (p, &j) in changed.iter().enumerate() {
+            let gj = self.g[j as usize];
+            for &x in &vals[p * nh..(p + 1) * nh] {
+                let d = (x - gj).abs();
+                if d > worst {
+                    worst = d;
+                }
+            }
+        }
+        worst
+    }
+
     /// Shift a (fully folded or batch-computed) linear accumulator back
     /// to the log domain: `out = f̄ + ln lin`. A zero accumulator entry
     /// only happens on a fully masked row (f̄ = −∞): kept entries are
@@ -703,6 +801,112 @@ mod tests {
             &dense_log_product(&a_log, &x_log).select_cols(&active),
             1e-11
         ));
+    }
+
+    #[test]
+    fn delta_fold_tracks_coordinate_updates_within_drift() {
+        // A k-coordinate dual update folded into the maintained linear
+        // accumulator must match the from-scratch batched product on
+        // every row ≤ 1e-12, and the fold must be bit-identical at
+        // thread counts {1, 2, 8} — the incremental-marginal contract
+        // the greedy solver leans on.
+        let mut rng = Rng::seed_from(61);
+        let (m, n, nh) = (31, 24, 3);
+        let a_log = Mat::rand_uniform(m, n, -200.0, 0.0, &mut rng);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &gref, -60.0, 8.0, 8.0);
+        assert!(k.nnz() < m * n, "the -200 range must truncate something");
+        let mut x0 = Mat::zeros(n, nh);
+        for j in 0..n {
+            for h in 0..nh {
+                x0[(j, h)] = gref[j] + rng.uniform_range(-4.0, 4.0);
+            }
+        }
+        let (mut ex, mut lin, mut _out0) = scratch(&k, nh);
+        k.log_matmul_into(&x0, &mut ex, &mut lin, &mut _out0, 1);
+        // Perturb a scattered coordinate subset, staying within drift.
+        let changed: Vec<u32> = (0..n as u32).filter(|_| rng.uniform() < 0.25).collect();
+        assert!(!changed.is_empty());
+        let mut x1 = x0.clone();
+        let mut dex = vec![0.0; changed.len() * nh];
+        let mut new_vals = vec![0.0; changed.len() * nh];
+        for (p, &j) in changed.iter().enumerate() {
+            for h in 0..nh {
+                x1[(j as usize, h)] = gref[j as usize] + rng.uniform_range(-4.0, 4.0);
+                new_vals[p * nh + h] = x1[(j as usize, h)];
+                dex[p * nh + h] = (x1[(j as usize, h)] - gref[j as usize]).exp()
+                    - (x0[(j as usize, h)] - gref[j as usize]).exp();
+            }
+        }
+        assert!(k.coords_drift(&changed, &new_vals, nh) <= k.covered(), "admitted");
+        let base = lin.clone();
+        k.matmul_delta_cols(&changed, &dex, nh, &mut lin, 1);
+        let mut got = Mat::zeros(m, nh);
+        k.log_matmul_finish(&lin, &mut got);
+        let (mut ex2, mut lin2, mut want) = scratch(&k, nh);
+        k.log_matmul_into(&x1, &mut ex2, &mut lin2, &mut want, 1);
+        for i in 0..m {
+            for h in 0..nh {
+                let (g, w) = (got[(i, h)], want[(i, h)]);
+                assert!((g - w).abs() <= 1e-12 * w.abs().max(1.0), "({i},{h}): {g} vs {w}");
+            }
+        }
+        for threads in [2usize, 8] {
+            let mut par = base.clone();
+            k.matmul_delta_cols(&changed, &dex, nh, &mut par, threads);
+            assert_eq!(
+                par.as_slice(),
+                lin.as_slice(),
+                "threads={threads} must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn row_subset_product_matches_the_batched_rows() {
+        // The packed row-subset absorbed product equals the matching
+        // rows of the batched product bit for bit, at {1, 2, 8} threads.
+        let mut rng = Rng::seed_from(62);
+        let (m, n, nh) = (29, 18, 4);
+        let a_log = Mat::rand_uniform(m, n, -200.0, 0.0, &mut rng);
+        let gref: Vec<f64> = (0..n).map(|_| rng.uniform_range(-2.0, 2.0)).collect();
+        let k = AbsorbedLogCsr::from_dense_log(&a_log, &gref, -60.0, 8.0, 8.0);
+        let mut x_log = Mat::zeros(n, nh);
+        for j in 0..n {
+            for h in 0..nh {
+                x_log[(j, h)] = gref[j] + rng.uniform_range(-6.0, 6.0);
+            }
+        }
+        let (mut ex, mut lin, mut full) = scratch(&k, nh);
+        k.log_matmul_into(&x_log, &mut ex, &mut lin, &mut full, 1);
+        let sel: Vec<u32> = (0..m as u32).filter(|_| rng.uniform() < 0.4).collect();
+        let w = sel.len();
+        let (mut ex_s, mut lin_s) = (Mat::zeros(n, nh), Mat::zeros(w, nh));
+        let mut got = Mat::zeros(w, nh);
+        k.log_matmul_rows(&x_log, &sel, &mut ex_s, &mut lin_s, &mut got, 1);
+        for (p, &ri) in sel.iter().enumerate() {
+            for h in 0..nh {
+                assert_eq!(
+                    got[(p, h)].to_bits(),
+                    full[(ri as usize, h)].to_bits(),
+                    "row {ri} h {h}"
+                );
+            }
+        }
+        for threads in [2usize, 8] {
+            let mut par = Mat::zeros(w, nh);
+            k.log_matmul_rows(&x_log, &sel, &mut ex_s, &mut lin_s, &mut par, threads);
+            assert_eq!(par.as_slice(), got.as_slice(), "threads={threads}");
+        }
+        // Row shifts line up with the finish identity on selected rows.
+        for (p, &ri) in sel.iter().enumerate() {
+            let fi = k.row_shifts()[ri as usize];
+            for h in 0..nh {
+                let lq = lin_s[(p, h)];
+                let expect = if lq > 0.0 { fi + lq.ln() } else { f64::NEG_INFINITY };
+                assert_eq!(got[(p, h)].to_bits(), expect.to_bits());
+            }
+        }
     }
 
     #[test]

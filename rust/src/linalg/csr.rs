@@ -130,6 +130,121 @@ impl Csr {
         super::dense::band_rows(out, self.rows, nh, threads, run);
     }
 
+    /// Incremental column-delta fold for greedy coordinate updates:
+    /// `out += self[:, changed] · dx`, where `changed` is a strictly
+    /// increasing set of column indices and `dx` is the packed `k×N`
+    /// delta block (`dx[p]` belongs to column `changed[p]`). A two-
+    /// pointer merge walks each row's (ascending) stored columns
+    /// against `changed`, so a k-column update costs
+    /// `O(Σ_i (min(nnz_i, k) + merge))` instead of a full `O(nnz)`
+    /// product — the compute half of the greedy exchange bargain.
+    /// Banded over rows like every other kernel: bit-identical at any
+    /// thread count.
+    pub fn matmul_delta_cols(
+        &self,
+        changed: &[u32],
+        dx: &[f64],
+        nh: usize,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        debug_assert!(changed.windows(2).all(|w| w[0] < w[1]), "changed ascending");
+        assert!(changed.last().is_none_or(|&c| (c as usize) < self.cols), "column range");
+        assert_eq!(dx.len(), changed.len() * nh, "delta shape");
+        assert_eq!(out.len(), self.rows * nh, "out shape");
+        if changed.is_empty() {
+            return;
+        }
+        let run = |band: &mut [f64], r0: usize, r1: usize| {
+            for i in r0..r1 {
+                let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                let cols = &self.col_idx[s..e];
+                // Skip straight to the changed window within this row.
+                let mut idx = s + cols.partition_point(|&c| c < changed[0]);
+                let mut p = 0usize;
+                let orow = &mut band[(i - r0) * nh..(i - r0 + 1) * nh];
+                while idx < e && p < changed.len() {
+                    let c = self.col_idx[idx];
+                    let t = changed[p];
+                    if c == t {
+                        let v = self.vals[idx];
+                        let drow = &dx[p * nh..(p + 1) * nh];
+                        for (o, &d) in orow.iter_mut().zip(drow) {
+                            *o += v * d;
+                        }
+                        idx += 1;
+                        p += 1;
+                    } else if c < t {
+                        idx += 1;
+                    } else {
+                        p += 1;
+                    }
+                }
+            }
+        };
+        super::dense::band_rows(out, self.rows, nh, threads, run);
+    }
+
+    /// Row-subset product: `out[p] = self[rows_sel[p], :] · x`, with
+    /// `out` the packed `k×N` block of the selected rows (strictly
+    /// increasing indices). Banded over the *subset index space*, so a
+    /// k-row product costs `O(Σ_{i∈sel} nnz_i)` and stays bit-identical
+    /// at every thread count (each selected row is summed serially by
+    /// exactly one band).
+    pub fn matmul_select_rows(
+        &self,
+        rows_sel: &[u32],
+        x: &Mat,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        debug_assert!(rows_sel.windows(2).all(|w| w[0] < w[1]), "rows ascending");
+        assert!(rows_sel.last().is_none_or(|&r| (r as usize) < self.rows), "row range");
+        assert_eq!(self.cols, x.rows(), "inner dims");
+        let nh = x.cols();
+        assert_eq!(out.len(), rows_sel.len() * nh, "out shape");
+        out.fill(0.0);
+        let xs = x.as_slice();
+        let run = |band: &mut [f64], s0: usize, s1: usize| {
+            for (p, &ri) in rows_sel[s0..s1].iter().enumerate() {
+                let i = ri as usize;
+                let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                if nh == 1 {
+                    // Same four-lane unrolled reduction as the full
+                    // GEMV path, so selected rows match it bit for bit.
+                    let len = e - s;
+                    let chunks = s + len / 4 * 4;
+                    let (mut s0a, mut s1a, mut s2a, mut s3a) = (0.0, 0.0, 0.0, 0.0);
+                    let mut idx = s;
+                    while idx < chunks {
+                        s0a += self.vals[idx] * xs[self.col_idx[idx] as usize];
+                        s1a += self.vals[idx + 1] * xs[self.col_idx[idx + 1] as usize];
+                        s2a += self.vals[idx + 2] * xs[self.col_idx[idx + 2] as usize];
+                        s3a += self.vals[idx + 3] * xs[self.col_idx[idx + 3] as usize];
+                        idx += 4;
+                    }
+                    let mut acc = 0.0;
+                    while idx < e {
+                        acc += self.vals[idx] * xs[self.col_idx[idx] as usize];
+                        idx += 1;
+                    }
+                    band[p] = acc + ((s0a + s1a) + (s2a + s3a));
+                    continue;
+                }
+                let orow = &mut band[p * nh..(p + 1) * nh];
+                for idx in s..e {
+                    let k = self.col_idx[idx] as usize;
+                    let v = self.vals[idx];
+                    let xrow = &xs[k * nh..(k + 1) * nh];
+                    for (o, &xv) in orow.iter_mut().zip(xrow) {
+                        *o += v * xv;
+                    }
+                }
+            }
+        };
+        super::dense::band_rows(out, rows_sel.len(), nh, threads, run);
+    }
+
     /// `out = self · x`, multi-RHS; `threads > 1` splits rows.
     pub fn matmul_into(&self, x: &Mat, out: &mut Mat, threads: usize) {
         assert_eq!(self.cols, x.rows());
@@ -267,6 +382,92 @@ mod tests {
             c.matmul_fold(c0, xr, slice, nh, &mut par, 3);
         }
         assert_eq!(par, got.as_slice().to_vec());
+    }
+
+    #[test]
+    fn delta_cols_fold_matches_the_recomputed_product() {
+        // Perturb a scattered column subset: folding the delta into the
+        // stale product must match recomputing from scratch ≤ 1e-12,
+        // and the fold must be bit-identical at thread counts {1, 2, 8}.
+        let mut rng = Rng::seed_from(41);
+        let (m, n, nh) = (53, 40, 3);
+        let mut d = Mat::rand_uniform(m, n, 0.1, 1.0, &mut rng);
+        for i in 0..m {
+            for j in 0..n {
+                if rng.uniform() < 0.6 {
+                    d[(i, j)] = 0.0;
+                }
+            }
+        }
+        let c = Csr::from_dense(&d, 0.0);
+        let x0 = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+        let changed: Vec<u32> = (0..n as u32).filter(|_| rng.uniform() < 0.2).collect();
+        assert!(!changed.is_empty());
+        let mut x1 = x0.clone();
+        let mut dx = vec![0.0; changed.len() * nh];
+        for (p, &j) in changed.iter().enumerate() {
+            for h in 0..nh {
+                let delta = rng.uniform_range(-0.5, 0.5);
+                x1[(j as usize, h)] += delta;
+                dx[p * nh + h] = x1[(j as usize, h)] - x0[(j as usize, h)];
+            }
+        }
+        let base = d.matmul(&x0, 1);
+        let want = d.matmul(&x1, 1);
+        let mut acc = base.as_slice().to_vec();
+        c.matmul_delta_cols(&changed, &dx, nh, &mut acc, 1);
+        for (i, (&g, &w)) in acc.iter().zip(want.as_slice()).enumerate() {
+            assert!((g - w).abs() <= 1e-12 * w.abs().max(1.0), "lane {i}: {g} vs {w}");
+        }
+        for threads in [2usize, 8] {
+            let mut par = base.as_slice().to_vec();
+            c.matmul_delta_cols(&changed, &dx, nh, &mut par, threads);
+            assert_eq!(par, acc, "threads={threads} must be bit-identical");
+        }
+        // Empty selection is a no-op.
+        let mut untouched = base.as_slice().to_vec();
+        c.matmul_delta_cols(&[], &[], nh, &mut untouched, 2);
+        assert_eq!(untouched, base.as_slice().to_vec());
+    }
+
+    #[test]
+    fn select_rows_is_bit_identical_to_the_full_product() {
+        // The packed row-subset product must equal the matching rows of
+        // the full product bit for bit (same stored-order reductions,
+        // same unrolled nh==1 lane) at thread counts {1, 2, 8}.
+        let mut rng = Rng::seed_from(42);
+        for nh in [1usize, 3] {
+            let (m, n) = (47, 31);
+            let mut d = Mat::rand_uniform(m, n, 0.1, 1.0, &mut rng);
+            for i in 0..m {
+                for j in 0..n {
+                    if rng.uniform() < 0.7 {
+                        d[(i, j)] = 0.0;
+                    }
+                }
+            }
+            let c = Csr::from_dense(&d, 0.0);
+            let x = Mat::rand_uniform(n, nh, 0.1, 1.0, &mut rng);
+            let mut full = Mat::zeros(m, nh);
+            c.matmul_into(&x, &mut full, 1);
+            let sel: Vec<u32> = (0..m as u32).filter(|_| rng.uniform() < 0.3).collect();
+            let mut got = vec![0.0; sel.len() * nh];
+            c.matmul_select_rows(&sel, &x, &mut got, 1);
+            for (p, &ri) in sel.iter().enumerate() {
+                for h in 0..nh {
+                    assert_eq!(
+                        got[p * nh + h],
+                        full[(ri as usize, h)],
+                        "nh={nh} row {ri} h {h}"
+                    );
+                }
+            }
+            for threads in [2usize, 8] {
+                let mut par = vec![0.0; sel.len() * nh];
+                c.matmul_select_rows(&sel, &x, &mut par, threads);
+                assert_eq!(par, got, "nh={nh} threads={threads}");
+            }
+        }
     }
 
     #[test]

@@ -247,6 +247,56 @@ impl Mat {
         band_rows(out, self.rows, nh, threads, run);
     }
 
+    /// Sparse column-delta fold: `out += self[:, changed] · dx` with
+    /// `changed` strictly increasing column indices and `dx` a packed
+    /// `changed.len()×N` flat block — the dense counterpart of
+    /// [`crate::linalg::Csr::matmul_delta_cols`]. Folding only the
+    /// coordinates that moved maintains a cached product in
+    /// O(rows·k·N) instead of a full GEMM.
+    pub fn matmul_delta_cols(
+        &self,
+        changed: &[u32],
+        dx: &[f64],
+        nh: usize,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        assert_eq!(dx.len(), changed.len() * nh, "delta shape");
+        assert_eq!(out.len(), self.rows * nh, "out shape");
+        assert!(
+            changed.windows(2).all(|w| w[0] < w[1]),
+            "changed columns must be strictly increasing"
+        );
+        assert!(
+            changed.last().is_none_or(|&c| (c as usize) < self.cols),
+            "changed column out of range"
+        );
+        if changed.is_empty() {
+            return;
+        }
+        let run = |band: &mut [f64], r0: usize, r1: usize| {
+            for i in r0..r1 {
+                let arow = &self.data[i * self.cols..(i + 1) * self.cols];
+                if nh == 1 {
+                    let mut acc = 0.0;
+                    for (&j, &x) in changed.iter().zip(dx) {
+                        acc += arow[j as usize] * x;
+                    }
+                    band[i - r0] += acc;
+                } else {
+                    let orow = &mut band[(i - r0) * nh..(i - r0 + 1) * nh];
+                    for (&j, dxrow) in changed.iter().zip(dx.chunks_exact(nh)) {
+                        let aij = arow[j as usize];
+                        for (o, &xv) in orow.iter_mut().zip(dxrow) {
+                            *o += aij * xv;
+                        }
+                    }
+                }
+            }
+        };
+        band_rows(out, self.rows, nh, threads, run);
+    }
+
     /// Streamed online-logsumexp fold over the same column range into
     /// running `(mx, sum)` accumulators (both `rows×N` flat, seeded to
     /// `(−∞, 0)`): after folding every slice, `mx + ln sum` equals the

@@ -171,6 +171,80 @@ impl LogCsr {
         super::dense::band_rows(out.as_mut_slice(), self.rows, nh, threads, run);
     }
 
+    /// Row-subset exact logsumexp for greedy coordinate refresh:
+    /// `out[p,h] = log Σ_k exp(vals[rows_sel[p],k] + x[k,h])` over the
+    /// stored entries of the selected rows only (strictly increasing
+    /// indices), `out` packed `k×N`. A k-row refresh costs
+    /// `O(Σ_{i∈sel} nnz_i)` instead of the full product. Banded over
+    /// the subset index space: each selected row is reduced serially by
+    /// exactly one band, so results are bit-identical at every thread
+    /// count — and bit-identical to the matching rows of
+    /// [`LogCsr::logsumexp_into`], which walks each row in the same
+    /// stored order.
+    pub fn logsumexp_rows(&self, rows_sel: &[u32], x: &Mat, out: &mut [f64], threads: usize) {
+        debug_assert!(rows_sel.windows(2).all(|w| w[0] < w[1]), "rows ascending");
+        assert!(rows_sel.last().is_none_or(|&r| (r as usize) < self.rows), "row range");
+        assert_eq!(self.cols, x.rows(), "inner dims");
+        let nh = x.cols();
+        assert_eq!(out.len(), rows_sel.len() * nh, "out shape");
+        let xs = x.as_slice();
+        let run = |band: &mut [f64], s0: usize, s1: usize| {
+            if nh == 1 {
+                for (p, &ri) in rows_sel[s0..s1].iter().enumerate() {
+                    let i = ri as usize;
+                    let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+                    let mut mx = f64::NEG_INFINITY;
+                    for idx in s..e {
+                        let v = self.vals[idx] + xs[self.col_idx[idx] as usize];
+                        if v > mx {
+                            mx = v;
+                        }
+                    }
+                    if mx == f64::NEG_INFINITY {
+                        band[p] = f64::NEG_INFINITY;
+                        continue;
+                    }
+                    let mut sum = 0.0;
+                    for idx in s..e {
+                        let v = self.vals[idx] + xs[self.col_idx[idx] as usize];
+                        sum += (v - mx).exp();
+                    }
+                    band[p] = mx + sum.ln();
+                }
+                return;
+            }
+            let mut mx = vec![f64::NEG_INFINITY; nh];
+            let mut sum = vec![0.0f64; nh];
+            for (p, &ri) in rows_sel[s0..s1].iter().enumerate() {
+                let i = ri as usize;
+                mx.fill(f64::NEG_INFINITY);
+                sum.fill(0.0);
+                for idx in self.row_ptr[i]..self.row_ptr[i + 1] {
+                    let aik = self.vals[idx];
+                    let k = self.col_idx[idx] as usize;
+                    let xrow = &xs[k * nh..(k + 1) * nh];
+                    for h in 0..nh {
+                        let v = aik + xrow[h];
+                        if v == f64::NEG_INFINITY {
+                            continue;
+                        }
+                        if v <= mx[h] {
+                            sum[h] += (v - mx[h]).exp();
+                        } else {
+                            sum[h] = sum[h] * (mx[h] - v).exp() + 1.0;
+                            mx[h] = v;
+                        }
+                    }
+                }
+                let orow = &mut band[p * nh..(p + 1) * nh];
+                for h in 0..nh {
+                    orow[h] = if sum[h] > 0.0 { mx[h] + sum[h].ln() } else { f64::NEG_INFINITY };
+                }
+            }
+        };
+        super::dense::band_rows(out, rows_sel.len(), nh, threads, run);
+    }
+
     /// Convenience allocating sparse log-domain product.
     pub fn logsumexp(&self, x: &Mat, threads: usize) -> Mat {
         let mut out = Mat::zeros(self.rows, x.cols());
@@ -301,6 +375,49 @@ mod tests {
                 } else {
                     assert!((got - w).abs() <= 1e-12 * w.abs().max(1.0), "({i},{h}): {got} vs {w}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn row_subset_logsumexp_is_bit_identical_to_the_full_product() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from(14);
+        for nh in [1usize, 2] {
+            let (m, n) = (45, 28);
+            let mut a = Mat::rand_uniform(m, n, -6.0, 0.0, &mut rng);
+            for i in 0..m {
+                for j in 0..n {
+                    if rng.uniform() < 0.5 {
+                        a[(i, j)] = f64::NEG_INFINITY;
+                    }
+                }
+            }
+            let lc = LogCsr::from_dense_log(&a, f64::NEG_INFINITY);
+            let x = Mat::rand_uniform(n, nh, -2.0, 2.0, &mut rng);
+            let full = lc.logsumexp(&x, 1);
+            let sel: Vec<u32> = (0..m as u32).filter(|_| rng.uniform() < 0.3).collect();
+            let mut got = vec![0.0; sel.len() * nh];
+            lc.logsumexp_rows(&sel, &x, &mut got, 1);
+            for (p, &ri) in sel.iter().enumerate() {
+                for h in 0..nh {
+                    // Same stored-order reduction → exact equality,
+                    // including −∞ on fully masked rows.
+                    assert_eq!(
+                        got[p * nh + h].to_bits(),
+                        full[(ri as usize, h)].to_bits(),
+                        "nh={nh} row {ri} h {h}"
+                    );
+                }
+            }
+            for threads in [2usize, 8] {
+                let mut par = vec![0.0; sel.len() * nh];
+                lc.logsumexp_rows(&sel, &x, &mut par, threads);
+                assert_eq!(
+                    par.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "nh={nh} threads={threads}"
+                );
             }
         }
     }

@@ -5,9 +5,10 @@
 //! the AOT artifacts (PJRT) or the native kernels.
 
 use fedsink::cli::{ArgSpec, CliError, Parsed};
-use fedsink::config::{BackendKind, DomainChoice, SolveConfig, Variant};
+use fedsink::config::{BackendKind, DomainChoice, ExchangeMode, SolveConfig, Variant};
 use fedsink::experiments::{self, Scale};
 use fedsink::net::{LatencyModel, WireFormat};
+use fedsink::runtime::GreedySpec;
 use fedsink::sinkhorn::StopPolicy;
 use fedsink::workload::CondClass;
 
@@ -178,6 +179,35 @@ fn wire_of(p: &Parsed) -> anyhow::Result<WireFormat> {
         .ok_or_else(|| anyhow::anyhow!("bad --wire-format (expected f64|f32|deltaf32)"))
 }
 
+/// The greedy-exchange flag trio (`--exchange` / `--greedy-topk` /
+/// `--srtt-staleness`) shared by the solve and perf-grid commands.
+fn exchange_spec(spec: ArgSpec) -> ArgSpec {
+    spec.opt(
+        "exchange",
+        "MODE",
+        "full",
+        "full|greedy: dense slice exchange every round, or top-k violation \
+         rows shipped as sparse index+value frames (Greenkhorn-style)",
+    )
+    .opt(
+        "greedy-topk",
+        "K",
+        "0.5",
+        "greedy row budget per half-iteration: an integer row count, or a \
+         fraction in (0,1) = share of the violation mass to cover",
+    )
+    .switch(
+        "srtt-staleness",
+        "scale async staleness bounds by the measured link SRTT (needs an \
+         active fault plan to prime the RTT estimator; no-op otherwise)",
+    )
+}
+
+fn exchange_of(p: &Parsed) -> anyhow::Result<ExchangeMode> {
+    ExchangeMode::parse(p.get("exchange").unwrap_or("full"))
+        .ok_or_else(|| anyhow::anyhow!("bad --exchange (expected full|greedy)"))
+}
+
 /// Chaos flag group (solve/robustness): a deterministic fault plan plus
 /// the recovery policy that answers it. All probabilities apply to every
 /// link; crash/straggler injections target one node.
@@ -328,6 +358,19 @@ fn check_domain_backend(domain: DomainChoice, backend: BackendKind) -> anyhow::R
     Ok(())
 }
 
+/// Greedy exchange leans on the native operators' incremental
+/// `greedy_update` path; the XLA artifacts only lower full-slice
+/// updates. Reject the combination before any threads spawn.
+fn check_exchange_backend(exchange: ExchangeMode, backend: BackendKind) -> anyhow::Result<()> {
+    if exchange == ExchangeMode::Greedy && backend == BackendKind::Xla {
+        anyhow::bail!(
+            "--exchange greedy needs the native backend's incremental operators \
+             (the AOT artifact grid has no top-k lowering); use --backend native"
+        );
+    }
+    Ok(())
+}
+
 fn out_of(p: &Parsed) -> Option<String> {
     p.get("out").map(|s| s.to_string())
 }
@@ -387,7 +430,7 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
                  reference dual and every node re-absorbs in lock-step",
             ),
     );
-    let spec = fault_spec(wire_spec(spec));
+    let spec = fault_spec(exchange_spec(wire_spec(spec)));
     let p = spec.parse("solve", args).map_err(anyhow::Error::new)?;
     let threads = threads_of(&p)?;
     let variant = match p.get("coordinator").filter(|s| !s.is_empty()) {
@@ -398,6 +441,8 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
     let domain = domain_of(&p)?;
     let backend = backend_of(&p)?;
     check_domain_backend(domain, backend)?;
+    let exchange = exchange_of(&p)?;
+    check_exchange_backend(exchange, backend)?;
     let cond = CondClass::parse(p.get("cond").unwrap())
         .ok_or_else(|| anyhow::anyhow!("bad --cond"))?;
     let n = p.get_usize("n")?;
@@ -427,6 +472,9 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
         compute_threads: threads,
         faults: faults_of(&p)?,
         recovery: recovery_of(&p)?,
+        exchange,
+        greedy_topk: GreedySpec::parse(p.get("greedy-topk").unwrap_or("0.5"))?,
+        srtt_staleness: p.has("srtt-staleness"),
         ..Default::default()
     };
     if cfg.stab.fleet_absorb {
@@ -491,6 +539,14 @@ fn cmd_solve(args: &[String]) -> anyhow::Result<()> {
                 st.rebuilds - st.fleet_rebuilds
             );
         }
+    }
+    if let Some(g) = &out.greedy {
+        println!(
+            "  greedy: {} updates, {:.1}% of rows selected covering {:.1}% of violation mass",
+            g.calls,
+            100.0 * g.row_fraction(),
+            100.0 * g.mass_fraction()
+        );
     }
     for s in &out.node_stats {
         println!(
@@ -856,7 +912,7 @@ fn cmd_delays(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
-    let spec = common_spec(wire_spec(
+    let spec = common_spec(exchange_spec(wire_spec(
         ArgSpec::new()
             .opt("variant", "V", "all", "all or one of the solver variants (incl. ring|gossip)")
             .opt("sizes", "LIST", "", "problem sizes (empty = scale default)")
@@ -867,7 +923,7 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
                 "fleet-compare",
                 "add the per-node vs fleet-synchronized absorption rebuild comparison",
             ),
-    ));
+    )));
     let p = spec.parse("perf-grid", args).map_err(anyhow::Error::new)?;
     threads_of(&p)?;
     let mut a = experiments::perf_grid::PerfGridArgs::at_scale(scale_of(&p));
@@ -879,6 +935,9 @@ fn cmd_perf_grid(args: &[String]) -> anyhow::Result<()> {
     a.wire = wire_of(&p)?;
     a.stream_exchange = p.has("stream-exchange");
     a.wire_keyframe_every = p.get_usize("wire-keyframe-every")?;
+    a.exchange = exchange_of(&p)?;
+    a.greedy_topk = GreedySpec::parse(p.get("greedy-topk").unwrap_or("0.5"))?;
+    check_exchange_backend(a.exchange, a.backend)?;
     for (flag, field) in [("sizes", 0usize), ("hists", 1), ("nodes", 2)] {
         if p.get(flag).map(|s| !s.is_empty()).unwrap_or(false) {
             let v: Vec<usize> = p.get_list(flag, |s| s.parse().ok())?;

@@ -37,33 +37,62 @@ pub struct RunRecord {
     /// Total fabric bytes of the run, priced on the *encoded* wire
     /// frames (0 for centralized runs, which have no fabric).
     pub wire_bytes: u64,
-    /// Per-kind byte split in `[U, V, Ctl, Gref]` order — the comm
-    /// buckets next to the wall-time buckets.
-    pub wire_bytes_by_kind: [u64; 4],
+    /// Per-kind `(name, bytes)` split in the fabric's counter order —
+    /// kind-generic, so a new [`crate::net::TagKind`] (e.g. the sparse
+    /// greedy frames) shows up here without a schema edit.
+    pub wire_bytes_by_kind: Vec<(&'static str, u64)>,
+    /// Exchange mode of the run (`full` or `greedy`).
+    pub exchange: String,
+    /// Fabric bytes per federated iteration — the α–β comm term the
+    /// greedy column of the perf grids is judged on (0 when the run
+    /// made no iterations or moved no bytes).
+    pub wire_bytes_per_iter: f64,
+    /// Greedy selection telemetry: fraction of candidate rows selected
+    /// and fraction of violation mass those rows covered, when the run
+    /// used the greedy schedule.
+    pub greedy_row_fraction: Option<f64>,
+    pub greedy_mass_fraction: Option<f64>,
 }
 
 impl RunRecord {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("variant", self.variant.as_str().into()),
-            ("topology", self.topology.as_str().into()),
-            ("n", self.n.into()),
-            ("clients", self.clients.into()),
-            ("nhist", self.hists.into()),
-            ("sparsity", self.sparsity.into()),
-            ("cond", self.cond.as_str().into()),
-            ("iterations", self.iterations.into()),
-            ("converged", self.converged.into()),
-            ("comp_secs", self.comp_secs.into()),
-            ("comm_secs", self.comm_secs.into()),
-            ("total_secs", self.total_secs.into()),
-            ("final_err", self.final_err.into()),
-            ("wire_bytes", self.wire_bytes.into()),
-            ("bytes_u", self.wire_bytes_by_kind[0].into()),
-            ("bytes_v", self.wire_bytes_by_kind[1].into()),
-            ("bytes_ctl", self.wire_bytes_by_kind[2].into()),
-            ("bytes_gref", self.wire_bytes_by_kind[3].into()),
-        ])
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("variant".into(), self.variant.as_str().into()),
+            ("topology".into(), self.topology.as_str().into()),
+            ("n".into(), self.n.into()),
+            ("clients".into(), self.clients.into()),
+            ("nhist".into(), self.hists.into()),
+            ("sparsity".into(), self.sparsity.into()),
+            ("cond".into(), self.cond.as_str().into()),
+            ("iterations".into(), self.iterations.into()),
+            ("converged".into(), self.converged.into()),
+            ("comp_secs".into(), self.comp_secs.into()),
+            ("comm_secs".into(), self.comm_secs.into()),
+            ("total_secs".into(), self.total_secs.into()),
+            ("final_err".into(), self.final_err.into()),
+            ("wire_bytes".into(), self.wire_bytes.into()),
+            ("exchange".into(), self.exchange.as_str().into()),
+            ("wire_bytes_per_iter".into(), self.wire_bytes_per_iter.into()),
+        ];
+        for &(name, bytes) in &self.wire_bytes_by_kind {
+            pairs.push((format!("bytes_{}", name.to_ascii_lowercase()), bytes.into()));
+        }
+        if let Some(f) = self.greedy_row_fraction {
+            pairs.push(("greedy_row_fraction".into(), f.into()));
+        }
+        if let Some(f) = self.greedy_mass_fraction {
+            pairs.push(("greedy_mass_fraction".into(), f.into()));
+        }
+        Json::Obj(pairs.into_iter().collect())
+    }
+
+    /// Bytes sent on one kind by name (0 for an unknown name).
+    pub fn bytes_of(&self, name: &str) -> u64 {
+        self.wire_bytes_by_kind
+            .iter()
+            .find(|&&(k, _)| k == name)
+            .map(|&(_, b)| b)
+            .unwrap_or(0)
     }
 }
 

@@ -10,8 +10,15 @@ use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Message kinds — the Sinkhorn protocol exchanges the two scaling
-/// vectors, small control payloads, and (fleet-absorption runs) the
-/// reference-dual synchronization traffic.
+/// vectors, small control payloads, (fleet-absorption runs) the
+/// reference-dual synchronization traffic, and (greedy exchange) the
+/// sparse coordinate-update frames.
+///
+/// The discriminant IS the counter index (`index()` = `self as usize`),
+/// and [`TagKind::ALL`]/[`TagKind::COUNT`] are the single derived kind
+/// list every per-kind counter array and traffic snapshot iterates — a
+/// new kind added here is automatically counted everywhere (pinned by
+/// `every_kind_has_a_counter`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TagKind {
     /// u-slice broadcast.
@@ -30,21 +37,31 @@ pub enum TagKind {
     /// `β`·bytes), so the protocol's extra per-iteration term shows up
     /// honestly in the comm-time buckets the paper reports.
     Gref,
+    /// Sparse u-coordinate updates (`--exchange greedy`): varint-packed
+    /// indices + coded values of the top-k violating rows only.
+    SparseU,
+    /// Sparse v-coordinate updates (greedy exchange).
+    SparseV,
 }
 
 impl TagKind {
-    /// Every kind, in counter order.
-    pub const ALL: [TagKind; 4] = [TagKind::U, TagKind::V, TagKind::Ctl, TagKind::Gref];
+    /// Number of declared kinds — sizes every per-kind counter array.
+    pub const COUNT: usize = 6;
 
-    /// Stable counter index.
+    /// Every kind, in counter order.
+    pub const ALL: [TagKind; Self::COUNT] = [
+        TagKind::U,
+        TagKind::V,
+        TagKind::Ctl,
+        TagKind::Gref,
+        TagKind::SparseU,
+        TagKind::SparseV,
+    ];
+
+    /// Stable counter index (the declaration-order discriminant).
     #[inline]
     pub fn index(self) -> usize {
-        match self {
-            TagKind::U => 0,
-            TagKind::V => 1,
-            TagKind::Ctl => 2,
-            TagKind::Gref => 3,
-        }
+        self as usize
     }
 
     pub fn name(self) -> &'static str {
@@ -53,6 +70,8 @@ impl TagKind {
             TagKind::V => "V",
             TagKind::Ctl => "Ctl",
             TagKind::Gref => "Gref",
+            TagKind::SparseU => "SpU",
+            TagKind::SparseV => "SpV",
         }
     }
 }
@@ -92,6 +111,10 @@ pub struct Message {
     /// stream decode in send order, so the sender-tracked reconstruction
     /// *is* the decode — see [`crate::net::wire`]).
     pub payload: Vec<f64>,
+    /// Sparse-frame coordinate carriage: `indices[i]` is the position
+    /// (within the sender's slice) that `payload[i]` updates. Empty for
+    /// dense frames — the receiver branches on `indices.is_empty()`.
+    pub indices: Vec<u32>,
     /// Sender's local iteration when it sent (staleness accounting).
     pub sent_iter: u64,
     /// Per-link send sequence number (0 when the fault layer is
@@ -158,11 +181,12 @@ pub struct SimNet {
     /// (`--wire-keyframe-every`; 0 = off). Handed to every
     /// [`StreamCodec`] the endpoints create.
     keyframe_every: usize,
-    /// Per-kind traffic counters. Atomics keep the accounting off the
-    /// send hot path's locks (the queue mutex is per-inbox; these are
-    /// global and would otherwise serialize every sender).
-    kind_bytes: [AtomicU64; 4],
-    kind_msgs: [AtomicU64; 4],
+    /// Per-kind traffic counters, one slot per [`TagKind::ALL`] entry.
+    /// Atomics keep the accounting off the send hot path's locks (the
+    /// queue mutex is per-inbox; these are global and would otherwise
+    /// serialize every sender).
+    kind_bytes: [AtomicU64; TagKind::COUNT],
+    kind_msgs: [AtomicU64; TagKind::COUNT],
     /// Fault-injection schedule (`FaultPlan::none()` = lossless fabric,
     /// the byte-for-byte pre-fault send/receive paths).
     faults: FaultPlan,
@@ -284,6 +308,7 @@ impl SimNet {
             id,
             rng: Mutex::new(Rng::seed_from(child_seed(self.seed, id as u64))),
             codecs: Mutex::new(HashMap::new()),
+            sparse_codecs: Mutex::new(HashMap::new()),
             release: Mutex::new(HashMap::new()),
             decode_nanos: AtomicU64::new(0),
         }
@@ -324,6 +349,11 @@ pub struct Endpoint {
     /// [`Endpoint::send_coded`] consults it; exact control sends bypass
     /// the map entirely.
     codecs: Mutex<HashMap<(usize, TagKind, u64), StreamCodec>>,
+    /// Sparse-frame codec state per `(dst, kind, stream)` — dense-length
+    /// reference/residual arrays plus the per-lane primed bitmap (see
+    /// [`wire::SparseStreamCodec`]). Separate map: a sparse stream's
+    /// state is indexed by dense coordinate, not frame position.
+    sparse_codecs: Mutex<HashMap<(usize, TagKind, u64), wire::SparseStreamCodec>>,
     /// In-order release clamp of the reliable streams under faults: the
     /// latest delivery deadline enqueued per `(dst, kind)`. A frame
     /// delayed by retransmit backoff holds every later frame of the
@@ -357,7 +387,7 @@ impl Endpoint {
     /// always arrives.
     pub fn send(&self, dst: usize, kind: TagKind, tag: u64, payload: Vec<f64>, sent_iter: u64) {
         let bytes = wire::f64_frame_bytes(payload.len());
-        self.enqueue(dst, kind, tag, bytes, payload, sent_iter, true);
+        self.enqueue(dst, kind, tag, bytes, payload, Vec::new(), sent_iter, true);
     }
 
     /// Send through the fabric's wire codec on stream `stream` (a stable
@@ -422,11 +452,85 @@ impl Endpoint {
             let enc = codec.encode(payload);
             (enc.bytes, enc.payload)
         };
-        let delivered = self.enqueue(dst, kind, tag, bytes, payload, sent_iter, reliable);
+        let delivered = self.enqueue(dst, kind, tag, bytes, payload, Vec::new(), sent_iter, reliable);
         if !delivered && self.net.wire != WireFormat::F64 {
             // The receiver never saw this frame: force the next frame
             // of the stream to an absolute keyframe.
             if let Some(codec) = self.codecs.lock().unwrap().get_mut(&(dst, kind, stream)) {
+                codec.rekey();
+            }
+        }
+    }
+
+    /// Sparse coordinate-update send (`--exchange greedy`): `values[i]`
+    /// is the new absolute value at slice position `indices[i]`
+    /// (sorted, strictly increasing, `< dense_len`). Values ride the
+    /// fabric's wire codec through a per-stream [`wire::SparseStreamCodec`]
+    /// (dense-coordinate error feedback); indices are priced as
+    /// delta-varint-packed bytes on top of the value frame. Reliable
+    /// under faults, like [`Endpoint::send_coded`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_sparse_coded(
+        &self,
+        dst: usize,
+        kind: TagKind,
+        tag: u64,
+        stream: u64,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+        dense_len: usize,
+        sent_iter: u64,
+    ) {
+        self.send_sparse_class(dst, kind, tag, stream, indices, values, dense_len, sent_iter, true);
+    }
+
+    /// [`Endpoint::send_sparse_coded`] on a latest-wins stream (async
+    /// greedy duals): a lost frame is never retransmitted — the codec
+    /// re-keys (clears its primed lanes) so the next delivered frame
+    /// carrying those coordinates is sent absolute.
+    #[allow(clippy::too_many_arguments)]
+    pub fn send_sparse_coded_latest(
+        &self,
+        dst: usize,
+        kind: TagKind,
+        tag: u64,
+        stream: u64,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+        dense_len: usize,
+        sent_iter: u64,
+    ) {
+        self.send_sparse_class(dst, kind, tag, stream, indices, values, dense_len, sent_iter, false);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn send_sparse_class(
+        &self,
+        dst: usize,
+        kind: TagKind,
+        tag: u64,
+        stream: u64,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+        dense_len: usize,
+        sent_iter: u64,
+        reliable: bool,
+    ) {
+        debug_assert!(indices.len() == values.len());
+        let index_bytes = wire::sparse_index_bytes(&indices);
+        let (bytes, payload) = if self.net.wire == WireFormat::F64 {
+            (index_bytes + wire::f64_frame_bytes(values.len()), values)
+        } else {
+            let mut codecs = self.sparse_codecs.lock().unwrap();
+            let codec = codecs.entry((dst, kind, stream)).or_insert_with(|| {
+                wire::SparseStreamCodec::with_keyframe_every(self.net.wire, self.net.keyframe_every)
+            });
+            let enc = codec.encode(&indices, values, dense_len);
+            (index_bytes + enc.bytes, enc.payload)
+        };
+        let delivered = self.enqueue(dst, kind, tag, bytes, payload, indices, sent_iter, reliable);
+        if !delivered && self.net.wire != WireFormat::F64 {
+            if let Some(codec) = self.sparse_codecs.lock().unwrap().get_mut(&(dst, kind, stream)) {
                 codec.rekey();
             }
         }
@@ -443,6 +547,7 @@ impl Endpoint {
         tag: u64,
         frame_bytes: usize,
         payload: Vec<f64>,
+        indices: Vec<u32>,
         sent_iter: u64,
         reliable: bool,
     ) -> bool {
@@ -537,6 +642,7 @@ impl Endpoint {
             kind,
             tag,
             payload,
+            indices,
             sent_iter,
             seq,
             decode_secs: self.net.latency.decode_secs(bytes),
@@ -808,6 +914,37 @@ impl Endpoint {
             }
         }
         best
+    }
+
+    /// Non-blocking drain of *every* deliverable `(src, kind, tag)`
+    /// match, returned in ascending `sent_iter` order — the sparse-frame
+    /// drain: unlike [`Endpoint::try_recv_latest`], older frames are not
+    /// discarded, because each sparse frame may carry coordinates absent
+    /// from later frames and the receiver scatters them all (oldest
+    /// first, so a re-selected coordinate lands on its newest value).
+    pub fn try_recv_all(&self, src: usize, kind: TagKind, tag: u64) -> Vec<Message> {
+        let sweep_dups = self.net.faults.is_active();
+        let inbox = &self.net.inboxes[self.id];
+        let mut queue = inbox.queue.lock().unwrap();
+        let now = Instant::now();
+        let mut out: Vec<Message> = Vec::new();
+        let mut i = 0;
+        while i < queue.len() {
+            let m = &queue[i];
+            if m.src == src && m.kind == kind && m.tag == tag && m.deliver_at <= now {
+                let m = queue.swap_remove(i);
+                self.account_decode(&m);
+                // Drop duplicate copies (same link sequence) like the
+                // blocking path — decode-priced, content discarded.
+                if !sweep_dups || !out.iter().any(|o: &Message| o.seq == m.seq) {
+                    out.push(m);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        out.sort_by_key(|m| m.sent_iter);
+        out
     }
 
     /// Count of queued (not necessarily deliverable) messages — tests.

@@ -97,6 +97,34 @@ mod tests {
     }
 
     #[test]
+    fn every_kind_has_a_counter() {
+        // The derived kind list is the single source of truth: every
+        // declared kind must have a unique in-range counter slot and
+        // appear in the traffic snapshot — a kind added to the enum but
+        // not to ALL/COUNT fails here at compile time or below.
+        assert_eq!(TagKind::ALL.len(), TagKind::COUNT);
+        let mut seen = vec![false; TagKind::COUNT];
+        for k in TagKind::ALL {
+            assert!(k.index() < TagKind::COUNT, "{} index out of range", k.name());
+            assert!(!seen[k.index()], "duplicate counter index for {}", k.name());
+            seen[k.index()] = true;
+        }
+        // One message per kind: each must land in its own bucket.
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 30));
+        let a = net.endpoint(0);
+        for k in TagKind::ALL {
+            a.send(1, k, 0, vec![1.0], 0);
+        }
+        let t = net.traffic();
+        assert_eq!(t.by_kind.len(), TagKind::COUNT);
+        for k in TagKind::ALL {
+            assert_eq!(net.kind_msgs(k), 1, "{} msg counter", k.name());
+            assert!(t.bytes_of(k) > 0, "{} byte counter", k.name());
+        }
+        assert_eq!(t.total_msgs, TagKind::COUNT as u64);
+    }
+
+    #[test]
     fn latency_deadline_is_enforced() {
         let lat = LatencyModel { base_secs: 0.02, ..LatencyModel::zero() };
         let net = Arc::new(SimNet::new(2, lat, 2));
@@ -169,6 +197,130 @@ mod tests {
         }
         assert!(totals[1] < totals[0] * 6 / 10, "f32 {} vs f64 {}", totals[1], totals[0]);
         assert_eq!(totals[1], totals[2], "deltaf32 frames are f32-width");
+    }
+
+    #[test]
+    fn sparse_frames_carry_indices_and_price_below_dense() {
+        // A 32-of-512 sparse frame must deliver its index vector intact
+        // and cost strictly fewer bytes than the dense slice on every
+        // wire format — that byte gap is the whole point of greedy
+        // exchange.
+        let dense_len = 512usize;
+        let indices: Vec<u32> = (0..32u32).map(|i| i * 16).collect();
+        let values: Vec<f64> = indices.iter().map(|&j| (j as f64 * 0.1).cos() * 5.0).collect();
+        for fmt in [WireFormat::F64, WireFormat::F32, WireFormat::DeltaF32] {
+            let net = Arc::new(SimNet::with_wire(2, LatencyModel::zero(), 31, fmt));
+            let a = net.endpoint(0);
+            let b = net.endpoint(1);
+            a.send_sparse_coded(
+                1,
+                TagKind::SparseU,
+                0,
+                0,
+                indices.clone(),
+                values.clone(),
+                dense_len,
+                0,
+            );
+            let m = b.recv_blocking(0, TagKind::SparseU, 0);
+            assert_eq!(m.indices, indices, "{}", fmt.name());
+            let err =
+                m.payload.iter().zip(&values).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+            assert!(err < 1e-5, "{}: err {err}", fmt.name());
+            let sparse_bytes = net.kind_bytes(TagKind::SparseU);
+            // Dense comparison frame on a fresh fabric of the same format.
+            let dense_net = Arc::new(SimNet::with_wire(2, LatencyModel::zero(), 31, fmt));
+            let da = dense_net.endpoint(0);
+            da.send_coded(1, TagKind::U, 0, 0, vec![1.0; dense_len], 0);
+            let dense_bytes = dense_net.kind_bytes(TagKind::U);
+            assert!(
+                sparse_bytes < dense_bytes,
+                "{}: sparse {sparse_bytes} !< dense {dense_bytes}",
+                fmt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn try_recv_all_returns_every_frame_oldest_first() {
+        // Unlike try_recv_latest, the sparse drain must hand back every
+        // deliverable frame (older frames carry coordinates newer ones
+        // may not), ordered by sent_iter so re-selected coordinates
+        // scatter to their newest value last.
+        let net = Arc::new(SimNet::new(2, LatencyModel::zero(), 32));
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send_sparse_coded(1, TagKind::SparseV, 4, 0, vec![0, 3], vec![1.0, 2.0], 8, 10);
+        a.send_sparse_coded(1, TagKind::SparseV, 4, 0, vec![5], vec![3.0], 8, 11);
+        a.send_sparse_coded(1, TagKind::SparseV, 4, 0, vec![0, 7], vec![4.0, 5.0], 8, 12);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let all = b.try_recv_all(0, TagKind::SparseV, 4);
+        assert_eq!(all.len(), 3);
+        assert_eq!(
+            all.iter().map(|m| m.sent_iter).collect::<Vec<_>>(),
+            vec![10, 11, 12]
+        );
+        assert_eq!(all[1].indices, vec![5]);
+        assert_eq!(all[1].payload, vec![3.0]);
+        // Drained.
+        assert!(b.try_recv_all(0, TagKind::SparseV, 4).is_empty());
+        // Scatter oldest-first leaves coordinate 0 at its newest value.
+        let mut slice = [0.0f64; 8];
+        for m in &all {
+            for (k, &j) in m.indices.iter().enumerate() {
+                slice[j as usize] = m.payload[k];
+            }
+        }
+        assert_eq!(slice, [4.0, 0.0, 0.0, 2.0, 0.0, 3.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn lost_sparse_latest_wins_frames_reprime_their_lanes() {
+        use faults::{FaultPlan, LinkFault};
+        // Lossy latest-wins sparse DeltaF32 stream: every frame that IS
+        // delivered must reconstruct near-exactly even though dropped
+        // frames advanced the sender's reference — the sparse codec
+        // re-keys on loss, so survivors are absolute.
+        let plan = FaultPlan {
+            seed: 33,
+            default_link: LinkFault { drop_prob: 0.4, ..LinkFault::none() },
+            ..FaultPlan::none()
+        };
+        let net = Arc::new(
+            SimNet::with_wire(2, LatencyModel::zero(), 33, WireFormat::DeltaF32)
+                .with_faults(plan),
+        );
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let indices: Vec<u32> = (0..16u32).collect();
+        let mut delivered = 0;
+        for round in 0..60u64 {
+            let v: Vec<f64> =
+                indices.iter().map(|&j| (j as f64 * 0.4).sin() + round as f64 * 0.9).collect();
+            a.send_sparse_coded_latest(
+                1,
+                TagKind::SparseU,
+                6,
+                0,
+                indices.clone(),
+                v.clone(),
+                64,
+                round,
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            for m in b.try_recv_all(0, TagKind::SparseU, 6) {
+                delivered += 1;
+                let sent: Vec<f64> = indices
+                    .iter()
+                    .map(|&j| (j as f64 * 0.4).sin() + m.sent_iter as f64 * 0.9)
+                    .collect();
+                let err =
+                    m.payload.iter().zip(&sent).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+                assert!(err < 1e-3, "iter {}: err {err}", m.sent_iter);
+            }
+        }
+        assert!(delivered > 10, "only {delivered}/60 delivered");
+        assert!(net.traffic().drops > 0);
     }
 
     #[test]

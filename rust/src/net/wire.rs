@@ -105,6 +105,27 @@ pub struct Encoded {
     pub payload: Vec<f64>,
 }
 
+/// LEB128 varint width of one value.
+fn varint_bytes(v: u64) -> usize {
+    (64 - v.max(1).leading_zeros() as usize).div_ceil(7)
+}
+
+/// Encoded size of a sparse frame's index block: a varint count plus
+/// delta-varint-packed sorted indices (first absolute, then gaps).
+/// Consecutive or clustered top-k rows pack near 1 byte per index —
+/// the greedy exchange's index overhead rides this, priced by the same
+/// α–β latency model as the value lanes.
+pub fn sparse_index_bytes(indices: &[u32]) -> usize {
+    let mut bytes = varint_bytes(indices.len() as u64);
+    let mut prev = 0u64;
+    for (i, &idx) in indices.iter().enumerate() {
+        let gap = if i == 0 { idx as u64 } else { (idx as u64).saturating_sub(prev) };
+        bytes += varint_bytes(gap);
+        prev = idx as u64;
+    }
+    bytes
+}
+
 /// Sender-held per-stream codec state. One instance per
 /// `(destination, kind, stream)` — streams with unrelated content must
 /// not share a codec, or DeltaF32 would difference across them.
@@ -233,6 +254,152 @@ impl StreamCodec {
         }
         // `delta` now holds the new reconstruction.
         Encoded { bytes: f32_frame_bytes(n), payload: delta }
+    }
+}
+
+/// Sender-held codec state of one **sparse** coordinate-update stream
+/// (`--exchange greedy`): reference/residual/primed arrays indexed by
+/// *dense coordinate*, not frame position, because consecutive frames
+/// select different coordinate subsets.
+///
+/// Every frame delivers **absolute** reconstructions at its selected
+/// coordinates (even DeltaF32 frames: the payload is the updated
+/// reference, not the delta), so a receiver just scatters — and a
+/// superseded latest-wins frame that carried coordinates the newest
+/// frame lacks leaves only a *stale* value behind, never a diverging
+/// one. Error feedback is per-coordinate: the residual of coordinate
+/// `j`'s last encoding is folded in the next time `j` is selected.
+///
+/// DeltaF32 frames difference against the per-coordinate reference;
+/// a frame containing any unprimed lane (first selection, post-rekey,
+/// keyframe cadence) is sent absolute (F32-coded) and primes its
+/// lanes. [`SparseStreamCodec::rekey`] clears every primed bit and the
+/// residuals, so after a latest-wins loss the next frame touching any
+/// coordinate re-sends it absolutely — the receiver snaps to the
+/// correct value and reconstruction never diverges.
+#[derive(Debug)]
+pub struct SparseStreamCodec {
+    format: WireFormat,
+    /// Forced-keyframe cadence (`--wire-keyframe-every`): every `K`-th
+    /// frame clears the primed bitmap, so each coordinate's next
+    /// selection is absolute. 0 = off.
+    keyframe_every: usize,
+    frames: u64,
+    /// Receiver's reconstruction per dense coordinate (valid where
+    /// `primed`).
+    reference: Vec<f64>,
+    /// Per-coordinate error-feedback residual.
+    residual: Vec<f64>,
+    /// Whether the receiver holds a reconstruction of each coordinate.
+    primed: Vec<bool>,
+}
+
+impl SparseStreamCodec {
+    pub fn new(format: WireFormat) -> Self {
+        Self::with_keyframe_every(format, 0)
+    }
+
+    pub fn with_keyframe_every(format: WireFormat, keyframe_every: usize) -> Self {
+        Self {
+            format,
+            keyframe_every,
+            frames: 0,
+            reference: Vec::new(),
+            residual: Vec::new(),
+            primed: Vec::new(),
+        }
+    }
+
+    /// Latest-wins loss: the receiver never saw the lost frame, so drop
+    /// every primed bit (next selection of any coordinate is absolute)
+    /// and the residuals (they track reconstructions the receiver never
+    /// confirmed).
+    pub fn rekey(&mut self) {
+        self.primed.iter_mut().for_each(|p| *p = false);
+        self.residual.iter_mut().for_each(|r| *r = 0.0);
+    }
+
+    /// Encode one sparse frame: `values[i]` is the new value at dense
+    /// coordinate `indices[i]` of a `dense_len`-wide slice. Returns the
+    /// value-lane frame size (the caller adds
+    /// [`sparse_index_bytes`]) and the receiver-side reconstruction.
+    pub fn encode(&mut self, indices: &[u32], values: Vec<f64>, dense_len: usize) -> Encoded {
+        debug_assert_eq!(indices.len(), values.len());
+        if self.reference.len() != dense_len {
+            // First frame or slice-shape change: full re-prime.
+            self.reference = vec![0.0; dense_len];
+            self.residual = vec![0.0; dense_len];
+            self.primed = vec![false; dense_len];
+        }
+        let idx = self.frames;
+        self.frames += 1;
+        let k = values.len();
+        match self.format {
+            WireFormat::F64 => Encoded { bytes: f64_frame_bytes(k), payload: values },
+            _ if !values.iter().all(|v| v.is_finite()) => {
+                // Exact fallback; the touched lanes stay coherent (the
+                // receiver gets the exact values) but re-prime anyway —
+                // differencing against ±∞ is meaningless.
+                for &j in indices {
+                    self.primed[j as usize] = false;
+                    self.residual[j as usize] = 0.0;
+                }
+                Encoded { bytes: f64_frame_bytes(k), payload: values }
+            }
+            WireFormat::F32 => self.encode_absolute(indices, values),
+            WireFormat::DeltaF32 => {
+                if self.keyframe_every > 0 && idx > 0 && idx % self.keyframe_every as u64 == 0 {
+                    self.primed.iter_mut().for_each(|p| *p = false);
+                }
+                if indices.iter().any(|&j| !self.primed[j as usize]) {
+                    self.encode_absolute(indices, values)
+                } else {
+                    self.encode_delta(indices, values)
+                }
+            }
+        }
+    }
+
+    /// Absolute scale-headered 4-byte lanes over the selected subset,
+    /// with per-coordinate error feedback; primes every touched lane.
+    fn encode_absolute(&mut self, indices: &[u32], values: Vec<f64>) -> Encoded {
+        let k = values.len();
+        let mut payload = values;
+        for (v, &j) in payload.iter_mut().zip(indices) {
+            *v += self.residual[j as usize];
+        }
+        let (offset, scale) = offset_scale(&payload);
+        for (v, &j) in payload.iter_mut().zip(indices) {
+            let j = j as usize;
+            let q = quantize(*v, offset, scale);
+            self.residual[j] = *v - q;
+            self.reference[j] = q;
+            self.primed[j] = true;
+            *v = q;
+        }
+        Encoded { bytes: f32_frame_bytes(k), payload }
+    }
+
+    /// Delta lanes against the per-coordinate reference (every selected
+    /// lane primed). The delivered payload is the updated reference —
+    /// absolute values, so receivers scatter without codec state.
+    fn encode_delta(&mut self, indices: &[u32], values: Vec<f64>) -> Encoded {
+        let k = values.len();
+        let mut delta = values;
+        for (d, &j) in delta.iter_mut().zip(indices) {
+            let j = j as usize;
+            *d += self.residual[j] - self.reference[j];
+        }
+        let (offset, scale) = offset_scale(&delta);
+        for (d, &j) in delta.iter_mut().zip(indices) {
+            let j = j as usize;
+            let qd = quantize(*d, offset, scale);
+            let target = self.reference[j] + *d;
+            self.reference[j] += qd;
+            self.residual[j] = target - self.reference[j];
+            *d = self.reference[j];
+        }
+        Encoded { bytes: f32_frame_bytes(k), payload: delta }
     }
 }
 
@@ -432,6 +599,139 @@ mod tests {
         let v2 = vec![5.001, -1.999, 0.501];
         let enc = used.encode(v2.clone());
         assert!(max_err(&enc.payload, &v2) < 1e-6);
+    }
+
+    #[test]
+    fn sparse_index_bytes_pack_clustered_indices_tightly() {
+        // Empty frame: just the count varint.
+        assert_eq!(sparse_index_bytes(&[]), 1);
+        // Dense run 0..10: count byte + 10 single-byte gaps.
+        let run: Vec<u32> = (0..10).collect();
+        assert_eq!(sparse_index_bytes(&run), 11);
+        // A large absolute first index costs varint width, later small
+        // gaps stay at one byte each.
+        let spread = vec![100_000, 100_001, 100_050];
+        assert_eq!(sparse_index_bytes(&spread), 1 + 3 + 1 + 1);
+        // Index overhead always beats shipping the dense slice: k=64 of
+        // 512 coordinates ≤ ~2 bytes/index + values, far under 512·8.
+        let topk: Vec<u32> = (0..64).map(|i| i * 8).collect();
+        let sparse = sparse_index_bytes(&topk) + f64_frame_bytes(64);
+        assert!(sparse < f64_frame_bytes(512) / 4, "sparse {sparse}");
+    }
+
+    #[test]
+    fn sparse_f64_frames_are_exact() {
+        let mut c = SparseStreamCodec::new(WireFormat::F64);
+        let v = vec![1.0, -2.5, 1e300];
+        let enc = c.encode(&[3, 7, 11], v.clone(), 16);
+        assert_eq!(enc.payload, v);
+        assert_eq!(enc.bytes, 8 * 3);
+    }
+
+    #[test]
+    fn sparse_error_feedback_bounds_reconstruction_over_many_rounds() {
+        // 120 rounds of a drifting 128-wide slice, each round updating a
+        // different pseudo-random top-k subset: the per-round
+        // reconstruction error at the selected coordinates must stay
+        // bounded by a few quantization steps — flat over time, per
+        // coordinate, not accumulating (satellite-3 roundtrip pin).
+        let mut rng = Rng::seed_from(53);
+        for fmt in [WireFormat::F32, WireFormat::DeltaF32] {
+            let mut codec = SparseStreamCodec::new(fmt);
+            let mut v: Vec<f64> = (0..128).map(|_| rng.uniform_range(-30.0, 30.0)).collect();
+            let mut early = 0.0f64;
+            let mut late = 0.0f64;
+            for round in 0..120 {
+                for x in v.iter_mut() {
+                    *x += rng.uniform_range(-1e-3, 1e-3);
+                }
+                // A different 32-coordinate subset every round.
+                let mut idx: Vec<u32> = (0..128u32)
+                    .filter(|_| rng.uniform() < 0.25)
+                    .collect();
+                if idx.is_empty() {
+                    idx.push((round % 128) as u32);
+                }
+                let vals: Vec<f64> = idx.iter().map(|&j| v[j as usize]).collect();
+                let enc = codec.encode(&idx, vals.clone(), 128);
+                assert_eq!(enc.payload.len(), idx.len());
+                let err = max_err(&enc.payload, &vals);
+                // Selected values span ≈ the slice range (60); unprimed
+                // lanes keep forcing absolute frames early on, so both
+                // formats hold the slice-range f32 bound. Once every
+                // lane has primed, DeltaF32 frames tighten further, but
+                // re-selections after long gaps carry real deltas — the
+                // slice-range bound (with headroom) is the honest pin.
+                let bound = 60.0 * 2.0f64.powi(-24) * 16.0;
+                assert!(err <= bound, "{} round {round}: err {err} > {bound}", fmt.name());
+                if round < 10 {
+                    early = early.max(err);
+                } else if round >= 110 {
+                    late = late.max(err);
+                }
+            }
+            assert!(late <= early * 8.0 + 1e-12, "{}: {late} vs {early}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn sparse_delta_frames_tighten_once_lanes_are_primed() {
+        // A fixed selected subset with contracting updates: after the
+        // priming frame, DeltaF32 lanes difference against the
+        // per-coordinate reference and the error shrinks with the delta
+        // range, far below the absolute-F32 floor.
+        let idx: Vec<u32> = (0..32).map(|i| i * 3).collect();
+        let base: Vec<f64> = idx.iter().map(|&j| (j as f64 * 0.7).sin() * 50.0).collect();
+        let mut df = SparseStreamCodec::new(WireFormat::DeltaF32);
+        let mut af = SparseStreamCodec::new(WireFormat::F32);
+        let mut delta_err = 0.0;
+        let mut abs_err = 0.0;
+        for round in 0..30 {
+            let shrink = 0.5f64.powi(round);
+            let vals: Vec<f64> =
+                base.iter().enumerate().map(|(i, &b)| b + shrink * (i as f64)).collect();
+            delta_err = max_err(&df.encode(&idx, vals.clone(), 128).payload, &vals);
+            abs_err = max_err(&af.encode(&idx, vals.clone(), 128).payload, &vals);
+        }
+        assert!(delta_err < abs_err / 100.0, "delta {delta_err} vs abs {abs_err}");
+    }
+
+    #[test]
+    fn sparse_rekey_forces_absolute_reprime() {
+        // After rekey() (latest-wins loss) the next frame touching any
+        // coordinate must be near-exact — an absolute frame, not a
+        // delta against state the receiver never saw.
+        let idx = vec![1u32, 4, 9];
+        let mut c = SparseStreamCodec::new(WireFormat::DeltaF32);
+        let _ = c.encode(&idx, vec![10.0, 20.0, 30.0], 16);
+        let _ = c.encode(&idx, vec![10.1, 20.1, 30.1], 16);
+        c.rekey();
+        let v = vec![-5.0, 7.0, 100.0];
+        let enc = c.encode(&idx, v.clone(), 16);
+        let step = 52.5 * 2.0f64.powi(-24) * 8.0; // range/2 ≈ 52.5
+        assert!(max_err(&enc.payload, &v) <= step, "err {}", max_err(&enc.payload, &v));
+        // And delta-codes cleanly afterwards.
+        let v2 = vec![-4.999, 7.001, 100.001];
+        let enc2 = c.encode(&idx, v2.clone(), 16);
+        assert!(max_err(&enc2.payload, &v2) < 1e-5);
+    }
+
+    #[test]
+    fn sparse_unprimed_lane_forces_absolute_frame() {
+        // Coordinates 0..4 primed; a later frame adding coordinate 12
+        // must go absolute (12 has no reference) — and prime it.
+        let mut c = SparseStreamCodec::new(WireFormat::DeltaF32);
+        let idx1 = vec![0u32, 1, 2, 3];
+        let _ = c.encode(&idx1, vec![1.0, 2.0, 3.0, 4.0], 16);
+        let idx2 = vec![0u32, 12];
+        let v2 = vec![1.5, 80.0];
+        let enc2 = c.encode(&idx2, v2.clone(), 16);
+        let step = 39.25 * 2.0f64.powi(-24) * 8.0;
+        assert!(max_err(&enc2.payload, &v2) <= step);
+        // Now 12 is primed: a pure-delta frame follows.
+        let v3 = vec![1.501, 80.001];
+        let enc3 = c.encode(&idx2, v3.clone(), 16);
+        assert!(max_err(&enc3.payload, &v3) < 1e-5);
     }
 
     #[test]

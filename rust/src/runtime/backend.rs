@@ -120,6 +120,148 @@ pub struct FleetProbe {
     pub covered: f64,
 }
 
+/// Top-k selection policy of the greedy schedule (`--greedy-topk`): how
+/// many of a block's rows get updated (and exchanged) per
+/// half-iteration. An integer literal selects a fixed row count; a
+/// float in (0, 1) selects the smallest prefix of the violation-ranked
+/// rows covering that fraction of the total violation mass — the
+/// adaptive variant spends its budget where the marginals are worst.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GreedySpec {
+    /// Fixed number of rows per greedy update (clamped to the block).
+    Count(usize),
+    /// Smallest violation-ranked prefix covering this mass fraction.
+    MassFraction(f64),
+}
+
+impl GreedySpec {
+    /// Parse a `--greedy-topk` value: `"64"` → `Count(64)`, `"0.25"` →
+    /// `MassFraction(0.25)`.
+    pub fn parse(s: &str) -> anyhow::Result<GreedySpec> {
+        if let Ok(k) = s.parse::<usize>() {
+            anyhow::ensure!(k >= 1, "--greedy-topk count must be ≥ 1");
+            return Ok(GreedySpec::Count(k));
+        }
+        let f: f64 = s.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "--greedy-topk expects an integer count or a fraction in (0, 1), got '{s}'"
+            )
+        })?;
+        anyhow::ensure!(
+            f > 0.0 && f < 1.0,
+            "--greedy-topk fraction must lie in (0, 1), got {f}"
+        );
+        Ok(GreedySpec::MassFraction(f))
+    }
+
+    /// Rank rows by violation and select per the policy: the selected
+    /// indices come back sorted ascending together with the selected
+    /// and total violation mass. At least one row is always selected;
+    /// ties break toward the lower index so selection is deterministic.
+    pub fn select(&self, viol: &[f64]) -> GreedyOutcome {
+        let total: f64 = viol.iter().sum();
+        let mut order: Vec<u32> = (0..viol.len() as u32).collect();
+        order.sort_by(|&a, &b| viol[b as usize].total_cmp(&viol[a as usize]).then(a.cmp(&b)));
+        let take = match *self {
+            GreedySpec::Count(k) => k.clamp(1, viol.len().max(1)).min(viol.len()),
+            GreedySpec::MassFraction(f) => {
+                let goal = f * total;
+                let mut acc = 0.0;
+                let mut take = 0usize;
+                for &i in &order {
+                    if take > 0 && (acc >= goal || viol[i as usize] == 0.0) {
+                        break;
+                    }
+                    acc += viol[i as usize];
+                    take += 1;
+                }
+                take
+            }
+        };
+        let mut rows = order[..take].to_vec();
+        rows.sort_unstable();
+        let selected_mass = rows.iter().map(|&i| viol[i as usize]).sum();
+        GreedyOutcome { rows, selected_mass, total_mass: total }
+    }
+}
+
+/// What a greedy update touched: the updated row indices (sorted,
+/// block-local) and the violation mass they covered. The exchange
+/// layer ships exactly these coordinates; the stats surface the
+/// selected-over-total mass ratio.
+#[derive(Clone, Debug, Default)]
+pub struct GreedyOutcome {
+    pub rows: Vec<u32>,
+    pub selected_mass: f64,
+    pub total_mass: f64,
+}
+
+/// Aggregated greedy-schedule instrumentation: how many top-k updates
+/// ran, how many rows they selected out of how many candidates, and the
+/// violation mass the selections covered. The row ratio is the comm
+/// saving (`1 − rows_selected/rows_candidate` of the slice bytes never
+/// move); the mass ratio is the quality of the selection policy.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GreedyStats {
+    /// Greedy update calls (two per iteration on a full solve: u and v).
+    pub calls: u64,
+    /// Rows selected across all calls.
+    pub rows_selected: u64,
+    /// Candidate rows across all calls (`m` per call).
+    pub rows_candidate: u64,
+    /// Violation mass covered by the selections.
+    pub selected_mass: f64,
+    /// Total violation mass seen by the selections.
+    pub total_mass: f64,
+}
+
+impl GreedyStats {
+    /// Fold one greedy outcome over an `m`-row block into the counters.
+    pub fn record(&mut self, o: &GreedyOutcome, m: usize) {
+        self.calls += 1;
+        self.rows_selected += o.rows.len() as u64;
+        self.rows_candidate += m as u64;
+        self.selected_mass += o.selected_mass;
+        self.total_mass += o.total_mass;
+    }
+
+    /// Mean fraction of rows selected per call (1.0 when nothing ran).
+    pub fn row_fraction(&self) -> f64 {
+        if self.rows_candidate == 0 {
+            1.0
+        } else {
+            self.rows_selected as f64 / self.rows_candidate as f64
+        }
+    }
+
+    /// Fraction of the violation mass the selections covered.
+    pub fn mass_fraction(&self) -> f64 {
+        if self.total_mass == 0.0 {
+            1.0
+        } else {
+            self.selected_mass / self.total_mass
+        }
+    }
+
+    /// Merge two optional counters (u-op + v-op, or per-node counters
+    /// across a federated run), mirroring [`StabStats::merged`].
+    pub fn merged(a: Option<GreedyStats>, b: Option<GreedyStats>) -> Option<GreedyStats> {
+        match (a, b) {
+            (None, None) => None,
+            (x, y) => {
+                let (x, y) = (x.unwrap_or_default(), y.unwrap_or_default());
+                Some(GreedyStats {
+                    calls: x.calls + y.calls,
+                    rows_selected: x.rows_selected + y.rows_selected,
+                    rows_candidate: x.rows_candidate + y.rows_candidate,
+                    selected_mass: x.selected_mass + y.selected_mass,
+                    total_mass: x.total_mass + y.total_mass,
+                })
+            }
+        }
+    }
+}
+
 /// A stateful handle bound to one kernel block `A (m×n)` and one target
 /// slice `t`. Holds the evolving scaling state `u (m×N)` internally so
 /// backends can keep it device-resident; `update` performs
@@ -231,6 +373,38 @@ pub trait BlockOp: Send {
     /// equivalent of [`BlockOp::matvec`] (star-server step).
     fn accum_matvec(&mut self) -> &Mat {
         unreachable!("operator does not support streamed accumulation")
+    }
+
+    // --- Greedy top-k updates (`--exchange greedy`) ------------------
+    //
+    // The greedy schedule updates only the rows whose marginal
+    // violation `Σ_h |u∘(A·x) − t|_i` currently ranks in the top-k and
+    // leaves every other scaling untouched — the federated Greenkhorn
+    // step. Operators maintain the product `A·x` incrementally: the
+    // caller passes the x-coordinates that changed since the previous
+    // greedy call (its own selection plus every peer coordinate it
+    // received), and the operator folds `A[:, changed]·dx` into a
+    // cached product at O(k·nnz_col) instead of recomputing the full
+    // GEMM. `changed = None` — or any interleaved non-greedy mutation
+    // — invalidates the cache and pays one full refresh.
+
+    /// Whether this operator implements greedy top-k updates.
+    fn supports_greedy(&self) -> bool {
+        false
+    }
+
+    /// Refresh per-row violations against `x`, select rows per `spec`,
+    /// and apply the damped update on the selected rows only. The new
+    /// scalings are read back through [`BlockOp::state`].
+    fn greedy_update(
+        &mut self,
+        x: &Mat,
+        alpha: f64,
+        spec: GreedySpec,
+        changed: Option<&[u32]>,
+    ) -> GreedyOutcome {
+        let _ = (x, alpha, spec, changed);
+        unreachable!("operator does not support greedy updates")
     }
 }
 
@@ -363,4 +537,36 @@ pub trait ComputeBackend: Send + Sync {
     }
 
     fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_spec_parses_counts_and_fractions() {
+        assert_eq!(GreedySpec::parse("64").unwrap(), GreedySpec::Count(64));
+        assert_eq!(GreedySpec::parse("0.25").unwrap(), GreedySpec::MassFraction(0.25));
+        assert!(GreedySpec::parse("0").is_err());
+        assert!(GreedySpec::parse("1.0").is_err());
+        assert!(GreedySpec::parse("-0.5").is_err());
+        assert!(GreedySpec::parse("abc").is_err());
+    }
+
+    #[test]
+    fn greedy_selection_ranks_by_violation_mass() {
+        let viol = [0.1, 4.0, 0.2, 3.0, 0.0, 0.7];
+        let top2 = GreedySpec::Count(2).select(&viol);
+        assert_eq!(top2.rows, vec![1, 3]);
+        assert!((top2.selected_mass - 7.0).abs() < 1e-15);
+        assert!((top2.total_mass - 8.0).abs() < 1e-15);
+        // The smallest prefix covering 60% of the mass (4.8): {1, 3}.
+        let frac = GreedySpec::MassFraction(0.6).select(&viol);
+        assert_eq!(frac.rows, vec![1, 3]);
+        // Oversized counts clamp to the block; at least one row always.
+        assert_eq!(GreedySpec::Count(99).select(&viol).rows.len(), 6);
+        assert_eq!(GreedySpec::MassFraction(0.5).select(&[0.0; 4]).rows.len(), 1);
+        // Ties break toward the lower index deterministically.
+        assert_eq!(GreedySpec::Count(2).select(&[1.0, 1.0, 1.0]).rows, vec![0, 1]);
+    }
 }

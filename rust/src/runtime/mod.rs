@@ -20,7 +20,9 @@ mod native;
 mod pjrt;
 pub mod pool;
 
-pub use backend::{BlockOp, ComputeBackend, FleetProbe, StabStats, Target};
+pub use backend::{
+    BlockOp, ComputeBackend, FleetProbe, GreedyOutcome, GreedySpec, GreedyStats, StabStats, Target,
+};
 pub use manifest::{Manifest, ManifestEntry};
 pub use native::{NativeBackend, HYBRID_MAX_CAPACITY};
 pub use pool::Pool;

@@ -8,7 +8,9 @@
 //! with a native log-domain operator (row-wise max-absorbed logsumexp) —
 //! the small-ε path the AOT artifact grid does not cover.
 
-use super::backend::{BlockOp, ComputeBackend, FleetProbe, StabStats, Target};
+use super::backend::{
+    BlockOp, ComputeBackend, FleetProbe, GreedyOutcome, GreedySpec, StabStats, Target,
+};
 use super::pool::Pool;
 use crate::linalg::{AbsorbedLogCsr, Csr, LogCsr, Mat, Stabilization};
 use std::sync::Arc;
@@ -65,6 +67,131 @@ fn finish_lse_accum(mx: &[f64], sum: &[f64], q: &mut Mat) {
         *o = if *s > 0.0 { m + s.ln() } else { f64::NEG_INFINITY };
     }
 }
+
+/// Per-row linear-domain marginal violation `Σ_h |u∘q − t|_i` — the
+/// ranking the greedy top-k schedule selects on. One entry per block
+/// row, matching `Σ_i viol[i] = Σ_h marginal(x, u)[h]`.
+fn row_violations_linear(t: &[f64], t_stride: usize, q: &Mat, u: &Mat, viol: &mut Vec<f64>) {
+    let (m, nh) = (q.rows(), q.cols());
+    viol.resize(m, 0.0);
+    for (i, slot) in viol.iter_mut().enumerate() {
+        let qrow = q.row(i);
+        let urow = u.row(i);
+        let mut v = 0.0;
+        if t_stride == 0 {
+            let ti = t[i];
+            for h in 0..nh {
+                v += (urow[h] * qrow[h] - ti).abs();
+            }
+        } else {
+            let trow = &t[i * t_stride..(i + 1) * t_stride];
+            for h in 0..nh {
+                v += (urow[h] * qrow[h] - trow[h]).abs();
+            }
+        }
+        *slot = v;
+    }
+}
+
+/// Log-domain twin of [`row_violations_linear`]:
+/// `Σ_h |exp(log u + q) − t|_i` per row.
+fn row_violations_log(t_lin: &[f64], t_stride: usize, q: &Mat, u: &Mat, viol: &mut Vec<f64>) {
+    let (m, nh) = (q.rows(), q.cols());
+    viol.resize(m, 0.0);
+    for (i, slot) in viol.iter_mut().enumerate() {
+        let qrow = q.row(i);
+        let urow = u.row(i);
+        let mut v = 0.0;
+        if t_stride == 0 {
+            let ti = t_lin[i];
+            for h in 0..nh {
+                v += ((urow[h] + qrow[h]).exp() - ti).abs();
+            }
+        } else {
+            let trow = &t_lin[i * t_stride..(i + 1) * t_stride];
+            for h in 0..nh {
+                v += ((urow[h] + qrow[h]).exp() - trow[h]).abs();
+            }
+        }
+        *slot = v;
+    }
+}
+
+/// Damped update restricted to `rows`: the selected rows move exactly
+/// as [`scale_divide_inplace`] would move them; every other scaling
+/// stays untouched — the greedy (Greenkhorn-style) half-step.
+fn scale_divide_rows(rows: &[u32], t: &[f64], t_stride: usize, q: &Mat, alpha: f64, u: &mut Mat) {
+    let nh = q.cols();
+    let beta = 1.0 - alpha;
+    for &ri in rows {
+        let i = ri as usize;
+        let qrow = q.row(i);
+        let urow = u.row_mut(i);
+        if t_stride == 0 {
+            let ti = t[i];
+            for j in 0..nh {
+                urow[j] = alpha * (ti / qrow[j]) + beta * urow[j];
+            }
+        } else {
+            let trow = &t[i * t_stride..(i + 1) * t_stride];
+            for j in 0..nh {
+                urow[j] = alpha * (trow[j] / qrow[j]) + beta * urow[j];
+            }
+        }
+    }
+}
+
+/// Log-domain twin of [`scale_divide_rows`]: selected rows move exactly
+/// as [`damped_log_subtract_inplace`] would move them.
+fn damped_log_subtract_rows(
+    rows: &[u32],
+    log_t: &[f64],
+    t_stride: usize,
+    q: &Mat,
+    alpha: f64,
+    u: &mut Mat,
+) {
+    let nh = q.cols();
+    let beta = 1.0 - alpha;
+    for &ri in rows {
+        let i = ri as usize;
+        let qrow = q.row(i);
+        let urow = u.row_mut(i);
+        if t_stride == 0 {
+            let lti = log_t[i];
+            for j in 0..nh {
+                urow[j] = alpha * (lti - qrow[j]) + beta * urow[j];
+            }
+        } else {
+            let ltrow = &log_t[i * t_stride..(i + 1) * t_stride];
+            for j in 0..nh {
+                urow[j] = alpha * (ltrow[j] - qrow[j]) + beta * urow[j];
+            }
+        }
+    }
+}
+
+/// Debug-only contract check of the greedy incremental protocol: every
+/// coordinate of `x` outside `changed` must still equal the cached
+/// snapshot `gx` — a caller that moved a coordinate without declaring
+/// it would silently corrupt the maintained product.
+#[cfg(debug_assertions)]
+fn debug_assert_changed_covers(x: &Mat, gx: &Mat, changed: &[u32]) {
+    let mut it = changed.iter().peekable();
+    for j in 0..x.rows() {
+        if it.peek() == Some(&&(j as u32)) {
+            it.next();
+            continue;
+        }
+        debug_assert_eq!(
+            x.row(j),
+            gx.row(j),
+            "coordinate {j} moved outside the declared `changed` set"
+        );
+    }
+}
+#[cfg(not(debug_assertions))]
+fn debug_assert_changed_covers(_x: &Mat, _gx: &Mat, _changed: &[u32]) {}
 
 /// Density below which CSR dispatch beats dense GEMM for this shape.
 /// Measured in bench_kernels (n=1024): dense wins at density 0.31
@@ -182,6 +309,7 @@ impl ComputeBackend for NativeBackend {
             q,
             acc_mx: Vec::new(),
             acc_sum: Vec::new(),
+            gviol: Vec::new(),
             pool: self.pool.clone(),
         }))
     }
@@ -212,6 +340,11 @@ impl ComputeBackend for NativeBackend {
             q,
             acc_mx: Vec::new(),
             acc_sum: Vec::new(),
+            gq: Mat::zeros(0, 0),
+            gq_rows: Vec::new(),
+            gviol: Vec::new(),
+            since_refresh: 0,
+            greedy_live: false,
             pool: self.pool.clone(),
         }))
     }
@@ -293,6 +426,10 @@ impl ComputeBackend for NativeBackend {
             u: u0,
             q,
             acc: Mat::zeros(0, 0),
+            gq: Mat::zeros(0, 0),
+            gx: Mat::zeros(0, 0),
+            gviol: Vec::new(),
+            greedy_live: false,
             pool: self.pool.clone(),
         }))
     }
@@ -314,6 +451,15 @@ struct NativeBlockOp {
     /// check between folds (its product writes `q`) cannot clobber a
     /// pending accumulation. Allocated lazily — only streamed runs pay.
     acc: Mat,
+    /// Greedy-schedule cache (lazy — only `--exchange greedy` pays):
+    /// the maintained product `A·gx`, its input snapshot, and the
+    /// per-row violation scratch. `gq` is kept coherent against `gx` by
+    /// folding `A[:, changed]·dx` per greedy call; it is distinct from
+    /// `q` so interleaved marginal checks cannot clobber it.
+    gq: Mat,
+    gx: Mat,
+    gviol: Vec<f64>,
+    greedy_live: bool,
     pool: Pool,
 }
 
@@ -416,6 +562,63 @@ impl BlockOp for NativeBlockOp {
     fn accum_matvec(&mut self) -> &Mat {
         &self.acc
     }
+
+    fn supports_greedy(&self) -> bool {
+        true
+    }
+
+    /// Greedy top-k half-step: maintain `gq = A·x` incrementally
+    /// (`gq += A[:, changed]·dx` at O(k·nnz_col) when the caller
+    /// declares the moved coordinates), rank rows by marginal
+    /// violation, and damp only the selected rows.
+    fn greedy_update(
+        &mut self,
+        x: &Mat,
+        alpha: f64,
+        spec: GreedySpec,
+        changed: Option<&[u32]>,
+    ) -> GreedyOutcome {
+        let nh = self.u.cols();
+        let threads = self.pool.share();
+        match changed {
+            Some(changed) if self.greedy_live => {
+                debug_assert_changed_covers(x, &self.gx, changed);
+                let mut dx = Vec::with_capacity(changed.len() * nh);
+                for &j in changed {
+                    let (new, old) = (x.row(j as usize), self.gx.row(j as usize));
+                    for h in 0..nh {
+                        dx.push(new[h] - old[h]);
+                    }
+                }
+                match &self.csr {
+                    Some(csr) => {
+                        csr.matmul_delta_cols(changed, &dx, nh, self.gq.as_mut_slice(), threads)
+                    }
+                    None => {
+                        self.a.matmul_delta_cols(changed, &dx, nh, self.gq.as_mut_slice(), threads)
+                    }
+                }
+                for &j in changed {
+                    self.gx.row_mut(j as usize).copy_from_slice(x.row(j as usize));
+                }
+            }
+            _ => {
+                if self.gq.rows() != self.a.rows() {
+                    self.gq = Mat::zeros(self.a.rows(), nh);
+                }
+                match &self.csr {
+                    Some(csr) => csr.matmul_into(x, &mut self.gq, threads),
+                    None => self.a.matmul_into(x, &mut self.gq, threads),
+                }
+                self.gx = x.clone();
+                self.greedy_live = true;
+            }
+        }
+        row_violations_linear(&self.t, self.t_stride, &self.gq, &self.u, &mut self.gviol);
+        let outcome = spec.select(&self.gviol);
+        scale_divide_rows(&outcome.rows, &self.t, self.t_stride, &self.gq, alpha, &mut self.u);
+        outcome
+    }
 }
 
 /// Sparse twin of [`NativeLogBlockOp`]: the block is a θ-truncated
@@ -435,8 +638,25 @@ struct NativeSparseLogBlockOp {
     /// pending accumulation. Lazily allocated.
     acc_mx: Vec<f64>,
     acc_sum: Vec<f64>,
+    /// Greedy-schedule tracker (lazy): the log product `gq` refreshed
+    /// exactly on the rows each greedy call updates (row-subset
+    /// logsumexp, O(k·nnz_row)) and fully every
+    /// [`GREEDY_REFRESH_EVERY`] calls — online-LSE row products cannot
+    /// be downdated coordinate-wise, so unselected rows rank on a
+    /// boundedly stale violation between full refreshes.
+    gq: Mat,
+    gq_rows: Vec<f64>,
+    gviol: Vec<f64>,
+    since_refresh: usize,
+    greedy_live: bool,
     pool: Pool,
 }
+
+/// Full-refresh cadence of the sparse-log greedy tracker: every this
+/// many greedy calls the whole O(nnz) product is recomputed so no
+/// row's violation ranking can stay stale longer — amortized cost
+/// O(nnz / GREEDY_REFRESH_EVERY + k·nnz_row) per call.
+const GREEDY_REFRESH_EVERY: usize = 8;
 
 impl NativeSparseLogBlockOp {
     fn accum_finish(&mut self) {
@@ -535,6 +755,57 @@ impl BlockOp for NativeSparseLogBlockOp {
         assert_eq!(u.cols(), self.u.cols());
         self.u = u.clone();
     }
+
+    fn supports_greedy(&self) -> bool {
+        true
+    }
+
+    /// Greedy top-k half-step on the truncated sparse block: select on
+    /// the (boundedly stale) tracker, recompute the selected rows'
+    /// log products exactly via the row-subset logsumexp, damp those
+    /// rows. Selection staleness only reorders the heuristic ranking —
+    /// the applied updates are always exact against the current `x`.
+    fn greedy_update(
+        &mut self,
+        x_log: &Mat,
+        alpha: f64,
+        spec: GreedySpec,
+        changed: Option<&[u32]>,
+    ) -> GreedyOutcome {
+        let nh = self.u.cols();
+        let full = !self.greedy_live
+            || changed.is_none()
+            || self.since_refresh >= GREEDY_REFRESH_EVERY;
+        if full {
+            if self.gq.rows() != self.a_log.rows() {
+                self.gq = Mat::zeros(self.a_log.rows(), nh);
+            }
+            self.a_log.logsumexp_into(x_log, &mut self.gq, self.pool.share());
+            self.greedy_live = true;
+            self.since_refresh = 0;
+        }
+        self.since_refresh += 1;
+        row_violations_log(&self.t_lin, self.t_stride, &self.gq, &self.u, &mut self.gviol);
+        let outcome = spec.select(&self.gviol);
+        if !full {
+            self.gq_rows.resize(outcome.rows.len() * nh, 0.0);
+            self.a_log.logsumexp_rows(&outcome.rows, x_log, &mut self.gq_rows, self.pool.share());
+            for (s, &ri) in outcome.rows.iter().enumerate() {
+                self.gq
+                    .row_mut(ri as usize)
+                    .copy_from_slice(&self.gq_rows[s * nh..(s + 1) * nh]);
+            }
+        }
+        damped_log_subtract_rows(
+            &outcome.rows,
+            &self.log_t,
+            self.t_stride,
+            &self.gq,
+            alpha,
+            &mut self.u,
+        );
+        outcome
+    }
 }
 
 /// Absorption-hybrid log-domain operator (Schmitzer §3, the scaling
@@ -588,6 +859,22 @@ struct HybridLogBlockOp {
     acc_sum: Vec<f64>,
     accum_active: bool,
     acc_dense: bool,
+    /// Greedy-schedule cache (lazy): the maintained *linear* absorbed
+    /// product `glin = K̃·exp(gx − ḡ)` for the snapshot `gx`, valid
+    /// only while the kernel's absorption frame is unchanged
+    /// (`greedy_epoch == absorb_epoch`). Sparse coordinate moves fold
+    /// `K̃[:, changed]·dex` into `glin` exactly (linearity) as long as
+    /// the new values sit inside the covered drift budget.
+    glin: Mat,
+    gx: Mat,
+    gq: Mat,
+    gviol: Vec<f64>,
+    greedy_live: bool,
+    greedy_epoch: u64,
+    /// Bumped on every kernel mutation (re-absorption, re-truncation,
+    /// fleet command): a maintained linear product from an older frame
+    /// is in the wrong absorption basis and must be rebuilt.
+    absorb_epoch: u64,
     pool: Pool,
     stats: StabStats,
 }
@@ -657,6 +944,13 @@ impl HybridLogBlockOp {
             acc_sum: Vec::new(),
             accum_active: false,
             acc_dense: false,
+            glin: Mat::zeros(0, 0),
+            gx: Mat::zeros(0, 0),
+            gq: Mat::zeros(0, 0),
+            gviol: Vec::new(),
+            greedy_live: false,
+            greedy_epoch: 0,
+            absorb_epoch: 0,
             pool,
             stats: StabStats { absorb_triggers: vec![0; nh], ..StabStats::default() },
         }
@@ -724,6 +1018,7 @@ impl HybridLogBlockOp {
                 self.a_log.logsumexp_into(x_log, &mut self.q, self.pool.share());
                 return;
             }
+            self.absorb_epoch += 1;
             let k = Arc::make_mut(&mut self.kernel);
             if needed <= k.covered() && k.anchor_shift(&self.gref) <= k.sigma() {
                 k.reabsorb(&self.gref);
@@ -934,10 +1229,16 @@ impl BlockOp for HybridLogBlockOp {
         self.stats.absorb_triggers =
             active.iter().map(|&c| self.stats.absorb_triggers[c]).collect();
         // Streamed accumulators are lazy; zeroing the shapes forces the
-        // next accum_begin to reallocate at the packed width.
+        // next accum_begin to reallocate at the packed width. The
+        // greedy cache is likewise width-dependent — drop it and let
+        // the next greedy call refresh at the packed width.
         self.acc_lin = Mat::zeros(0, 0);
         self.acc_mx.clear();
         self.acc_sum.clear();
+        self.glin = Mat::zeros(0, 0);
+        self.gx = Mat::zeros(0, 0);
+        self.gq = Mat::zeros(0, 0);
+        self.greedy_live = false;
         true
     }
 
@@ -990,6 +1291,7 @@ impl BlockOp for HybridLogBlockOp {
             self.dense_fallback = true;
             return false;
         }
+        self.absorb_epoch += 1;
         let k = Arc::make_mut(&mut self.kernel);
         if covered <= k.covered() && k.anchor_shift(gref) <= k.sigma() {
             k.reabsorb(gref);
@@ -1000,6 +1302,100 @@ impl BlockOp for HybridLogBlockOp {
             self.stats.fleet_rebuilds += 1;
             true
         }
+    }
+
+    fn supports_greedy(&self) -> bool {
+        true
+    }
+
+    /// Greedy top-k half-step under the absorption hybrid: coordinate
+    /// moves inside the covered drift budget fold `K̃[:, changed]·dex`
+    /// into the maintained linear product — exact by linearity, at
+    /// O(k·nnz_col) — so only the finish `f̄ + ln glin` (O(m·N)) runs
+    /// per call. Moves outside the budget, a changed absorption frame,
+    /// or `changed = None` pay one full product through the ordinary
+    /// absorbed schedule (which may re-absorb first).
+    fn greedy_update(
+        &mut self,
+        x_log: &Mat,
+        alpha: f64,
+        spec: GreedySpec,
+        changed: Option<&[u32]>,
+    ) -> GreedyOutcome {
+        let nh = self.u.cols();
+        self.stats.updates += 1;
+        let mut incremental = false;
+        if !self.dense_fallback && self.greedy_live && self.greedy_epoch == self.absorb_epoch {
+            if let Some(changed) = changed {
+                debug_assert_changed_covers(x_log, &self.gx, changed);
+                let mut vals = Vec::with_capacity(changed.len() * nh);
+                for &j in changed {
+                    vals.extend_from_slice(x_log.row(j as usize));
+                }
+                if self.kernel.coords_drift(changed, &vals, nh) <= self.kernel.covered() {
+                    // dex = exp(x_new − ḡ) − exp(x_old − ḡ), packed.
+                    let g = self.kernel.reference();
+                    let mut dex = vals;
+                    for (p, &j) in changed.iter().enumerate() {
+                        let gj = g[j as usize];
+                        let old = self.gx.row(j as usize);
+                        for h in 0..nh {
+                            let slot = &mut dex[p * nh + h];
+                            *slot = (*slot - gj).exp() - (old[h] - gj).exp();
+                        }
+                    }
+                    let per_col = self.kernel.nnz() / self.a_log.cols().max(1);
+                    let threads = self.pool.threads_for_work(
+                        per_col.saturating_mul(changed.len()).saturating_mul(nh.max(1)),
+                    );
+                    self.kernel.matmul_delta_cols(changed, &dex, nh, &mut self.glin, threads);
+                    for &j in changed {
+                        self.gx.row_mut(j as usize).copy_from_slice(x_log.row(j as usize));
+                    }
+                    // Cancellation guard: a maintained lane driven
+                    // non-positive (or non-finite) where a fresh sum of
+                    // positives cannot be — rebuild rather than finish
+                    // into −∞/NaN log products.
+                    let bad = |v: f64| v <= 0.0 || !v.is_finite();
+                    incremental = !self.glin.as_slice().iter().any(|&v| bad(v));
+                }
+            }
+        }
+        if incremental {
+            if self.gq.rows() != self.a_log.rows() {
+                self.gq = Mat::zeros(self.a_log.rows(), nh);
+            }
+            self.kernel.log_matmul_finish(&self.glin, &mut self.gq);
+        } else {
+            // Full refresh through the ordinary absorbed product: q and
+            // lin_q come out coherent, and the kernel re-absorbs under
+            // its own schedule when the drift budget demands it.
+            self.product(x_log, true);
+            self.gq = self.q.clone();
+            // A product served densely (permanent fallback, pending-
+            // accumulation pin) leaves no linear product to maintain;
+            // likewise a block whose fresh product already holds empty
+            // rows never goes incremental.
+            self.greedy_live = !self.dense_fallback
+                && !self.accum_active
+                && self.lin_q.as_slice().iter().all(|&v| v > 0.0 && v.is_finite());
+            if self.greedy_live {
+                self.glin = self.lin_q.clone();
+                self.gx = x_log.clone();
+                self.greedy_epoch = self.absorb_epoch;
+            }
+        }
+        row_violations_log(&self.t_lin, self.t_stride, &self.gq, &self.u, &mut self.gviol);
+        let outcome = spec.select(&self.gviol);
+        damped_log_subtract_rows(
+            &outcome.rows,
+            &self.log_t,
+            self.t_stride,
+            &self.gq,
+            alpha,
+            &mut self.u,
+        );
+        outcome
     }
 }
 
@@ -1023,6 +1419,8 @@ struct NativeLogBlockOp {
     /// marginal checks cannot clobber a pending accumulation. Lazy.
     acc_mx: Vec<f64>,
     acc_sum: Vec<f64>,
+    /// Greedy-schedule violation scratch (lazy).
+    gviol: Vec<f64>,
     pool: Pool,
 }
 
@@ -1133,6 +1531,38 @@ impl BlockOp for NativeLogBlockOp {
         assert_eq!(u.rows(), self.u.rows());
         assert_eq!(u.cols(), self.u.cols());
         self.u = u.clone();
+    }
+
+    fn supports_greedy(&self) -> bool {
+        true
+    }
+
+    /// Greedy top-k half-step on the dense logsumexp block. The
+    /// online-LSE row reduction cannot be maintained coordinate-wise,
+    /// so every call pays the full O(m·n) product — the greedy win on
+    /// this operator is communication only (the k-coordinate sparse
+    /// exchange), which is exactly the regime the dense-log path
+    /// serves (comm-bound small-ε solves).
+    fn greedy_update(
+        &mut self,
+        x_log: &Mat,
+        alpha: f64,
+        spec: GreedySpec,
+        changed: Option<&[u32]>,
+    ) -> GreedyOutcome {
+        let _ = changed;
+        self.product(x_log);
+        row_violations_log(&self.t_lin, self.t_stride, &self.q, &self.u, &mut self.gviol);
+        let outcome = spec.select(&self.gviol);
+        damped_log_subtract_rows(
+            &outcome.rows,
+            &self.log_t,
+            self.t_stride,
+            &self.q,
+            alpha,
+            &mut self.u,
+        );
+        outcome
     }
 }
 
@@ -1363,5 +1793,195 @@ mod tests {
             .unwrap();
         let want = oracle.update(&x, 1.0).clone();
         assert!(got.allclose(&want, 1e-12));
+    }
+
+    #[test]
+    fn greedy_incremental_matches_full_refresh_linear() {
+        // Incrementally maintained greedy products (declared coordinate
+        // moves folded via matmul_delta_cols) vs. an op that refreshes
+        // fully every call: same selections, same states, on both the
+        // dense and the CSR representation — and bit-identical across
+        // thread counts on the incremental path.
+        let mut rng = Rng::seed_from(81);
+        for density_drop in [0.0, 0.8] {
+            let (n, nh) = (30, 2);
+            let mut a = Mat::rand_uniform(n, n, 0.1, 1.0, &mut rng);
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j && rng.uniform() < density_drop {
+                        a[(i, j)] = 0.0;
+                    }
+                }
+            }
+            let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+            let mut inc = NativeBackend::new(2)
+                .block_op(&a, Target::Vec(&t), Mat::ones(n, nh))
+                .unwrap();
+            let mut wide = NativeBackend::new(8)
+                .block_op(&a, Target::Vec(&t), Mat::ones(n, nh))
+                .unwrap();
+            let mut full = NativeBackend::new(2)
+                .block_op(&a, Target::Vec(&t), Mat::ones(n, nh))
+                .unwrap();
+            assert!(inc.supports_greedy());
+            let spec = GreedySpec::Count(6);
+            let mut x = Mat::rand_uniform(n, nh, 0.5, 1.5, &mut rng);
+            let mut changed: Option<Vec<u32>> = None;
+            for round in 0..12 {
+                let oi = inc.greedy_update(&x, 0.8, spec, changed.as_deref());
+                let ow = wide.greedy_update(&x, 0.8, spec, changed.as_deref());
+                let of = full.greedy_update(&x, 0.8, spec, None);
+                assert_eq!(oi.rows, of.rows, "round {round} drop {density_drop}");
+                assert_eq!(oi.rows.len(), 6);
+                assert!(oi.selected_mass <= oi.total_mass + 1e-12);
+                assert_eq!(oi.rows, ow.rows);
+                let (ui, uw, uf) = (inc.state(), wide.state(), full.state());
+                for ((a, w), b) in ui.as_slice().iter().zip(uw.as_slice()).zip(uf.as_slice()) {
+                    assert_eq!(a.to_bits(), w.to_bits(), "thread-count parity");
+                    assert!(
+                        (a - b).abs() <= 1e-11 * b.abs().max(1.0),
+                        "round {round} drop {density_drop}: {a} vs {b}"
+                    );
+                }
+                if round == 0 {
+                    // Unselected rows keep the seed state untouched.
+                    for i in 0..n {
+                        if !of.rows.contains(&(i as u32)) {
+                            assert_eq!(uf.row(i), vec![1.0; nh]);
+                        }
+                    }
+                }
+                let mut moved: Vec<u32> = vec![(round % n) as u32, ((round * 7 + 3) % n) as u32];
+                moved.sort_unstable();
+                moved.dedup();
+                for &j in &moved {
+                    for h in 0..nh {
+                        x[(j as usize, h)] *= 1.0 + 0.05 * rng.uniform();
+                    }
+                }
+                changed = Some(moved);
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_sparse_log_updates_selected_rows_exactly() {
+        // The sparse-log tracker may rank on boundedly stale
+        // violations, but every row it selects must be damped against
+        // the *exact* log product of the current x (row-subset
+        // logsumexp) — and unselected rows must not move at all.
+        let (a_log, t, mut x, u0) = sample_log(24, 2, -6.0, 83);
+        let lc = LogCsr::from_dense_log(&a_log, f64::NEG_INFINITY);
+        let be = NativeBackend::new(2);
+        let mut op = be.sparse_log_block_op(&lc, Target::Vec(&t), u0).unwrap();
+        assert!(op.supports_greedy());
+        let (alpha, beta) = (0.9, 1.0 - 0.9);
+        let spec = GreedySpec::MassFraction(0.5);
+        let mut changed: Option<Vec<u32>> = None;
+        for round in 0..10 {
+            let u_prev = op.state().clone();
+            let o = op.greedy_update(&x, alpha, spec, changed.as_deref());
+            assert!(!o.rows.is_empty());
+            assert!(o.selected_mass <= o.total_mass + 1e-12);
+            let q = a_log.logsumexp(&x, 1);
+            let u_now = op.state().clone();
+            for i in 0..24 {
+                for h in 0..2 {
+                    let want = if o.rows.contains(&(i as u32)) {
+                        alpha * (t[i].ln() - q[(i, h)]) + beta * u_prev[(i, h)]
+                    } else {
+                        u_prev[(i, h)]
+                    };
+                    assert!(
+                        (u_now[(i, h)] - want).abs() <= 1e-12 * want.abs().max(1.0),
+                        "round {round} ({i},{h}): {} vs {want}",
+                        u_now[(i, h)]
+                    );
+                }
+            }
+            let mut moved: Vec<u32> = vec![(round % 24) as u32, ((round * 5 + 11) % 24) as u32];
+            moved.sort_unstable();
+            moved.dedup();
+            for &j in &moved {
+                for h in 0..2 {
+                    x[(j as usize, h)] += 0.1 + 0.1 * (h as f64);
+                }
+            }
+            changed = Some(moved);
+        }
+    }
+
+    #[test]
+    fn greedy_dense_log_matches_sparse_full_support() {
+        // With a full-support truncation and full refreshes every call
+        // (changed = None), the dense-log and sparse-log greedy steps
+        // are the same arithmetic: selections and states must agree.
+        let (a_log, t, x, u0) = sample_log(20, 3, -5.0, 84);
+        let lc = LogCsr::from_dense_log(&a_log, f64::NEG_INFINITY);
+        let be = NativeBackend::new(2);
+        let mut dense = be.log_block_op(&a_log, Target::Vec(&t), u0.clone()).unwrap();
+        let mut sparse = be.sparse_log_block_op(&lc, Target::Vec(&t), u0).unwrap();
+        let spec = GreedySpec::MassFraction(0.3);
+        for round in 0..4 {
+            let od = dense.greedy_update(&x, 1.0, spec, None);
+            let os = sparse.greedy_update(&x, 1.0, spec, None);
+            assert_eq!(od.rows, os.rows, "round {round}");
+            assert!(dense.state().allclose(sparse.state(), 1e-12));
+        }
+    }
+
+    #[test]
+    fn greedy_hybrid_incremental_matches_full_refresh() {
+        // Absorbed-delta folds under the covered drift budget vs. a
+        // full refresh every call — including a far jump past the
+        // budget that must fall back to the full product and
+        // re-absorb (epoch invalidation), then resume folding.
+        let mut rng = Rng::seed_from(85);
+        let (n, nh) = (26, 3);
+        let a_log = Mat::rand_uniform(n, n, -60.0, 0.0, &mut rng);
+        let t: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.1, 1.0)).collect();
+        let stab = Stabilization::default();
+        let be = NativeBackend::new(2);
+        let mut inc = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), Mat::zeros(n, nh), &stab)
+            .unwrap();
+        let mut full = be
+            .log_block_op_stabilized(&a_log, Target::Vec(&t), Mat::zeros(n, nh), &stab)
+            .unwrap();
+        assert!(inc.supports_greedy());
+        let spec = GreedySpec::MassFraction(0.4);
+        let mut x = Mat::rand_uniform(n, nh, -1.0, 1.0, &mut rng);
+        let mut changed: Option<Vec<u32>> = None;
+        for round in 0..14 {
+            let oi = inc.greedy_update(&x, 1.0, spec, changed.as_deref());
+            let of = full.greedy_update(&x, 1.0, spec, None);
+            assert_eq!(oi.rows, of.rows, "round {round}");
+            let (ui, uf) = (inc.state(), full.state());
+            for (a, b) in ui.as_slice().iter().zip(uf.as_slice()) {
+                assert!(
+                    (a - b).abs() <= 1e-10 * b.abs().max(1.0),
+                    "round {round}: {a} vs {b}"
+                );
+            }
+            // Move three coordinates; round 7 jumps far past the
+            // covered drift budget.
+            let step = if round == 7 { -30.0 } else { 0.2 };
+            let mut moved: Vec<u32> = [round % n, (round * 5 + 2) % n, (round * 11 + 6) % n]
+                .iter()
+                .map(|&j| j as u32)
+                .collect();
+            moved.sort_unstable();
+            moved.dedup();
+            for &j in &moved {
+                for h in 0..nh {
+                    x[(j as usize, h)] += step + 0.1 * rng.uniform();
+                }
+            }
+            changed = Some(moved);
+        }
+        let (si, sf) = (inc.stab_stats().unwrap(), full.stab_stats().unwrap());
+        assert_eq!(si.updates, 14);
+        assert_eq!(sf.updates, 14);
+        assert!(si.absorbs >= 1, "the far jump must re-absorb");
     }
 }

@@ -4,7 +4,7 @@ use super::ops::convergence_sample;
 use super::{State, StopPolicy};
 use crate::linalg::{Domain, Mat, Stabilization};
 use crate::metrics::Clock;
-use crate::runtime::{BlockOp, ComputeBackend, StabStats, Target};
+use crate::runtime::{BlockOp, ComputeBackend, GreedySpec, GreedyStats, StabStats, Target};
 use crate::workload::Problem;
 use std::sync::Arc;
 
@@ -47,6 +47,9 @@ pub struct SolveOutcome {
     /// Absorption-hybrid counters (u-op + v-op), when the log-domain
     /// run took the stabilized schedule.
     pub stab: Option<StabStats>,
+    /// Greedy top-k counters (u-op + v-op), when the solve ran the
+    /// greedy schedule ([`CentralizedSolver::solve_greedy_in`]).
+    pub greedy: Option<GreedyStats>,
 }
 
 impl SolveOutcome {
@@ -301,6 +304,82 @@ impl CentralizedSolver {
             secs: clock.now(),
             history,
             stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            greedy: None,
+        }
+    }
+
+    /// Centralized greedy (Greenkhorn-style) solve: each half-iteration
+    /// damps only the top-k most-violated rows through the operators'
+    /// incremental [`BlockOp::greedy_update`] schedule. The convergence
+    /// check stays the *full* marginal, so greedy can never report a
+    /// false convergence off rows it skipped. This is the reference
+    /// iterate sequence the federated `--exchange greedy` runs are
+    /// tested against.
+    pub fn solve_greedy_in(
+        &self,
+        p: &Problem,
+        policy: StopPolicy,
+        alpha: f64,
+        domain: Domain,
+        spec: GreedySpec,
+    ) -> SolveOutcome {
+        let n = p.n;
+        let nh = p.hists();
+        let clock = Clock::new();
+        let one = domain.one();
+        let (mut u_op, mut v_op) =
+            self.build_ops(p, domain, &p.b, Mat::full(n, nh, one), Mat::full(n, nh, one));
+        assert!(
+            u_op.supports_greedy() && v_op.supports_greedy(),
+            "--exchange greedy needs operators with greedy support (use --backend native)"
+        );
+
+        let mut gstats = GreedyStats::default();
+        // Rows of each state that moved since the *other* operator's
+        // last incremental refresh (`None` = that op has not run yet
+        // and pays one full refresh on its first call).
+        let mut changed_u: Option<Vec<u32>> = None;
+        let mut changed_v: Option<Vec<u32>> = None;
+        let mut iterations = 0;
+        let mut final_err = f64::INFINITY;
+        let mut stop = StopReason::MaxIters;
+
+        for k in 1..=policy.max_iters {
+            iterations = k;
+            let ou = u_op.greedy_update(v_op.state(), alpha, spec, changed_v.as_deref());
+            changed_v = Some(Vec::new());
+            gstats.record(&ou, n);
+            note_rows(&mut changed_u, &ou.rows);
+            let ov = v_op.greedy_update(u_op.state(), alpha, spec, changed_u.as_deref());
+            changed_u = Some(Vec::new());
+            gstats.record(&ov, n);
+            note_rows(&mut changed_v, &ov.rows);
+
+            if policy.check_at(k) {
+                let u_now = u_op.state().clone();
+                let errs = u_op.marginal(v_op.state(), &u_now);
+                let err = errs.iter().cloned().fold(0.0, f64::max);
+                final_err = err;
+                if err < policy.threshold {
+                    stop = StopReason::Converged;
+                    break;
+                }
+            }
+            if policy.timeout_secs > 0.0 && clock.now() > policy.timeout_secs {
+                stop = StopReason::Timeout;
+                break;
+            }
+        }
+
+        SolveOutcome {
+            state: State { u: u_op.state().clone(), v: v_op.state().clone(), domain },
+            iterations,
+            stop,
+            final_err,
+            secs: clock.now(),
+            history: Vec::new(),
+            stab: StabStats::merged(u_op.stab_stats(), v_op.stab_stats()),
+            greedy: Some(gstats),
         }
     }
 
@@ -453,4 +532,15 @@ impl CentralizedSolver {
 /// Copy one column of an m×N scaling state.
 fn col_of(m: &Mat, c: usize) -> Vec<f64> {
     (0..m.rows()).map(|i| m[(i, c)]).collect()
+}
+
+/// Merge freshly moved rows into an armed changed-row accumulator
+/// (sorted, deduped); a `None` accumulator stays `None` — the consuming
+/// operator will take a full refresh on its first call anyway.
+fn note_rows(changed: &mut Option<Vec<u32>>, rows: &[u32]) {
+    if let Some(ch) = changed.as_mut() {
+        ch.extend_from_slice(rows);
+        ch.sort_unstable();
+        ch.dedup();
+    }
 }

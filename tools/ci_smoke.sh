@@ -136,6 +136,48 @@ stage_topology() {
   grep -Eq " drops=[1-9]" "$TMP/topology.log"
 }
 
+# Greedy top-k exchange: the Greenkhorn-style schedule on the lock-step
+# coordinators, full vs greedy at the same ε and threshold. The greps
+# assert each greedy run converged, moved its scaling traffic on the
+# sparse frame kinds, and printed the selection telemetry; the python
+# step pins the acceptance bar — strictly fewer exchanged scaling bytes
+# per iteration than the dense baseline, with no dense U/V frames at
+# all on the greedy run.
+stage_greedy() {
+  for v in sync-a2a sync-star; do
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 4000 --threshold 1e-8 \
+      | tee "$TMP/full.log"
+    FEDSINK_DOMAIN=log "$BIN" solve \
+      --variant "$v" --backend native --n 512 --clients 4 \
+      --eps 0.005 --cond ill --max-iters 12000 --threshold 1e-8 \
+      --exchange greedy \
+      | tee "$TMP/greedy.log"
+    grep -q "stop=Converged" "$TMP/greedy.log"
+    grep -q "greedy:" "$TMP/greedy.log"
+    grep -q "SpU=" "$TMP/greedy.log"
+    python3 - "$TMP/full.log" "$TMP/greedy.log" <<'PY'
+import re, sys
+
+def parse(path):
+    text = open(path).read()
+    iters = int(re.search(r"iters=(\d+)", text).group(1))
+    kinds = {k: int(b) for k, b in re.findall(r"(\w+)=(\d+)B/\d+msg", text)}
+    return iters, kinds
+
+fi, fk = parse(sys.argv[1])
+gi, gk = parse(sys.argv[2])
+full = (fk.get("U", 0) + fk.get("V", 0)) / fi
+sparse = (gk.get("SpU", 0) + gk.get("SpV", 0)) / gi
+assert gk.get("U", 0) + gk.get("V", 0) == 0, f"greedy moved dense frames: {gk}"
+assert sparse > 0, f"no sparse traffic metered: {gk}"
+assert sparse < full, f"greedy {sparse:.0f} B/iter !< full {full:.0f} B/iter"
+print(f"greedy exchange OK: {sparse:.0f} B/iter sparse vs {full:.0f} B/iter dense")
+PY
+  done
+}
+
 # The streaming shape pinned at both ends of the pool-sizing range: a
 # serial pool (never fans out) and a 4-thread pool sharing workers
 # across all five node threads. Banding is per-row, so both must reach
@@ -184,7 +226,7 @@ print(f"service amortization OK: {batched} batched rebuilds vs {standalone} stan
 PY
 }
 
-STAGES=(sparse vectorized fleet wire chaos topology threads service)
+STAGES=(sparse vectorized fleet wire chaos topology greedy threads service)
 
 usage() {
   local IFS='|'
